@@ -1,0 +1,30 @@
+use aipso::radix_sort::ska_sort::ska_sort;
+use aipso::sample_sort::base_case::small_sort;
+use aipso::util::rng::Xoshiro256pp;
+
+fn bench(name: &str, f: impl Fn(&mut [f64]), segs: &[Vec<f64>]) {
+    let mut best = f64::MAX;
+    for _ in 0..5 {
+        let mut copies: Vec<Vec<f64>> = segs.to_vec();
+        let t0 = std::time::Instant::now();
+        for c in copies.iter_mut() { f(c); }
+        let dt = t0.elapsed().as_secs_f64();
+        best = best.min(dt);
+    }
+    let total: usize = segs.iter().map(|s| s.len()).sum();
+    println!("{name:>12}: {:.1} ns/key (best of 5)", best * 1e9 / total as f64);
+}
+
+fn main() {
+    let mut rng = Xoshiro256pp::new(1);
+    for seg_len in [500usize, 2000, 4000] {
+        let segs: Vec<Vec<f64>> = (0..(2_000_000 / seg_len))
+            .map(|_| (0..seg_len).map(|_| rng.uniform(0.0, 1e6)).collect())
+            .collect();
+        println!("segment length {seg_len}:");
+        bench("ska_sort", |s| ska_sort(s), &segs);
+        bench("small_sort", |s| small_sort(s), &segs);
+        bench("std", |s| s.sort_unstable_by(f64::total_cmp), &segs);
+        bench("std_by_key", |s| s.sort_unstable_by_key(|x| aipso::SortKey::to_bits_ordered(*x)), &segs);
+    }
+}

@@ -1,0 +1,50 @@
+//! Duplicates — the adversarial case for learned sorting (paper §2.2, §4).
+//!
+//! Shows Algorithm 5 in action: on duplicate-heavy inputs AIPS²o detects
+//! the skew in its probe sample and routes to the decision tree with
+//! equality buckets instead of the RMI; LearnedSort 2.0 survives via its
+//! homogeneity check.
+//!
+//!     cargo run --release --example duplicates
+
+use aipso::aips2o::{build_partition_model, StrategyConfig};
+use aipso::util::rng::Xoshiro256pp;
+use aipso::util::{fmt, timer};
+use aipso::{is_sorted, sort_parallel, sort_sequential, SortEngine};
+
+fn main() {
+    let n = 2_000_000;
+    let mut rng = Xoshiro256pp::new(1);
+    println!("inputs: RootDups (A[i] = i mod sqrt N), Zipf(0.75), Uniform\n");
+
+    for name in ["root_dups", "zipf", "uniform"] {
+        let keys = aipso::datasets::generate_f64(name, n, 5).unwrap();
+        // What does Algorithm 5 decide?
+        let strategy = build_partition_model(&keys, &StrategyConfig::default(), &mut rng);
+        let choice = match &strategy {
+            None => "input constant (already sorted)",
+            Some(s) if s.is_learned() => "RMI (learned classifier, B=1024)",
+            Some(_) => "decision tree with equality buckets (B=256)",
+        };
+        println!("{name}: Algorithm 5 chooses -> {choice}");
+
+        for engine in [SortEngine::Aips2o, SortEngine::Ips4o, SortEngine::LearnedSort] {
+            let mut v = keys.clone();
+            let (_, secs) = timer::time_it(|| {
+                if engine == SortEngine::LearnedSort {
+                    sort_sequential(engine, &mut v)
+                } else {
+                    sort_parallel(engine, &mut v, 0)
+                }
+            });
+            assert!(is_sorted(&v));
+            println!(
+                "    {:>12}: {} ({})",
+                engine.paper_name(engine != SortEngine::LearnedSort),
+                fmt::rate(n as f64 / secs),
+                fmt::secs(secs)
+            );
+        }
+        println!();
+    }
+}

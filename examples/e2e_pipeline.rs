@@ -1,0 +1,111 @@
+//! End-to-end driver — proves all layers compose on a real small workload.
+//!
+//! Pipeline (a miniature of the paper's whole evaluation):
+//!   1. `make artifacts` output (JAX/Pallas AOT) loads through PJRT; the
+//!      XLA-trained monotonic RMI is checked against the native mirror.
+//!   2. The 14-dataset suite is generated.
+//!   3. Table 2 (pivot quality) is regenerated.
+//!   4. A sort-service job trace (every dataset, sequential + parallel
+//!      engines) runs through the L3 coordinator with routing + metrics.
+//!   5. The paper's headline metric is reported: parallel win count for
+//!      AIPS2o vs IPS4o/IPS2Ra/std over all datasets.
+//!
+//!     make artifacts && cargo run --release --example e2e_pipeline
+
+use aipso::bench_harness::{count_wins, run_figure, BenchConfig};
+use aipso::coordinator::{Coordinator, EngineChoice, JobSpec, KeyBuf};
+use aipso::datasets::{self, FigureGroup, KeyType};
+use aipso::rmi::model::{Rmi, RmiConfig};
+use aipso::runtime::{default_artifacts_dir, RmiRuntime};
+use aipso::util::rng::Xoshiro256pp;
+use aipso::util::fmt;
+
+fn main() {
+    let n: usize = std::env::var("AIPSO_N").ok().and_then(|v| v.parse().ok()).unwrap_or(1_000_000);
+    let t_all = std::time::Instant::now();
+    println!("=== AIPS2o end-to-end pipeline (n = {}) ===\n", fmt::keys(n));
+
+    // ---- 1. AOT artifact path (L1/L2 -> runtime bridge) ---------------
+    println!("[1/5] PJRT artifacts");
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = RmiRuntime::load(&dir).expect("artifact load");
+        let m = rt.manifest();
+        println!("  loaded rmi_train + rmi_predict (train_sample={}, batch={}, B={})",
+            m.train_sample, m.predict_batch, m.n_leaves);
+        let mut rng = Xoshiro256pp::new(1);
+        let mut sample: Vec<f64> = (0..m.train_sample).map(|_| rng.lognormal(0.0, 0.5)).collect();
+        sample.sort_unstable_by(f64::total_cmp);
+        let xla = rt.train(&sample).expect("xla train");
+        let native = Rmi::train(&sample, RmiConfig { n_leaves: m.n_leaves });
+        let keys: Vec<f64> = (0..8192).map(|_| rng.lognormal(0.0, 0.5)).collect();
+        let pred = rt.predict(&keys, &xla).expect("xla predict");
+        let max_err = keys.iter().zip(&pred)
+            .map(|(k, p)| (native.predict(*k) - p).abs())
+            .fold(0.0f64, f64::max);
+        println!("  XLA vs native RMI parity: max err {max_err:.2e} {}",
+            if max_err < 1e-9 { "(OK)" } else { "(FAIL)" });
+        assert!(max_err < 1e-9);
+    } else {
+        println!("  SKIPPED (no artifacts; run `make artifacts`)");
+    }
+
+    // ---- 2. dataset suite ---------------------------------------------
+    println!("\n[2/5] dataset suite: {} datasets", datasets::ALL.len());
+
+    // ---- 3. Table 2 ----------------------------------------------------
+    println!("\n[3/5] Table 2 (pivot quality, 255 pivots)");
+    let cfg = BenchConfig { n, reps: 1, ..Default::default() };
+    for (name, q_random, q_rmi) in aipso::bench_harness::table2_pivot_quality(&cfg) {
+        println!("  {name:<10} random {q_random:.4}  rmi {q_rmi:.4}  ({})",
+            if q_rmi < q_random { "learned pivots better, as in paper" } else { "UNEXPECTED" });
+    }
+
+    // ---- 4. coordinator job trace --------------------------------------
+    println!("\n[4/5] sort-service trace through the coordinator");
+    let coordinator = Coordinator::new(0);
+    let mut id = 0u64;
+    for ds in datasets::ALL.iter() {
+        let keys = match ds.key_type {
+            KeyType::F64 => KeyBuf::F64(datasets::generate_f64(ds.name, n / 2, id).unwrap()),
+            KeyType::U64 => KeyBuf::U64(datasets::generate_u64(ds.name, n / 2, id).unwrap()),
+        };
+        coordinator.submit(JobSpec { id, keys, engine: EngineChoice::Auto, parallel: true });
+        id += 1;
+    }
+    let (reports, metrics) = coordinator.drain();
+    let failures = reports.iter().filter(|r| !r.verified_sorted).count();
+    println!("  {} jobs, {} failures", reports.len(), failures);
+    print!("{}", indent(&metrics.report(), "  "));
+    assert_eq!(failures, 0);
+
+    // ---- 5. headline: parallel win count --------------------------------
+    // On boxes with fewer cores than the paper's 48 the ranking comes from
+    // the partition-balance model over measured partitions (DESIGN.md §6).
+    let cores = aipso::scheduler::effective_threads(0);
+    println!("\n[5/5] headline metric: parallel win count over all 14 datasets");
+    let cfg = BenchConfig { n, reps: 1, ..Default::default() };
+    let mut rows = Vec::new();
+    for group in [FigureGroup::Synthetic1, FigureGroup::Synthetic2, FigureGroup::RealWorld] {
+        if cores >= 8 {
+            rows.extend(run_figure(group, true, &cfg));
+        } else {
+            rows.extend(aipso::bench_harness::run_figure_simulated(group, 48, &cfg));
+        }
+    }
+    let label = if cores >= 8 {
+        format!("measured on {cores} cores")
+    } else {
+        "simulated 48 cores from measured partitions".to_string()
+    };
+    println!("  ({label})");
+    for (engine, wins) in count_wins(&rows) {
+        println!("  {engine}: {wins}/14");
+    }
+    println!("  (paper: AIPS2o 10/14, IPS4o 4/14, at N=1e8 on 48 cores)");
+    println!("\n=== pipeline complete in {} ===", fmt::secs(t_all.elapsed().as_secs_f64()));
+}
+
+fn indent(s: &str, pad: &str) -> String {
+    s.lines().map(|l| format!("{pad}{l}\n")).collect()
+}

@@ -1,0 +1,37 @@
+//! Quickstart: sort 4M uniform doubles with AIPS²o on all cores.
+//!
+//!     cargo run --release --example quickstart
+
+use aipso::util::fmt;
+use aipso::{is_sorted, sort_parallel, sort_sequential, SortEngine};
+
+fn main() {
+    let n = 4_000_000;
+    println!("generating {} uniform doubles...", fmt::keys(n));
+    let base = aipso::datasets::generate_f64("uniform", n, 42).unwrap();
+
+    // Parallel AIPS2o — the paper's contribution.
+    let mut keys = base.clone();
+    let t0 = std::time::Instant::now();
+    sort_parallel(SortEngine::Aips2o, &mut keys, 0 /* all cores */);
+    let par = t0.elapsed().as_secs_f64();
+    assert!(is_sorted(&keys));
+    println!("AIPS2o (parallel):   {} — {}", fmt::secs(par), fmt::rate(n as f64 / par));
+
+    // Sequential, for scale.
+    let mut keys = base.clone();
+    let t0 = std::time::Instant::now();
+    sort_sequential(SortEngine::Aips2o, &mut keys);
+    let seq = t0.elapsed().as_secs_f64();
+    assert!(is_sorted(&keys));
+    println!("AI1S2o (sequential): {} — {}", fmt::secs(seq), fmt::rate(n as f64 / seq));
+
+    // The baseline everyone has.
+    let mut keys = base;
+    let t0 = std::time::Instant::now();
+    sort_sequential(SortEngine::StdSort, &mut keys);
+    let std_s = t0.elapsed().as_secs_f64();
+    println!("std::sort:           {} — {}", fmt::secs(std_s), fmt::rate(n as f64 / std_s));
+
+    println!("\nparallel speedup over std::sort: {:.1}x", std_s / par);
+}

@@ -1,0 +1,31 @@
+//! Real-world (simulated) datasets: the paper's Figure 6 in miniature —
+//! parallel engines over OSM/Wiki/FB/Books/NYC.
+//!
+//!     cargo run --release --example realworld
+
+use aipso::util::fmt;
+use aipso::{is_sorted, sort_parallel, SortEngine};
+
+fn main() {
+    let n: usize = std::env::var("AIPSO_N").ok().and_then(|v| v.parse().ok()).unwrap_or(2_000_000);
+    println!("parallel sorting rate on simulated real-world datasets (n = {})\n", fmt::keys(n));
+    println!("| dataset | engine | rate |");
+    println!("|---------|--------|------|");
+    for ds in aipso::datasets::u64_names() {
+        let base = aipso::datasets::generate_u64(ds, n, 13).unwrap();
+        let mut best: (f64, &str) = (0.0, "");
+        for engine in SortEngine::PARALLEL_FIGURES {
+            let mut v = base.clone();
+            let t0 = std::time::Instant::now();
+            sort_parallel(engine, &mut v, 0);
+            let rate = n as f64 / t0.elapsed().as_secs_f64();
+            assert!(is_sorted(&v), "{engine:?} failed on {ds}");
+            if rate > best.0 {
+                best = (rate, engine.paper_name(true));
+            }
+            println!("| {ds} | {} | {} |", engine.paper_name(true), fmt::rate(rate));
+        }
+        println!("| {ds} | **winner** | {} |", best.1);
+    }
+    println!("\npaper expectation: AIPS2o wins most; FB/IDs and Wiki/Edit are its hard cases");
+}

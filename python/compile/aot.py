@@ -1,0 +1,102 @@
+"""AOT export: lower the L2 RMI model to HLO *text* artifacts for Rust/PJRT.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry_points():
+    """Lower both AOT entry points; returns {name: (hlo_text, signature)}."""
+    f64 = jnp.float64
+    sample = jax.ShapeDtypeStruct((model.TRAIN_SAMPLE,), f64)
+    keys = jax.ShapeDtypeStruct((model.PREDICT_BATCH,), f64)
+    root = jax.ShapeDtypeStruct((2,), f64)
+    leaf = jax.ShapeDtypeStruct((model.N_LEAVES, 4), f64)
+
+    out = {}
+    lowered = jax.jit(model.aot_train).lower(sample)
+    out["rmi_train"] = (
+        to_hlo_text(lowered),
+        {
+            "inputs": [["sample", list(sample.shape), "f64"]],
+            "outputs": [
+                ["root", [2], "f64"],
+                ["leaf", [model.N_LEAVES, 4], "f64"],
+            ],
+        },
+    )
+    lowered = jax.jit(model.aot_predict).lower(keys, root, leaf)
+    out["rmi_predict"] = (
+        to_hlo_text(lowered),
+        {
+            "inputs": [
+                ["keys", list(keys.shape), "f64"],
+                ["root", [2], "f64"],
+                ["leaf", [model.N_LEAVES, 4], "f64"],
+            ],
+            "outputs": [["cdf", [model.PREDICT_BATCH], "f64"]],
+        },
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text",
+        "jax": jax.__version__,
+        "train_sample": model.TRAIN_SAMPLE,
+        "predict_batch": model.PREDICT_BATCH,
+        "n_leaves": model.N_LEAVES,
+        "functions": {},
+    }
+    for name, (text, sig) in lower_entry_points().items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["functions"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            **sig,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

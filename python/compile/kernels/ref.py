@@ -1,0 +1,78 @@
+"""Pure-jnp oracle for the RMI kernels — the correctness reference.
+
+Implements exactly the same arithmetic as kernels/rmi.py without Pallas, so
+pytest/hypothesis can assert_allclose kernel-vs-ref across shapes and
+distributions. Also the reference for the native Rust implementation
+(rust/src/rmi/), which mirrors this op-for-op.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+ONE_MINUS_EPS = 1.0 - 2.0**-52
+
+
+def ref_predict(keys, root, leaf):
+    """Reference two-level RMI CDF prediction. Same contract as rmi_predict."""
+    a1, b1 = root[0], root[1]
+    keys = jnp.clip(keys, jnp.finfo(keys.dtype).min, jnp.finfo(keys.dtype).max)
+    n_leaves = leaf.shape[0]
+    idx = jnp.clip(
+        jnp.floor((a1 * keys + b1) * n_leaves), 0, n_leaves - 1
+    ).astype(jnp.int32)
+    a2 = leaf[idx, 0]
+    b2 = leaf[idx, 1]
+    lo = leaf[idx, 2]
+    hi = leaf[idx, 3]
+    pred = jnp.clip(a2 * keys + b2, lo, hi)
+    return jnp.clip(pred, 0.0, ONE_MINUS_EPS)
+
+
+def ref_train_stats(keys, ys, root, *, n_leaves):
+    """Reference per-leaf regression statistics. Same contract as
+    rmi_train_stats, computed with a segment-sum instead of Pallas."""
+    a1, b1 = root[0], root[1]
+    idx = jnp.clip(
+        jnp.floor((a1 * keys + b1) * n_leaves), 0, n_leaves - 1
+    ).astype(jnp.int32)
+    feats = jnp.stack(
+        [jnp.ones_like(keys), keys, ys, keys * ys, keys * keys], axis=1
+    )
+    return jax.ops.segment_sum(feats, idx, num_segments=n_leaves)
+
+
+def ref_fit_root(keys, ys):
+    """Closed-form least-squares root fit (see model.fit_root)."""
+    n = keys.shape[0]
+    sx = jnp.sum(keys)
+    sy = jnp.sum(ys)
+    sxy = jnp.sum(keys * ys)
+    sxx = jnp.sum(keys * keys)
+    denom = n * sxx - sx * sx
+    a = jnp.where(jnp.abs(denom) > 0, (n * sxy - sx * sy) / denom, 0.0)
+    a = jnp.maximum(a, 0.0)
+    b = (sy - a * sx) / n
+    return jnp.stack([a, b])
+
+
+def ref_fit_leaves(stats):
+    """Closed-form per-leaf fits + monotonic envelope from leaf stats.
+
+    stats: f64[B, 5] per-leaf (count, Σx, Σy, Σxy, Σx²).
+    Returns f64[B, 4] per-leaf (a2, b2, lo, hi) with a2 >= 0 and
+    lo/hi the cumulative empirical-CDF envelope (nondecreasing), which
+    together guarantee global monotonicity of the predicted CDF.
+    """
+    cnt, sx, sy, sxy, sxx = (stats[:, i] for i in range(5))
+    denom = cnt * sxx - sx * sx
+    ok = (cnt >= 2) & (jnp.abs(denom) > 1e-30)
+    a2 = jnp.where(ok, (cnt * sxy - sx * sy) / jnp.where(ok, denom, 1.0), 0.0)
+    a2 = jnp.maximum(a2, 0.0)
+    b2 = jnp.where(cnt > 0, (sy - a2 * sx) / jnp.where(cnt > 0, cnt, 1.0), 0.0)
+    total = jnp.sum(cnt)
+    cum = jnp.concatenate([jnp.zeros((1,), stats.dtype), jnp.cumsum(cnt)])
+    lo = cum[:-1] / total
+    hi = cum[1:] / total
+    return jnp.stack([a2, b2, lo, hi], axis=1)

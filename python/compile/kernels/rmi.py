@@ -1,0 +1,149 @@
+"""L1 — Pallas kernels for the two-layer linear RMI (LearnedSort's CDF model).
+
+Two kernels:
+
+* ``rmi_predict``: batched two-level RMI inference. For each key ``x``:
+  ``i = clamp(floor(B * (a1*x + b1)))`` selects a leaf, then
+  ``F(x) = clamp(a2[i]*x + b2[i], lo[i], hi[i])`` where ``[lo, hi]`` is the
+  per-leaf monotonic envelope (the paper's min/max-array construction,
+  Section 4). The envelope + nonnegative leaf slopes make F globally
+  monotone, which is what lets AIPS2o skip the insertion-sort repair pass.
+
+* ``rmi_train_stats``: the segmented-reduction pass of training. Per-leaf
+  least-squares needs (count, Σx, Σy, Σxy, Σx²) per leaf; a scatter-add is
+  hostile to the TPU, so we restructure it as ``onehot(leaf_ids).T @ feats``
+  — an (B×bn)·(bn×5) matmul that lands on the MXU systolic array. The
+  (B,5) output accumulates across grid steps.
+
+TPU adaptation notes (paper targets an AVX Xeon — see DESIGN.md
+§Hardware-Adaptation): keys stream HBM→VMEM in 1-D grid blocks; the leaf
+parameter table (B=1024 × 4 f64 = 32 KiB) is pinned in VMEM across all grid
+steps via a constant index_map, the TPU analogue of LearnedSort keeping the
+RMI second-level array cache-resident.
+
+Kernels MUST run with ``interpret=True`` here: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+# Keys per grid step. 8 sublanes x 128 lanes x 8 "rows" — a multiple of the
+# (8, 128) f32 tile so the block maps cleanly onto the VPU/MXU layout.
+PREDICT_BLOCK = 8192
+TRAIN_BLOCK = 2048
+
+# F(x) is clamped to [0, 1). Downstream bucket index is floor(F(x) * B'),
+# so keep strictly below 1.0 to avoid an out-of-range bucket.
+ONE_MINUS_EPS = 1.0 - 2.0**-52
+
+
+def _predict_kernel(root_ref, leaf_ref, keys_ref, out_ref, *, n_leaves):
+    """One grid step: classify PREDICT_BLOCK keys through the 2-level RMI."""
+    a1 = root_ref[0]
+    b1 = root_ref[1]
+    # +-inf inputs would produce NaN through a slope-0 leaf (0*inf);
+    # clamp to the finite range — mirrored in rust/src/rmi/model.rs.
+    x = jnp.clip(keys_ref[...], jnp.finfo(keys_ref.dtype).min, jnp.finfo(keys_ref.dtype).max)
+    # Root model: coarse CDF estimate -> leaf index.
+    coarse = a1 * x + b1
+    idx = jnp.clip(
+        jnp.floor(coarse * n_leaves), 0, n_leaves - 1
+    ).astype(jnp.int32)
+    leaf = leaf_ref[...]  # (B, 4) pinned in VMEM: [a2, b2, lo, hi]
+    a2 = jnp.take(leaf[:, 0], idx)
+    b2 = jnp.take(leaf[:, 1], idx)
+    lo = jnp.take(leaf[:, 2], idx)
+    hi = jnp.take(leaf[:, 3], idx)
+    pred = jnp.clip(a2 * x + b2, lo, hi)
+    out_ref[...] = jnp.clip(pred, 0.0, ONE_MINUS_EPS)
+
+
+def rmi_predict(keys, root, leaf, *, block=PREDICT_BLOCK, interpret=True):
+    """Batched RMI CDF prediction.
+
+    Args:
+      keys: f64[n] keys, n a multiple of ``block``.
+      root: f64[2] root linear model (a1, b1).
+      leaf: f64[B, 4] per-leaf (a2, b2, lo, hi).
+
+    Returns:
+      f64[n] CDF estimates in [0, 1).
+    """
+    n = keys.shape[0]
+    assert n % block == 0, f"n={n} must be a multiple of block={block}"
+    n_leaves = leaf.shape[0]
+    grid = (n // block,)
+    return pl.pallas_call(
+        functools.partial(_predict_kernel, n_leaves=n_leaves),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),            # root: pinned
+            pl.BlockSpec(leaf.shape, lambda i: (0, 0)),    # leaf: pinned
+            pl.BlockSpec((block,), lambda i: (i,)),        # keys: streamed
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), keys.dtype),
+        interpret=interpret,
+    )(root, leaf, keys)
+
+
+def _train_stats_kernel(root_ref, keys_ref, ys_ref, out_ref, *, n_leaves):
+    """One grid step: accumulate per-leaf regression statistics.
+
+    out[b, :] += sum over keys in this block assigned to leaf b of
+    (1, x, y, x*y, x*x). Expressed as onehot.T @ feats so it is a matmul
+    (MXU) rather than a scatter-add.
+    """
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a1 = root_ref[0]
+    b1 = root_ref[1]
+    x = keys_ref[...]
+    y = ys_ref[...]
+    idx = jnp.clip(
+        jnp.floor((a1 * x + b1) * n_leaves), 0, n_leaves - 1
+    ).astype(jnp.int32)
+    onehot = (idx[:, None] == jnp.arange(n_leaves)[None, :]).astype(x.dtype)
+    feats = jnp.stack(
+        [jnp.ones_like(x), x, y, x * y, x * x], axis=1
+    )  # (bn, 5)
+    out_ref[...] += onehot.T @ feats
+
+
+def rmi_train_stats(
+    keys, ys, root, *, n_leaves, block=TRAIN_BLOCK, interpret=True
+):
+    """Per-leaf regression statistics for the leaf least-squares fits.
+
+    Args:
+      keys: f64[n] *sorted* sample keys, n a multiple of ``block``.
+      ys:   f64[n] empirical CDF targets (j + 0.5)/n.
+      root: f64[2] already-fitted root model.
+
+    Returns:
+      f64[n_leaves, 5]: per-leaf (count, Σx, Σy, Σxy, Σx²).
+    """
+    n = keys.shape[0]
+    assert n % block == 0, f"n={n} must be a multiple of block={block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        functools.partial(_train_stats_kernel, n_leaves=n_leaves),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n_leaves, 5), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_leaves, 5), keys.dtype),
+        interpret=interpret,
+    )(root, keys, ys)

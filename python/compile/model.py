@@ -1,0 +1,90 @@
+"""L2 — the JAX RMI model: training and batched prediction.
+
+This is LearnedSort's CDF model (two-layer linear RMI, Kristo et al. SIGMOD
+'20) with the monotonicity constraint from the AIPS2o paper (Section 4):
+leaf slopes are clamped nonnegative and leaf outputs are clamped to the
+cumulative empirical-CDF envelope [lo_i, hi_i], so F(x) is globally
+nondecreasing and the partition needs no insertion-sort repair.
+
+Both entry points are pure jax functions built on the L1 Pallas kernels
+(kernels/rmi.py) and are AOT-lowered by aot.py into HLO text artifacts the
+Rust runtime loads via PJRT. Python never runs at sort time.
+
+Model parameterization (shared contract with rust/src/rmi/):
+  root: f64[2]      = (a1, b1);     leaf index = clamp(floor((a1*x+b1)*B))
+  leaf: f64[B, 4]   = (a2, b2, lo, hi) per leaf; F(x) = clip(a2*x+b2, lo, hi)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import rmi as k
+from .kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+# AOT artifact shapes (fixed: PJRT executables are static-shaped; the Rust
+# runtime pads/chunks to these).
+TRAIN_SAMPLE = 16384
+PREDICT_BATCH = 65536
+N_LEAVES = 1024
+
+
+def fit_root(sample, ys):
+    """Least-squares linear fit of the root model on the sorted sample.
+
+    The slope is clamped nonnegative: the root must be monotone for the
+    leaf assignment i(x) to be nondecreasing in x.
+    """
+    return ref.ref_fit_root(sample, ys)
+
+
+def rmi_train(sample, *, n_leaves=N_LEAVES, interpret=True, block=None):
+    """Train the monotonic two-layer RMI from a *sorted* sample.
+
+    Args:
+      sample: f64[n] sorted keys (duplicates allowed).
+
+    Returns:
+      (root f64[2], leaf f64[n_leaves, 4]).
+    """
+    n = sample.shape[0]
+    ys = (jnp.arange(n, dtype=sample.dtype) + 0.5) / n
+    root = fit_root(sample, ys)
+    kwargs = {} if block is None else {"block": block}
+    stats = k.rmi_train_stats(
+        sample, ys, root, n_leaves=n_leaves, interpret=interpret, **kwargs
+    )
+    leaf = ref.ref_fit_leaves(stats)
+    return root, leaf
+
+
+def rmi_predict(keys, root, leaf, *, interpret=True, block=None):
+    """Batched CDF prediction F(keys) in [0, 1). See kernels.rmi."""
+    kwargs = {} if block is None else {"block": block}
+    return k.rmi_predict(keys, root, leaf, interpret=interpret, **kwargs)
+
+
+def rmi_train_ref(sample, *, n_leaves=N_LEAVES):
+    """Pure-jnp training oracle (no Pallas) for tests."""
+    n = sample.shape[0]
+    ys = (jnp.arange(n, dtype=sample.dtype) + 0.5) / n
+    root = fit_root(sample, ys)
+    stats = ref.ref_train_stats(sample, ys, root, n_leaves=n_leaves)
+    leaf = ref.ref_fit_leaves(stats)
+    return root, leaf
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (fixed shapes, single output pytrees -> flat tuples)
+# ---------------------------------------------------------------------------
+
+def aot_train(sample):
+    """AOT graph: f64[TRAIN_SAMPLE] sorted sample -> (root, leaf)."""
+    root, leaf = rmi_train(sample)
+    return root, leaf
+
+
+def aot_predict(keys, root, leaf):
+    """AOT graph: batched prediction at the fixed PREDICT_BATCH size."""
+    return (rmi_predict(keys, root, leaf),)

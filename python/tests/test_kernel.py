@@ -1,0 +1,160 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the learned-model layer: every
+numeric the Rust hot path depends on is validated here against an
+independent implementation, across shapes, dtypes and key distributions
+(hypothesis sweeps).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels import rmi as k
+
+jax.config.update("jax_enable_x64", True)
+
+RNG = np.random.default_rng(0xA1B5)
+
+
+def _trained_model(sample_n=4096, n_leaves=64, dist="uniform"):
+    sample = make_keys(sample_n, dist)
+    sample = np.sort(sample)
+    root, leaf = model.rmi_train(
+        jnp.asarray(sample), n_leaves=n_leaves, block=1024
+    )
+    return np.asarray(root), np.asarray(leaf)
+
+
+def make_keys(n, dist, rng=None):
+    rng = rng or RNG
+    if dist == "uniform":
+        return rng.uniform(0.0, n, n)
+    if dist == "normal":
+        return rng.normal(0.0, 1.0, n)
+    if dist == "lognormal":
+        return rng.lognormal(0.0, 0.5, n)
+    if dist == "exponential":
+        return rng.exponential(0.5, n)
+    if dist == "dups":
+        return np.asarray(rng.integers(0, max(2, n // 100), n), dtype=np.float64)
+    if dist == "constant":
+        return np.full(n, 42.0)
+    raise ValueError(dist)
+
+
+DISTS = ["uniform", "normal", "lognormal", "exponential", "dups", "constant"]
+
+
+# ---------------------------------------------------------------------------
+# predict kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", DISTS)
+def test_predict_matches_ref(dist):
+    root, leaf = _trained_model(dist=dist if dist != "constant" else "uniform")
+    keys = jnp.asarray(make_keys(8192, dist))
+    got = k.rmi_predict(keys, jnp.asarray(root), jnp.asarray(leaf), block=1024)
+    want = ref.ref_predict(keys, jnp.asarray(root), jnp.asarray(leaf))
+    # interpret-mode pallas may fuse a*x+b as an FMA: allow 1-2 ulp
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-14, atol=1e-15)
+
+
+@pytest.mark.parametrize("block", [128, 512, 2048, 8192])
+def test_predict_block_invariance(block):
+    """Output must not depend on the grid/block decomposition."""
+    root, leaf = _trained_model()
+    keys = jnp.asarray(make_keys(8192, "uniform"))
+    got = k.rmi_predict(keys, jnp.asarray(root), jnp.asarray(leaf), block=block)
+    want = ref.ref_predict(keys, jnp.asarray(root), jnp.asarray(leaf))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_predict_output_range():
+    root, leaf = _trained_model()
+    keys = jnp.asarray(make_keys(4096, "normal") * 1e6)  # far out of range
+    out = np.asarray(k.rmi_predict(keys, jnp.asarray(root), jnp.asarray(leaf), block=1024))
+    assert np.all(out >= 0.0)
+    assert np.all(out < 1.0)
+
+
+def test_predict_rejects_misaligned_batch():
+    root, leaf = _trained_model()
+    keys = jnp.asarray(make_keys(1000, "uniform"))
+    with pytest.raises(AssertionError):
+        k.rmi_predict(keys, jnp.asarray(root), jnp.asarray(leaf), block=512)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=8),
+    st.sampled_from(DISTS),
+    st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_predict_hypothesis_sweep(nblocks, dist, seed):
+    """Hypothesis sweep: kernel == oracle over random shapes/dists/seeds."""
+    rng = np.random.default_rng(seed)
+    root, leaf = _trained_model()
+    keys = jnp.asarray(make_keys(256 * nblocks, dist, rng))
+    got = k.rmi_predict(keys, jnp.asarray(root), jnp.asarray(leaf), block=256)
+    want = ref.ref_predict(keys, jnp.asarray(root), jnp.asarray(leaf))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# train-stats kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ["uniform", "normal", "lognormal", "dups"])
+def test_train_stats_matches_ref(dist):
+    n, n_leaves = 4096, 128
+    sample = np.sort(make_keys(n, dist))
+    ys = (np.arange(n) + 0.5) / n
+    root = ref.ref_fit_root(jnp.asarray(sample), jnp.asarray(ys))
+    got = k.rmi_train_stats(
+        jnp.asarray(sample), jnp.asarray(ys), root, n_leaves=n_leaves, block=512
+    )
+    want = ref.ref_train_stats(
+        jnp.asarray(sample), jnp.asarray(ys), root, n_leaves=n_leaves
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
+
+
+def test_train_stats_counts_total():
+    n, n_leaves = 2048, 64
+    sample = np.sort(make_keys(n, "uniform"))
+    ys = (np.arange(n) + 0.5) / n
+    root = ref.ref_fit_root(jnp.asarray(sample), jnp.asarray(ys))
+    stats = np.asarray(
+        k.rmi_train_stats(
+            jnp.asarray(sample), jnp.asarray(ys), root, n_leaves=n_leaves, block=512
+        )
+    )
+    assert stats[:, 0].sum() == pytest.approx(n)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.sampled_from([256, 512, 1024]),
+    st.sampled_from([16, 64, 256]),
+    st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_train_stats_hypothesis_sweep(block, n_leaves, seed):
+    rng = np.random.default_rng(seed)
+    n = 2048
+    sample = np.sort(make_keys(n, "uniform", rng))
+    ys = (np.arange(n) + 0.5) / n
+    root = ref.ref_fit_root(jnp.asarray(sample), jnp.asarray(ys))
+    got = k.rmi_train_stats(
+        jnp.asarray(sample), jnp.asarray(ys), root, n_leaves=n_leaves, block=block
+    )
+    want = ref.ref_train_stats(
+        jnp.asarray(sample), jnp.asarray(ys), root, n_leaves=n_leaves
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)

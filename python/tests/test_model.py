@@ -1,0 +1,110 @@
+"""L2 correctness: trained-model invariants (monotonicity, accuracy, shapes).
+
+These are the properties the AIPS2o paper needs from the model (Section 4):
+a monotone F means the learned partition is exact and no insertion-sort
+repair pass is required.
+"""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def make_sample(n, dist, rng=None):
+    rng = rng or RNG
+    if dist == "uniform":
+        x = rng.uniform(0, 1e6, n)
+    elif dist == "normal":
+        x = rng.normal(0, 1, n)
+    elif dist == "lognormal":
+        x = rng.lognormal(0, 0.5, n)
+    elif dist == "zipfish":
+        x = np.floor(rng.pareto(1.5, n) * 100)
+    elif dist == "dups":
+        x = np.asarray(rng.integers(0, 50, n), dtype=np.float64)
+    else:
+        raise ValueError(dist)
+    return np.sort(x)
+
+
+DISTS = ["uniform", "normal", "lognormal", "zipfish", "dups"]
+
+
+@pytest.mark.parametrize("dist", DISTS)
+def test_monotone_on_sorted_input(dist):
+    """F must be nondecreasing over a sorted key stream — the paper's core
+    requirement for skipping the correction pass."""
+    sample = make_sample(4096, dist)
+    root, leaf = model.rmi_train(jnp.asarray(sample), n_leaves=256, block=1024)
+    probe = np.sort(make_sample(8192, dist))
+    cdf = np.asarray(
+        model.rmi_predict(jnp.asarray(probe), root, leaf, block=1024)
+    )
+    assert np.all(np.diff(cdf) >= 0.0), f"inversions in predicted CDF ({dist})"
+
+
+@pytest.mark.parametrize("dist", ["uniform", "normal", "lognormal"])
+def test_cdf_accuracy(dist):
+    """Predicted CDF should track the empirical CDF on smooth distributions."""
+    sample = make_sample(8192, dist)
+    root, leaf = model.rmi_train(jnp.asarray(sample), n_leaves=256, block=1024)
+    probe = np.sort(make_sample(8192, dist))
+    cdf = np.asarray(model.rmi_predict(jnp.asarray(probe), root, leaf, block=1024))
+    emp = (np.arange(len(probe)) + 0.5) / len(probe)
+    err = np.abs(cdf - emp).mean()
+    assert err < 0.02, f"mean |F - empirical| = {err} too high for {dist}"
+
+
+def test_leaf_envelope_nondecreasing():
+    sample = make_sample(4096, "lognormal")
+    _, leaf = model.rmi_train(jnp.asarray(sample), n_leaves=128, block=1024)
+    leaf = np.asarray(leaf)
+    lo, hi = leaf[:, 2], leaf[:, 3]
+    assert np.all(lo <= hi + 1e-15)
+    assert np.all(hi[:-1] <= lo[1:] + 1e-15)  # envelope tiles [0,1)
+    assert np.all(leaf[:, 0] >= 0.0)  # nonnegative leaf slopes
+
+
+def test_train_constant_input():
+    """All-equal sample: degenerate fit must not NaN and must stay in range."""
+    sample = np.full(2048, 7.25)
+    root, leaf = model.rmi_train(jnp.asarray(sample), n_leaves=64, block=1024)
+    assert np.all(np.isfinite(np.asarray(root)))
+    assert np.all(np.isfinite(np.asarray(leaf)))
+    cdf = np.asarray(
+        model.rmi_predict(jnp.full((1024,), 7.25), root, leaf, block=1024)
+    )
+    assert np.all((cdf >= 0) & (cdf < 1))
+
+
+def test_pallas_and_ref_training_agree():
+    sample = make_sample(4096, "normal")
+    root_a, leaf_a = model.rmi_train(jnp.asarray(sample), n_leaves=128, block=512)
+    root_b, leaf_b = model.rmi_train_ref(jnp.asarray(sample), n_leaves=128)
+    np.testing.assert_allclose(np.asarray(root_a), np.asarray(root_b), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(leaf_a), np.asarray(leaf_b), rtol=1e-9, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.sampled_from(DISTS),
+    st.sampled_from([32, 128, 512]),
+    st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_monotone_hypothesis(dist, n_leaves, seed):
+    rng = np.random.default_rng(seed)
+    sample = make_sample(2048, dist, rng)
+    root, leaf = model.rmi_train(jnp.asarray(sample), n_leaves=n_leaves, block=1024)
+    probe = np.sort(make_sample(2048, dist, rng))
+    cdf = np.asarray(model.rmi_predict(jnp.asarray(probe), root, leaf, block=1024))
+    assert np.all(np.diff(cdf) >= 0.0)
+    assert np.all((cdf >= 0.0) & (cdf < 1.0))

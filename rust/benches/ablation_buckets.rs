@@ -1,0 +1,32 @@
+//! Ablation A1: AIPS²o bucket count B for the RMI classifier.
+//! The paper fixes B = 1024 (Section 4); this sweep shows the trade-off
+//! that choice sits on (classification cost vs recursion depth).
+
+use aipso::aips2o::{self, Aips2oConfig};
+use aipso::datasets;
+use aipso::util::{fmt, stats};
+
+fn main() {
+    let n: usize = std::env::var("AIPSO_N").ok().and_then(|v| v.parse().ok()).unwrap_or(2_000_000);
+    let reps: usize = std::env::var("AIPSO_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+    println!("# Ablation: AIPS2o RMI bucket count (n = {n}, parallel, all cores)\n");
+    println!("| dataset | B | rate |");
+    println!("|---------|---|------|");
+    for ds in ["uniform", "lognormal"] {
+        let base = datasets::generate_f64(ds, n, 7).unwrap();
+        for buckets in [64usize, 256, 1024, 4096] {
+            let mut cfg = Aips2oConfig::default();
+            cfg.strategy.rmi_buckets = buckets;
+            let mut rates = Vec::new();
+            for _ in 0..reps {
+                let mut v = base.clone();
+                let t0 = std::time::Instant::now();
+                aips2o::sort_par_cfg(&mut v, 0, &cfg);
+                rates.push(n as f64 / t0.elapsed().as_secs_f64());
+                assert!(aipso::is_sorted(&v));
+            }
+            println!("| {ds} | {buckets} | {} |", fmt::rate(stats::mean(&rates)));
+        }
+    }
+    println!("\nexpected shape: flat plateau around B=256..1024; small B loses to recursion depth");
+}

@@ -1,0 +1,75 @@
+//! Ablation A4 (architecture): classification throughput of the RMI via
+//! the AOT-compiled XLA artifact (batched through PJRT) vs the native
+//! Rust mirror — the measurement behind DESIGN.md §1's "why two RMI
+//! implementations". Requires `make artifacts`.
+
+use aipso::classifier::rmi_classifier::RmiClassifier;
+use aipso::classifier::Classifier;
+use aipso::rmi::model::{Rmi, RmiConfig};
+use aipso::runtime::{default_artifacts_dir, RmiRuntime};
+use aipso::util::fmt;
+use aipso::util::rng::Xoshiro256pp;
+
+fn main() {
+    let n: usize = std::env::var("AIPSO_N").ok().and_then(|v| v.parse().ok()).unwrap_or(2_000_000);
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP: no artifacts at {dir:?}; run `make artifacts`");
+        return;
+    }
+    let rt = RmiRuntime::load(&dir).expect("load artifacts");
+    let mut rng = Xoshiro256pp::new(5);
+    let keys: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1e6)).collect();
+    let mut sample: Vec<f64> = (0..rt.manifest().train_sample)
+        .map(|_| keys[rng.next_below(n as u64) as usize])
+        .collect();
+    sample.sort_unstable_by(f64::total_cmp);
+
+    println!("# Ablation: PJRT-artifact vs native RMI (n = {n})\n");
+
+    // training
+    let t0 = std::time::Instant::now();
+    let rmi_xla = rt.train(&sample).unwrap();
+    let t_xla_train = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let rmi_native = Rmi::train(&sample, RmiConfig { n_leaves: rt.manifest().n_leaves });
+    let t_native_train = t0.elapsed().as_secs_f64();
+    println!("| path | train time | predict rate |");
+    println!("|------|------------|--------------|");
+
+    // prediction: XLA batched
+    let t0 = std::time::Instant::now();
+    let cdf = rt.predict(&keys, &rmi_xla).unwrap();
+    let t_xla = t0.elapsed().as_secs_f64();
+    assert_eq!(cdf.len(), n);
+
+    // prediction: native batch
+    let classifier = RmiClassifier::new(rmi_native.clone(), 1024);
+    let mut out = vec![0u32; n];
+    let t0 = std::time::Instant::now();
+    classifier.classify_batch(&keys, &mut out);
+    let t_native = t0.elapsed().as_secs_f64();
+
+    println!(
+        "| XLA/PJRT artifact | {} | {} |",
+        fmt::secs(t_xla_train),
+        fmt::rate(n as f64 / t_xla)
+    );
+    println!(
+        "| native Rust mirror | {} | {} |",
+        fmt::secs(t_native_train),
+        fmt::rate(n as f64 / t_native)
+    );
+    println!(
+        "\nnative/XLA predict speedup: {:.1}x (expected >1: per-call FFI + literal copies;\nthis is why the sort hot loop uses the native mirror — DESIGN.md §1)",
+        t_xla / t_native
+    );
+    // numeric agreement while we're here
+    let max_err = keys
+        .iter()
+        .zip(&cdf)
+        .map(|(k, p)| (rmi_native.predict(*k) - p).abs())
+        .fold(0.0f64, f64::max);
+    println!("max |native - xla| = {max_err:.2e}");
+    assert!(max_err < 1e-9);
+}

@@ -1,0 +1,39 @@
+//! Ablation A2: RMI training-sample size — the paper's Section 5.1
+//! explanation for AI1S²o losing sequentially: "The advantage of having
+//! better pivots is offset by the training cost", while the parallel case
+//! benefits. This sweep reproduces that trade-off.
+
+use aipso::aips2o::{self, Aips2oConfig};
+use aipso::datasets;
+use aipso::util::{fmt, stats};
+
+fn main() {
+    let n: usize = std::env::var("AIPSO_N").ok().and_then(|v| v.parse().ok()).unwrap_or(2_000_000);
+    let reps: usize = std::env::var("AIPSO_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+    let base = datasets::generate_f64("uniform", n, 11).unwrap();
+    println!("# Ablation: RMI sample fraction, sequential vs parallel (uniform, n = {n})\n");
+    println!("| sample frac | seq rate | par rate |");
+    println!("|-------------|----------|----------|");
+    for frac in [0.001f64, 0.005, 0.01, 0.03] {
+        let mut cfg = Aips2oConfig::default();
+        cfg.strategy.rmi_sample_frac = frac;
+        let mut seq = Vec::new();
+        let mut par = Vec::new();
+        for _ in 0..reps {
+            let mut v = base.clone();
+            let t0 = std::time::Instant::now();
+            aips2o::sort_seq_cfg(&mut v, &cfg);
+            seq.push(n as f64 / t0.elapsed().as_secs_f64());
+            let mut v = base.clone();
+            let t0 = std::time::Instant::now();
+            aips2o::sort_par_cfg(&mut v, 0, &cfg);
+            par.push(n as f64 / t0.elapsed().as_secs_f64());
+        }
+        println!(
+            "| {frac} | {} | {} |",
+            fmt::rate(stats::mean(&seq)),
+            fmt::rate(stats::mean(&par))
+        );
+    }
+    println!("\nexpected shape: sequential rate degrades as sample grows; parallel flat/improving");
+}

@@ -1,0 +1,48 @@
+//! Ablation A3: Algorithm 5's two thresholds — duplicate fraction and
+//! minimum input size — versus forcing the RMI or the tree everywhere.
+//! Reproduces why AIPS²o needs the fallback ("avoids the common
+//! adversarial case for LearnedSort", Section 4).
+
+use aipso::aips2o::{self, Aips2oConfig};
+use aipso::datasets;
+use aipso::util::{fmt, stats};
+
+fn run(cfg: &Aips2oConfig, base: &[f64], reps: usize) -> f64 {
+    let mut rates = Vec::new();
+    for _ in 0..reps {
+        let mut v = base.to_vec();
+        let t0 = std::time::Instant::now();
+        aips2o::sort_par_cfg(&mut v, 0, cfg);
+        rates.push(base.len() as f64 / t0.elapsed().as_secs_f64());
+        assert!(aipso::is_sorted(&v));
+    }
+    stats::mean(&rates)
+}
+
+fn main() {
+    let n: usize = std::env::var("AIPSO_N").ok().and_then(|v| v.parse().ok()).unwrap_or(2_000_000);
+    let reps: usize = std::env::var("AIPSO_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+    println!("# Ablation: strategy selection (parallel, n = {n})\n");
+    let mut paper = Aips2oConfig::default(); // dup<=10%, n>=1e5 (Algorithm 5)
+    paper.strategy.min_rmi_input = 100_000;
+    paper.strategy.max_dup_fraction = 0.10;
+    let mut always_rmi = Aips2oConfig::default();
+    always_rmi.strategy.min_rmi_input = 0;
+    always_rmi.strategy.max_dup_fraction = 1.1;
+    let mut always_tree = Aips2oConfig::default();
+    always_tree.strategy.min_rmi_input = usize::MAX;
+
+    println!("| dataset | Algorithm 5 | always-RMI | always-tree |");
+    println!("|---------|-------------|------------|-------------|");
+    for ds in ["uniform", "zipf", "root_dups", "two_dups"] {
+        let base = datasets::generate_f64(ds, n, 3).unwrap();
+        println!(
+            "| {ds} | {} | {} | {} |",
+            fmt::rate(run(&paper, &base, reps)),
+            fmt::rate(run(&always_rmi, &base, reps)),
+            fmt::rate(run(&always_tree, &base, reps)),
+        );
+    }
+    println!("\nexpected shape: Algorithm 5 ~= always-RMI on uniform, ~= always-tree on");
+    println!("root_dups/two_dups, and never the worst column (that is its whole point)");
+}

@@ -1,0 +1,57 @@
+//! Regenerates paper Figures 4–6: parallel sorting throughput of AIPS²o,
+//! IPS⁴o, IPS²Ra and std::sort(par) over all 14 datasets.
+//!
+//! Two views are printed:
+//!  * measured on this box's cores (time-sliced if the box is small), and
+//!  * simulated on the paper's 48 cores via the partition-balance model
+//!    (real measured bucket sizes -> LPT makespan; see bench_harness::balance).
+
+use aipso::bench_harness::{count_wins, render_rows, run_figure, run_figure_simulated, BenchConfig};
+use aipso::datasets::FigureGroup;
+use aipso::scheduler::effective_threads;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    let cores = effective_threads(cfg.threads);
+    println!(
+        "# Parallel figures (n = {}, reps = {}, threads = {})\n",
+        cfg.n, cfg.reps, cores
+    );
+    let mut all = Vec::new();
+    for (title, group) in [
+        ("Figure 4: parallel, synthetic (Uniform/Normal/Log-Normal)", FigureGroup::Synthetic1),
+        ("Figure 5: parallel, synthetic (MixGauss..Zipf)", FigureGroup::Synthetic2),
+        ("Figure 6: parallel, real-world (simulated)", FigureGroup::RealWorld),
+    ] {
+        let rows = run_figure(group, true, &cfg);
+        print!("{}\n", render_rows(title, &rows));
+        all.extend(rows);
+    }
+    println!("## Parallel win count, measured on {cores} core(s) (paper: AIPS2o 10/14, IPS4o 4/14 on 48)");
+    for (engine, wins) in count_wins(&all) {
+        println!("  {engine}: {wins}/14");
+    }
+
+    // The paper's testbed has 48 cores; when this box has fewer, the
+    // ranking mechanism (partition balance -> thread utilization) is
+    // reproduced by the balance model — DESIGN.md §6, EXPERIMENTS.md.
+    let sim_threads: usize = std::env::var("AIPSO_SIM_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(48);
+    println!("\n# Simulated {sim_threads}-core figures (measured partitions, LPT makespan model)\n");
+    let mut all = Vec::new();
+    for (title, group) in [
+        ("Figure 4 (simulated cores): synthetic 1", FigureGroup::Synthetic1),
+        ("Figure 5 (simulated cores): synthetic 2", FigureGroup::Synthetic2),
+        ("Figure 6 (simulated cores): real-world", FigureGroup::RealWorld),
+    ] {
+        let rows = run_figure_simulated(group, sim_threads, &cfg);
+        print!("{}\n", render_rows(title, &rows));
+        all.extend(rows);
+    }
+    println!("## Simulated {sim_threads}-core win count (paper: AIPS2o 10/14, IPS4o 4/14)");
+    for (engine, wins) in count_wins(&all) {
+        println!("  {engine}: {wins}/14");
+    }
+}

@@ -1,0 +1,30 @@
+//! Regenerates paper Figures 1–3: sequential sorting throughput of
+//! LearnedSort, I1S⁴o, I1S²Ra, AI1S²o and std::sort over all 14 datasets.
+//!
+//! Scale with AIPSO_N / AIPSO_REPS (defaults are CI-sized; the paper used
+//! N = 1e8 / 2e8 and 10 reps — shape, not absolute keys/s, is the target).
+
+use aipso::bench_harness::{count_wins, render_rows, run_figure, BenchConfig};
+use aipso::datasets::FigureGroup;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    println!(
+        "# Sequential figures (n = {}, reps = {})\n",
+        cfg.n, cfg.reps
+    );
+    let mut all = Vec::new();
+    for (title, group) in [
+        ("Figure 1: sequential, synthetic (Uniform/Normal/Log-Normal)", FigureGroup::Synthetic1),
+        ("Figure 2: sequential, synthetic (MixGauss..Zipf)", FigureGroup::Synthetic2),
+        ("Figure 3: sequential, real-world (simulated)", FigureGroup::RealWorld),
+    ] {
+        let rows = run_figure(group, false, &cfg);
+        print!("{}\n", render_rows(title, &rows));
+        all.extend(rows);
+    }
+    println!("## Sequential win count (paper: LearnedSort 9/14, I1S2Ra 4/14, I1S4o 1/14)");
+    for (engine, wins) in count_wins(&all) {
+        println!("  {engine}: {wins}/14");
+    }
+}

@@ -1,0 +1,52 @@
+//! §Perf tool: per-phase time breakdown (sampling / model-train /
+//! classification / block-permutation / cleanup / base-case) for each
+//! engine — the hand-rolled profiler behind EXPERIMENTS.md §Perf.
+
+use aipso::datasets;
+use aipso::util::timer;
+use aipso::util::{fmt, timer::PHASE_NAMES};
+use aipso::{sort_parallel, sort_sequential, SortEngine};
+
+fn main() {
+    let n: usize = std::env::var("AIPSO_N").ok().and_then(|v| v.parse().ok()).unwrap_or(2_000_000);
+    println!("# Phase breakdown (uniform, n = {n})\n");
+    for (engine, parallel) in [
+        (SortEngine::Aips2o, false),
+        (SortEngine::Aips2o, true),
+        (SortEngine::Ips4o, false),
+        (SortEngine::Ips4o, true),
+        (SortEngine::Ips2ra, true),
+        (SortEngine::LearnedSort, false),
+    ] {
+        let mut v = datasets::generate_f64("uniform", n, 9).unwrap();
+        timer::set_phase_profiling(true);
+        timer::reset_phases();
+        let t0 = std::time::Instant::now();
+        if parallel {
+            sort_parallel(engine, &mut v, 0);
+        } else {
+            sort_sequential(engine, &mut v);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        timer::set_phase_profiling(false);
+        let snap = timer::phase_snapshot();
+        let total: u64 = snap.iter().sum();
+        println!(
+            "## {} — wall {} ({})",
+            engine.paper_name(parallel),
+            fmt::secs(wall),
+            fmt::rate(n as f64 / wall)
+        );
+        for (name, ns) in PHASE_NAMES.iter().zip(snap.iter()) {
+            if *ns > 0 {
+                println!(
+                    "  {:>18}: {:>9.1} ms ({:>4.1}% of phase time)",
+                    name,
+                    *ns as f64 / 1e6,
+                    100.0 * *ns as f64 / total as f64
+                );
+            }
+        }
+        println!();
+    }
+}

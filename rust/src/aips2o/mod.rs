@@ -1,0 +1,219 @@
+//! AIPS²o — Augmented In-place Parallel SampleSort (engine E4): **the
+//! paper's contribution** (Section 4).
+//!
+//! AIPS²o is IPS⁴o with Algorithm 5 deciding, per recursive call, between
+//! the learned classifier (monotonic RMI, B = 1024) and the branchless
+//! decision tree (B = 256, equality buckets). Everything else is inherited
+//! from the shared framework:
+//!
+//! * in-place block partitioning + parallelization ([`crate::sample_sort`]),
+//! * duplicate handling via the tree's equality buckets,
+//! * SkaSort below 4096 keys ("Model-based counting sort is not used as
+//!   the algorithm never forwards the RMI between recursive calls.
+//!   Instead, SkaSort is used for the base case" — Section 4),
+//! * the monotonic RMI means no insertion-sort repair pass is needed.
+
+pub mod strategy;
+
+use crate::classifier::Classifier;
+use crate::key::SortKey;
+use crate::radix_sort::ska_sort::ska_sort;
+use crate::sample_sort::partition::partition;
+use crate::scheduler::run_task_pool;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::timer::{phase_scope, Phase};
+
+pub use strategy::{build_partition_model, Strategy, StrategyConfig};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Aips2oConfig {
+    pub strategy: StrategyConfig,
+    /// Paper: SkaSort below 4096 keys.
+    pub base_case: usize,
+    /// Keys per buffer block.
+    pub block: usize,
+    /// Recursion guard (heapsort fallback).
+    pub max_depth: usize,
+}
+
+impl Default for Aips2oConfig {
+    fn default() -> Self {
+        Aips2oConfig {
+            strategy: StrategyConfig::default(),
+            base_case: 4096,
+            block: 128,
+            max_depth: 12,
+        }
+    }
+}
+
+/// Sequential AIPS²o (paper name: AI1S²o).
+pub fn sort_seq<K: SortKey>(data: &mut [K]) {
+    sort_seq_cfg(data, &Aips2oConfig::default());
+}
+
+pub fn sort_seq_cfg<K: SortKey>(data: &mut [K], cfg: &Aips2oConfig) {
+    let mut rng = Xoshiro256pp::new(0xA1B5_0001 ^ data.len() as u64);
+    sort_rec(data, cfg, cfg.max_depth, &mut rng, 1);
+}
+
+/// Parallel AIPS²o — the paper's headline configuration.
+pub fn sort_par<K: SortKey>(data: &mut [K], threads: usize) {
+    sort_par_cfg(data, threads, &Aips2oConfig::default());
+}
+
+pub fn sort_par_cfg<K: SortKey>(data: &mut [K], threads: usize, cfg: &Aips2oConfig) {
+    let threads = threads.max(1);
+    let n = data.len();
+    if threads == 1 || n <= cfg.base_case.max(4 * cfg.block * threads) {
+        return sort_seq_cfg(data, cfg);
+    }
+    let mut rng = Xoshiro256pp::new(0xA1B5_0002 ^ n as u64);
+    let Some(model) = build_partition_model(data, &cfg.strategy, &mut rng) else {
+        return; // constant input
+    };
+    // Top level: cooperative partition with all threads.
+    let result = partition(data, &model, cfg.block, threads);
+
+    let base = data.as_mut_ptr() as usize;
+    let cfg = *cfg;
+    let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
+    for b in 0..model.num_buckets() {
+        let (lo, hi) = (result.boundaries[b], result.boundaries[b + 1]);
+        if hi - lo > 1 && !model.is_equality_bucket(b) {
+            tasks.push((lo, hi - lo, cfg.max_depth - 1));
+        }
+    }
+    run_task_pool(threads, tasks, move |(off, len, depth), spawner| {
+        // SAFETY: partition boundaries produce disjoint ranges.
+        let sub = unsafe { std::slice::from_raw_parts_mut((base as *mut K).add(off), len) };
+        if len <= cfg.base_case {
+            let _g = phase_scope(Phase::BaseCase);
+            ska_sort(sub);
+            return;
+        }
+        if depth == 0 {
+            let _g = phase_scope(Phase::BaseCase);
+            crate::sample_sort::base_case::heapsort(sub);
+            return;
+        }
+        let mut rng = Xoshiro256pp::stream(0xA1B5_0003, off as u64);
+        let Some(model) = build_partition_model(sub, &cfg.strategy, &mut rng) else {
+            return;
+        };
+        let res = partition(sub, &model, cfg.block, 1);
+        for b in 0..model.num_buckets() {
+            let (lo, hi) = (res.boundaries[b], res.boundaries[b + 1]);
+            if hi - lo > 1 && !model.is_equality_bucket(b) {
+                spawner.spawn((off + lo, hi - lo, depth - 1));
+            }
+        }
+    });
+}
+
+fn sort_rec<K: SortKey>(
+    data: &mut [K],
+    cfg: &Aips2oConfig,
+    depth: usize,
+    rng: &mut Xoshiro256pp,
+    threads: usize,
+) {
+    let n = data.len();
+    if n <= cfg.base_case {
+        let _g = phase_scope(Phase::BaseCase);
+        ska_sort(data);
+        return;
+    }
+    if depth == 0 {
+        let _g = phase_scope(Phase::BaseCase);
+        crate::sample_sort::base_case::heapsort(data);
+        return;
+    }
+    let Some(model) = build_partition_model(data, &cfg.strategy, rng) else {
+        return;
+    };
+    let result = partition(data, &model, cfg.block, threads);
+    for b in 0..model.num_buckets() {
+        let (lo, hi) = (result.boundaries[b], result.boundaries[b + 1]);
+        if hi - lo > 1 && !model.is_equality_bucket(b) {
+            sort_rec(&mut data[lo..hi], cfg, depth - 1, rng, 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::is_sorted;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn seq_sorts_smooth_distributions() {
+        for n in [0usize, 1, 4096, 4097, 50_000, 250_000] {
+            let mut rng = Xoshiro256pp::new(n as u64 + 11);
+            let mut v: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1e6)).collect();
+            sort_seq(&mut v);
+            assert!(is_sorted(&v), "n={n}");
+        }
+    }
+
+    #[test]
+    fn par_sorts_and_matches() {
+        for (n, t) in [(100_000usize, 2usize), (300_000, 4), (299_999, 8)] {
+            let mut rng = Xoshiro256pp::new(n as u64);
+            let mut v: Vec<f64> = (0..n).map(|_| rng.lognormal(0.0, 0.5)).collect();
+            let mut want = v.clone();
+            want.sort_unstable_by(f64::total_cmp);
+            sort_par(&mut v, t);
+            assert_eq!(v, want, "n={n} t={t}");
+        }
+    }
+
+    #[test]
+    fn duplicate_adversaries_route_to_tree() {
+        let n = 200_000;
+        // RootDups — the LearnedSort adversary AIPS2o must handle
+        let m = (n as f64).sqrt() as u64;
+        let mut v: Vec<f64> = (0..n as u64).map(|i| (i % m) as f64).collect();
+        let mut want = v.clone();
+        want.sort_unstable_by(f64::total_cmp);
+        sort_par(&mut v, 4);
+        assert_eq!(v, want);
+        // near-constant
+        let mut rng = Xoshiro256pp::new(21);
+        let mut v: Vec<u64> = (0..n).map(|_| rng.next_below(3)).collect();
+        let mut want = v.clone();
+        want.sort_unstable();
+        sort_par(&mut v, 4);
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn u64_heavy_tail() {
+        let mut rng = Xoshiro256pp::new(23);
+        let mut v: Vec<u64> = (0..150_000)
+            .map(|_| (rng.lognormal(20.0, 3.0)) as u64)
+            .collect();
+        let mut want = v.clone();
+        want.sort_unstable();
+        sort_par(&mut v, 4);
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn constant_input() {
+        let mut v = vec![1.25f64; 200_000];
+        sort_par(&mut v, 4);
+        assert!(is_sorted(&v));
+    }
+
+    #[test]
+    fn sorted_and_reversed() {
+        let mut v: Vec<f64> = (0..200_000).map(|i| i as f64).collect();
+        sort_par(&mut v, 4);
+        assert!(is_sorted(&v));
+        let mut v: Vec<f64> = (0..200_000).rev().map(|i| i as f64).collect();
+        sort_par(&mut v, 4);
+        assert!(is_sorted(&v));
+    }
+}

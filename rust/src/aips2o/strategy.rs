@@ -1,0 +1,223 @@
+//! Paper Algorithm 5: `BuildPartitionModel` — AIPS²o's strategy selection.
+//!
+//! Draw a small sample; if the (sub)problem is large enough and the sample
+//! is not duplicate-heavy, draw a *larger* sample ("the RMI benefits from
+//! larger samples") and train the monotonic RMI with B = 1024 buckets;
+//! otherwise build IPS⁴o's branchless decision tree with B = 256 and its
+//! equality buckets — which is how AIPS²o "avoids the common adversarial
+//! case for LearnedSort" (duplicates).
+
+use crate::classifier::decision_tree::DecisionTree;
+use crate::classifier::rmi_classifier::RmiClassifier;
+use crate::classifier::Classifier;
+use crate::key::SortKey;
+use crate::rmi::model::{sample_f64, Rmi, RmiConfig};
+use crate::util::rng::Xoshiro256pp;
+use crate::util::timer::{phase_scope, Phase};
+
+#[derive(Debug, Clone, Copy)]
+pub struct StrategyConfig {
+    /// Paper: "We default to the decision tree ... if the input size is
+    /// smaller than N = 10^5".
+    pub min_rmi_input: usize,
+    /// Paper: "... or if there are more than 10% of duplicates in the
+    /// first sample".
+    pub max_dup_fraction: f64,
+    /// Paper: B = 1024 buckets for the RMI.
+    pub rmi_buckets: usize,
+    /// Second-level models in the RMI.
+    pub rmi_leaves: usize,
+    /// Paper: decision tree with B = 256.
+    pub tree_buckets: usize,
+    /// Small first sample (duplicate probe + tree splitters).
+    pub probe_sample: usize,
+    /// Larger RMI training sample as a fraction of n.
+    pub rmi_sample_frac: f64,
+    pub rmi_sample_max: usize,
+}
+
+impl Default for StrategyConfig {
+    fn default() -> Self {
+        StrategyConfig {
+            min_rmi_input: 100_000,
+            max_dup_fraction: 0.10,
+            rmi_buckets: 1024,
+            rmi_leaves: 1024,
+            tree_buckets: 256,
+            probe_sample: 2048,
+            rmi_sample_frac: 0.01,
+            rmi_sample_max: 1 << 16,
+        }
+    }
+}
+
+/// The chosen partitioning model: either the learned classifier or the
+/// comparison-based splitter tree.
+pub enum Strategy<K: SortKey> {
+    Rmi(RmiClassifier),
+    Tree(DecisionTree<K>),
+}
+
+impl<K: SortKey> Strategy<K> {
+    pub fn is_learned(&self) -> bool {
+        matches!(self, Strategy::Rmi(_))
+    }
+}
+
+impl<K: SortKey> Classifier<K> for Strategy<K> {
+    fn num_buckets(&self) -> usize {
+        match self {
+            Strategy::Rmi(c) => Classifier::<K>::num_buckets(c),
+            Strategy::Tree(c) => c.num_buckets(),
+        }
+    }
+
+    #[inline(always)]
+    fn classify(&self, key: K) -> usize {
+        match self {
+            Strategy::Rmi(c) => Classifier::<K>::classify(c, key),
+            Strategy::Tree(c) => c.classify(key),
+        }
+    }
+
+    fn is_equality_bucket(&self, b: usize) -> bool {
+        match self {
+            Strategy::Rmi(c) => Classifier::<K>::is_equality_bucket(c, b),
+            Strategy::Tree(c) => c.is_equality_bucket(b),
+        }
+    }
+
+    fn classify_batch(&self, keys: &[K], out: &mut [u32]) {
+        match self {
+            Strategy::Rmi(c) => c.classify_batch(keys, out),
+            Strategy::Tree(c) => c.classify_batch(keys, out),
+        }
+    }
+}
+
+/// Duplicate fraction of a sorted sample: 1 - distinct/len.
+pub fn duplicate_fraction<K: SortKey>(sorted_sample: &[K]) -> f64 {
+    if sorted_sample.len() < 2 {
+        return 0.0;
+    }
+    let distinct = 1 + sorted_sample
+        .windows(2)
+        .filter(|w| !w[0].key_eq(w[1]))
+        .count();
+    1.0 - distinct as f64 / sorted_sample.len() as f64
+}
+
+/// Algorithm 5. Returns `None` when the input is constant (already
+/// sorted — nothing to partition).
+pub fn build_partition_model<K: SortKey>(
+    data: &[K],
+    cfg: &StrategyConfig,
+    rng: &mut Xoshiro256pp,
+) -> Option<Strategy<K>> {
+    let _g = phase_scope(Phase::Sampling);
+    let n = data.len();
+    // S <- Sample(A, l, r); Sort(S) — probe scales down with n so deep
+    // recursion levels don't pay a fixed 2048-key sample (perf log).
+    let probe_n = cfg.probe_sample.min((n / 16).max(256)).min(n);
+    let mut probe: Vec<K> = (0..probe_n)
+        .map(|_| data[rng.next_below(n as u64) as usize])
+        .collect();
+    probe.sort_unstable_by(|a, b| a.to_bits_ordered().cmp(&b.to_bits_ordered()));
+
+    if probe.first().map(|k| k.to_bits_ordered()) == probe.last().map(|k| k.to_bits_ordered()) {
+        let v = probe.first()?.to_bits_ordered();
+        if data.iter().all(|k| k.to_bits_ordered() == v) {
+            return None;
+        }
+    }
+
+    let input_is_large = n >= cfg.min_rmi_input;
+    let too_many_duplicates = duplicate_fraction(&probe) > cfg.max_dup_fraction;
+
+    if input_is_large && !too_many_duplicates {
+        // R <- LargerSample(A, l, r); Sort(R); rmi <- BuildRMI(R)
+        let _t = phase_scope(Phase::ModelTrain);
+        let ssz = ((n as f64 * cfg.rmi_sample_frac) as usize)
+            .clamp(cfg.probe_sample, cfg.rmi_sample_max)
+            .min(n);
+        let mut sample = Vec::new();
+        sample_f64(data, ssz, rng, &mut sample);
+        sample.sort_unstable_by(f64::total_cmp);
+        let rmi = Rmi::train(
+            &sample,
+            RmiConfig {
+                n_leaves: cfg.rmi_leaves,
+            },
+        );
+        Some(Strategy::Rmi(RmiClassifier::new(rmi, cfg.rmi_buckets)))
+    } else {
+        // tree <- BuildBranchlessDecisionTree(S); fan-out shrinks on small
+        // sub-problems so buckets land near the SkaSort base-case size
+        let k = cfg
+            .tree_buckets
+            .min((n / 4096).max(2).next_power_of_two())
+            .max(2);
+        Some(Strategy::Tree(DecisionTree::from_sorted_sample(&probe, k)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256pp {
+        Xoshiro256pp::new(0xA1B5)
+    }
+
+    #[test]
+    fn large_smooth_input_gets_rmi() {
+        let mut r = rng();
+        let data: Vec<f64> = (0..200_000).map(|_| r.uniform(0.0, 1e6)).collect();
+        let s = build_partition_model(&data, &StrategyConfig::default(), &mut r).unwrap();
+        assert!(s.is_learned());
+        assert_eq!(Classifier::<f64>::num_buckets(&s), 1024);
+    }
+
+    #[test]
+    fn small_input_gets_tree() {
+        let mut r = rng();
+        let data: Vec<f64> = (0..50_000).map(|_| r.uniform(0.0, 1e6)).collect();
+        let s = build_partition_model(&data, &StrategyConfig::default(), &mut r).unwrap();
+        assert!(!s.is_learned());
+    }
+
+    #[test]
+    fn duplicate_heavy_input_gets_tree() {
+        let mut r = rng();
+        let data: Vec<u64> = (0..200_000).map(|_| r.next_below(10)).collect();
+        let s = build_partition_model(&data, &StrategyConfig::default(), &mut r).unwrap();
+        assert!(!s.is_learned(), "duplicates must route to the tree");
+    }
+
+    #[test]
+    fn constant_input_returns_none() {
+        let mut r = rng();
+        let data = vec![9u64; 150_000];
+        assert!(build_partition_model(&data, &StrategyConfig::default(), &mut r).is_none());
+    }
+
+    #[test]
+    fn duplicate_fraction_measures() {
+        assert_eq!(duplicate_fraction::<u64>(&[]), 0.0);
+        assert_eq!(duplicate_fraction(&[1u64, 2, 3, 4]), 0.0);
+        assert_eq!(duplicate_fraction(&[1u64, 1, 1, 1]), 0.75);
+        assert!((duplicate_fraction(&[1u64, 1, 2, 3]) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strategy_classify_dispatch() {
+        let mut r = rng();
+        let data: Vec<f64> = (0..200_000).map(|_| r.uniform(0.0, 1e6)).collect();
+        let s = build_partition_model(&data, &StrategyConfig::default(), &mut r).unwrap();
+        let mut out = vec![0u32; 100];
+        s.classify_batch(&data[..100], &mut out);
+        for (k, o) in data[..100].iter().zip(&out) {
+            assert_eq!(*o as usize, s.classify(*k));
+        }
+    }
+}

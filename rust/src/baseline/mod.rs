@@ -1,0 +1,145 @@
+//! `std::sort` baselines (engine E5).
+//!
+//! The paper's sequential baseline is GNU libstdc++ IntroSort; Rust's
+//! `sort_unstable` is pdqsort — the algorithm the paper itself cites as
+//! "currently implemented by the Rust Standard Library" (Section 2.3), so
+//! it is the natural stand-in. The parallel baseline stands in for
+//! `std::sort(std::execution::par_unseq, ...)`: chunk-sort with pdqsort,
+//! then parallel pairwise merge passes.
+
+use crate::key::SortKey;
+use crate::scheduler::{par_chunks_mut, parallel_for};
+
+/// Sequential baseline: pdqsort over the order-preserving bit image.
+pub fn std_sort<K: SortKey>(data: &mut [K]) {
+    data.sort_unstable_by_key(|k| k.to_bits_ordered());
+}
+
+#[derive(Clone, Copy)]
+struct ConstPtr<K>(*const K);
+unsafe impl<K> Send for ConstPtr<K> {}
+unsafe impl<K> Sync for ConstPtr<K> {}
+impl<K> ConstPtr<K> {
+    /// Accessor (not field) so closures capture the Sync wrapper whole.
+    fn get(self) -> *const K {
+        self.0
+    }
+}
+
+#[derive(Clone, Copy)]
+struct MutPtr<K>(*mut K);
+unsafe impl<K> Send for MutPtr<K> {}
+unsafe impl<K> Sync for MutPtr<K> {}
+impl<K> MutPtr<K> {
+    fn get(self) -> *mut K {
+        self.0
+    }
+}
+
+/// Parallel baseline: parallel chunk sort + log(threads) merge passes.
+pub fn par_sort<K: SortKey>(data: &mut [K], threads: usize) {
+    let threads = threads.max(1);
+    let n = data.len();
+    if threads == 1 || n < 1 << 13 {
+        return std_sort(data);
+    }
+    // 1. sort `threads` chunks in parallel
+    let chunk = n.div_ceil(threads);
+    par_chunks_mut(threads, data, |_, _, piece| {
+        piece.sort_unstable_by_key(|k| k.to_bits_ordered());
+    });
+    // 2. pairwise parallel merge passes, ping-ponging via scratch
+    let mut scratch: Vec<K> = data.to_vec();
+    let mut in_data = true;
+    let mut width = chunk;
+    while width < n {
+        let (src, dst) = if in_data {
+            (ConstPtr(data.as_ptr()), MutPtr(scratch.as_mut_ptr()))
+        } else {
+            (ConstPtr(scratch.as_ptr()), MutPtr(data.as_mut_ptr()))
+        };
+        let pairs = n.div_ceil(2 * width);
+        parallel_for(threads, pairs, |_, range| {
+            for p in range {
+                let lo = p * 2 * width;
+                let mid = (lo + width).min(n);
+                let hi = (lo + 2 * width).min(n);
+                // SAFETY: pair output ranges [lo, hi) are disjoint; src and
+                // dst are distinct allocations.
+                unsafe {
+                    let a = std::slice::from_raw_parts(src.get().add(lo), mid - lo);
+                    let b = std::slice::from_raw_parts(src.get().add(mid), hi - mid);
+                    let out = std::slice::from_raw_parts_mut(dst.get().add(lo), hi - lo);
+                    merge_into(a, b, out);
+                }
+            }
+        });
+        in_data = !in_data;
+        width *= 2;
+    }
+    if !in_data {
+        data.copy_from_slice(&scratch);
+    }
+}
+
+fn merge_into<K: SortKey>(a: &[K], b: &[K], out: &mut [K]) {
+    debug_assert_eq!(a.len() + b.len(), out.len());
+    let (mut i, mut j) = (0, 0);
+    for slot in out.iter_mut() {
+        let take_a =
+            j >= b.len() || (i < a.len() && a[i].to_bits_ordered() <= b[j].to_bits_ordered());
+        if take_a {
+            *slot = a[i];
+            i += 1;
+        } else {
+            *slot = b[j];
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::is_sorted;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn std_sort_floats() {
+        let mut rng = Xoshiro256pp::new(1);
+        let mut v: Vec<f64> = (0..10_000).map(|_| rng.normal()).collect();
+        std_sort(&mut v);
+        assert!(is_sorted(&v));
+    }
+
+    #[test]
+    fn par_sort_matches_std() {
+        for (n, t) in [(100usize, 4usize), (1 << 13, 2), (200_000, 8), (131_073, 3)] {
+            let mut rng = Xoshiro256pp::new(n as u64);
+            let mut v: Vec<u64> = (0..n).map(|_| rng.next_below(1 << 40)).collect();
+            let mut want = v.clone();
+            want.sort_unstable();
+            par_sort(&mut v, t);
+            assert_eq!(v, want, "n={n} t={t}");
+        }
+    }
+
+    #[test]
+    fn merge_into_basic() {
+        let a = [1u64, 3, 5];
+        let b = [2u64, 2, 6];
+        let mut out = [0u64; 6];
+        merge_into(&a, &b, &mut out);
+        assert_eq!(out, [1, 2, 2, 3, 5, 6]);
+    }
+
+    #[test]
+    fn par_sort_with_duplicates() {
+        let mut rng = Xoshiro256pp::new(77);
+        let mut v: Vec<u64> = (0..50_000).map(|_| rng.next_below(10)).collect();
+        let mut want = v.clone();
+        want.sort_unstable();
+        par_sort(&mut v, 4);
+        assert_eq!(v, want);
+    }
+}

@@ -1,0 +1,287 @@
+//! Branchless k-ary splitter tree with equality buckets — the classifier
+//! of Super Scalar SampleSort (Sanders & Winkel '04) as engineered in
+//! IPS⁴o (Axtmann et al., TOPC '22).
+//!
+//! The `k-1` sorted splitters are stored twice: once in Eytzinger (BFS)
+//! layout for the branchless descent `j = 2j + (key > tree[j])`, and once
+//! sorted for the equality probe. Keys compare via their order-preserving
+//! `u64` image, so the descent is a pure integer pipeline (no float
+//! branches) — the "super scalar" part.
+//!
+//! Equality buckets (IPS⁴o §5.3): when the sample shows duplicated
+//! splitters, each base bucket `b` splits into `2b` (strictly-between keys)
+//! and `2b+1` (keys equal to splitter `s_b`). Equality buckets are already
+//! sorted and are skipped by the recursion — this is what defeats the
+//! RootDups adversary.
+
+use crate::classifier::Classifier;
+use crate::key::SortKey;
+
+#[derive(Debug, Clone)]
+pub struct DecisionTree<K: SortKey> {
+    /// Eytzinger-layout splitter images, indices 1..k (index 0 unused).
+    tree: Vec<u64>,
+    /// Sorted splitter images, for the equality probe.
+    sorted: Vec<u64>,
+    /// Sorted splitter keys (original domain), for diagnostics.
+    splitters: Vec<K>,
+    log_k: u32,
+    equality_buckets: bool,
+}
+
+impl<K: SortKey> DecisionTree<K> {
+    /// Build from a **sorted** sample. `target_buckets` is the desired
+    /// fan-out (power of two, >= 2); the real fan-out shrinks if the sample
+    /// has fewer distinct splitter candidates. Equality buckets switch on
+    /// automatically when the sample contains duplicated splitters —
+    /// IPS⁴o's skew detection.
+    pub fn from_sorted_sample(sample: &[K], target_buckets: usize) -> DecisionTree<K> {
+        assert!(target_buckets >= 2);
+        let k = target_buckets.next_power_of_two();
+        // Equidistant splitter candidates from the sample.
+        let mut cands: Vec<u64> = Vec::with_capacity(k - 1);
+        if !sample.is_empty() {
+            for i in 1..k {
+                let idx = i * sample.len() / k;
+                cands.push(sample[idx.min(sample.len() - 1)].to_bits_ordered());
+            }
+        }
+        let had_dups = cands.windows(2).any(|w| w[0] == w[1]);
+        cands.dedup();
+        // Shrink fan-out to the next power of two that the distinct
+        // candidates can fill.
+        let mut k_eff = k;
+        while k_eff > 2 && cands.len() < k_eff - 1 {
+            k_eff /= 2;
+        }
+        let splitters_bits: Vec<u64> = if cands.len() >= k_eff {
+            // re-pick equidistant among distinct candidates
+            (1..k_eff)
+                .map(|i| cands[i * cands.len() / k_eff])
+                .collect()
+        } else {
+            cands.clone()
+        };
+        // Pad (rare: fewer distinct than k_eff-1) by repeating the last.
+        let mut bits = splitters_bits;
+        if bits.is_empty() {
+            bits.push(sample.first().map(|s| s.to_bits_ordered()).unwrap_or(0));
+        }
+        while bits.len() < k_eff - 1 {
+            let last = *bits.last().unwrap();
+            bits.push(last);
+        }
+
+        let log_k = k_eff.trailing_zeros();
+        let mut tree = vec![0u64; k_eff];
+        Self::fill_eytzinger(&mut tree, &bits, 1, &mut 0);
+        let splitters = bits.iter().map(|&b| K::from_bits_ordered(b)).collect();
+        DecisionTree {
+            tree,
+            sorted: bits,
+            splitters,
+            log_k,
+            equality_buckets: had_dups,
+        }
+    }
+
+    /// In-order fill of the Eytzinger array from the sorted splitters.
+    fn fill_eytzinger(tree: &mut [u64], sorted: &[u64], node: usize, next: &mut usize) {
+        if node >= tree.len() {
+            return;
+        }
+        Self::fill_eytzinger(tree, sorted, 2 * node, next);
+        tree[node] = sorted[(*next).min(sorted.len() - 1)];
+        *next += 1;
+        Self::fill_eytzinger(tree, sorted, 2 * node + 1, next);
+    }
+
+    /// Base fan-out k (number of non-equality buckets).
+    pub fn fanout(&self) -> usize {
+        self.tree.len()
+    }
+
+    pub fn equality_buckets_enabled(&self) -> bool {
+        self.equality_buckets
+    }
+
+    pub fn splitters(&self) -> &[K] {
+        &self.splitters
+    }
+
+    /// Force equality buckets on/off (tests + Algorithm 5 tuning).
+    pub fn set_equality_buckets(&mut self, on: bool) {
+        self.equality_buckets = on;
+    }
+
+    /// Branchless descent: bucket = |{ s_i < key }|.
+    #[inline(always)]
+    fn base_bucket(&self, bits: u64) -> usize {
+        let mut j = 1usize;
+        for _ in 0..self.log_k {
+            // SAFETY: j < k_eff by construction (log_k descents from 1).
+            let s = unsafe { *self.tree.get_unchecked(j) };
+            j = 2 * j + usize::from(bits > s);
+        }
+        j - self.tree.len()
+    }
+}
+
+impl<K: SortKey> Classifier<K> for DecisionTree<K> {
+    fn num_buckets(&self) -> usize {
+        if self.equality_buckets {
+            2 * self.fanout()
+        } else {
+            self.fanout()
+        }
+    }
+
+    #[inline(always)]
+    fn classify(&self, key: K) -> usize {
+        let bits = key.to_bits_ordered();
+        let b = self.base_bucket(bits);
+        if !self.equality_buckets {
+            return b;
+        }
+        // keys equal to splitter s_b go to the equality bucket 2b+1;
+        // bucket b holds keys in (s_{b-1}, s_b], so only s_b can be equal.
+        let eq = b < self.sorted.len() && bits == self.sorted[b];
+        2 * b + usize::from(eq)
+    }
+
+    fn is_equality_bucket(&self, b: usize) -> bool {
+        self.equality_buckets && b % 2 == 1
+    }
+
+    fn classify_batch(&self, keys: &[K], out: &mut [u32]) {
+        debug_assert_eq!(keys.len(), out.len());
+        // 4-way unroll keeps several independent descents in flight —
+        // the instruction-level parallelism Super Scalar SampleSort is
+        // named for.
+        let mut chunks = keys.chunks_exact(4);
+        let mut outs = out.chunks_exact_mut(4);
+        for (kc, oc) in (&mut chunks).zip(&mut outs) {
+            oc[0] = self.classify(kc[0]) as u32;
+            oc[1] = self.classify(kc[1]) as u32;
+            oc[2] = self.classify(kc[2]) as u32;
+            oc[3] = self.classify(kc[3]) as u32;
+        }
+        for (k, o) in chunks.remainder().iter().zip(outs.into_remainder()) {
+            *o = self.classify(*k) as u32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree_from(vals: &[u64], buckets: usize) -> DecisionTree<u64> {
+        let mut s = vals.to_vec();
+        s.sort_unstable();
+        DecisionTree::from_sorted_sample(&s, buckets)
+    }
+
+    #[test]
+    fn bucket_is_count_of_smaller_splitters() {
+        // distinct sample 0..64, 8 buckets
+        let sample: Vec<u64> = (0..64).collect();
+        let t = DecisionTree::from_sorted_sample(&sample, 8);
+        assert_eq!(t.fanout(), 8);
+        assert!(!t.equality_buckets_enabled());
+        for key in 0..70u64 {
+            let want = t.sorted.iter().filter(|&&s| s < key).count();
+            assert_eq!(t.classify(key), want, "key={key}");
+        }
+    }
+
+    #[test]
+    fn buckets_are_ordered_partition() {
+        let mut rng = crate::util::rng::Xoshiro256pp::new(2);
+        let mut sample: Vec<u64> = (0..4096).map(|_| rng.next_below(1 << 30)).collect();
+        sample.sort_unstable();
+        let t = DecisionTree::from_sorted_sample(&sample, 64);
+        let keys: Vec<u64> = (0..10_000).map(|_| rng.next_below(1 << 30)).collect();
+        // max key of bucket b must be <= min key of bucket b+1
+        let nb = t.num_buckets();
+        let mut lo = vec![u64::MAX; nb];
+        let mut hi = vec![0u64; nb];
+        for &k in &keys {
+            let b = t.classify(k);
+            lo[b] = lo[b].min(k);
+            hi[b] = hi[b].max(k);
+        }
+        let mut last_hi = 0u64;
+        for b in 0..nb {
+            if lo[b] == u64::MAX {
+                continue;
+            }
+            assert!(lo[b] >= last_hi, "bucket {b} overlaps previous");
+            last_hi = hi[b];
+        }
+    }
+
+    #[test]
+    fn equality_buckets_catch_duplicates() {
+        // sample dominated by value 5 -> duplicated splitters -> equality on
+        let mut vals = vec![5u64; 1000];
+        vals.extend(0..10u64);
+        vals.sort_unstable();
+        let t = DecisionTree::from_sorted_sample(&vals, 16);
+        assert!(t.equality_buckets_enabled());
+        let b5 = t.classify(5);
+        assert!(t.is_equality_bucket(b5), "5 must land in an equality bucket");
+        // all copies land in the same bucket
+        assert_eq!(t.classify(5), b5);
+        // neighbors land elsewhere
+        assert_ne!(t.classify(4), b5);
+        assert_ne!(t.classify(6), b5);
+    }
+
+    #[test]
+    fn f64_keys_work() {
+        let mut sample: Vec<f64> = (0..1024).map(|i| (i as f64) - 512.0).collect();
+        sample.sort_unstable_by(f64::total_cmp);
+        let t = DecisionTree::from_sorted_sample(&sample, 32);
+        let lo = t.classify(-600.0);
+        let mid = t.classify(0.0);
+        let hi = t.classify(600.0);
+        assert!(lo <= mid && mid <= hi);
+        assert_eq!(lo, 0);
+        assert_eq!(hi, t.num_buckets() - 1);
+    }
+
+    #[test]
+    fn tiny_and_degenerate_samples() {
+        // single-value sample: tree still classifies
+        let t = tree_from(&[42], 256);
+        assert!(t.num_buckets() >= 2);
+        let a = t.classify(41);
+        let b = t.classify(42);
+        let c = t.classify(43);
+        assert!(a <= b && b <= c);
+        // empty sample
+        let t = DecisionTree::<u64>::from_sorted_sample(&[], 8);
+        let _ = t.classify(7);
+    }
+
+    #[test]
+    fn classify_batch_matches_scalar() {
+        let mut rng = crate::util::rng::Xoshiro256pp::new(9);
+        let mut sample: Vec<u64> = (0..512).map(|_| rng.next_below(1000)).collect();
+        sample.sort_unstable();
+        let t = DecisionTree::from_sorted_sample(&sample, 16);
+        let keys: Vec<u64> = (0..1003).map(|_| rng.next_below(1000)).collect();
+        let mut out = vec![0u32; keys.len()];
+        t.classify_batch(&keys, &mut out);
+        for (k, o) in keys.iter().zip(&out) {
+            assert_eq!(*o as usize, t.classify(*k));
+        }
+    }
+
+    #[test]
+    fn fanout_shrinks_with_few_distinct() {
+        let t = tree_from(&[1, 2, 3], 256);
+        assert!(t.fanout() <= 8, "fanout {} too big for 3 distinct", t.fanout());
+    }
+}

@@ -1,0 +1,37 @@
+//! Bucket classifiers (substrate S3).
+//!
+//! A classifier maps a key to one of `k` buckets such that all keys of
+//! bucket `i` order before all keys of bucket `i+1` (equality buckets
+//! excepted — they hold exactly one value). Two implementations:
+//!
+//! * [`decision_tree::DecisionTree`] — IPS⁴o's branchless Eytzinger-layout
+//!   splitter tree with optional equality buckets.
+//! * [`rmi_classifier::RmiClassifier`] — AIPS²o's learned classifier: the
+//!   monotonic RMI evaluated as `floor(F(x) * k)`.
+
+pub mod decision_tree;
+pub mod rmi_classifier;
+
+use crate::key::SortKey;
+
+/// Common interface the partitioning framework consumes.
+pub trait Classifier<K: SortKey>: Send + Sync {
+    /// Total number of buckets (including equality buckets).
+    fn num_buckets(&self) -> usize;
+
+    /// Bucket index for one key, in `0..num_buckets()`.
+    fn classify(&self, key: K) -> usize;
+
+    /// True if bucket `b` holds exactly one distinct value (already sorted,
+    /// recursion can skip it).
+    fn is_equality_bucket(&self, b: usize) -> bool;
+
+    /// Batch classification (engines call this on the hot path; impls
+    /// override with unrolled versions).
+    fn classify_batch(&self, keys: &[K], out: &mut [u32]) {
+        debug_assert_eq!(keys.len(), out.len());
+        for (k, o) in keys.iter().zip(out.iter_mut()) {
+            *o = self.classify(*k) as u32;
+        }
+    }
+}

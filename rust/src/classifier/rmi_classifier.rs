@@ -1,0 +1,138 @@
+//! The learned classifier of AIPS²o: a monotonic RMI evaluated as
+//! `bucket = floor(F(x) * k)`.
+//!
+//! Because the RMI is monotone (see [`crate::rmi::model`]), the bucket map
+//! is a valid ordered partition — exactly the "SampleSort with pivots
+//! selected by a CDF model" of the paper's Section 3.3, with the pivots
+//! left implicit (Section 3.2's insight: using the model directly skips
+//! the comparisons entirely).
+
+use crate::classifier::Classifier;
+use crate::key::SortKey;
+use crate::rmi::model::Rmi;
+
+#[derive(Debug, Clone)]
+pub struct RmiClassifier {
+    rmi: Rmi,
+    n_buckets: usize,
+    scale: f64,
+}
+
+impl RmiClassifier {
+    pub fn new(rmi: Rmi, n_buckets: usize) -> RmiClassifier {
+        assert!(n_buckets >= 2);
+        RmiClassifier {
+            rmi,
+            n_buckets,
+            scale: n_buckets as f64,
+        }
+    }
+
+    pub fn rmi(&self) -> &Rmi {
+        &self.rmi
+    }
+}
+
+impl<K: SortKey> Classifier<K> for RmiClassifier {
+    fn num_buckets(&self) -> usize {
+        self.n_buckets
+    }
+
+    #[inline(always)]
+    fn classify(&self, key: K) -> usize {
+        let b = (self.rmi.predict(key.to_f64()) * self.scale) as usize;
+        if b >= self.n_buckets {
+            self.n_buckets - 1
+        } else {
+            b
+        }
+    }
+
+    fn is_equality_bucket(&self, _b: usize) -> bool {
+        // The learned path has no equality buckets; Algorithm 5 routes
+        // duplicate-heavy inputs to the decision tree instead.
+        false
+    }
+
+    fn classify_batch(&self, keys: &[K], out: &mut [u32]) {
+        debug_assert_eq!(keys.len(), out.len());
+        // 4-way unroll: independent model evaluations pipeline well.
+        let mut kc = keys.chunks_exact(4);
+        let mut oc = out.chunks_exact_mut(4);
+        for (k4, o4) in (&mut kc).zip(&mut oc) {
+            o4[0] = Classifier::<K>::classify(self, k4[0]) as u32;
+            o4[1] = Classifier::<K>::classify(self, k4[1]) as u32;
+            o4[2] = Classifier::<K>::classify(self, k4[2]) as u32;
+            o4[3] = Classifier::<K>::classify(self, k4[3]) as u32;
+        }
+        for (k, o) in kc.remainder().iter().zip(oc.into_remainder()) {
+            *o = Classifier::<K>::classify(self, *k) as u32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmi::model::RmiConfig;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn classifier(n_buckets: usize) -> RmiClassifier {
+        let mut rng = Xoshiro256pp::new(11);
+        let mut sample: Vec<f64> = (0..8192).map(|_| rng.uniform(0.0, 1e6)).collect();
+        sample.sort_unstable_by(f64::total_cmp);
+        let rmi = Rmi::train(&sample, RmiConfig { n_leaves: 256 });
+        RmiClassifier::new(rmi, n_buckets)
+    }
+
+    #[test]
+    fn buckets_in_range_and_monotone() {
+        let c = classifier(1024);
+        let mut prev = 0usize;
+        for i in 0..2000 {
+            let x = i as f64 * 500.0;
+            let b = Classifier::<f64>::classify(&c, x);
+            assert!(b < 1024);
+            assert!(b >= prev, "bucket map must be monotone");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn balanced_on_uniform() {
+        let c = classifier(64);
+        let mut rng = Xoshiro256pp::new(12);
+        let mut counts = vec![0usize; 64];
+        for _ in 0..64_000 {
+            let b = Classifier::<f64>::classify(&c, rng.uniform(0.0, 1e6));
+            counts[b] += 1;
+        }
+        // uniform + good model: no bucket more than 3x the mean
+        let max = *counts.iter().max().unwrap();
+        assert!(max < 3 * 1000, "worst bucket {max}");
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let c = classifier(128);
+        let mut rng = Xoshiro256pp::new(13);
+        let keys: Vec<f64> = (0..517).map(|_| rng.uniform(-1e5, 2e6)).collect();
+        let mut out = vec![0u32; keys.len()];
+        c.classify_batch(&keys, &mut out);
+        for (k, o) in keys.iter().zip(&out) {
+            assert_eq!(*o as usize, Classifier::<f64>::classify(&c, *k));
+        }
+    }
+
+    #[test]
+    fn u64_keys_via_embedding() {
+        let mut rng = Xoshiro256pp::new(14);
+        let keys: Vec<u64> = (0..10_000).map(|_| rng.next_below(1 << 48)).collect();
+        let rmi = Rmi::train_from_keys(&keys, 1024, RmiConfig { n_leaves: 128 }, &mut rng);
+        let c = RmiClassifier::new(rmi, 256);
+        let b_lo = Classifier::<u64>::classify(&c, 0u64);
+        let b_hi = Classifier::<u64>::classify(&c, (1u64 << 48) - 1);
+        assert!(b_lo <= b_hi);
+        assert!(b_hi > 128, "top key should map near the top bucket");
+    }
+}

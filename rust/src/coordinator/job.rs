@@ -1,0 +1,91 @@
+//! Job types for the coordinator.
+
+use crate::coordinator::router::EngineChoice;
+use crate::SortEngine;
+
+/// Owned key buffer, matching the paper's two key domains.
+#[derive(Debug, Clone)]
+pub enum KeyBuf {
+    F64(Vec<f64>),
+    U64(Vec<u64>),
+}
+
+impl KeyBuf {
+    pub fn len(&self) -> usize {
+        match self {
+            KeyBuf::F64(v) => v.len(),
+            KeyBuf::U64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Duplicate fraction of a probe prefix (router heuristic input).
+    pub fn probe_duplicate_fraction(&self, probe: usize) -> f64 {
+        match self {
+            KeyBuf::F64(v) => probe_dup(v.iter().map(|x| x.to_bits()), probe),
+            KeyBuf::U64(v) => probe_dup(v.iter().copied(), probe),
+        }
+    }
+}
+
+fn probe_dup(keys: impl Iterator<Item = u64>, probe: usize) -> f64 {
+    let mut sample: Vec<u64> = keys.take(probe).collect();
+    if sample.len() < 2 {
+        return 0.0;
+    }
+    sample.sort_unstable();
+    let distinct = 1 + sample.windows(2).filter(|w| w[0] != w[1]).count();
+    1.0 - distinct as f64 / sample.len() as f64
+}
+
+/// A sort request.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: u64,
+    pub keys: KeyBuf,
+    pub engine: EngineChoice,
+    /// Allow the coordinator to use the parallel engines.
+    pub parallel: bool,
+}
+
+impl JobSpec {
+    pub fn auto(id: u64, keys: KeyBuf) -> JobSpec {
+        JobSpec {
+            id,
+            keys,
+            engine: EngineChoice::Auto,
+            parallel: true,
+        }
+    }
+}
+
+/// Completion record for one job.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub id: u64,
+    pub engine: SortEngine,
+    pub n: usize,
+    pub secs: f64,
+    pub keys_per_sec: f64,
+    pub verified_sorted: bool,
+    pub threads: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keybuf_len_and_dup() {
+        let b = KeyBuf::U64(vec![1, 1, 1, 2]);
+        assert_eq!(b.len(), 4);
+        assert!(!b.is_empty());
+        assert!((b.probe_duplicate_fraction(4) - 0.5).abs() < 1e-12);
+        let f = KeyBuf::F64(vec![1.0, 2.0, 3.0]);
+        assert_eq!(f.probe_duplicate_fraction(3), 0.0);
+        assert_eq!(KeyBuf::U64(vec![]).probe_duplicate_fraction(10), 0.0);
+    }
+}

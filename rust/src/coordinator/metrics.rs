@@ -1,0 +1,104 @@
+//! Per-engine aggregate metrics for the coordinator.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::job::JobReport;
+use crate::util::fmt;
+
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub jobs: usize,
+    pub keys: usize,
+    pub secs: f64,
+    pub failures: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    per_engine: BTreeMap<&'static str, EngineStats>,
+}
+
+impl MetricsRegistry {
+    pub fn record(&mut self, rep: &JobReport) {
+        let e = self
+            .per_engine
+            .entry(rep.engine.paper_name(rep.threads > 1))
+            .or_default();
+        e.jobs += 1;
+        e.keys += rep.n;
+        e.secs += rep.secs;
+        if !rep.verified_sorted {
+            e.failures += 1;
+        }
+    }
+
+    pub fn total_jobs(&self) -> usize {
+        self.per_engine.values().map(|e| e.jobs).sum()
+    }
+
+    pub fn total_keys(&self) -> usize {
+        self.per_engine.values().map(|e| e.keys).sum()
+    }
+
+    pub fn total_failures(&self) -> usize {
+        self.per_engine.values().map(|e| e.failures).sum()
+    }
+
+    pub fn engines(&self) -> impl Iterator<Item = (&&'static str, &EngineStats)> {
+        self.per_engine.iter()
+    }
+
+    /// Markdown summary table.
+    pub fn report(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .per_engine
+            .iter()
+            .map(|(name, e)| {
+                vec![
+                    name.to_string(),
+                    e.jobs.to_string(),
+                    fmt::keys(e.keys),
+                    fmt::secs(e.secs),
+                    fmt::rate(e.keys as f64 / e.secs.max(1e-12)),
+                    e.failures.to_string(),
+                ]
+            })
+            .collect();
+        fmt::markdown_table(
+            &["engine", "jobs", "keys", "time", "rate", "failures"],
+            &rows,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::SortEngine;
+
+    fn rep(engine: SortEngine, n: usize, ok: bool) -> JobReport {
+        JobReport {
+            id: 0,
+            engine,
+            n,
+            secs: 0.5,
+            keys_per_sec: n as f64 / 0.5,
+            verified_sorted: ok,
+            threads: 4,
+        }
+    }
+
+    #[test]
+    fn aggregates_per_engine() {
+        let mut m = MetricsRegistry::default();
+        m.record(&rep(SortEngine::Aips2o, 1000, true));
+        m.record(&rep(SortEngine::Aips2o, 2000, true));
+        m.record(&rep(SortEngine::Ips4o, 500, false));
+        assert_eq!(m.total_jobs(), 3);
+        assert_eq!(m.total_keys(), 3500);
+        assert_eq!(m.total_failures(), 1);
+        let report = m.report();
+        assert!(report.contains("AIPS2o"));
+        assert!(report.contains("IPS4o"));
+    }
+}

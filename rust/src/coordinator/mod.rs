@@ -1,0 +1,211 @@
+//! Sort-job coordinator (substrate S12) — the L3 service layer.
+//!
+//! The paper's contribution is the parallel sorting engine itself; this
+//! module is the thin deployment shell a database/ETL system would embed
+//! it behind: a job queue with an engine router, thread budgeting, and
+//! per-job metrics. `aipso serve` and `examples/e2e_pipeline.rs` drive it.
+//!
+//! Design: jobs are submitted to a FIFO; a dispatcher thread admits one
+//! job at a time onto the core pool (sorting is memory-bandwidth bound —
+//! co-running two large sorts thrashes, so admission is serialized; small
+//! jobs are batched through the sequential path in parallel instead).
+
+pub mod job;
+pub mod metrics;
+pub mod router;
+
+pub use job::{JobReport, JobSpec, KeyBuf};
+pub use metrics::MetricsRegistry;
+pub use router::{route, EngineChoice};
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::scheduler::effective_threads;
+use crate::{is_sorted, sort_parallel, sort_sequential};
+
+/// Jobs below this size run sequentially, several at a time.
+pub const SMALL_JOB: usize = 1 << 15;
+
+/// The coordinator service: owns a dispatcher thread; `submit` is
+/// non-blocking, `drain` collects reports.
+pub struct Coordinator {
+    tx: Option<mpsc::Sender<JobSpec>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    reports: Arc<Mutex<Vec<JobReport>>>,
+    metrics: Arc<Mutex<MetricsRegistry>>,
+}
+
+impl Coordinator {
+    pub fn new(threads: usize) -> Coordinator {
+        let threads = effective_threads(threads);
+        let (tx, rx) = mpsc::channel::<JobSpec>();
+        let reports: Arc<Mutex<Vec<JobReport>>> = Arc::default();
+        let metrics: Arc<Mutex<MetricsRegistry>> = Arc::default();
+        let reports_w = reports.clone();
+        let metrics_w = metrics.clone();
+        let handle = std::thread::spawn(move || {
+            // Dispatcher: admit small jobs in sequential batches, large
+            // jobs exclusively onto the full pool.
+            let mut small: Vec<JobSpec> = Vec::new();
+            let flush_small = |batch: &mut Vec<JobSpec>| {
+                if batch.is_empty() {
+                    return;
+                }
+                let done: Vec<JobReport> = {
+                    let out: Mutex<Vec<JobReport>> = Mutex::new(Vec::new());
+                    // run each small job sequentially, spread over threads
+                    let jobs = Mutex::new(std::mem::take(batch));
+                    std::thread::scope(|s| {
+                        for _ in 0..threads.min(4) {
+                            s.spawn(|| loop {
+                                let Some(job) = jobs.lock().unwrap().pop() else {
+                                    return;
+                                };
+                                let rep = run_job(job, 1);
+                                out.lock().unwrap().push(rep);
+                            });
+                        }
+                    });
+                    out.into_inner().unwrap()
+                };
+                for rep in done {
+                    metrics_w.lock().unwrap().record(&rep);
+                    reports_w.lock().unwrap().push(rep);
+                }
+            };
+            while let Ok(job) = rx.recv() {
+                if job.keys.len() < SMALL_JOB {
+                    small.push(job);
+                    if small.len() >= 8 {
+                        flush_small(&mut small);
+                    }
+                    continue;
+                }
+                flush_small(&mut small);
+                let rep = run_job(job, threads);
+                metrics_w.lock().unwrap().record(&rep);
+                reports_w.lock().unwrap().push(rep);
+            }
+            flush_small(&mut small);
+        });
+        Coordinator {
+            tx: Some(tx),
+            handle: Some(handle),
+            reports,
+            metrics,
+        }
+    }
+
+    /// Queue a job (non-blocking).
+    pub fn submit(&self, job: JobSpec) {
+        self.tx
+            .as_ref()
+            .expect("coordinator already drained")
+            .send(job)
+            .expect("dispatcher gone");
+    }
+
+    /// Close the queue, wait for all jobs, return reports in completion
+    /// order.
+    pub fn drain(mut self) -> (Vec<JobReport>, MetricsRegistry) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            h.join().expect("dispatcher panicked");
+        }
+        let reports = std::mem::take(&mut *self.reports.lock().unwrap());
+        let metrics = std::mem::take(&mut *self.metrics.lock().unwrap());
+        (reports, metrics)
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Execute one job: route, sort, verify, report.
+fn run_job(mut job: JobSpec, threads: usize) -> JobReport {
+    let engine = route(&job);
+    let n = job.keys.len();
+    let t0 = std::time::Instant::now();
+    let sorted = match &mut job.keys {
+        KeyBuf::F64(v) => {
+            if threads > 1 && job.parallel {
+                sort_parallel(engine, v, threads);
+            } else {
+                sort_sequential(engine, v);
+            }
+            is_sorted(v)
+        }
+        KeyBuf::U64(v) => {
+            if threads > 1 && job.parallel {
+                sort_parallel(engine, v, threads);
+            } else {
+                sort_sequential(engine, v);
+            }
+            is_sorted(v)
+        }
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    JobReport {
+        id: job.id,
+        engine,
+        n,
+        secs,
+        keys_per_sec: n as f64 / secs.max(1e-12),
+        verified_sorted: sorted,
+        threads,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+    use crate::SortEngine;
+
+    fn job(id: u64, n: usize, parallel: bool) -> JobSpec {
+        let mut rng = Xoshiro256pp::new(id);
+        JobSpec {
+            id,
+            keys: KeyBuf::U64((0..n).map(|_| rng.next_u64()).collect()),
+            engine: EngineChoice::Auto,
+            parallel,
+        }
+    }
+
+    #[test]
+    fn runs_all_jobs_and_verifies() {
+        let c = Coordinator::new(4);
+        for i in 0..12 {
+            c.submit(job(i, if i % 3 == 0 { 100_000 } else { 5_000 }, true));
+        }
+        let (reports, metrics) = c.drain();
+        assert_eq!(reports.len(), 12);
+        assert!(reports.iter().all(|r| r.verified_sorted));
+        assert_eq!(metrics.total_jobs(), 12);
+        assert!(metrics.total_keys() > 0);
+    }
+
+    #[test]
+    fn explicit_engine_respected() {
+        let c = Coordinator::new(2);
+        let mut j = job(1, 50_000, false);
+        j.engine = EngineChoice::Fixed(SortEngine::Ips2ra);
+        c.submit(j);
+        let (reports, _) = c.drain();
+        assert_eq!(reports[0].engine, SortEngine::Ips2ra);
+    }
+
+    #[test]
+    fn empty_coordinator_drains() {
+        let c = Coordinator::new(2);
+        let (reports, _) = c.drain();
+        assert!(reports.is_empty());
+    }
+}

@@ -1,0 +1,79 @@
+//! Engine routing policy.
+//!
+//! Mirrors the paper's own guidance: AIPS²o for large inputs ("a practical
+//! algorithm" — Section 5.2), IPS⁴o when a probe shows heavy duplication
+//! (its equality buckets win RootDups-like inputs), pdqsort for small jobs
+//! where model/sampling overhead cannot amortize.
+
+use crate::coordinator::job::JobSpec;
+use crate::SortEngine;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineChoice {
+    /// Let the router pick from the job's shape.
+    Auto,
+    Fixed(SortEngine),
+}
+
+/// Inputs below this always go to pdqsort.
+pub const SMALL_INPUT: usize = 1 << 14;
+/// Probe size for the duplicate heuristic.
+pub const PROBE: usize = 1024;
+/// Probe duplicate fraction above which IPS⁴o is preferred.
+pub const DUP_THRESHOLD: f64 = 0.30;
+
+pub fn route(job: &JobSpec) -> SortEngine {
+    match job.engine {
+        EngineChoice::Fixed(e) => e,
+        EngineChoice::Auto => {
+            let n = job.keys.len();
+            if n < SMALL_INPUT {
+                SortEngine::StdSort
+            } else if job.keys.probe_duplicate_fraction(PROBE) > DUP_THRESHOLD {
+                SortEngine::Ips4o
+            } else {
+                SortEngine::Aips2o
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::KeyBuf;
+
+    fn spec(keys: KeyBuf) -> JobSpec {
+        JobSpec {
+            id: 0,
+            keys,
+            engine: EngineChoice::Auto,
+            parallel: true,
+        }
+    }
+
+    #[test]
+    fn small_jobs_to_pdqsort() {
+        let j = spec(KeyBuf::U64((0..100).collect()));
+        assert_eq!(route(&j), SortEngine::StdSort);
+    }
+
+    #[test]
+    fn large_smooth_jobs_to_aips2o() {
+        let j = spec(KeyBuf::U64((0..100_000).collect()));
+        assert_eq!(route(&j), SortEngine::Aips2o);
+    }
+
+    #[test]
+    fn duplicate_heavy_jobs_to_ips4o() {
+        let j = spec(KeyBuf::U64((0..100_000).map(|i| i % 5).collect()));
+        assert_eq!(route(&j), SortEngine::Ips4o);
+    }
+
+    #[test]
+    fn fixed_overrides() {
+        let mut j = spec(KeyBuf::U64((0..100).collect()));
+        j.engine = EngineChoice::Fixed(SortEngine::LearnedSort);
+        assert_eq!(route(&j), SortEngine::LearnedSort);
+    }
+}

@@ -1,0 +1,163 @@
+//! Dataset suite (substrate S2) — the paper's 14 benchmark inputs.
+//!
+//! Synthetic datasets (64-bit doubles, Section 5 "Synthetic Datasets") are
+//! generated exactly as specified. Real-world datasets (64-bit unsigned
+//! integers, from SOSD / Marcus et al.) are not redistributable, so
+//! [`realworld`] builds *statistical simulators* that reproduce the property
+//! each dataset exercises in the paper's evaluation — CDF smoothness
+//! (RMI fit quality), duplicate density (equality buckets) and radix-prefix
+//! skew (IPS²Ra balance). See DESIGN.md §6 for the substitution table.
+
+pub mod realworld;
+pub mod synthetic;
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Key type of a dataset, mirroring the paper (synthetic = f64 doubles,
+/// real-world = u64 ids/timestamps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeyType {
+    F64,
+    U64,
+}
+
+/// Which paper figure a dataset appears in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FigureGroup {
+    /// Figures 1 & 4: Uniform, Normal, Log-Normal.
+    Synthetic1,
+    /// Figures 2 & 5: MixGauss, Exponential, Chi-Squared, RootDups,
+    /// TwoDups, Zipf.
+    Synthetic2,
+    /// Figures 3 & 6: OSM, Wiki, FB, Books, NYC.
+    RealWorld,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub paper_name: &'static str,
+    pub key_type: KeyType,
+    pub group: FigureGroup,
+    /// Relative input size vs the synthetic N (paper: real-world sets are
+    /// 2x except NYC).
+    pub size_factor: f64,
+    pub description: &'static str,
+}
+
+/// All 14 datasets, in the paper's presentation order.
+pub const ALL: [DatasetSpec; 14] = [
+    DatasetSpec { name: "uniform", paper_name: "Uniform", key_type: KeyType::F64, group: FigureGroup::Synthetic1, size_factor: 1.0, description: "U(0, N)" },
+    DatasetSpec { name: "normal", paper_name: "Normal", key_type: KeyType::F64, group: FigureGroup::Synthetic1, size_factor: 1.0, description: "N(0, 1)" },
+    DatasetSpec { name: "lognormal", paper_name: "Log-Normal", key_type: KeyType::F64, group: FigureGroup::Synthetic1, size_factor: 1.0, description: "LogN(0, 0.5)" },
+    DatasetSpec { name: "mix_gauss", paper_name: "Mix Gauss", key_type: KeyType::F64, group: FigureGroup::Synthetic2, size_factor: 1.0, description: "random additive mixture of five Gaussians" },
+    DatasetSpec { name: "exponential", paper_name: "Exponential", key_type: KeyType::F64, group: FigureGroup::Synthetic2, size_factor: 1.0, description: "Exp(lambda=2)" },
+    DatasetSpec { name: "chi_squared", paper_name: "Chi-Squared", key_type: KeyType::F64, group: FigureGroup::Synthetic2, size_factor: 1.0, description: "chi2(k=4)" },
+    DatasetSpec { name: "root_dups", paper_name: "Root Dups", key_type: KeyType::F64, group: FigureGroup::Synthetic2, size_factor: 1.0, description: "A[i] = i mod sqrt(N) (BlockQuicksort)" },
+    DatasetSpec { name: "two_dups", paper_name: "Two Dups", key_type: KeyType::F64, group: FigureGroup::Synthetic2, size_factor: 1.0, description: "A[i] = i^2 + N/2 mod N (BlockQuicksort)" },
+    DatasetSpec { name: "zipf", paper_name: "Zipf", key_type: KeyType::F64, group: FigureGroup::Synthetic2, size_factor: 1.0, description: "Zipf(s=0.75)" },
+    DatasetSpec { name: "osm_cellids", paper_name: "OSM/Cell_IDs", key_type: KeyType::U64, group: FigureGroup::RealWorld, size_factor: 2.0, description: "simulated OpenStreetMap cell ids (clustered Morton codes)" },
+    DatasetSpec { name: "wiki_edit", paper_name: "Wiki/Edit", key_type: KeyType::U64, group: FigureGroup::RealWorld, size_factor: 2.0, description: "simulated Wikipedia edit timestamps (bursty, duplicate-heavy)" },
+    DatasetSpec { name: "fb_ids", paper_name: "FB/IDs", key_type: KeyType::U64, group: FigureGroup::RealWorld, size_factor: 2.0, description: "simulated Facebook user ids (heavy-tailed, RMI-hard)" },
+    DatasetSpec { name: "books_sales", paper_name: "Books/Sales", key_type: KeyType::U64, group: FigureGroup::RealWorld, size_factor: 2.0, description: "simulated Amazon book popularity (Zipf plateaus)" },
+    DatasetSpec { name: "nyc_pickup", paper_name: "NYC/Pickup", key_type: KeyType::U64, group: FigureGroup::RealWorld, size_factor: 1.0, description: "simulated taxi pickup timestamps (seasonal)" },
+];
+
+pub fn spec(name: &str) -> Option<&'static DatasetSpec> {
+    ALL.iter().find(|d| d.name == name || d.paper_name == name)
+}
+
+pub fn f64_names() -> Vec<&'static str> {
+    ALL.iter()
+        .filter(|d| d.key_type == KeyType::F64)
+        .map(|d| d.name)
+        .collect()
+}
+
+pub fn u64_names() -> Vec<&'static str> {
+    ALL.iter()
+        .filter(|d| d.key_type == KeyType::U64)
+        .map(|d| d.name)
+        .collect()
+}
+
+/// Generate a double-keyed (synthetic) dataset by name.
+pub fn generate_f64(name: &str, n: usize, seed: u64) -> Result<Vec<f64>, String> {
+    let mut rng = Xoshiro256pp::new(seed);
+    Ok(match name {
+        "uniform" => synthetic::uniform(n, &mut rng),
+        "normal" => synthetic::normal(n, &mut rng),
+        "lognormal" => synthetic::lognormal(n, &mut rng),
+        "mix_gauss" => synthetic::mix_gauss(n, &mut rng),
+        "exponential" => synthetic::exponential(n, &mut rng),
+        "chi_squared" => synthetic::chi_squared(n, &mut rng),
+        "root_dups" => synthetic::root_dups(n),
+        "two_dups" => synthetic::two_dups(n),
+        "zipf" => synthetic::zipf(n, &mut rng),
+        _ => return Err(format!("unknown f64 dataset '{name}' (u64 dataset? use generate_u64)")),
+    })
+}
+
+/// Generate an integer-keyed (simulated real-world) dataset by name.
+pub fn generate_u64(name: &str, n: usize, seed: u64) -> Result<Vec<u64>, String> {
+    let mut rng = Xoshiro256pp::new(seed);
+    Ok(match name {
+        "osm_cellids" => realworld::osm_cellids(n, &mut rng),
+        "wiki_edit" => realworld::wiki_edit(n, &mut rng),
+        "fb_ids" => realworld::fb_ids(n, &mut rng),
+        "books_sales" => realworld::books_sales(n, &mut rng),
+        "nyc_pickup" => realworld::nyc_pickup(n, &mut rng),
+        _ => return Err(format!("unknown u64 dataset '{name}' (f64 dataset? use generate_f64)")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_14_datasets() {
+        assert_eq!(ALL.len(), 14);
+        assert_eq!(f64_names().len(), 9);
+        assert_eq!(u64_names().len(), 5);
+    }
+
+    #[test]
+    fn lookup_by_both_names() {
+        assert!(spec("uniform").is_some());
+        assert!(spec("OSM/Cell_IDs").is_some());
+        assert!(spec("bogus").is_none());
+    }
+
+    #[test]
+    fn all_f64_generate() {
+        for name in f64_names() {
+            let v = generate_f64(name, 1000, 1).unwrap();
+            assert_eq!(v.len(), 1000, "{name}");
+            assert!(v.iter().all(|x| x.is_finite()), "{name} produced non-finite");
+        }
+    }
+
+    #[test]
+    fn all_u64_generate() {
+        for name in u64_names() {
+            let v = generate_u64(name, 1000, 1).unwrap();
+            assert_eq!(v.len(), 1000, "{name}");
+        }
+    }
+
+    #[test]
+    fn wrong_key_type_errors() {
+        assert!(generate_f64("wiki_edit", 10, 1).is_err());
+        assert!(generate_u64("uniform", 10, 1).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate_f64("normal", 500, 7).unwrap();
+        let b = generate_f64("normal", 500, 7).unwrap();
+        let c = generate_f64("normal", 500, 8).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,145 @@
+//! Synthetic datasets — generated exactly as the paper specifies
+//! (Section 5, "Synthetic Datasets"; RootDups/TwoDups from BlockQuicksort,
+//! Edelkamp & Weiß 2016).
+
+use crate::util::rng::{Xoshiro256pp, Zipf};
+
+/// Uniform distribution with a = 0 and b = N.
+pub fn uniform(n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    (0..n).map(|_| rng.uniform(0.0, n as f64)).collect()
+}
+
+/// Normal distribution with mu = 0 and sigma = 1.
+pub fn normal(n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// Log-normal distribution with mu = 0 and sigma = 0.5.
+pub fn lognormal(n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    (0..n).map(|_| rng.lognormal(0.0, 0.5)).collect()
+}
+
+/// Random additive distribution of five Gaussian distributions: component
+/// means/sds drawn once per dataset instance, then equal-weight mixture.
+pub fn mix_gauss(n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    let scale = (n as f64).max(1e4);
+    let comps: Vec<(f64, f64)> = (0..5)
+        .map(|_| (rng.uniform(0.0, scale), rng.uniform(scale / 100.0, scale / 10.0)))
+        .collect();
+    (0..n)
+        .map(|_| {
+            let (mu, sd) = comps[rng.next_below(5) as usize];
+            rng.normal_with(mu, sd)
+        })
+        .collect()
+}
+
+/// Exponential distribution with lambda = 2.
+pub fn exponential(n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    (0..n).map(|_| rng.exponential(2.0)).collect()
+}
+
+/// Chi-squared distribution with k = 4.
+pub fn chi_squared(n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    (0..n).map(|_| rng.chi_squared(4)).collect()
+}
+
+/// RootDups: A[i] = i mod sqrt(N) — sqrt(N) distinct values, each repeated
+/// ~sqrt(N) times in a periodic ramp (the equality-bucket stress test).
+pub fn root_dups(n: usize) -> Vec<f64> {
+    let m = (n as f64).sqrt().floor().max(1.0) as usize;
+    (0..n).map(|i| (i % m) as f64).collect()
+}
+
+/// TwoDups: A[i] = i^2 + N/2 mod N.
+pub fn two_dups(n: usize) -> Vec<f64> {
+    let nn = n.max(1) as u128;
+    (0..n as u128)
+        .map(|i| ((i * i + nn / 2) % nn) as f64)
+        .collect()
+}
+
+/// Zipfian distribution with s = 0.75 over {1..N}.
+pub fn zipf(n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let z = Zipf::new(n as u64, 0.75);
+    (0..n).map(|_| z.sample(rng) as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    fn rng() -> Xoshiro256pp {
+        Xoshiro256pp::new(0xDA7A)
+    }
+
+    #[test]
+    fn uniform_bounds_and_spread() {
+        let v = uniform(50_000, &mut rng());
+        assert!(v.iter().all(|&x| (0.0..50_000.0).contains(&x)));
+        let m = stats::mean(&v);
+        assert!((m - 25_000.0).abs() < 500.0, "mean={m}");
+    }
+
+    #[test]
+    fn normal_standardized() {
+        let v = normal(100_000, &mut rng());
+        assert!(stats::mean(&v).abs() < 0.02);
+        assert!((stats::stddev(&v) - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn lognormal_positive_with_median_one() {
+        let v = lognormal(100_000, &mut rng());
+        assert!(v.iter().all(|&x| x > 0.0));
+        // median of LogN(0, s) is e^0 = 1
+        assert!((stats::median(&v) - 1.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn mix_gauss_is_multimodal_spread() {
+        let v = mix_gauss(50_000, &mut rng());
+        // spread far wider than any single component's sd
+        assert!(stats::stddev(&v) > 1_000.0);
+    }
+
+    #[test]
+    fn root_dups_value_universe() {
+        let n = 10_000;
+        let v = root_dups(n);
+        let m = (n as f64).sqrt() as usize;
+        assert!(v.iter().all(|&x| (x as usize) < m));
+        // every value appears ~ sqrt(N) times
+        let count0 = v.iter().filter(|&&x| x == 0.0).count();
+        assert!(count0 >= n / m);
+    }
+
+    #[test]
+    fn two_dups_formula() {
+        let v = two_dups(1000);
+        assert_eq!(v[0], 500.0); // 0 + 500 mod 1000
+        assert_eq!(v[1], 501.0);
+        assert_eq!(v[30], (30u128 * 30 + 500).rem_euclid(1000) as f64);
+        assert!(v.iter().all(|&x| x < 1000.0));
+    }
+
+    #[test]
+    fn zipf_skew() {
+        let v = zipf(50_000, &mut rng());
+        let ones = v.iter().filter(|&&x| x == 1.0).count();
+        // rank-1 should be the clear mode under s=0.75
+        assert!(ones > 50, "ones={ones}");
+        assert!(v.iter().all(|&x| x >= 1.0 && x <= 50_000.0));
+    }
+
+    #[test]
+    fn empty_inputs_ok() {
+        assert!(root_dups(0).is_empty());
+        assert!(two_dups(0).is_empty());
+        assert!(zipf(0, &mut rng()).is_empty());
+    }
+}

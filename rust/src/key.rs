@@ -1,0 +1,233 @@
+//! Key abstraction shared by every sorting engine.
+//!
+//! The paper sorts 64-bit doubles (synthetic datasets) and 64-bit unsigned
+//! integers (real-world datasets). All engines here are generic over
+//! [`SortKey`], which provides:
+//!
+//! * a **total order** via an order-preserving mapping to `u64`
+//!   ([`SortKey::to_bits_ordered`]) — also the digit source for the radix
+//!   engines (this is the "key extractor that maps floats to integers" the
+//!   paper passes to IPS²Ra);
+//! * a **model embedding** ([`SortKey::to_f64`]) used by the learned
+//!   engines to feed the RMI.
+
+use std::fmt::Debug;
+
+/// A sortable key: `u64`, `u32`, `f64` or `f32`.
+pub trait SortKey: Copy + Send + Sync + Debug + 'static {
+    /// Order-preserving map into `u64`: `a < b  ⇔  a.to_bits_ordered() <
+    /// b.to_bits_ordered()` (for floats, under IEEE total order).
+    fn to_bits_ordered(self) -> u64;
+
+    /// Embedding used as RMI model input.
+    fn to_f64(self) -> f64;
+
+    /// Inverse of [`SortKey::to_bits_ordered`] (used by generators/tests).
+    fn from_bits_ordered(bits: u64) -> Self;
+
+    /// Number of significant bytes in [`SortKey::to_bits_ordered`]
+    /// (8 for 64-bit keys, 4 for 32-bit keys) — the radix digit count.
+    const RADIX_BYTES: usize;
+
+    #[inline(always)]
+    fn key_lt(self, other: Self) -> bool {
+        self.to_bits_ordered() < other.to_bits_ordered()
+    }
+
+    #[inline(always)]
+    fn key_le(self, other: Self) -> bool {
+        self.to_bits_ordered() <= other.to_bits_ordered()
+    }
+
+    #[inline(always)]
+    fn key_eq(self, other: Self) -> bool {
+        self.to_bits_ordered() == other.to_bits_ordered()
+    }
+
+    #[inline(always)]
+    fn key_max(self, other: Self) -> Self {
+        if self.key_lt(other) {
+            other
+        } else {
+            self
+        }
+    }
+
+    #[inline(always)]
+    fn key_min(self, other: Self) -> Self {
+        if other.key_lt(self) {
+            other
+        } else {
+            self
+        }
+    }
+
+    /// Radix digit: byte `d` (0 = most significant) of the ordered bits,
+    /// counting within the key's significant width.
+    #[inline(always)]
+    fn radix_digit(self, d: usize) -> usize {
+        debug_assert!(d < Self::RADIX_BYTES);
+        let shift = 8 * (Self::RADIX_BYTES - 1 - d);
+        ((self.to_bits_ordered() >> shift) & 0xFF) as usize
+    }
+}
+
+impl SortKey for u64 {
+    const RADIX_BYTES: usize = 8;
+
+    #[inline(always)]
+    fn to_bits_ordered(self) -> u64 {
+        self
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline(always)]
+    fn from_bits_ordered(bits: u64) -> Self {
+        bits
+    }
+}
+
+impl SortKey for u32 {
+    const RADIX_BYTES: usize = 4;
+
+    #[inline(always)]
+    fn to_bits_ordered(self) -> u64 {
+        self as u64
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline(always)]
+    fn from_bits_ordered(bits: u64) -> Self {
+        bits as u32
+    }
+}
+
+impl SortKey for f64 {
+    const RADIX_BYTES: usize = 8;
+
+    /// Standard IEEE-754 total-order flip: negative floats reverse, the
+    /// sign bit becomes the top of the unsigned range.
+    #[inline(always)]
+    fn to_bits_ordered(self) -> u64 {
+        let b = self.to_bits();
+        if b >> 63 == 1 {
+            !b
+        } else {
+            b | 0x8000_0000_0000_0000
+        }
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    #[inline(always)]
+    fn from_bits_ordered(bits: u64) -> Self {
+        let b = if bits >> 63 == 1 {
+            bits & 0x7FFF_FFFF_FFFF_FFFF
+        } else {
+            !bits
+        };
+        f64::from_bits(b)
+    }
+}
+
+impl SortKey for f32 {
+    const RADIX_BYTES: usize = 4;
+
+    #[inline(always)]
+    fn to_bits_ordered(self) -> u64 {
+        let b = self.to_bits();
+        let m = if b >> 31 == 1 { !b } else { b | 0x8000_0000 };
+        m as u64
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline(always)]
+    fn from_bits_ordered(bits: u64) -> Self {
+        let bits = bits as u32;
+        let b = if bits >> 31 == 1 {
+            bits & 0x7FFF_FFFF
+        } else {
+            !bits
+        };
+        f32::from_bits(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_order_preserved() {
+        let xs = [
+            f64::NEG_INFINITY,
+            -1e300,
+            -2.5,
+            -0.0,
+            0.0,
+            1e-300,
+            2.5,
+            1e300,
+            f64::INFINITY,
+        ];
+        for w in xs.windows(2) {
+            assert!(
+                w[0].to_bits_ordered() <= w[1].to_bits_ordered(),
+                "{:?} !<= {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        // -0.0 and 0.0 are distinct bit patterns but adjacent in order
+        assert!((-0.0f64).to_bits_ordered() < 0.0f64.to_bits_ordered());
+    }
+
+    #[test]
+    fn f64_roundtrip() {
+        for x in [-123.456f64, 0.0, 7.25, 1e-12, -1e100] {
+            assert_eq!(f64::from_bits_ordered(x.to_bits_ordered()), x);
+        }
+    }
+
+    #[test]
+    fn u64_digits() {
+        let k = 0x0102_0304_0506_0708u64;
+        assert_eq!(k.radix_digit(0), 0x01);
+        assert_eq!(k.radix_digit(7), 0x08);
+    }
+
+    #[test]
+    fn f32_order_and_roundtrip() {
+        let xs = [-1e30f32, -1.0, 0.0, 1.0, 1e30];
+        for w in xs.windows(2) {
+            assert!(w[0].to_bits_ordered() < w[1].to_bits_ordered());
+        }
+        for x in xs {
+            assert_eq!(f32::from_bits_ordered(x.to_bits_ordered()), x);
+        }
+    }
+
+    #[test]
+    fn cmp_helpers() {
+        assert!(1u64.key_lt(2));
+        assert!(1u64.key_le(1));
+        assert!(2.5f64.key_eq(2.5));
+        assert_eq!(3u64.key_max(5), 5);
+        assert_eq!(3u64.key_min(5), 3);
+    }
+}

@@ -1,0 +1,122 @@
+//! Paper Algorithm 1 + 2: Quicksort whose pivot is selected by a CDF
+//! model — "the largest element from A that has predicted CDF less than
+//! or equal to the true median", then a classic Lomuto partition.
+
+use crate::key::SortKey;
+use crate::learned_qs::{train_cdf_model, BASECASE_SIZE};
+use crate::rmi::model::Rmi;
+use crate::sample_sort::base_case::{heapsort, insertion_sort};
+use crate::util::rng::Xoshiro256pp;
+
+pub fn sort<K: SortKey>(data: &mut [K]) {
+    let mut rng = Xoshiro256pp::new(0x1EA2_1 ^ data.len() as u64);
+    let depth = 2 * (usize::BITS - data.len().leading_zeros()) as usize + 8;
+    quicksort(data, depth, &mut rng);
+}
+
+fn quicksort<K: SortKey>(data: &mut [K], depth: usize, rng: &mut Xoshiro256pp) {
+    // Algorithm 1
+    if data.len() <= BASECASE_SIZE {
+        insertion_sort(data);
+        return;
+    }
+    if depth == 0 {
+        // IntroSort guard — the paper notes the Θ(N²) worst case persists
+        heapsort(data);
+        return;
+    }
+    let q = partition_with_learned_pivot(data, rng);
+    let (lo, hi) = data.split_at_mut(q);
+    quicksort(lo, depth - 1, rng);
+    quicksort(&mut hi[1..], depth - 1, rng);
+}
+
+/// Paper Algorithm 2. Returns the final pivot index.
+pub fn partition_with_learned_pivot<K: SortKey>(data: &mut [K], rng: &mut Xoshiro256pp) -> usize {
+    let r = data.len() - 1;
+    let model: Rmi = train_cdf_model(data, rng);
+    // Select the largest element with predicted CDF <= 0.5 (the median
+    // according to the model).
+    let mut t: Option<usize> = None;
+    for w in 0..data.len() {
+        if model.predict(data[w].to_f64()) <= 0.5 {
+            t = Some(match t {
+                None => w,
+                Some(t0) => {
+                    if data[t0].key_lt(data[w]) {
+                        w
+                    } else {
+                        t0
+                    }
+                }
+            });
+        }
+    }
+    // Fallback: a model that puts every key above the median gives no
+    // pivot; pick a random element (the paper's "otherwise we would fall
+    // back to a random pick").
+    let t = t.unwrap_or_else(|| rng.next_below(data.len() as u64) as usize);
+    data.swap(t, r);
+    // Classic Lomuto partition around data[r].
+    let pivot = data[r].to_bits_ordered();
+    let mut i = 0usize;
+    for j in 0..r {
+        if data[j].to_bits_ordered() <= pivot {
+            data.swap(i, j);
+            i += 1;
+        }
+    }
+    data.swap(i, r);
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::is_sorted;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn sorts_random_inputs() {
+        for n in [0usize, 1, 64, 65, 1000, 50_000] {
+            let mut rng = Xoshiro256pp::new(n as u64);
+            let mut v: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1e6)).collect();
+            sort(&mut v);
+            assert!(is_sorted(&v), "n={n}");
+        }
+    }
+
+    #[test]
+    fn sorts_adversaries() {
+        let n = 20_000;
+        let mut v: Vec<u64> = (0..n).collect();
+        sort(&mut v);
+        assert!(is_sorted(&v));
+        let mut v: Vec<u64> = (0..n).rev().collect();
+        sort(&mut v);
+        assert!(is_sorted(&v));
+        let mut v = vec![7u64; n as usize];
+        sort(&mut v);
+        assert!(is_sorted(&v));
+    }
+
+    #[test]
+    fn partition_splits_correctly() {
+        let mut rng = Xoshiro256pp::new(42);
+        let mut v: Vec<f64> = (0..5000).map(|_| rng.normal()).collect();
+        let q = partition_with_learned_pivot(&mut v, &mut rng);
+        let p = v[q];
+        assert!(v[..q].iter().all(|x| x.key_le(p)));
+        assert!(v[q + 1..].iter().all(|x| !x.key_lt(p)));
+    }
+
+    #[test]
+    fn learned_pivot_near_median_on_uniform() {
+        // The paper's claim: the learned pivot approximates the median.
+        let mut rng = Xoshiro256pp::new(43);
+        let mut v: Vec<f64> = (0..50_000).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let q = partition_with_learned_pivot(&mut v, &mut rng);
+        let eta = (q as f64 / v.len() as f64 - 0.5).abs();
+        assert!(eta < 0.1, "learned pivot far from median: eta = {eta}");
+    }
+}

@@ -1,0 +1,119 @@
+//! Paper Algorithm 3: Learned Quicksort — LearnedSort with B = 2 buckets.
+//!
+//! The partition never computes a pivot: elements with F(A[i]) <= 0.5 go
+//! left, the rest go right. Section 3.2's insight is that this is the
+//! *same* partition as Quicksort with Learned Pivots, minus the
+//! comparisons — "a Quicksort variant that circumvents the bounds on the
+//! theoretical number of comparisons by embracing the numerical properties
+//! of the CDF".
+
+use crate::key::SortKey;
+use crate::learned_qs::{train_cdf_model, BASECASE_SIZE};
+use crate::sample_sort::base_case::{heapsort, insertion_sort};
+use crate::util::rng::Xoshiro256pp;
+
+pub fn sort<K: SortKey>(data: &mut [K]) {
+    let mut rng = Xoshiro256pp::new(0x1EA2_3 ^ data.len() as u64);
+    let depth = 2 * (usize::BITS - data.len().leading_zeros()) as usize + 8;
+    learned_quicksort(data, depth, &mut rng);
+}
+
+fn learned_quicksort<K: SortKey>(data: &mut [K], depth: usize, rng: &mut Xoshiro256pp) {
+    if data.len() <= BASECASE_SIZE {
+        insertion_sort(data);
+        return;
+    }
+    if depth == 0 {
+        heapsort(data);
+        return;
+    }
+    let model = train_cdf_model(data, rng);
+    // Two-pointer partition on the model output (Algorithm 3's loop).
+    let mut i = 0usize;
+    let mut j = data.len() - 1;
+    while i < j {
+        if model.predict(data[i].to_f64()) <= 0.5 {
+            i += 1;
+        } else {
+            data.swap(i, j);
+            j -= 1;
+        }
+    }
+    // include data[i] on the left when it also classifies left
+    let split = if model.predict(data[i].to_f64()) <= 0.5 {
+        i + 1
+    } else {
+        i
+    };
+    // Degenerate model (everything on one side): fall back to a random
+    // median-of-3 step so progress is guaranteed.
+    if split == 0 || split == data.len() {
+        let q = fallback_partition(data, rng);
+        let (lo, hi) = data.split_at_mut(q);
+        learned_quicksort(lo, depth - 1, rng);
+        learned_quicksort(&mut hi[1..], depth - 1, rng);
+        return;
+    }
+    let (lo, hi) = data.split_at_mut(split);
+    learned_quicksort(lo, depth - 1, rng);
+    learned_quicksort(hi, depth - 1, rng);
+}
+
+fn fallback_partition<K: SortKey>(data: &mut [K], rng: &mut Xoshiro256pp) -> usize {
+    let n = data.len();
+    let r = n - 1;
+    let t = rng.next_below(n as u64) as usize;
+    data.swap(t, r);
+    let pivot = data[r].to_bits_ordered();
+    let mut i = 0usize;
+    for j in 0..r {
+        if data[j].to_bits_ordered() <= pivot {
+            data.swap(i, j);
+            i += 1;
+        }
+    }
+    data.swap(i, r);
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::is_sorted;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn sorts_random_inputs() {
+        for n in [0usize, 1, 64, 100, 10_000, 100_000] {
+            let mut rng = Xoshiro256pp::new(n as u64 + 17);
+            let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            sort(&mut v);
+            assert!(is_sorted(&v), "n={n}");
+        }
+    }
+
+    #[test]
+    fn sorts_duplicates_and_patterns() {
+        let n = 30_000;
+        let mut v = vec![1.0f64; n];
+        sort(&mut v);
+        assert!(is_sorted(&v));
+        let mut v: Vec<u64> = (0..n as u64).map(|i| i % 10).collect();
+        sort(&mut v);
+        assert!(is_sorted(&v));
+        let mut v: Vec<u64> = (0..n as u64).rev().collect();
+        sort(&mut v);
+        assert!(is_sorted(&v));
+    }
+
+    #[test]
+    fn partition_is_balanced_on_uniform() {
+        // Section 3.2: the implicit pivot should land near the median.
+        let mut rng = Xoshiro256pp::new(3);
+        let data: Vec<f64> = (0..50_000).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let model = crate::learned_qs::train_cdf_model(&data, &mut rng);
+        let left = data.iter().filter(|x| model.predict(x.to_f64()) <= 0.5).count();
+        let frac = left as f64 / data.len() as f64;
+        assert!((frac - 0.5).abs() < 0.1, "split fraction {frac}");
+    }
+}

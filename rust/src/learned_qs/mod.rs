@@ -1,0 +1,33 @@
+//! The analysis algorithms of the paper's Section 3 (engines E6, E7):
+//! Quicksort with Learned Pivots (Algorithms 1+2) and Learned Quicksort
+//! (Algorithm 3, LearnedSort with B = 2).
+//!
+//! These exist to validate the paper's *analysis*, not to win benchmarks:
+//! Section 3.1 concludes "Quicksort with Learned Pivots is not efficient
+//! to outperform IntroSort or pdqsort. However, it is conceptually useful"
+//! — the complexity tests in `rust/tests/` verify exactly the claims made
+//! (O(N log N) behaviour, Learned Quicksort ≡ learned-pivot partition).
+
+pub mod learned_pivot;
+pub mod learned_quicksort;
+
+use crate::key::SortKey;
+use crate::rmi::model::{Rmi, RmiConfig};
+use crate::util::rng::Xoshiro256pp;
+
+/// Shared base-case size (the paper's BASECASE_SIZE).
+pub const BASECASE_SIZE: usize = 64;
+
+/// Shared TrainCDFModel: sample, HeapSort the sample (the paper uses
+/// HeapSort explicitly — "any algorithm with the same complexity would
+/// work"), fit a small RMI.
+pub(crate) fn train_cdf_model<K: SortKey>(data: &[K], rng: &mut Xoshiro256pp) -> Rmi {
+    let n = data.len();
+    let ssz = (n / 8).clamp(16, 512).min(n);
+    let mut sample: Vec<f64> = (0..ssz)
+        .map(|_| data[rng.next_below(n as u64) as usize].to_f64())
+        .collect();
+    // the paper's Algorithm 2 sorts the sample with HeapSort
+    crate::sample_sort::base_case::heapsort(&mut sample);
+    Rmi::train(&sample, RmiConfig { n_leaves: 16 })
+}

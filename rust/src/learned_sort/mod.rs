@@ -1,0 +1,284 @@
+//! LearnedSort 2.0 (engine E3) — Kristo, Vaidya & Kraska, "Defeating
+//! duplicates: A re-design of the LearnedSort algorithm" (arXiv
+//! 2107.03290), as analyzed by the paper's Section 2.2.
+//!
+//! Four routines, matching the paper's description:
+//!
+//! 1. **Train the model** once: RMI on a ~1% random sample (the paper's
+//!    key deviation from SampleSort — sample once, in bulk).
+//! 2. **Two rounds of partitioning** with per-bucket buffers and a
+//!    defragmentation pass — our shared block-partition framework *is*
+//!    that routine (the paper, Section 2.4: "the blocking strategy adopted
+//!    by IPS⁴o shares many ideas with those adopted by LearnedSort").
+//!    Round 2 re-uses the same global model, rescaled to the bucket's CDF
+//!    range — LearnedSort never retrains ("samples data only once").
+//! 3. **Homogeneity check** per bucket: all-equal buckets are already
+//!    sorted and skipped (the duplicate fix of LearnedSort 2.0).
+//! 4. **Model-based Counting Sort** in the sub-buckets, then an
+//!    **Insertion Sort** correction pass.
+//!
+//! Bucket counts scale with input size (`B = clamp(n/5000, 2, 1000)`) so
+//! small benchmark inputs keep the paper's ~1000-key base-case granularity
+//! (the paper's fixed B=1000 assumes N ≈ 10⁸ — Section 3.3 discusses
+//! exactly this trade-off).
+
+pub mod counting_sort;
+
+use crate::classifier::Classifier;
+use crate::key::SortKey;
+use crate::rmi::model::{sample_f64, Rmi, RmiConfig};
+use crate::sample_sort::base_case::small_sort;
+use crate::sample_sort::partition::partition;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::timer::{phase_scope, Phase};
+
+use counting_sort::model_counting_sort;
+
+#[derive(Debug, Clone, Copy)]
+pub struct LearnedSortConfig {
+    /// Sampling rate for model training (paper: 1%).
+    pub sample_frac: f64,
+    pub min_sample: usize,
+    pub max_sample: usize,
+    /// Second-level model count (paper: B = 1000).
+    pub leaves: usize,
+    /// Max fan-out per partitioning round (paper: 1000).
+    pub max_fanout: usize,
+    /// Target keys per round-1 bucket.
+    pub bucket_target: usize,
+    /// Below this, sort directly with the base case.
+    pub base_case: usize,
+    /// Sub-buckets at or below this size go to model counting sort.
+    pub counting_threshold: usize,
+    /// Keys per buffer block in the partition rounds.
+    pub block: usize,
+}
+
+impl Default for LearnedSortConfig {
+    fn default() -> Self {
+        LearnedSortConfig {
+            sample_frac: 0.01,
+            min_sample: 256,
+            max_sample: 1 << 16,
+            leaves: 1000,
+            max_fanout: 1000,
+            // ~2000-key round-1 buckets: inputs up to ~2M keys reach the
+            // counting-sort base in ONE partitioning round (2 model evals
+            // per key instead of 3) — at the paper's N=1e8 this still
+            // resolves to the paper's two rounds (perf log, §Perf)
+            bucket_target: 2000,
+            base_case: 2048,
+            counting_threshold: 2048,
+            block: 128,
+        }
+    }
+}
+
+/// Rescaled view of the global model over one bucket's CDF range —
+/// round 2 classifies with `floor((F(x) - lo) / width * nb)`.
+struct SubRangeRmi<'a> {
+    rmi: &'a Rmi,
+    lo: f64,
+    inv_width: f64,
+    nb: usize,
+}
+
+impl<'a, K: SortKey> Classifier<K> for SubRangeRmi<'a> {
+    fn num_buckets(&self) -> usize {
+        self.nb
+    }
+
+    #[inline(always)]
+    fn classify(&self, key: K) -> usize {
+        let f = self.rmi.predict(key.to_f64());
+        let rel = (f - self.lo) * self.inv_width * self.nb as f64;
+        let b = rel as usize; // saturating cast clamps negatives to 0
+        if b >= self.nb {
+            self.nb - 1
+        } else {
+            b
+        }
+    }
+
+    fn is_equality_bucket(&self, _b: usize) -> bool {
+        false
+    }
+}
+
+/// Sort with LearnedSort 2.0 (sequential — the paper benchmarks it
+/// sequentially only).
+pub fn sort<K: SortKey>(data: &mut [K]) {
+    sort_cfg(data, &LearnedSortConfig::default());
+}
+
+pub fn sort_cfg<K: SortKey>(data: &mut [K], cfg: &LearnedSortConfig) {
+    let n = data.len();
+    if n <= cfg.base_case {
+        let _g = phase_scope(Phase::BaseCase);
+        small_sort(data);
+        return;
+    }
+    let mut rng = Xoshiro256pp::new(0x1EA2_4ED ^ n as u64);
+
+    // ---- Routine 1: train the CDF model (once) -----------------------
+    let rmi = {
+        let _g = phase_scope(Phase::ModelTrain);
+        let ssz = ((n as f64 * cfg.sample_frac) as usize)
+            .clamp(cfg.min_sample, cfg.max_sample)
+            .min(n);
+        let mut sample = Vec::new();
+        sample_f64(data, ssz, &mut rng, &mut sample);
+        sample.sort_unstable_by(f64::total_cmp);
+        Rmi::train(&sample, RmiConfig { n_leaves: cfg.leaves })
+    };
+
+    // ---- Routine 2a: first partitioning round ------------------------
+    let nb1 = (n / cfg.bucket_target).clamp(2, cfg.max_fanout);
+    let c1 = crate::classifier::rmi_classifier::RmiClassifier::new(rmi, nb1);
+    let r1 = partition(data, &c1, cfg.block, 1);
+    let rmi = c1.rmi();
+
+    let mut scratch: Vec<K> = Vec::new();
+    let mut counts: Vec<u32> = Vec::new();
+    for b1 in 0..nb1 {
+        let (lo, hi) = (r1.boundaries[b1], r1.boundaries[b1 + 1]);
+        if hi - lo < 2 {
+            continue;
+        }
+        let bucket = &mut data[lo..hi];
+        // ---- Routine 3: homogeneity check (duplicate fix) ------------
+        if is_homogeneous(bucket) {
+            continue;
+        }
+        let f_lo = b1 as f64 / nb1 as f64;
+        let f_width = 1.0 / nb1 as f64;
+        if bucket.len() > cfg.counting_threshold {
+            // ---- Routine 2b: second partitioning round ---------------
+            let nb2 = (bucket.len() / (cfg.counting_threshold / 2).max(1))
+                .clamp(2, cfg.max_fanout);
+            let c2 = SubRangeRmi {
+                rmi,
+                lo: f_lo,
+                inv_width: nb1 as f64,
+                nb: nb2,
+            };
+            let r2 = partition(bucket, &c2, cfg.block, 1);
+            for b2 in 0..nb2 {
+                let (slo, shi) = (r2.boundaries[b2], r2.boundaries[b2 + 1]);
+                if shi - slo < 2 {
+                    continue;
+                }
+                let sub = &mut bucket[slo..shi];
+                if is_homogeneous(sub) {
+                    continue;
+                }
+                // ---- Routine 4: model counting sort + correction -----
+                counting_base(sub, rmi, f_lo + (b2 as f64 / nb2 as f64) * f_width,
+                    nb1 as f64 * nb2 as f64, &mut scratch, &mut counts);
+            }
+        } else {
+            counting_base(bucket, rmi, f_lo, nb1 as f64, &mut scratch, &mut counts);
+        }
+    }
+}
+
+/// Model counting sort over a sub-bucket covering CDF range
+/// `[f_lo, f_lo + 1/scale)`.
+fn counting_base<K: SortKey>(
+    sub: &mut [K],
+    rmi: &Rmi,
+    f_lo: f64,
+    scale: f64,
+    scratch: &mut Vec<K>,
+    counts: &mut Vec<u32>,
+) {
+    let _g = phase_scope(Phase::BaseCase);
+    let m = sub.len() as f64;
+    model_counting_sort(
+        sub,
+        |k| {
+            let rel = (rmi.predict(k.to_f64()) - f_lo) * scale;
+            // saturating float->usize cast clamps negatives to 0
+            (rel * m) as usize
+        },
+        scratch,
+        counts,
+    );
+}
+
+#[inline]
+fn is_homogeneous<K: SortKey>(data: &[K]) -> bool {
+    let first = data[0].to_bits_ordered();
+    data.iter().all(|k| k.to_bits_ordered() == first)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::is_sorted;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn sorts_various_sizes() {
+        for n in [0usize, 1, 100, 2048, 2049, 10_000, 200_000] {
+            let mut rng = Xoshiro256pp::new(n as u64 + 3);
+            let mut v: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1e6)).collect();
+            sort(&mut v);
+            assert!(is_sorted(&v), "n={n}");
+        }
+    }
+
+    #[test]
+    fn sorts_skewed_distributions() {
+        let mut rng = Xoshiro256pp::new(4);
+        let mut v: Vec<f64> = (0..150_000).map(|_| rng.lognormal(0.0, 2.0)).collect();
+        sort(&mut v);
+        assert!(is_sorted(&v));
+        let mut v: Vec<f64> = (0..150_000).map(|_| rng.exponential(2.0)).collect();
+        sort(&mut v);
+        assert!(is_sorted(&v));
+    }
+
+    #[test]
+    fn duplicate_heavy_homogeneity_path() {
+        let mut rng = Xoshiro256pp::new(5);
+        let n = 120_000;
+        let mut v: Vec<f64> = (0..n).map(|_| rng.next_below(30) as f64).collect();
+        let mut want = v.clone();
+        want.sort_unstable_by(f64::total_cmp);
+        sort(&mut v);
+        assert_eq!(v, want);
+        // root-dups pattern
+        let m = (n as f64).sqrt() as u64;
+        let mut v: Vec<f64> = (0..n as u64).map(|i| (i % m) as f64).collect();
+        sort(&mut v);
+        assert!(is_sorted(&v));
+    }
+
+    #[test]
+    fn u64_keys() {
+        let mut rng = Xoshiro256pp::new(6);
+        let mut v: Vec<u64> = (0..100_000).map(|_| rng.next_below(1 << 50)).collect();
+        let mut want = v.clone();
+        want.sort_unstable();
+        sort(&mut v);
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn constant_input() {
+        let mut v = vec![5.5f64; 50_000];
+        sort(&mut v);
+        assert!(v.iter().all(|&x| x == 5.5));
+    }
+
+    #[test]
+    fn already_sorted_and_reverse() {
+        let mut v: Vec<f64> = (0..100_000).map(|i| i as f64).collect();
+        sort(&mut v);
+        assert!(is_sorted(&v));
+        let mut v: Vec<f64> = (0..100_000).rev().map(|i| i as f64).collect();
+        sort(&mut v);
+        assert!(is_sorted(&v));
+    }
+}

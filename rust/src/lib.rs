@@ -1,0 +1,195 @@
+//! # aipso — LearnedSort as a learning-augmented SampleSort
+//!
+//! Reproduction of Carvalho & Lawrence, *"LearnedSort as a learning-augmented
+//! SampleSort: Analysis and Parallelization"*, SSDBM 2023
+//! (DOI 10.1145/3603719.3603731).
+//!
+//! The crate implements, from scratch:
+//!
+//! * **AIPS²o** (the paper's contribution): the IPS⁴o in-place parallel
+//!   super-scalar SampleSort framework augmented with a *monotonic* RMI
+//!   (learned CDF model) partitioning strategy — [`aips2o`].
+//! * Every competitor the paper benchmarks against: [`sample_sort`]
+//!   (IPS⁴o), [`radix_sort`] (IPS²Ra + SkaSort), [`learned_sort`]
+//!   (LearnedSort 2.0), and [`baseline`] (pdqsort / parallel mergesort
+//!   stand-ins for `std::sort` / `par_unseq`).
+//! * The analysis algorithms of Section 3: Quicksort with Learned Pivots
+//!   and Learned Quicksort — [`learned_qs`].
+//! * All substrates: PRNG + samplers ([`util::rng`]), dataset generators
+//!   ([`datasets`]), the native RMI ([`rmi`]), classifiers
+//!   ([`classifier`]), a work-pool scheduler ([`scheduler`]), the PJRT
+//!   artifact runtime ([`runtime`]), a sort-job coordinator
+//!   ([`coordinator`]), and the benchmark harness ([`bench_harness`]).
+//!
+//! The learned model also exists as an AOT-compiled JAX/Pallas artifact
+//! (see `python/compile/`); [`runtime`] loads and executes it via PJRT so
+//! the Rust binary is self-contained once `make artifacts` has run.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use aipso::{SortEngine, sort_parallel};
+//!
+//! let mut keys = aipso::datasets::generate_f64("uniform", 1 << 20, 42).unwrap();
+//! sort_parallel(SortEngine::Aips2o, &mut keys, 0 /* 0 = all cores */);
+//! assert!(aipso::is_sorted(&keys));
+//! ```
+
+pub mod aips2o;
+pub mod baseline;
+pub mod bench_harness;
+pub mod classifier;
+pub mod coordinator;
+pub mod datasets;
+pub mod key;
+pub mod learned_qs;
+pub mod learned_sort;
+pub mod radix_sort;
+pub mod rmi;
+pub mod runtime;
+pub mod sample_sort;
+pub mod scheduler;
+pub mod util;
+
+pub use key::SortKey;
+
+/// Every sorting engine in the paper's evaluation, by paper name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SortEngine {
+    /// AIPS²o / AI1S²o — the paper's contribution (learned SampleSort).
+    Aips2o,
+    /// IPS⁴o / I1S⁴o — in-place parallel super-scalar SampleSort.
+    Ips4o,
+    /// IPS²Ra / I1S²Ra — in-place parallel super-scalar radix sort.
+    Ips2ra,
+    /// LearnedSort 2.0 (sequential only, as in the paper).
+    LearnedSort,
+    /// `std::sort` stand-in: Rust pdqsort (`sort_unstable`); the parallel
+    /// variant is our mergesort (for `std::execution::par_unseq`).
+    StdSort,
+    /// Quicksort with Learned Pivots (paper Algorithm 1+2, analysis only).
+    LearnedPivotQs,
+    /// Learned Quicksort, B=2 (paper Algorithm 3, analysis only).
+    LearnedQs,
+}
+
+impl SortEngine {
+    /// Engines in the paper's sequential benchmark (Figures 1–3).
+    pub const SEQUENTIAL_FIGURES: [SortEngine; 5] = [
+        SortEngine::LearnedSort,
+        SortEngine::Ips4o,
+        SortEngine::Ips2ra,
+        SortEngine::Aips2o,
+        SortEngine::StdSort,
+    ];
+
+    /// Engines in the paper's parallel benchmark (Figures 4–6).
+    /// LearnedSort is excluded: "there is only a sequential implementation".
+    pub const PARALLEL_FIGURES: [SortEngine; 4] = [
+        SortEngine::Aips2o,
+        SortEngine::Ips4o,
+        SortEngine::Ips2ra,
+        SortEngine::StdSort,
+    ];
+
+    /// Display name following the paper's convention (I1S⁴o = sequential).
+    pub fn paper_name(&self, parallel: bool) -> &'static str {
+        match (self, parallel) {
+            (SortEngine::Aips2o, true) => "AIPS2o",
+            (SortEngine::Aips2o, false) => "AI1S2o",
+            (SortEngine::Ips4o, true) => "IPS4o",
+            (SortEngine::Ips4o, false) => "I1S4o",
+            (SortEngine::Ips2ra, true) => "IPS2Ra",
+            (SortEngine::Ips2ra, false) => "I1S2Ra",
+            (SortEngine::LearnedSort, _) => "LearnedSort",
+            (SortEngine::StdSort, true) => "std::sort(par)",
+            (SortEngine::StdSort, false) => "std::sort",
+            (SortEngine::LearnedPivotQs, _) => "LearnedPivotQS",
+            (SortEngine::LearnedQs, _) => "LearnedQS",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SortEngine> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "aips2o" | "ai1s2o" => SortEngine::Aips2o,
+            "ips4o" | "i1s4o" => SortEngine::Ips4o,
+            "ips2ra" | "i1s2ra" => SortEngine::Ips2ra,
+            "learnedsort" | "ls" => SortEngine::LearnedSort,
+            "std" | "stdsort" | "std::sort" => SortEngine::StdSort,
+            "learnedpivotqs" | "lpqs" => SortEngine::LearnedPivotQs,
+            "learnedqs" | "lqs" => SortEngine::LearnedQs,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [SortEngine; 7] {
+        [
+            SortEngine::Aips2o,
+            SortEngine::Ips4o,
+            SortEngine::Ips2ra,
+            SortEngine::LearnedSort,
+            SortEngine::StdSort,
+            SortEngine::LearnedPivotQs,
+            SortEngine::LearnedQs,
+        ]
+    }
+}
+
+/// Sort `keys` sequentially with the given engine.
+pub fn sort_sequential<K: SortKey>(engine: SortEngine, keys: &mut [K]) {
+    match engine {
+        SortEngine::Aips2o => aips2o::sort_seq(keys),
+        SortEngine::Ips4o => sample_sort::sort_seq(keys),
+        SortEngine::Ips2ra => radix_sort::sort_seq(keys),
+        SortEngine::LearnedSort => learned_sort::sort(keys),
+        SortEngine::StdSort => baseline::std_sort(keys),
+        SortEngine::LearnedPivotQs => learned_qs::learned_pivot::sort(keys),
+        SortEngine::LearnedQs => learned_qs::learned_quicksort::sort(keys),
+    }
+}
+
+/// Sort `keys` with `threads` workers (0 = all available cores).
+/// Engines without a parallel implementation run sequentially, matching
+/// the paper's treatment of LearnedSort.
+pub fn sort_parallel<K: SortKey>(engine: SortEngine, keys: &mut [K], threads: usize) {
+    let threads = scheduler::effective_threads(threads);
+    match engine {
+        SortEngine::Aips2o => aips2o::sort_par(keys, threads),
+        SortEngine::Ips4o => sample_sort::sort_par(keys, threads),
+        SortEngine::Ips2ra => radix_sort::sort_par(keys, threads),
+        SortEngine::StdSort => baseline::par_sort(keys, threads),
+        _ => sort_sequential(engine, keys),
+    }
+}
+
+/// Check that a slice is sorted under the key's total order.
+pub fn is_sorted<K: SortKey>(keys: &[K]) -> bool {
+    keys.windows(2).all(|w| !w[1].key_lt(w[0]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_parse_roundtrip() {
+        for e in SortEngine::all() {
+            let name = e.paper_name(false);
+            if let Some(p) = SortEngine::parse(name) {
+                assert_eq!(p, e);
+            }
+        }
+        assert_eq!(SortEngine::parse("ips4o"), Some(SortEngine::Ips4o));
+        assert_eq!(SortEngine::parse("nope"), None);
+    }
+
+    #[test]
+    fn is_sorted_works() {
+        assert!(is_sorted::<u64>(&[]));
+        assert!(is_sorted(&[1u64]));
+        assert!(is_sorted(&[1u64, 1, 2, 3]));
+        assert!(!is_sorted(&[2u64, 1]));
+        assert!(is_sorted(&[-1.0f64, 0.0, 0.5]));
+        assert!(!is_sorted(&[0.5f64, -1.0]));
+    }
+}

@@ -1,0 +1,388 @@
+//! `aipso` — CLI for the AIPS²o reproduction (leader entrypoint).
+//!
+//! Subcommands:
+//!   gen             generate a dataset to stdout stats or a binary file
+//!   sort            sort one dataset with one engine, report rate
+//!   bench           regenerate paper figures (F1–F6) as markdown
+//!   pivot-quality   regenerate Table 2
+//!   phases          per-phase time breakdown for one engine (perf tool)
+//!   serve           run a synthetic job trace through the coordinator
+//!   artifacts-check load the PJRT artifacts, verify native/XLA parity
+//!
+//! Arg parsing is hand-rolled (no clap offline): `--key value` pairs.
+
+use std::collections::BTreeMap;
+
+use aipso::bench_harness::{self, BenchConfig};
+use aipso::coordinator::{Coordinator, EngineChoice, JobSpec, KeyBuf};
+use aipso::datasets::{self, FigureGroup, KeyType};
+use aipso::rmi::model::{Rmi, RmiConfig};
+use aipso::runtime::RmiRuntime;
+use aipso::util::rng::Xoshiro256pp;
+use aipso::util::timer;
+use aipso::util::{fmt, stats};
+use aipso::{sort_parallel, sort_sequential, SortEngine};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        usage_and_exit(None);
+    };
+    let opts = parse_opts(&args[1..]);
+    let code = match cmd.as_str() {
+        "gen" => cmd_gen(&opts),
+        "sort" => cmd_sort(&opts),
+        "bench" => cmd_bench(&opts),
+        "pivot-quality" => cmd_pivot_quality(&opts),
+        "phases" => cmd_phases(&opts),
+        "serve" => cmd_serve(&opts),
+        "artifacts-check" => cmd_artifacts_check(&opts),
+        "help" | "--help" | "-h" => {
+            usage_and_exit(None);
+        }
+        other => usage_and_exit(Some(other)),
+    };
+    std::process::exit(code);
+}
+
+fn usage_and_exit(unknown: Option<&str>) -> ! {
+    if let Some(u) = unknown {
+        eprintln!("unknown command: {u}\n");
+    }
+    eprintln!(
+        "aipso — LearnedSort as a learning-augmented SampleSort (SSDBM'23 reproduction)
+
+USAGE: aipso <command> [--key value ...]
+
+COMMANDS
+  gen             --dataset NAME [--n N] [--seed S] [--out FILE]
+  sort            --dataset NAME --engine ENGINE [--n N] [--threads T] [--seq]
+  bench           [--figure f1|f2|f3|f4|f5|f6|all] [--n N] [--reps R] [--threads T]
+  pivot-quality   [--n N]
+  phases          --dataset NAME --engine ENGINE [--n N] [--threads T]
+  serve           [--jobs J] [--n N] [--threads T]
+  artifacts-check [--dir artifacts]
+
+ENGINES: aips2o ips4o ips2ra learnedsort std learnedpivotqs learnedqs
+DATASETS: {}",
+        datasets::ALL
+            .iter()
+            .map(|d| d.name)
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    std::process::exit(2);
+}
+
+fn parse_opts(args: &[String]) -> BTreeMap<String, String> {
+    let mut m = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let flag_like = i + 1 >= args.len() || args[i + 1].starts_with("--");
+            if flag_like {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            }
+        } else {
+            eprintln!("ignoring stray argument: {a}");
+            i += 1;
+        }
+    }
+    m
+}
+
+fn opt_usize(opts: &BTreeMap<String, String>, key: &str, default: usize) -> usize {
+    opts.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn opt_u64(opts: &BTreeMap<String, String>, key: &str, default: u64) -> u64 {
+    opts.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn cmd_gen(opts: &BTreeMap<String, String>) -> i32 {
+    let Some(name) = opts.get("dataset") else {
+        eprintln!("gen: --dataset required");
+        return 2;
+    };
+    let n = opt_usize(opts, "n", 1_000_000);
+    let seed = opt_u64(opts, "seed", 42);
+    let Some(spec) = datasets::spec(name) else {
+        eprintln!("unknown dataset {name}");
+        return 2;
+    };
+    let bytes: Vec<u8> = match spec.key_type {
+        KeyType::F64 => {
+            let v = datasets::generate_f64(spec.name, n, seed).unwrap();
+            print_f64_stats(spec.name, &v);
+            v.iter().flat_map(|x| x.to_le_bytes()).collect()
+        }
+        KeyType::U64 => {
+            let v = datasets::generate_u64(spec.name, n, seed).unwrap();
+            let f: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+            print_f64_stats(spec.name, &f);
+            v.iter().flat_map(|x| x.to_le_bytes()).collect()
+        }
+    };
+    if let Some(out) = opts.get("out") {
+        if let Err(e) = std::fs::write(out, &bytes) {
+            eprintln!("write {out}: {e}");
+            return 1;
+        }
+        println!("wrote {} ({} keys, {} bytes)", out, n, bytes.len());
+    }
+    0
+}
+
+fn print_f64_stats(name: &str, v: &[f64]) {
+    println!(
+        "{name}: n={} min={:.4e} p50={:.4e} max={:.4e} mean={:.4e}",
+        v.len(),
+        stats::min(v),
+        stats::median(&v[..v.len().min(100_000)]),
+        stats::max(v),
+        stats::mean(v),
+    );
+}
+
+fn cmd_sort(opts: &BTreeMap<String, String>) -> i32 {
+    let Some(name) = opts.get("dataset") else {
+        eprintln!("sort: --dataset required");
+        return 2;
+    };
+    let engine = match opts.get("engine").and_then(|e| SortEngine::parse(e)) {
+        Some(e) => e,
+        None => {
+            eprintln!("sort: --engine required (or unknown engine)");
+            return 2;
+        }
+    };
+    let n = opt_usize(opts, "n", 2_000_000);
+    let seed = opt_u64(opts, "seed", 42);
+    let threads = opt_usize(opts, "threads", 0);
+    let parallel = !opts.contains_key("seq");
+    let Some(spec) = datasets::spec(name) else {
+        eprintln!("unknown dataset {name}");
+        return 2;
+    };
+    let (secs, ok) = match spec.key_type {
+        KeyType::F64 => {
+            let mut v = datasets::generate_f64(spec.name, n, seed).unwrap();
+            let (_, secs) = timer::time_it(|| {
+                if parallel {
+                    sort_parallel(engine, &mut v, threads)
+                } else {
+                    sort_sequential(engine, &mut v)
+                }
+            });
+            (secs, aipso::is_sorted(&v))
+        }
+        KeyType::U64 => {
+            let mut v = datasets::generate_u64(spec.name, n, seed).unwrap();
+            let (_, secs) = timer::time_it(|| {
+                if parallel {
+                    sort_parallel(engine, &mut v, threads)
+                } else {
+                    sort_sequential(engine, &mut v)
+                }
+            });
+            (secs, aipso::is_sorted(&v))
+        }
+    };
+    println!(
+        "{} on {} (n={}): {} — {} [{}]",
+        engine.paper_name(parallel),
+        spec.paper_name,
+        fmt::keys(n),
+        fmt::secs(secs),
+        fmt::rate(n as f64 / secs.max(1e-12)),
+        if ok { "sorted" } else { "NOT SORTED" },
+    );
+    if ok {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_bench(opts: &BTreeMap<String, String>) -> i32 {
+    let cfg = BenchConfig {
+        n: opt_usize(opts, "n", BenchConfig::default().n),
+        reps: opt_usize(opts, "reps", BenchConfig::default().reps),
+        threads: opt_usize(opts, "threads", 0),
+        ..Default::default()
+    };
+    let figure = opts.get("figure").map(|s| s.as_str()).unwrap_or("all");
+    let figures: Vec<(&str, FigureGroup, bool)> = vec![
+        ("Figure 1 (sequential, synthetic 1)", FigureGroup::Synthetic1, false),
+        ("Figure 2 (sequential, synthetic 2)", FigureGroup::Synthetic2, false),
+        ("Figure 3 (sequential, real-world)", FigureGroup::RealWorld, false),
+        ("Figure 4 (parallel, synthetic 1)", FigureGroup::Synthetic1, true),
+        ("Figure 5 (parallel, synthetic 2)", FigureGroup::Synthetic2, true),
+        ("Figure 6 (parallel, real-world)", FigureGroup::RealWorld, true),
+    ];
+    let selected: Vec<usize> = match figure {
+        "all" => (0..6).collect(),
+        "f1" => vec![0],
+        "f2" => vec![1],
+        "f3" => vec![2],
+        "f4" => vec![3],
+        "f5" => vec![4],
+        "f6" => vec![5],
+        other => {
+            eprintln!("unknown figure {other}");
+            return 2;
+        }
+    };
+    for idx in selected {
+        let (title, group, parallel) = figures[idx];
+        let rows = bench_harness::run_figure(group, parallel, &cfg);
+        print!("{}", bench_harness::render_rows(title, &rows));
+        println!();
+    }
+    0
+}
+
+fn cmd_pivot_quality(opts: &BTreeMap<String, String>) -> i32 {
+    let cfg = BenchConfig {
+        n: opt_usize(opts, "n", 2_000_000),
+        ..Default::default()
+    };
+    println!("Table 2: pivot quality, sum_i |CDF(p_i) - (i+1)/B|, 255 pivots\n");
+    let rows = bench_harness::table2_pivot_quality(&cfg);
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(name, qr, qm)| {
+            vec![name.clone(), format!("{qr:.4}"), format!("{qm:.4}")]
+        })
+        .collect();
+    print!(
+        "{}",
+        fmt::markdown_table(&["dataset", "Random (255 pivots)", "RMI (255 pivots)"], &table)
+    );
+    println!("\npaper: Uniform 1.1016 vs 0.4388; Wiki/Edit 0.9991 vs 0.5157");
+    0
+}
+
+fn cmd_phases(opts: &BTreeMap<String, String>) -> i32 {
+    let name = opts.get("dataset").cloned().unwrap_or("uniform".into());
+    let engine = opts
+        .get("engine")
+        .and_then(|e| SortEngine::parse(e))
+        .unwrap_or(SortEngine::Aips2o);
+    let n = opt_usize(opts, "n", 2_000_000);
+    let threads = opt_usize(opts, "threads", 0);
+    let spec = datasets::spec(&name).expect("unknown dataset");
+    timer::set_phase_profiling(true);
+    timer::reset_phases();
+    let secs = match spec.key_type {
+        KeyType::F64 => {
+            let mut v = datasets::generate_f64(spec.name, n, 42).unwrap();
+            timer::time_it(|| sort_parallel(engine, &mut v, threads)).1
+        }
+        KeyType::U64 => {
+            let mut v = datasets::generate_u64(spec.name, n, 42).unwrap();
+            timer::time_it(|| sort_parallel(engine, &mut v, threads)).1
+        }
+    };
+    timer::set_phase_profiling(false);
+    println!(
+        "{} on {} (n={}): {}\nphase breakdown (cumulative across threads):",
+        engine.paper_name(true),
+        spec.paper_name,
+        fmt::keys(n),
+        fmt::secs(secs)
+    );
+    print!("{}", timer::phase_report(&timer::phase_snapshot()));
+    0
+}
+
+fn cmd_serve(opts: &BTreeMap<String, String>) -> i32 {
+    let jobs = opt_usize(opts, "jobs", 24);
+    let n = opt_usize(opts, "n", 500_000);
+    let threads = opt_usize(opts, "threads", 0);
+    let mut rng = Xoshiro256pp::new(opt_u64(opts, "seed", 7));
+    let coordinator = Coordinator::new(threads);
+    // synthetic trace: mix of sizes, distributions and key types
+    for id in 0..jobs as u64 {
+        let size = match id % 4 {
+            0 => n,
+            1 => n / 4,
+            2 => n / 16,
+            _ => 4_000,
+        };
+        let keys = match id % 3 {
+            0 => KeyBuf::F64(
+                datasets::generate_f64("uniform", size, rng.next_u64()).unwrap(),
+            ),
+            1 => KeyBuf::U64(
+                datasets::generate_u64("wiki_edit", size, rng.next_u64()).unwrap(),
+            ),
+            _ => KeyBuf::F64(
+                datasets::generate_f64("root_dups", size, rng.next_u64()).unwrap(),
+            ),
+        };
+        coordinator.submit(JobSpec {
+            id,
+            keys,
+            engine: EngineChoice::Auto,
+            parallel: true,
+        });
+    }
+    let (reports, metrics) = coordinator.drain();
+    let failures = reports.iter().filter(|r| !r.verified_sorted).count();
+    println!(
+        "served {} jobs ({} failures)\n\n{}",
+        reports.len(),
+        failures,
+        metrics.report()
+    );
+    if failures == 0 {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_artifacts_check(opts: &BTreeMap<String, String>) -> i32 {
+    let dir = opts
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(aipso::runtime::default_artifacts_dir);
+    let rt = match RmiRuntime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifact load failed: {e:#}");
+            return 1;
+        }
+    };
+    let m = rt.manifest();
+    println!(
+        "artifacts ok: train_sample={} predict_batch={} n_leaves={}",
+        m.train_sample, m.predict_batch, m.n_leaves
+    );
+    // parity spot-check: XLA-trained model vs native-trained model
+    let mut rng = Xoshiro256pp::new(99);
+    let mut sample: Vec<f64> = (0..m.train_sample).map(|_| rng.uniform(0.0, 1e6)).collect();
+    sample.sort_unstable_by(f64::total_cmp);
+    let xla_rmi = rt.train(&sample).expect("xla train");
+    let native_rmi = Rmi::train(&sample, RmiConfig { n_leaves: m.n_leaves });
+    let keys: Vec<f64> = (0..4096).map(|_| rng.uniform(0.0, 1e6)).collect();
+    let xla_pred = rt.predict(&keys, &xla_rmi).expect("xla predict");
+    let mut max_err: f64 = 0.0;
+    for (k, xp) in keys.iter().zip(&xla_pred) {
+        max_err = max_err.max((native_rmi.predict(*k) - xp).abs());
+    }
+    println!("max |native - xla| over 4096 predictions: {max_err:.3e}");
+    if max_err < 1e-9 {
+        println!("parity OK");
+        0
+    } else {
+        eprintln!("parity FAILED");
+        1
+    }
+}

@@ -1,0 +1,143 @@
+//! IPS²Ra drivers: the shared block-partition framework with a byte-digit
+//! classifier, descending one digit per recursion level; SkaSort below the
+//! base-case threshold.
+//!
+//! Note the property the paper measures: radix buckets have **no balance
+//! guarantee** (any number of keys may share a prefix byte), which is why
+//! IPS²Ra loses the parallel benchmark — threads idle while one heavy
+//! bucket is processed (Section 5.2). We reproduce that behaviour, not fix
+//! it.
+
+use crate::key::SortKey;
+use crate::radix_sort::key_extract::{first_diverging_shift, DigitClassifier};
+use crate::radix_sort::ska_sort::ska_sort;
+use crate::sample_sort::partition::partition;
+use crate::scheduler::run_task_pool;
+use crate::util::timer::{phase_scope, Phase};
+
+/// Below this, SkaSort (matches IPS²Ra's base case & the paper's 4096).
+pub const BASE_CASE: usize = 4096;
+/// Keys per block in the partition framework.
+const BLOCK: usize = 128;
+
+/// Sequential IPS²Ra (paper name: I1S²Ra).
+pub fn sort_seq<K: SortKey>(data: &mut [K]) {
+    sort_rec(data, 1);
+}
+
+/// Parallel IPS²Ra.
+pub fn sort_par<K: SortKey>(data: &mut [K], threads: usize) {
+    let threads = threads.max(1);
+    let n = data.len();
+    if threads == 1 || n <= BASE_CASE.max(4 * BLOCK * threads) {
+        return sort_seq(data);
+    }
+    let Some(shift) = first_diverging_shift(data) else {
+        return; // constant input
+    };
+    // Top level: cooperative partition on the first diverging byte.
+    let classifier = DigitClassifier::with_shift(shift);
+    let result = partition(data, &classifier, BLOCK, threads);
+    let base = data.as_mut_ptr() as usize;
+    let mut tasks: Vec<(usize, usize)> = Vec::new();
+    for b in 0..256 {
+        let (lo, hi) = (result.boundaries[b], result.boundaries[b + 1]);
+        if hi - lo > 1 {
+            tasks.push((lo, hi - lo));
+        }
+    }
+    run_task_pool(threads, tasks, move |(off, len), spawner| {
+        // SAFETY: disjoint partition ranges.
+        let sub = unsafe { std::slice::from_raw_parts_mut((base as *mut K).add(off), len) };
+        if len <= BASE_CASE {
+            let _g = phase_scope(Phase::BaseCase);
+            ska_sort(sub);
+            return;
+        }
+        let Some(shift) = first_diverging_shift(sub) else {
+            return;
+        };
+        let classifier = DigitClassifier::with_shift(shift);
+        let res = partition(sub, &classifier, BLOCK, 1);
+        for b in 0..256 {
+            let (lo, hi) = (res.boundaries[b], res.boundaries[b + 1]);
+            if hi - lo > 1 {
+                spawner.spawn((off + lo, hi - lo));
+            }
+        }
+    });
+}
+
+fn sort_rec<K: SortKey>(data: &mut [K], threads: usize) {
+    if data.len() <= BASE_CASE {
+        let _g = phase_scope(Phase::BaseCase);
+        ska_sort(data);
+        return;
+    }
+    let Some(shift) = first_diverging_shift(data) else {
+        return;
+    };
+    let classifier = DigitClassifier::with_shift(shift);
+    let result = partition(data, &classifier, BLOCK, threads);
+    for b in 0..256 {
+        let (lo, hi) = (result.boundaries[b], result.boundaries[b + 1]);
+        if hi - lo > 1 {
+            sort_rec(&mut data[lo..hi], 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::is_sorted;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn seq_sorts() {
+        let mut rng = Xoshiro256pp::new(0x2A);
+        for n in [0usize, 1, 100, 4096, 4097, 100_000] {
+            let mut v: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let mut want = v.clone();
+            want.sort_unstable();
+            sort_seq(&mut v);
+            assert_eq!(v, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn par_sorts() {
+        for (n, t) in [(50_000usize, 2usize), (200_000, 4), (123_457, 8)] {
+            let mut rng = Xoshiro256pp::new(n as u64);
+            let mut v: Vec<u64> = (0..n).map(|_| rng.next_below(1 << 44)).collect();
+            let mut want = v.clone();
+            want.sort_unstable();
+            sort_par(&mut v, t);
+            assert_eq!(v, want, "n={n} t={t}");
+        }
+    }
+
+    #[test]
+    fn skewed_prefixes() {
+        // everything in one byte-bucket at level 0 — exercises prefix skip
+        let mut rng = Xoshiro256pp::new(0x2B);
+        let mut v: Vec<u64> = (0..100_000)
+            .map(|_| 0xAA00_0000_0000_0000u64 | rng.next_below(1 << 20))
+            .collect();
+        let mut want = v.clone();
+        want.sort_unstable();
+        sort_par(&mut v, 4);
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn floats_and_duplicates() {
+        let mut rng = Xoshiro256pp::new(0x2C);
+        let mut v: Vec<f64> = (0..80_000).map(|_| (rng.next_below(50) as f64) - 25.0).collect();
+        sort_par(&mut v, 4);
+        assert!(is_sorted(&v));
+        let mut c = vec![1.5f64; 10_000];
+        sort_seq(&mut c);
+        assert!(is_sorted(&c));
+    }
+}

@@ -1,0 +1,118 @@
+//! Digit extraction (substrate S8): the radix engines see every key
+//! through its order-preserving `u64` image ([`SortKey::to_bits_ordered`]),
+//! which is exactly the float→integer key extractor the paper passes to
+//! IPS²Ra for the double-keyed datasets.
+
+use crate::classifier::Classifier;
+use crate::key::SortKey;
+
+/// 256-way classifier on byte `level` (0 = most significant of the key's
+/// significant width) — the IPS²Ra "splitter" at one recursion level.
+#[derive(Debug, Clone, Copy)]
+pub struct DigitClassifier {
+    shift: u32,
+}
+
+impl DigitClassifier {
+    pub fn new<K: SortKey>(level: usize) -> DigitClassifier {
+        debug_assert!(level < K::RADIX_BYTES);
+        DigitClassifier {
+            shift: (8 * (K::RADIX_BYTES - 1 - level)) as u32,
+        }
+    }
+
+    /// Classifier for an explicit bit shift (used after common-prefix
+    /// skipping).
+    pub fn with_shift(shift: u32) -> DigitClassifier {
+        DigitClassifier { shift }
+    }
+
+    pub fn shift(&self) -> u32 {
+        self.shift
+    }
+}
+
+impl<K: SortKey> Classifier<K> for DigitClassifier {
+    fn num_buckets(&self) -> usize {
+        256
+    }
+
+    #[inline(always)]
+    fn classify(&self, key: K) -> usize {
+        ((key.to_bits_ordered() >> self.shift) & 0xFF) as usize
+    }
+
+    fn is_equality_bucket(&self, _b: usize) -> bool {
+        false
+    }
+
+    fn classify_batch(&self, keys: &[K], out: &mut [u32]) {
+        let sh = self.shift;
+        for (k, o) in keys.iter().zip(out.iter_mut()) {
+            *o = ((k.to_bits_ordered() >> sh) & 0xFF) as u32;
+        }
+    }
+}
+
+/// Highest differing byte position of the ordered images (common-prefix
+/// skip). Returns `None` when all keys are equal.
+pub fn first_diverging_shift<K: SortKey>(keys: &[K]) -> Option<u32> {
+    if keys.is_empty() {
+        return None;
+    }
+    let mut lo = u64::MAX;
+    let mut hi = 0u64;
+    for k in keys {
+        let b = k.to_bits_ordered();
+        lo = lo.min(b);
+        hi = hi.max(b);
+    }
+    if lo == hi {
+        return None;
+    }
+    let diff = lo ^ hi;
+    // byte index (from msb of the significant width) of the first set bit
+    let leading_byte = (63 - diff.leading_zeros()) / 8;
+    Some(8 * leading_byte)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digit_extraction_u64() {
+        let c = DigitClassifier::new::<u64>(0);
+        assert_eq!(Classifier::<u64>::classify(&c, 0xAB00_0000_0000_0000), 0xAB);
+        let c = DigitClassifier::new::<u64>(7);
+        assert_eq!(Classifier::<u64>::classify(&c, 0x00000000_000000CD), 0xCD);
+    }
+
+    #[test]
+    fn digit_extraction_f64_ordered() {
+        // negative floats must classify below positive ones at byte 0
+        let c = DigitClassifier::new::<f64>(0);
+        let neg = Classifier::<f64>::classify(&c, -1.0f64);
+        let pos = Classifier::<f64>::classify(&c, 1.0f64);
+        assert!(neg < pos);
+    }
+
+    #[test]
+    fn diverging_shift() {
+        assert_eq!(first_diverging_shift::<u64>(&[5, 5, 5]), None);
+        // differ in lowest byte
+        assert_eq!(first_diverging_shift::<u64>(&[5, 6]), Some(0));
+        // differ at second-highest byte
+        let keys = [0x00AA_0000_0000_0000u64, 0x00BB_0000_0000_0000u64];
+        assert_eq!(first_diverging_shift::<u64>(&keys), Some(48));
+        assert_eq!(first_diverging_shift::<u64>(&[]), None);
+    }
+
+    #[test]
+    fn u32_digits() {
+        let c = DigitClassifier::new::<u32>(0);
+        assert_eq!(Classifier::<u32>::classify(&c, 0xAB00_0000u32), 0xAB);
+        let c = DigitClassifier::new::<u32>(3);
+        assert_eq!(Classifier::<u32>::classify(&c, 0xCDu32), 0xCD);
+    }
+}

@@ -1,0 +1,16 @@
+//! IPS²Ra — In-place Parallel Super Scalar Radix Sort (engine E2), plus
+//! SkaSort (substrate S6), after Axtmann et al. (TOPC '22) and Skarupke
+//! ("I Wrote a Faster Sorting Algorithm", 2016).
+//!
+//! IPS²Ra is "the IPS⁴o framework with a most-significant-digit radix
+//! strategy": the splitter tree is replaced by a byte-digit classifier and
+//! the recursion descends one digit per level. SkaSort (in-place American
+//! flag byte sort) is the base case — the same role it plays in the
+//! original IPS²Ra. Floats route through the order-preserving bit image
+//! (the paper's "key extractor that maps floats to integers").
+
+pub mod ips2ra;
+pub mod key_extract;
+pub mod ska_sort;
+
+pub use ips2ra::{sort_par, sort_seq};

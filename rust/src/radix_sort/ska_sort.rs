@@ -1,0 +1,132 @@
+//! SkaSort — in-place MSD byte radix sort with American-flag swap cycles
+//! (Skarupke 2016). The base case of IPS²Ra and of AIPS²o (the paper,
+//! Section 4: "SkaSort is used for the base case when there are less than
+//! 4096 elements").
+
+use crate::key::SortKey;
+use crate::radix_sort::key_extract::first_diverging_shift;
+use crate::sample_sort::base_case::small_sort;
+
+/// Below this, comparison sorting beats the byte histogram: each ska
+/// level zeroes ~8 KiB of bucket bookkeeping, which dominates on small
+/// segments (perf log, EXPERIMENTS.md §Perf). SkaSort proper uses
+/// std::sort below 128 for the same reason.
+pub const SKA_INSERTION_THRESHOLD: usize = 1024;
+
+/// In-place MSD radix sort over the order-preserving bit image.
+pub fn ska_sort<K: SortKey>(data: &mut [K]) {
+    if data.len() < 2 {
+        return;
+    }
+    // skip common prefix bytes up front
+    match first_diverging_shift(data) {
+        None => (), // all equal
+        Some(shift) => ska_rec(data, shift),
+    }
+}
+
+fn ska_rec<K: SortKey>(data: &mut [K], shift: u32) {
+    if data.len() <= SKA_INSERTION_THRESHOLD {
+        small_sort(data);
+        return;
+    }
+    // histogram of the current byte
+    let mut counts = [0usize; 256];
+    for k in data.iter() {
+        counts[((k.to_bits_ordered() >> shift) & 0xFF) as usize] += 1;
+    }
+    // bucket start/end offsets
+    let mut starts = [0usize; 256];
+    let mut ends = [0usize; 256];
+    let mut acc = 0usize;
+    for d in 0..256 {
+        starts[d] = acc;
+        acc += counts[d];
+        ends[d] = acc;
+    }
+    // American flag permutation: advance per-bucket cursors, swapping
+    // each key directly to its bucket.
+    let mut cursors = starts;
+    for d in 0..256 {
+        let mut i = cursors[d];
+        while i < ends[d] {
+            let b = ((data[i].to_bits_ordered() >> shift) & 0xFF) as usize;
+            if b == d {
+                i += 1;
+                cursors[d] = i;
+            } else {
+                data.swap(i, cursors[b]);
+                cursors[b] += 1;
+            }
+        }
+    }
+    // recurse per bucket on the next byte
+    if shift == 0 {
+        return;
+    }
+    for d in 0..256 {
+        let seg = &mut data[starts[d]..ends[d]];
+        if seg.len() > 1 {
+            // re-check divergence: lets us skip constant bytes cheaply
+            if let Some(s) = first_diverging_shift(seg) {
+                ska_rec(seg, s.min(shift - 8));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::is_sorted;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn sorts_random_u64() {
+        let mut rng = Xoshiro256pp::new(0x5CA);
+        for n in [0usize, 1, 2, 63, 64, 65, 1000, 50_000] {
+            let mut v: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let mut want = v.clone();
+            want.sort_unstable();
+            ska_sort(&mut v);
+            assert_eq!(v, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn sorts_narrow_universe() {
+        let mut rng = Xoshiro256pp::new(0x5CB);
+        let mut v: Vec<u64> = (0..30_000).map(|_| rng.next_below(7)).collect();
+        let mut want = v.clone();
+        want.sort_unstable();
+        ska_sort(&mut v);
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn sorts_common_prefix_keys() {
+        // all keys share the top 6 bytes — prefix skip must engage
+        let mut rng = Xoshiro256pp::new(0x5CC);
+        let base = 0xDEAD_BEEF_0000_0000u64;
+        let mut v: Vec<u64> = (0..20_000).map(|_| base | rng.next_below(1 << 16)).collect();
+        let mut want = v.clone();
+        want.sort_unstable();
+        ska_sort(&mut v);
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn sorts_floats() {
+        let mut rng = Xoshiro256pp::new(0x5CD);
+        let mut v: Vec<f64> = (0..25_000).map(|_| rng.normal() * 1e6).collect();
+        ska_sort(&mut v);
+        assert!(is_sorted(&v));
+    }
+
+    #[test]
+    fn all_equal_fast_path() {
+        let mut v = vec![42u64; 10_000];
+        ska_sort(&mut v);
+        assert!(v.iter().all(|&x| x == 42));
+    }
+}

@@ -1,0 +1,124 @@
+//! Closed-form simple linear regression used by both RMI levels.
+
+/// Accumulated sufficient statistics for a least-squares line fit:
+/// (count, Σx, Σy, Σxy, Σx²) — the same 5-tuple the Pallas training kernel
+/// produces per leaf.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FitStats {
+    pub cnt: f64,
+    pub sx: f64,
+    pub sy: f64,
+    pub sxy: f64,
+    pub sxx: f64,
+}
+
+impl FitStats {
+    #[inline]
+    pub fn add(&mut self, x: f64, y: f64) {
+        self.cnt += 1.0;
+        self.sx += x;
+        self.sy += y;
+        self.sxy += x * y;
+        self.sxx += x * x;
+    }
+
+    #[inline]
+    pub fn merge(&mut self, o: &FitStats) {
+        self.cnt += o.cnt;
+        self.sx += o.sx;
+        self.sy += o.sy;
+        self.sxy += o.sxy;
+        self.sxx += o.sxx;
+    }
+
+    /// Least-squares slope/intercept with the *monotone* constraint
+    /// slope >= 0 (the root and leaves of the RMI must be nondecreasing).
+    /// Degenerate inputs (fewer than 2 points, zero variance) fall back to
+    /// the constant fit (slope 0, intercept = mean y) — identical to
+    /// `ref_fit_leaves` in python/compile/kernels/ref.py.
+    pub fn fit_monotone(&self) -> (f64, f64) {
+        let denom = self.cnt * self.sxx - self.sx * self.sx;
+        let ok = self.cnt >= 2.0 && denom.abs() > 1e-30;
+        let mut a = if ok {
+            (self.cnt * self.sxy - self.sx * self.sy) / denom
+        } else {
+            0.0
+        };
+        if a < 0.0 {
+            a = 0.0;
+        }
+        let b = if self.cnt > 0.0 {
+            (self.sy - a * self.sx) / self.cnt
+        } else {
+            0.0
+        };
+        (a, b)
+    }
+}
+
+/// Fit y = a*x + b over parallel slices (monotone-constrained).
+pub fn fit_line_monotone(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    debug_assert_eq!(xs.len(), ys.len());
+    let mut st = FitStats::default();
+    for (&x, &y) in xs.iter().zip(ys) {
+        st.add(x, y);
+    }
+    st.fit_monotone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_recovered() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 2.0).collect();
+        let (a, b) = fit_line_monotone(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn negative_slope_clamped_to_constant() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [3.0, 2.0, 1.0, 0.0];
+        let (a, b) = fit_line_monotone(&xs, &ys);
+        assert_eq!(a, 0.0);
+        assert!((b - 1.5).abs() < 1e-12); // mean of ys
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let (a, b) = fit_line_monotone(&[], &[]);
+        assert_eq!((a, b), (0.0, 0.0));
+        let (a, b) = fit_line_monotone(&[5.0], &[0.25]);
+        assert_eq!(a, 0.0);
+        assert_eq!(b, 0.25);
+        // zero x-variance
+        let (a, b) = fit_line_monotone(&[2.0, 2.0, 2.0], &[0.1, 0.2, 0.3]);
+        assert_eq!(a, 0.0);
+        assert!((b - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_bulk() {
+        let xs: Vec<f64> = (0..50).map(|i| (i * 7 % 13) as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 0.5 * x + 1.0).collect();
+        let mut a = FitStats::default();
+        let mut b = FitStats::default();
+        for i in 0..xs.len() {
+            if i % 2 == 0 {
+                a.add(xs[i], ys[i]);
+            } else {
+                b.add(xs[i], ys[i]);
+            }
+        }
+        a.merge(&b);
+        let mut bulk = FitStats::default();
+        for i in 0..xs.len() {
+            bulk.add(xs[i], ys[i]);
+        }
+        assert!((a.fit_monotone().0 - bulk.fit_monotone().0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,14 @@
+//! Native RMI — the two-layer linear Recursive Model Index (substrate S7).
+//!
+//! This is the CDF model at the heart of LearnedSort and AIPS²o, mirroring
+//! `python/compile/model.py` op-for-op (the same closed-form least-squares
+//! fits, the same monotonic envelope). The JAX/Pallas implementation is the
+//! AOT-compiled reference executed through PJRT ([`crate::runtime`]); this
+//! native mirror is the in-loop hot path — see DESIGN.md §1 for why both
+//! exist, and `rust/tests/pjrt_parity.rs` for the cross-validation.
+
+pub mod linear;
+pub mod model;
+pub mod quality;
+
+pub use model::{Rmi, RmiConfig};

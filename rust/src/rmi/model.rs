@@ -1,0 +1,343 @@
+//! The two-layer linear RMI with the paper's monotonicity constraint.
+//!
+//! Model contract (shared with `python/compile/model.py`):
+//!
+//! * root: `(a1, b1)`; leaf index `i = clamp(floor((a1*x + b1) * B))`
+//! * leaf i: `(a2, b2, lo, hi)`; `F(x) = clip(a2*x + b2, lo, hi)` and then
+//!   `clip(F, 0, 1-eps)`.
+//!
+//! Monotonicity (paper Section 4): the root and leaf slopes are clamped
+//! nonnegative and each leaf's output is clamped to the cumulative
+//! empirical-CDF envelope `[lo_i, hi_i]` with `hi_i <= lo_{i+1}` — so
+//! `x <= y ⇒ F(x) <= F(y)` *globally*, which lets AIPS²o partition with the
+//! model and skip LearnedSort's insertion-sort repair pass.
+
+use crate::key::SortKey;
+use crate::rmi::linear::FitStats;
+use crate::util::rng::Xoshiro256pp;
+
+/// `F(x) < 1` strictly: bucket = floor(F*B) stays in range.
+pub const ONE_MINUS_EPS: f64 = 1.0 - 2.2204460492503131e-16; // 1 - 2^-52
+
+#[derive(Debug, Clone, Copy)]
+pub struct RmiConfig {
+    /// Number of second-level models B (paper: 1000 for LearnedSort,
+    /// 1024 for AIPS²o).
+    pub n_leaves: usize,
+}
+
+impl Default for RmiConfig {
+    fn default() -> Self {
+        RmiConfig { n_leaves: 1024 }
+    }
+}
+
+/// One second-level linear model with its monotonic envelope.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Leaf {
+    pub a: f64,
+    pub b: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+/// Trained two-layer RMI.
+#[derive(Debug, Clone)]
+pub struct Rmi {
+    pub root_a: f64,
+    pub root_b: f64,
+    pub leaves: Vec<Leaf>,
+}
+
+impl Rmi {
+    /// Train from a **sorted** sample (duplicates allowed). Mirrors
+    /// `model.rmi_train` in the JAX layer: same root fit, same per-leaf
+    /// sufficient statistics, same envelope.
+    pub fn train(sample_sorted: &[f64], cfg: RmiConfig) -> Rmi {
+        let n = sample_sorted.len();
+        let n_leaves = cfg.n_leaves.max(1);
+        // Root fit over (x_j, y_j = (j + 0.5)/n).
+        let mut root_stats = FitStats::default();
+        for (j, &x) in sample_sorted.iter().enumerate() {
+            let y = (j as f64 + 0.5) / n.max(1) as f64;
+            root_stats.add(x, y);
+        }
+        let (root_a, root_b) = root_stats.fit_monotone();
+
+        // Per-leaf sufficient statistics (the Pallas kernel's job in L1).
+        let mut stats = vec![FitStats::default(); n_leaves];
+        for (j, &x) in sample_sorted.iter().enumerate() {
+            let y = (j as f64 + 0.5) / n.max(1) as f64;
+            let i = leaf_index(root_a, root_b, n_leaves, x);
+            stats[i].add(x, y);
+        }
+
+        // Closed-form leaf fits + cumulative envelope (= ref_fit_leaves).
+        let total: f64 = stats.iter().map(|s| s.cnt).sum::<f64>().max(1.0);
+        let mut leaves = Vec::with_capacity(n_leaves);
+        let mut cum = 0.0;
+        for s in &stats {
+            let (a, b) = s.fit_monotone();
+            let lo = cum / total;
+            cum += s.cnt;
+            let hi = cum / total;
+            leaves.push(Leaf { a, b, lo, hi });
+        }
+        Rmi {
+            root_a,
+            root_b,
+            leaves,
+        }
+    }
+
+    /// Build by drawing and sorting a random sample from `keys` (the paper's
+    /// training procedure: sample, sort the sample, fit).
+    pub fn train_from_keys<K: SortKey>(
+        keys: &[K],
+        sample_size: usize,
+        cfg: RmiConfig,
+        rng: &mut Xoshiro256pp,
+    ) -> Rmi {
+        let mut sample = Vec::new();
+        sample_f64(keys, sample_size, rng, &mut sample);
+        sample.sort_unstable_by(f64::total_cmp);
+        Rmi::train(&sample, cfg)
+    }
+
+    /// Construct directly from raw parameter arrays (as returned by the
+    /// PJRT `rmi_train` artifact: root f64[2], leaf f64[B,4] row-major).
+    pub fn from_params(root: &[f64], leaf_rows: &[f64]) -> Rmi {
+        assert_eq!(root.len(), 2);
+        assert_eq!(leaf_rows.len() % 4, 0);
+        let leaves = leaf_rows
+            .chunks_exact(4)
+            .map(|r| Leaf {
+                a: r[0],
+                b: r[1],
+                lo: r[2],
+                hi: r[3],
+            })
+            .collect();
+        Rmi {
+            root_a: root[0],
+            root_b: root[1],
+            leaves,
+        }
+    }
+
+    /// Flatten to (root[2], leaf[B*4]) — the artifact parameter layout.
+    pub fn to_params(&self) -> (Vec<f64>, Vec<f64>) {
+        let root = vec![self.root_a, self.root_b];
+        let mut leaf = Vec::with_capacity(self.leaves.len() * 4);
+        for l in &self.leaves {
+            leaf.extend_from_slice(&[l.a, l.b, l.lo, l.hi]);
+        }
+        (root, leaf)
+    }
+
+    #[inline(always)]
+    pub fn n_leaves(&self) -> usize {
+        self.leaves.len()
+    }
+
+    /// Predicted CDF in [0, 1). The hot-path: 2 FMAs + 2 clamps + 1 load.
+    #[inline(always)]
+    pub fn predict(&self, x: f64) -> f64 {
+        // ±inf inputs would turn a degenerate (slope 0) leaf into NaN via
+        // 0*inf; clamping to the finite range keeps F total and monotone.
+        let x = x.clamp(f64::MIN, f64::MAX);
+        let i = leaf_index(self.root_a, self.root_b, self.leaves.len(), x);
+        // SAFETY: leaf_index clamps into 0..n_leaves.
+        let l = unsafe { self.leaves.get_unchecked(i) };
+        // branchless clamps (maxsd/minsd) — the hot loop must not depend
+        // on data-dependent branches (perf log, EXPERIMENTS.md §Perf)
+        let p = (l.a * x + l.b).max(l.lo).min(l.hi);
+        p.max(0.0).min(ONE_MINUS_EPS)
+    }
+
+    /// Bucket index for a `n_buckets`-way partition: floor(F(x) * n_buckets).
+    #[inline(always)]
+    pub fn bucket(&self, x: f64, n_buckets: usize) -> usize {
+        let b = (self.predict(x) * n_buckets as f64) as usize;
+        if b >= n_buckets {
+            n_buckets - 1
+        } else {
+            b
+        }
+    }
+
+    /// True iff predictions are nondecreasing over `probe` (diagnostic;
+    /// the construction guarantees it, tests verify).
+    pub fn is_monotone_over(&self, probe_sorted: &[f64]) -> bool {
+        let mut prev = f64::NEG_INFINITY;
+        for &x in probe_sorted {
+            let p = self.predict(x);
+            if p < prev {
+                return false;
+            }
+            prev = p;
+        }
+        true
+    }
+}
+
+/// Root-level leaf selection: clamp(floor((a1*x + b1) * B), 0, B-1).
+#[inline(always)]
+pub fn leaf_index(root_a: f64, root_b: f64, n_leaves: usize, x: f64) -> usize {
+    let pos = (root_a * x + root_b) * n_leaves as f64;
+    // cast saturates toward 0 for NaN/negative; clamp the top explicitly
+    let i = pos as usize; // f64->usize casts are saturating in Rust
+    if i >= n_leaves {
+        n_leaves - 1
+    } else {
+        i
+    }
+}
+
+/// Draw `k` keys (as f64 model embeddings) without replacement.
+pub fn sample_f64<K: SortKey>(
+    keys: &[K],
+    k: usize,
+    rng: &mut Xoshiro256pp,
+    out: &mut Vec<f64>,
+) {
+    out.clear();
+    if keys.is_empty() || k == 0 {
+        return;
+    }
+    if k >= keys.len() {
+        out.extend(keys.iter().map(|x| x.to_f64()));
+        return;
+    }
+    // Random index draws (with replacement) — what LearnedSort does; cheap
+    // and unbiased enough at 1% sampling rates.
+    out.reserve(k);
+    for _ in 0..k {
+        let i = rng.next_below(keys.len() as u64) as usize;
+        out.push(keys[i].to_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_sample(n: usize) -> Vec<f64> {
+        let mut rng = Xoshiro256pp::new(1);
+        let mut v: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1e6)).collect();
+        v.sort_unstable_by(f64::total_cmp);
+        v
+    }
+
+    #[test]
+    fn uniform_cdf_accurate() {
+        let sample = uniform_sample(8192);
+        let rmi = Rmi::train(&sample, RmiConfig { n_leaves: 256 });
+        // mean |F(x) - x/1e6| small on uniform
+        let mut err = 0.0;
+        let mut cnt = 0;
+        for i in 0..1000 {
+            let x = i as f64 * 1e3;
+            err += (rmi.predict(x) - x / 1e6).abs();
+            cnt += 1;
+        }
+        assert!(err / (cnt as f64) < 0.01, "err={}", err / cnt as f64);
+    }
+
+    #[test]
+    fn monotone_guarantee() {
+        for dist in 0..3 {
+            let mut rng = Xoshiro256pp::new(100 + dist);
+            let mut sample: Vec<f64> = (0..4096)
+                .map(|_| match dist {
+                    0 => rng.lognormal(0.0, 0.5),
+                    1 => rng.normal(),
+                    _ => (rng.next_below(50)) as f64, // heavy duplicates
+                })
+                .collect();
+            sample.sort_unstable_by(f64::total_cmp);
+            let rmi = Rmi::train(&sample, RmiConfig { n_leaves: 128 });
+            let mut probe: Vec<f64> = (0..8192)
+                .map(|_| match dist {
+                    0 => rng.lognormal(0.0, 0.5),
+                    1 => rng.normal(),
+                    _ => (rng.next_below(50)) as f64,
+                })
+                .collect();
+            probe.sort_unstable_by(f64::total_cmp);
+            assert!(rmi.is_monotone_over(&probe), "dist {dist} not monotone");
+        }
+    }
+
+    #[test]
+    fn predictions_in_range() {
+        let sample = uniform_sample(1024);
+        let rmi = Rmi::train(&sample, RmiConfig { n_leaves: 64 });
+        for x in [-1e300, -5.0, 0.0, 5e5, 2e6, 1e300, f64::INFINITY] {
+            let p = rmi.predict(x);
+            assert!((0.0..1.0).contains(&p), "predict({x}) = {p}");
+        }
+        for x in [-1e9, 0.0, 1e9] {
+            let b = rmi.bucket(x, 1000);
+            assert!(b < 1000);
+        }
+    }
+
+    #[test]
+    fn constant_input_degenerates_gracefully() {
+        let sample = vec![7.0; 512];
+        let rmi = Rmi::train(&sample, RmiConfig { n_leaves: 16 });
+        let p = rmi.predict(7.0);
+        assert!((0.0..1.0).contains(&p));
+        assert!(rmi.predict(6.0) <= rmi.predict(8.0));
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let sample = uniform_sample(2048);
+        let rmi = Rmi::train(&sample, RmiConfig { n_leaves: 32 });
+        let (root, leaf) = rmi.to_params();
+        let back = Rmi::from_params(&root, &leaf);
+        for x in [0.0, 1e5, 9e5] {
+            assert_eq!(rmi.predict(x), back.predict(x));
+        }
+    }
+
+    #[test]
+    fn envelope_tiles_unit_interval() {
+        let sample = uniform_sample(4096);
+        let rmi = Rmi::train(&sample, RmiConfig { n_leaves: 64 });
+        for w in rmi.leaves.windows(2) {
+            assert!(w[0].hi <= w[1].lo + 1e-15);
+            assert!(w[0].lo <= w[0].hi + 1e-15);
+        }
+        assert!(rmi.leaves[0].lo.abs() < 1e-15);
+        assert!((rmi.leaves.last().unwrap().hi - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn leaf_index_clamps() {
+        assert_eq!(leaf_index(1.0, 0.0, 10, -5.0), 0);
+        assert_eq!(leaf_index(1.0, 0.0, 10, 50.0), 9);
+        assert_eq!(leaf_index(1.0, 0.0, 10, 0.55), 5);
+        assert_eq!(leaf_index(f64::NAN, 0.0, 10, 1.0), 0); // NaN -> 0 cast
+    }
+
+    #[test]
+    fn train_from_keys_u64() {
+        let mut rng = Xoshiro256pp::new(3);
+        let keys: Vec<u64> = (0..10_000).map(|_| rng.next_below(1 << 40)).collect();
+        let rmi = Rmi::train_from_keys(&keys, 512, RmiConfig { n_leaves: 64 }, &mut rng);
+        assert_eq!(rmi.n_leaves(), 64);
+        let p_small = rmi.predict(0.0);
+        let p_big = rmi.predict((1u64 << 40) as f64);
+        assert!(p_small <= p_big);
+    }
+
+    #[test]
+    fn empty_sample_is_safe() {
+        let rmi = Rmi::train(&[], RmiConfig { n_leaves: 8 });
+        let p = rmi.predict(1.0);
+        assert!((0.0..1.0).contains(&p));
+    }
+}

@@ -1,0 +1,170 @@
+//! Pivot extraction and quality measurement — paper Algorithm 4 + Table 2.
+//!
+//! Algorithm 4 ("LearnedPivotsForSampleSort") materializes the pivots that
+//! LearnedSort uses *implicitly*: for each percentile (i+1)/B, the largest
+//! element of A whose predicted CDF is below it. Table 2 scores pivot sets
+//! by the distance between the pivots' true CDF and the perfect splitters:
+//! `sum_i |P(A <= p_i) - (i+1)/B|`.
+
+use crate::key::SortKey;
+use crate::rmi::model::Rmi;
+use crate::util::rng::Xoshiro256pp;
+
+/// Paper Algorithm 4: extract the B-1 implicit pivots of LearnedSort.
+///
+/// Single O(N + B) pass instead of the paper's O(N·B) pseudocode loop: for
+/// each element we bump the per-percentile maximum of its predicted-CDF
+/// cell, then prefix-max across cells (valid because "largest element with
+/// F(x) <= (i+1)/B" is monotone in i).
+pub fn learned_pivots<K: SortKey>(rmi: &Rmi, keys: &[K], n_buckets: usize) -> Vec<Option<K>> {
+    assert!(n_buckets >= 2);
+    let mut cell_max: Vec<Option<K>> = vec![None; n_buckets];
+    for &k in keys {
+        let f = rmi.predict(k.to_f64());
+        let cell = ((f * n_buckets as f64) as usize).min(n_buckets - 1);
+        cell_max[cell] = Some(match cell_max[cell] {
+            None => k,
+            Some(m) => m.key_max(k),
+        });
+    }
+    // pivot_i = max over cells <= i (largest element with F below the
+    // (i+1)/B percentile); B-1 pivots for B buckets.
+    let mut out = Vec::with_capacity(n_buckets - 1);
+    let mut running: Option<K> = None;
+    for cell in cell_max.iter().take(n_buckets - 1) {
+        running = match (running, *cell) {
+            (None, c) => c,
+            (Some(r), None) => Some(r),
+            (Some(r), Some(c)) => Some(r.key_max(c)),
+        };
+        out.push(running);
+    }
+    out
+}
+
+/// Random pivots the way IPS⁴o selects splitters: draw `oversample *
+/// (n_pivots+1)` random elements, sort them, take every `oversample`-th.
+pub fn random_pivots<K: SortKey>(
+    keys: &[K],
+    n_pivots: usize,
+    oversample: usize,
+    rng: &mut Xoshiro256pp,
+) -> Vec<K> {
+    assert!(!keys.is_empty());
+    let m = oversample.max(1) * (n_pivots + 1);
+    let mut sample: Vec<K> = (0..m)
+        .map(|_| keys[rng.next_below(keys.len() as u64) as usize])
+        .collect();
+    sample.sort_unstable_by(|a, b| a.to_bits_ordered().cmp(&b.to_bits_ordered()));
+    (1..=n_pivots)
+        .map(|i| sample[i * oversample.max(1) - 1])
+        .collect()
+}
+
+/// True CDF of `p` in `sorted`: (# elements <= p) / N, via binary search.
+pub fn true_cdf<K: SortKey>(sorted: &[K], p: K) -> f64 {
+    let pb = p.to_bits_ordered();
+    let count = sorted.partition_point(|x| x.to_bits_ordered() <= pb);
+    count as f64 / sorted.len().max(1) as f64
+}
+
+/// Table 2's quality metric: `sum_i |P(A <= p_i) - (i+1)/B|`.
+/// Lower is better; 0 means perfect equidistant splitters.
+pub fn pivot_quality<K: SortKey>(sorted: &[K], pivots: &[Option<K>]) -> f64 {
+    let b = pivots.len() + 1;
+    pivots
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let target = (i + 1) as f64 / b as f64;
+            match p {
+                Some(p) => (true_cdf(sorted, *p) - target).abs(),
+                // a missing pivot (empty prediction cell) acts like the
+                // smallest element: true CDF contribution 0
+                None => target,
+            }
+        })
+        .sum()
+}
+
+/// Convenience for pivot sets without gaps.
+pub fn pivot_quality_exact<K: SortKey>(sorted: &[K], pivots: &[K]) -> f64 {
+    let wrapped: Vec<Option<K>> = pivots.iter().map(|&p| Some(p)).collect();
+    pivot_quality(sorted, &wrapped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmi::model::RmiConfig;
+
+    #[test]
+    fn perfect_pivots_score_zero() {
+        // sorted 0..1000, perfect splitters for B=4 are 249, 499, 749
+        let sorted: Vec<u64> = (0..1000).collect();
+        let pivots = vec![249u64, 499, 749];
+        let q = pivot_quality_exact(&sorted, &pivots);
+        assert!(q < 1e-9, "q={q}");
+    }
+
+    #[test]
+    fn bad_pivots_score_high() {
+        let sorted: Vec<u64> = (0..1000).collect();
+        // all pivots at the minimum — worst case
+        let pivots = vec![0u64, 0, 0];
+        let q = pivot_quality_exact(&sorted, &pivots);
+        // |0.001-0.25| + |0.001-0.5| + |0.001-0.75| ≈ 1.497
+        assert!(q > 1.4, "q={q}");
+    }
+
+    #[test]
+    fn true_cdf_counts_leq() {
+        let sorted = vec![1u64, 2, 2, 3];
+        assert_eq!(true_cdf(&sorted, 2u64), 0.75);
+        assert_eq!(true_cdf(&sorted, 0u64), 0.0);
+        assert_eq!(true_cdf(&sorted, 3u64), 1.0);
+    }
+
+    #[test]
+    fn learned_pivots_beat_worst_case_on_uniform() {
+        let mut rng = Xoshiro256pp::new(5);
+        let keys: Vec<f64> = (0..100_000).map(|_| rng.uniform(0.0, 1e6)).collect();
+        let rmi = Rmi::train_from_keys(&keys, 2048, RmiConfig { n_leaves: 256 }, &mut rng);
+        let pivots = learned_pivots(&rmi, &keys, 256);
+        assert_eq!(pivots.len(), 255);
+        let mut sorted = keys.clone();
+        sorted.sort_unstable_by(f64::total_cmp);
+        let q_learned = pivot_quality(&sorted, &pivots);
+        let rp = random_pivots(&keys, 255, 2, &mut rng);
+        let q_random = pivot_quality_exact(&sorted, &rp);
+        // Table 2's headline: learned pivots clearly better on uniform
+        assert!(
+            q_learned < q_random,
+            "learned {q_learned} !< random {q_random}"
+        );
+        assert!(q_learned < 2.0);
+    }
+
+    #[test]
+    fn random_pivots_are_sorted_and_in_range() {
+        let mut rng = Xoshiro256pp::new(7);
+        let keys: Vec<u64> = (0..10_000).map(|_| rng.next_below(1 << 32)).collect();
+        let p = random_pivots(&keys, 15, 3, &mut rng);
+        assert_eq!(p.len(), 15);
+        for w in p.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn learned_pivots_nondecreasing() {
+        let mut rng = Xoshiro256pp::new(9);
+        let keys: Vec<f64> = (0..50_000).map(|_| rng.lognormal(0.0, 0.5)).collect();
+        let rmi = Rmi::train_from_keys(&keys, 1024, RmiConfig { n_leaves: 128 }, &mut rng);
+        let pivots = learned_pivots(&rmi, &keys, 64);
+        let present: Vec<f64> = pivots.iter().flatten().copied().collect();
+        for w in present.windows(2) {
+            assert!(w[0] <= w[1], "pivots must be nondecreasing");
+        }
+    }
+}

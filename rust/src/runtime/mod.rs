@@ -1,0 +1,216 @@
+//! PJRT artifact runtime (substrate S9): loads the AOT-compiled JAX/Pallas
+//! RMI (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
+//! it on the XLA CPU client from Rust. Python never runs at sort time.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProto with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! The runtime is the training/inference *reference* path; the native
+//! mirror in [`crate::rmi`] is the per-key hot path. `rust/tests/
+//! pjrt_parity.rs` pins the two together numerically, and the
+//! `ablation_pjrt_vs_native` bench quantifies the FFI + batching overhead.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::rmi::model::Rmi;
+use crate::util::json::Json;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub train_sample: usize,
+    pub predict_batch: usize,
+    pub n_leaves: usize,
+    pub train_file: PathBuf,
+    pub predict_file: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let functions = j.get("functions").context("manifest missing functions")?;
+        let file_of = |name: &str| -> Result<PathBuf> {
+            Ok(dir.join(
+                functions
+                    .get(name)
+                    .and_then(|f| f.get("file"))
+                    .and_then(|f| f.as_str())
+                    .with_context(|| format!("manifest missing functions.{name}.file"))?,
+            ))
+        };
+        Ok(Manifest {
+            train_sample: j
+                .get("train_sample")
+                .and_then(|v| v.as_usize())
+                .context("manifest missing train_sample")?,
+            predict_batch: j
+                .get("predict_batch")
+                .and_then(|v| v.as_usize())
+                .context("manifest missing predict_batch")?,
+            n_leaves: j
+                .get("n_leaves")
+                .and_then(|v| v.as_usize())
+                .context("manifest missing n_leaves")?,
+            train_file: file_of("rmi_train")?,
+            predict_file: file_of("rmi_predict")?,
+        })
+    }
+}
+
+/// Default artifact directory: `$AIPSO_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("AIPSO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// The loaded XLA executables for the RMI model.
+pub struct RmiRuntime {
+    manifest: Manifest,
+    train_exe: xla::PjRtLoadedExecutable,
+    predict_exe: xla::PjRtLoadedExecutable,
+}
+
+impl RmiRuntime {
+    /// Load + compile both artifacts on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<RmiRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |path: &Path| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let train_exe = compile(&manifest.train_file)?;
+        let predict_exe = compile(&manifest.predict_file)?;
+        Ok(RmiRuntime {
+            manifest,
+            train_exe,
+            predict_exe,
+        })
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<RmiRuntime> {
+        Self::load(&default_artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Train the RMI through the XLA `rmi_train` artifact.
+    ///
+    /// The artifact is static-shaped (`train_sample` keys); other sample
+    /// sizes are resampled by linear index stretching, which preserves
+    /// sortedness and the empirical distribution.
+    pub fn train(&self, sorted_sample: &[f64]) -> Result<Rmi> {
+        if sorted_sample.is_empty() {
+            bail!("cannot train on an empty sample");
+        }
+        let m = self.manifest.train_sample;
+        let fitted: Vec<f64> = if sorted_sample.len() == m {
+            sorted_sample.to_vec()
+        } else {
+            (0..m)
+                .map(|i| sorted_sample[i * sorted_sample.len() / m])
+                .collect()
+        };
+        let input = xla::Literal::vec1(&fitted);
+        let result = self.train_exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()?;
+        let (root_lit, leaf_lit) = result.to_tuple2()?;
+        let root = root_lit.to_vec::<f64>()?;
+        let leaf = leaf_lit.to_vec::<f64>()?;
+        if leaf.len() != self.manifest.n_leaves * 4 {
+            bail!(
+                "artifact returned {} leaf params, expected {}",
+                leaf.len(),
+                self.manifest.n_leaves * 4
+            );
+        }
+        Ok(Rmi::from_params(&root, &leaf))
+    }
+
+    /// Predict CDF values through the XLA `rmi_predict` artifact, chunking
+    /// and padding to the artifact's static batch size.
+    pub fn predict(&self, keys: &[f64], rmi: &Rmi) -> Result<Vec<f64>> {
+        let batch = self.manifest.predict_batch;
+        let (root, leaf) = rmi.to_params();
+        if leaf.len() != self.manifest.n_leaves * 4 {
+            bail!(
+                "model has {} leaves, artifact expects {}",
+                leaf.len() / 4,
+                self.manifest.n_leaves
+            );
+        }
+        let root_lit = xla::Literal::vec1(&root);
+        let leaf_lit =
+            xla::Literal::vec1(&leaf).reshape(&[self.manifest.n_leaves as i64, 4])?;
+        let mut out = Vec::with_capacity(keys.len());
+        let mut padded = vec![0.0f64; batch];
+        for chunk in keys.chunks(batch) {
+            let lit = if chunk.len() == batch {
+                xla::Literal::vec1(chunk)
+            } else {
+                padded[..chunk.len()].copy_from_slice(chunk);
+                for p in padded[chunk.len()..].iter_mut() {
+                    *p = 0.0;
+                }
+                xla::Literal::vec1(&padded)
+            };
+            let result = self
+                .predict_exe
+                .execute::<xla::Literal>(&[lit, root_lit.clone(), leaf_lit.clone()])?[0][0]
+                .to_literal_sync()?;
+            let cdf = result.to_tuple1()?.to_vec::<f64>()?;
+            out.extend_from_slice(&cdf[..chunk.len()]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full runtime tests (artifact load + execute + parity with the native
+    // RMI) live in rust/tests/pjrt_parity.rs since they need `make
+    // artifacts` to have run. Here: manifest-level units.
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("aipso_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"train_sample": 16384, "predict_batch": 65536, "n_leaves": 1024,
+                "functions": {"rmi_train": {"file": "t.hlo.txt"},
+                              "rmi_predict": {"file": "p.hlo.txt"}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.train_sample, 16384);
+        assert_eq!(m.predict_batch, 65536);
+        assert_eq!(m.n_leaves, 1024);
+        assert!(m.train_file.ends_with("t.hlo.txt"));
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        let err = Manifest::load(Path::new("/nonexistent/nowhere")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        let d = default_artifacts_dir();
+        assert!(d.ends_with("artifacts") || d.is_absolute());
+    }
+}

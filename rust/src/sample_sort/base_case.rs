@@ -1,0 +1,194 @@
+//! Base-case sorters (substrate S6): insertion sort, heapsort and a
+//! median-of-3 introsort used below the partitioning thresholds.
+
+use crate::key::SortKey;
+
+/// Insertion sort — the paper's base case for Quicksort/LearnedSort, and
+/// the repair pass of LearnedSort (cheap on almost-sorted input).
+pub fn insertion_sort<K: SortKey>(data: &mut [K]) {
+    for i in 1..data.len() {
+        let x = data[i];
+        let xb = x.to_bits_ordered();
+        let mut j = i;
+        while j > 0 && data[j - 1].to_bits_ordered() > xb {
+            data[j] = data[j - 1];
+            j -= 1;
+        }
+        data[j] = x;
+    }
+}
+
+/// Bottom-up heapsort — the IntroSort fallback guaranteeing O(N log N)
+/// whatever the pivots do (Musser '97; paper Section 2.3).
+pub fn heapsort<K: SortKey>(data: &mut [K]) {
+    let n = data.len();
+    if n < 2 {
+        return;
+    }
+    for i in (0..n / 2).rev() {
+        sift_down(data, i, n);
+    }
+    for end in (1..n).rev() {
+        data.swap(0, end);
+        sift_down(data, 0, end);
+    }
+}
+
+fn sift_down<K: SortKey>(data: &mut [K], mut root: usize, end: usize) {
+    loop {
+        let mut child = 2 * root + 1;
+        if child >= end {
+            return;
+        }
+        if child + 1 < end && data[child].to_bits_ordered() < data[child + 1].to_bits_ordered() {
+            child += 1;
+        }
+        if data[root].to_bits_ordered() >= data[child].to_bits_ordered() {
+            return;
+        }
+        data.swap(root, child);
+        root = child;
+    }
+}
+
+/// Threshold below which introsort switches to insertion sort.
+pub const INSERTION_THRESHOLD: usize = 24;
+
+/// The engines' small-input sorter. Delegates to the stdlib pdqsort over
+/// the order-preserving bit image — the same algorithm the paper cites as
+/// the Rust stdlib unstable sort (Section 2.3), and ~1.7x faster than our
+/// own introsort at base-case sizes (perf log, EXPERIMENTS.md §Perf).
+/// [`introsort`] below remains as the dependency-free reference.
+#[inline]
+pub fn small_sort<K: SortKey>(data: &mut [K]) {
+    data.sort_unstable_by_key(|k| k.to_bits_ordered());
+}
+
+/// Median-of-3 introsort: quicksort with a depth limit falling back to
+/// heapsort, insertion sort at the bottom.
+pub fn introsort<K: SortKey>(data: &mut [K]) {
+    let n = data.len();
+    if n < 2 {
+        return;
+    }
+    let depth_limit = 2 * (usize::BITS - n.leading_zeros()) as usize;
+    introsort_rec(data, depth_limit);
+}
+
+fn introsort_rec<K: SortKey>(data: &mut [K], depth: usize) {
+    let n = data.len();
+    if n <= INSERTION_THRESHOLD {
+        insertion_sort(data);
+        return;
+    }
+    if depth == 0 {
+        heapsort(data);
+        return;
+    }
+    let p = partition_mo3(data);
+    let (lo, hi) = data.split_at_mut(p);
+    introsort_rec(lo, depth - 1);
+    introsort_rec(&mut hi[1..], depth - 1);
+}
+
+/// Hoare-style partition around the median of first/middle/last.
+/// Returns the final pivot index; equal keys split between sides.
+fn partition_mo3<K: SortKey>(data: &mut [K]) -> usize {
+    let n = data.len();
+    let mid = n / 2;
+    // median of three into data[0]
+    if data[mid].to_bits_ordered() < data[0].to_bits_ordered() {
+        data.swap(mid, 0);
+    }
+    if data[n - 1].to_bits_ordered() < data[0].to_bits_ordered() {
+        data.swap(n - 1, 0);
+    }
+    if data[n - 1].to_bits_ordered() < data[mid].to_bits_ordered() {
+        data.swap(n - 1, mid);
+    }
+    data.swap(0, mid); // pivot to front
+    let pivot = data[0].to_bits_ordered();
+    // Lomuto-with-swaps
+    let mut i = 1usize;
+    for j in 1..n {
+        if data[j].to_bits_ordered() < pivot {
+            data.swap(i, j);
+            i += 1;
+        }
+    }
+    data.swap(0, i - 1);
+    i - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn check_sorts(f: fn(&mut [u64])) {
+        let mut rng = Xoshiro256pp::new(0xBA5E);
+        for n in [0usize, 1, 2, 3, 10, 24, 25, 100, 1000, 4097] {
+            let mut v: Vec<u64> = (0..n as u64).map(|_| rng.next_below(1000)).collect();
+            let mut want = v.clone();
+            want.sort_unstable();
+            f(&mut v);
+            assert_eq!(v, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn insertion_sorts() {
+        check_sorts(insertion_sort::<u64>);
+    }
+
+    #[test]
+    fn heapsort_sorts() {
+        check_sorts(heapsort::<u64>);
+    }
+
+    #[test]
+    fn introsort_sorts() {
+        check_sorts(introsort::<u64>);
+    }
+
+    #[test]
+    fn small_sort_sorts() {
+        check_sorts(small_sort::<u64>);
+    }
+
+    #[test]
+    fn sorts_floats_with_negatives() {
+        let mut rng = Xoshiro256pp::new(0xF10A7);
+        let mut v: Vec<f64> = (0..5000).map(|_| rng.normal() * 100.0).collect();
+        v.push(-0.0);
+        v.push(0.0);
+        let mut want = v.clone();
+        want.sort_unstable_by(f64::total_cmp);
+        small_sort(&mut v);
+        assert_eq!(
+            v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn adversarial_patterns() {
+        for n in [100usize, 1000] {
+            // already sorted, reversed, all-equal, organ pipe
+            let mut cases: Vec<Vec<u64>> = vec![
+                (0..n as u64).collect(),
+                (0..n as u64).rev().collect(),
+                vec![7; n],
+            ];
+            let mut pipe: Vec<u64> = (0..n as u64 / 2).collect();
+            pipe.extend((0..n as u64 / 2).rev());
+            cases.push(pipe);
+            for mut v in cases {
+                let mut want = v.clone();
+                want.sort_unstable();
+                small_sort(&mut v);
+                assert_eq!(v, want);
+            }
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Tuning knobs for the SampleSort family (defaults follow IPS⁴o's
+//! published constants, scaled for 8-byte keys).
+
+#[derive(Debug, Clone, Copy)]
+pub struct SampleSortConfig {
+    /// Base fan-out k (buckets before equality doubling). IPS⁴o: 256.
+    pub buckets: usize,
+    /// Keys per block / per bucket buffer. IPS⁴o uses 2 KiB blocks for
+    /// 8-byte keys (256 keys); 128 keeps k·block buffers cache-friendly.
+    pub block: usize,
+    /// Below this, use the base-case sorter instead of partitioning.
+    pub base_case: usize,
+    /// Oversampling factor: sample = oversample * buckets keys.
+    pub oversample: usize,
+    /// Recursion depth limit before the heapsort fallback (IntroSort
+    /// safety net; IPS⁴o relies on equality buckets instead, we keep both).
+    pub max_depth: usize,
+}
+
+impl Default for SampleSortConfig {
+    fn default() -> Self {
+        SampleSortConfig {
+            buckets: 256,
+            block: 128,
+            base_case: 1024,
+            oversample: 8,
+            max_depth: 12,
+        }
+    }
+}
+
+impl SampleSortConfig {
+    /// Fan-out for an input of n keys: the configured k, shrunk so buckets
+    /// land near `base_case` size. Without this, small sub-problems pay
+    /// full-k sampling + buffer setup — the dominant overhead at depth > 1
+    /// (perf log, EXPERIMENTS.md §Perf).
+    pub fn effective_buckets(&self, n: usize) -> usize {
+        let want = (n / self.base_case).max(2).next_power_of_two();
+        want.min(self.buckets).max(2)
+    }
+
+    /// Sample size for an input of n keys at fan-out k.
+    pub fn sample_size_for(&self, n: usize, k: usize) -> usize {
+        (self.oversample * k).min(n.max(1))
+    }
+
+    /// Sample size at the full configured fan-out (top level).
+    pub fn sample_size(&self, n: usize) -> usize {
+        self.sample_size_for(n, self.effective_buckets(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = SampleSortConfig::default();
+        assert!(c.buckets.is_power_of_two());
+        assert!(c.base_case >= 2 * c.block);
+        assert_eq!(c.sample_size(10), 10);
+        assert_eq!(c.sample_size(1 << 20), 8 * 256);
+    }
+}

@@ -1,0 +1,232 @@
+//! IPS⁴o — In-place Parallel Super Scalar SampleSort (engine E1), after
+//! Axtmann, Witt, Ferizovic & Sanders, "Engineering In-Place
+//! (Shared-Memory) Sorting Algorithms", ACM TOPC 2022.
+//!
+//! Pipeline per recursion step: draw an oversampled random sample, build
+//! the branchless splitter [`DecisionTree`] (equality buckets switch on
+//! when the sample shows duplicates), run the three-phase in-place block
+//! [`partition`], then recurse into non-equality buckets. Small inputs go
+//! to the introsort base case; a depth limit guards the (sample-unlucky)
+//! worst case with heapsort.
+//!
+//! The parallel driver partitions the top level cooperatively (all threads
+//! classify + permute together), then feeds buckets to the task-pool
+//! scheduler; large sub-buckets re-partition and spawn their children as
+//! new tasks.
+
+pub mod base_case;
+pub mod config;
+pub mod partition;
+
+pub use config::SampleSortConfig;
+pub use partition::{partition, PartitionResult};
+
+use crate::classifier::decision_tree::DecisionTree;
+use crate::classifier::Classifier;
+use crate::key::SortKey;
+use crate::scheduler::run_task_pool;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::timer::{phase_scope, Phase};
+
+/// Sort sequentially with default config (paper name: I1S⁴o).
+pub fn sort_seq<K: SortKey>(data: &mut [K]) {
+    sort_seq_cfg(data, &SampleSortConfig::default());
+}
+
+pub fn sort_seq_cfg<K: SortKey>(data: &mut [K], cfg: &SampleSortConfig) {
+    let mut rng = Xoshiro256pp::new(0x1B54_0001 ^ data.len() as u64);
+    sort_rec(data, cfg, cfg.max_depth, &mut rng, 1);
+}
+
+/// Sort with `threads` workers (paper name: IPS⁴o).
+pub fn sort_par<K: SortKey>(data: &mut [K], threads: usize) {
+    sort_par_cfg(data, threads, &SampleSortConfig::default());
+}
+
+pub fn sort_par_cfg<K: SortKey>(data: &mut [K], threads: usize, cfg: &SampleSortConfig) {
+    let threads = threads.max(1);
+    let n = data.len();
+    if threads == 1 || n <= cfg.base_case.max(4 * cfg.block * threads) {
+        return sort_seq_cfg(data, cfg);
+    }
+    let mut rng = Xoshiro256pp::new(0x1B54_0002 ^ n as u64);
+    // Top level: cooperative partition by all threads.
+    let Some(tree) = build_tree(data, cfg, &mut rng) else {
+        // degenerate sample (all keys equal) — nothing to sort
+        return;
+    };
+    let result = partition(data, &tree, cfg.block, threads);
+
+    // Sub-buckets become tasks; each task sorts its range sequentially but
+    // may spawn its own sub-buckets when it re-partitions (depth-first
+    // LIFO pool = IPS⁴o's sub-problem scheduler).
+    let base = data.as_mut_ptr() as usize;
+    let cfg = *cfg;
+    let mut tasks: Vec<(usize, usize, usize)> = Vec::new(); // (offset, len, depth)
+    for b in 0..tree.num_buckets() {
+        let (lo, hi) = (result.boundaries[b], result.boundaries[b + 1]);
+        if hi - lo > 1 && !tree.is_equality_bucket(b) {
+            tasks.push((lo, hi - lo, cfg.max_depth - 1));
+        }
+    }
+    run_task_pool(threads, tasks, move |(off, len, depth), spawner| {
+        // SAFETY: task ranges are disjoint sub-ranges of `data`, produced
+        // only by partition boundaries.
+        let sub = unsafe { std::slice::from_raw_parts_mut((base as *mut K).add(off), len) };
+        if len <= cfg.base_case || depth == 0 {
+            let _g = phase_scope(Phase::BaseCase);
+            if depth == 0 {
+                base_case::heapsort(sub);
+            } else {
+                base_case::small_sort(sub);
+            }
+            return;
+        }
+        let mut rng = Xoshiro256pp::stream(0x1B54_0003, off as u64);
+        let Some(tree) = build_tree(sub, &cfg, &mut rng) else {
+            return;
+        };
+        let res = partition(sub, &tree, cfg.block, 1);
+        for b in 0..tree.num_buckets() {
+            let (lo, hi) = (res.boundaries[b], res.boundaries[b + 1]);
+            if hi - lo > 1 && !tree.is_equality_bucket(b) {
+                spawner.spawn((off + lo, hi - lo, depth - 1));
+            }
+        }
+    });
+}
+
+/// Sequential recursion.
+fn sort_rec<K: SortKey>(
+    data: &mut [K],
+    cfg: &SampleSortConfig,
+    depth: usize,
+    rng: &mut Xoshiro256pp,
+    threads: usize,
+) {
+    let n = data.len();
+    if n <= cfg.base_case {
+        let _g = phase_scope(Phase::BaseCase);
+        base_case::small_sort(data);
+        return;
+    }
+    if depth == 0 {
+        let _g = phase_scope(Phase::BaseCase);
+        base_case::heapsort(data);
+        return;
+    }
+    let Some(tree) = build_tree(data, cfg, rng) else {
+        return; // all sampled keys equal and no distinct keys found
+    };
+    let result = partition(data, &tree, cfg.block, threads);
+    for b in 0..tree.num_buckets() {
+        let (lo, hi) = (result.boundaries[b], result.boundaries[b + 1]);
+        if hi - lo > 1 && !tree.is_equality_bucket(b) {
+            sort_rec(&mut data[lo..hi], cfg, depth - 1, rng, 1);
+        }
+    }
+}
+
+/// Draw + sort the sample, build the splitter tree. Returns `None` when
+/// the whole input is a single repeated key (already sorted).
+fn build_tree<K: SortKey>(
+    data: &[K],
+    cfg: &SampleSortConfig,
+    rng: &mut Xoshiro256pp,
+) -> Option<DecisionTree<K>> {
+    let _g = phase_scope(Phase::Sampling);
+    let n = data.len();
+    let k = cfg.effective_buckets(n);
+    let ssz = cfg.sample_size_for(n, k);
+    let mut sample: Vec<K> = (0..ssz)
+        .map(|_| data[rng.next_below(n as u64) as usize])
+        .collect();
+    sample.sort_unstable_by(|a, b| a.to_bits_ordered().cmp(&b.to_bits_ordered()));
+    if sample.first().map(|k| k.to_bits_ordered()) == sample.last().map(|k| k.to_bits_ordered()) {
+        // sample is constant — verify against the data before skipping
+        let v = sample.first()?.to_bits_ordered();
+        if data.iter().all(|k| k.to_bits_ordered() == v) {
+            return None;
+        }
+    }
+    Some(DecisionTree::from_sorted_sample(&sample, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::is_sorted;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn random_u64(n: usize, universe: u64, seed: u64) -> Vec<u64> {
+        let mut rng = Xoshiro256pp::new(seed);
+        (0..n).map(|_| rng.next_below(universe)).collect()
+    }
+
+    #[test]
+    fn seq_sorts_sizes() {
+        for n in [0usize, 1, 2, 100, 1024, 1025, 10_000, 100_000] {
+            let mut v = random_u64(n, u64::MAX, n as u64 + 1);
+            let mut want = v.clone();
+            want.sort_unstable();
+            sort_seq(&mut v);
+            assert_eq!(v, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn par_sorts_sizes_and_threads() {
+        for (n, t) in [(10_000usize, 2usize), (100_000, 4), (250_000, 8), (99_999, 3)] {
+            let mut v = random_u64(n, 1 << 50, n as u64);
+            let mut want = v.clone();
+            want.sort_unstable();
+            sort_par(&mut v, t);
+            assert_eq!(v, want, "n={n} t={t}");
+        }
+    }
+
+    #[test]
+    fn duplicate_adversaries() {
+        // RootDups-style and constant arrays
+        for t in [1usize, 4] {
+            let n = 100_000;
+            let m = (n as f64).sqrt() as u64;
+            let mut v: Vec<u64> = (0..n as u64).map(|i| i % m).collect();
+            let mut want = v.clone();
+            want.sort_unstable();
+            sort_par(&mut v, t);
+            assert_eq!(v, want);
+
+            let mut c = vec![3u64; n];
+            sort_par(&mut c, t);
+            assert!(c.iter().all(|&x| x == 3));
+        }
+    }
+
+    #[test]
+    fn few_distinct_values() {
+        let mut v = random_u64(50_000, 3, 9);
+        let mut want = v.clone();
+        want.sort_unstable();
+        sort_seq(&mut v);
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn floats_including_negatives() {
+        let mut rng = Xoshiro256pp::new(31);
+        let mut v: Vec<f64> = (0..120_000).map(|_| rng.normal() * 1e4).collect();
+        sort_par(&mut v, 4);
+        assert!(is_sorted(&v));
+    }
+
+    #[test]
+    fn already_sorted_and_reversed() {
+        let mut v: Vec<u64> = (0..80_000).collect();
+        sort_seq(&mut v);
+        assert!(is_sorted(&v));
+        let mut v: Vec<u64> = (0..80_000).rev().collect();
+        sort_par(&mut v, 4);
+        assert!(is_sorted(&v));
+    }
+}

@@ -1,0 +1,533 @@
+//! The in-place block partitioning framework of IPS⁴o (substrate S4) —
+//! shared by IPS⁴o itself, IPS²Ra (digit classifier) and AIPS²o (RMI
+//! classifier).
+//!
+//! Three phases, exactly as Axtmann et al. describe (TOPC '22, §4):
+//!
+//! 1. **Local classification.** Each thread walks its stripe keeping one
+//!    `block`-sized buffer per bucket; full buffers flush as *blocks* into
+//!    the already-consumed prefix of the stripe (never overtaking the read
+//!    cursor), so the input is overwritten in place.
+//! 2. **Block permutation.** Blocks move to their bucket's block-aligned
+//!    destination window with chain-following swaps; write cursors are
+//!    per-bucket atomics (`fetch_add`), so all threads permute
+//!    cooperatively. A block whose destination is the partial tail slot
+//!    goes to the single overflow buffer (IPS⁴o's overflow case).
+//! 3. **Cleanup.** Per bucket: keys that spilled past the bucket's end
+//!    (into the next bucket's head), the overflow block, and the partial
+//!    buffers fill the bucket's unaligned head and tail.
+//!
+//! Deviation from IPS⁴o noted in DESIGN.md §6: we keep one atomic state
+//! byte per block (`O(N/block)` extra bytes) instead of IPS⁴o's strictly
+//! O(k·block) bookkeeping; every block is still read and written exactly
+//! once, which is what the memory-traffic shape depends on.
+
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::classifier::Classifier;
+use crate::key::SortKey;
+use crate::scheduler::parallel_for;
+use crate::util::timer::{phase_scope, Phase};
+
+const ST_UNMOVED: u8 = 0;
+const ST_FREE: u8 = 1;
+const ST_CLAIMED: u8 = 2;
+const ST_DONE: u8 = 3;
+
+/// Per-thread bucket buffers (one `block` of keys per bucket).
+struct ThreadBuffers<K> {
+    data: Vec<K>,
+    lens: Vec<u32>,
+    block: usize,
+}
+
+impl<K: SortKey> ThreadBuffers<K> {
+    fn new(nb: usize, block: usize, fill: K) -> Self {
+        ThreadBuffers {
+            data: vec![fill; nb * block],
+            lens: vec![0; nb],
+            block,
+        }
+    }
+
+    #[inline(always)]
+    fn bucket(&self, b: usize) -> &[K] {
+        &self.data[b * self.block..b * self.block + self.lens[b] as usize]
+    }
+}
+
+/// Result of one partition pass.
+pub struct PartitionResult {
+    /// `boundaries[b]..boundaries[b+1]` is bucket `b`; length `nb + 1`.
+    pub boundaries: Vec<usize>,
+}
+
+/// Partition `data` into `classifier.num_buckets()` ordered buckets with
+/// `threads` cooperating workers. Returns bucket boundaries.
+pub fn partition<K: SortKey, C: Classifier<K> + ?Sized>(
+    data: &mut [K],
+    classifier: &C,
+    block: usize,
+    threads: usize,
+) -> PartitionResult {
+    let n = data.len();
+    let nb = classifier.num_buckets();
+    assert!(nb >= 2);
+    assert!(block >= 1);
+    if n == 0 {
+        return PartitionResult {
+            boundaries: vec![0; nb + 1],
+        };
+    }
+    let threads = threads.max(1);
+    let n_slots = n.div_ceil(block);
+    // Stripes are whole numbers of slots so flushed blocks stay aligned.
+    let workers = threads.min(n_slots.max(1));
+    let slots_per_stripe = n_slots.div_ceil(workers);
+
+    // ---- Phase 1: local classification ------------------------------
+    let _g = phase_scope(Phase::Classification);
+    let fill = data[0];
+    let mut stripe_results: Vec<Option<StripeOut<K>>> = Vec::new();
+    stripe_results.resize_with(workers, || None);
+    {
+        let results = Mutex::new(&mut stripe_results);
+        let data_ptr = SendPtr(data.as_mut_ptr());
+        parallel_for(workers, workers, |_, range| {
+            for t in range {
+                let slot_lo = t * slots_per_stripe;
+                let slot_hi = ((t + 1) * slots_per_stripe).min(n_slots);
+                if slot_lo >= slot_hi {
+                    continue;
+                }
+                let lo = slot_lo * block;
+                let hi = (slot_hi * block).min(n);
+                // SAFETY: stripes are disjoint index ranges of `data`.
+                let stripe =
+                    unsafe { std::slice::from_raw_parts_mut(data_ptr.get().add(lo), hi - lo) };
+                let out = classify_stripe(stripe, classifier, nb, block, fill, slot_lo);
+                results.lock().unwrap()[t] = Some(out);
+            }
+        });
+    }
+    drop(_g);
+    let stripes: Vec<StripeOut<K>> = stripe_results.into_iter().flatten().collect();
+
+    // ---- Aggregate counts -> boundaries + write cursors --------------
+    let mut counts = vec![0usize; nb];
+    for s in &stripes {
+        for (c, sc) in counts.iter_mut().zip(&s.counts) {
+            *c += sc;
+        }
+    }
+    debug_assert_eq!(counts.iter().sum::<usize>(), n);
+    let mut boundaries = vec![0usize; nb + 1];
+    for b in 0..nb {
+        boundaries[b + 1] = boundaries[b] + counts[b];
+    }
+
+    // ---- Phase 2: block permutation ----------------------------------
+    let _g = phase_scope(Phase::BlockPermutation);
+    // Slot states: UNMOVED inside each stripe's flushed prefix, FREE after.
+    let state: Vec<AtomicU8> = (0..n_slots).map(|_| AtomicU8::new(ST_FREE)).collect();
+    for s in &stripes {
+        for slot in s.first_slot..s.first_slot + s.flushed {
+            state[slot].store(ST_UNMOVED, Ordering::Relaxed);
+        }
+    }
+    // Per-bucket write cursors at round_up(start, block).
+    let cursors: Vec<AtomicUsize> = boundaries[..nb]
+        .iter()
+        .map(|&s| AtomicUsize::new(s.div_ceil(block)))
+        .collect();
+    let overflow: Mutex<Option<(usize, Vec<K>)>> = Mutex::new(None);
+    {
+        let data_ptr = SendPtr(data.as_mut_ptr());
+        let state_ref = &state;
+        let cursors_ref = &cursors;
+        let overflow_ref = &overflow;
+        parallel_for(workers, n_slots, |_, slot_range| {
+            let mut tmp: Vec<K> = vec![fill; block];
+            let mut tmp2: Vec<K> = vec![fill; block];
+            for s0 in slot_range {
+                if state_ref[s0].load(Ordering::Relaxed) != ST_UNMOVED {
+                    continue;
+                }
+                if state_ref[s0]
+                    .compare_exchange(
+                        ST_UNMOVED,
+                        ST_CLAIMED,
+                        Ordering::Acquire,
+                        Ordering::Relaxed,
+                    )
+                    .is_err()
+                {
+                    continue;
+                }
+                // SAFETY: we own slot s0 (CLAIMED); it is a full block.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(data_ptr.get().add(s0 * block), tmp.as_mut_ptr(), block);
+                }
+                state_ref[s0].store(ST_FREE, Ordering::Release);
+                let mut b = classifier.classify(tmp[0]);
+                // Chain: place `tmp`, displacing whatever occupies the slot.
+                loop {
+                    let d = cursors_ref[b].fetch_add(1, Ordering::Relaxed);
+                    if d * block + block > n {
+                        // destination is the partial tail slot -> overflow
+                        let mut ov = overflow_ref.lock().unwrap();
+                        debug_assert!(ov.is_none(), "more than one overflow block");
+                        *ov = Some((b, tmp[..block].to_vec()));
+                        break;
+                    }
+                    if state_ref[d]
+                        .compare_exchange(
+                            ST_UNMOVED,
+                            ST_CLAIMED,
+                            Ordering::Acquire,
+                            Ordering::Relaxed,
+                        )
+                        .is_ok()
+                    {
+                        // Displace the unmoved block at d, then write ours.
+                        unsafe {
+                            std::ptr::copy_nonoverlapping(
+                                data_ptr.get().add(d * block),
+                                tmp2.as_mut_ptr(),
+                                block,
+                            );
+                            std::ptr::copy_nonoverlapping(
+                                tmp.as_ptr(),
+                                data_ptr.get().add(d * block),
+                                block,
+                            );
+                        }
+                        state_ref[d].store(ST_DONE, Ordering::Release);
+                        std::mem::swap(&mut tmp, &mut tmp2);
+                        b = classifier.classify(tmp[0]);
+                        continue;
+                    }
+                    // Wait out a concurrent reader, then take the free slot.
+                    loop {
+                        match state_ref[d].load(Ordering::Acquire) {
+                            ST_FREE => break,
+                            ST_CLAIMED => std::hint::spin_loop(),
+                            st => unreachable!("slot {d} in state {st} cannot be a destination"),
+                        }
+                    }
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(tmp.as_ptr(), data_ptr.get().add(d * block), block);
+                    }
+                    state_ref[d].store(ST_DONE, Ordering::Release);
+                    break;
+                }
+            }
+        });
+    }
+    drop(_g);
+
+    // ---- Phase 3: cleanup --------------------------------------------
+    let _g = phase_scope(Phase::Cleanup);
+    let overflow = overflow.into_inner().unwrap();
+    // Blocks actually written in-array per bucket = cursor - initial,
+    // minus the overflow block if it was this bucket's.
+    let written: Vec<usize> = (0..nb)
+        .map(|b| {
+            let first = boundaries[b].div_ceil(block);
+            let cur = cursors[b].load(Ordering::Relaxed);
+            let mut w = cur.saturating_sub(first);
+            if let Some((ob, _)) = &overflow {
+                if *ob == b && w > 0 {
+                    w -= 1;
+                }
+            }
+            w
+        })
+        .collect();
+
+    // 3a: copy each bucket's spill (keys past its end) out of the array.
+    let mut spills: Vec<Vec<K>> = vec![Vec::new(); nb];
+    {
+        let spills_mx = Mutex::new(&mut spills);
+        let data_ref = &*data;
+        let boundaries_ref = &boundaries;
+        let written_ref = &written;
+        parallel_for(workers, nb, |_, brange| {
+            for b in brange {
+                let start = boundaries_ref[b];
+                let end = boundaries_ref[b + 1];
+                if start == end || written_ref[b] == 0 {
+                    continue;
+                }
+                // blocks written in-array occupy [ub, blocks_end); any part
+                // past the bucket end is spill (it sits in the next
+                // bucket's head area)
+                let ub = start.div_ceil(block) * block;
+                let blocks_end = ub + written_ref[b] * block;
+                debug_assert!(blocks_end <= n);
+                if blocks_end > end {
+                    let spill = data_ref[end.max(ub)..blocks_end].to_vec();
+                    spills_mx.lock().unwrap()[b] = spill;
+                }
+            }
+        });
+    }
+
+    // 3b: fill each bucket's head + tail from spill/overflow/buffers.
+    {
+        let data_ptr = SendPtr(data.as_mut_ptr());
+        let boundaries_ref = &boundaries;
+        let written_ref = &written;
+        let spills_ref = &spills;
+        let stripes_ref = &stripes;
+        let overflow_ref = &overflow;
+        parallel_for(workers, nb, |_, brange| {
+            for b in brange {
+                let start = boundaries_ref[b];
+                let end = boundaries_ref[b + 1];
+                if start == end {
+                    continue;
+                }
+                let ub_raw = start.div_ceil(block) * block;
+                let ub = ub_raw.min(end);
+                // in-region end of the written blocks (== ub when none)
+                let blocks_end = if written_ref[b] > 0 {
+                    (ub_raw + written_ref[b] * block).min(end)
+                } else {
+                    ub
+                };
+                // positions to fill
+                let head = start..ub;
+                let tail = blocks_end.max(ub)..end;
+                // SAFETY: head/tail lie inside bucket b's region; buckets
+                // are disjoint across parallel iterations.
+                let mut positions = head.chain(tail);
+                let mut write = |k: K| {
+                    let p = positions.next().expect("more fill keys than fill positions");
+                    unsafe { data_ptr.get().add(p).write(k) };
+                };
+                for &k in &spills_ref[b] {
+                    write(k);
+                }
+                if let Some((ob, ovk)) = overflow_ref {
+                    if *ob == b {
+                        for &k in ovk {
+                            write(k);
+                        }
+                    }
+                }
+                for s in stripes_ref {
+                    for &k in s.buffers.bucket(b) {
+                        write(k);
+                    }
+                }
+                assert!(
+                    positions.next().is_none(),
+                    "bucket {b}: fill positions left over"
+                );
+            }
+        });
+    }
+    drop(_g);
+
+    PartitionResult { boundaries }
+}
+
+struct StripeOut<K> {
+    first_slot: usize,
+    flushed: usize,
+    counts: Vec<usize>,
+    buffers: ThreadBuffers<K>,
+}
+
+/// Phase 1 worker: classify one stripe, flushing full buffers as blocks
+/// into the stripe's own consumed prefix.
+fn classify_stripe<K: SortKey, C: Classifier<K> + ?Sized>(
+    stripe: &mut [K],
+    classifier: &C,
+    nb: usize,
+    block: usize,
+    fill: K,
+    first_slot: usize,
+) -> StripeOut<K> {
+    let mut buffers = ThreadBuffers::new(nb, block, fill);
+    let mut counts = vec![0usize; nb];
+    let mut flushed = 0usize;
+    const BATCH: usize = 512;
+    let mut idx = [0u32; BATCH];
+    let mut read = 0usize;
+    let n = stripe.len();
+    while read < n {
+        let m = BATCH.min(n - read);
+        // Batched classification first (ILP), then buffer pushes.
+        classifier.classify_batch(&stripe[read..read + m], &mut idx[..m]);
+        for i in 0..m {
+            let b = idx[i] as usize;
+            debug_assert!(b < nb);
+            let key = stripe[read + i];
+            // SAFETY: b < nb (classifier contract, checked in debug);
+            // len < block by the flush invariant below. Bounds checks here
+            // cost ~10% of the classification phase (perf log §Perf).
+            let len = unsafe { *buffers.lens.get_unchecked(b) } as usize;
+            unsafe {
+                *buffers.data.get_unchecked_mut(b * block + len) = key;
+                *buffers.lens.get_unchecked_mut(b) = (len + 1) as u32;
+                *counts.get_unchecked_mut(b) += 1;
+            }
+            if len + 1 == block {
+                // Flush: write the full buffer into the consumed prefix.
+                // write pos = flushed blocks so far; invariant
+                // flushed*block + buffered <= consumed keys (= read+i+1).
+                let dst = flushed * block;
+                // invariant: flushed blocks never overtake the read cursor
+                debug_assert!(dst + block <= read + i + 1);
+                let src = b * block;
+                stripe[dst..dst + block].copy_from_slice(&buffers.data[src..src + block]);
+                buffers.lens[b] = 0;
+                flushed += 1;
+            }
+        }
+        read += m;
+    }
+    StripeOut {
+        first_slot,
+        flushed,
+        counts,
+        buffers,
+    }
+}
+
+/// Raw-pointer wrapper so scoped threads can share disjoint regions.
+#[derive(Clone, Copy)]
+struct SendPtr<K>(*mut K);
+unsafe impl<K> Send for SendPtr<K> {}
+unsafe impl<K> Sync for SendPtr<K> {}
+impl<K> SendPtr<K> {
+    /// Accessor (not field) so closures capture the Sync wrapper whole.
+    fn get(self) -> *mut K {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::decision_tree::DecisionTree;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn check_partition(n: usize, buckets: usize, block: usize, threads: usize, seed: u64) {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut data: Vec<u64> = (0..n).map(|_| rng.next_below(1 << 40)).collect();
+        let mut sample: Vec<u64> = if n == 0 {
+            vec![0, 1, 2, 3]
+        } else {
+            (0..1024.min(n))
+                .map(|_| data[rng.next_below(n as u64) as usize])
+                .collect()
+        };
+        sample.sort_unstable();
+        let tree = DecisionTree::from_sorted_sample(&sample, buckets);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        let res = partition(&mut data, &tree, block, threads);
+        // 1. boundaries cover the array
+        assert_eq!(res.boundaries[0], 0);
+        assert_eq!(*res.boundaries.last().unwrap(), n);
+        // 2. every key is in the bucket the classifier assigns
+        for b in 0..tree.num_buckets() {
+            for &k in &data[res.boundaries[b]..res.boundaries[b + 1]] {
+                assert_eq!(tree.classify(k), b, "key {k} in wrong bucket {b}");
+            }
+        }
+        // 3. it is a permutation of the input
+        let mut got = data.clone();
+        got.sort_unstable();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn sequential_various_shapes() {
+        for &(n, buckets, block) in &[
+            (0usize, 8usize, 16usize),
+            (1, 8, 16),
+            (15, 8, 16),
+            (16, 8, 16),
+            (1000, 8, 16),
+            (1024, 16, 64),
+            (10_000, 64, 128),
+            (10_001, 64, 128),
+            (4096, 256, 32),
+        ] {
+            check_partition(n, buckets, block, 1, 42 + n as u64);
+        }
+    }
+
+    #[test]
+    fn parallel_various_shapes() {
+        for &(n, threads) in &[(1000usize, 2usize), (10_000, 4), (100_000, 8), (100_001, 3)] {
+            check_partition(n, 64, 128, threads, 7 + threads as u64);
+        }
+    }
+
+    #[test]
+    fn duplicate_heavy_with_equality_buckets() {
+        let mut rng = Xoshiro256pp::new(5);
+        let n = 50_000;
+        let mut data: Vec<u64> = (0..n).map(|_| rng.next_below(4)).collect();
+        let mut sample: Vec<u64> = (0..512).map(|_| data[rng.next_below(n as u64) as usize]).collect();
+        sample.sort_unstable();
+        let tree = DecisionTree::from_sorted_sample(&sample, 16);
+        assert!(tree.equality_buckets_enabled());
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        let res = partition(&mut data, &tree, 64, 4);
+        for b in 0..tree.num_buckets() {
+            let seg = &data[res.boundaries[b]..res.boundaries[b + 1]];
+            if tree.is_equality_bucket(b) && !seg.is_empty() {
+                assert!(seg.iter().all(|&k| k == seg[0]), "equality bucket not uniform");
+            }
+        }
+        let mut got = data;
+        got.sort_unstable();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn all_equal_input() {
+        let mut data = vec![9u64; 10_000];
+        let sample = vec![9u64; 128];
+        let tree = DecisionTree::from_sorted_sample(&sample, 8);
+        let res = partition(&mut data, &tree, 32, 4);
+        assert_eq!(*res.boundaries.last().unwrap(), 10_000);
+        assert!(data.iter().all(|&k| k == 9));
+    }
+
+    #[test]
+    fn block_bigger_than_input() {
+        check_partition(50, 8, 256, 2, 99);
+    }
+
+    #[test]
+    fn f64_partition() {
+        let mut rng = Xoshiro256pp::new(17);
+        let n = 20_000;
+        let mut data: Vec<f64> = (0..n).map(|_| rng.normal() * 1e3).collect();
+        let mut sample: Vec<f64> = (0..512)
+            .map(|_| data[rng.next_below(n as u64) as usize])
+            .collect();
+        sample.sort_unstable_by(f64::total_cmp);
+        let tree = DecisionTree::from_sorted_sample(&sample, 32);
+        let mut expect: Vec<u64> = data.iter().map(|x| x.to_bits()).collect();
+        expect.sort_unstable();
+        let res = partition(&mut data, &tree, 128, 4);
+        for b in 0..tree.num_buckets() {
+            for &k in &data[res.boundaries[b]..res.boundaries[b + 1]] {
+                assert_eq!(tree.classify(k), b);
+            }
+        }
+        let mut got: Vec<u64> = data.iter().map(|x| x.to_bits()).collect();
+        got.sort_unstable();
+        assert_eq!(got, expect);
+    }
+}

@@ -1,0 +1,39 @@
+//! Task scheduler / thread pool (substrate S5).
+//!
+//! IPS⁴o ships its own scheduler rather than TBB; likewise we build ours on
+//! `std::thread` (no rayon offline). Two primitives cover everything the
+//! engines need:
+//!
+//! * [`parallel_for`] / [`par_chunks_mut`] — fork-join data parallelism for
+//!   the cooperative phases (striped classification, block permutation).
+//! * [`run_task_pool`] — a shared work queue with dynamic spawning for the
+//!   recursion phase (buckets become tasks; tasks may push sub-tasks), the
+//!   analogue of IPS⁴o's sub-problem scheduler.
+
+pub mod parallel_for;
+pub mod pool;
+
+pub use parallel_for::{par_chunks_mut, parallel_for};
+pub use pool::{run_task_pool, Spawner};
+
+/// Resolve a thread-count argument: 0 = all available cores.
+pub fn effective_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_threads_resolves_zero() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(3), 3);
+    }
+}

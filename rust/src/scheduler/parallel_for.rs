@@ -1,0 +1,112 @@
+//! Fork-join data parallelism over index ranges and mutable slices.
+
+use std::ops::Range;
+
+/// Split `0..n` into at most `threads` contiguous chunks and run `f(chunk
+/// index, range)` on its own scoped thread. Chunk 0 runs on the caller
+/// thread. Returns after all chunks complete (fork-join barrier).
+pub fn parallel_for<F>(threads: usize, n: usize, f: F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    let threads = threads.max(1);
+    if n == 0 {
+        return;
+    }
+    if threads == 1 || n == 1 {
+        f(0, 0..n);
+        return;
+    }
+    let workers = threads.min(n);
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        let fref = &f;
+        for t in 1..workers {
+            let lo = t * chunk;
+            if lo >= n {
+                break;
+            }
+            let hi = ((t + 1) * chunk).min(n);
+            s.spawn(move || fref(t, lo..hi));
+        }
+        f(0, 0..chunk.min(n));
+    });
+}
+
+/// Split a mutable slice into at most `threads` contiguous chunks and run
+/// `f(chunk index, start offset, chunk)` per chunk in parallel.
+pub fn par_chunks_mut<T: Send, F>(threads: usize, data: &mut [T], f: F)
+where
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let threads = threads.max(1);
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    if threads == 1 {
+        f(0, 0, data);
+        return;
+    }
+    let workers = threads.min(n);
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        let fref = &f;
+        for (t, piece) in data.chunks_mut(chunk).enumerate() {
+            let offset = t * chunk;
+            s.spawn(move || fref(t, offset, piece));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_all_indices_once() {
+        let n = 10_001;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(8, n, |_, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_and_empty() {
+        let count = AtomicUsize::new(0);
+        parallel_for(1, 5, |_, r| {
+            count.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 5);
+        parallel_for(4, 0, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_disjoint() {
+        let mut v = vec![0usize; 1000];
+        par_chunks_mut(7, &mut v, |_, offset, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = offset + i;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i);
+        }
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let mut v = vec![1u8; 3];
+        par_chunks_mut(64, &mut v, |_, _, chunk| {
+            for x in chunk.iter_mut() {
+                *x += 1;
+            }
+        });
+        assert_eq!(v, vec![2, 2, 2]);
+    }
+}

@@ -1,0 +1,189 @@
+//! Shared work queue with dynamic task spawning — the recursion scheduler.
+//!
+//! Mirrors IPS⁴o's sub-problem handling: after the cooperative top-level
+//! partition, every bucket becomes a task; workers pop tasks LIFO (depth
+//! first — better locality, bounded queue growth) and may push the
+//! sub-buckets they create. The pool terminates when the queue is empty
+//! *and* no worker is mid-task.
+
+use std::sync::{Condvar, Mutex};
+
+struct QueueState<T> {
+    tasks: Vec<T>,
+    active: usize,
+}
+
+/// Handle workers use to push newly created sub-tasks.
+pub struct Spawner<'a, T> {
+    state: &'a Mutex<QueueState<T>>,
+    cv: &'a Condvar,
+}
+
+impl<'a, T> Spawner<'a, T> {
+    pub fn spawn(&self, task: T) {
+        let mut q = self.state.lock().unwrap();
+        q.tasks.push(task);
+        drop(q);
+        self.cv.notify_one();
+    }
+
+    /// Push many tasks with one lock round-trip.
+    pub fn spawn_all(&self, tasks: impl IntoIterator<Item = T>) {
+        let mut q = self.state.lock().unwrap();
+        q.tasks.extend(tasks);
+        drop(q);
+        self.cv.notify_all();
+    }
+}
+
+/// Run `initial` tasks (plus any tasks they spawn) on `threads` workers.
+/// `worker` must be safe to call concurrently from multiple threads.
+pub fn run_task_pool<T, F>(threads: usize, initial: Vec<T>, worker: F)
+where
+    T: Send,
+    F: Fn(T, &Spawner<T>) + Sync,
+{
+    let threads = threads.max(1);
+    if initial.is_empty() {
+        return;
+    }
+    let state = Mutex::new(QueueState {
+        tasks: initial,
+        active: 0,
+    });
+    let cv = Condvar::new();
+
+    // Panic safety: if `worker` panics, the active count must still drop
+    // and sleepers must be woken, or the remaining workers deadlock and
+    // the panic never propagates out of the scope join.
+    struct ActiveGuard<'a, T> {
+        state: &'a Mutex<QueueState<T>>,
+        cv: &'a Condvar,
+    }
+    impl<'a, T> Drop for ActiveGuard<'a, T> {
+        fn drop(&mut self) {
+            let mut q = self.state.lock().unwrap();
+            q.active -= 1;
+            if q.tasks.is_empty() && q.active == 0 {
+                // done (or unwinding): wake all sleepers so they can exit
+                self.cv.notify_all();
+            } else if std::thread::panicking() {
+                // propagate shutdown urgency — sleepers re-check and the
+                // scope join can collect the panic
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    let run_worker = || {
+        let spawner = Spawner {
+            state: &state,
+            cv: &cv,
+        };
+        let mut guard = state.lock().unwrap();
+        loop {
+            if let Some(task) = guard.tasks.pop() {
+                guard.active += 1;
+                drop(guard);
+                {
+                    let _active = ActiveGuard {
+                        state: &state,
+                        cv: &cv,
+                    };
+                    worker(task, &spawner);
+                }
+                guard = state.lock().unwrap();
+            } else if guard.active == 0 {
+                return; // queue drained and nobody can produce more
+            } else {
+                guard = cv.wait(guard).unwrap();
+            }
+        }
+    };
+
+    if threads == 1 {
+        run_worker();
+        return;
+    }
+    std::thread::scope(|s| {
+        for _ in 1..threads {
+            s.spawn(run_worker);
+        }
+        run_worker();
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn processes_all_initial_tasks() {
+        let done = AtomicUsize::new(0);
+        run_task_pool(4, (0..100).collect(), |_t: usize, _s| {
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn spawned_tasks_run() {
+        // Each task k spawns two tasks k-1 until 0: total = 2^k - 1 per root
+        let done = AtomicUsize::new(0);
+        run_task_pool(8, vec![6usize], |t, s| {
+            done.fetch_add(1, Ordering::Relaxed);
+            if t > 0 {
+                s.spawn(t - 1);
+                s.spawn(t - 1);
+            }
+        });
+        assert_eq!(done.load(Ordering::Relaxed), (1 << 7) - 1);
+    }
+
+    #[test]
+    fn spawn_all_batches() {
+        let done = AtomicUsize::new(0);
+        run_task_pool(4, vec![0usize], |t, s| {
+            done.fetch_add(1, Ordering::Relaxed);
+            if t == 0 {
+                s.spawn_all(1..=50);
+            }
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 51);
+    }
+
+    #[test]
+    fn single_thread_correct() {
+        let done = AtomicUsize::new(0);
+        run_task_pool(1, vec![3usize], |t, s| {
+            done.fetch_add(1, Ordering::Relaxed);
+            if t > 0 {
+                s.spawn(t - 1);
+            }
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn empty_initial_returns_immediately() {
+        run_task_pool::<usize, _>(4, vec![], |_, _| panic!("no tasks"));
+    }
+
+    #[test]
+    fn heavy_contention_terminates() {
+        // Many tiny tasks with bursts of spawning; exercises the
+        // wait/notify paths under contention.
+        let done = AtomicUsize::new(0);
+        run_task_pool(16, (0..64).map(|_| 3usize).collect(), |t, s| {
+            done.fetch_add(1, Ordering::Relaxed);
+            if t > 0 {
+                for _ in 0..2 {
+                    s.spawn(t - 1);
+                }
+            }
+        });
+        // 64 roots, each expands to 2^4 - 1 = 15 tasks
+        assert_eq!(done.load(Ordering::Relaxed), 64 * 15);
+    }
+}

@@ -1,0 +1,109 @@
+//! Formatting helpers for CLI and bench reports.
+
+/// Human-readable key count: 2_000_000 -> "2.0M".
+pub fn keys(n: usize) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.1}G", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.1}M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.1}K", n as f64 / 1e3)
+    } else {
+        n.to_string()
+    }
+}
+
+/// Throughput in keys/second: 123_456_789.0 -> "123.5M keys/s".
+pub fn rate(keys_per_sec: f64) -> String {
+    if keys_per_sec >= 1e9 {
+        format!("{:.2}G keys/s", keys_per_sec / 1e9)
+    } else if keys_per_sec >= 1e6 {
+        format!("{:.2}M keys/s", keys_per_sec / 1e6)
+    } else if keys_per_sec >= 1e3 {
+        format!("{:.2}K keys/s", keys_per_sec / 1e3)
+    } else {
+        format!("{keys_per_sec:.2} keys/s")
+    }
+}
+
+/// Seconds with adaptive unit.
+pub fn secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Render rows as a GitHub-flavored markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            line.push_str(&format!(" {c:<w$} |"));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push('|');
+    for w in &widths {
+        out.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_counts() {
+        assert_eq!(keys(999), "999");
+        assert_eq!(keys(2_000_000), "2.0M");
+        assert_eq!(keys(1_500), "1.5K");
+        assert_eq!(keys(3_000_000_000), "3.0G");
+    }
+
+    #[test]
+    fn rates() {
+        assert_eq!(rate(123_456_789.0), "123.46M keys/s");
+        assert!(rate(999.0).ends_with("keys/s"));
+    }
+
+    #[test]
+    fn table_shape() {
+        let t = markdown_table(
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["33".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[1].starts_with("|-"));
+        assert!(lines[0].contains("bb"));
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(secs(2.5), "2.500s");
+        assert_eq!(secs(0.0025), "2.500ms");
+        assert!(secs(0.0000025).ends_with("us"));
+    }
+}

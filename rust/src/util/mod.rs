@@ -1,0 +1,9 @@
+//! Shared substrates: PRNG + distribution samplers, statistics, timers,
+//! a property-test harness, and formatting helpers.
+
+pub mod fmt;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,385 @@
+//! PRNG + distribution samplers (substrate S1).
+//!
+//! The paper's generators use the C++ `<random>` library; no `rand` crate is
+//! available offline, so this module implements the generators from scratch:
+//!
+//! * [`SplitMix64`] — seeding / stream splitting (Steele et al.).
+//! * [`Xoshiro256pp`] — the main generator (Blackman & Vigna, xoshiro256++).
+//! * Samplers for every distribution in the paper's synthetic suite:
+//!   uniform, normal (Box–Muller), log-normal, exponential, chi-squared,
+//!   Gaussian mixture, and Zipf (Hörmann's rejection-inversion, the same
+//!   scheme used by `std::discrete`-free C++ benchmarks).
+
+/// SplitMix64: fast, full-period 2^64 stream; used to expand seeds.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — the workhorse generator.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 (the construction recommended by the authors).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for v in s.iter_mut() {
+            *v = sm.next_u64();
+        }
+        // All-zero state is invalid; SplitMix64 can only produce it with
+        // negligible probability, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E37_79B9_7F4A_7C15;
+        }
+        Xoshiro256pp { s }
+    }
+
+    /// An independent stream for worker `i` (jump-free stream splitting:
+    /// reseed through SplitMix64 with a mixed seed).
+    pub fn stream(seed: u64, i: u64) -> Self {
+        Xoshiro256pp::new(seed ^ (i.wrapping_mul(0xA076_1D64_78BD_642F)).rotate_left(17))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) — Lemire's multiply-shift with
+    /// rejection, unbiased.
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform in [a, b).
+    #[inline]
+    pub fn uniform(&mut self, a: f64, b: f64) -> f64 {
+        a + (b - a) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (one value per call; cache omitted to
+    /// keep the generator state deterministic per call count).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 0.0 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (std::f64::consts::TAU * u2).cos();
+            }
+        }
+    }
+
+    #[inline]
+    pub fn normal_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal_with(mu, sigma).exp()
+    }
+
+    /// Exponential with rate `lambda` via inversion.
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                return -u.ln() / lambda;
+            }
+        }
+    }
+
+    /// Chi-squared with k degrees of freedom = sum of k squared standard
+    /// normals (exact definition; k is small in the paper, k = 4).
+    pub fn chi_squared(&mut self, k: u32) -> f64 {
+        let mut acc = 0.0;
+        for _ in 0..k {
+            let z = self.normal();
+            acc += z * z;
+        }
+        acc
+    }
+
+    /// Pareto(scale=1, shape=alpha) via inversion.
+    #[inline]
+    pub fn pareto(&mut self, alpha: f64) -> f64 {
+        loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                return u.powf(-1.0 / alpha);
+            }
+        }
+    }
+
+    /// Poisson via inversion (small means) or PTRS would be overkill here;
+    /// used by the timestamp simulators with mean < 64.
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        debug_assert!(mean >= 0.0 && mean < 700.0);
+        let l = (-mean).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.next_f64();
+            if p <= l || k > 10_000 {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` elements without replacement into `out` (reservoir).
+    pub fn reservoir_sample<T: Copy>(&mut self, xs: &[T], k: usize, out: &mut Vec<T>) {
+        out.clear();
+        if k == 0 || xs.is_empty() {
+            return;
+        }
+        let k = k.min(xs.len());
+        out.extend_from_slice(&xs[..k]);
+        for i in k..xs.len() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            if j < k {
+                out[j] = xs[i];
+            }
+        }
+    }
+}
+
+/// Zipf(s) sampler over {1, …, n} using Hörmann & Derflinger's
+/// rejection-inversion — O(1) per sample for any exponent s ≠ 1.
+/// The paper uses s = 0.75 ("Zipf" synthetic dataset).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    h_x1: f64,
+    dist: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1);
+        assert!(s >= 0.0 && (s - 1.0).abs() > 1e-12, "s=1 not supported");
+        let h = |x: f64| -> f64 { Self::h_integral(x, s) };
+        let h_x1 = h(1.5) - 1.0;
+        let h_n = h(n as f64 + 0.5);
+        Zipf {
+            n,
+            s,
+            h_x1,
+            dist: h_n - h_x1,
+        }
+    }
+
+    /// H(x) = ((x)^(1-s) - 1) / (1 - s), the integral of x^-s.
+    #[inline]
+    fn h_integral(x: f64, s: f64) -> f64 {
+        let log_x = x.ln();
+        helper_expm1((1.0 - s) * log_x) / (1.0 - s)
+    }
+
+    #[inline]
+    fn h_integral_inverse(&self, x: f64) -> f64 {
+        let t = (x * (1.0 - self.s)).max(-1.0);
+        (helper_log1p(t) / (1.0 - self.s)).exp()
+    }
+
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> u64 {
+        loop {
+            let u = self.h_x1 + rng.next_f64() * self.dist;
+            let x = self.h_integral_inverse(u);
+            let k = x.clamp(1.0, self.n as f64).round() as u64;
+            let kf = k as f64;
+            // Acceptance: u >= H(k + 0.5) - k^-s  (Hörmann's condition)
+            if u >= Self::h_integral(kf + 0.5, self.s) - (-self.s * kf.ln()).exp() {
+                return k;
+            }
+        }
+    }
+}
+
+#[inline]
+fn helper_expm1(x: f64) -> f64 {
+    x.exp_m1()
+}
+
+#[inline]
+fn helper_log1p(x: f64) -> f64 {
+    x.ln_1p()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn xoshiro_streams_differ() {
+        let mut a = Xoshiro256pp::stream(7, 0);
+        let mut b = Xoshiro256pp::stream(7, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut r = Xoshiro256pp::new(42);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_unbiased_range() {
+        let mut r = Xoshiro256pp::new(3);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.next_below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256pp::new(9);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Xoshiro256pp::new(11);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn chi_squared_mean_is_k() {
+        let mut r = Xoshiro256pp::new(13);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.chi_squared(4)).sum::<f64>() / n as f64;
+        assert!((mean - 4.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_rank1_most_frequent_and_tail_decays() {
+        let mut r = Xoshiro256pp::new(17);
+        let z = Zipf::new(1000, 0.75);
+        let mut counts = vec![0usize; 1001];
+        for _ in 0..200_000 {
+            let k = z.sample(&mut r) as usize;
+            assert!((1..=1000).contains(&k));
+            counts[k] += 1;
+        }
+        assert!(counts[1] > counts[10]);
+        assert!(counts[10] > counts[500]);
+        // empirical ratio count(1)/count(16) ≈ 16^0.75 ≈ 8
+        let ratio = counts[1] as f64 / counts[16].max(1) as f64;
+        assert!(ratio > 4.0 && ratio < 16.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256pp::new(23);
+        let mut xs: Vec<u32> = (0..1000).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<_>>());
+        assert_ne!(xs, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reservoir_sample_size_and_membership() {
+        let mut r = Xoshiro256pp::new(29);
+        let xs: Vec<u64> = (0..10_000).collect();
+        let mut out = Vec::new();
+        r.reservoir_sample(&xs, 100, &mut out);
+        assert_eq!(out.len(), 100);
+        assert!(out.iter().all(|x| *x < 10_000));
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Xoshiro256pp::new(31);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.poisson(3.5) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 3.5).abs() < 0.1, "mean={mean}");
+    }
+}

@@ -1,0 +1,129 @@
+//! Small statistics helpers used by the bench harness and tests.
+
+use crate::key::SortKey;
+
+/// Order-independent digest of a key multiset: `(count, wrapping sum,
+/// wrapping sum of mixed bits)`. Two slices have equal digests iff (with
+/// overwhelming probability) they are permutations of each other — the
+/// "sorting didn't lose or invent keys" check used across the test suite.
+pub fn multiset_digest<K: SortKey>(keys: &[K]) -> (usize, u64, u64) {
+    let mut sum = 0u64;
+    let mut mix = 0u64;
+    for k in keys {
+        let b = k.to_bits_ordered();
+        sum = sum.wrapping_add(b);
+        mix = mix.wrapping_add(b.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17));
+    }
+    (keys.len(), sum, mix)
+}
+
+/// Arithmetic mean. Empty input returns 0.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator). < 2 samples returns 0.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// p-th percentile (0..=100) by linear interpolation on a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Count of inversions in adjacent positions (sortedness diagnostic).
+pub fn adjacent_inversions<T: PartialOrd>(xs: &[T]) -> usize {
+    xs.windows(2).filter(|w| w[0] > w[1]).count()
+}
+
+/// Shannon entropy (bits) of a histogram of counts — used by dataset
+/// diagnostics to verify duplicate-heaviness (low entropy = many dups).
+pub fn entropy_bits(counts: &[usize]) -> f64 {
+    let total: usize = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &c in counts {
+        if c > 0 {
+            let p = c as f64 / total as f64;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn inversions() {
+        assert_eq!(adjacent_inversions(&[1, 2, 3]), 0);
+        assert_eq!(adjacent_inversions(&[3, 2, 1]), 2);
+    }
+
+    #[test]
+    fn entropy() {
+        assert_eq!(entropy_bits(&[10, 0, 0]), 0.0);
+        assert!((entropy_bits(&[5, 5]) - 1.0).abs() < 1e-12);
+        assert!((entropy_bits(&[1, 1, 1, 1]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_max() {
+        assert_eq!(min(&[3.0, 1.0, 2.0]), 1.0);
+        assert_eq!(max(&[3.0, 1.0, 2.0]), 3.0);
+    }
+}

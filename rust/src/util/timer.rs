@@ -1,0 +1,166 @@
+//! Timing utilities + the phase profiler used by the perf pass.
+//!
+//! The phase profiler is the hand-rolled replacement for the flamegraph
+//! workflow (no external profiler crates offline): every engine brackets
+//! its major phases with [`phase_scope`]; the bench harness reads the
+//! accumulated per-phase nanoseconds to locate bottlenecks
+//! (EXPERIMENTS.md §Perf). Overhead when disabled: one relaxed atomic load.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Major phases of the partitioning engines (IPS⁴o §3, LearnedSort §2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Sampling = 0,
+    ModelTrain = 1,
+    Classification = 2,
+    BlockPermutation = 3,
+    Cleanup = 4,
+    BaseCase = 5,
+    Scheduling = 6,
+    Other = 7,
+}
+
+pub const NUM_PHASES: usize = 8;
+
+pub const PHASE_NAMES: [&str; NUM_PHASES] = [
+    "sampling",
+    "model-train",
+    "classification",
+    "block-permutation",
+    "cleanup",
+    "base-case",
+    "scheduling",
+    "other",
+];
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static PHASE_NS: [AtomicU64; NUM_PHASES] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// Turn the phase profiler on/off (benches enable it; hot paths see one
+/// relaxed load when off).
+pub fn set_phase_profiling(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn phase_profiling_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn reset_phases() {
+    for c in &PHASE_NS {
+        c.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Snapshot of accumulated nanoseconds per phase.
+pub fn phase_snapshot() -> [u64; NUM_PHASES] {
+    let mut out = [0u64; NUM_PHASES];
+    for (o, c) in out.iter_mut().zip(PHASE_NS.iter()) {
+        *o = c.load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// RAII guard accumulating wall time into a phase counter.
+pub struct PhaseScope {
+    phase: Phase,
+    start: Option<Instant>,
+}
+
+/// Bracket a region with a phase label. No-op (single atomic load) when
+/// profiling is disabled.
+#[inline]
+pub fn phase_scope(phase: Phase) -> PhaseScope {
+    let start = if phase_profiling_enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    };
+    PhaseScope { phase, start }
+}
+
+impl Drop for PhaseScope {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let ns = start.elapsed().as_nanos() as u64;
+            PHASE_NS[self.phase as usize].fetch_add(ns, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Render a phase snapshot as a short report (used by `aipso bench -v`).
+pub fn phase_report(snap: &[u64; NUM_PHASES]) -> String {
+    let total: u64 = snap.iter().sum();
+    let mut s = String::new();
+    for (name, &ns) in PHASE_NAMES.iter().zip(snap.iter()) {
+        if ns > 0 {
+            let pct = if total > 0 {
+                100.0 * ns as f64 / total as f64
+            } else {
+                0.0
+            };
+            s.push_str(&format!(
+                "  {:>18}: {:>10.3} ms ({:>5.1}%)\n",
+                name,
+                ns as f64 / 1e6,
+                pct
+            ));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_scope_accumulates_nothing() {
+        set_phase_profiling(false);
+        reset_phases();
+        {
+            let _g = phase_scope(Phase::Sampling);
+        }
+        assert_eq!(phase_snapshot()[Phase::Sampling as usize], 0);
+    }
+
+    #[test]
+    fn enabled_scope_accumulates() {
+        set_phase_profiling(true);
+        reset_phases();
+        {
+            let _g = phase_scope(Phase::Cleanup);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let snap = phase_snapshot();
+        set_phase_profiling(false);
+        assert!(snap[Phase::Cleanup as usize] >= 1_000_000);
+        let rep = phase_report(&snap);
+        assert!(rep.contains("cleanup"));
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

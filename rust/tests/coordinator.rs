@@ -1,0 +1,98 @@
+//! Integration: the sort-job coordinator end to end — routing, batching,
+//! verification, metrics.
+
+use aipso::coordinator::{Coordinator, EngineChoice, JobSpec, KeyBuf};
+use aipso::datasets;
+use aipso::util::rng::Xoshiro256pp;
+use aipso::SortEngine;
+
+#[test]
+fn mixed_trace_completes_and_verifies() {
+    let coordinator = Coordinator::new(4);
+    let mut rng = Xoshiro256pp::new(11);
+    let mut expected = 0usize;
+    for id in 0..20u64 {
+        let n = match id % 3 {
+            0 => 200_000,
+            1 => 20_000,
+            _ => 2_000,
+        };
+        let keys = if id % 2 == 0 {
+            KeyBuf::F64(datasets::generate_f64("uniform", n, rng.next_u64()).unwrap())
+        } else {
+            KeyBuf::U64(datasets::generate_u64("fb_ids", n, rng.next_u64()).unwrap())
+        };
+        coordinator.submit(JobSpec::auto(id, keys));
+        expected += 1;
+    }
+    let (reports, metrics) = coordinator.drain();
+    assert_eq!(reports.len(), expected);
+    assert!(reports.iter().all(|r| r.verified_sorted), "a job failed verify");
+    assert_eq!(metrics.total_jobs(), expected);
+    assert_eq!(metrics.total_failures(), 0);
+    // all job ids come back exactly once
+    let mut ids: Vec<u64> = reports.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..20).collect::<Vec<_>>());
+}
+
+#[test]
+fn router_policies_visible_in_reports() {
+    let coordinator = Coordinator::new(2);
+    // big smooth input -> AIPS2o
+    coordinator.submit(JobSpec::auto(
+        0,
+        KeyBuf::F64(datasets::generate_f64("uniform", 150_000, 1).unwrap()),
+    ));
+    // duplicate-heavy -> IPS4o
+    coordinator.submit(JobSpec::auto(
+        1,
+        KeyBuf::F64(datasets::generate_f64("root_dups", 150_000, 2).unwrap()),
+    ));
+    // small -> std::sort
+    coordinator.submit(JobSpec::auto(
+        2,
+        KeyBuf::U64((0..1000u64).rev().collect()),
+    ));
+    let (reports, _) = coordinator.drain();
+    let by_id = |id: u64| reports.iter().find(|r| r.id == id).unwrap();
+    assert_eq!(by_id(0).engine, SortEngine::Aips2o);
+    assert_eq!(by_id(1).engine, SortEngine::Ips4o);
+    assert_eq!(by_id(2).engine, SortEngine::StdSort);
+}
+
+#[test]
+fn fixed_engine_jobs_and_throughput_reporting() {
+    let coordinator = Coordinator::new(4);
+    for (i, engine) in SortEngine::PARALLEL_FIGURES.iter().enumerate() {
+        coordinator.submit(JobSpec {
+            id: i as u64,
+            keys: KeyBuf::U64(datasets::generate_u64("nyc_pickup", 100_000, i as u64).unwrap()),
+            engine: EngineChoice::Fixed(*engine),
+            parallel: true,
+        });
+    }
+    let (reports, metrics) = coordinator.drain();
+    assert_eq!(reports.len(), 4);
+    for r in &reports {
+        assert!(r.verified_sorted);
+        assert!(r.keys_per_sec > 0.0);
+        assert!(r.secs > 0.0);
+    }
+    let report = metrics.report();
+    assert!(report.contains("AIPS2o"), "report:\n{report}");
+}
+
+#[test]
+fn many_small_jobs_batch_path() {
+    let coordinator = Coordinator::new(4);
+    for id in 0..40u64 {
+        coordinator.submit(JobSpec::auto(
+            id,
+            KeyBuf::U64((0..500u64).map(|x| (x * 7919 + id) % 1000).collect()),
+        ));
+    }
+    let (reports, _) = coordinator.drain();
+    assert_eq!(reports.len(), 40);
+    assert!(reports.iter().all(|r| r.verified_sorted));
+}

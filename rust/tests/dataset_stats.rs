@@ -1,0 +1,110 @@
+//! Statistical checks that each simulated dataset exhibits the property
+//! the paper's evaluation relies on (DESIGN.md §6 substitution table).
+
+use aipso::datasets;
+use aipso::util::stats;
+
+const N: usize = 200_000;
+
+fn dup_fraction_u64(v: &[u64]) -> f64 {
+    let mut s = v.to_vec();
+    s.sort_unstable();
+    let distinct = 1 + s.windows(2).filter(|w| w[0] != w[1]).count();
+    1.0 - distinct as f64 / v.len() as f64
+}
+
+fn dup_fraction_f64(v: &[f64]) -> f64 {
+    let mut s: Vec<u64> = v.iter().map(|x| x.to_bits()).collect();
+    s.sort_unstable();
+    let distinct = 1 + s.windows(2).filter(|w| w[0] != w[1]).count();
+    1.0 - distinct as f64 / v.len() as f64
+}
+
+#[test]
+fn smooth_synthetics_have_no_duplicates() {
+    for name in ["uniform", "normal", "lognormal", "mix_gauss", "exponential", "chi_squared"] {
+        let v = datasets::generate_f64(name, N, 1).unwrap();
+        assert!(
+            dup_fraction_f64(&v) < 0.001,
+            "{name} unexpectedly duplicate-heavy"
+        );
+    }
+}
+
+#[test]
+fn dup_synthetics_are_duplicate_heavy() {
+    // RootDups: sqrt(N) distinct values
+    let v = datasets::generate_f64("root_dups", N, 1).unwrap();
+    assert!(dup_fraction_f64(&v) > 0.99);
+    // TwoDups: at most N/2 distinct
+    let v = datasets::generate_f64("two_dups", N, 1).unwrap();
+    assert!(dup_fraction_f64(&v) > 0.4);
+    // Zipf: rank 1 dominates
+    let v = datasets::generate_f64("zipf", N, 1).unwrap();
+    assert!(dup_fraction_f64(&v) > 0.1);
+}
+
+#[test]
+fn zipf_follows_power_law() {
+    let v = datasets::generate_f64("zipf", N, 3).unwrap();
+    let c1 = v.iter().filter(|&&x| x == 1.0).count() as f64;
+    let c16 = v.iter().filter(|&&x| x == 16.0).count() as f64;
+    // count(1)/count(16) ~ 16^0.75 = 8
+    let ratio = c1 / c16.max(1.0);
+    assert!(ratio > 3.0 && ratio < 20.0, "zipf ratio {ratio}");
+}
+
+#[test]
+fn wiki_and_books_exercise_equality_buckets() {
+    let wiki = datasets::generate_u64("wiki_edit", N, 5).unwrap();
+    assert!(dup_fraction_u64(&wiki) > 0.10, "wiki dup {}", dup_fraction_u64(&wiki));
+    let books = datasets::generate_u64("books_sales", N, 5).unwrap();
+    assert!(dup_fraction_u64(&books) > 0.10, "books dup {}", dup_fraction_u64(&books));
+}
+
+#[test]
+fn fb_is_rmi_hard_heavy_tail() {
+    // The paper: FB/IDs is the hard case for the RMI. Heavy tail =>
+    // a linear fit of the CDF is poor. Check tail mass spread.
+    let v = datasets::generate_u64("fb_ids", N, 7).unwrap();
+    let mut s = v.clone();
+    s.sort_unstable();
+    let p50 = s[s.len() / 2] as f64;
+    let p999 = s[(s.len() * 999) / 1000] as f64;
+    assert!(p999 / p50 > 1e3, "FB tail too light: {}", p999 / p50);
+    assert!(dup_fraction_u64(&v) < 0.2, "FB ids should be near-distinct");
+}
+
+#[test]
+fn osm_radix_prefixes_are_skewed() {
+    let v = datasets::generate_u64("osm_cellids", N, 9).unwrap();
+    let mut pref = vec![0usize; 256];
+    for &x in &v {
+        pref[(x >> 56) as usize] += 1;
+    }
+    // entropy far below uniform 8 bits -> unbalanced radix partitions
+    let h = stats::entropy_bits(&pref);
+    assert!(h < 7.0, "osm prefix entropy {h} too uniform");
+}
+
+#[test]
+fn timestamps_are_in_plausible_ranges() {
+    let wiki = datasets::generate_u64("wiki_edit", 50_000, 11).unwrap();
+    assert!(wiki.iter().all(|&t| (900_000_000..1_700_000_000).contains(&t)));
+    let nyc = datasets::generate_u64("nyc_pickup", 50_000, 11).unwrap();
+    assert!(nyc.iter().all(|&t| (1_640_000_000..1_680_000_000).contains(&t)));
+}
+
+#[test]
+fn generators_scale_with_n() {
+    for name in ["uniform", "root_dups"] {
+        for n in [0usize, 1, 10, 1001] {
+            assert_eq!(datasets::generate_f64(name, n, 1).unwrap().len(), n);
+        }
+    }
+    for name in ["wiki_edit", "osm_cellids"] {
+        for n in [0usize, 1, 10, 1001] {
+            assert_eq!(datasets::generate_u64(name, n, 1).unwrap().len(), n);
+        }
+    }
+}

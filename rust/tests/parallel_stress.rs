@@ -1,0 +1,107 @@
+//! Stress tests for the parallel machinery: thread-count sweeps, odd
+//! sizes, repeated runs racing the scheduler, skew.
+
+use aipso::util::rng::Xoshiro256pp;
+use aipso::util::stats::multiset_digest;
+use aipso::{is_sorted, sort_parallel, SortEngine};
+
+#[test]
+fn thread_count_sweep() {
+    let mut rng = Xoshiro256pp::new(1);
+    let base: Vec<u64> = (0..200_000).map(|_| rng.next_u64()).collect();
+    let digest = multiset_digest(&base);
+    for threads in [1usize, 2, 3, 4, 5, 7, 8, 12, 16] {
+        for engine in SortEngine::PARALLEL_FIGURES {
+            let mut v = base.clone();
+            sort_parallel(engine, &mut v, threads);
+            assert!(is_sorted(&v), "{engine:?} t={threads}");
+            assert_eq!(digest, multiset_digest(&v), "{engine:?} t={threads}");
+        }
+    }
+}
+
+#[test]
+fn odd_sizes_with_many_threads() {
+    // sizes chosen to hit partial blocks, partial stripes, single-slot
+    // stripes and the overflow path (n % block != 0)
+    for n in [65_537usize, 100_003, 131_071, 131_073, 262_145] {
+        let mut rng = Xoshiro256pp::new(n as u64);
+        let base: Vec<f64> = (0..n).map(|_| rng.normal() * 1e6).collect();
+        let digest = multiset_digest(&base);
+        for engine in SortEngine::PARALLEL_FIGURES {
+            let mut v = base.clone();
+            sort_parallel(engine, &mut v, 8);
+            assert!(is_sorted(&v), "{engine:?} n={n}");
+            assert_eq!(digest, multiset_digest(&v), "{engine:?} n={n}");
+        }
+    }
+}
+
+#[test]
+fn repeated_runs_race_the_scheduler() {
+    // Re-running the same parallel sort hunts for permutation races:
+    // any lost/duplicated block shows up as a digest mismatch.
+    let mut rng = Xoshiro256pp::new(3);
+    let base: Vec<u64> = (0..300_000).map(|_| rng.next_below(1 << 48)).collect();
+    let digest = multiset_digest(&base);
+    for rep in 0..8 {
+        let mut v = base.clone();
+        sort_parallel(SortEngine::Aips2o, &mut v, 8);
+        assert!(is_sorted(&v), "rep={rep}");
+        assert_eq!(digest, multiset_digest(&v), "rep={rep}");
+    }
+}
+
+#[test]
+fn skewed_bucket_load() {
+    // 99% of keys in one tiny value range + 1% spread wide: one bucket
+    // dominates, exercising task-pool rebalancing.
+    let mut rng = Xoshiro256pp::new(5);
+    let n = 400_000;
+    let base: Vec<u64> = (0..n)
+        .map(|i| {
+            if i % 100 == 0 {
+                rng.next_u64()
+            } else {
+                1_000_000 + rng.next_below(1000)
+            }
+        })
+        .collect();
+    let digest = multiset_digest(&base);
+    for engine in SortEngine::PARALLEL_FIGURES {
+        let mut v = base.clone();
+        sort_parallel(engine, &mut v, 8);
+        assert!(is_sorted(&v), "{engine:?}");
+        assert_eq!(digest, multiset_digest(&v), "{engine:?}");
+    }
+}
+
+#[test]
+fn more_threads_than_work() {
+    let base: Vec<u64> = (0..10_000u64).rev().collect();
+    for engine in SortEngine::PARALLEL_FIGURES {
+        let mut v = base.clone();
+        sort_parallel(engine, &mut v, 64);
+        assert!(is_sorted(&v), "{engine:?}");
+    }
+}
+
+#[test]
+fn concurrent_independent_sorts() {
+    // Engines must be safe to run concurrently from independent threads
+    // (the coordinator does this for small-job batches).
+    let mut rng = Xoshiro256pp::new(7);
+    let bases: Vec<Vec<u64>> = (0..8)
+        .map(|_| (0..50_000).map(|_| rng.next_u64()).collect())
+        .collect();
+    std::thread::scope(|s| {
+        for base in &bases {
+            s.spawn(move || {
+                let mut v = base.clone();
+                sort_parallel(SortEngine::Aips2o, &mut v, 2);
+                assert!(is_sorted(&v));
+                assert_eq!(multiset_digest(base), multiset_digest(&v));
+            });
+        }
+    });
+}

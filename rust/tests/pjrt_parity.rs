@@ -1,0 +1,109 @@
+//! The AOT bridge, end to end: load artifacts/*.hlo.txt, execute the
+//! JAX/Pallas-trained RMI through PJRT, and pin it numerically against
+//! the native Rust mirror.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise — CI runs
+//! through the Makefile, which always builds artifacts first).
+
+use aipso::rmi::model::{Rmi, RmiConfig};
+use aipso::runtime::{default_artifacts_dir, RmiRuntime};
+use aipso::util::rng::Xoshiro256pp;
+
+fn runtime_or_skip() -> Option<RmiRuntime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?}; run `make artifacts`");
+        return None;
+    }
+    Some(RmiRuntime::load(&dir).expect("artifacts present but failed to load"))
+}
+
+#[test]
+fn artifacts_load_and_describe() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.manifest();
+    assert_eq!(m.n_leaves, 1024);
+    assert!(m.train_sample >= 1024);
+    assert!(m.predict_batch >= 4096);
+}
+
+#[test]
+fn xla_train_matches_native_train() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.manifest();
+    let mut rng = Xoshiro256pp::new(42);
+    let mut sample: Vec<f64> = (0..m.train_sample).map(|_| rng.lognormal(0.0, 0.5)).collect();
+    sample.sort_unstable_by(f64::total_cmp);
+    let xla_rmi = rt.train(&sample).expect("xla train");
+    let native = Rmi::train(&sample, RmiConfig { n_leaves: m.n_leaves });
+    assert_eq!(xla_rmi.n_leaves(), native.n_leaves());
+    assert!((xla_rmi.root_a - native.root_a).abs() <= 1e-9 * native.root_a.abs().max(1.0));
+    let mut max_rel = 0.0f64;
+    for (a, b) in xla_rmi.leaves.iter().zip(&native.leaves) {
+        max_rel = max_rel.max((a.a - b.a).abs() / b.a.abs().max(1.0));
+        max_rel = max_rel.max((a.lo - b.lo).abs());
+        max_rel = max_rel.max((a.hi - b.hi).abs());
+    }
+    assert!(max_rel < 1e-8, "leaf params diverge: {max_rel}");
+}
+
+#[test]
+fn xla_predict_matches_native_predict() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.manifest();
+    let mut rng = Xoshiro256pp::new(43);
+    let mut sample: Vec<f64> = (0..m.train_sample).map(|_| rng.uniform(0.0, 1e6)).collect();
+    sample.sort_unstable_by(f64::total_cmp);
+    let rmi = Rmi::train(&sample, RmiConfig { n_leaves: m.n_leaves });
+    // includes a padded partial final chunk (non-multiple of batch)
+    let keys: Vec<f64> = (0..m.predict_batch + 1000)
+        .map(|_| rng.uniform(-1e5, 1.1e6))
+        .collect();
+    let xla = rt.predict(&keys, &rmi).expect("xla predict");
+    assert_eq!(xla.len(), keys.len());
+    let mut max_err = 0.0f64;
+    for (k, p) in keys.iter().zip(&xla) {
+        max_err = max_err.max((rmi.predict(*k) - p).abs());
+    }
+    assert!(max_err < 1e-12, "native vs xla predict diverge: {max_err}");
+}
+
+#[test]
+fn xla_model_is_monotone() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.manifest();
+    let mut rng = Xoshiro256pp::new(44);
+    let mut sample: Vec<f64> = (0..m.train_sample).map(|_| rng.normal() * 1e3).collect();
+    sample.sort_unstable_by(f64::total_cmp);
+    let rmi = rt.train(&sample).expect("xla train");
+    let mut probe: Vec<f64> = (0..8192).map(|_| rng.normal() * 1e3).collect();
+    probe.sort_unstable_by(f64::total_cmp);
+    assert!(rmi.is_monotone_over(&probe), "XLA-trained model not monotone");
+}
+
+#[test]
+fn xla_trained_model_sorts_through_aips2o_machinery() {
+    // The full loop: XLA-trained model -> native classifier -> block
+    // partition -> recursive sort. Proves the artifact path composes with
+    // the L3 engine.
+    use aipso::classifier::rmi_classifier::RmiClassifier;
+    use aipso::classifier::Classifier;
+    use aipso::sample_sort::partition::partition;
+
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Xoshiro256pp::new(45);
+    let mut data: Vec<f64> = (0..300_000).map(|_| rng.uniform(0.0, 1e6)).collect();
+    let mut sample: Vec<f64> = (0..rt.manifest().train_sample)
+        .map(|_| data[rng.next_below(data.len() as u64) as usize])
+        .collect();
+    sample.sort_unstable_by(f64::total_cmp);
+    let rmi = rt.train(&sample).expect("xla train");
+    let classifier = RmiClassifier::new(rmi, 512);
+    let res = partition(&mut data, &classifier, 128, 4);
+    for b in 0..512 {
+        let seg = &data[res.boundaries[b]..res.boundaries[b + 1]];
+        for &k in seg {
+            assert_eq!(Classifier::<f64>::classify(&classifier, k), b);
+        }
+    }
+}

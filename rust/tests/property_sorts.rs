@@ -1,0 +1,177 @@
+//! Property-based tests (hand-rolled harness, util::proptest): sorting
+//! invariants over random sizes/distributions/engines, and framework
+//! invariants (partition routing, scheduler task accounting).
+
+use aipso::classifier::decision_tree::DecisionTree;
+use aipso::classifier::Classifier;
+use aipso::sample_sort::partition::partition;
+use aipso::util::proptest::{check_sized, PropConfig};
+use aipso::util::rng::Xoshiro256pp;
+use aipso::util::stats::multiset_digest;
+use aipso::{is_sorted, sort_parallel, sort_sequential, SortEngine};
+
+fn random_keys(rng: &mut Xoshiro256pp, n: usize) -> Vec<u64> {
+    // mixture of distributions, chosen by the rng itself
+    let mode = rng.next_below(5);
+    (0..n)
+        .map(|_| match mode {
+            0 => rng.next_u64(),
+            1 => rng.next_below(16),                  // heavy duplicates
+            2 => rng.next_below(1 << 20),             // narrow
+            3 => (rng.normal().abs() * 1e12) as u64,  // skewed
+            _ => (rng.exponential(1e-6)) as u64,      // heavy tail
+        })
+        .collect()
+}
+
+#[test]
+fn prop_every_engine_sorts_any_input() {
+    for engine in SortEngine::all() {
+        check_sized(
+            &format!("sorts/{engine:?}"),
+            PropConfig::with_max_size(24, 40_000),
+            |rng, n| {
+                let mut v = random_keys(rng, n);
+                let before = multiset_digest(&v);
+                sort_sequential(engine, &mut v);
+                if !is_sorted(&v) {
+                    return Err("output not sorted".into());
+                }
+                if before != multiset_digest(&v) {
+                    return Err("multiset changed".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_parallel_equals_sequential() {
+    check_sized(
+        "parallel == sequential",
+        PropConfig::with_max_size(16, 150_000),
+        |rng, n| {
+            let base = random_keys(rng, n);
+            let threads = 1 + rng.next_below(8) as usize;
+            for engine in SortEngine::PARALLEL_FIGURES {
+                let mut a = base.clone();
+                let mut b = base.clone();
+                sort_sequential(engine, &mut a);
+                sort_parallel(engine, &mut b, threads);
+                if a != b {
+                    return Err(format!("{engine:?} t={threads}: parallel != sequential"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partition_routes_every_key_to_its_bucket() {
+    check_sized(
+        "partition routing",
+        PropConfig::with_max_size(24, 60_000),
+        |rng, n| {
+            let mut data = random_keys(rng, n);
+            if data.is_empty() {
+                return Ok(());
+            }
+            let before = multiset_digest(&data);
+            let mut sample: Vec<u64> = (0..256.min(n))
+                .map(|_| data[rng.next_below(n as u64) as usize])
+                .collect();
+            sample.sort_unstable();
+            let buckets = [4usize, 16, 64, 256][rng.next_below(4) as usize];
+            let block = [16usize, 64, 128][rng.next_below(3) as usize];
+            let threads = 1 + rng.next_below(6) as usize;
+            let tree = DecisionTree::from_sorted_sample(&sample, buckets);
+            let res = partition(&mut data, &tree, block, threads);
+            // boundaries form a monotone cover
+            if res.boundaries[0] != 0 || *res.boundaries.last().unwrap() != n {
+                return Err("boundaries do not cover input".into());
+            }
+            for w in res.boundaries.windows(2) {
+                if w[0] > w[1] {
+                    return Err("boundaries not monotone".into());
+                }
+            }
+            // every key is in the bucket the classifier says
+            for b in 0..tree.num_buckets() {
+                for &k in &data[res.boundaries[b]..res.boundaries[b + 1]] {
+                    if tree.classify(k) != b {
+                        return Err(format!("key {k} routed to wrong bucket {b}"));
+                    }
+                }
+            }
+            if before != multiset_digest(&data) {
+                return Err("partition changed the multiset".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_task_accounting() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    check_sized(
+        "scheduler accounting",
+        PropConfig::with_max_size(24, 200),
+        |rng, n| {
+            let threads = 1 + rng.next_below(8) as usize;
+            let done = AtomicUsize::new(0);
+            // each task i spawns i % 3 children of value i/2
+            let expected = {
+                fn count(v: usize) -> usize {
+                    1 + (v % 3) * if v > 0 { count(v / 2) } else { 1 }
+                }
+                (0..n).map(count).sum::<usize>()
+            };
+            aipso::scheduler::run_task_pool(threads, (0..n).collect(), |t, s| {
+                done.fetch_add(1, Ordering::Relaxed);
+                for _ in 0..(t % 3) {
+                    s.spawn(if t > 0 { t / 2 } else { 0 });
+                }
+            });
+            let got = done.load(Ordering::Relaxed);
+            if got != expected {
+                return Err(format!("ran {got} tasks, expected {expected}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rmi_monotone_and_in_range() {
+    use aipso::rmi::model::{Rmi, RmiConfig};
+    check_sized(
+        "rmi monotonicity",
+        PropConfig::with_max_size(24, 20_000),
+        |rng, n| {
+            if n < 2 {
+                return Ok(());
+            }
+            let mut sample: Vec<f64> = random_keys(rng, n).iter().map(|&k| k as f64).collect();
+            sample.sort_unstable_by(f64::total_cmp);
+            let leaves = [4usize, 32, 256, 1024][rng.next_below(4) as usize];
+            let rmi = Rmi::train(&sample, RmiConfig { n_leaves: leaves });
+            let mut probe: Vec<f64> = random_keys(rng, 4096).iter().map(|&k| k as f64).collect();
+            probe.sort_unstable_by(f64::total_cmp);
+            let mut prev = -1.0;
+            for &x in &probe {
+                let p = rmi.predict(x);
+                if !(0.0..1.0).contains(&p) {
+                    return Err(format!("predict({x}) = {p} out of range"));
+                }
+                if p < prev {
+                    return Err(format!("monotonicity violated at {x}"));
+                }
+                prev = p;
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,136 @@
+//! Integration: every engine sorts every paper dataset, sequentially and
+//! in parallel, preserving the key multiset.
+
+use aipso::datasets::{self, KeyType};
+use aipso::util::stats::multiset_digest;
+use aipso::{is_sorted, sort_parallel, sort_sequential, SortEngine};
+
+const N: usize = 120_000;
+const SEED: u64 = 0xC0DE;
+
+fn check_engine_on<K: aipso::SortKey>(
+    engine: SortEngine,
+    parallel: bool,
+    base: &[K],
+    label: &str,
+) {
+    let mut keys = base.to_vec();
+    let before = multiset_digest(&keys);
+    if parallel {
+        sort_parallel(engine, &mut keys, 4);
+    } else {
+        sort_sequential(engine, &mut keys);
+    }
+    assert!(
+        is_sorted(&keys),
+        "{engine:?} (parallel={parallel}) left {label} unsorted"
+    );
+    assert_eq!(
+        before,
+        multiset_digest(&keys),
+        "{engine:?} (parallel={parallel}) corrupted the multiset on {label}"
+    );
+}
+
+#[test]
+fn all_engines_all_f64_datasets_sequential() {
+    for ds in datasets::ALL.iter().filter(|d| d.key_type == KeyType::F64) {
+        let base = datasets::generate_f64(ds.name, N, SEED).unwrap();
+        for engine in SortEngine::all() {
+            check_engine_on(engine, false, &base, ds.name);
+        }
+    }
+}
+
+#[test]
+fn all_engines_all_u64_datasets_sequential() {
+    for ds in datasets::ALL.iter().filter(|d| d.key_type == KeyType::U64) {
+        let base = datasets::generate_u64(ds.name, N, SEED).unwrap();
+        for engine in SortEngine::all() {
+            check_engine_on(engine, false, &base, ds.name);
+        }
+    }
+}
+
+#[test]
+fn parallel_engines_all_datasets() {
+    for ds in datasets::ALL.iter() {
+        match ds.key_type {
+            KeyType::F64 => {
+                let base = datasets::generate_f64(ds.name, N, SEED).unwrap();
+                for engine in SortEngine::PARALLEL_FIGURES {
+                    check_engine_on(engine, true, &base, ds.name);
+                }
+            }
+            KeyType::U64 => {
+                let base = datasets::generate_u64(ds.name, N, SEED).unwrap();
+                for engine in SortEngine::PARALLEL_FIGURES {
+                    check_engine_on(engine, true, &base, ds.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn boundary_sizes_every_engine() {
+    for n in [0usize, 1, 2, 3, 5, 63, 64, 65, 127, 128, 129, 4095, 4096, 4097] {
+        let base: Vec<u64> = (0..n as u64).rev().collect();
+        for engine in SortEngine::all() {
+            check_engine_on(engine, false, &base, &format!("rev-{n}"));
+            check_engine_on(engine, true, &base, &format!("rev-{n}"));
+        }
+    }
+}
+
+#[test]
+fn pathological_patterns_every_engine() {
+    let n = 50_000usize;
+    let mut cases: Vec<(String, Vec<u64>)> = vec![
+        ("sorted".into(), (0..n as u64).collect()),
+        ("reversed".into(), (0..n as u64).rev().collect()),
+        ("constant".into(), vec![42; n]),
+        ("two-values".into(), (0..n as u64).map(|i| i % 2).collect()),
+        (
+            "organ-pipe".into(),
+            (0..n as u64 / 2).chain((0..n as u64 / 2).rev()).collect(),
+        ),
+        (
+            "sawtooth".into(),
+            (0..n as u64).map(|i| i % 1000).collect(),
+        ),
+    ];
+    // near-sorted with sparse swaps
+    let mut nearly: Vec<u64> = (0..n as u64).collect();
+    for i in (0..n - 1).step_by(997) {
+        nearly.swap(i, i + 1);
+    }
+    cases.push(("nearly-sorted".into(), nearly));
+    for (label, base) in &cases {
+        for engine in SortEngine::all() {
+            check_engine_on(engine, false, base, label);
+        }
+        for engine in SortEngine::PARALLEL_FIGURES {
+            check_engine_on(engine, true, base, label);
+        }
+    }
+}
+
+#[test]
+fn extreme_float_values() {
+    let mut base: Vec<f64> = vec![
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        0.0,
+        -0.0,
+        f64::MIN_POSITIVE,
+        -f64::MIN_POSITIVE,
+        1e308,
+        -1e308,
+        1e-308,
+    ];
+    base.extend((0..20_000).map(|i| (i as f64 - 10_000.0) * 1e100));
+    for engine in SortEngine::all() {
+        check_engine_on(engine, false, &base, "extreme-floats");
+    }
+}
