@@ -13,7 +13,7 @@
 //!     make artifacts && cargo run --release --example e2e_pipeline
 
 use aipso::bench_harness::{count_wins, run_figure, BenchConfig};
-use aipso::coordinator::{Coordinator, EngineChoice, JobSpec, KeyBuf};
+use aipso::coordinator::{Coordinator, JobSpec, KeyBuf};
 use aipso::datasets::{self, FigureGroup, KeyType};
 use aipso::rmi::model::{Rmi, RmiConfig};
 use aipso::runtime::{default_artifacts_dir, RmiRuntime};
@@ -70,7 +70,7 @@ fn main() {
             KeyType::F64 => KeyBuf::F64(datasets::generate_f64(ds.name, n / 2, id).unwrap()),
             KeyType::U64 => KeyBuf::U64(datasets::generate_u64(ds.name, n / 2, id).unwrap()),
         };
-        coordinator.submit(JobSpec { id, keys, engine: EngineChoice::Auto, parallel: true });
+        coordinator.submit(JobSpec::auto(id, keys));
         id += 1;
     }
     let (reports, metrics) = coordinator.drain();

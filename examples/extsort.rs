@@ -1,0 +1,63 @@
+//! Out-of-core quickstart: sort a dataset 8x larger than the configured
+//! memory budget, reusing one RMI across all runs.
+//!
+//!     cargo run --release --example extsort
+//!
+//! Scale with AIPSO_N (keys) and AIPSO_EXT_BUDGET_MB.
+
+use aipso::external::{self, ExternalConfig};
+use aipso::util::fmt;
+
+fn main() {
+    let n: usize = std::env::var("AIPSO_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8_000_000);
+    let budget_mb: usize = std::env::var("AIPSO_EXT_BUDGET_MB")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(((n * 8) >> 20).max(8) / 8);
+    let dir = std::env::temp_dir();
+    let input = dir.join("aipso-extsort-example.bin");
+    let output = dir.join("aipso-extsort-example.sorted.bin");
+
+    // 1. Produce the dataset on disk through the chunked generator —
+    //    it never materializes in memory.
+    println!(
+        "writing {} lognormal keys ({} MiB) to {} ...",
+        fmt::keys(n),
+        (n * 8) >> 20,
+        input.display()
+    );
+    aipso::datasets::write_f64_file("lognormal", n, 42, &input, 1 << 20).unwrap();
+
+    // 2. External sort under the budget: chunked run generation with the
+    //    first-chunk RMI reused for every run, then a loser-tree merge.
+    let cfg = ExternalConfig::with_budget(budget_mb << 20);
+    println!(
+        "sorting under a {budget_mb} MiB budget (data = {:.1}x budget) ...",
+        (n * 8) as f64 / (budget_mb << 20) as f64
+    );
+    let t0 = std::time::Instant::now();
+    let report = external::sort_file::<f64>(&input, &output, &cfg).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+
+    println!(
+        "sorted {} keys in {} — {}",
+        fmt::keys(report.keys as usize),
+        fmt::secs(secs),
+        fmt::rate(report.keys as f64 / secs.max(1e-12)),
+    );
+    println!(
+        "runs: {} ({} learned with the one shared RMI, {} IPS4o fallback), merge passes: {}",
+        report.runs, report.learned_runs, report.fallback_runs, report.merge_passes
+    );
+
+    // 3. Stream-verify the output.
+    let ok = external::verify_sorted_file::<f64>(&output, cfg.effective_io_buffer()).unwrap();
+    println!("output verified sorted: {ok}");
+    assert!(ok);
+
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
+}

@@ -225,6 +225,111 @@ fn pivot_quality_row<K: SortKey>(
     (name.to_string(), q_random, q_rmi)
 }
 
+/// One measured external-sort cell (bench `fig_external`).
+#[derive(Debug, Clone)]
+pub struct ExternalRow {
+    pub dataset: &'static str,
+    pub strategy: &'static str,
+    pub n: usize,
+    pub secs: f64,
+    pub rate: f64,
+    pub runs: usize,
+    pub learned_runs: usize,
+    pub merge_passes: usize,
+}
+
+/// External-sort scenario: learned run generation (one RMI trained on the
+/// first chunk, reused for every run) vs plain IPS⁴o run generation, with
+/// identical spill files and loser-tree merge. Inputs are written to disk
+/// through the chunked generators, so `cfg.n` can exceed memory.
+pub fn run_external_figure(
+    names: &[&'static str],
+    budget_bytes: usize,
+    cfg: &BenchConfig,
+) -> Vec<ExternalRow> {
+    use crate::external::{self, ExternalConfig, RunGen};
+
+    let mut rows = Vec::new();
+    let dir = std::env::temp_dir();
+    for &name in names {
+        let spec = datasets::spec(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+        let input = dir.join(format!("aipso-figext-{}-{}.bin", std::process::id(), spec.name));
+        let output = dir.join(format!(
+            "aipso-figext-{}-{}.out.bin",
+            std::process::id(),
+            spec.name
+        ));
+        datasets::write_dataset_file(spec.name, cfg.n, cfg.seed, &input, 1 << 18)
+            .expect("chunked dataset write");
+        for (run_gen, strategy) in [
+            (RunGen::LearnedReuse, "learned runs (RMI reuse)"),
+            (RunGen::Ips4o, "IPS4o runs"),
+        ] {
+            let ext = ExternalConfig {
+                memory_budget: budget_bytes,
+                run_gen,
+                threads: cfg.threads,
+                ..ExternalConfig::default()
+            };
+            let t0 = std::time::Instant::now();
+            let report = match spec.key_type {
+                KeyType::F64 => external::sort_file::<f64>(&input, &output, &ext),
+                KeyType::U64 => external::sort_file::<u64>(&input, &output, &ext),
+            }
+            .expect("external sort");
+            let secs = t0.elapsed().as_secs_f64();
+            let ok = match spec.key_type {
+                KeyType::F64 => {
+                    external::verify_sorted_file::<f64>(&output, ext.effective_io_buffer())
+                }
+                KeyType::U64 => {
+                    external::verify_sorted_file::<u64>(&output, ext.effective_io_buffer())
+                }
+            }
+            .expect("verify output");
+            assert!(ok, "external sort produced unsorted output on {name}");
+            assert_eq!(report.keys as usize, cfg.n, "key count drift on {name}");
+            rows.push(ExternalRow {
+                dataset: spec.paper_name,
+                strategy,
+                n: cfg.n,
+                secs,
+                rate: cfg.n as f64 / secs.max(1e-12),
+                runs: report.runs,
+                learned_runs: report.learned_runs,
+                merge_passes: report.merge_passes,
+            });
+        }
+        let _ = std::fs::remove_file(&input);
+        let _ = std::fs::remove_file(&output);
+    }
+    rows
+}
+
+/// Render external rows as a markdown table.
+pub fn render_external_rows(title: &str, rows: &[ExternalRow]) -> String {
+    let mut out = format!("## {title}\n\n");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.dataset.to_string(),
+                r.strategy.to_string(),
+                fmt::keys(r.n),
+                fmt::rate(r.rate),
+                fmt::secs(r.secs),
+                format!("{} ({} learned)", r.runs, r.learned_runs),
+                r.merge_passes.to_string(),
+            ]
+        })
+        .collect();
+    out.push_str(&fmt::markdown_table(
+        &["dataset", "run generation", "n", "rate", "time", "runs", "merge passes"],
+        &table,
+    ));
+    out
+}
+
 /// Render figure rows as a paper-style markdown table (one block per
 /// dataset, engines as rows).
 pub fn render_rows(title: &str, rows: &[Row]) -> String {
@@ -314,6 +419,30 @@ mod tests {
                 "{name}: RMI pivots ({q_rmi}) must beat random ({q_random})"
             );
         }
+    }
+
+    #[test]
+    fn external_figure_smoke() {
+        let cfg = BenchConfig {
+            n: 40_000,
+            ..tiny()
+        };
+        // 8Ki-key budget → ≥4 runs per dataset, one of each key type
+        let rows = run_external_figure(&["uniform", "nyc_pickup"], 8192 * 8, &cfg);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.rate > 0.0);
+            assert!(r.runs >= 4, "{}: runs={}", r.dataset, r.runs);
+        }
+        // learned strategy must actually use the model on smooth data
+        let learned_uniform = rows
+            .iter()
+            .find(|r| r.dataset == "Uniform" && r.strategy.starts_with("learned"))
+            .unwrap();
+        assert!(learned_uniform.learned_runs > 0);
+        let report = render_external_rows("t", &rows);
+        assert!(report.contains("Uniform"));
+        assert!(report.contains("merge passes"));
     }
 
     #[test]

@@ -1,6 +1,10 @@
 //! Job types for the coordinator.
 
+use std::path::PathBuf;
+
 use crate::coordinator::router::EngineChoice;
+use crate::datasets::KeyType;
+use crate::external::ExternalConfig;
 use crate::SortEngine;
 
 /// Owned key buffer, matching the paper's two key domains.
@@ -41,21 +45,70 @@ fn probe_dup(keys: impl Iterator<Item = u64>, probe: usize) -> f64 {
     1.0 - distinct as f64 / sample.len() as f64
 }
 
+/// An out-of-core sort request: sort the binary key file `input` into
+/// `output` under `config.memory_budget` bytes of working set.
+#[derive(Debug, Clone)]
+pub struct ExternalJob {
+    pub input: PathBuf,
+    pub output: PathBuf,
+    pub key_type: KeyType,
+    pub config: ExternalConfig,
+}
+
+/// What a job operates on: resident keys, or an on-disk dataset too large
+/// to hold in memory.
+#[derive(Debug, Clone)]
+pub enum JobPayload {
+    InMemory(KeyBuf),
+    External(ExternalJob),
+}
+
+impl JobPayload {
+    /// Key count for admission decisions. External jobs read the input's
+    /// file size; an unreadable file admits as "huge" — the exclusive path
+    /// then fails the job (`verified_sorted: false`, `n: 0`) and logs the
+    /// IO error to stderr.
+    pub fn len_hint(&self) -> usize {
+        match self {
+            JobPayload::InMemory(keys) => keys.len(),
+            JobPayload::External(ext) => std::fs::metadata(&ext.input)
+                .map(|m| (m.len() / 8) as usize)
+                .unwrap_or(usize::MAX),
+        }
+    }
+
+    pub fn is_external(&self) -> bool {
+        matches!(self, JobPayload::External(_))
+    }
+}
+
 /// A sort request.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
     pub id: u64,
-    pub keys: KeyBuf,
+    pub payload: JobPayload,
     pub engine: EngineChoice,
     /// Allow the coordinator to use the parallel engines.
     pub parallel: bool,
 }
 
 impl JobSpec {
+    /// In-memory job with automatic engine routing.
     pub fn auto(id: u64, keys: KeyBuf) -> JobSpec {
         JobSpec {
             id,
-            keys,
+            payload: JobPayload::InMemory(keys),
+            engine: EngineChoice::Auto,
+            parallel: true,
+        }
+    }
+
+    /// Out-of-core job (always admitted exclusively — one external sort at
+    /// a time so its budget and the in-memory jobs don't thrash).
+    pub fn external(id: u64, job: ExternalJob) -> JobSpec {
+        JobSpec {
+            id,
+            payload: JobPayload::External(job),
             engine: EngineChoice::Auto,
             parallel: true,
         }
@@ -72,6 +125,8 @@ pub struct JobReport {
     pub keys_per_sec: f64,
     pub verified_sorted: bool,
     pub threads: usize,
+    /// True when the job ran through the out-of-core path.
+    pub external: bool,
 }
 
 #[cfg(test)]
@@ -87,5 +142,20 @@ mod tests {
         let f = KeyBuf::F64(vec![1.0, 2.0, 3.0]);
         assert_eq!(f.probe_duplicate_fraction(3), 0.0);
         assert_eq!(KeyBuf::U64(vec![]).probe_duplicate_fraction(10), 0.0);
+    }
+
+    #[test]
+    fn payload_len_hints() {
+        let p = JobPayload::InMemory(KeyBuf::U64(vec![1, 2, 3]));
+        assert_eq!(p.len_hint(), 3);
+        assert!(!p.is_external());
+        let missing = JobPayload::External(ExternalJob {
+            input: PathBuf::from("/definitely/not/a/file.bin"),
+            output: PathBuf::from("/tmp/out.bin"),
+            key_type: KeyType::U64,
+            config: ExternalConfig::default(),
+        });
+        assert!(missing.is_external());
+        assert_eq!(missing.len_hint(), usize::MAX);
     }
 }

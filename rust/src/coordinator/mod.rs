@@ -9,18 +9,23 @@
 //! job at a time onto the core pool (sorting is memory-bandwidth bound —
 //! co-running two large sorts thrashes, so admission is serialized; small
 //! jobs are batched through the sequential path in parallel instead).
+//! Out-of-core jobs ([`JobPayload::External`]) always take the exclusive
+//! path: their memory budget is the whole working set, so co-running them
+//! with large in-memory sorts would thrash both.
 
 pub mod job;
 pub mod metrics;
 pub mod router;
 
-pub use job::{JobReport, JobSpec, KeyBuf};
+pub use job::{ExternalJob, JobPayload, JobReport, JobSpec, KeyBuf};
 pub use metrics::MetricsRegistry;
 pub use router::{route, EngineChoice};
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
+use crate::datasets::KeyType;
+use crate::external;
 use crate::scheduler::effective_threads;
 use crate::{is_sorted, sort_parallel, sort_sequential};
 
@@ -75,7 +80,7 @@ impl Coordinator {
                 }
             };
             while let Ok(job) = rx.recv() {
-                if job.keys.len() < SMALL_JOB {
+                if !job.payload.is_external() && job.payload.len_hint() < SMALL_JOB {
                     small.push(job);
                     if small.len() >= 8 {
                         flush_small(&mut small);
@@ -131,24 +136,28 @@ impl Drop for Coordinator {
 /// Execute one job: route, sort, verify, report.
 fn run_job(mut job: JobSpec, threads: usize) -> JobReport {
     let engine = route(&job);
-    let n = job.keys.len();
+    let external = job.payload.is_external();
     let t0 = std::time::Instant::now();
-    let sorted = match &mut job.keys {
-        KeyBuf::F64(v) => {
+    let (n, sorted) = match &mut job.payload {
+        JobPayload::InMemory(KeyBuf::F64(v)) => {
             if threads > 1 && job.parallel {
                 sort_parallel(engine, v, threads);
             } else {
                 sort_sequential(engine, v);
             }
-            is_sorted(v)
+            (v.len(), is_sorted(v))
         }
-        KeyBuf::U64(v) => {
+        JobPayload::InMemory(KeyBuf::U64(v)) => {
             if threads > 1 && job.parallel {
                 sort_parallel(engine, v, threads);
             } else {
                 sort_sequential(engine, v);
             }
-            is_sorted(v)
+            (v.len(), is_sorted(v))
+        }
+        JobPayload::External(ext) => {
+            let ext_threads = if job.parallel { threads } else { 1 };
+            run_external_job(job.id, ext, ext_threads)
         }
     };
     let secs = t0.elapsed().as_secs_f64();
@@ -160,6 +169,37 @@ fn run_job(mut job: JobSpec, threads: usize) -> JobReport {
         keys_per_sec: n as f64 / secs.max(1e-12),
         verified_sorted: sorted,
         threads,
+        external,
+    }
+}
+
+/// Run one out-of-core job and stream-verify its output file.
+fn run_external_job(id: u64, ext: &ExternalJob, threads: usize) -> (usize, bool) {
+    let mut cfg = ext.config.clone();
+    if cfg.threads == 0 {
+        cfg.threads = threads;
+    }
+    let io_buffer = cfg.effective_io_buffer();
+    let outcome = match ext.key_type {
+        KeyType::F64 => external::sort_file::<f64>(&ext.input, &ext.output, &cfg).and_then(
+            |rep| {
+                external::verify_sorted_file::<f64>(&ext.output, io_buffer)
+                    .map(|ok| (rep.keys as usize, ok))
+            },
+        ),
+        KeyType::U64 => external::sort_file::<u64>(&ext.input, &ext.output, &cfg).and_then(
+            |rep| {
+                external::verify_sorted_file::<u64>(&ext.output, io_buffer)
+                    .map(|ok| (rep.keys as usize, ok))
+            },
+        ),
+    };
+    match outcome {
+        Ok(res) => res,
+        Err(e) => {
+            eprintln!("external job {id} failed: {e}");
+            (0, false)
+        }
     }
 }
 
@@ -173,7 +213,9 @@ mod tests {
         let mut rng = Xoshiro256pp::new(id);
         JobSpec {
             id,
-            keys: KeyBuf::U64((0..n).map(|_| rng.next_u64()).collect()),
+            payload: JobPayload::InMemory(KeyBuf::U64(
+                (0..n).map(|_| rng.next_u64()).collect(),
+            )),
             engine: EngineChoice::Auto,
             parallel,
         }
@@ -207,5 +249,45 @@ mod tests {
         let c = Coordinator::new(2);
         let (reports, _) = c.drain();
         assert!(reports.is_empty());
+    }
+
+    #[test]
+    fn external_jobs_admitted_alongside_in_memory() {
+        use crate::datasets::KeyType;
+        use crate::external::{read_keys_file, write_keys_file, ExternalConfig};
+
+        let dir = std::env::temp_dir();
+        let input = dir.join(format!("aipso-coord-ext-{}.bin", std::process::id()));
+        let output = dir.join(format!("aipso-coord-ext-{}.out.bin", std::process::id()));
+        let mut rng = Xoshiro256pp::new(77);
+        let keys: Vec<u64> = (0..40_000).map(|_| rng.next_u64()).collect();
+        write_keys_file(&input, &keys).unwrap();
+
+        let c = Coordinator::new(2);
+        c.submit(job(0, 40_000, true)); // in-memory, exclusive path (≥ SMALL_JOB)
+        c.submit(JobSpec::external(
+            1,
+            ExternalJob {
+                input: input.clone(),
+                output: output.clone(),
+                key_type: KeyType::U64,
+                // 8Ki-key chunks force several runs + a real merge
+                config: ExternalConfig::with_budget(8192 * 8),
+            },
+        ));
+        c.submit(job(2, 1_000, false)); // small-batch path
+        let (reports, metrics) = c.drain();
+        assert_eq!(reports.len(), 3);
+        assert!(reports.iter().all(|r| r.verified_sorted));
+        let ext = reports.iter().find(|r| r.id == 1).unwrap();
+        assert!(ext.external);
+        assert_eq!(ext.n, keys.len());
+        assert_eq!(metrics.total_failures(), 0);
+
+        let mut want = keys;
+        want.sort_unstable();
+        assert_eq!(read_keys_file::<u64>(&output).unwrap(), want);
+        let _ = std::fs::remove_file(&input);
+        let _ = std::fs::remove_file(&output);
     }
 }

@@ -5,7 +5,7 @@
 //! (its equality buckets win RootDups-like inputs), pdqsort for small jobs
 //! where model/sampling overhead cannot amortize.
 
-use crate::coordinator::job::JobSpec;
+use crate::coordinator::job::{JobPayload, JobSpec};
 use crate::SortEngine;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -23,13 +23,27 @@ pub const PROBE: usize = 1024;
 pub const DUP_THRESHOLD: f64 = 0.30;
 
 pub fn route(job: &JobSpec) -> SortEngine {
+    // Out-of-core jobs always run the external pipeline; their engine
+    // label follows the configured run-generation strategy (learned runs
+    // report as AIPS²o, the baseline as IPS⁴o). A `Fixed` choice cannot be
+    // honored there, so it is ignored rather than misattributed in the
+    // metrics.
+    let keys = match &job.payload {
+        JobPayload::External(ext) => {
+            return match ext.config.run_gen {
+                crate::external::RunGen::LearnedReuse => SortEngine::Aips2o,
+                crate::external::RunGen::Ips4o => SortEngine::Ips4o,
+            }
+        }
+        JobPayload::InMemory(keys) => keys,
+    };
     match job.engine {
         EngineChoice::Fixed(e) => e,
         EngineChoice::Auto => {
-            let n = job.keys.len();
+            let n = keys.len();
             if n < SMALL_INPUT {
                 SortEngine::StdSort
-            } else if job.keys.probe_duplicate_fraction(PROBE) > DUP_THRESHOLD {
+            } else if keys.probe_duplicate_fraction(PROBE) > DUP_THRESHOLD {
                 SortEngine::Ips4o
             } else {
                 SortEngine::Aips2o
@@ -44,12 +58,7 @@ mod tests {
     use crate::coordinator::job::KeyBuf;
 
     fn spec(keys: KeyBuf) -> JobSpec {
-        JobSpec {
-            id: 0,
-            keys,
-            engine: EngineChoice::Auto,
-            parallel: true,
-        }
+        JobSpec::auto(0, keys)
     }
 
     #[test]

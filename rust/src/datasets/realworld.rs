@@ -19,6 +19,13 @@ use crate::util::rng::{Xoshiro256pp, Zipf};
 /// ~256 geographic clusters — produces the clustered, prefix-skewed id
 /// space real cell ids have.
 pub fn osm_cellids(n: usize, rng: &mut Xoshiro256pp) -> Vec<u64> {
+    let (centers, zipf) = osm_components(rng);
+    (0..n).map(|_| osm_sample(&centers, &zipf, rng)).collect()
+}
+
+/// Cluster centers + popularity law, drawn once per dataset instance
+/// (split out so chunked generation reuses one draw).
+pub fn osm_components(rng: &mut Xoshiro256pp) -> (Vec<(f64, f64, f64)>, Zipf) {
     const CLUSTERS: usize = 256;
     let centers: Vec<(f64, f64, f64)> = (0..CLUSTERS)
         .map(|_| {
@@ -30,19 +37,19 @@ pub fn osm_cellids(n: usize, rng: &mut Xoshiro256pp) -> Vec<u64> {
         })
         .collect();
     // Cluster popularity is itself heavy-tailed (big cities dominate).
-    let zipf = Zipf::new(CLUSTERS as u64, 1.3);
-    (0..n)
-        .map(|_| {
-            let c = (zipf.sample(rng) - 1) as usize;
-            let (clat, clon, sd) = centers[c];
-            let lat = (clat + sd * rng.normal()).clamp(0.0, 1.0);
-            let lon = (clon + sd * rng.normal()).clamp(0.0, 1.0);
-            morton_interleave(
-                (lat * (u32::MAX as f64)) as u32,
-                (lon * (u32::MAX as f64)) as u32,
-            )
-        })
-        .collect()
+    (centers, Zipf::new(CLUSTERS as u64, 1.3))
+}
+
+/// One Morton-coded cell id from the fixed cluster mixture.
+pub fn osm_sample(centers: &[(f64, f64, f64)], zipf: &Zipf, rng: &mut Xoshiro256pp) -> u64 {
+    let c = (zipf.sample(rng) - 1) as usize;
+    let (clat, clon, sd) = centers[c];
+    let lat = (clat + sd * rng.normal()).clamp(0.0, 1.0);
+    let lon = (clon + sd * rng.normal()).clamp(0.0, 1.0);
+    morton_interleave(
+        (lat * (u32::MAX as f64)) as u32,
+        (lon * (u32::MAX as f64)) as u32,
+    )
 }
 
 /// Interleave the bits of x and y into a 64-bit Morton code (z-order).
@@ -67,15 +74,28 @@ fn spread_bits(v: u32) -> u64 {
 /// random bursts); multiple edits share the same second, producing the
 /// duplicate density the paper calls out as hard for the RMI.
 pub fn wiki_edit(n: usize, rng: &mut Xoshiro256pp) -> Vec<u64> {
-    const T0: u64 = 1_000_000_000; // ~2001
+    let mut t = WIKI_T0;
+    let mut out = wiki_edit_fill(&mut t, n, rng, false);
+    // The SOSD file is sorted; the sort benchmark shuffles it. Emit
+    // shuffled (sortedness is a property benchmarks control separately).
+    rng.shuffle(&mut out);
+    out
+}
+
+/// Epoch of the simulated edit process (~2001).
+pub const WIKI_T0: u64 = 1_000_000_000;
+
+/// Produce `n` edit timestamps continuing the process from clock `*t`.
+/// With `shuffle` the chunk is shuffled locally (the monolithic generator
+/// shuffles globally instead — chunked output is the same multiset).
+pub fn wiki_edit_fill(t: &mut u64, n: usize, rng: &mut Xoshiro256pp, shuffle: bool) -> Vec<u64> {
     const SPAN: u64 = 20 * 365 * 24 * 3600;
     let mut out = Vec::with_capacity(n);
-    let mut t = T0;
     // Burst state: occasionally an article gets a flurry of same-second
     // edits (vandalism reverts, bot runs).
     while out.len() < n {
         // growth: later timestamps arrive faster (rate grows over the span)
-        let frac = (t.saturating_sub(T0)) as f64 / SPAN as f64;
+        let frac = (t.saturating_sub(WIKI_T0)) as f64 / SPAN as f64;
         let rate = 1.0 + 8.0 * frac;
         let burst = if rng.next_f64() < 0.02 {
             2 + rng.next_below(24) as usize
@@ -86,17 +106,17 @@ pub fn wiki_edit(n: usize, rng: &mut Xoshiro256pp) -> Vec<u64> {
             if out.len() >= n {
                 break;
             }
-            out.push(t);
+            out.push(*t);
         }
         // next edit-second gap (skewed toward small gaps)
-        t += 1 + (rng.exponential(0.8) * 3.0) as u64;
-        if t > T0 + SPAN {
-            t = T0 + rng.next_below(SPAN);
+        *t += 1 + (rng.exponential(0.8) * 3.0) as u64;
+        if *t > WIKI_T0 + SPAN {
+            *t = WIKI_T0 + rng.next_below(SPAN);
         }
     }
-    // The SOSD file is sorted; the sort benchmark shuffles it. Emit
-    // shuffled (sortedness is a property benchmarks control separately).
-    rng.shuffle(&mut out);
+    if shuffle {
+        rng.shuffle(&mut out);
+    }
     out
 }
 
@@ -105,23 +125,24 @@ pub fn wiki_edit(n: usize, rng: &mut Xoshiro256pp) -> Vec<u64> {
 /// Pareto tail — reproducing the "RMI-hard" CDF the paper attributes its
 /// lowest AIPS2o throughput to.
 pub fn fb_ids(n: usize, rng: &mut Xoshiro256pp) -> Vec<u64> {
-    (0..n)
-        .map(|_| {
-            let body = rng.lognormal(24.0, 2.2); // spans many octaves
-            let x = if rng.next_f64() < 0.005 {
-                // heavy tail: a few astronomically large ids
-                body * rng.pareto(0.6)
-            } else {
-                body
-            };
-            // clamp into u64, keep sparse high range
-            if x >= u64::MAX as f64 {
-                u64::MAX - rng.next_below(1 << 20)
-            } else {
-                x as u64
-            }
-        })
-        .collect()
+    (0..n).map(|_| fb_id_sample(rng)).collect()
+}
+
+/// One heavy-tailed user id.
+pub fn fb_id_sample(rng: &mut Xoshiro256pp) -> u64 {
+    let body = rng.lognormal(24.0, 2.2); // spans many octaves
+    let x = if rng.next_f64() < 0.005 {
+        // heavy tail: a few astronomically large ids
+        body * rng.pareto(0.6)
+    } else {
+        body
+    };
+    // clamp into u64, keep sparse high range
+    if x >= u64::MAX as f64 {
+        u64::MAX - rng.next_below(1 << 20)
+    } else {
+        x as u64
+    }
 }
 
 /// Books/Sales: Amazon book popularity. Simulated as Zipf-ranked sales
@@ -131,45 +152,52 @@ pub fn books_sales(n: usize, rng: &mut Xoshiro256pp) -> Vec<u64> {
     if n == 0 {
         return Vec::new();
     }
-    let z = Zipf::new((n as u64).max(1000), 0.9);
-    (0..n)
-        .map(|_| {
-            let rank = z.sample(rng);
-            // sales ~ C / rank^0.9, quantized to integers; the long tail
-            // of low-sales books collapses onto plateau values (3, 4, 5 ...
-            // sales) — extensive duplicate classes, as in the real data
-            let sales = (5e4 / (rank as f64).powf(0.9)) as u64;
-            if sales < 1000 {
-                sales
-            } else {
-                // jitter big counts slightly (distinct bestsellers)
-                sales * 1000 + rng.next_below(sales)
-            }
-        })
-        .collect()
+    let z = books_rank_law(n);
+    (0..n).map(|_| books_sample(&z, rng)).collect()
+}
+
+/// The popularity law for an N-book catalogue.
+pub fn books_rank_law(n: usize) -> Zipf {
+    Zipf::new((n as u64).max(1000), 0.9)
+}
+
+/// One quantized sales count under the fixed popularity law.
+pub fn books_sample(z: &Zipf, rng: &mut Xoshiro256pp) -> u64 {
+    let rank = z.sample(rng);
+    // sales ~ C / rank^0.9, quantized to integers; the long tail
+    // of low-sales books collapses onto plateau values (3, 4, 5 ...
+    // sales) — extensive duplicate classes, as in the real data
+    let sales = (5e4 / (rank as f64).powf(0.9)) as u64;
+    if sales < 1000 {
+        sales
+    } else {
+        // jitter big counts slightly (distinct bestsellers)
+        sales * 1000 + rng.next_below(sales)
+    }
 }
 
 /// NYC/Pickup: yellow-taxi pickup timestamps. Simulated as one year of
 /// POSIX seconds from an arrival process whose intensity follows daily and
 /// weekly sinusoidal cycles (rush hours, quiet Sundays).
 pub fn nyc_pickup(n: usize, rng: &mut Xoshiro256pp) -> Vec<u64> {
+    (0..n).map(|_| nyc_sample(rng)).collect()
+}
+
+/// One seasonal pickup timestamp.
+pub fn nyc_sample(rng: &mut Xoshiro256pp) -> u64 {
     const T0: u64 = 1_640_995_200; // 2022-01-01
     const YEAR: f64 = 365.0 * 24.0 * 3600.0;
     let day = 24.0 * 3600.0;
     let week = 7.0 * day;
-    (0..n)
-        .map(|_| {
-            // rejection-sample a time of year by seasonal intensity
-            loop {
-                let t = rng.next_f64() * YEAR;
-                let daily = 0.6 + 0.4 * (std::f64::consts::TAU * (t % day) / day - 1.0).cos();
-                let weekly = 0.8 + 0.2 * (std::f64::consts::TAU * (t % week) / week).cos();
-                if rng.next_f64() < daily * weekly {
-                    return T0 + t as u64;
-                }
-            }
-        })
-        .collect()
+    // rejection-sample a time of year by seasonal intensity
+    loop {
+        let t = rng.next_f64() * YEAR;
+        let daily = 0.6 + 0.4 * (std::f64::consts::TAU * (t % day) / day - 1.0).cos();
+        let weekly = 0.8 + 0.2 * (std::f64::consts::TAU * (t % week) / week).cos();
+        if rng.next_f64() < daily * weekly {
+            return T0 + t as u64;
+        }
+    }
 }
 
 #[cfg(test)]

@@ -6,7 +6,13 @@ use crate::util::rng::{Xoshiro256pp, Zipf};
 
 /// Uniform distribution with a = 0 and b = N.
 pub fn uniform(n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
-    (0..n).map(|_| rng.uniform(0.0, n as f64)).collect()
+    uniform_of(n, n, rng)
+}
+
+/// `len` draws of the Uniform(0, n_total) dataset (chunked generation
+/// needs the range decoupled from the draw count).
+pub fn uniform_of(n_total: usize, len: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    (0..len).map(|_| rng.uniform(0.0, n_total as f64)).collect()
 }
 
 /// Normal distribution with mu = 0 and sigma = 1.
@@ -22,16 +28,23 @@ pub fn lognormal(n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
 /// Random additive distribution of five Gaussian distributions: component
 /// means/sds drawn once per dataset instance, then equal-weight mixture.
 pub fn mix_gauss(n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    let comps = mix_gauss_components(n, rng);
+    (0..n).map(|_| mix_gauss_sample(&comps, rng)).collect()
+}
+
+/// The mixture's component (mean, sd) pairs — drawn once per dataset
+/// instance (split out so chunked generation reuses one draw).
+pub fn mix_gauss_components(n: usize, rng: &mut Xoshiro256pp) -> Vec<(f64, f64)> {
     let scale = (n as f64).max(1e4);
-    let comps: Vec<(f64, f64)> = (0..5)
+    (0..5)
         .map(|_| (rng.uniform(0.0, scale), rng.uniform(scale / 100.0, scale / 10.0)))
-        .collect();
-    (0..n)
-        .map(|_| {
-            let (mu, sd) = comps[rng.next_below(5) as usize];
-            rng.normal_with(mu, sd)
-        })
         .collect()
+}
+
+/// One draw from the fixed mixture.
+pub fn mix_gauss_sample(comps: &[(f64, f64)], rng: &mut Xoshiro256pp) -> f64 {
+    let (mu, sd) = comps[rng.next_below(comps.len() as u64) as usize];
+    rng.normal_with(mu, sd)
 }
 
 /// Exponential distribution with lambda = 2.
@@ -47,14 +60,25 @@ pub fn chi_squared(n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
 /// RootDups: A[i] = i mod sqrt(N) — sqrt(N) distinct values, each repeated
 /// ~sqrt(N) times in a periodic ramp (the equality-bucket stress test).
 pub fn root_dups(n: usize) -> Vec<f64> {
-    let m = (n as f64).sqrt().floor().max(1.0) as usize;
-    (0..n).map(|i| (i % m) as f64).collect()
+    root_dups_range(n, 0, n)
+}
+
+/// The RootDups slice `[start, start + len)` of an N = `n_total` dataset
+/// (index-based, so chunked generation is exact).
+pub fn root_dups_range(n_total: usize, start: usize, len: usize) -> Vec<f64> {
+    let m = (n_total as f64).sqrt().floor().max(1.0) as usize;
+    (start..start + len).map(|i| (i % m) as f64).collect()
 }
 
 /// TwoDups: A[i] = i^2 + N/2 mod N.
 pub fn two_dups(n: usize) -> Vec<f64> {
-    let nn = n.max(1) as u128;
-    (0..n as u128)
+    two_dups_range(n, 0, n)
+}
+
+/// The TwoDups slice `[start, start + len)` of an N = `n_total` dataset.
+pub fn two_dups_range(n_total: usize, start: usize, len: usize) -> Vec<f64> {
+    let nn = n_total.max(1) as u128;
+    (start as u128..(start + len) as u128)
         .map(|i| ((i * i + nn / 2) % nn) as f64)
         .collect()
 }
@@ -64,8 +88,13 @@ pub fn zipf(n: usize, rng: &mut Xoshiro256pp) -> Vec<f64> {
     if n == 0 {
         return Vec::new();
     }
-    let z = Zipf::new(n as u64, 0.75);
+    let z = zipf_law(n);
     (0..n).map(|_| z.sample(rng) as f64).collect()
+}
+
+/// The paper's Zipf law (s = 0.75 over {1..N}) as a reusable sampler.
+pub fn zipf_law(n: usize) -> Zipf {
+    Zipf::new(n.max(1) as u64, 0.75)
 }
 
 #[cfg(test)]

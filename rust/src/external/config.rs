@@ -1,0 +1,144 @@
+//! Tuning knobs for the out-of-core sorter.
+//!
+//! The contract: `sort_file`/`sort_iter` never hold more than roughly
+//! [`ExternalConfig::memory_budget`] bytes of keys in memory at once. The
+//! budget sets the run length (one chunk = one sorted run) and clamps the
+//! merge fan-in so `k` read buffers also stay inside it.
+
+use std::path::PathBuf;
+
+/// How sorted runs are produced from raw chunks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunGen {
+    /// Train one monotonic RMI on a sample of the *first* chunk and reuse
+    /// it to partition every subsequent chunk (PCF-style model reuse);
+    /// chunks whose distribution drifted fall back to IPS⁴o.
+    LearnedReuse,
+    /// Plain IPS⁴o run generation (the classical external-sort baseline
+    /// that `fig_external` compares against).
+    Ips4o,
+}
+
+/// Configuration for [`crate::external::sort_file`] / `sort_iter`.
+#[derive(Debug, Clone)]
+pub struct ExternalConfig {
+    /// In-memory working-set budget in bytes. One chunk (= one run) holds
+    /// `memory_budget / size_of::<K>()` keys.
+    pub memory_budget: usize,
+    /// Maximum runs merged per k-way pass (clamped so the merge readers'
+    /// buffers fit the memory budget too).
+    pub merge_fanout: usize,
+    /// Buffered-IO size in bytes per run reader/writer.
+    pub io_buffer: usize,
+    /// Keys per buffer block when partitioning a chunk with the shared RMI
+    /// (same role as `Aips2oConfig::block`).
+    pub block: usize,
+    /// Run-generation strategy.
+    pub run_gen: RunGen,
+    /// Sample size for the shared RMI trained on the first chunk.
+    pub rmi_sample: usize,
+    /// Second-level models in the shared RMI.
+    pub rmi_leaves: usize,
+    /// Buckets when partitioning a chunk with the shared RMI.
+    pub rmi_buckets: usize,
+    /// Duplicate fraction in the first-chunk sample above which no RMI is
+    /// trained at all (Algorithm 5's guard, applied once up front).
+    pub max_dup_fraction: f64,
+    /// Chunks smaller than this always use the IPS⁴o path (model and
+    /// partition setup cannot amortize).
+    pub min_learned_chunk: usize,
+    /// Per-chunk probe size for the drift check.
+    pub drift_probe: usize,
+    /// Mean |F(x) − empirical CDF(x)| over the probe above which the chunk
+    /// is declared drifted and falls back to IPS⁴o.
+    pub drift_threshold: f64,
+    /// Worker threads for in-memory chunk sorting (0 = all cores).
+    pub threads: usize,
+    /// Directory for spilled runs (`None` = the OS temp dir).
+    pub tmp_dir: Option<PathBuf>,
+}
+
+impl Default for ExternalConfig {
+    fn default() -> Self {
+        ExternalConfig {
+            memory_budget: 64 << 20,
+            merge_fanout: 16,
+            io_buffer: 1 << 20,
+            block: 128,
+            run_gen: RunGen::LearnedReuse,
+            rmi_sample: 1 << 16,
+            rmi_leaves: 1024,
+            rmi_buckets: 1024,
+            max_dup_fraction: 0.10,
+            min_learned_chunk: 8192,
+            drift_probe: 2048,
+            drift_threshold: 0.05,
+            threads: 0,
+            tmp_dir: None,
+        }
+    }
+}
+
+impl ExternalConfig {
+    /// Default config with a specific memory budget in bytes.
+    pub fn with_budget(bytes: usize) -> ExternalConfig {
+        ExternalConfig {
+            memory_budget: bytes,
+            ..ExternalConfig::default()
+        }
+    }
+
+    /// Keys per chunk (= per run) for key type `K` under the budget.
+    pub fn chunk_keys<K>(&self) -> usize {
+        (self.memory_budget / std::mem::size_of::<K>().max(1)).max(64)
+    }
+
+    /// IO buffer size actually used, clamped into `[4 KiB, budget/4]` so
+    /// buffers can never dwarf a small memory budget.
+    pub fn effective_io_buffer(&self) -> usize {
+        self.io_buffer.clamp(4096, (self.memory_budget / 4).max(4096))
+    }
+
+    /// Merge fan-in, clamped so `k` reader buffers fit the budget.
+    pub fn effective_fanout(&self) -> usize {
+        let by_budget = (self.memory_budget / self.effective_io_buffer()).max(2);
+        self.merge_fanout.clamp(2, by_budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_keys_scale_with_budget() {
+        let cfg = ExternalConfig::with_budget(1 << 20);
+        assert_eq!(cfg.chunk_keys::<u64>(), (1 << 20) / 8);
+        assert_eq!(cfg.chunk_keys::<f64>(), (1 << 20) / 8);
+        // tiny budgets still make progress
+        assert!(ExternalConfig::with_budget(1).chunk_keys::<u64>() >= 64);
+    }
+
+    #[test]
+    fn io_buffer_clamps_to_budget() {
+        let mut cfg = ExternalConfig::with_budget(64 << 10);
+        // default 1 MiB buffer would be 16x a 64 KiB budget
+        assert_eq!(cfg.effective_io_buffer(), 16 << 10);
+        cfg.memory_budget = 1; // degenerate budget still gets a sane floor
+        assert_eq!(cfg.effective_io_buffer(), 4096);
+        cfg.memory_budget = 1 << 30;
+        assert_eq!(cfg.effective_io_buffer(), cfg.io_buffer);
+    }
+
+    #[test]
+    fn fanout_clamps_to_budget() {
+        let mut cfg = ExternalConfig::with_budget(1 << 20);
+        cfg.io_buffer = 1 << 19;
+        // buffer clamps to budget/4 = 256 KiB → 4 of them fit
+        assert_eq!(cfg.effective_fanout(), 4);
+        cfg.io_buffer = 1 << 12;
+        assert_eq!(cfg.effective_fanout(), 16); // configured fanout holds
+        cfg.merge_fanout = 1;
+        assert_eq!(cfg.effective_fanout(), 2); // never below 2
+    }
+}

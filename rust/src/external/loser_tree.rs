@@ -1,0 +1,205 @@
+//! Cache-friendly k-way merge via a tournament **loser tree**.
+//!
+//! The classic external-merge structure (Knuth TAOCP Vol. 3, §5.4.1): an
+//! implicit array of k−1 internal nodes, each holding the *loser* of its
+//! subtree's match, with the overall winner cached at index 0. Popping the
+//! winner replays exactly one leaf-to-root path — ⌈log₂ k⌉ comparisons
+//! against a contiguous `usize` array, versus a binary heap's sift-down
+//! that compares both children at every level.
+//!
+//! Layout for arbitrary `k` (no power-of-two padding): internal nodes are
+//! `1..k`, the leaf of source `s` is node `k + s`, and the parent of node
+//! `m` is `m / 2`. Exhausted sources hold `None`, which loses to every
+//! live key, so the merge needs no sentinel keys.
+
+use std::io;
+
+use crate::external::spill::{ExtKey, RunReader};
+use crate::key::SortKey;
+
+/// A stream of keys consumed by the merge (each run is nondecreasing).
+pub trait KeyStream<K> {
+    fn next_key(&mut self) -> io::Result<Option<K>>;
+}
+
+impl<K: ExtKey> KeyStream<K> for RunReader<K> {
+    fn next_key(&mut self) -> io::Result<Option<K>> {
+        self.next()
+    }
+}
+
+/// In-memory stream, for tests and for merging resident chunks.
+pub struct VecStream<K> {
+    iter: std::vec::IntoIter<K>,
+}
+
+impl<K> VecStream<K> {
+    pub fn new(keys: Vec<K>) -> VecStream<K> {
+        VecStream {
+            iter: keys.into_iter(),
+        }
+    }
+}
+
+impl<K: SortKey> KeyStream<K> for VecStream<K> {
+    fn next_key(&mut self) -> io::Result<Option<K>> {
+        Ok(self.iter.next())
+    }
+}
+
+/// K-way merging loser tree over any [`KeyStream`] sources.
+pub struct LoserTree<K: SortKey, S: KeyStream<K>> {
+    sources: Vec<S>,
+    /// Current head key per source (`None` = exhausted).
+    head: Vec<Option<K>>,
+    /// `tree[0]` = overall winner source; `tree[1..k]` = per-node losers.
+    tree: Vec<usize>,
+    k: usize,
+}
+
+impl<K: SortKey, S: KeyStream<K>> LoserTree<K, S> {
+    pub fn new(mut sources: Vec<S>) -> io::Result<LoserTree<K, S>> {
+        let k = sources.len();
+        let mut head = Vec::with_capacity(k);
+        for s in sources.iter_mut() {
+            head.push(s.next_key()?);
+        }
+        let mut tree = vec![0usize; k.max(1)];
+        if k > 0 {
+            let winner = build(1, k, &head, &mut tree);
+            tree[0] = winner;
+        }
+        Ok(LoserTree {
+            sources,
+            head,
+            tree,
+            k,
+        })
+    }
+
+    /// Pop the smallest head key across all sources; `None` when all
+    /// sources are exhausted.
+    #[allow(clippy::should_implement_trait)] // fallible: io::Result, not Iterator
+    pub fn next(&mut self) -> io::Result<Option<K>> {
+        if self.k == 0 {
+            return Ok(None);
+        }
+        let w = self.tree[0];
+        let Some(key) = self.head[w] else {
+            return Ok(None); // winner exhausted ⇒ everyone exhausted
+        };
+        self.head[w] = self.sources[w].next_key()?;
+        // Replay the leaf-to-root path of source w.
+        let mut winner = w;
+        let mut node = (self.k + w) / 2;
+        while node >= 1 {
+            let challenger = self.tree[node];
+            if wins(&self.head, challenger, winner) {
+                self.tree[node] = winner;
+                winner = challenger;
+            }
+            node /= 2;
+        }
+        self.tree[0] = winner;
+        Ok(Some(key))
+    }
+
+    /// Drain the merge into a vector (tests / small merges).
+    pub fn collect_all(&mut self) -> io::Result<Vec<K>> {
+        let mut out = Vec::new();
+        while let Some(k) = self.next()? {
+            out.push(k);
+        }
+        Ok(out)
+    }
+}
+
+/// Source `a` beats source `b` iff its head orders strictly first
+/// (exhausted sources lose to everything; ties break to the lower index
+/// for determinism).
+fn wins<K: SortKey>(head: &[Option<K>], a: usize, b: usize) -> bool {
+    match (head[a], head[b]) {
+        (Some(x), Some(y)) => {
+            let (xb, yb) = (x.to_bits_ordered(), y.to_bits_ordered());
+            xb < yb || (xb == yb && a < b)
+        }
+        (Some(_), None) => true,
+        (None, Some(_)) => false,
+        (None, None) => a < b,
+    }
+}
+
+/// Recursively play the initial tournament under `node`, recording losers
+/// and returning the subtree's winner.
+fn build<K: SortKey>(node: usize, k: usize, head: &[Option<K>], tree: &mut [usize]) -> usize {
+    if node >= k {
+        return node - k; // leaf: source index
+    }
+    let a = build(2 * node, k, head, tree);
+    let b = build(2 * node + 1, k, head, tree);
+    let (winner, loser) = if wins(head, a, b) { (a, b) } else { (b, a) };
+    tree[node] = loser;
+    winner
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn merge_vecs(runs: Vec<Vec<u64>>) -> Vec<u64> {
+        let sources: Vec<VecStream<u64>> = runs.into_iter().map(VecStream::new).collect();
+        LoserTree::new(sources).unwrap().collect_all().unwrap()
+    }
+
+    #[test]
+    fn merges_three_runs() {
+        let out = merge_vecs(vec![vec![5], vec![1, 9], vec![3]]);
+        assert_eq!(out, vec![1, 3, 5, 9]);
+    }
+
+    #[test]
+    fn handles_empty_and_degenerate() {
+        assert_eq!(merge_vecs(vec![]), Vec::<u64>::new());
+        assert_eq!(merge_vecs(vec![vec![]]), Vec::<u64>::new());
+        assert_eq!(merge_vecs(vec![vec![], vec![2, 4], vec![]]), vec![2, 4]);
+        assert_eq!(merge_vecs(vec![vec![7, 8, 9]]), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn duplicates_across_runs() {
+        let out = merge_vecs(vec![vec![1, 1, 5], vec![1, 5, 5], vec![1]]);
+        assert_eq!(out, vec![1, 1, 1, 1, 5, 5, 5]);
+    }
+
+    #[test]
+    fn random_fanouts_match_flat_sort() {
+        let mut rng = Xoshiro256pp::new(0x105E);
+        for k in [1usize, 2, 3, 4, 5, 7, 8, 13, 16, 31] {
+            let mut all = Vec::new();
+            let mut runs = Vec::new();
+            for _ in 0..k {
+                let len = rng.next_below(200) as usize;
+                let mut run: Vec<u64> =
+                    (0..len).map(|_| rng.next_below(1000)).collect();
+                run.sort_unstable();
+                all.extend_from_slice(&run);
+                runs.push(run);
+            }
+            all.sort_unstable();
+            assert_eq!(merge_vecs(runs), all, "k={k}");
+        }
+    }
+
+    #[test]
+    fn f64_total_order_merge() {
+        let runs = vec![vec![-1.5f64, -0.0, 2.0], vec![-2.0, 0.0, 1.0]];
+        let sources: Vec<VecStream<f64>> = runs.into_iter().map(VecStream::new).collect();
+        let out = LoserTree::new(sources).unwrap().collect_all().unwrap();
+        let bits: Vec<u64> = out.iter().map(|x| x.to_bits_ordered()).collect();
+        let mut sorted = bits.clone();
+        sorted.sort_unstable();
+        assert_eq!(bits, sorted);
+        assert_eq!(out.len(), 6);
+    }
+}

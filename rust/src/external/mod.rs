@@ -1,0 +1,218 @@
+//! Out-of-core learned sorting (substrate S13) — sorts datasets larger
+//! than memory under an explicit byte budget.
+//!
+//! Pipeline (the classic two-phase external sort, with a learned twist):
+//!
+//! 1. **Run generation** ([`run_writer`]): the input is consumed in
+//!    budget-sized chunks; one monotonic RMI is trained on a sample of the
+//!    *first* chunk and **reused** to partition every subsequent chunk
+//!    (PCF-style model reuse). A per-chunk drift probe
+//!    ([`crate::rmi::quality::model_drift`]) demotes chunks whose
+//!    distribution no longer matches the model to the IPS⁴o path. Each
+//!    sorted chunk spills as one run ([`spill`]).
+//! 2. **K-way merge** ([`loser_tree`]): runs stream-merge through a
+//!    tournament loser tree, fan-in clamped so the read buffers respect
+//!    the same memory budget; extra passes handle run counts above the
+//!    fan-in.
+//!
+//! Entry points: [`sort_file`] (binary key files, the `aipso gen --out` /
+//! `aipso extsort` format) and [`sort_iter`] (any in-process key stream).
+//! The coordinator admits these as `JobPayload::External` jobs so one
+//! out-of-core sort never thrashes the in-memory service path.
+
+pub mod config;
+pub mod loser_tree;
+pub mod run_writer;
+pub mod spill;
+
+pub use config::{ExternalConfig, RunGen};
+pub use loser_tree::{KeyStream, LoserTree, VecStream};
+pub use run_writer::RunGenStats;
+pub use spill::{
+    file_key_count, read_keys_file, verify_sorted_file, write_keys_file, ExtKey, RunFile,
+    RunReader, RunWriter, SpillDir,
+};
+
+use std::io;
+use std::path::Path;
+
+/// Outcome of one external sort.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExternalSortReport {
+    /// Total keys sorted.
+    pub keys: u64,
+    /// Sorted runs spilled during run generation.
+    pub runs: usize,
+    /// Runs sorted via the reused RMI partition.
+    pub learned_runs: usize,
+    /// Runs sorted via the IPS⁴o fallback.
+    pub fallback_runs: usize,
+    /// Whether the shared RMI was trained (at most once per sort).
+    pub rmi_trained: bool,
+    /// K-way merge passes performed (0 when the input fit in one run).
+    pub merge_passes: usize,
+}
+
+/// Sort a binary key file (8-byte little-endian keys, the format written
+/// by `aipso gen --out`) into `output`, holding at most roughly
+/// `cfg.memory_budget` bytes of keys in memory.
+pub fn sort_file<K: ExtKey>(
+    input: &Path,
+    output: &Path,
+    cfg: &ExternalConfig,
+) -> io::Result<ExternalSortReport> {
+    let mut reader = RunReader::<K>::open(input, cfg.effective_io_buffer())?;
+    let mut src = move |max: usize| -> io::Result<Option<Vec<K>>> {
+        let chunk = reader.read_chunk(max)?;
+        Ok(if chunk.is_empty() { None } else { Some(chunk) })
+    };
+    sort_from(&mut src, output, cfg)
+}
+
+/// Sort an arbitrary key stream into `output` under the memory budget.
+pub fn sort_iter<K: ExtKey, I>(
+    keys: I,
+    output: &Path,
+    cfg: &ExternalConfig,
+) -> io::Result<ExternalSortReport>
+where
+    I: IntoIterator<Item = K>,
+{
+    let mut it = keys.into_iter();
+    let mut src = move |max: usize| -> io::Result<Option<Vec<K>>> {
+        let chunk: Vec<K> = it.by_ref().take(max).collect();
+        Ok(if chunk.is_empty() { None } else { Some(chunk) })
+    };
+    sort_from(&mut src, output, cfg)
+}
+
+/// Shared driver: generate runs, then merge them into `output`.
+fn sort_from<K: ExtKey>(
+    next_chunk: &mut dyn FnMut(usize) -> io::Result<Option<Vec<K>>>,
+    output: &Path,
+    cfg: &ExternalConfig,
+) -> io::Result<ExternalSortReport> {
+    let mut spill = SpillDir::create(cfg.tmp_dir.as_deref())?;
+    let (mut runs, stats) = run_writer::generate_runs(next_chunk, &mut spill, cfg)?;
+
+    let mut report = ExternalSortReport {
+        keys: stats.keys,
+        runs: runs.len(),
+        learned_runs: stats.learned_chunks,
+        fallback_runs: stats.fallback_chunks,
+        rmi_trained: stats.rmi_trained,
+        merge_passes: 0,
+    };
+
+    if runs.is_empty() {
+        // empty input — still produce (truncate to) an empty output file
+        std::fs::File::create(output)?;
+        return Ok(report);
+    }
+
+    // Intermediate passes while the run count exceeds the fan-in.
+    let fanout = cfg.effective_fanout();
+    while runs.len() > fanout {
+        let mut next_round = Vec::with_capacity((runs.len() + fanout - 1) / fanout);
+        for group in runs.chunks(fanout) {
+            if group.len() == 1 {
+                // a trailing singleton carries forward untouched — no point
+                // rewriting a whole run through a 1-way merge
+                next_round.push(group[0].clone());
+                continue;
+            }
+            let merged = merge_group::<K>(group, spill.next_run_path(), cfg)?;
+            for r in group {
+                let _ = std::fs::remove_file(&r.path);
+            }
+            next_round.push(merged);
+        }
+        runs = next_round;
+        report.merge_passes += 1;
+    }
+
+    // Final pass streams straight into the output file.
+    if runs.len() == 1 {
+        // single run: plain buffered copy, no tree needed
+        std::fs::copy(&runs[0].path, output)?;
+    } else {
+        let merged = merge_group::<K>(&runs, output.to_path_buf(), cfg)?;
+        debug_assert_eq!(merged.n, report.keys);
+        report.merge_passes += 1;
+    }
+    Ok(report)
+}
+
+/// Merge one group of runs into `out_path` through the loser tree.
+fn merge_group<K: ExtKey>(
+    runs: &[RunFile],
+    out_path: std::path::PathBuf,
+    cfg: &ExternalConfig,
+) -> io::Result<RunFile> {
+    let io_buffer = cfg.effective_io_buffer();
+    let mut sources = Vec::with_capacity(runs.len());
+    for r in runs {
+        sources.push(RunReader::<K>::open(&r.path, io_buffer)?);
+    }
+    let mut tree = LoserTree::new(sources)?;
+    let mut w = RunWriter::<K>::create(out_path, io_buffer)?;
+    while let Some(k) = tree.next()? {
+        w.push(k)?;
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("aipso-ext-mod-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn sort_iter_multi_pass_merge() {
+        let out = tmp("multipass.bin");
+        let mut rng = Xoshiro256pp::new(9);
+        let n = 20_000;
+        let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        // 256-key chunks and fan-in 2 force several merge passes
+        let cfg = ExternalConfig {
+            memory_budget: 256 * 8,
+            io_buffer: 1024, // budget/io_buffer = 2 → fan-in 2
+            threads: 1,
+            ..ExternalConfig::default()
+        };
+        let report = sort_iter(keys.iter().copied(), &out, &cfg).unwrap();
+        assert_eq!(report.keys, n as u64);
+        assert!(report.runs > 16, "runs={}", report.runs);
+        assert!(report.merge_passes >= 2, "passes={}", report.merge_passes);
+        let mut want = keys;
+        want.sort_unstable();
+        assert_eq!(read_keys_file::<u64>(&out).unwrap(), want);
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn empty_input_writes_empty_output() {
+        let out = tmp("empty.bin");
+        let report =
+            sort_iter::<u64, _>(std::iter::empty(), &out, &ExternalConfig::default()).unwrap();
+        assert_eq!(report.keys, 0);
+        assert_eq!(report.runs, 0);
+        assert_eq!(std::fs::metadata(&out).unwrap().len(), 0);
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn single_run_copies_through() {
+        let out = tmp("single.bin");
+        let keys: Vec<u64> = vec![5, 3, 9, 1];
+        let report = sort_iter(keys, &out, &ExternalConfig::default()).unwrap();
+        assert_eq!(report.runs, 1);
+        assert_eq!(report.merge_passes, 0);
+        assert_eq!(read_keys_file::<u64>(&out).unwrap(), vec![1, 3, 5, 9]);
+        let _ = std::fs::remove_file(&out);
+    }
+}

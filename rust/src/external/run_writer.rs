@@ -1,0 +1,279 @@
+//! Run generation — the learned half of the external sorter.
+//!
+//! Classical external sorts (and IPS⁴o used out-of-core) sample and build
+//! a fresh partitioning model for every chunk. Following PCF Learned Sort's
+//! observation that the learned-CDF machinery amortizes when a model is
+//! reused across partitions, we train **one** monotonic RMI on a sample of
+//! the *first* chunk and reuse it to partition every subsequent chunk:
+//!
+//! 1. first chunk: draw a sample; if it is duplicate-heavy (Algorithm 5's
+//!    guard) skip the model entirely, else train the shared RMI;
+//! 2. every chunk: score the shared model with [`quality::model_drift`]
+//!    against a fresh probe — if the stream's distribution drifted, fall
+//!    back to IPS⁴o ([`crate::sample_sort`]) for that chunk;
+//! 3. learned path: partition the chunk in place with the shared
+//!    [`RmiClassifier`] (the same block framework every engine uses), then
+//!    sort each bucket with sequential AIPS²o tasks on the pool;
+//! 4. write the sorted chunk as one spilled run.
+
+use std::io;
+
+use crate::classifier::rmi_classifier::RmiClassifier;
+use crate::classifier::Classifier;
+use crate::external::config::{ExternalConfig, RunGen};
+use crate::external::spill::{ExtKey, RunFile, RunWriter, SpillDir};
+use crate::rmi::model::{Rmi, RmiConfig};
+use crate::rmi::quality;
+use crate::sample_sort::partition::partition;
+use crate::scheduler::run_task_pool;
+use crate::util::rng::Xoshiro256pp;
+
+/// Counters describing one run-generation pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunGenStats {
+    /// Chunks read (== runs written).
+    pub chunks: usize,
+    /// Chunks sorted via the shared RMI partition.
+    pub learned_chunks: usize,
+    /// Chunks sorted via the IPS⁴o fallback.
+    pub fallback_chunks: usize,
+    /// Whether the shared RMI was trained (at most once per sort).
+    pub rmi_trained: bool,
+    /// Total keys across all runs.
+    pub keys: u64,
+}
+
+/// Pull chunks from `next_chunk` (up to `cfg.chunk_keys::<K>()` keys per
+/// call), sort each, and spill them as sorted runs.
+pub(crate) fn generate_runs<K: ExtKey>(
+    next_chunk: &mut dyn FnMut(usize) -> io::Result<Option<Vec<K>>>,
+    spill: &mut SpillDir,
+    cfg: &ExternalConfig,
+) -> io::Result<(Vec<RunFile>, RunGenStats)> {
+    let chunk_keys = cfg.chunk_keys::<K>();
+    let threads = crate::scheduler::effective_threads(cfg.threads);
+    let mut rng = Xoshiro256pp::new(0xE87_5041 ^ chunk_keys as u64);
+    let mut shared: Option<RmiClassifier> = None;
+    let mut first_chunk = true;
+    let mut stats = RunGenStats::default();
+    let mut runs = Vec::new();
+
+    while let Some(mut chunk) = next_chunk(chunk_keys)? {
+        if chunk.is_empty() {
+            continue;
+        }
+        stats.chunks += 1;
+        stats.keys += chunk.len() as u64;
+
+        if cfg.run_gen == RunGen::LearnedReuse && first_chunk {
+            shared = train_shared_rmi(&chunk, cfg, &mut rng);
+            stats.rmi_trained = shared.is_some();
+        }
+        first_chunk = false;
+
+        let learned = match (&shared, cfg.run_gen) {
+            (Some(classifier), RunGen::LearnedReuse) => {
+                chunk.len() >= cfg.min_learned_chunk
+                    && !drifted(&chunk, classifier.rmi(), cfg, &mut rng)
+            }
+            _ => false,
+        };
+        if learned {
+            learned_sort_chunk(&mut chunk, shared.as_ref().unwrap(), cfg, threads);
+            stats.learned_chunks += 1;
+        } else {
+            crate::sample_sort::sort_par(&mut chunk, threads);
+            stats.fallback_chunks += 1;
+        }
+        debug_assert!(crate::is_sorted(&chunk));
+
+        let mut w = RunWriter::create(spill.next_run_path(), cfg.effective_io_buffer())?;
+        w.write_slice(&chunk)?;
+        runs.push(w.finish()?);
+    }
+    Ok((runs, stats))
+}
+
+/// Train the shared RMI from a sample of the first chunk; `None` when the
+/// chunk is too small to amortize a model or the sample is duplicate-heavy
+/// (every chunk then takes the IPS⁴o path, exactly Algorithm 5's routing).
+fn train_shared_rmi<K: ExtKey>(
+    chunk: &[K],
+    cfg: &ExternalConfig,
+    rng: &mut Xoshiro256pp,
+) -> Option<RmiClassifier> {
+    if chunk.len() < cfg.min_learned_chunk {
+        return None;
+    }
+    // Reservoir (without replacement): the sample is a large fraction of
+    // one chunk, and index collisions from with-replacement draws would
+    // masquerade as duplicates and falsely trip the guard below.
+    let ssz = cfg.rmi_sample.min(chunk.len());
+    let mut picked: Vec<K> = Vec::new();
+    rng.reservoir_sample(chunk, ssz, &mut picked);
+    let mut sample: Vec<f64> = picked.iter().map(|k| k.to_f64()).collect();
+    sample.sort_unstable_by(f64::total_cmp);
+    if crate::aips2o::strategy::duplicate_fraction(&sample) > cfg.max_dup_fraction {
+        return None;
+    }
+    let rmi = Rmi::train(
+        &sample,
+        RmiConfig {
+            n_leaves: cfg.rmi_leaves,
+        },
+    );
+    // Fan-out scaled to the chunk so the per-thread block buffers
+    // (buckets × block keys) stay a small fraction of the memory budget
+    // and buckets land near the base-case size.
+    let n_buckets = cfg
+        .rmi_buckets
+        .min((chunk.len() / (4 * cfg.block.max(1))).max(2).next_power_of_two());
+    Some(RmiClassifier::new(rmi, n_buckets))
+}
+
+/// Probe the chunk and score the shared model; true when the stream's
+/// distribution no longer matches what the model was trained on.
+fn drifted<K: ExtKey>(
+    chunk: &[K],
+    rmi: &Rmi,
+    cfg: &ExternalConfig,
+    rng: &mut Xoshiro256pp,
+) -> bool {
+    let m = cfg.drift_probe.min(chunk.len());
+    if m == 0 {
+        return false;
+    }
+    let mut probe: Vec<f64> = (0..m)
+        .map(|_| chunk[rng.next_below(chunk.len() as u64) as usize].to_f64())
+        .collect();
+    probe.sort_unstable_by(f64::total_cmp);
+    quality::model_drift(rmi, &probe) > cfg.drift_threshold
+}
+
+/// Partition the chunk with the shared RMI, then sort the buckets as
+/// pool tasks (the same pattern as `aips2o::sort_par`, with the top-level
+/// model fixed instead of retrained).
+fn learned_sort_chunk<K: ExtKey>(
+    chunk: &mut [K],
+    classifier: &RmiClassifier,
+    cfg: &ExternalConfig,
+    threads: usize,
+) {
+    // cooperative partition only pays off with enough keys per thread
+    // (same guard as the in-memory engines)
+    let threads = if chunk.len() >= 4 * cfg.block * threads.max(1) {
+        threads
+    } else {
+        1
+    };
+    let result = partition(chunk, classifier, cfg.block, threads);
+    let nb = Classifier::<K>::num_buckets(classifier);
+    let base = chunk.as_mut_ptr() as usize;
+    let mut tasks: Vec<(usize, usize)> = Vec::new();
+    for b in 0..nb {
+        let (lo, hi) = (result.boundaries[b], result.boundaries[b + 1]);
+        if hi - lo > 1 {
+            tasks.push((lo, hi - lo));
+        }
+    }
+    run_task_pool(threads, tasks, move |(off, len), _spawner| {
+        // SAFETY: partition boundaries produce disjoint ranges of `chunk`.
+        let sub = unsafe { std::slice::from_raw_parts_mut((base as *mut K).add(off), len) };
+        crate::aips2o::sort_seq(sub);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::external::spill::read_keys_file;
+    use crate::is_sorted;
+
+    fn gen_from_vec<K: ExtKey>(
+        keys: Vec<K>,
+        cfg: &ExternalConfig,
+    ) -> (Vec<RunFile>, RunGenStats, SpillDir) {
+        let mut it = keys.into_iter();
+        let mut src = move |max: usize| -> io::Result<Option<Vec<K>>> {
+            let chunk: Vec<K> = it.by_ref().take(max).collect();
+            Ok(if chunk.is_empty() { None } else { Some(chunk) })
+        };
+        let mut spill = SpillDir::create(None).unwrap();
+        let (runs, stats) = generate_runs(&mut src, &mut spill, cfg).unwrap();
+        (runs, stats, spill)
+    }
+
+    #[test]
+    fn runs_are_sorted_and_cover_input() {
+        let mut rng = Xoshiro256pp::new(3);
+        // 6 exact chunks of 16Ki keys — every chunk clears min_learned_chunk
+        let keys: Vec<f64> = (0..98_304).map(|_| rng.uniform(0.0, 1e6)).collect();
+        let cfg = ExternalConfig {
+            memory_budget: 16_384 * 8, // 16Ki keys per chunk
+            threads: 2,
+            ..ExternalConfig::default()
+        };
+        let (runs, stats, _spill) = gen_from_vec(keys.clone(), &cfg);
+        assert_eq!(stats.chunks, runs.len());
+        assert_eq!(stats.keys, keys.len() as u64);
+        assert!(stats.rmi_trained, "smooth first chunk must train the RMI");
+        assert_eq!(stats.learned_chunks, stats.chunks, "no drift expected");
+        let mut total = 0u64;
+        for r in &runs {
+            let keys: Vec<f64> = read_keys_file(&r.path).unwrap();
+            assert_eq!(keys.len() as u64, r.n);
+            assert!(is_sorted(&keys));
+            total += r.n;
+        }
+        assert_eq!(total, stats.keys);
+    }
+
+    #[test]
+    fn duplicate_heavy_first_chunk_skips_model() {
+        let keys: Vec<u64> = (0..60_000).map(|i| i % 7).collect();
+        let cfg = ExternalConfig {
+            memory_budget: 16_384 * 8,
+            threads: 1,
+            ..ExternalConfig::default()
+        };
+        let (_runs, stats, _spill) = gen_from_vec(keys, &cfg);
+        assert!(!stats.rmi_trained);
+        assert_eq!(stats.fallback_chunks, stats.chunks);
+    }
+
+    #[test]
+    fn drifted_chunks_fall_back() {
+        let mut rng = Xoshiro256pp::new(4);
+        // chunk 1: U(0, 1e6); chunks 2-3: U(5e6, 6e6) — model predicts ~1
+        let mut keys: Vec<f64> = (0..16_384).map(|_| rng.uniform(0.0, 1e6)).collect();
+        keys.extend((0..32_768).map(|_| rng.uniform(5e6, 6e6)));
+        let cfg = ExternalConfig {
+            memory_budget: 16_384 * 8,
+            threads: 1,
+            ..ExternalConfig::default()
+        };
+        let (runs, stats, _spill) = gen_from_vec(keys, &cfg);
+        assert!(stats.rmi_trained);
+        assert_eq!(stats.learned_chunks, 1);
+        assert_eq!(stats.fallback_chunks, 2);
+        for r in &runs {
+            assert!(is_sorted(&read_keys_file::<f64>(&r.path).unwrap()));
+        }
+    }
+
+    #[test]
+    fn ips4o_strategy_never_trains() {
+        let mut rng = Xoshiro256pp::new(5);
+        let keys: Vec<f64> = (0..40_000).map(|_| rng.uniform(0.0, 1e6)).collect();
+        let cfg = ExternalConfig {
+            memory_budget: 16_384 * 8,
+            run_gen: RunGen::Ips4o,
+            threads: 1,
+            ..ExternalConfig::default()
+        };
+        let (_runs, stats, _spill) = gen_from_vec(keys, &cfg);
+        assert!(!stats.rmi_trained);
+        assert_eq!(stats.learned_chunks, 0);
+        assert_eq!(stats.fallback_chunks, stats.chunks);
+    }
+}

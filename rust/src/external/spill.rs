@@ -1,0 +1,358 @@
+//! Spill codec and run files — the IO substrate of the external sorter.
+//!
+//! Keys are stored as fixed-width 8-byte little-endian values in their
+//! *native* encoding (`f64::to_le_bytes` / `u64::to_le_bytes`), the same
+//! format `aipso gen --out` writes, so any generated dataset file is a
+//! valid `sort_file` input and outputs round-trip byte-exactly. The
+//! [`ExtKey`] trait bounds the codec to the paper's two key domains.
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::marker::PhantomData;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::key::SortKey;
+
+/// Bytes per encoded key.
+pub const KEY_BYTES: usize = 8;
+
+/// A key type the external sorter can spill: [`SortKey`] plus a fixed
+/// 8-byte little-endian native encoding (the paper's two domains).
+pub trait ExtKey: SortKey {
+    fn to_le8(self) -> [u8; 8];
+    fn from_le8(bytes: [u8; 8]) -> Self;
+}
+
+impl ExtKey for u64 {
+    #[inline(always)]
+    fn to_le8(self) -> [u8; 8] {
+        self.to_le_bytes()
+    }
+
+    #[inline(always)]
+    fn from_le8(bytes: [u8; 8]) -> Self {
+        u64::from_le_bytes(bytes)
+    }
+}
+
+impl ExtKey for f64 {
+    #[inline(always)]
+    fn to_le8(self) -> [u8; 8] {
+        self.to_le_bytes()
+    }
+
+    #[inline(always)]
+    fn from_le8(bytes: [u8; 8]) -> Self {
+        f64::from_le_bytes(bytes)
+    }
+}
+
+/// A spilled run (or any key file) on disk.
+#[derive(Debug, Clone)]
+pub struct RunFile {
+    pub path: PathBuf,
+    /// Number of keys in the file.
+    pub n: u64,
+}
+
+/// Scratch directory owning the spilled runs of one sort; removed
+/// (best-effort) on drop.
+#[derive(Debug)]
+pub struct SpillDir {
+    dir: PathBuf,
+    counter: u64,
+}
+
+impl SpillDir {
+    /// Create a fresh uniquely-named scratch directory under `base`
+    /// (`None` = the OS temp dir).
+    pub fn create(base: Option<&Path>) -> io::Result<SpillDir> {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let base = base
+            .map(Path::to_path_buf)
+            .unwrap_or_else(std::env::temp_dir);
+        let dir = base.join(format!(
+            "aipso-extsort-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir)?;
+        Ok(SpillDir { dir, counter: 0 })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Fresh path for the next spilled run.
+    pub fn next_run_path(&mut self) -> PathBuf {
+        self.counter += 1;
+        self.dir.join(format!("run-{:06}.bin", self.counter))
+    }
+}
+
+impl Drop for SpillDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Buffered streaming reader over a key file.
+pub struct RunReader<K: ExtKey> {
+    r: BufReader<File>,
+    remaining: u64,
+    _pd: PhantomData<K>,
+}
+
+impl<K: ExtKey> RunReader<K> {
+    pub fn open(path: &Path, io_buffer: usize) -> io::Result<RunReader<K>> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        if len % KEY_BYTES as u64 != 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "{}: length {len} is not a multiple of {KEY_BYTES}",
+                    path.display()
+                ),
+            ));
+        }
+        Ok(RunReader {
+            r: BufReader::with_capacity(io_buffer.max(4096), file),
+            remaining: len / KEY_BYTES as u64,
+            _pd: PhantomData,
+        })
+    }
+
+    /// Keys left in the file.
+    pub fn remaining(&self) -> u64 {
+        self.remaining
+    }
+
+    /// Next key, or `None` at end of file.
+    #[allow(clippy::should_implement_trait)] // fallible: io::Result, not Iterator
+    pub fn next(&mut self) -> io::Result<Option<K>> {
+        if self.remaining == 0 {
+            return Ok(None);
+        }
+        let mut buf = [0u8; KEY_BYTES];
+        self.r.read_exact(&mut buf)?;
+        self.remaining -= 1;
+        Ok(Some(K::from_le8(buf)))
+    }
+
+    /// Read up to `max` keys; an empty vec means EOF. Decodes through a
+    /// fixed scratch slab so peak memory stays `max * 8 + O(slab)` — not
+    /// double the chunk, which would break the sorter's byte budget.
+    pub fn read_chunk(&mut self, max: usize) -> io::Result<Vec<K>> {
+        let take = (self.remaining.min(max as u64)) as usize;
+        if take == 0 {
+            return Ok(Vec::new());
+        }
+        let mut out = Vec::with_capacity(take);
+        let mut slab = [0u8; 1024 * KEY_BYTES];
+        let mut left = take;
+        while left > 0 {
+            let now = left.min(slab.len() / KEY_BYTES);
+            let bytes = &mut slab[..now * KEY_BYTES];
+            self.r.read_exact(bytes)?;
+            for c in bytes.chunks_exact(KEY_BYTES) {
+                let mut b = [0u8; KEY_BYTES];
+                b.copy_from_slice(c);
+                out.push(K::from_le8(b));
+            }
+            left -= now;
+        }
+        self.remaining -= take as u64;
+        Ok(out)
+    }
+}
+
+/// Buffered streaming writer producing a [`RunFile`].
+pub struct RunWriter<K: ExtKey> {
+    w: BufWriter<File>,
+    path: PathBuf,
+    n: u64,
+    _pd: PhantomData<K>,
+}
+
+impl<K: ExtKey> RunWriter<K> {
+    pub fn create(path: PathBuf, io_buffer: usize) -> io::Result<RunWriter<K>> {
+        let file = File::create(&path)?;
+        Ok(RunWriter {
+            w: BufWriter::with_capacity(io_buffer.max(4096), file),
+            path,
+            n: 0,
+            _pd: PhantomData,
+        })
+    }
+
+    #[inline]
+    pub fn push(&mut self, key: K) -> io::Result<()> {
+        self.w.write_all(&key.to_le8())?;
+        self.n += 1;
+        Ok(())
+    }
+
+    /// Bulk spill: encodes through a fixed slab and writes in blocks,
+    /// mirroring `RunReader::read_chunk` (no per-key `write_all`).
+    pub fn write_slice(&mut self, keys: &[K]) -> io::Result<()> {
+        let mut slab = [0u8; 1024 * KEY_BYTES];
+        for block in keys.chunks(1024) {
+            let bytes = &mut slab[..block.len() * KEY_BYTES];
+            for (c, k) in bytes.chunks_exact_mut(KEY_BYTES).zip(block) {
+                c.copy_from_slice(&k.to_le8());
+            }
+            self.w.write_all(bytes)?;
+        }
+        self.n += keys.len() as u64;
+        Ok(())
+    }
+
+    /// Flush and close, returning the finished run's metadata.
+    pub fn finish(mut self) -> io::Result<RunFile> {
+        self.w.flush()?;
+        Ok(RunFile {
+            path: self.path,
+            n: self.n,
+        })
+    }
+}
+
+/// Write a whole in-memory slice as a key file.
+pub fn write_keys_file<K: ExtKey>(path: &Path, keys: &[K]) -> io::Result<RunFile> {
+    let mut w = RunWriter::create(path.to_path_buf(), 1 << 16)?;
+    w.write_slice(keys)?;
+    w.finish()
+}
+
+/// Load a whole key file into memory (tests / small files only).
+pub fn read_keys_file<K: ExtKey>(path: &Path) -> io::Result<Vec<K>> {
+    let mut r = RunReader::<K>::open(path, 1 << 16)?;
+    let n = r.remaining() as usize;
+    r.read_chunk(n)
+}
+
+/// Number of keys in a key file (from its byte length).
+pub fn file_key_count(path: &Path) -> io::Result<u64> {
+    let len = std::fs::metadata(path)?.len();
+    if len % KEY_BYTES as u64 != 0 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!(
+                "{}: length {len} is not a multiple of {KEY_BYTES}",
+                path.display()
+            ),
+        ));
+    }
+    Ok(len / KEY_BYTES as u64)
+}
+
+/// Stream-verify that a key file is nondecreasing under the key's total
+/// order, in O(io_buffer) memory.
+pub fn verify_sorted_file<K: ExtKey>(path: &Path, io_buffer: usize) -> io::Result<bool> {
+    let mut r = RunReader::<K>::open(path, io_buffer)?;
+    let mut prev: Option<u64> = None;
+    while let Some(k) = r.next()? {
+        let bits = k.to_bits_ordered();
+        if let Some(p) = prev {
+            if bits < p {
+                return Ok(false);
+            }
+        }
+        prev = Some(bits);
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("aipso-spill-test-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_u64_and_f64() {
+        let p = tmp("rt-u64.bin");
+        let keys: Vec<u64> = vec![0, 1, u64::MAX, 42, 7];
+        write_keys_file(&p, &keys).unwrap();
+        assert_eq!(file_key_count(&p).unwrap(), 5);
+        assert_eq!(read_keys_file::<u64>(&p).unwrap(), keys);
+        let _ = std::fs::remove_file(&p);
+
+        let p = tmp("rt-f64.bin");
+        let keys: Vec<f64> = vec![-1.5, 0.0, -0.0, 1e300, 1e-300];
+        write_keys_file(&p, &keys).unwrap();
+        let back = read_keys_file::<f64>(&p).unwrap();
+        let a: Vec<u64> = keys.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u64> = back.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "bit-exact reload");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn chunked_reads_cover_file() {
+        let p = tmp("chunks.bin");
+        let keys: Vec<u64> = (0..1000).collect();
+        write_keys_file(&p, &keys).unwrap();
+        let mut r = RunReader::<u64>::open(&p, 4096).unwrap();
+        let mut got = Vec::new();
+        loop {
+            let c = r.read_chunk(64);
+            let c = c.unwrap();
+            if c.is_empty() {
+                break;
+            }
+            got.extend(c);
+        }
+        assert_eq!(got, keys);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn verify_detects_disorder() {
+        let p = tmp("verify.bin");
+        write_keys_file(&p, &[1u64, 2, 3]).unwrap();
+        assert!(verify_sorted_file::<u64>(&p, 4096).unwrap());
+        write_keys_file(&p, &[3u64, 2]).unwrap();
+        assert!(!verify_sorted_file::<u64>(&p, 4096).unwrap());
+        write_keys_file::<u64>(&p, &[]).unwrap();
+        assert!(verify_sorted_file::<u64>(&p, 4096).unwrap());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn f64_order_via_bits_in_verify() {
+        let p = tmp("verify-f64.bin");
+        write_keys_file(&p, &[-2.5f64, -0.0, 0.0, 3.5]).unwrap();
+        assert!(verify_sorted_file::<f64>(&p, 4096).unwrap());
+        write_keys_file(&p, &[0.0f64, -0.0]).unwrap();
+        assert!(!verify_sorted_file::<f64>(&p, 4096).unwrap());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn spill_dir_cleans_up() {
+        let dir;
+        {
+            let mut s = SpillDir::create(None).unwrap();
+            dir = s.path().to_path_buf();
+            let p = s.next_run_path();
+            write_keys_file(&p, &[1u64]).unwrap();
+            assert!(dir.exists());
+        }
+        assert!(!dir.exists(), "SpillDir must remove itself on drop");
+    }
+
+    #[test]
+    fn odd_length_file_rejected() {
+        let p = tmp("odd.bin");
+        std::fs::write(&p, [0u8; 7]).unwrap();
+        assert!(RunReader::<u64>::open(&p, 4096).is_err());
+        assert!(file_key_count(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

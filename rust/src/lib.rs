@@ -20,6 +20,10 @@
 //!   ([`classifier`]), a work-pool scheduler ([`scheduler`]), the PJRT
 //!   artifact runtime ([`runtime`]), a sort-job coordinator
 //!   ([`coordinator`]), and the benchmark harness ([`bench_harness`]).
+//! * An **out-of-core sorter** ([`external`]): datasets larger than memory
+//!   are sorted under an explicit byte budget — chunked run generation
+//!   reusing one monotonic RMI across all chunks (with a drift-probe
+//!   fallback to IPS⁴o), binary spill files, and a k-way loser-tree merge.
 //!
 //! The learned model also exists as an AOT-compiled JAX/Pallas artifact
 //! (see `python/compile/`); [`runtime`] loads and executes it via PJRT so
@@ -34,6 +38,20 @@
 //! sort_parallel(SortEngine::Aips2o, &mut keys, 0 /* 0 = all cores */);
 //! assert!(aipso::is_sorted(&keys));
 //! ```
+//!
+//! Out-of-core (dataset ≫ RAM; see `examples/extsort.rs`):
+//!
+//! ```no_run
+//! use aipso::external::{self, ExternalConfig};
+//!
+//! let cfg = ExternalConfig::with_budget(64 << 20); // 64 MiB working set
+//! let report = external::sort_file::<f64>(
+//!     "uniform.bin".as_ref(),
+//!     "uniform.sorted.bin".as_ref(),
+//!     &cfg,
+//! ).unwrap();
+//! assert!(report.rmi_trained);
+//! ```
 
 pub mod aips2o;
 pub mod baseline;
@@ -41,6 +59,7 @@ pub mod bench_harness;
 pub mod classifier;
 pub mod coordinator;
 pub mod datasets;
+pub mod external;
 pub mod key;
 pub mod learned_qs;
 pub mod learned_sort;
@@ -115,7 +134,7 @@ impl SortEngine {
             "ips4o" | "i1s4o" => SortEngine::Ips4o,
             "ips2ra" | "i1s2ra" => SortEngine::Ips2ra,
             "learnedsort" | "ls" => SortEngine::LearnedSort,
-            "std" | "stdsort" | "std::sort" => SortEngine::StdSort,
+            "std" | "stdsort" | "std::sort" | "std::sort(par)" => SortEngine::StdSort,
             "learnedpivotqs" | "lpqs" => SortEngine::LearnedPivotQs,
             "learnedqs" | "lqs" => SortEngine::LearnedQs,
             _ => return None,
@@ -173,10 +192,12 @@ mod tests {
 
     #[test]
     fn engine_parse_roundtrip() {
+        // every paper spelling — sequential and parallel — must parse back
+        // to its engine; all seven engines round-trip
         for e in SortEngine::all() {
-            let name = e.paper_name(false);
-            if let Some(p) = SortEngine::parse(name) {
-                assert_eq!(p, e);
+            for parallel in [false, true] {
+                let name = e.paper_name(parallel);
+                assert_eq!(SortEngine::parse(name), Some(e), "paper name {name:?}");
             }
         }
         assert_eq!(SortEngine::parse("ips4o"), Some(SortEngine::Ips4o));

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   gen             generate a dataset to stdout stats or a binary file
 //!   sort            sort one dataset with one engine, report rate
+//!   extsort         out-of-core sort of a binary key file (memory budget)
 //!   bench           regenerate paper figures (F1–F6) as markdown
 //!   pivot-quality   regenerate Table 2
 //!   phases          per-phase time breakdown for one engine (perf tool)
@@ -14,8 +15,9 @@
 use std::collections::BTreeMap;
 
 use aipso::bench_harness::{self, BenchConfig};
-use aipso::coordinator::{Coordinator, EngineChoice, JobSpec, KeyBuf};
+use aipso::coordinator::{Coordinator, JobSpec, KeyBuf};
 use aipso::datasets::{self, FigureGroup, KeyType};
+use aipso::external::{self, ExternalConfig, RunGen};
 use aipso::rmi::model::{Rmi, RmiConfig};
 use aipso::runtime::RmiRuntime;
 use aipso::util::rng::Xoshiro256pp;
@@ -32,6 +34,7 @@ fn main() {
     let code = match cmd.as_str() {
         "gen" => cmd_gen(&opts),
         "sort" => cmd_sort(&opts),
+        "extsort" => cmd_extsort(&opts),
         "bench" => cmd_bench(&opts),
         "pivot-quality" => cmd_pivot_quality(&opts),
         "phases" => cmd_phases(&opts),
@@ -55,8 +58,11 @@ fn usage_and_exit(unknown: Option<&str>) -> ! {
 USAGE: aipso <command> [--key value ...]
 
 COMMANDS
-  gen             --dataset NAME [--n N] [--seed S] [--out FILE]
+  gen             --dataset NAME [--n N] [--seed S] [--out FILE] [--stream]
   sort            --dataset NAME --engine ENGINE [--n N] [--threads T] [--seq]
+  extsort         --input FILE --output FILE --key f64|u64 [--budget-mb MB]
+                  [--fanout K] [--threads T] [--ips4o-runs]
+                  (or --dataset NAME --n N to synthesize --input first)
   bench           [--figure f1|f2|f3|f4|f5|f6|all] [--n N] [--reps R] [--threads T]
   pivot-quality   [--n N]
   phases          --dataset NAME --engine ENGINE [--n N] [--threads T]
@@ -115,6 +121,31 @@ fn cmd_gen(opts: &BTreeMap<String, String>) -> i32 {
         eprintln!("unknown dataset {name}");
         return 2;
     };
+    if opts.contains_key("stream") {
+        // chunked generation: the dataset never materializes in memory
+        let Some(out) = opts.get("out") else {
+            eprintln!("gen --stream requires --out FILE");
+            return 2;
+        };
+        let chunk = opt_usize(opts, "chunk", 1 << 20);
+        match datasets::write_dataset_file(spec.name, n, seed, out.as_ref(), chunk) {
+            Ok(kt) => {
+                println!(
+                    "wrote {out} ({n} {} keys, {} bytes, chunked)",
+                    match kt {
+                        KeyType::F64 => "f64",
+                        KeyType::U64 => "u64",
+                    },
+                    n * 8,
+                );
+                return 0;
+            }
+            Err(e) => {
+                eprintln!("gen --stream: {e}");
+                return 1;
+            }
+        }
+    }
     let bytes: Vec<u8> = match spec.key_type {
         KeyType::F64 => {
             let v = datasets::generate_f64(spec.name, n, seed).unwrap();
@@ -201,6 +232,95 @@ fn cmd_sort(opts: &BTreeMap<String, String>) -> i32 {
         fmt::secs(secs),
         fmt::rate(n as f64 / secs.max(1e-12)),
         if ok { "sorted" } else { "NOT SORTED" },
+    );
+    if ok {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
+    let Some(input) = opts.get("input") else {
+        eprintln!("extsort: --input required");
+        return 2;
+    };
+    let Some(output) = opts.get("output") else {
+        eprintln!("extsort: --output required");
+        return 2;
+    };
+    let mut cfg = ExternalConfig::default();
+    if let Some(mb) = opts.get("budget-mb").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.memory_budget = mb.max(1) << 20;
+    }
+    cfg.merge_fanout = opt_usize(opts, "fanout", cfg.merge_fanout);
+    cfg.threads = opt_usize(opts, "threads", 0);
+    if opts.contains_key("ips4o-runs") {
+        cfg.run_gen = RunGen::Ips4o;
+    }
+
+    // Optionally synthesize the input file from a named dataset first.
+    let key_type = if let Some(dataset) = opts.get("dataset") {
+        let n = opt_usize(opts, "n", 8_000_000);
+        let seed = opt_u64(opts, "seed", 42);
+        match datasets::write_dataset_file(dataset, n, seed, input.as_ref(), 1 << 20) {
+            Ok(kt) => {
+                println!("synthesized {input}: {dataset}, {n} keys");
+                kt
+            }
+            Err(e) => {
+                eprintln!("extsort: {e}");
+                return 2;
+            }
+        }
+    } else {
+        match opts.get("key").map(|s| s.as_str()) {
+            Some("f64") => KeyType::F64,
+            Some("u64") => KeyType::U64,
+            _ => {
+                eprintln!("extsort: --key f64|u64 required (or --dataset NAME)");
+                return 2;
+            }
+        }
+    };
+
+    let t0 = std::time::Instant::now();
+    let result = match key_type {
+        KeyType::F64 => external::sort_file::<f64>(input.as_ref(), output.as_ref(), &cfg),
+        KeyType::U64 => external::sort_file::<u64>(input.as_ref(), output.as_ref(), &cfg),
+    };
+    let report = match result {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("extsort failed: {e}");
+            return 1;
+        }
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    let ok = match key_type {
+        KeyType::F64 => {
+            external::verify_sorted_file::<f64>(output.as_ref(), cfg.effective_io_buffer())
+        }
+        KeyType::U64 => {
+            external::verify_sorted_file::<u64>(output.as_ref(), cfg.effective_io_buffer())
+        }
+    }
+    .unwrap_or(false);
+    println!(
+        "extsort {} -> {}: {} keys in {} — {} [{}]\n  budget {} MiB, {} runs \
+         ({} learned, {} fallback), rmi trained: {}, merge passes: {}",
+        input,
+        output,
+        fmt::keys(report.keys as usize),
+        fmt::secs(secs),
+        fmt::rate(report.keys as f64 / secs.max(1e-12)),
+        if ok { "sorted" } else { "NOT SORTED" },
+        cfg.memory_budget >> 20,
+        report.runs,
+        report.learned_runs,
+        report.fallback_runs,
+        report.rmi_trained,
+        report.merge_passes,
     );
     if ok {
         0
@@ -326,12 +446,7 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> i32 {
                 datasets::generate_f64("root_dups", size, rng.next_u64()).unwrap(),
             ),
         };
-        coordinator.submit(JobSpec {
-            id,
-            keys,
-            engine: EngineChoice::Auto,
-            parallel: true,
-        });
+        coordinator.submit(JobSpec::auto(id, keys));
     }
     let (reports, metrics) = coordinator.drain();
     let failures = reports.iter().filter(|r| !r.verified_sorted).count();

@@ -87,6 +87,23 @@ pub fn pivot_quality<K: SortKey>(sorted: &[K], pivots: &[Option<K>]) -> f64 {
         .sum()
 }
 
+/// Drift score of a trained model against a fresh **sorted** probe: the
+/// mean |F(x) − empirical CDF(x)| over the probe. 0 means the model still
+/// describes the data perfectly; the external sorter's run generation
+/// falls back to IPS⁴o when this exceeds its drift threshold.
+pub fn model_drift(rmi: &Rmi, probe_sorted: &[f64]) -> f64 {
+    let m = probe_sorted.len();
+    if m == 0 {
+        return 0.0;
+    }
+    let mut err = 0.0;
+    for (j, &x) in probe_sorted.iter().enumerate() {
+        let emp = (j as f64 + 0.5) / m as f64;
+        err += (rmi.predict(x) - emp).abs();
+    }
+    err / m as f64
+}
+
 /// Convenience for pivot sets without gaps.
 pub fn pivot_quality_exact<K: SortKey>(sorted: &[K], pivots: &[K]) -> f64 {
     let wrapped: Vec<Option<K>> = pivots.iter().map(|&p| Some(p)).collect();
@@ -154,6 +171,24 @@ mod tests {
         for w in p.windows(2) {
             assert!(w[0] <= w[1]);
         }
+    }
+
+    #[test]
+    fn model_drift_low_in_distribution_high_after_shift() {
+        let mut rng = Xoshiro256pp::new(0xD21F);
+        let mut sample: Vec<f64> = (0..8192).map(|_| rng.uniform(0.0, 1e6)).collect();
+        sample.sort_unstable_by(f64::total_cmp);
+        let rmi = Rmi::train(&sample, RmiConfig { n_leaves: 256 });
+        let mut probe: Vec<f64> = (0..2048).map(|_| rng.uniform(0.0, 1e6)).collect();
+        probe.sort_unstable_by(f64::total_cmp);
+        let in_dist = model_drift(&rmi, &probe);
+        assert!(in_dist < 0.02, "in-distribution drift {in_dist}");
+        // shifted regime: the model predicts ~1.0 everywhere
+        let mut shifted: Vec<f64> = (0..2048).map(|_| rng.uniform(5e6, 6e6)).collect();
+        shifted.sort_unstable_by(f64::total_cmp);
+        let out_dist = model_drift(&rmi, &shifted);
+        assert!(out_dist > 0.2, "shifted drift {out_dist}");
+        assert_eq!(model_drift(&rmi, &[]), 0.0);
     }
 
     #[test]

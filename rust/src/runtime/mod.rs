@@ -10,13 +10,20 @@
 //! mirror in [`crate::rmi`] is the per-key hot path. `rust/tests/
 //! pjrt_parity.rs` pins the two together numerically, and the
 //! `ablation_pjrt_vs_native` bench quantifies the FFI + batching overhead.
+//!
+//! Offline builds compile against the in-tree [`xla`] stub (the
+//! `xla_extension` native library cannot be vendored here); every XLA
+//! entry point then reports "backend not available" and the callers fall
+//! back to / skip onto the native path.
+
+pub mod xla;
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
 use crate::rmi::model::Rmi;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
+use crate::{anyhow, bail};
 
 /// Parsed `artifacts/manifest.json`.
 #[derive(Debug, Clone)]

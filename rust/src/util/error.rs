@@ -1,0 +1,153 @@
+//! Minimal error-context substrate (the `anyhow` subset the crate uses;
+//! no external dependencies are available offline): an [`Error`] carrying
+//! a context chain, [`Result`], the [`Context`] extension for `Result` and
+//! `Option`, and the `anyhow!` / `bail!` macros (exported at crate root).
+//!
+//! `{e}` prints the outermost context, `{e:#}` the full chain
+//! (`outer: ...: root cause`), matching how the callers format errors.
+
+use std::fmt;
+
+/// Context-chained error. Deliberately does **not** implement
+/// `std::error::Error`, so the blanket `From<E: std::error::Error>`
+/// conversion below stays coherent (the same trick `anyhow` uses).
+pub struct Error {
+    /// Outermost context first, root cause last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error {
+            chain: vec![msg.to_string()],
+        }
+    }
+
+    fn wrap(mut self, context: String) -> Error {
+        self.chain.insert(0, context);
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            writeln!(f, "\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                writeln!(f, "    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(|| ...)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (crate-root export).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an [`Error`] from a format string (crate-root export).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let r: Result<()> = Err(io_err()).with_context(|| "reading manifest".to_string());
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<u32> = None.context("missing field");
+        assert_eq!(format!("{:#}", r.unwrap_err()), "missing field");
+        let r: Result<u32> = Some(7).context("unused");
+        assert_eq!(r.unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("bad {}", 42);
+        assert_eq!(format!("{e}"), "bad 42");
+        fn f() -> Result<()> {
+            bail!("nope: {}", "reason")
+        }
+        assert_eq!(format!("{:#}", f().unwrap_err()), "nope: reason");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

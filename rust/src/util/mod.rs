@@ -1,6 +1,7 @@
 //! Shared substrates: PRNG + distribution samplers, statistics, timers,
-//! a property-test harness, and formatting helpers.
+//! a property-test harness, error contexts, and formatting helpers.
 
+pub mod error;
 pub mod fmt;
 pub mod json;
 pub mod proptest;

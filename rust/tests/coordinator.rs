@@ -65,12 +65,12 @@ fn router_policies_visible_in_reports() {
 fn fixed_engine_jobs_and_throughput_reporting() {
     let coordinator = Coordinator::new(4);
     for (i, engine) in SortEngine::PARALLEL_FIGURES.iter().enumerate() {
-        coordinator.submit(JobSpec {
-            id: i as u64,
-            keys: KeyBuf::U64(datasets::generate_u64("nyc_pickup", 100_000, i as u64).unwrap()),
-            engine: EngineChoice::Fixed(*engine),
-            parallel: true,
-        });
+        let mut job = JobSpec::auto(
+            i as u64,
+            KeyBuf::U64(datasets::generate_u64("nyc_pickup", 100_000, i as u64).unwrap()),
+        );
+        job.engine = EngineChoice::Fixed(*engine);
+        coordinator.submit(job);
     }
     let (reports, metrics) = coordinator.drain();
     assert_eq!(reports.len(), 4);
@@ -81,6 +81,48 @@ fn fixed_engine_jobs_and_throughput_reporting() {
     }
     let report = metrics.report();
     assert!(report.contains("AIPS2o"), "report:\n{report}");
+}
+
+#[test]
+fn external_job_end_to_end() {
+    use aipso::coordinator::ExternalJob;
+    use aipso::datasets::KeyType;
+    use aipso::external::{read_keys_file, ExternalConfig};
+
+    let dir = std::env::temp_dir();
+    let input = dir.join(format!("aipso-it-coord-ext-{}.bin", std::process::id()));
+    let output = dir.join(format!("aipso-it-coord-ext-{}.out.bin", std::process::id()));
+    // dataset 4x larger than the configured budget, straight from the
+    // chunked generator (never materialized in memory at once)
+    let n = 65_536;
+    datasets::write_f64_file("uniform", n, 9, &input, 8192).unwrap();
+
+    let coordinator = Coordinator::new(2);
+    coordinator.submit(JobSpec::external(
+        0,
+        ExternalJob {
+            input: input.clone(),
+            output: output.clone(),
+            key_type: KeyType::F64,
+            config: ExternalConfig::with_budget(n / 4 * 8),
+        },
+    ));
+    let (reports, metrics) = coordinator.drain();
+    assert_eq!(reports.len(), 1);
+    assert!(reports[0].verified_sorted);
+    assert!(reports[0].external);
+    assert_eq!(reports[0].n, n);
+    assert_eq!(metrics.total_failures(), 0);
+
+    let mut want = datasets::generate_f64("uniform", n, 9).unwrap();
+    want.sort_unstable_by(f64::total_cmp);
+    let got = read_keys_file::<f64>(&output).unwrap();
+    assert_eq!(
+        got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+    );
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
 }
 
 #[test]

@@ -1,0 +1,226 @@
+//! Integration + property tests for the out-of-core sorter: byte-exact
+//! agreement with `sort_unstable` on the reloaded output across random
+//! chunk-size/budget combinations, duplicate-heavy inputs, edge cases,
+//! and the acceptance scenario (data ≥ 4x the memory budget with the RMI
+//! trained once and reused for every run).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use aipso::datasets;
+use aipso::external::{self, read_keys_file, write_keys_file, ExternalConfig, RunGen};
+use aipso::util::proptest::{check_sized, PropConfig};
+use aipso::util::rng::Xoshiro256pp;
+
+fn tmp(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "aipso-extsort-it-{}-{}-{tag}.bin",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Small-file config: tiny IO buffers so merge fan-in clamps kick in.
+fn cfg_with_budget(budget_bytes: usize) -> ExternalConfig {
+    ExternalConfig {
+        memory_budget: budget_bytes.max(512),
+        io_buffer: 1 << 12,
+        threads: 2,
+        ..ExternalConfig::default()
+    }
+}
+
+fn sort_u64_via_file(keys: &[u64], cfg: &ExternalConfig) -> Vec<u64> {
+    let input = tmp("u64-in");
+    let output = tmp("u64-out");
+    write_keys_file(&input, keys).unwrap();
+    let report = external::sort_file::<u64>(&input, &output, cfg).unwrap();
+    assert_eq!(report.keys as usize, keys.len());
+    let got = read_keys_file::<u64>(&output).unwrap();
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
+    got
+}
+
+fn sort_f64_via_iter(keys: &[f64], cfg: &ExternalConfig) -> Vec<f64> {
+    let output = tmp("f64-out");
+    let report = external::sort_iter(keys.iter().copied(), &output, cfg).unwrap();
+    assert_eq!(report.keys as usize, keys.len());
+    let got = read_keys_file::<f64>(&output).unwrap();
+    let _ = std::fs::remove_file(&output);
+    got
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn property_u64_random_budgets_match_sort_unstable() {
+    check_sized(
+        "extsort-u64-budgets",
+        PropConfig::with_max_size(24, 1 << 14),
+        |rng, n| {
+            let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            // budget between 0.5 KiB and ~64 KiB — from "everything is one
+            // chunk" down to hundreds of tiny runs and multi-pass merges
+            let budget = 512usize << rng.next_below(8);
+            let got = sort_u64_via_file(&keys, &cfg_with_budget(budget));
+            let mut want = keys;
+            want.sort_unstable();
+            if got != want {
+                return Err(format!("mismatch at n={n} budget={budget}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_f64_random_budgets_bit_exact() {
+    check_sized(
+        "extsort-f64-budgets",
+        PropConfig::with_max_size(24, 1 << 14),
+        |rng, n| {
+            // NaN-free total-order keys: mixture incl. negatives and ±0
+            let keys: Vec<f64> = (0..n)
+                .map(|_| match rng.next_below(4) {
+                    0 => rng.normal() * 1e6,
+                    1 => -rng.exponential(0.001),
+                    2 => 0.0 * if rng.next_f64() < 0.5 { -1.0 } else { 1.0 },
+                    _ => rng.uniform(-1e9, 1e9),
+                })
+                .collect();
+            let budget = 512usize << rng.next_below(8);
+            let got = sort_f64_via_iter(&keys, &cfg_with_budget(budget));
+            let mut want = keys;
+            want.sort_unstable_by(f64::total_cmp);
+            if bits(&got) != bits(&want) {
+                return Err(format!("bit mismatch at n={n} budget={budget}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn duplicate_heavy_zipf_and_two_dups() {
+    for name in ["zipf", "two_dups"] {
+        let keys = datasets::generate_f64(name, 120_000, 13).unwrap();
+        // ~16Ki-key chunks: well above min_learned_chunk, so the learned
+        // path is offered and Algorithm 5's duplicate guard must route away
+        let got = sort_f64_via_iter(&keys, &cfg_with_budget(16_384 * 8));
+        let mut want = keys;
+        want.sort_unstable_by(f64::total_cmp);
+        assert_eq!(bits(&got), bits(&want), "{name}");
+    }
+}
+
+#[test]
+fn edge_cases_empty_single_sorted_constant() {
+    let cfg = cfg_with_budget(4096);
+    // empty
+    assert!(sort_u64_via_file(&[], &cfg).is_empty());
+    // single element
+    assert_eq!(sort_u64_via_file(&[42], &cfg), vec![42]);
+    // already sorted across many chunks
+    let sorted: Vec<u64> = (0..20_000).collect();
+    assert_eq!(sort_u64_via_file(&sorted, &cfg), sorted);
+    // reverse sorted
+    let rev: Vec<u64> = (0..20_000).rev().collect();
+    assert_eq!(sort_u64_via_file(&rev, &cfg), sorted);
+    // constant
+    let c = vec![7u64; 10_000];
+    assert_eq!(sort_u64_via_file(&c, &cfg), c);
+}
+
+#[test]
+fn acceptance_f64_dataset_4x_budget_rmi_reused() {
+    // 600k uniform doubles ≈ 4.6 MiB of keys vs a 1 MiB budget (4.58x):
+    // 5 runs, all generated with the single RMI trained on chunk 1.
+    let n = 600_000;
+    let input = tmp("accept-f64-in");
+    let output = tmp("accept-f64-out");
+    datasets::write_f64_file("uniform", n, 21, &input, 1 << 16).unwrap();
+    let cfg = cfg_with_budget(1 << 20);
+    let report = external::sort_file::<f64>(&input, &output, &cfg).unwrap();
+    assert_eq!(report.keys as usize, n);
+    assert!(report.runs >= 4, "runs={}", report.runs);
+    assert!(report.rmi_trained, "RMI must be trained on the first chunk");
+    assert_eq!(
+        report.learned_runs, report.runs,
+        "the one trained RMI must be reused for every run"
+    );
+    assert_eq!(report.fallback_runs, 0);
+    assert!(external::verify_sorted_file::<f64>(&output, 1 << 16).unwrap());
+    let mut want = datasets::generate_f64("uniform", n, 21).unwrap();
+    want.sort_unstable_by(f64::total_cmp);
+    assert_eq!(bits(&read_keys_file::<f64>(&output).unwrap()), bits(&want));
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn acceptance_u64_dataset_4x_budget_rmi_reused() {
+    // nyc_pickup: a near-uniform seasonal timestamp CDF the RMI models
+    // tightly, nearly duplicate-free — the learned path engages on every
+    // chunk and iid chunks keep the drift probe quiet.
+    let n = 600_000;
+    let input = tmp("accept-u64-in");
+    let output = tmp("accept-u64-out");
+    datasets::write_u64_file("nyc_pickup", n, 22, &input, 1 << 16).unwrap();
+    let cfg = cfg_with_budget(1 << 20);
+    let report = external::sort_file::<u64>(&input, &output, &cfg).unwrap();
+    assert_eq!(report.keys as usize, n);
+    assert!(report.runs >= 4, "runs={}", report.runs);
+    assert!(report.rmi_trained);
+    assert_eq!(report.learned_runs, report.runs);
+    assert!(external::verify_sorted_file::<u64>(&output, 1 << 16).unwrap());
+    let mut want = datasets::generate_u64("nyc_pickup", n, 22).unwrap();
+    want.sort_unstable();
+    assert_eq!(read_keys_file::<u64>(&output).unwrap(), want);
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn drift_fallback_engages_and_output_still_exact() {
+    // First chunk U(0, 1e6), later chunks U(5e6, 6e6): the reused model
+    // maps the shifted regime to CDF ≈ 1, the drift probe catches it, and
+    // those runs take the IPS4o path.
+    let mut rng = Xoshiro256pp::new(31);
+    let chunk = (1usize << 20) / 8; // keys per 1 MiB chunk
+    let mut keys: Vec<f64> = (0..chunk).map(|_| rng.uniform(0.0, 1e6)).collect();
+    keys.extend((0..3 * chunk).map(|_| rng.uniform(5e6, 6e6)));
+    let output = tmp("drift-out");
+    let cfg = cfg_with_budget(1 << 20);
+    let report = external::sort_iter(keys.iter().copied(), &output, &cfg).unwrap();
+    assert!(report.rmi_trained);
+    assert_eq!(report.learned_runs, 1, "only the first run fits the model");
+    assert!(report.fallback_runs >= 3, "drifted runs must fall back");
+    let mut want = keys;
+    want.sort_unstable_by(f64::total_cmp);
+    assert_eq!(bits(&read_keys_file::<f64>(&output).unwrap()), bits(&want));
+    let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn ips4o_run_strategy_is_exact_too() {
+    let keys = datasets::generate_u64("wiki_edit", 100_000, 5).unwrap();
+    let input = tmp("ips4o-in");
+    let output = tmp("ips4o-out");
+    write_keys_file(&input, &keys).unwrap();
+    let cfg = ExternalConfig {
+        run_gen: RunGen::Ips4o,
+        ..cfg_with_budget(16_384 * 8)
+    };
+    let report = external::sort_file::<u64>(&input, &output, &cfg).unwrap();
+    assert!(!report.rmi_trained);
+    assert_eq!(report.learned_runs, 0);
+    let mut want = keys;
+    want.sort_unstable();
+    assert_eq!(read_keys_file::<u64>(&output).unwrap(), want);
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
+}
