@@ -31,8 +31,8 @@ fn main() {
     );
     aipso::datasets::write_f64_file("lognormal", n, 42, &input, 1 << 20).unwrap();
 
-    // 2. External sort under the budget: chunked run generation with the
-    //    first-chunk RMI reused for every run, then a loser-tree merge.
+    // 2. External sort under the budget: overlapped chunk IO with the
+    //    first-chunk RMI reused for every run, then an RMI-sharded merge.
     let cfg = ExternalConfig::with_budget(budget_mb << 20);
     println!(
         "sorting under a {budget_mb} MiB budget (data = {:.1}x budget) ...",
@@ -49,8 +49,13 @@ fn main() {
         fmt::rate(report.keys as f64 / secs.max(1e-12)),
     );
     println!(
-        "runs: {} ({} learned with the one shared RMI, {} IPS4o fallback), merge passes: {}",
-        report.runs, report.learned_runs, report.fallback_runs, report.merge_passes
+        "runs: {} ({} learned with the one shared RMI, {} IPS4o fallback), \
+         merge passes: {}, final-merge shards: {}",
+        report.runs,
+        report.learned_runs,
+        report.fallback_runs,
+        report.merge_passes,
+        report.merge_shards
     );
 
     // 3. Stream-verify the output.

@@ -1,13 +1,24 @@
-//! External-sort figure (beyond the paper): out-of-core sorting throughput
-//! with learned run generation (one monotonic RMI trained on the first
-//! chunk and reused for every run, PCF-style) vs plain IPS⁴o run
-//! generation — identical spill codec and k-way loser-tree merge on both
-//! sides, so the delta isolates the run-generation strategy.
+//! External-sort figure (beyond the paper): out-of-core sorting throughput.
 //!
-//! Scale with AIPSO_N / AIPSO_EXT_BUDGET_MB (defaults are CI-sized: the
-//! dataset is ~4x the memory budget).
+//! Two sections (methodology: see `BENCHMARKS.md` at the repository root):
+//!
+//! 1. **Run-generation strategies** — learned run generation (one monotonic
+//!    RMI trained on the first chunk and reused for every run, PCF-style)
+//!    vs plain IPS⁴o run generation; identical spill codec and merge on
+//!    both sides, so the delta isolates the run-generation strategy.
+//! 2. **Serial-vs-parallel sweep** — the learned pipeline at 1, 2 and 4
+//!    threads: 1 = the serial reference (serial chunk loop, serial
+//!    loser-tree merge); ≥ 2 = overlapped chunk IO plus the RMI-sharded
+//!    parallel merge. Same budget everywhere, so the delta isolates
+//!    pipeline parallelism.
+//!
+//! Scale with AIPSO_N / AIPSO_EXT_BUDGET_MB / AIPSO_EXT_THREADS (e.g.
+//! `AIPSO_EXT_THREADS=1,2,4,8`; defaults are CI-sized: the dataset is ~4x
+//! the memory budget).
 
-use aipso::bench_harness::{render_external_rows, run_external_figure, BenchConfig};
+use aipso::bench_harness::{
+    render_external_rows, run_external_figure, run_external_thread_sweep, BenchConfig,
+};
 
 fn main() {
     let cfg = BenchConfig::default();
@@ -16,12 +27,18 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or_else(|| ((cfg.n * 8) >> 20).max(1) / 4)
         .max(1);
+    let thread_counts: Vec<usize> = std::env::var("AIPSO_EXT_THREADS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2, 4]);
     println!(
         "# External sort (n = {}, budget = {} MiB, data ≈ {:.1}x budget)\n",
         cfg.n,
         budget_mb,
         (cfg.n * 8) as f64 / ((budget_mb << 20) as f64),
     );
+
     let rows = run_external_figure(
         &["uniform", "lognormal", "zipf", "fb_ids", "wiki_edit"],
         budget_mb << 20,
@@ -34,6 +51,26 @@ fn main() {
     println!(
         "\n(zipf and wiki_edit are duplicate-heavy: Algorithm 5's guard routes\n\
          their runs to IPS4o even under the learned strategy — the learned\n\
-         column shows where the reused RMI actually engages)"
+         column shows where the reused RMI actually engages)\n"
+    );
+
+    let sweep = run_external_thread_sweep(
+        &["uniform", "lognormal", "fb_ids"],
+        budget_mb << 20,
+        &thread_counts,
+        &cfg,
+    );
+    print!(
+        "{}",
+        render_external_rows(
+            "External sort: serial vs parallel pipeline (learned runs)",
+            &sweep
+        )
+    );
+    println!(
+        "\n(threads = 1 is the fully serial reference; parallel rows overlap\n\
+         chunk IO with sorting and shard the final merge with the shared RMI —\n\
+         'serial' in the final-merge column means the drift/size guard fell\n\
+         back to the single loser tree)"
     );
 }

@@ -25,8 +25,10 @@ use crate::util::timer::{phase_scope, Phase};
 
 pub use strategy::{build_partition_model, Strategy, StrategyConfig};
 
+/// Tuning knobs of AIPS²o.
 #[derive(Debug, Clone, Copy)]
 pub struct Aips2oConfig {
+    /// Algorithm 5's strategy-selection thresholds.
     pub strategy: StrategyConfig,
     /// Paper: SkaSort below 4096 keys.
     pub base_case: usize,
@@ -52,6 +54,7 @@ pub fn sort_seq<K: SortKey>(data: &mut [K]) {
     sort_seq_cfg(data, &Aips2oConfig::default());
 }
 
+/// Sequential AIPS²o with explicit configuration.
 pub fn sort_seq_cfg<K: SortKey>(data: &mut [K], cfg: &Aips2oConfig) {
     let mut rng = Xoshiro256pp::new(0xA1B5_0001 ^ data.len() as u64);
     sort_rec(data, cfg, cfg.max_depth, &mut rng, 1);
@@ -62,6 +65,7 @@ pub fn sort_par<K: SortKey>(data: &mut [K], threads: usize) {
     sort_par_cfg(data, threads, &Aips2oConfig::default());
 }
 
+/// Parallel AIPS²o with explicit configuration.
 pub fn sort_par_cfg<K: SortKey>(data: &mut [K], threads: usize, cfg: &Aips2oConfig) {
     let threads = threads.max(1);
     let n = data.len();

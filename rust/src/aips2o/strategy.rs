@@ -15,6 +15,7 @@ use crate::rmi::model::{sample_f64, Rmi, RmiConfig};
 use crate::util::rng::Xoshiro256pp;
 use crate::util::timer::{phase_scope, Phase};
 
+/// Algorithm 5's thresholds and sample sizes.
 #[derive(Debug, Clone, Copy)]
 pub struct StrategyConfig {
     /// Paper: "We default to the decision tree ... if the input size is
@@ -33,6 +34,7 @@ pub struct StrategyConfig {
     pub probe_sample: usize,
     /// Larger RMI training sample as a fraction of n.
     pub rmi_sample_frac: f64,
+    /// Cap on the RMI training sample.
     pub rmi_sample_max: usize,
 }
 
@@ -54,11 +56,14 @@ impl Default for StrategyConfig {
 /// The chosen partitioning model: either the learned classifier or the
 /// comparison-based splitter tree.
 pub enum Strategy<K: SortKey> {
+    /// The learned classifier (monotonic RMI, B = 1024).
     Rmi(RmiClassifier),
+    /// IPS⁴o's branchless splitter tree (B = 256, equality buckets).
     Tree(DecisionTree<K>),
 }
 
 impl<K: SortKey> Strategy<K> {
+    /// True when Algorithm 5 chose the RMI.
     pub fn is_learned(&self) -> bool {
         matches!(self, Strategy::Rmi(_))
     }

@@ -83,6 +83,7 @@ pub struct BalanceStats {
     pub nonempty: usize,
 }
 
+/// Compute [`BalanceStats`] over a bucket-size vector.
 pub fn balance_stats(sizes: &[usize]) -> BalanceStats {
     let n: usize = sizes.iter().sum();
     let nonempty: Vec<f64> = sizes.iter().filter(|&&s| s > 0).map(|&s| s as f64).collect();

@@ -17,6 +17,7 @@ use crate::util::rng::Xoshiro256pp;
 use crate::util::{fmt, stats};
 use crate::{sort_parallel, sort_sequential, SortEngine};
 
+/// Sizing and repetition knobs shared by every figure/bench runner.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchConfig {
     /// Synthetic dataset size (real-world sets scale by their paper
@@ -26,6 +27,7 @@ pub struct BenchConfig {
     pub reps: usize,
     /// Worker threads for the parallel figures (0 = all cores).
     pub threads: usize,
+    /// Base PRNG seed for dataset generation.
     pub seed: u64,
     /// Honour the paper's 2x size factor for real-world datasets.
     pub scale_real_world: bool,
@@ -53,11 +55,17 @@ fn env_usize(name: &str, default: usize) -> usize {
 /// One measured cell.
 #[derive(Debug, Clone)]
 pub struct Row {
+    /// Paper name of the dataset.
     pub dataset: &'static str,
+    /// Paper name of the engine.
     pub engine: &'static str,
+    /// Keys sorted per repetition.
     pub n: usize,
+    /// Mean sorting rate in keys/second.
     pub mean_rate: f64,
+    /// Standard deviation of the rate across repetitions.
     pub stddev_rate: f64,
+    /// Mean wall-clock seconds per repetition.
     pub mean_secs: f64,
 }
 
@@ -228,14 +236,66 @@ fn pivot_quality_row<K: SortKey>(
 /// One measured external-sort cell (bench `fig_external`).
 #[derive(Debug, Clone)]
 pub struct ExternalRow {
+    /// Paper name of the dataset.
     pub dataset: &'static str,
-    pub strategy: &'static str,
+    /// Run-generation strategy / pipeline variant label.
+    pub strategy: String,
+    /// Keys sorted.
     pub n: usize,
+    /// Wall-clock seconds for the whole external sort.
     pub secs: f64,
+    /// Sorting rate in keys/second.
     pub rate: f64,
+    /// Spilled runs.
     pub runs: usize,
+    /// Runs sorted through the reused RMI.
     pub learned_runs: usize,
+    /// K-way merge passes.
     pub merge_passes: usize,
+    /// Worker threads (1 = the serial reference pipeline).
+    pub threads: usize,
+    /// Final-merge shards (0 = serial loser tree).
+    pub merge_shards: usize,
+}
+
+/// Measure one external-sort configuration on a dataset file that is
+/// already on disk, verifying the output before reporting.
+fn external_cell(
+    spec: &'static datasets::DatasetSpec,
+    input: &std::path::Path,
+    output: &std::path::Path,
+    strategy: String,
+    ext: &crate::external::ExternalConfig,
+    n: usize,
+) -> ExternalRow {
+    use crate::external;
+
+    let t0 = std::time::Instant::now();
+    let report = match spec.key_type {
+        KeyType::F64 => external::sort_file::<f64>(input, output, ext),
+        KeyType::U64 => external::sort_file::<u64>(input, output, ext),
+    }
+    .expect("external sort");
+    let secs = t0.elapsed().as_secs_f64();
+    let ok = match spec.key_type {
+        KeyType::F64 => external::verify_sorted_file::<f64>(output, ext.effective_io_buffer()),
+        KeyType::U64 => external::verify_sorted_file::<u64>(output, ext.effective_io_buffer()),
+    }
+    .expect("verify output");
+    assert!(ok, "external sort produced unsorted output on {}", spec.name);
+    assert_eq!(report.keys as usize, n, "key count drift on {}", spec.name);
+    ExternalRow {
+        dataset: spec.paper_name,
+        strategy,
+        n,
+        secs,
+        rate: n as f64 / secs.max(1e-12),
+        runs: report.runs,
+        learned_runs: report.learned_runs,
+        merge_passes: report.merge_passes,
+        threads: crate::scheduler::effective_threads(ext.threads),
+        merge_shards: report.merge_shards,
+    }
 }
 
 /// External-sort scenario: learned run generation (one RMI trained on the
@@ -247,7 +307,7 @@ pub fn run_external_figure(
     budget_bytes: usize,
     cfg: &BenchConfig,
 ) -> Vec<ExternalRow> {
-    use crate::external::{self, ExternalConfig, RunGen};
+    use crate::external::{ExternalConfig, RunGen};
 
     let mut rows = Vec::new();
     let dir = std::env::temp_dir();
@@ -271,34 +331,62 @@ pub fn run_external_figure(
                 threads: cfg.threads,
                 ..ExternalConfig::default()
             };
-            let t0 = std::time::Instant::now();
-            let report = match spec.key_type {
-                KeyType::F64 => external::sort_file::<f64>(&input, &output, &ext),
-                KeyType::U64 => external::sort_file::<u64>(&input, &output, &ext),
-            }
-            .expect("external sort");
-            let secs = t0.elapsed().as_secs_f64();
-            let ok = match spec.key_type {
-                KeyType::F64 => {
-                    external::verify_sorted_file::<f64>(&output, ext.effective_io_buffer())
-                }
-                KeyType::U64 => {
-                    external::verify_sorted_file::<u64>(&output, ext.effective_io_buffer())
-                }
-            }
-            .expect("verify output");
-            assert!(ok, "external sort produced unsorted output on {name}");
-            assert_eq!(report.keys as usize, cfg.n, "key count drift on {name}");
-            rows.push(ExternalRow {
-                dataset: spec.paper_name,
-                strategy,
-                n: cfg.n,
-                secs,
-                rate: cfg.n as f64 / secs.max(1e-12),
-                runs: report.runs,
-                learned_runs: report.learned_runs,
-                merge_passes: report.merge_passes,
-            });
+            rows.push(external_cell(
+                spec,
+                &input,
+                &output,
+                strategy.to_string(),
+                &ext,
+                cfg.n,
+            ));
+        }
+        let _ = std::fs::remove_file(&input);
+        let _ = std::fs::remove_file(&output);
+    }
+    rows
+}
+
+/// Serial-vs-parallel sweep of the learned external pipeline: one row per
+/// (dataset, thread count). `threads = 1` is the serial reference (serial
+/// chunk loop + serial loser-tree merge); `threads >= 2` runs overlapped
+/// chunk IO plus the RMI-sharded final merge. Identical budget and run
+/// strategy everywhere, so the delta isolates pipeline parallelism.
+pub fn run_external_thread_sweep(
+    names: &[&'static str],
+    budget_bytes: usize,
+    thread_counts: &[usize],
+    cfg: &BenchConfig,
+) -> Vec<ExternalRow> {
+    use crate::external::ExternalConfig;
+
+    let mut rows = Vec::new();
+    let dir = std::env::temp_dir();
+    for &name in names {
+        let spec = datasets::spec(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+        let input = dir.join(format!(
+            "aipso-extsweep-{}-{}.bin",
+            std::process::id(),
+            spec.name
+        ));
+        let output = dir.join(format!(
+            "aipso-extsweep-{}-{}.out.bin",
+            std::process::id(),
+            spec.name
+        ));
+        datasets::write_dataset_file(spec.name, cfg.n, cfg.seed, &input, 1 << 18)
+            .expect("chunked dataset write");
+        for &threads in thread_counts {
+            let ext = ExternalConfig {
+                memory_budget: budget_bytes,
+                threads: threads.max(1),
+                ..ExternalConfig::default()
+            };
+            let strategy = if threads <= 1 {
+                "serial pipeline".to_string()
+            } else {
+                format!("parallel pipeline ({threads}t)")
+            };
+            rows.push(external_cell(spec, &input, &output, strategy, &ext, cfg.n));
         }
         let _ = std::fs::remove_file(&input);
         let _ = std::fs::remove_file(&output);
@@ -314,17 +402,31 @@ pub fn render_external_rows(title: &str, rows: &[ExternalRow]) -> String {
         .map(|r| {
             vec![
                 r.dataset.to_string(),
-                r.strategy.to_string(),
+                r.strategy.clone(),
                 fmt::keys(r.n),
                 fmt::rate(r.rate),
                 fmt::secs(r.secs),
                 format!("{} ({} learned)", r.runs, r.learned_runs),
                 r.merge_passes.to_string(),
+                if r.merge_shards == 0 {
+                    "serial".to_string()
+                } else {
+                    format!("{} shards", r.merge_shards)
+                },
             ]
         })
         .collect();
     out.push_str(&fmt::markdown_table(
-        &["dataset", "run generation", "n", "rate", "time", "runs", "merge passes"],
+        &[
+            "dataset",
+            "pipeline",
+            "n",
+            "rate",
+            "time",
+            "runs",
+            "merge passes",
+            "final merge",
+        ],
         &table,
     ));
     out
@@ -427,8 +529,9 @@ mod tests {
             n: 40_000,
             ..tiny()
         };
-        // 8Ki-key budget → ≥4 runs per dataset, one of each key type
-        let rows = run_external_figure(&["uniform", "nyc_pickup"], 8192 * 8, &cfg);
+        // 3 * 8Ki-key budget: the pipelined chunks (a third of it, threads=2)
+        // still clear min_learned_chunk → ≥4 runs per dataset, model engaged
+        let rows = run_external_figure(&["uniform", "nyc_pickup"], 3 * 8192 * 8, &cfg);
         assert_eq!(rows.len(), 4);
         for r in &rows {
             assert!(r.rate > 0.0);
@@ -443,6 +546,25 @@ mod tests {
         let report = render_external_rows("t", &rows);
         assert!(report.contains("Uniform"));
         assert!(report.contains("merge passes"));
+    }
+
+    #[test]
+    fn thread_sweep_serial_vs_parallel_rows() {
+        let cfg = BenchConfig {
+            n: 40_000,
+            ..tiny()
+        };
+        let rows = run_external_thread_sweep(&["uniform"], 8192 * 8, &[1, 2], &cfg);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].threads, 1);
+        assert_eq!(rows[0].strategy, "serial pipeline");
+        assert_eq!(rows[0].merge_shards, 0, "serial never shards");
+        assert_eq!(rows[1].threads, 2);
+        assert!(rows[1].strategy.starts_with("parallel"));
+        for r in &rows {
+            assert!(r.rate > 0.0);
+            assert!(r.runs >= 2, "{}: runs={}", r.strategy, r.runs);
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@
 use crate::classifier::Classifier;
 use crate::key::SortKey;
 
+/// IPS⁴o's branchless splitter-tree classifier with equality buckets.
 #[derive(Debug, Clone)]
 pub struct DecisionTree<K: SortKey> {
     /// Eytzinger-layout splitter images, indices 1..k (index 0 unused).
@@ -101,10 +102,12 @@ impl<K: SortKey> DecisionTree<K> {
         self.tree.len()
     }
 
+    /// Whether duplicated splitters switched equality buckets on.
     pub fn equality_buckets_enabled(&self) -> bool {
         self.equality_buckets
     }
 
+    /// The sorted splitters in the original key domain.
     pub fn splitters(&self) -> &[K] {
         &self.splitters
     }

@@ -11,6 +11,7 @@ use crate::classifier::Classifier;
 use crate::key::SortKey;
 use crate::rmi::model::Rmi;
 
+/// Learned bucket classifier: a monotonic RMI scaled to `n_buckets`.
 #[derive(Debug, Clone)]
 pub struct RmiClassifier {
     rmi: Rmi,
@@ -19,6 +20,7 @@ pub struct RmiClassifier {
 }
 
 impl RmiClassifier {
+    /// Wrap a trained model as a `n_buckets`-way classifier.
     pub fn new(rmi: Rmi, n_buckets: usize) -> RmiClassifier {
         assert!(n_buckets >= 2);
         RmiClassifier {
@@ -28,6 +30,7 @@ impl RmiClassifier {
         }
     }
 
+    /// The underlying trained model.
     pub fn rmi(&self) -> &Rmi {
         &self.rmi
     }

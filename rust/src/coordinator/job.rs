@@ -10,11 +10,14 @@ use crate::SortEngine;
 /// Owned key buffer, matching the paper's two key domains.
 #[derive(Debug, Clone)]
 pub enum KeyBuf {
+    /// 64-bit doubles (the synthetic datasets).
     F64(Vec<f64>),
+    /// 64-bit unsigned integers (the real-world datasets).
     U64(Vec<u64>),
 }
 
 impl KeyBuf {
+    /// Number of keys in the buffer.
     pub fn len(&self) -> usize {
         match self {
             KeyBuf::F64(v) => v.len(),
@@ -22,6 +25,7 @@ impl KeyBuf {
         }
     }
 
+    /// True when the buffer holds no keys.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -49,9 +53,13 @@ fn probe_dup(keys: impl Iterator<Item = u64>, probe: usize) -> f64 {
 /// `output` under `config.memory_budget` bytes of working set.
 #[derive(Debug, Clone)]
 pub struct ExternalJob {
+    /// Input key file (8-byte little-endian keys, `aipso gen --out` format).
     pub input: PathBuf,
+    /// Where the sorted output file is written.
     pub output: PathBuf,
+    /// How to decode the 8-byte keys.
     pub key_type: KeyType,
+    /// Budget, threading and merge knobs for the external sorter.
     pub config: ExternalConfig,
 }
 
@@ -59,7 +67,9 @@ pub struct ExternalJob {
 /// to hold in memory.
 #[derive(Debug, Clone)]
 pub enum JobPayload {
+    /// Keys held in memory, sorted on the core pool.
     InMemory(KeyBuf),
+    /// An on-disk dataset, sorted by the out-of-core pipeline.
     External(ExternalJob),
 }
 
@@ -77,6 +87,7 @@ impl JobPayload {
         }
     }
 
+    /// True for out-of-core jobs.
     pub fn is_external(&self) -> bool {
         matches!(self, JobPayload::External(_))
     }
@@ -85,10 +96,14 @@ impl JobPayload {
 /// A sort request.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
+    /// Caller-chosen identifier, echoed in the [`JobReport`].
     pub id: u64,
+    /// The keys (or on-disk dataset) to sort.
     pub payload: JobPayload,
+    /// Fixed engine, or automatic routing.
     pub engine: EngineChoice,
-    /// Allow the coordinator to use the parallel engines.
+    /// Allow the coordinator to use the parallel engines (and, for
+    /// external jobs, the overlapped admission lane).
     pub parallel: bool,
 }
 
@@ -103,8 +118,10 @@ impl JobSpec {
         }
     }
 
-    /// Out-of-core job (always admitted exclusively — one external sort at
-    /// a time so its budget and the in-memory jobs don't thrash).
+    /// Out-of-core job. Admitted on the coordinator's overlap lane: it
+    /// runs concurrently with in-memory jobs (its memory is bounded by its
+    /// own budget and much of its time is disk-bound), but never alongside
+    /// another external job — two would compete for the same disk.
     pub fn external(id: u64, job: ExternalJob) -> JobSpec {
         JobSpec {
             id,
@@ -118,12 +135,19 @@ impl JobSpec {
 /// Completion record for one job.
 #[derive(Debug, Clone)]
 pub struct JobReport {
+    /// The submitting caller's job id.
     pub id: u64,
+    /// Engine the router selected (or the caller fixed).
     pub engine: SortEngine,
+    /// Keys sorted.
     pub n: usize,
+    /// Wall-clock time spent sorting.
     pub secs: f64,
+    /// Sorting rate (the paper's metric).
     pub keys_per_sec: f64,
+    /// Whether the output passed the post-sort verification.
     pub verified_sorted: bool,
+    /// Worker threads the job was admitted with.
     pub threads: usize,
     /// True when the job ran through the out-of-core path.
     pub external: bool,

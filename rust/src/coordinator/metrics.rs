@@ -5,20 +5,27 @@ use std::collections::BTreeMap;
 use crate::coordinator::job::JobReport;
 use crate::util::fmt;
 
+/// Aggregate counters for one engine.
 #[derive(Debug, Default, Clone)]
 pub struct EngineStats {
+    /// Jobs completed.
     pub jobs: usize,
+    /// Keys sorted across those jobs.
     pub keys: usize,
+    /// Total sorting seconds.
     pub secs: f64,
+    /// Jobs whose output failed verification.
     pub failures: usize,
 }
 
+/// Per-engine metrics aggregated over a coordinator's lifetime.
 #[derive(Debug, Default)]
 pub struct MetricsRegistry {
     per_engine: BTreeMap<&'static str, EngineStats>,
 }
 
 impl MetricsRegistry {
+    /// Fold one completed job into the aggregates.
     pub fn record(&mut self, rep: &JobReport) {
         let e = self
             .per_engine
@@ -32,18 +39,22 @@ impl MetricsRegistry {
         }
     }
 
+    /// Jobs recorded across all engines.
     pub fn total_jobs(&self) -> usize {
         self.per_engine.values().map(|e| e.jobs).sum()
     }
 
+    /// Keys sorted across all engines.
     pub fn total_keys(&self) -> usize {
         self.per_engine.values().map(|e| e.keys).sum()
     }
 
+    /// Verification failures across all engines.
     pub fn total_failures(&self) -> usize {
         self.per_engine.values().map(|e| e.failures).sum()
     }
 
+    /// Iterate (engine paper name, stats) pairs in name order.
     pub fn engines(&self) -> impl Iterator<Item = (&&'static str, &EngineStats)> {
         self.per_engine.iter()
     }

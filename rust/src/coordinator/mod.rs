@@ -9,9 +9,26 @@
 //! job at a time onto the core pool (sorting is memory-bandwidth bound —
 //! co-running two large sorts thrashes, so admission is serialized; small
 //! jobs are batched through the sequential path in parallel instead).
-//! Out-of-core jobs ([`JobPayload::External`]) always take the exclusive
-//! path: their memory budget is the whole working set, so co-running them
-//! with large in-memory sorts would thrash both.
+//! Out-of-core jobs ([`JobPayload::External`]) used to take the same
+//! exclusive path; now that the external pipeline overlaps its IO and
+//! bounds its memory explicitly (`ExternalConfig::memory_budget`), a
+//! *parallel* external job runs on an **overlap lane**: its own thread,
+//! concurrent with the in-memory queue, at most one in flight at a time
+//! (further external jobs queue behind it without blocking the
+//! dispatcher). Disk-bound phases of the external sort then no longer
+//! stall the in-memory service path. Non-parallel external jobs keep the
+//! old exclusive single-thread admission — and still wait for the lane to
+//! drain first, upholding the one-external-sort-per-disk rule.
+//!
+//! ```
+//! use aipso::coordinator::{Coordinator, JobSpec, KeyBuf};
+//!
+//! let coordinator = Coordinator::new(2);
+//! coordinator.submit(JobSpec::auto(0, KeyBuf::U64((0..10_000u64).rev().collect())));
+//! let (reports, metrics) = coordinator.drain();
+//! assert!(reports[0].verified_sorted);
+//! assert_eq!(metrics.total_jobs(), 1);
+//! ```
 
 pub mod job;
 pub mod metrics;
@@ -42,6 +59,8 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Start a coordinator whose dispatcher schedules onto `threads`
+    /// workers (0 = all available cores).
     pub fn new(threads: usize) -> Coordinator {
         let threads = effective_threads(threads);
         let (tx, rx) = mpsc::channel::<JobSpec>();
@@ -79,7 +98,35 @@ impl Coordinator {
                     reports_w.lock().unwrap().push(rep);
                 }
             };
+            // Overlap lane: at most one parallel external job runs on its
+            // own thread, concurrent with the in-memory queue (external
+            // sorts are disk-bound for much of their lifetime and bound
+            // their own memory, so they no longer serialize admission).
+            // Further parallel external jobs wait in a pending queue —
+            // never blocking the dispatcher — because two external sorts
+            // would compete for the same disk and double the budget.
+            let mut external_lane: Option<std::thread::JoinHandle<()>> = None;
+            let mut pending_external: std::collections::VecDeque<JobSpec> =
+                std::collections::VecDeque::new();
+            let spawn_external = |job: JobSpec| {
+                let metrics_l = metrics_w.clone();
+                let reports_l = reports_w.clone();
+                std::thread::spawn(move || {
+                    let rep = run_job(job, threads);
+                    metrics_l.lock().unwrap().record(&rep);
+                    reports_l.lock().unwrap().push(rep);
+                })
+            };
             while let Ok(job) = rx.recv() {
+                // reap a finished lane; promote the next pending external
+                if external_lane.as_ref().is_some_and(|h| h.is_finished()) {
+                    let _ = external_lane.take().unwrap().join();
+                }
+                if external_lane.is_none() {
+                    if let Some(next) = pending_external.pop_front() {
+                        external_lane = Some(spawn_external(next));
+                    }
+                }
                 if !job.payload.is_external() && job.payload.len_hint() < SMALL_JOB {
                     small.push(job);
                     if small.len() >= 8 {
@@ -87,12 +134,36 @@ impl Coordinator {
                     }
                     continue;
                 }
+                if job.payload.is_external() && job.parallel {
+                    if external_lane.is_none() {
+                        external_lane = Some(spawn_external(job));
+                    } else {
+                        pending_external.push_back(job);
+                    }
+                    continue;
+                }
+                if job.payload.is_external() {
+                    // non-parallel external: exclusive path — must not
+                    // co-run with the lane either (same one-disk rule)
+                    if let Some(h) = external_lane.take() {
+                        let _ = h.join();
+                    }
+                }
                 flush_small(&mut small);
                 let rep = run_job(job, threads);
                 metrics_w.lock().unwrap().record(&rep);
                 reports_w.lock().unwrap().push(rep);
             }
             flush_small(&mut small);
+            if let Some(h) = external_lane.take() {
+                let _ = h.join();
+            }
+            // queue closed: run any still-pending externals one at a time
+            for job in pending_external {
+                let rep = run_job(job, threads);
+                metrics_w.lock().unwrap().record(&rep);
+                reports_w.lock().unwrap().push(rep);
+            }
         });
         Coordinator {
             tx: Some(tx),
@@ -289,5 +360,54 @@ mod tests {
         assert_eq!(read_keys_file::<u64>(&output).unwrap(), want);
         let _ = std::fs::remove_file(&input);
         let _ = std::fs::remove_file(&output);
+    }
+
+    #[test]
+    fn two_external_jobs_serialize_on_the_overlap_lane() {
+        use crate::datasets::KeyType;
+        use crate::external::{read_keys_file, write_keys_file, ExternalConfig};
+
+        let dir = std::env::temp_dir();
+        let mut rng = Xoshiro256pp::new(88);
+        let mut files = Vec::new();
+        for i in 0..2u64 {
+            let input = dir.join(format!("aipso-coord-lane-{}-{i}.bin", std::process::id()));
+            let output =
+                dir.join(format!("aipso-coord-lane-{}-{i}.out.bin", std::process::id()));
+            let keys: Vec<u64> = (0..30_000).map(|_| rng.next_u64()).collect();
+            write_keys_file(&input, &keys).unwrap();
+            files.push((input, output, keys));
+        }
+
+        let c = Coordinator::new(2);
+        for (i, (input, output, _)) in files.iter().enumerate() {
+            let mut spec = JobSpec::external(
+                i as u64,
+                ExternalJob {
+                    input: input.clone(),
+                    output: output.clone(),
+                    key_type: KeyType::U64,
+                    config: ExternalConfig::with_budget(8192 * 8),
+                },
+            );
+            // second external is non-parallel: the exclusive path must
+            // wait for the overlap lane (one external sort per disk)
+            spec.parallel = i == 0;
+            c.submit(spec);
+            // in-memory work interleaves with the external lane
+            c.submit(job(10 + i as u64, 50_000, true));
+        }
+        let (reports, metrics) = c.drain();
+        assert_eq!(reports.len(), 4);
+        assert!(reports.iter().all(|r| r.verified_sorted));
+        assert_eq!(metrics.total_failures(), 0);
+        assert_eq!(reports.iter().filter(|r| r.external).count(), 2);
+        for (input, output, keys) in files {
+            let mut want = keys;
+            want.sort_unstable();
+            assert_eq!(read_keys_file::<u64>(&output).unwrap(), want);
+            let _ = std::fs::remove_file(&input);
+            let _ = std::fs::remove_file(&output);
+        }
     }
 }

@@ -8,10 +8,12 @@
 use crate::coordinator::job::{JobPayload, JobSpec};
 use crate::SortEngine;
 
+/// How a job selects its sorting engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineChoice {
     /// Let the router pick from the job's shape.
     Auto,
+    /// Force a specific engine.
     Fixed(SortEngine),
 }
 
@@ -22,6 +24,8 @@ pub const PROBE: usize = 1024;
 /// Probe duplicate fraction above which IPS⁴o is preferred.
 pub const DUP_THRESHOLD: f64 = 0.30;
 
+/// Pick the engine for a job (paper Section 5.2's guidance; see the
+/// module docs for the policy).
 pub fn route(job: &JobSpec) -> SortEngine {
     // Out-of-core jobs always run the external pipeline; their engine
     // label follows the configured run-generation strategy (learned runs

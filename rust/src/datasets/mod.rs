@@ -19,7 +19,9 @@ use crate::util::rng::{Xoshiro256pp, Zipf};
 /// real-world = u64 ids/timestamps).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KeyType {
+    /// 64-bit doubles.
     F64,
+    /// 64-bit unsigned integers.
     U64,
 }
 
@@ -35,15 +37,21 @@ pub enum FigureGroup {
     RealWorld,
 }
 
+/// Registry entry for one of the paper's 14 benchmark datasets.
 #[derive(Debug, Clone, Copy)]
 pub struct DatasetSpec {
+    /// CLI name (`aipso gen --dataset NAME`).
     pub name: &'static str,
+    /// Name as printed in the paper's figures.
     pub paper_name: &'static str,
+    /// Key domain (synthetic = f64, real-world = u64).
     pub key_type: KeyType,
+    /// Which figure the dataset appears in.
     pub group: FigureGroup,
     /// Relative input size vs the synthetic N (paper: real-world sets are
     /// 2x except NYC).
     pub size_factor: f64,
+    /// One-line description of the generating law.
     pub description: &'static str,
 }
 
@@ -65,10 +73,12 @@ pub const ALL: [DatasetSpec; 14] = [
     DatasetSpec { name: "nyc_pickup", paper_name: "NYC/Pickup", key_type: KeyType::U64, group: FigureGroup::RealWorld, size_factor: 1.0, description: "simulated taxi pickup timestamps (seasonal)" },
 ];
 
+/// Look up a dataset by CLI name or paper name.
 pub fn spec(name: &str) -> Option<&'static DatasetSpec> {
     ALL.iter().find(|d| d.name == name || d.paper_name == name)
 }
 
+/// CLI names of the nine synthetic (f64) datasets.
 pub fn f64_names() -> Vec<&'static str> {
     ALL.iter()
         .filter(|d| d.key_type == KeyType::F64)
@@ -76,6 +86,7 @@ pub fn f64_names() -> Vec<&'static str> {
         .collect()
 }
 
+/// CLI names of the five simulated real-world (u64) datasets.
 pub fn u64_names() -> Vec<&'static str> {
     ALL.iter()
         .filter(|d| d.key_type == KeyType::U64)

@@ -2,8 +2,9 @@
 //!
 //! The contract: `sort_file`/`sort_iter` never hold more than roughly
 //! [`ExternalConfig::memory_budget`] bytes of keys in memory at once. The
-//! budget sets the run length (one chunk = one sorted run) and clamps the
-//! merge fan-in so `k` read buffers also stay inside it.
+//! budget sets the run length (one chunk = one sorted run — three pipeline
+//! stages share it when IO is overlapped) and clamps the merge fan-in so
+//! `k` read buffers also stay inside it.
 
 use std::path::PathBuf;
 
@@ -22,8 +23,11 @@ pub enum RunGen {
 /// Configuration for [`crate::external::sort_file`] / `sort_iter`.
 #[derive(Debug, Clone)]
 pub struct ExternalConfig {
-    /// In-memory working-set budget in bytes. One chunk (= one run) holds
-    /// `memory_budget / size_of::<K>()` keys.
+    /// In-memory working-set budget in bytes. In the serial pipeline
+    /// (`threads == 1`) one chunk (= one run) holds
+    /// `memory_budget / size_of::<K>()` keys; the overlapped pipeline
+    /// (`threads > 1`) keeps three chunks resident (one being read, one
+    /// being sorted, one being spilled), so each holds a third of that.
     pub memory_budget: usize,
     /// Maximum runs merged per k-way pass (clamped so the merge readers'
     /// buffers fit the memory budget too).
@@ -52,8 +56,22 @@ pub struct ExternalConfig {
     /// Mean |F(x) − empirical CDF(x)| over the probe above which the chunk
     /// is declared drifted and falls back to IPS⁴o.
     pub drift_threshold: f64,
-    /// Worker threads for in-memory chunk sorting (0 = all cores).
+    /// Worker threads (0 = all cores). `1` selects the fully serial
+    /// reference pipeline; `> 1` enables overlapped chunk IO during run
+    /// generation and the RMI-sharded parallel merge.
     pub threads: usize,
+    /// Shards for the RMI-partitioned final merge (0 = one per worker
+    /// thread, 1 = always the serial loser-tree merge).
+    pub merge_shards: usize,
+    /// Drift guard for the sharded merge: when the largest shard exceeds
+    /// `total_keys / shards` by this factor, the quantile cuts derived from
+    /// the first-chunk RMI no longer describe the data and the merge falls
+    /// back to the serial loser tree.
+    pub shard_skew_limit: f64,
+    /// Minimum keys per shard; with fewer, per-shard setup (boundary
+    /// binary searches, reader buffers) cannot amortize and the merge
+    /// stays serial.
+    pub min_shard_keys: usize,
     /// Directory for spilled runs (`None` = the OS temp dir).
     pub tmp_dir: Option<PathBuf>,
 }
@@ -74,6 +92,9 @@ impl Default for ExternalConfig {
             drift_probe: 2048,
             drift_threshold: 0.05,
             threads: 0,
+            merge_shards: 0,
+            shard_skew_limit: 4.0,
+            min_shard_keys: 1 << 16,
             tmp_dir: None,
         }
     }
@@ -88,9 +109,16 @@ impl ExternalConfig {
         }
     }
 
-    /// Keys per chunk (= per run) for key type `K` under the budget.
+    /// Keys per chunk (= per run) for key type `K` under the budget, in
+    /// the serial pipeline (one resident chunk).
     pub fn chunk_keys<K>(&self) -> usize {
         (self.memory_budget / std::mem::size_of::<K>().max(1)).max(64)
+    }
+
+    /// Keys per chunk in the overlapped pipeline: the reader, sorter and
+    /// spill writer each hold one chunk, so the budget is split three ways.
+    pub fn pipelined_chunk_keys<K>(&self) -> usize {
+        (self.memory_budget / 3 / std::mem::size_of::<K>().max(1)).max(64)
     }
 
     /// IO buffer size actually used, clamped into `[4 KiB, budget/4]` so
@@ -117,6 +145,13 @@ mod tests {
         assert_eq!(cfg.chunk_keys::<f64>(), (1 << 20) / 8);
         // tiny budgets still make progress
         assert!(ExternalConfig::with_budget(1).chunk_keys::<u64>() >= 64);
+    }
+
+    #[test]
+    fn pipelined_chunks_are_a_third() {
+        let cfg = ExternalConfig::with_budget(3 << 20);
+        assert_eq!(cfg.pipelined_chunk_keys::<u64>(), (1 << 20) / 8);
+        assert!(ExternalConfig::with_budget(1).pipelined_chunk_keys::<u64>() >= 64);
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::key::SortKey;
 
 /// A stream of keys consumed by the merge (each run is nondecreasing).
 pub trait KeyStream<K> {
+    /// Next key, or `None` when the stream is exhausted.
     fn next_key(&mut self) -> io::Result<Option<K>>;
 }
 
@@ -34,6 +35,7 @@ pub struct VecStream<K> {
 }
 
 impl<K> VecStream<K> {
+    /// Stream over an in-memory (sorted) vector.
     pub fn new(keys: Vec<K>) -> VecStream<K> {
         VecStream {
             iter: keys.into_iter(),
@@ -58,6 +60,8 @@ pub struct LoserTree<K: SortKey, S: KeyStream<K>> {
 }
 
 impl<K: SortKey, S: KeyStream<K>> LoserTree<K, S> {
+    /// Build the initial tournament over `sources` (reads one head key
+    /// from each).
     pub fn new(mut sources: Vec<S>) -> io::Result<LoserTree<K, S>> {
         let k = sources.len();
         let mut head = Vec::with_capacity(k);

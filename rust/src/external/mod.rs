@@ -1,5 +1,5 @@
 //! Out-of-core learned sorting (substrate S13) — sorts datasets larger
-//! than memory under an explicit byte budget.
+//! than memory under an explicit byte budget, in parallel.
 //!
 //! Pipeline (the classic two-phase external sort, with a learned twist):
 //!
@@ -9,32 +9,62 @@
 //!    (PCF-style model reuse). A per-chunk drift probe
 //!    ([`crate::rmi::quality::model_drift`]) demotes chunks whose
 //!    distribution no longer matches the model to the IPS⁴o path. Each
-//!    sorted chunk spills as one run ([`spill`]).
-//! 2. **K-way merge** ([`loser_tree`]): runs stream-merge through a
-//!    tournament loser tree, fan-in clamped so the read buffers respect
-//!    the same memory budget; extra passes handle run counts above the
-//!    fan-in.
+//!    sorted chunk spills as one run ([`spill`]). With `threads > 1` the
+//!    read / sort / spill stages run as an overlapped pipeline: a reader
+//!    thread prefetches chunk `N+1` and a writer thread spills chunk `N−1`
+//!    while the pool sorts chunk `N`.
+//! 2. **Merge**: intermediate k-way passes ([`loser_tree`], fan-in clamped
+//!    to the budget) run their independent merge groups concurrently on
+//!    the scheduler pool; the final pass inverts the shared RMI into `p`
+//!    quantile cuts and merges `p` range-disjoint shards in parallel
+//!    ([`shard`]), falling back to the serial loser tree when no model was
+//!    trained or the cuts come out skewed (drift guard).
 //!
 //! Entry points: [`sort_file`] (binary key files, the `aipso gen --out` /
 //! `aipso extsort` format) and [`sort_iter`] (any in-process key stream).
-//! The coordinator admits these as `JobPayload::External` jobs so one
-//! out-of-core sort never thrashes the in-memory service path.
+//! The coordinator admits these as `JobPayload::External` jobs; see
+//! [`crate::coordinator`] for how they overlap with in-memory traffic.
+//!
+//! The architecture, data flow and fallback decision points are documented
+//! end to end in `ARCHITECTURE.md` at the repository root.
+//!
+//! ```
+//! use aipso::external::{self, ExternalConfig};
+//!
+//! let out = std::env::temp_dir().join(format!("aipso-doc-ext-{}.bin", std::process::id()));
+//! let cfg = ExternalConfig {
+//!     memory_budget: 1 << 16, // 64 KiB working set => several runs
+//!     threads: 2,             // overlapped IO + sharded merge
+//!     ..ExternalConfig::default()
+//! };
+//! let keys = (0..20_000u64).rev();
+//! let report = external::sort_iter(keys, &out, &cfg).unwrap();
+//! assert_eq!(report.keys, 20_000);
+//! assert!(report.runs > 1);
+//! assert!(external::verify_sorted_file::<u64>(&out, 1 << 16).unwrap());
+//! std::fs::remove_file(&out).unwrap();
+//! ```
 
 pub mod config;
 pub mod loser_tree;
 pub mod run_writer;
+pub mod shard;
 pub mod spill;
 
 pub use config::{ExternalConfig, RunGen};
 pub use loser_tree::{KeyStream, LoserTree, VecStream};
 pub use run_writer::RunGenStats;
+pub use shard::ShardPlan;
 pub use spill::{
     file_key_count, read_keys_file, verify_sorted_file, write_keys_file, ExtKey, RunFile,
-    RunReader, RunWriter, SpillDir,
+    RunIndex, RunReader, RunWriter, SpillDir,
 };
 
 use std::io;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::scheduler::run_task_pool;
 
 /// Outcome of one external sort.
 #[derive(Debug, Clone, Copy, Default)]
@@ -51,6 +81,9 @@ pub struct ExternalSortReport {
     pub rmi_trained: bool,
     /// K-way merge passes performed (0 when the input fit in one run).
     pub merge_passes: usize,
+    /// Shards of the RMI-partitioned final merge (0 = the final pass ran
+    /// the serial loser tree — no model, one thread, or skewed cuts).
+    pub merge_shards: usize,
 }
 
 /// Sort a binary key file (8-byte little-endian keys, the format written
@@ -62,14 +95,16 @@ pub fn sort_file<K: ExtKey>(
     cfg: &ExternalConfig,
 ) -> io::Result<ExternalSortReport> {
     let mut reader = RunReader::<K>::open(input, cfg.effective_io_buffer())?;
-    let mut src = move |max: usize| -> io::Result<Option<Vec<K>>> {
+    let src = move |max: usize| -> io::Result<Option<Vec<K>>> {
         let chunk = reader.read_chunk(max)?;
         Ok(if chunk.is_empty() { None } else { Some(chunk) })
     };
-    sort_from(&mut src, output, cfg)
+    sort_from(src, output, cfg)
 }
 
 /// Sort an arbitrary key stream into `output` under the memory budget.
+/// (`Send` because the overlapped pipeline pulls the stream from a reader
+/// thread when `cfg.threads != 1`.)
 pub fn sort_iter<K: ExtKey, I>(
     keys: I,
     output: &Path,
@@ -77,23 +112,52 @@ pub fn sort_iter<K: ExtKey, I>(
 ) -> io::Result<ExternalSortReport>
 where
     I: IntoIterator<Item = K>,
+    I::IntoIter: Send,
 {
     let mut it = keys.into_iter();
-    let mut src = move |max: usize| -> io::Result<Option<Vec<K>>> {
+    let src = move |max: usize| -> io::Result<Option<Vec<K>>> {
         let chunk: Vec<K> = it.by_ref().take(max).collect();
         Ok(if chunk.is_empty() { None } else { Some(chunk) })
     };
-    sort_from(&mut src, output, cfg)
+    sort_from(src, output, cfg)
+}
+
+/// Removes a partially written output when armed: spilled runs are covered
+/// by `SpillDir`'s drop, but the output lives at the caller's path and must
+/// not leak half-written when the merge fails. Armed only once this sort
+/// first touches the output — a failure before that (bad tmp dir, source
+/// IO error during run generation) must not delete a pre-existing file the
+/// caller still owns.
+struct OutputGuard<'a> {
+    path: &'a Path,
+    armed: bool,
+}
+
+impl Drop for OutputGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = std::fs::remove_file(self.path);
+        }
+    }
 }
 
 /// Shared driver: generate runs, then merge them into `output`.
-fn sort_from<K: ExtKey>(
-    next_chunk: &mut dyn FnMut(usize) -> io::Result<Option<Vec<K>>>,
+fn sort_from<K, F>(
+    next_chunk: F,
     output: &Path,
     cfg: &ExternalConfig,
-) -> io::Result<ExternalSortReport> {
+) -> io::Result<ExternalSortReport>
+where
+    K: ExtKey,
+    F: FnMut(usize) -> io::Result<Option<Vec<K>>> + Send,
+{
+    let mut guard = OutputGuard {
+        path: output,
+        armed: false,
+    };
     let mut spill = SpillDir::create(cfg.tmp_dir.as_deref())?;
-    let (mut runs, stats) = run_writer::generate_runs(next_chunk, &mut spill, cfg)?;
+    let gen = run_writer::generate_runs(next_chunk, &mut spill, cfg)?;
+    let (mut runs, stats, shared_rmi) = (gen.runs, gen.stats, gen.rmi);
 
     let mut report = ExternalSortReport {
         keys: stats.keys,
@@ -102,54 +166,118 @@ fn sort_from<K: ExtKey>(
         fallback_runs: stats.fallback_chunks,
         rmi_trained: stats.rmi_trained,
         merge_passes: 0,
+        merge_shards: 0,
     };
+    let threads = crate::scheduler::effective_threads(cfg.threads);
 
     if runs.is_empty() {
         // empty input — still produce (truncate to) an empty output file
+        guard.armed = true;
         std::fs::File::create(output)?;
+        guard.armed = false;
         return Ok(report);
     }
 
-    // Intermediate passes while the run count exceeds the fan-in.
+    // Intermediate passes while the run count exceeds the fan-in; the
+    // merge groups of one pass are independent, so they run concurrently
+    // on the pool (each group's readers get a slice of the io budget).
     let fanout = cfg.effective_fanout();
     while runs.len() > fanout {
-        let mut next_round = Vec::with_capacity((runs.len() + fanout - 1) / fanout);
-        for group in runs.chunks(fanout) {
-            if group.len() == 1 {
-                // a trailing singleton carries forward untouched — no point
-                // rewriting a whole run through a 1-way merge
-                next_round.push(group[0].clone());
-                continue;
-            }
-            let merged = merge_group::<K>(group, spill.next_run_path(), cfg)?;
-            for r in group {
-                let _ = std::fs::remove_file(&r.path);
-            }
-            next_round.push(merged);
-        }
-        runs = next_round;
+        runs = merge_pass::<K>(runs, &mut spill, cfg, threads)?;
         report.merge_passes += 1;
     }
 
     // Final pass streams straight into the output file.
     if runs.len() == 1 {
         // single run: plain buffered copy, no tree needed
+        guard.armed = true;
         std::fs::copy(&runs[0].path, output)?;
     } else {
-        let merged = merge_group::<K>(&runs, output.to_path_buf(), cfg)?;
-        debug_assert_eq!(merged.n, report.keys);
+        let shards = final_shards(cfg, threads, report.keys);
+        let mut sharded = false;
+        if let Some(rmi) = shared_rmi.as_ref().filter(|_| shards >= 2) {
+            // planning only reads the runs; the output stays untouched
+            // (and thus unguarded) until a merge actually starts below
+            let plan = shard::plan_shards::<K>(rmi, &runs, shards)?;
+            debug_assert_eq!(plan.total_keys(), report.keys);
+            if plan.skew() <= cfg.shard_skew_limit {
+                guard.armed = true;
+                shard::merge_sharded::<K>(&runs, &plan, output, cfg, threads)?;
+                report.merge_shards = shards;
+                sharded = true;
+            }
+            // else: the quantile cuts no longer describe the data (drift);
+            // fall through to the serial tree rather than merge lopsided
+        }
+        if !sharded {
+            guard.armed = true;
+            let merged = merge_group::<K>(&runs, output.to_path_buf(), cfg.effective_io_buffer())?;
+            debug_assert_eq!(merged.n, report.keys);
+        }
         report.merge_passes += 1;
     }
+    guard.armed = false;
     Ok(report)
+}
+
+/// Shards for the final merge: the configured count (or one per thread),
+/// capped so every shard still clears `min_shard_keys`.
+fn final_shards(cfg: &ExternalConfig, threads: usize, total_keys: u64) -> usize {
+    let want = if cfg.merge_shards > 0 {
+        cfg.merge_shards
+    } else {
+        threads
+    };
+    let cap = (total_keys / cfg.min_shard_keys.max(1) as u64).min(256) as usize;
+    want.min(cap.max(1))
+}
+
+/// One intermediate merge pass: groups of up to `fanout` runs merge
+/// concurrently into fresh spill files; trailing singletons carry forward
+/// untouched (no point rewriting a whole run through a 1-way merge).
+fn merge_pass<K: ExtKey>(
+    runs: Vec<RunFile>,
+    spill: &mut SpillDir,
+    cfg: &ExternalConfig,
+    threads: usize,
+) -> io::Result<Vec<RunFile>> {
+    let fanout = cfg.effective_fanout();
+    let n_groups = runs.len().div_ceil(fanout);
+    let mut next_round: Vec<Option<RunFile>> = vec![None; n_groups];
+    let mut jobs: Vec<(usize, Vec<RunFile>, PathBuf)> = Vec::new();
+    for (slot, group) in runs.chunks(fanout).enumerate() {
+        if group.len() == 1 {
+            next_round[slot] = Some(group[0].clone());
+        } else {
+            jobs.push((slot, group.to_vec(), spill.next_run_path()));
+        }
+    }
+    let workers = threads.min(jobs.len()).max(1);
+    // each in-flight group holds up to `fanout` reader buffers + 1 writer;
+    // split the io budget across the groups that can run at once
+    let io_buffer = (cfg.effective_io_buffer() / workers).max(4096);
+    let results: Mutex<Vec<(usize, io::Result<RunFile>)>> = Mutex::new(Vec::new());
+    run_task_pool(workers, jobs, |(slot, group, out), _spawner| {
+        let res = merge_group::<K>(&group, out, io_buffer);
+        if res.is_ok() {
+            for r in &group {
+                let _ = std::fs::remove_file(&r.path);
+            }
+        }
+        results.lock().unwrap().push((slot, res));
+    });
+    for (slot, res) in results.into_inner().unwrap() {
+        next_round[slot] = Some(res?);
+    }
+    Ok(next_round.into_iter().map(Option::unwrap).collect())
 }
 
 /// Merge one group of runs into `out_path` through the loser tree.
 fn merge_group<K: ExtKey>(
     runs: &[RunFile],
-    out_path: std::path::PathBuf,
-    cfg: &ExternalConfig,
+    out_path: PathBuf,
+    io_buffer: usize,
 ) -> io::Result<RunFile> {
-    let io_buffer = cfg.effective_io_buffer();
     let mut sources = Vec::with_capacity(runs.len());
     for r in runs {
         sources.push(RunReader::<K>::open(&r.path, io_buffer)?);
@@ -188,9 +316,87 @@ mod tests {
         assert_eq!(report.keys, n as u64);
         assert!(report.runs > 16, "runs={}", report.runs);
         assert!(report.merge_passes >= 2, "passes={}", report.merge_passes);
+        assert_eq!(report.merge_shards, 0, "threads=1 stays serial");
         let mut want = keys;
         want.sort_unstable();
         assert_eq!(read_keys_file::<u64>(&out).unwrap(), want);
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn parallel_multi_pass_matches_serial_bytes() {
+        let mut rng = Xoshiro256pp::new(10);
+        let n = 80_000;
+        let keys: Vec<u64> = (0..n).map(|_| rng.next_below(1 << 40)).collect();
+        let serial_out = tmp("par-vs-serial-1.bin");
+        let parallel_out = tmp("par-vs-serial-4.bin");
+        // 3 * 8Ki-key budget: pipelined chunks (a third) still clear
+        // min_learned_chunk, so the shared RMI trains on both paths;
+        // fan-in 4 forces the parallel side through an intermediate pass
+        // (10 runs -> 3) before the sharded final merge
+        let mut cfg = ExternalConfig {
+            memory_budget: 3 * 8192 * 8,
+            io_buffer: 4096,
+            merge_fanout: 4,
+            threads: 1,
+            min_shard_keys: 1024, // let the sharded merge engage at test sizes
+            ..ExternalConfig::default()
+        };
+        let serial = sort_iter(keys.iter().copied(), &serial_out, &cfg).unwrap();
+        assert_eq!(serial.merge_shards, 0);
+        cfg.threads = 4;
+        let parallel = sort_iter(keys.iter().copied(), &parallel_out, &cfg).unwrap();
+        assert_eq!(serial.keys, parallel.keys);
+        assert_eq!(
+            std::fs::read(&serial_out).unwrap(),
+            std::fs::read(&parallel_out).unwrap(),
+            "parallel pipeline must be byte-identical to the serial one"
+        );
+        // smooth input + trained model => the final merge really sharded
+        assert!(parallel.rmi_trained);
+        assert!(parallel.merge_passes >= 2, "passes={}", parallel.merge_passes);
+        assert!(
+            parallel.merge_shards >= 2,
+            "merge_shards={}",
+            parallel.merge_shards
+        );
+        let _ = std::fs::remove_file(&serial_out);
+        let _ = std::fs::remove_file(&parallel_out);
+    }
+
+    #[test]
+    fn explicit_shard_count_is_honoured() {
+        let mut rng = Xoshiro256pp::new(12);
+        let keys: Vec<f64> = (0..40_000).map(|_| rng.uniform(0.0, 1e6)).collect();
+        let out = tmp("explicit-shards.bin");
+        let cfg = ExternalConfig {
+            memory_budget: 3 * 8192 * 8, // pipelined chunks still train the RMI
+            threads: 2,
+            merge_shards: 3,
+            min_shard_keys: 1024,
+            ..ExternalConfig::default()
+        };
+        let report = sort_iter(keys.iter().copied(), &out, &cfg).unwrap();
+        assert_eq!(report.merge_shards, 3);
+        assert!(verify_sorted_file::<f64>(&out, 1 << 16).unwrap());
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn merge_shards_one_forces_serial_merge() {
+        let mut rng = Xoshiro256pp::new(13);
+        let keys: Vec<f64> = (0..30_000).map(|_| rng.uniform(0.0, 1e6)).collect();
+        let out = tmp("shards-one.bin");
+        let cfg = ExternalConfig {
+            memory_budget: 3 * 8192 * 8, // model trains, yet p=1 stays serial
+            threads: 4,
+            merge_shards: 1,
+            min_shard_keys: 1,
+            ..ExternalConfig::default()
+        };
+        let report = sort_iter(keys.iter().copied(), &out, &cfg).unwrap();
+        assert_eq!(report.merge_shards, 0, "p=1 is the serial loser tree");
+        assert!(verify_sorted_file::<f64>(&out, 1 << 16).unwrap());
         let _ = std::fs::remove_file(&out);
     }
 
@@ -214,5 +420,59 @@ mod tests {
         assert_eq!(report.merge_passes, 0);
         assert_eq!(read_keys_file::<u64>(&out).unwrap(), vec![1, 3, 5, 9]);
         let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn early_failure_preserves_preexisting_output() {
+        // tmp_dir is a *file*, so SpillDir::create fails before this run
+        // ever touches the output — a pre-existing result must survive.
+        let bad_tmp = tmp("bad-tmp-as-file");
+        std::fs::write(&bad_tmp, b"x").unwrap();
+        let out = tmp("preexisting-out.bin");
+        std::fs::write(&out, b"12345678").unwrap(); // prior run's data
+        let cfg = ExternalConfig {
+            tmp_dir: Some(bad_tmp.clone()),
+            threads: 1,
+            ..ExternalConfig::default()
+        };
+        let err = sort_iter(vec![3u64, 1, 2], &out, &cfg);
+        assert!(err.is_err(), "spilling into a file-as-dir must fail");
+        assert_eq!(
+            std::fs::read(&out).unwrap(),
+            b"12345678".to_vec(),
+            "a failure before the merge must not delete the caller's file"
+        );
+        let _ = std::fs::remove_file(&bad_tmp);
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn failed_merge_cleans_spill_dir_and_output() {
+        // The output directory does not exist, so the final merge (or the
+        // single-run copy) fails after runs were spilled. Neither the
+        // scratch directory nor a partial output may survive the error.
+        let base = tmp("fail-clean-base");
+        std::fs::create_dir_all(&base).unwrap();
+        let out = base.join("no-such-dir").join("out.bin");
+        let mut rng = Xoshiro256pp::new(14);
+        let keys: Vec<u64> = (0..20_000).map(|_| rng.next_u64()).collect();
+        let cfg = ExternalConfig {
+            memory_budget: 2048 * 8,
+            threads: 1,
+            tmp_dir: Some(base.clone()),
+            ..ExternalConfig::default()
+        };
+        let err = sort_iter(keys.iter().copied(), &out, &cfg);
+        assert!(err.is_err(), "merge into a missing directory must fail");
+        assert!(!out.exists());
+        let leftovers: Vec<_> = std::fs::read_dir(&base)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .collect();
+        assert!(
+            leftovers.is_empty(),
+            "spilled runs leaked after a failed merge: {leftovers:?}"
+        );
+        let _ = std::fs::remove_dir_all(&base);
     }
 }

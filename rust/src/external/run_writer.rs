@@ -15,8 +15,17 @@
 //!    [`RmiClassifier`] (the same block framework every engine uses), then
 //!    sort each bucket with sequential AIPS²o tasks on the pool;
 //! 4. write the sorted chunk as one spilled run.
+//!
+//! With `threads > 1` the three per-chunk stages run as an **overlapped
+//! pipeline** on rendezvous channels: a reader thread fills chunk `N+1`
+//! while the caller's thread sorts chunk `N` on the scheduler pool and a
+//! background writer spills chunk `N−1`. At most three chunks are resident
+//! (one per stage), so each holds a third of the memory budget
+//! ([`ExternalConfig::pipelined_chunk_keys`]); `threads == 1` keeps the
+//! strictly serial read → sort → write loop as the reference path.
 
 use std::io;
+use std::sync::mpsc;
 
 use crate::classifier::rmi_classifier::RmiClassifier;
 use crate::classifier::Classifier;
@@ -43,55 +52,210 @@ pub struct RunGenStats {
     pub keys: u64,
 }
 
-/// Pull chunks from `next_chunk` (up to `cfg.chunk_keys::<K>()` keys per
-/// call), sort each, and spill them as sorted runs.
-pub(crate) fn generate_runs<K: ExtKey>(
-    next_chunk: &mut dyn FnMut(usize) -> io::Result<Option<Vec<K>>>,
+/// Everything run generation hands to the merge phase.
+pub(crate) struct GeneratedRuns {
+    /// Sorted runs on disk, in generation order.
+    pub runs: Vec<RunFile>,
+    /// Pass counters for the report.
+    pub stats: RunGenStats,
+    /// The shared first-chunk model, when one was trained — the sharded
+    /// merge inverts it to cut the key range into quantile shards.
+    pub rmi: Option<Rmi>,
+}
+
+/// Pull chunks from `next_chunk`, sort each, and spill them as sorted
+/// runs. `threads == 1` runs the serial reference loop; more threads run
+/// the overlapped read/sort/write pipeline.
+pub(crate) fn generate_runs<K: ExtKey, F>(
+    next_chunk: F,
     spill: &mut SpillDir,
     cfg: &ExternalConfig,
-) -> io::Result<(Vec<RunFile>, RunGenStats)> {
-    let chunk_keys = cfg.chunk_keys::<K>();
+) -> io::Result<GeneratedRuns>
+where
+    F: FnMut(usize) -> io::Result<Option<Vec<K>>> + Send,
+{
     let threads = crate::scheduler::effective_threads(cfg.threads);
-    let mut rng = Xoshiro256pp::new(0xE87_5041 ^ chunk_keys as u64);
-    let mut shared: Option<RmiClassifier> = None;
-    let mut first_chunk = true;
-    let mut stats = RunGenStats::default();
-    let mut runs = Vec::new();
+    if threads <= 1 {
+        generate_runs_serial(next_chunk, spill, cfg)
+    } else {
+        generate_runs_pipelined(next_chunk, spill, cfg, threads)
+    }
+}
 
+/// The serial reference pipeline: read → sort → write, one chunk resident.
+fn generate_runs_serial<K: ExtKey, F>(
+    mut next_chunk: F,
+    spill: &mut SpillDir,
+    cfg: &ExternalConfig,
+) -> io::Result<GeneratedRuns>
+where
+    F: FnMut(usize) -> io::Result<Option<Vec<K>>>,
+{
+    let chunk_keys = cfg.chunk_keys::<K>();
+    let mut sorter = ChunkSorter::new(cfg, 1, chunk_keys);
+    let mut runs = Vec::new();
     while let Some(mut chunk) = next_chunk(chunk_keys)? {
         if chunk.is_empty() {
             continue;
         }
-        stats.chunks += 1;
-        stats.keys += chunk.len() as u64;
+        sorter.sort_chunk(&mut chunk);
+        let mut w = RunWriter::<K>::create(spill.next_run_path(), cfg.effective_io_buffer())?;
+        w.write_slice(&chunk)?;
+        runs.push(w.finish()?);
+    }
+    Ok(sorter.finish(runs))
+}
 
-        if cfg.run_gen == RunGen::LearnedReuse && first_chunk {
-            shared = train_shared_rmi(&chunk, cfg, &mut rng);
-            stats.rmi_trained = shared.is_some();
+/// The overlapped pipeline: a reader thread prefetches chunk `N+1` and a
+/// writer thread spills chunk `N−1` while the caller's thread sorts chunk
+/// `N` on the pool. Rendezvous (zero-capacity) channels give backpressure
+/// with exactly one resident chunk per stage.
+fn generate_runs_pipelined<K: ExtKey, F>(
+    next_chunk: F,
+    spill: &mut SpillDir,
+    cfg: &ExternalConfig,
+    threads: usize,
+) -> io::Result<GeneratedRuns>
+where
+    F: FnMut(usize) -> io::Result<Option<Vec<K>>> + Send,
+{
+    let chunk_keys = cfg.pipelined_chunk_keys::<K>();
+    let io_buffer = cfg.effective_io_buffer();
+    let mut sorter = ChunkSorter::new(cfg, threads, chunk_keys);
+    let mut source_err: Option<io::Error> = None;
+
+    let runs = std::thread::scope(|scope| -> io::Result<Vec<RunFile>> {
+        let (chunk_tx, chunk_rx) = mpsc::sync_channel::<io::Result<Vec<K>>>(0);
+        let (sorted_tx, sorted_rx) = mpsc::sync_channel::<Vec<K>>(0);
+
+        // Reader: pulls raw chunks off the source. A failed send means the
+        // sorter hung up (a downstream error); just stop.
+        let mut source = next_chunk;
+        let reader = scope.spawn(move || loop {
+            match source(chunk_keys) {
+                Ok(Some(chunk)) => {
+                    if chunk.is_empty() {
+                        continue;
+                    }
+                    if chunk_tx.send(Ok(chunk)).is_err() {
+                        return;
+                    }
+                }
+                Ok(None) => return, // EOF — dropping chunk_tx closes the stage
+                Err(e) => {
+                    let _ = chunk_tx.send(Err(e));
+                    return;
+                }
+            }
+        });
+
+        // Writer: spills sorted chunks in arrival order. An IO error ends
+        // the loop; dropping sorted_rx then unblocks the sorter's send.
+        let writer = scope.spawn(move || -> io::Result<Vec<RunFile>> {
+            let mut runs = Vec::new();
+            for chunk in sorted_rx.iter() {
+                let mut w = RunWriter::<K>::create(spill.next_run_path(), io_buffer)?;
+                w.write_slice(&chunk)?;
+                runs.push(w.finish()?);
+            }
+            Ok(runs)
+        });
+
+        // Sorter: this thread — model training and the pool-parallel sort.
+        loop {
+            let msg = match chunk_rx.recv() {
+                Ok(m) => m,
+                Err(_) => break, // reader done (EOF or after sending an error)
+            };
+            let mut chunk = match msg {
+                Ok(c) => c,
+                Err(e) => {
+                    source_err = Some(e);
+                    break;
+                }
+            };
+            sorter.sort_chunk(&mut chunk);
+            if sorted_tx.send(chunk).is_err() {
+                break; // writer failed; its join below reports the cause
+            }
         }
-        first_chunk = false;
+        drop(chunk_rx); // unblock a reader mid-send so it can exit
+        drop(sorted_tx); // close the writer's queue
+        let write_result = match writer.join() {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        if let Err(p) = reader.join() {
+            std::panic::resume_unwind(p);
+        }
+        write_result
+    })?;
 
-        let learned = match (&shared, cfg.run_gen) {
+    if let Some(e) = source_err {
+        return Err(e);
+    }
+    Ok(sorter.finish(runs))
+}
+
+/// Per-chunk sorting state shared by the serial and pipelined paths: the
+/// shared model, the drift/duplicate routing, and the pass counters.
+struct ChunkSorter<'a> {
+    cfg: &'a ExternalConfig,
+    threads: usize,
+    rng: Xoshiro256pp,
+    shared: Option<RmiClassifier>,
+    first_chunk: bool,
+    stats: RunGenStats,
+}
+
+impl<'a> ChunkSorter<'a> {
+    fn new(cfg: &'a ExternalConfig, threads: usize, chunk_keys: usize) -> ChunkSorter<'a> {
+        ChunkSorter {
+            cfg,
+            threads,
+            rng: Xoshiro256pp::new(0xE87_5041 ^ chunk_keys as u64),
+            shared: None,
+            first_chunk: true,
+            stats: RunGenStats::default(),
+        }
+    }
+
+    /// Sort one chunk in place, training the shared RMI on the first one
+    /// and routing drifted / duplicate-heavy chunks to the IPS⁴o path.
+    fn sort_chunk<K: ExtKey>(&mut self, chunk: &mut [K]) {
+        self.stats.chunks += 1;
+        self.stats.keys += chunk.len() as u64;
+
+        if self.cfg.run_gen == RunGen::LearnedReuse && self.first_chunk {
+            self.shared = train_shared_rmi(chunk, self.cfg, &mut self.rng);
+            self.stats.rmi_trained = self.shared.is_some();
+        }
+        self.first_chunk = false;
+
+        let learned = match (&self.shared, self.cfg.run_gen) {
             (Some(classifier), RunGen::LearnedReuse) => {
-                chunk.len() >= cfg.min_learned_chunk
-                    && !drifted(&chunk, classifier.rmi(), cfg, &mut rng)
+                chunk.len() >= self.cfg.min_learned_chunk
+                    && !drifted(chunk, classifier.rmi(), self.cfg, &mut self.rng)
             }
             _ => false,
         };
         if learned {
-            learned_sort_chunk(&mut chunk, shared.as_ref().unwrap(), cfg, threads);
-            stats.learned_chunks += 1;
+            learned_sort_chunk(chunk, self.shared.as_ref().unwrap(), self.cfg, self.threads);
+            self.stats.learned_chunks += 1;
         } else {
-            crate::sample_sort::sort_par(&mut chunk, threads);
-            stats.fallback_chunks += 1;
+            crate::sample_sort::sort_par(chunk, self.threads);
+            self.stats.fallback_chunks += 1;
         }
-        debug_assert!(crate::is_sorted(&chunk));
-
-        let mut w = RunWriter::create(spill.next_run_path(), cfg.effective_io_buffer())?;
-        w.write_slice(&chunk)?;
-        runs.push(w.finish()?);
+        debug_assert!(crate::is_sorted(chunk));
     }
-    Ok((runs, stats))
+
+    fn finish(self, runs: Vec<RunFile>) -> GeneratedRuns {
+        GeneratedRuns {
+            runs,
+            stats: self.stats,
+            rmi: self.shared.map(|c| c.rmi().clone()),
+        }
+    }
 }
 
 /// Train the shared RMI from a sample of the first chunk; `None` when the
@@ -194,27 +358,30 @@ mod tests {
         cfg: &ExternalConfig,
     ) -> (Vec<RunFile>, RunGenStats, SpillDir) {
         let mut it = keys.into_iter();
-        let mut src = move |max: usize| -> io::Result<Option<Vec<K>>> {
+        let src = move |max: usize| -> io::Result<Option<Vec<K>>> {
             let chunk: Vec<K> = it.by_ref().take(max).collect();
             Ok(if chunk.is_empty() { None } else { Some(chunk) })
         };
         let mut spill = SpillDir::create(None).unwrap();
-        let (runs, stats) = generate_runs(&mut src, &mut spill, cfg).unwrap();
-        (runs, stats, spill)
+        let gen = generate_runs(src, &mut spill, cfg).unwrap();
+        (gen.runs, gen.stats, spill)
     }
 
     #[test]
     fn runs_are_sorted_and_cover_input() {
         let mut rng = Xoshiro256pp::new(3);
-        // 6 exact chunks of 16Ki keys — every chunk clears min_learned_chunk
+        // threads=2 takes the overlapped pipeline, whose chunks are a third
+        // of the budget: 3 * 16Ki keys of budget → 16Ki-key chunks, so all
+        // 6 chunks clear min_learned_chunk
         let keys: Vec<f64> = (0..98_304).map(|_| rng.uniform(0.0, 1e6)).collect();
         let cfg = ExternalConfig {
-            memory_budget: 16_384 * 8, // 16Ki keys per chunk
+            memory_budget: 3 * 16_384 * 8,
             threads: 2,
             ..ExternalConfig::default()
         };
         let (runs, stats, _spill) = gen_from_vec(keys.clone(), &cfg);
         assert_eq!(stats.chunks, runs.len());
+        assert_eq!(stats.chunks, 6, "16Ki-key pipelined chunks expected");
         assert_eq!(stats.keys, keys.len() as u64);
         assert!(stats.rmi_trained, "smooth first chunk must train the RMI");
         assert_eq!(stats.learned_chunks, stats.chunks, "no drift expected");
@@ -226,6 +393,21 @@ mod tests {
             total += r.n;
         }
         assert_eq!(total, stats.keys);
+    }
+
+    #[test]
+    fn serial_path_uses_full_budget_chunks() {
+        let mut rng = Xoshiro256pp::new(6);
+        let keys: Vec<f64> = (0..65_536).map(|_| rng.uniform(0.0, 1e6)).collect();
+        let cfg = ExternalConfig {
+            memory_budget: 16_384 * 8,
+            threads: 1,
+            ..ExternalConfig::default()
+        };
+        let (runs, stats, _spill) = gen_from_vec(keys, &cfg);
+        assert_eq!(stats.chunks, 4, "serial chunks hold the whole budget");
+        assert_eq!(runs.len(), 4);
+        assert_eq!(stats.learned_chunks, 4);
     }
 
     #[test]
@@ -245,6 +427,7 @@ mod tests {
     fn drifted_chunks_fall_back() {
         let mut rng = Xoshiro256pp::new(4);
         // chunk 1: U(0, 1e6); chunks 2-3: U(5e6, 6e6) — model predicts ~1
+        // (threads=1 pins the serial chunk layout this scenario assumes)
         let mut keys: Vec<f64> = (0..16_384).map(|_| rng.uniform(0.0, 1e6)).collect();
         keys.extend((0..32_768).map(|_| rng.uniform(5e6, 6e6)));
         let cfg = ExternalConfig {
@@ -275,5 +458,47 @@ mod tests {
         assert!(!stats.rmi_trained);
         assert_eq!(stats.learned_chunks, 0);
         assert_eq!(stats.fallback_chunks, stats.chunks);
+    }
+
+    #[test]
+    fn pipelined_source_error_propagates() {
+        let mut calls = 0u32;
+        let src = move |max: usize| -> io::Result<Option<Vec<u64>>> {
+            calls += 1;
+            if calls <= 2 {
+                Ok(Some((0..max as u64).collect()))
+            } else {
+                Err(io::Error::other("source failed"))
+            }
+        };
+        let mut spill = SpillDir::create(None).unwrap();
+        let cfg = ExternalConfig {
+            memory_budget: 3 * 8192 * 8,
+            threads: 2,
+            ..ExternalConfig::default()
+        };
+        let err = generate_runs::<u64, _>(src, &mut spill, &cfg).unwrap_err();
+        assert_eq!(err.to_string(), "source failed");
+    }
+
+    #[test]
+    fn pipelined_trains_model_once_and_reports_it() {
+        let mut rng = Xoshiro256pp::new(8);
+        let keys: Vec<f64> = (0..60_000).map(|_| rng.uniform(0.0, 1e6)).collect();
+        let mut it = keys.into_iter();
+        let src = move |max: usize| -> io::Result<Option<Vec<f64>>> {
+            let chunk: Vec<f64> = it.by_ref().take(max).collect();
+            Ok(if chunk.is_empty() { None } else { Some(chunk) })
+        };
+        let mut spill = SpillDir::create(None).unwrap();
+        let cfg = ExternalConfig {
+            memory_budget: 3 * 16_384 * 8,
+            threads: 2,
+            ..ExternalConfig::default()
+        };
+        let gen = generate_runs(src, &mut spill, &cfg).unwrap();
+        assert!(gen.stats.rmi_trained);
+        assert!(gen.rmi.is_some(), "trained model must reach the merge");
+        assert_eq!(gen.stats.keys, 60_000);
     }
 }

@@ -1,0 +1,394 @@
+//! RMI-partitioned parallel merge — the replay side of the paper's
+//! parallelization story.
+//!
+//! The serial loser tree consumes runs one key at a time on one thread.
+//! But the run-generation phase already trained a *global* CDF model (the
+//! shared first-chunk RMI), and a monotone CDF can be inverted: cut `[0,1)`
+//! into `p` equal-probability slices, map each cut back to a boundary key
+//! ([`crate::rmi::quality::quantile_key`]), and binary-search every sorted
+//! run for the boundary offsets ([`RunIndex::lower_bound`]). The result is
+//! `p` *range-disjoint* merge problems — shard `s` of every run holds
+//! exactly the keys in `[bound_{s-1}, bound_s)` — which merge independently
+//! on the scheduler pool and land in disjoint byte ranges of the output
+//! file, concatenating into the fully sorted result with no extra pass.
+//!
+//! Correctness never depends on the model: any nondecreasing boundary set
+//! yields an exact sort (the cuts are enforced nondecreasing, and
+//! lower-bound semantics keep duplicate keys on one side of every cut).
+//! Model *quality* only shows up as shard balance, so the driver applies a
+//! drift guard: when [`ShardPlan::skew`] exceeds
+//! `ExternalConfig::shard_skew_limit`, the data no longer matches the
+//! first-chunk model and the merge falls back to the serial loser tree.
+
+use std::fs::OpenOptions;
+use std::io::{self, BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::external::config::ExternalConfig;
+use crate::external::loser_tree::LoserTree;
+use crate::external::spill::{ExtKey, RunFile, RunIndex, RunReader, KEY_BYTES};
+use crate::key::SortKey;
+use crate::rmi::model::Rmi;
+use crate::rmi::quality;
+use crate::scheduler::run_task_pool;
+
+/// Precomputed sharding of a set of sorted runs: boundary cuts in
+/// ordered-bits space plus, per run, the key offsets of every shard.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Nondecreasing shard cuts in ordered-bits space (`p - 1` entries).
+    bounds: Vec<u64>,
+    /// `offsets[r][s]` = first key index of shard `s` inside run `r`
+    /// (`p + 1` entries per run; `offsets[r][p]` = run length).
+    offsets: Vec<Vec<u64>>,
+    /// Total keys per shard across all runs.
+    shard_keys: Vec<u64>,
+}
+
+impl ShardPlan {
+    /// Number of shards `p`.
+    pub fn shards(&self) -> usize {
+        self.shard_keys.len()
+    }
+
+    /// The shard cuts in ordered-bits space (`p - 1` nondecreasing
+    /// values; shard `s` holds keys in `[bounds[s-1], bounds[s])`).
+    pub fn bounds(&self) -> &[u64] {
+        &self.bounds
+    }
+
+    /// Total keys per shard across all runs.
+    pub fn shard_keys(&self) -> &[u64] {
+        &self.shard_keys
+    }
+
+    /// Total keys across all shards.
+    pub fn total_keys(&self) -> u64 {
+        self.shard_keys.iter().sum()
+    }
+
+    /// Load imbalance: largest shard relative to the ideal `total / p`.
+    /// `1.0` is perfect balance; the driver falls back to the serial merge
+    /// above `ExternalConfig::shard_skew_limit`.
+    pub fn skew(&self) -> f64 {
+        let total = self.total_keys();
+        if total == 0 {
+            return 1.0;
+        }
+        let ideal = total as f64 / self.shards() as f64;
+        let max = self.shard_keys.iter().copied().max().unwrap_or(0);
+        max as f64 / ideal.max(1.0)
+    }
+}
+
+/// Build a `p`-shard plan for `runs` by inverting the shared RMI at the
+/// quantiles `1/p .. (p-1)/p` and binary-searching every run for the
+/// resulting boundary keys. Costs `O(p log n)` predicts plus
+/// `O(runs · p · log n)` positioned reads — negligible next to the merge.
+pub fn plan_shards<K: ExtKey>(rmi: &Rmi, runs: &[RunFile], p: usize) -> io::Result<ShardPlan> {
+    let p = p.max(1);
+    let mut bounds = Vec::with_capacity(p.saturating_sub(1));
+    for i in 1..p {
+        let q = i as f64 / p as f64;
+        let key: K = quality::quantile_key(rmi, q);
+        bounds.push(key.to_bits_ordered());
+    }
+    // The monotone model makes these nondecreasing already; enforce it so
+    // correctness cannot hinge on the model (cf. module docs).
+    for i in 1..bounds.len() {
+        if bounds[i] < bounds[i - 1] {
+            bounds[i] = bounds[i - 1];
+        }
+    }
+
+    let mut offsets = Vec::with_capacity(runs.len());
+    for run in runs {
+        let mut idx = RunIndex::<K>::open(&run.path)?;
+        let mut offs = Vec::with_capacity(p + 1);
+        offs.push(0u64);
+        for &b in &bounds {
+            offs.push(idx.lower_bound(b)?);
+        }
+        offs.push(run.n);
+        // lower bounds of nondecreasing cuts are nondecreasing; clamp all
+        // the same so a corrupt run cannot produce negative ranges
+        for i in 1..offs.len() {
+            if offs[i] < offs[i - 1] {
+                offs[i] = offs[i - 1];
+            }
+        }
+        offsets.push(offs);
+    }
+
+    let mut shard_keys = vec![0u64; p];
+    for offs in &offsets {
+        for (s, keys) in shard_keys.iter_mut().enumerate() {
+            *keys += offs[s + 1] - offs[s];
+        }
+    }
+    Ok(ShardPlan {
+        bounds,
+        offsets,
+        shard_keys,
+    })
+}
+
+/// Merge all runs into `output` by running one loser tree per shard on the
+/// scheduler pool; every shard seek-writes its own disjoint byte range of
+/// the pre-sized output file, so shard order never serializes the work.
+/// Returns the total key count written.
+pub fn merge_sharded<K: ExtKey>(
+    runs: &[RunFile],
+    plan: &ShardPlan,
+    output: &Path,
+    cfg: &ExternalConfig,
+    threads: usize,
+) -> io::Result<u64> {
+    let p = plan.shards();
+    let total = plan.total_keys();
+    // Pre-size the output so every shard can open + seek independently.
+    {
+        let f = std::fs::File::create(output)?;
+        f.set_len(total * KEY_BYTES as u64)?;
+    }
+    // Output byte offset of each shard = prefix sum of shard sizes.
+    let mut out_key_off = Vec::with_capacity(p + 1);
+    let mut acc = 0u64;
+    out_key_off.push(0u64);
+    for &keys in &plan.shard_keys {
+        acc += keys;
+        out_key_off.push(acc);
+    }
+    // Up to `threads` shards in flight, each with `runs.len()` readers and
+    // one writer: scale the per-stream buffer so the whole merge stays
+    // within one io-buffer budget per worker.
+    let buf = (cfg.effective_io_buffer() / threads.max(1)).max(4096);
+
+    let first_err: Mutex<Option<io::Error>> = Mutex::new(None);
+    let tasks: Vec<usize> = (0..p).filter(|&s| plan.shard_keys[s] > 0).collect();
+    run_task_pool(threads, tasks, |s, _spawner| {
+        if first_err.lock().unwrap().is_some() {
+            return; // a shard already failed; drain the queue cheaply
+        }
+        if let Err(e) = merge_one_shard::<K>(runs, plan, s, out_key_off[s], output, buf) {
+            let mut slot = first_err.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        }
+    });
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+    Ok(total)
+}
+
+/// Merge shard `s` of every run into the output range starting at key
+/// offset `out_key_off`.
+fn merge_one_shard<K: ExtKey>(
+    runs: &[RunFile],
+    plan: &ShardPlan,
+    s: usize,
+    out_key_off: u64,
+    output: &Path,
+    io_buffer: usize,
+) -> io::Result<()> {
+    let mut sources = Vec::new();
+    for (run, offs) in runs.iter().zip(&plan.offsets) {
+        let (lo, hi) = (offs[s], offs[s + 1]);
+        if hi > lo {
+            sources.push(RunReader::<K>::open_range(&run.path, lo, hi - lo, io_buffer)?);
+        }
+    }
+    let mut out = OpenOptions::new().write(true).open(output)?;
+    out.seek(SeekFrom::Start(out_key_off * KEY_BYTES as u64))?;
+    let mut w = BufWriter::with_capacity(io_buffer, out);
+    let mut tree = LoserTree::new(sources)?;
+    let mut written = 0u64;
+    while let Some(k) = tree.next()? {
+        w.write_all(&k.to_le8())?;
+        written += 1;
+    }
+    w.flush()?;
+    debug_assert_eq!(written, plan.shard_keys[s]);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::external::spill::{read_keys_file, write_keys_file};
+    use crate::rmi::model::RmiConfig;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("aipso-shard-{}-{name}", std::process::id()))
+    }
+
+    fn uniform_rmi(rng: &mut Xoshiro256pp) -> Rmi {
+        let mut sample: Vec<f64> = (0..8192).map(|_| rng.uniform(0.0, 1e6)).collect();
+        sample.sort_unstable_by(f64::total_cmp);
+        Rmi::train(&sample, RmiConfig { n_leaves: 128 })
+    }
+
+    fn spill_sorted(name: &str, mut keys: Vec<f64>) -> RunFile {
+        keys.sort_unstable_by(f64::total_cmp);
+        write_keys_file(&tmp(name), &keys).unwrap()
+    }
+
+    fn cleanup(runs: &[RunFile], out: &std::path::Path) {
+        for r in runs {
+            let _ = std::fs::remove_file(&r.path);
+        }
+        let _ = std::fs::remove_file(out);
+    }
+
+    #[test]
+    fn sharded_merge_matches_flat_sort() {
+        let mut rng = Xoshiro256pp::new(0x5AAD);
+        let rmi = uniform_rmi(&mut rng);
+        let mut all: Vec<f64> = Vec::new();
+        let mut runs = Vec::new();
+        for i in 0..5 {
+            let keys: Vec<f64> = (0..4000).map(|_| rng.uniform(0.0, 1e6)).collect();
+            all.extend_from_slice(&keys);
+            runs.push(spill_sorted(&format!("flat-{i}"), keys));
+        }
+        let plan = plan_shards::<f64>(&rmi, &runs, 4).unwrap();
+        assert_eq!(plan.shards(), 4);
+        assert_eq!(plan.total_keys(), all.len() as u64);
+        // in-distribution data: the model's cuts are close to balanced
+        assert!(plan.skew() < 2.0, "skew={}", plan.skew());
+
+        let out = tmp("flat-out.bin");
+        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 4).unwrap();
+        assert_eq!(n, all.len() as u64);
+        all.sort_unstable_by(f64::total_cmp);
+        let got = read_keys_file::<f64>(&out).unwrap();
+        let gb: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+        let wb: Vec<u64> = all.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, wb);
+        cleanup(&runs, &out);
+    }
+
+    #[test]
+    fn duplicate_heavy_keys_collapse_into_one_shard() {
+        // Every key identical: lower-bound cuts put the whole population on
+        // one side of every boundary, so exactly one shard holds all keys —
+        // maximal skew, but the merge output is still exact.
+        let mut rng = Xoshiro256pp::new(0xD0B5);
+        let rmi = uniform_rmi(&mut rng);
+        let runs = vec![
+            spill_sorted("dup-0", vec![5e5; 3000]),
+            spill_sorted("dup-1", vec![5e5; 2000]),
+        ];
+        let plan = plan_shards::<f64>(&rmi, &runs, 4).unwrap();
+        let non_empty: Vec<&u64> = plan.shard_keys().iter().filter(|&&k| k > 0).collect();
+        assert_eq!(non_empty, vec![&5000u64], "all duplicates in one shard");
+        assert!(plan.skew() > 3.9, "skew={}", plan.skew());
+
+        let out = tmp("dup-out.bin");
+        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 4).unwrap();
+        assert_eq!(n, 5000);
+        let got = read_keys_file::<f64>(&out).unwrap();
+        assert_eq!(got.len(), 5000);
+        assert!(got.iter().all(|&x| x == 5e5));
+        cleanup(&runs, &out);
+    }
+
+    #[test]
+    fn runs_with_empty_shard_ranges_merge_exactly() {
+        // Run A lives entirely in the bottom quarter, run B in the top: for
+        // most shards one (or both) runs contribute an empty range.
+        let mut rng = Xoshiro256pp::new(0xE3B1);
+        let rmi = uniform_rmi(&mut rng);
+        let a: Vec<f64> = (0..2500).map(|_| rng.uniform(0.0, 2.4e5)).collect();
+        let b: Vec<f64> = (0..2500).map(|_| rng.uniform(7.6e5, 1e6)).collect();
+        let mut all = a.clone();
+        all.extend_from_slice(&b);
+        let runs = vec![spill_sorted("empty-a", a), spill_sorted("empty-b", b)];
+        let plan = plan_shards::<f64>(&rmi, &runs, 4).unwrap();
+        // the two middle quantile shards see (almost) nothing
+        assert_eq!(plan.total_keys(), 5000);
+
+        let out = tmp("empty-out.bin");
+        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 4).unwrap();
+        assert_eq!(n, 5000);
+        all.sort_unstable_by(f64::total_cmp);
+        let got = read_keys_file::<f64>(&out).unwrap();
+        let gb: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+        let wb: Vec<u64> = all.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, wb);
+        cleanup(&runs, &out);
+    }
+
+    #[test]
+    fn single_shard_plan_equals_serial_merge() {
+        // p = 1: no cuts, one merge task — byte-identical to the serial
+        // loser tree over the same runs.
+        let mut rng = Xoshiro256pp::new(0x0121);
+        let rmi = uniform_rmi(&mut rng);
+        let mut runs = Vec::new();
+        let mut all: Vec<f64> = Vec::new();
+        for i in 0..3 {
+            let keys: Vec<f64> = (0..1500).map(|_| rng.uniform(0.0, 1e6)).collect();
+            all.extend_from_slice(&keys);
+            runs.push(spill_sorted(&format!("p1-{i}"), keys));
+        }
+        let plan = plan_shards::<f64>(&rmi, &runs, 1).unwrap();
+        assert_eq!(plan.shards(), 1);
+        assert!((plan.skew() - 1.0).abs() < 1e-12);
+
+        let sharded_out = tmp("p1-sharded.bin");
+        merge_sharded::<f64>(&runs, &plan, &sharded_out, &ExternalConfig::default(), 2).unwrap();
+
+        // serial reference: one loser tree over full-range readers
+        let serial_out = tmp("p1-serial.bin");
+        {
+            let sources: Vec<RunReader<f64>> = runs
+                .iter()
+                .map(|r| RunReader::open(&r.path, 1 << 16).unwrap())
+                .collect();
+            let mut tree = LoserTree::new(sources).unwrap();
+            let mut w = crate::external::spill::RunWriter::<f64>::create(
+                serial_out.clone(),
+                1 << 16,
+            )
+            .unwrap();
+            while let Some(k) = tree.next().unwrap() {
+                w.push(k).unwrap();
+            }
+            w.finish().unwrap();
+        }
+        assert_eq!(
+            std::fs::read(&sharded_out).unwrap(),
+            std::fs::read(&serial_out).unwrap(),
+            "p=1 sharded merge must be byte-identical to the serial merge"
+        );
+        cleanup(&runs, &sharded_out);
+        let _ = std::fs::remove_file(&serial_out);
+    }
+
+    #[test]
+    fn boundary_duplicates_never_straddle_a_cut() {
+        // A value sitting exactly on a quantile cut: lower-bound semantics
+        // must put every copy in the shard that starts at the cut.
+        let mut rng = Xoshiro256pp::new(0xB0B);
+        let rmi = uniform_rmi(&mut rng);
+        let cut: f64 = quality::quantile_key(&rmi, 0.5);
+        let mut keys = vec![cut; 100];
+        keys.extend((0..400).map(|_| rng.uniform(0.0, 1e6)));
+        let runs = vec![spill_sorted("cut-0", keys.clone())];
+        let plan = plan_shards::<f64>(&rmi, &runs, 2).unwrap();
+        let out = tmp("cut-out.bin");
+        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 2).unwrap();
+        assert_eq!(n, 500);
+        keys.sort_unstable_by(f64::total_cmp);
+        let got = read_keys_file::<f64>(&out).unwrap();
+        let gb: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+        let wb: Vec<u64> = keys.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, wb);
+        cleanup(&runs, &out);
+    }
+}

@@ -7,7 +7,7 @@
 //! [`ExtKey`] trait bounds the codec to the paper's two key domains.
 
 use std::fs::File;
-use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::io::{self, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::marker::PhantomData;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -20,7 +20,9 @@ pub const KEY_BYTES: usize = 8;
 /// A key type the external sorter can spill: [`SortKey`] plus a fixed
 /// 8-byte little-endian native encoding (the paper's two domains).
 pub trait ExtKey: SortKey {
+    /// Encode the key as 8 little-endian bytes (its native representation).
     fn to_le8(self) -> [u8; 8];
+    /// Decode a key from its 8-byte little-endian encoding.
     fn from_le8(bytes: [u8; 8]) -> Self;
 }
 
@@ -51,6 +53,7 @@ impl ExtKey for f64 {
 /// A spilled run (or any key file) on disk.
 #[derive(Debug, Clone)]
 pub struct RunFile {
+    /// Location of the run on disk.
     pub path: PathBuf,
     /// Number of keys in the file.
     pub n: u64,
@@ -81,6 +84,7 @@ impl SpillDir {
         Ok(SpillDir { dir, counter: 0 })
     }
 
+    /// The scratch directory's location.
     pub fn path(&self) -> &Path {
         &self.dir
     }
@@ -106,6 +110,7 @@ pub struct RunReader<K: ExtKey> {
 }
 
 impl<K: ExtKey> RunReader<K> {
+    /// Open a buffered reader over a whole key file.
     pub fn open(path: &Path, io_buffer: usize) -> io::Result<RunReader<K>> {
         let file = File::open(path)?;
         let len = file.metadata()?.len();
@@ -121,6 +126,37 @@ impl<K: ExtKey> RunReader<K> {
         Ok(RunReader {
             r: BufReader::with_capacity(io_buffer.max(4096), file),
             remaining: len / KEY_BYTES as u64,
+            _pd: PhantomData,
+        })
+    }
+
+    /// Open a buffered reader over the key range `[start, start + len)` of
+    /// a key file (indices in keys, clamped to the file). The sharded
+    /// merge streams each run's shard segment through one of these.
+    pub fn open_range(
+        path: &Path,
+        start: u64,
+        len: u64,
+        io_buffer: usize,
+    ) -> io::Result<RunReader<K>> {
+        let mut file = File::open(path)?;
+        let bytes = file.metadata()?.len();
+        if bytes % KEY_BYTES as u64 != 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "{}: length {bytes} is not a multiple of {KEY_BYTES}",
+                    path.display()
+                ),
+            ));
+        }
+        let n = bytes / KEY_BYTES as u64;
+        let start = start.min(n);
+        let len = len.min(n - start);
+        file.seek(SeekFrom::Start(start * KEY_BYTES as u64))?;
+        Ok(RunReader {
+            r: BufReader::with_capacity(io_buffer.max(4096), file),
+            remaining: len,
             _pd: PhantomData,
         })
     }
@@ -169,6 +205,74 @@ impl<K: ExtKey> RunReader<K> {
     }
 }
 
+/// Random-access view of a sorted run file: positioned single-key reads
+/// and a lower-bound binary search over the key order. The shard planner
+/// uses this to locate shard boundaries in `O(log n)` seeks per run
+/// instead of streaming the whole file.
+pub struct RunIndex<K: ExtKey> {
+    file: File,
+    n: u64,
+    _pd: PhantomData<K>,
+}
+
+impl<K: ExtKey> RunIndex<K> {
+    /// Open a key file for random access.
+    pub fn open(path: &Path) -> io::Result<RunIndex<K>> {
+        let file = File::open(path)?;
+        let bytes = file.metadata()?.len();
+        if bytes % KEY_BYTES as u64 != 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "{}: length {bytes} is not a multiple of {KEY_BYTES}",
+                    path.display()
+                ),
+            ));
+        }
+        Ok(RunIndex {
+            file,
+            n: bytes / KEY_BYTES as u64,
+            _pd: PhantomData,
+        })
+    }
+
+    /// Number of keys in the file.
+    pub fn len(&self) -> u64 {
+        self.n
+    }
+
+    /// True when the file holds no keys.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Read the key at index `idx` with one positioned read.
+    pub fn key_at(&mut self, idx: u64) -> io::Result<K> {
+        debug_assert!(idx < self.n);
+        self.file.seek(SeekFrom::Start(idx * KEY_BYTES as u64))?;
+        let mut buf = [0u8; KEY_BYTES];
+        self.file.read_exact(&mut buf)?;
+        Ok(K::from_le8(buf))
+    }
+
+    /// First index whose key's ordered bits are `>= bound_bits`, assuming
+    /// the file is sorted (`n` when every key is below the bound). This is
+    /// the shard-boundary cut: keys equal to the bound fall into the shard
+    /// that *starts* at the bound, so duplicates never straddle a cut.
+    pub fn lower_bound(&mut self, bound_bits: u64) -> io::Result<u64> {
+        let (mut lo, mut hi) = (0u64, self.n);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.key_at(mid)?.to_bits_ordered() < bound_bits {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        Ok(lo)
+    }
+}
+
 /// Buffered streaming writer producing a [`RunFile`].
 pub struct RunWriter<K: ExtKey> {
     w: BufWriter<File>,
@@ -178,6 +282,7 @@ pub struct RunWriter<K: ExtKey> {
 }
 
 impl<K: ExtKey> RunWriter<K> {
+    /// Create (truncate) the file at `path` and return a writer over it.
     pub fn create(path: PathBuf, io_buffer: usize) -> io::Result<RunWriter<K>> {
         let file = File::create(&path)?;
         Ok(RunWriter {
@@ -188,6 +293,7 @@ impl<K: ExtKey> RunWriter<K> {
         })
     }
 
+    /// Append one key.
     #[inline]
     pub fn push(&mut self, key: K) -> io::Result<()> {
         self.w.write_all(&key.to_le8())?;
@@ -345,6 +451,34 @@ mod tests {
             assert!(dir.exists());
         }
         assert!(!dir.exists(), "SpillDir must remove itself on drop");
+    }
+
+    #[test]
+    fn range_reads_and_index_lower_bound() {
+        let p = tmp("range.bin");
+        let keys: Vec<u64> = (0..500).map(|i| i * 2).collect(); // evens 0..998
+        write_keys_file(&p, &keys).unwrap();
+
+        let mut r = RunReader::<u64>::open_range(&p, 10, 5, 4096).unwrap();
+        let got = r.read_chunk(100).unwrap();
+        assert_eq!(got, vec![20, 22, 24, 26, 28]);
+
+        // ranges clamp to the file
+        let mut r = RunReader::<u64>::open_range(&p, 498, 100, 4096).unwrap();
+        assert_eq!(r.read_chunk(100).unwrap(), vec![996, 998]);
+        let mut r = RunReader::<u64>::open_range(&p, 9999, 10, 4096).unwrap();
+        assert!(r.read_chunk(10).unwrap().is_empty());
+
+        let mut idx = RunIndex::<u64>::open(&p).unwrap();
+        assert_eq!(idx.len(), 500);
+        assert_eq!(idx.key_at(0).unwrap(), 0);
+        assert_eq!(idx.key_at(499).unwrap(), 998);
+        // present key -> its index; absent key -> insertion point
+        assert_eq!(idx.lower_bound(40u64.to_bits_ordered()).unwrap(), 20);
+        assert_eq!(idx.lower_bound(41u64.to_bits_ordered()).unwrap(), 21);
+        assert_eq!(idx.lower_bound(0).unwrap(), 0);
+        assert_eq!(idx.lower_bound(u64::MAX).unwrap(), 500);
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

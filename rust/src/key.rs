@@ -29,21 +29,25 @@ pub trait SortKey: Copy + Send + Sync + Debug + 'static {
     /// (8 for 64-bit keys, 4 for 32-bit keys) — the radix digit count.
     const RADIX_BYTES: usize;
 
+    /// `self < other` under the key's total order.
     #[inline(always)]
     fn key_lt(self, other: Self) -> bool {
         self.to_bits_ordered() < other.to_bits_ordered()
     }
 
+    /// `self <= other` under the key's total order.
     #[inline(always)]
     fn key_le(self, other: Self) -> bool {
         self.to_bits_ordered() <= other.to_bits_ordered()
     }
 
+    /// `self == other` under the key's total order.
     #[inline(always)]
     fn key_eq(self, other: Self) -> bool {
         self.to_bits_ordered() == other.to_bits_ordered()
     }
 
+    /// The larger key under the total order.
     #[inline(always)]
     fn key_max(self, other: Self) -> Self {
         if self.key_lt(other) {
@@ -53,6 +57,7 @@ pub trait SortKey: Copy + Send + Sync + Debug + 'static {
         }
     }
 
+    /// The smaller key under the total order.
     #[inline(always)]
     fn key_min(self, other: Self) -> Self {
         if other.key_lt(self) {

@@ -8,6 +8,7 @@ use crate::rmi::model::Rmi;
 use crate::sample_sort::base_case::{heapsort, insertion_sort};
 use crate::util::rng::Xoshiro256pp;
 
+/// Sort with Quicksort + learned pivots (paper Algorithms 1 and 2).
 pub fn sort<K: SortKey>(data: &mut [K]) {
     let mut rng = Xoshiro256pp::new(0x1EA2_1 ^ data.len() as u64);
     let depth = 2 * (usize::BITS - data.len().leading_zeros()) as usize + 8;

@@ -12,6 +12,7 @@ use crate::learned_qs::{train_cdf_model, BASECASE_SIZE};
 use crate::sample_sort::base_case::{heapsort, insertion_sort};
 use crate::util::rng::Xoshiro256pp;
 
+/// Sort with Learned Quicksort (paper Algorithm 3).
 pub fn sort<K: SortKey>(data: &mut [K]) {
     let mut rng = Xoshiro256pp::new(0x1EA2_3 ^ data.len() as u64);
     let depth = 2 * (usize::BITS - data.len().leading_zeros()) as usize + 8;

@@ -34,11 +34,14 @@ use crate::util::timer::{phase_scope, Phase};
 
 use counting_sort::model_counting_sort;
 
+/// Tuning knobs of LearnedSort 2.0.
 #[derive(Debug, Clone, Copy)]
 pub struct LearnedSortConfig {
     /// Sampling rate for model training (paper: 1%).
     pub sample_frac: f64,
+    /// Sample size floor.
     pub min_sample: usize,
+    /// Sample size cap.
     pub max_sample: usize,
     /// Second-level model count (paper: B = 1000).
     pub leaves: usize,
@@ -111,6 +114,7 @@ pub fn sort<K: SortKey>(data: &mut [K]) {
     sort_cfg(data, &LearnedSortConfig::default());
 }
 
+/// Sort with explicit configuration (tests and ablations).
 pub fn sort_cfg<K: SortKey>(data: &mut [K], cfg: &LearnedSortConfig) {
     let n = data.len();
     if n <= cfg.base_case {

@@ -20,10 +20,13 @@
 //!   ([`classifier`]), a work-pool scheduler ([`scheduler`]), the PJRT
 //!   artifact runtime ([`runtime`]), a sort-job coordinator
 //!   ([`coordinator`]), and the benchmark harness ([`bench_harness`]).
-//! * An **out-of-core sorter** ([`external`]): datasets larger than memory
-//!   are sorted under an explicit byte budget — chunked run generation
-//!   reusing one monotonic RMI across all chunks (with a drift-probe
-//!   fallback to IPS⁴o), binary spill files, and a k-way loser-tree merge.
+//! * A **parallel out-of-core sorter** ([`external`]): datasets larger
+//!   than memory are sorted under an explicit byte budget — run generation
+//!   overlaps chunk IO with pool-parallel sorting and reuses one monotonic
+//!   RMI across all chunks (with a drift-probe fallback to IPS⁴o); the
+//!   merge inverts that RMI into quantile shards and runs range-disjoint
+//!   loser trees concurrently. `ARCHITECTURE.md` (repository root) walks
+//!   the module map and the full external data flow.
 //!
 //! The learned model also exists as an AOT-compiled JAX/Pallas artifact
 //! (see `python/compile/`); [`runtime`] loads and executes it via PJRT so
@@ -44,7 +47,8 @@
 //! ```no_run
 //! use aipso::external::{self, ExternalConfig};
 //!
-//! let cfg = ExternalConfig::with_budget(64 << 20); // 64 MiB working set
+//! let mut cfg = ExternalConfig::with_budget(64 << 20); // 64 MiB working set
+//! cfg.threads = 8; // overlapped chunk IO + RMI-sharded parallel merge
 //! let report = external::sort_file::<f64>(
 //!     "uniform.bin".as_ref(),
 //!     "uniform.sorted.bin".as_ref(),
@@ -52,6 +56,8 @@
 //! ).unwrap();
 //! assert!(report.rmi_trained);
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod aips2o;
 pub mod baseline;
@@ -128,6 +134,7 @@ impl SortEngine {
         }
     }
 
+    /// Parse an engine from any paper spelling or CLI shorthand.
     pub fn parse(s: &str) -> Option<SortEngine> {
         Some(match s.to_ascii_lowercase().as_str() {
             "aips2o" | "ai1s2o" => SortEngine::Aips2o,
@@ -141,6 +148,7 @@ impl SortEngine {
         })
     }
 
+    /// Every engine, in the paper's presentation order.
     pub fn all() -> [SortEngine; 7] {
         [
             SortEngine::Aips2o,

@@ -61,8 +61,9 @@ COMMANDS
   gen             --dataset NAME [--n N] [--seed S] [--out FILE] [--stream]
   sort            --dataset NAME --engine ENGINE [--n N] [--threads T] [--seq]
   extsort         --input FILE --output FILE --key f64|u64 [--budget-mb MB]
-                  [--fanout K] [--threads T] [--ips4o-runs]
-                  (or --dataset NAME --n N to synthesize --input first)
+                  [--fanout K] [--threads T] [--shards P] [--ips4o-runs]
+                  (or --dataset NAME --n N to synthesize --input first;
+                   --threads 1 = serial reference pipeline)
   bench           [--figure f1|f2|f3|f4|f5|f6|all] [--n N] [--reps R] [--threads T]
   pivot-quality   [--n N]
   phases          --dataset NAME --engine ENGINE [--n N] [--threads T]
@@ -255,6 +256,7 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
     }
     cfg.merge_fanout = opt_usize(opts, "fanout", cfg.merge_fanout);
     cfg.threads = opt_usize(opts, "threads", 0);
+    cfg.merge_shards = opt_usize(opts, "shards", cfg.merge_shards);
     if opts.contains_key("ips4o-runs") {
         cfg.run_gen = RunGen::Ips4o;
     }
@@ -308,7 +310,8 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
     .unwrap_or(false);
     println!(
         "extsort {} -> {}: {} keys in {} — {} [{}]\n  budget {} MiB, {} runs \
-         ({} learned, {} fallback), rmi trained: {}, merge passes: {}",
+         ({} learned, {} fallback), rmi trained: {}, merge passes: {}, \
+         final-merge shards: {}",
         input,
         output,
         fmt::keys(report.keys as usize),
@@ -321,6 +324,11 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
         report.fallback_runs,
         report.rmi_trained,
         report.merge_passes,
+        if report.merge_shards == 0 {
+            "serial".to_string()
+        } else {
+            report.merge_shards.to_string()
+        },
     );
     if ok {
         0

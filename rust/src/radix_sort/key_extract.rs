@@ -14,6 +14,7 @@ pub struct DigitClassifier {
 }
 
 impl DigitClassifier {
+    /// Classifier for recursion level `level` of key type `K`.
     pub fn new<K: SortKey>(level: usize) -> DigitClassifier {
         debug_assert!(level < K::RADIX_BYTES);
         DigitClassifier {
@@ -27,6 +28,7 @@ impl DigitClassifier {
         DigitClassifier { shift }
     }
 
+    /// The bit shift this classifier extracts its digit at.
     pub fn shift(&self) -> u32 {
         self.shift
     }

@@ -5,14 +5,20 @@
 /// produces per leaf.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct FitStats {
+    /// Number of points.
     pub cnt: f64,
+    /// Σx.
     pub sx: f64,
+    /// Σy.
     pub sy: f64,
+    /// Σxy.
     pub sxy: f64,
+    /// Σx².
     pub sxx: f64,
 }
 
 impl FitStats {
+    /// Fold one point into the statistics.
     #[inline]
     pub fn add(&mut self, x: f64, y: f64) {
         self.cnt += 1.0;
@@ -22,6 +28,7 @@ impl FitStats {
         self.sxx += x * x;
     }
 
+    /// Combine with statistics accumulated elsewhere (parallel slices).
     #[inline]
     pub fn merge(&mut self, o: &FitStats) {
         self.cnt += o.cnt;

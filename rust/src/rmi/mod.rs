@@ -6,6 +6,21 @@
 //! AOT-compiled reference executed through PJRT ([`crate::runtime`]); this
 //! native mirror is the in-loop hot path — see DESIGN.md §1 for why both
 //! exist, and `rust/tests/pjrt_parity.rs` for the cross-validation.
+//!
+//! ```
+//! use aipso::rmi::{Rmi, RmiConfig};
+//!
+//! // train on a sorted sample; F is a monotone CDF estimate in [0, 1)
+//! let sample: Vec<f64> = (0..4096).map(|i| i as f64).collect();
+//! let rmi = Rmi::train(&sample, RmiConfig { n_leaves: 64 });
+//! let (lo, mid, hi) = (rmi.predict(0.0), rmi.predict(2048.0), rmi.predict(4095.0));
+//! assert!(lo <= mid && mid <= hi);
+//! assert!((mid - 0.5).abs() < 0.05, "midpoint CDF ~ 0.5, got {mid}");
+//!
+//! // the external sorter's sharded merge inverts it back into keys
+//! let median: f64 = aipso::rmi::quality::quantile_key(&rmi, 0.5);
+//! assert!((median - 2048.0).abs() < 200.0);
+//! ```
 
 pub mod linear;
 pub mod model;

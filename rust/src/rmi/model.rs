@@ -19,6 +19,7 @@ use crate::util::rng::Xoshiro256pp;
 /// `F(x) < 1` strictly: bucket = floor(F*B) stays in range.
 pub const ONE_MINUS_EPS: f64 = 1.0 - 2.2204460492503131e-16; // 1 - 2^-52
 
+/// Training hyper-parameters of the two-layer RMI.
 #[derive(Debug, Clone, Copy)]
 pub struct RmiConfig {
     /// Number of second-level models B (paper: 1000 for LearnedSort,
@@ -35,17 +36,24 @@ impl Default for RmiConfig {
 /// One second-level linear model with its monotonic envelope.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Leaf {
+    /// Slope (clamped nonnegative).
     pub a: f64,
+    /// Intercept.
     pub b: f64,
+    /// Lower envelope bound (cumulative CDF mass before this leaf).
     pub lo: f64,
+    /// Upper envelope bound (cumulative CDF mass through this leaf).
     pub hi: f64,
 }
 
 /// Trained two-layer RMI.
 #[derive(Debug, Clone)]
 pub struct Rmi {
+    /// Root slope.
     pub root_a: f64,
+    /// Root intercept.
     pub root_b: f64,
+    /// Second-level models, in leaf order.
     pub leaves: Vec<Leaf>,
 }
 
@@ -135,6 +143,7 @@ impl Rmi {
         (root, leaf)
     }
 
+    /// Number of second-level models.
     #[inline(always)]
     pub fn n_leaves(&self) -> usize {
         self.leaves.len()

@@ -104,6 +104,27 @@ pub fn model_drift(rmi: &Rmi, probe_sorted: &[f64]) -> f64 {
     err / m as f64
 }
 
+/// Invert the model: the smallest key of domain `K` whose predicted CDF
+/// reaches `q`, found by binary search over the key's *ordered-bits* space
+/// (valid because the monotonic envelope makes `F` nondecreasing over the
+/// whole domain). The parallel external merge uses this to cut the global
+/// key range into equal-probability shards — and because shard correctness
+/// only needs *consistent* cuts, a model that has drifted merely skews the
+/// shard sizes (which the caller guards against), never the output.
+pub fn quantile_key<K: SortKey>(rmi: &Rmi, q: f64) -> K {
+    let (mut lo, mut hi) = (0u64, u64::MAX);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        let x = K::from_bits_ordered(mid).to_f64();
+        if rmi.predict(x) >= q {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    K::from_bits_ordered(lo)
+}
+
 /// Convenience for pivot sets without gaps.
 pub fn pivot_quality_exact<K: SortKey>(sorted: &[K], pivots: &[K]) -> f64 {
     let wrapped: Vec<Option<K>> = pivots.iter().map(|&p| Some(p)).collect();
@@ -189,6 +210,32 @@ mod tests {
         let out_dist = model_drift(&rmi, &shifted);
         assert!(out_dist > 0.2, "shifted drift {out_dist}");
         assert_eq!(model_drift(&rmi, &[]), 0.0);
+    }
+
+    #[test]
+    fn quantile_key_inverts_uniform_cdf() {
+        let mut rng = Xoshiro256pp::new(0xA11CE);
+        let mut sample: Vec<f64> = (0..16_384).map(|_| rng.uniform(0.0, 1e6)).collect();
+        sample.sort_unstable_by(f64::total_cmp);
+        let rmi = Rmi::train(&sample, RmiConfig { n_leaves: 256 });
+        // on U(0, 1e6) the q-quantile key is ~q * 1e6
+        for q in [0.1, 0.25, 0.5, 0.75, 0.9] {
+            let k: f64 = quantile_key(&rmi, q);
+            assert!(
+                (k - q * 1e6).abs() < 5e4,
+                "q={q}: key {k} far from {}",
+                q * 1e6
+            );
+            // the returned key is the *smallest* reaching q
+            assert!(rmi.predict(k) >= q);
+        }
+        // quantile keys are nondecreasing in q (monotone model)
+        let a: f64 = quantile_key(&rmi, 0.2);
+        let b: f64 = quantile_key(&rmi, 0.8);
+        assert!(a.to_bits_ordered() <= b.to_bits_ordered());
+        // u64 domain: degenerate extremes stay in range
+        let lo: u64 = quantile_key(&rmi, 0.0);
+        let _ = lo; // q=0 resolves to the domain minimum, still a valid key
     }
 
     #[test]

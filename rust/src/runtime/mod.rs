@@ -28,14 +28,20 @@ use crate::{anyhow, bail};
 /// Parsed `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Static sample size the `rmi_train` artifact was compiled for.
     pub train_sample: usize,
+    /// Static batch size the `rmi_predict` artifact was compiled for.
     pub predict_batch: usize,
+    /// Second-level model count baked into the artifacts.
     pub n_leaves: usize,
+    /// HLO text file of the training function.
     pub train_file: PathBuf,
+    /// HLO text file of the prediction function.
     pub predict_file: PathBuf,
 }
 
 impl Manifest {
+    /// Parse `manifest.json` from an artifact directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading manifest in {dir:?} (run `make artifacts`)"))?;
@@ -108,6 +114,7 @@ impl RmiRuntime {
         Self::load(&default_artifacts_dir())
     }
 
+    /// The manifest the runtime was loaded from.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

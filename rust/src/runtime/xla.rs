@@ -27,6 +27,7 @@ impl fmt::Display for XlaError {
 
 impl std::error::Error for XlaError {}
 
+/// Result alias over [`XlaError`].
 pub type Result<T> = std::result::Result<T, XlaError>;
 
 fn unavailable(what: &str) -> XlaError {
@@ -40,6 +41,7 @@ fn unavailable(what: &str) -> XlaError {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Parse HLO text (stub: always "backend not available").
     pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
         // Even reading the file would be pointless without a compiler for
         // it; fail up front so load() reports one coherent error.
@@ -51,6 +53,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Wrap a parsed module (stub: carries nothing).
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }
@@ -60,10 +63,12 @@ impl XlaComputation {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Create the CPU client (stub: always "backend not available").
     pub fn cpu() -> Result<PjRtClient> {
         Err(unavailable("creating PJRT CPU client"))
     }
 
+    /// Compile a computation (stub: always "backend not available").
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         Err(unavailable("compiling computation"))
     }
@@ -73,6 +78,7 @@ impl PjRtClient {
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Execute on device buffers (stub: always "backend not available").
     pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
         Err(unavailable("executing"))
     }
@@ -82,6 +88,7 @@ impl PjRtLoadedExecutable {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Copy to host (stub: always "backend not available").
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Err(unavailable("transferring buffer"))
     }
@@ -92,22 +99,27 @@ impl PjRtBuffer {
 pub struct Literal;
 
 impl Literal {
+    /// Build a rank-1 f64 literal (stub: carries nothing).
     pub fn vec1(_data: &[f64]) -> Literal {
         Literal
     }
 
+    /// Reshape (stub: no-op).
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
         Ok(Literal)
     }
 
+    /// Destructure a 1-tuple (stub: always "backend not available").
     pub fn to_tuple1(&self) -> Result<Literal> {
         Err(unavailable("destructuring tuple"))
     }
 
+    /// Destructure a 2-tuple (stub: always "backend not available").
     pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
         Err(unavailable("destructuring tuple"))
     }
 
+    /// Read out as a host vector (stub: always "backend not available").
     pub fn to_vec<T>(&self) -> Result<Vec<T>> {
         Err(unavailable("reading literal"))
     }

@@ -1,6 +1,7 @@
 //! Tuning knobs for the SampleSort family (defaults follow IPS⁴o's
 //! published constants, scaled for 8-byte keys).
 
+/// Tuning knobs of the IPS⁴o implementation.
 #[derive(Debug, Clone, Copy)]
 pub struct SampleSortConfig {
     /// Base fan-out k (buckets before equality doubling). IPS⁴o: 256.

@@ -33,6 +33,7 @@ pub fn sort_seq<K: SortKey>(data: &mut [K]) {
     sort_seq_cfg(data, &SampleSortConfig::default());
 }
 
+/// Sequential IPS⁴o with explicit configuration.
 pub fn sort_seq_cfg<K: SortKey>(data: &mut [K], cfg: &SampleSortConfig) {
     let mut rng = Xoshiro256pp::new(0x1B54_0001 ^ data.len() as u64);
     sort_rec(data, cfg, cfg.max_depth, &mut rng, 1);
@@ -43,6 +44,7 @@ pub fn sort_par<K: SortKey>(data: &mut [K], threads: usize) {
     sort_par_cfg(data, threads, &SampleSortConfig::default());
 }
 
+/// Parallel IPS⁴o with explicit configuration.
 pub fn sort_par_cfg<K: SortKey>(data: &mut [K], threads: usize, cfg: &SampleSortConfig) {
     let threads = threads.max(1);
     let n = data.len();

@@ -9,6 +9,32 @@
 //! * [`run_task_pool`] — a shared work queue with dynamic spawning for the
 //!   recursion phase (buckets become tasks; tasks may push sub-tasks), the
 //!   analogue of IPS⁴o's sub-problem scheduler.
+//!
+//! The external sorter builds on the same two primitives: its merge
+//! groups and quantile shards are `run_task_pool` tasks, and its pipelined
+//! run generation runs the per-chunk sort on the pool.
+//!
+//! ```
+//! use std::sync::atomic::{AtomicUsize, Ordering};
+//! use aipso::scheduler::{parallel_for, run_task_pool};
+//!
+//! // fork-join over an index range
+//! let sum = AtomicUsize::new(0);
+//! parallel_for(4, 1000, |_chunk, range| {
+//!     sum.fetch_add(range.len(), Ordering::Relaxed);
+//! });
+//! assert_eq!(sum.load(Ordering::Relaxed), 1000);
+//!
+//! // dynamic task pool: tasks may spawn sub-tasks
+//! let done = AtomicUsize::new(0);
+//! run_task_pool(4, vec![3usize], |depth, spawner| {
+//!     done.fetch_add(1, Ordering::Relaxed);
+//!     if depth > 0 {
+//!         spawner.spawn(depth - 1);
+//!     }
+//! });
+//! assert_eq!(done.load(Ordering::Relaxed), 4);
+//! ```
 
 pub mod parallel_for;
 pub mod pool;

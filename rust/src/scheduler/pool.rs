@@ -20,6 +20,7 @@ pub struct Spawner<'a, T> {
 }
 
 impl<'a, T> Spawner<'a, T> {
+    /// Push one new task onto the shared queue.
     pub fn spawn(&self, task: T) {
         let mut q = self.state.lock().unwrap();
         q.tasks.push(task);

@@ -17,6 +17,7 @@ pub struct Error {
 }
 
 impl Error {
+    /// Create an error from a displayable message.
     pub fn msg(msg: impl fmt::Display) -> Error {
         Error {
             chain: vec![msg.to_string()],
@@ -63,11 +64,14 @@ impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     }
 }
 
+/// Crate-wide result alias over the context-chained [`Error`].
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// `.context(...)` / `.with_context(|| ...)` on `Result` and `Option`.
 pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
     fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily built context message.
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 

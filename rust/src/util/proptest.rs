@@ -10,9 +10,13 @@
 
 use crate::util::rng::Xoshiro256pp;
 
+/// Runner configuration for [`check_sized`].
 pub struct PropConfig {
+    /// Number of random (seed, size) pairs to try.
     pub iters: usize,
+    /// Largest generated size.
     pub max_size: usize,
+    /// Base PRNG seed (`AIPSO_PROP_SEED` overrides, for reproductions).
     pub base_seed: u64,
 }
 
@@ -32,6 +36,7 @@ impl Default for PropConfig {
 }
 
 impl PropConfig {
+    /// Default config with an explicit iteration count.
     pub fn with_iters(iters: usize) -> Self {
         PropConfig {
             iters,
@@ -39,6 +44,7 @@ impl PropConfig {
         }
     }
 
+    /// Default config with explicit iteration count and size cap.
     pub fn with_max_size(iters: usize, max_size: usize) -> Self {
         PropConfig {
             iters,

@@ -17,10 +17,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seed the stream.
     pub fn new(seed: u64) -> Self {
         SplitMix64 { state: seed }
     }
 
+    /// Next 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -59,6 +61,7 @@ impl Xoshiro256pp {
         Xoshiro256pp::new(seed ^ (i.wrapping_mul(0xA076_1D64_78BD_642F)).rotate_left(17))
     }
 
+    /// Next 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]
@@ -116,11 +119,13 @@ impl Xoshiro256pp {
         }
     }
 
+    /// Normal with explicit mean and standard deviation.
     #[inline]
     pub fn normal_with(&mut self, mu: f64, sigma: f64) -> f64 {
         mu + sigma * self.normal()
     }
 
+    /// Log-normal: `exp(N(mu, sigma))`.
     #[inline]
     pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
         self.normal_with(mu, sigma).exp()
@@ -212,6 +217,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Sampler over `{1, …, n}` with exponent `s` (s = 1 unsupported).
     pub fn new(n: u64, s: f64) -> Self {
         assert!(n >= 1);
         assert!(s >= 0.0 && (s - 1.0).abs() > 1e-12, "s=1 not supported");
@@ -239,6 +245,7 @@ impl Zipf {
         (helper_log1p(t) / (1.0 - self.s)).exp()
     }
 
+    /// Draw one Zipf-distributed rank.
     pub fn sample(&self, rng: &mut Xoshiro256pp) -> u64 {
         loop {
             let u = self.h_x1 + rng.next_f64() * self.dist;

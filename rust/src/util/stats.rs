@@ -53,14 +53,17 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Median (50th percentile, linear interpolation).
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// Smallest value (`inf` for empty input).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Largest value (`-inf` for empty input).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }

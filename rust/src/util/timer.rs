@@ -12,18 +12,28 @@ use std::time::Instant;
 /// Major phases of the partitioning engines (IPS⁴o §3, LearnedSort §2.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
+    /// Drawing the splitter / training sample.
     Sampling = 0,
+    /// Fitting the RMI (or building the splitter tree).
     ModelTrain = 1,
+    /// The classify-into-blocks sweep.
     Classification = 2,
+    /// The in-place block permutation.
     BlockPermutation = 3,
+    /// Partition cleanup (block tails).
     Cleanup = 4,
+    /// Base-case sorting.
     BaseCase = 5,
+    /// Task-pool queue management.
     Scheduling = 6,
+    /// Everything unbracketed.
     Other = 7,
 }
 
+/// Number of profiled phases.
 pub const NUM_PHASES: usize = 8;
 
+/// Display names, indexed by `Phase as usize`.
 pub const PHASE_NAMES: [&str; NUM_PHASES] = [
     "sampling",
     "model-train",
@@ -53,10 +63,12 @@ pub fn set_phase_profiling(on: bool) {
     ENABLED.store(on, Ordering::Relaxed);
 }
 
+/// Whether the phase profiler is currently on.
 pub fn phase_profiling_enabled() -> bool {
     ENABLED.load(Ordering::Relaxed)
 }
 
+/// Zero all accumulated phase counters.
 pub fn reset_phases() {
     for c in &PHASE_NS {
         c.store(0, Ordering::Relaxed);

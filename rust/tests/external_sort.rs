@@ -1,8 +1,9 @@
 //! Integration + property tests for the out-of-core sorter: byte-exact
 //! agreement with `sort_unstable` on the reloaded output across random
 //! chunk-size/budget combinations, duplicate-heavy inputs, edge cases,
-//! and the acceptance scenario (data ≥ 4x the memory budget with the RMI
-//! trained once and reused for every run).
+//! the acceptance scenario (data ≥ 4x the memory budget with the RMI
+//! trained once and reused for every run), and serial/parallel pipeline
+//! equivalence on all 14 paper distributions.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,7 +22,8 @@ fn tmp(tag: &str) -> PathBuf {
     ))
 }
 
-/// Small-file config: tiny IO buffers so merge fan-in clamps kick in.
+/// Small-file config: tiny IO buffers so merge fan-in clamps kick in;
+/// threads = 2 routes through the overlapped pipeline.
 fn cfg_with_budget(budget_bytes: usize) -> ExternalConfig {
     ExternalConfig {
         memory_budget: budget_bytes.max(512),
@@ -108,9 +110,10 @@ fn property_f64_random_budgets_bit_exact() {
 fn duplicate_heavy_zipf_and_two_dups() {
     for name in ["zipf", "two_dups"] {
         let keys = datasets::generate_f64(name, 120_000, 13).unwrap();
-        // ~16Ki-key chunks: well above min_learned_chunk, so the learned
-        // path is offered and Algorithm 5's duplicate guard must route away
-        let got = sort_f64_via_iter(&keys, &cfg_with_budget(16_384 * 8));
+        // ~16Ki-key pipelined chunks (threads=2 => a third of the budget):
+        // well above min_learned_chunk, so the learned path is offered and
+        // Algorithm 5's duplicate guard must route away
+        let got = sort_f64_via_iter(&keys, &cfg_with_budget(3 * 16_384 * 8));
         let mut want = keys;
         want.sort_unstable_by(f64::total_cmp);
         assert_eq!(bits(&got), bits(&want), "{name}");
@@ -188,13 +191,17 @@ fn acceptance_u64_dataset_4x_budget_rmi_reused() {
 fn drift_fallback_engages_and_output_still_exact() {
     // First chunk U(0, 1e6), later chunks U(5e6, 6e6): the reused model
     // maps the shifted regime to CDF ≈ 1, the drift probe catches it, and
-    // those runs take the IPS4o path.
+    // those runs take the IPS4o path. threads=1 pins the serial chunk
+    // layout the scenario is built around.
     let mut rng = Xoshiro256pp::new(31);
     let chunk = (1usize << 20) / 8; // keys per 1 MiB chunk
     let mut keys: Vec<f64> = (0..chunk).map(|_| rng.uniform(0.0, 1e6)).collect();
     keys.extend((0..3 * chunk).map(|_| rng.uniform(5e6, 6e6)));
     let output = tmp("drift-out");
-    let cfg = cfg_with_budget(1 << 20);
+    let cfg = ExternalConfig {
+        threads: 1,
+        ..cfg_with_budget(1 << 20)
+    };
     let report = external::sort_iter(keys.iter().copied(), &output, &cfg).unwrap();
     assert!(report.rmi_trained);
     assert_eq!(report.learned_runs, 1, "only the first run fits the model");
@@ -203,6 +210,79 @@ fn drift_fallback_engages_and_output_still_exact() {
     want.sort_unstable_by(f64::total_cmp);
     assert_eq!(bits(&read_keys_file::<f64>(&output).unwrap()), bits(&want));
     let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn parallel_drift_shard_guard_still_sorts_exactly() {
+    // Same regime shift through the parallel pipeline: whatever mix of
+    // learned/fallback runs and sharded/serial final merge the guards
+    // pick, the output must stay bit-exact.
+    let mut rng = Xoshiro256pp::new(32);
+    let chunk = (1usize << 20) / 24; // keys per pipelined chunk (budget/3)
+    let mut keys: Vec<f64> = (0..chunk).map(|_| rng.uniform(0.0, 1e6)).collect();
+    keys.extend((0..5 * chunk).map(|_| rng.uniform(5e6, 6e6)));
+    let output = tmp("drift-par-out");
+    let cfg = ExternalConfig {
+        threads: 4,
+        min_shard_keys: 1024,
+        ..cfg_with_budget(1 << 20)
+    };
+    let report = external::sort_iter(keys.iter().copied(), &output, &cfg).unwrap();
+    assert!(report.rmi_trained);
+    assert!(report.fallback_runs >= 3, "drifted runs must fall back");
+    let mut want = keys;
+    want.sort_unstable_by(f64::total_cmp);
+    assert_eq!(bits(&read_keys_file::<f64>(&output).unwrap()), bits(&want));
+    let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn parallel_matches_serial_bytes_on_all_14_distributions() {
+    // The PR's acceptance bar: on every paper distribution, the parallel
+    // pipeline (overlapped IO + RMI-sharded merge, threads > 1) produces
+    // *byte-identical* output to the serial reference (threads = 1).
+    let n = 50_000;
+    for spec in datasets::ALL.iter() {
+        let input = tmp(&format!("dist-{}", spec.name));
+        let serial_out = tmp(&format!("dist-{}-serial", spec.name));
+        let parallel_out = tmp(&format!("dist-{}-parallel", spec.name));
+        datasets::write_dataset_file(spec.name, n, 99, &input, 1 << 14).unwrap();
+        let mut cfg = ExternalConfig {
+            memory_budget: 3 * 8192 * 8,
+            io_buffer: 1 << 12,
+            threads: 1,
+            min_shard_keys: 1024,
+            ..ExternalConfig::default()
+        };
+        let serial = match spec.key_type {
+            datasets::KeyType::F64 => {
+                external::sort_file::<f64>(&input, &serial_out, &cfg).unwrap()
+            }
+            datasets::KeyType::U64 => {
+                external::sort_file::<u64>(&input, &serial_out, &cfg).unwrap()
+            }
+        };
+        cfg.threads = 4;
+        let parallel = match spec.key_type {
+            datasets::KeyType::F64 => {
+                external::sort_file::<f64>(&input, &parallel_out, &cfg).unwrap()
+            }
+            datasets::KeyType::U64 => {
+                external::sort_file::<u64>(&input, &parallel_out, &cfg).unwrap()
+            }
+        };
+        assert_eq!(serial.keys, n as u64, "{}", spec.name);
+        assert_eq!(parallel.keys, n as u64, "{}", spec.name);
+        assert_eq!(
+            std::fs::read(&serial_out).unwrap(),
+            std::fs::read(&parallel_out).unwrap(),
+            "{}: parallel output differs from serial",
+            spec.name
+        );
+        let _ = std::fs::remove_file(&input);
+        let _ = std::fs::remove_file(&serial_out);
+        let _ = std::fs::remove_file(&parallel_out);
+    }
 }
 
 #[test]
