@@ -11,13 +11,19 @@
 //!    loser-tree merge); ≥ 2 = overlapped chunk IO plus the RMI-sharded
 //!    parallel merge. Same budget everywhere, so the delta isolates
 //!    pipeline parallelism.
+//! 3. **Regime-shift retrain sweep** — one stream concatenating equal
+//!    thirds of uniform → lognormal → zipf, sorted with the rolling
+//!    retrain policy on vs off; identical budget/threads/merge, so the
+//!    delta isolates retrain-on-drift (learned-run recovery after the
+//!    shifts, and mixture-weighted shard cuts in the final merge).
 //!
 //! Scale with AIPSO_N / AIPSO_EXT_BUDGET_MB / AIPSO_EXT_THREADS (e.g.
 //! `AIPSO_EXT_THREADS=1,2,4,8`; defaults are CI-sized: the dataset is ~4x
 //! the memory budget).
 
 use aipso::bench_harness::{
-    render_external_rows, run_external_figure, run_external_thread_sweep, BenchConfig,
+    render_external_rows, run_external_figure, run_external_regime_shift,
+    run_external_thread_sweep, BenchConfig,
 };
 
 fn main() {
@@ -71,6 +77,22 @@ fn main() {
         "\n(threads = 1 is the fully serial reference; parallel rows overlap\n\
          chunk IO with sorting and shard the final merge with the shared RMI —\n\
          'serial' in the final-merge column means the drift/size guard fell\n\
-         back to the single loser tree)"
+         back to the single loser tree)\n"
+    );
+
+    let regime = run_external_regime_shift(budget_mb << 20, &cfg);
+    print!(
+        "{}",
+        render_external_rows(
+            "External sort: regime shift (uniform → lognormal → zipf), retrain on/off",
+            &regime
+        )
+    );
+    println!(
+        "\n(the stream changes distribution twice mid-sort: with retraining\n\
+         off every post-shift chunk is demoted to IPS4o for the rest of the\n\
+         job; with it on, run generation retrains after the drift streak and\n\
+         recovers the learned path — zipf stays on the fallback by design,\n\
+         Algorithm 5's duplicate guard blocks its model)"
     );
 }

@@ -250,6 +250,8 @@ pub struct ExternalRow {
     pub runs: usize,
     /// Runs sorted through the reused RMI.
     pub learned_runs: usize,
+    /// Mid-stream model retrains (regime changes the policy recovered).
+    pub retrains: usize,
     /// K-way merge passes.
     pub merge_passes: usize,
     /// Worker threads (1 = the serial reference pipeline).
@@ -261,7 +263,8 @@ pub struct ExternalRow {
 /// Measure one external-sort configuration on a dataset file that is
 /// already on disk, verifying the output before reporting.
 fn external_cell(
-    spec: &'static datasets::DatasetSpec,
+    dataset: &'static str,
+    key_type: KeyType,
     input: &std::path::Path,
     output: &std::path::Path,
     strategy: String,
@@ -271,27 +274,28 @@ fn external_cell(
     use crate::external;
 
     let t0 = std::time::Instant::now();
-    let report = match spec.key_type {
+    let report = match key_type {
         KeyType::F64 => external::sort_file::<f64>(input, output, ext),
         KeyType::U64 => external::sort_file::<u64>(input, output, ext),
     }
     .expect("external sort");
     let secs = t0.elapsed().as_secs_f64();
-    let ok = match spec.key_type {
+    let ok = match key_type {
         KeyType::F64 => external::verify_sorted_file::<f64>(output, ext.effective_io_buffer()),
         KeyType::U64 => external::verify_sorted_file::<u64>(output, ext.effective_io_buffer()),
     }
     .expect("verify output");
-    assert!(ok, "external sort produced unsorted output on {}", spec.name);
-    assert_eq!(report.keys as usize, n, "key count drift on {}", spec.name);
+    assert!(ok, "external sort produced unsorted output on {dataset}");
+    assert_eq!(report.keys as usize, n, "key count drift on {dataset}");
     ExternalRow {
-        dataset: spec.paper_name,
+        dataset,
         strategy,
         n,
         secs,
         rate: n as f64 / secs.max(1e-12),
         runs: report.runs,
         learned_runs: report.learned_runs,
+        retrains: report.retrains,
         merge_passes: report.merge_passes,
         threads: crate::scheduler::effective_threads(ext.threads),
         merge_shards: report.merge_shards,
@@ -332,7 +336,8 @@ pub fn run_external_figure(
                 ..ExternalConfig::default()
             };
             rows.push(external_cell(
-                spec,
+                spec.paper_name,
+                spec.key_type,
                 &input,
                 &output,
                 strategy.to_string(),
@@ -386,11 +391,75 @@ pub fn run_external_thread_sweep(
             } else {
                 format!("parallel pipeline ({threads}t)")
             };
-            rows.push(external_cell(spec, &input, &output, strategy, &ext, cfg.n));
+            rows.push(external_cell(
+                spec.paper_name,
+                spec.key_type,
+                &input,
+                &output,
+                strategy,
+                &ext,
+                cfg.n,
+            ));
         }
         let _ = std::fs::remove_file(&input);
         let _ = std::fs::remove_file(&output);
     }
+    rows
+}
+
+/// Regime-shift scenario: one stream concatenating equal thirds of
+/// `uniform` → `lognormal` → `zipf` (a mid-stream regime change twice
+/// over), sorted by the learned pipeline with the rolling retrain policy
+/// enabled vs disabled. Everything else — budget, threads, merge — is
+/// identical, so the delta isolates [`crate::external::RetrainPolicy`]:
+/// with retraining off, every post-shift chunk falls back to IPS⁴o and
+/// the shard cuts stay pinned to the first regime; with it on, run
+/// generation re-learns each tractable regime (zipf stays on the fallback
+/// by design — Algorithm 5's duplicate guard blocks its model) and the
+/// merge cuts follow the keys-weighted epoch mixture.
+pub fn run_external_regime_shift(budget_bytes: usize, cfg: &BenchConfig) -> Vec<ExternalRow> {
+    use crate::external::{ExternalConfig, RetrainPolicy, RunWriter};
+
+    let dir = std::env::temp_dir();
+    let input = dir.join(format!("aipso-figregime-{}.bin", std::process::id()));
+    let output = dir.join(format!("aipso-figregime-{}.out.bin", std::process::id()));
+    let regimes = ["uniform", "lognormal", "zipf"];
+    let per = (cfg.n / regimes.len()).max(1);
+    let n = per * regimes.len();
+    {
+        let mut w = RunWriter::<f64>::create(input.clone(), 1 << 16).expect("create stream");
+        for name in regimes {
+            let mut gen = datasets::chunked_f64(name, per, cfg.seed).expect("regime generator");
+            while let Some(chunk) = gen.next_chunk(1 << 16) {
+                w.write_slice(&chunk).expect("write regime chunk");
+            }
+        }
+        w.finish().expect("finish stream");
+    }
+
+    let mut rows = Vec::new();
+    for (retrain, label) in [
+        (RetrainPolicy::default(), "retrain on (drift recovery)"),
+        (RetrainPolicy::disabled(), "retrain off (permanent fallback)"),
+    ] {
+        let ext = ExternalConfig {
+            memory_budget: budget_bytes,
+            threads: cfg.threads,
+            retrain,
+            ..ExternalConfig::default()
+        };
+        rows.push(external_cell(
+            "Uniform→LogNormal→Zipf",
+            KeyType::F64,
+            &input,
+            &output,
+            label.to_string(),
+            &ext,
+            n,
+        ));
+    }
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
     rows
 }
 
@@ -407,6 +476,7 @@ pub fn render_external_rows(title: &str, rows: &[ExternalRow]) -> String {
                 fmt::rate(r.rate),
                 fmt::secs(r.secs),
                 format!("{} ({} learned)", r.runs, r.learned_runs),
+                r.retrains.to_string(),
                 r.merge_passes.to_string(),
                 if r.merge_shards == 0 {
                     "serial".to_string()
@@ -424,6 +494,7 @@ pub fn render_external_rows(title: &str, rows: &[ExternalRow]) -> String {
             "rate",
             "time",
             "runs",
+            "retrains",
             "merge passes",
             "final merge",
         ],
@@ -546,6 +617,33 @@ mod tests {
         let report = render_external_rows("t", &rows);
         assert!(report.contains("Uniform"));
         assert!(report.contains("merge passes"));
+    }
+
+    #[test]
+    fn regime_shift_rows_isolate_the_retrain_policy() {
+        let cfg = BenchConfig {
+            n: 120_000,
+            ..tiny()
+        };
+        // threads=2 ⇒ 8Ki-key pipelined chunks: ~15 chunks across the
+        // three regimes, several of them after each shift
+        let rows = run_external_regime_shift(3 * 8192 * 8, &cfg);
+        assert_eq!(rows.len(), 2);
+        let on = &rows[0];
+        let off = &rows[1];
+        assert!(on.strategy.starts_with("retrain on"));
+        assert!(off.strategy.starts_with("retrain off"));
+        assert!(on.retrains >= 1, "the regime shifts must trigger a retrain");
+        assert_eq!(off.retrains, 0, "disabled policy must never retrain");
+        assert!(
+            on.learned_runs > off.learned_runs,
+            "retraining must recover learned runs ({} !> {})",
+            on.learned_runs,
+            off.learned_runs
+        );
+        let report = render_external_rows("regime shift", &rows);
+        assert!(report.contains("retrains"));
+        assert!(report.contains("Uniform→LogNormal→Zipf"));
     }
 
     #[test]

@@ -4,7 +4,7 @@ use std::path::PathBuf;
 
 use crate::coordinator::router::EngineChoice;
 use crate::datasets::KeyType;
-use crate::external::ExternalConfig;
+use crate::external::{ExternalConfig, ExternalSortReport};
 use crate::SortEngine;
 
 /// Owned key buffer, matching the paper's two key domains.
@@ -149,8 +149,12 @@ pub struct JobReport {
     pub verified_sorted: bool,
     /// Worker threads the job was admitted with.
     pub threads: usize,
-    /// True when the job ran through the out-of-core path.
-    pub external: bool,
+    /// The out-of-core pipeline's report when the job ran through the
+    /// external path (`None` = in-memory job). Surfaces the run counts,
+    /// mid-stream `retrains` and per-epoch learned/fallback chunk splits;
+    /// a failed external job carries a zeroed default report so callers
+    /// can still tell the paths apart.
+    pub external: Option<ExternalSortReport>,
 }
 
 #[cfg(test)]

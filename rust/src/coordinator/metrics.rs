@@ -96,7 +96,7 @@ mod tests {
             keys_per_sec: n as f64 / 0.5,
             verified_sorted: ok,
             threads: 4,
-            external: false,
+            external: None,
         }
     }
 

@@ -207,16 +207,15 @@ impl Drop for Coordinator {
 /// Execute one job: route, sort, verify, report.
 fn run_job(mut job: JobSpec, threads: usize) -> JobReport {
     let engine = route(&job);
-    let external = job.payload.is_external();
     let t0 = std::time::Instant::now();
-    let (n, sorted) = match &mut job.payload {
+    let (n, sorted, external) = match &mut job.payload {
         JobPayload::InMemory(KeyBuf::F64(v)) => {
             if threads > 1 && job.parallel {
                 sort_parallel(engine, v, threads);
             } else {
                 sort_sequential(engine, v);
             }
-            (v.len(), is_sorted(v))
+            (v.len(), is_sorted(v), None)
         }
         JobPayload::InMemory(KeyBuf::U64(v)) => {
             if threads > 1 && job.parallel {
@@ -224,11 +223,12 @@ fn run_job(mut job: JobSpec, threads: usize) -> JobReport {
             } else {
                 sort_sequential(engine, v);
             }
-            (v.len(), is_sorted(v))
+            (v.len(), is_sorted(v), None)
         }
         JobPayload::External(ext) => {
             let ext_threads = if job.parallel { threads } else { 1 };
-            run_external_job(job.id, ext, ext_threads)
+            let (n, ok, report) = run_external_job(job.id, ext, ext_threads);
+            (n, ok, Some(report))
         }
     };
     let secs = t0.elapsed().as_secs_f64();
@@ -244,8 +244,14 @@ fn run_job(mut job: JobSpec, threads: usize) -> JobReport {
     }
 }
 
-/// Run one out-of-core job and stream-verify its output file.
-fn run_external_job(id: u64, ext: &ExternalJob, threads: usize) -> (usize, bool) {
+/// Run one out-of-core job and stream-verify its output file. The
+/// pipeline's report rides along (zeroed default on failure) so the
+/// coordinator can surface run counts, retrains and per-epoch splits.
+fn run_external_job(
+    id: u64,
+    ext: &ExternalJob,
+    threads: usize,
+) -> (usize, bool, external::ExternalSortReport) {
     let mut cfg = ext.config.clone();
     if cfg.threads == 0 {
         cfg.threads = threads;
@@ -255,13 +261,13 @@ fn run_external_job(id: u64, ext: &ExternalJob, threads: usize) -> (usize, bool)
         KeyType::F64 => external::sort_file::<f64>(&ext.input, &ext.output, &cfg).and_then(
             |rep| {
                 external::verify_sorted_file::<f64>(&ext.output, io_buffer)
-                    .map(|ok| (rep.keys as usize, ok))
+                    .map(|ok| (rep.keys as usize, ok, rep))
             },
         ),
         KeyType::U64 => external::sort_file::<u64>(&ext.input, &ext.output, &cfg).and_then(
             |rep| {
                 external::verify_sorted_file::<u64>(&ext.output, io_buffer)
-                    .map(|ok| (rep.keys as usize, ok))
+                    .map(|ok| (rep.keys as usize, ok, rep))
             },
         ),
     };
@@ -269,7 +275,7 @@ fn run_external_job(id: u64, ext: &ExternalJob, threads: usize) -> (usize, bool)
         Ok(res) => res,
         Err(e) => {
             eprintln!("external job {id} failed: {e}");
-            (0, false)
+            (0, false, external::ExternalSortReport::default())
         }
     }
 }
@@ -351,8 +357,11 @@ mod tests {
         assert_eq!(reports.len(), 3);
         assert!(reports.iter().all(|r| r.verified_sorted));
         let ext = reports.iter().find(|r| r.id == 1).unwrap();
-        assert!(ext.external);
+        let ext_report = ext.external.as_ref().expect("external report surfaced");
         assert_eq!(ext.n, keys.len());
+        assert!(ext_report.runs >= 4, "runs={}", ext_report.runs);
+        assert_eq!(ext_report.keys as usize, keys.len());
+        assert!(!ext_report.epochs.is_empty(), "epoch counters surfaced");
         assert_eq!(metrics.total_failures(), 0);
 
         let mut want = keys;
@@ -401,7 +410,7 @@ mod tests {
         assert_eq!(reports.len(), 4);
         assert!(reports.iter().all(|r| r.verified_sorted));
         assert_eq!(metrics.total_failures(), 0);
-        assert_eq!(reports.iter().filter(|r| r.external).count(), 2);
+        assert_eq!(reports.iter().filter(|r| r.external.is_some()).count(), 2);
         for (input, output, keys) in files {
             let mut want = keys;
             want.sort_unstable();

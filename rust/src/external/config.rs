@@ -20,6 +20,54 @@ pub enum RunGen {
     Ips4o,
 }
 
+/// Rolling retrain policy for the shared model.
+///
+/// The external sorter trains one RMI on the first chunk and reuses it; a
+/// per-chunk drift probe guards the reuse. Without retraining, a regime
+/// change mid-stream permanently demotes every later chunk to the IPS⁴o
+/// fallback. With retraining enabled, once the probe fails for
+/// `retrain_after` *consecutive* chunks, run generation resamples the
+/// offending chunk, trains a fresh monotonic RMI on it and installs it as
+/// the shared model for subsequent chunks — opening a new model *epoch*
+/// (see [`crate::external::EpochStats`]). Successful installs are bounded
+/// by `max_retrains` per sort; an attempt that trips Algorithm 5's
+/// duplicate guard keeps the old model, does not count, and resets the
+/// streak so attempts stay one per `retrain_after` chunks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetrainPolicy {
+    /// Consecutive drifted chunks before a retrain attempt (0 disables
+    /// retraining: every drifted chunk falls back to IPS⁴o forever).
+    pub retrain_after: usize,
+    /// Maximum successful retrains per sort (0 disables retraining).
+    pub max_retrains: usize,
+}
+
+impl RetrainPolicy {
+    /// The pre-retrain behaviour: drifted chunks always fall back.
+    pub fn disabled() -> RetrainPolicy {
+        RetrainPolicy {
+            retrain_after: 0,
+            max_retrains: 0,
+        }
+    }
+
+    /// True when the policy can ever trigger a retrain.
+    pub fn enabled(&self) -> bool {
+        self.retrain_after > 0 && self.max_retrains > 0
+    }
+}
+
+impl Default for RetrainPolicy {
+    fn default() -> Self {
+        // Two consecutive failed probes before retraining: one drifted
+        // chunk can be an outlier burst, two in a row is a regime.
+        RetrainPolicy {
+            retrain_after: 2,
+            max_retrains: 4,
+        }
+    }
+}
+
 /// Configuration for [`crate::external::sort_file`] / `sort_iter`.
 #[derive(Debug, Clone)]
 pub struct ExternalConfig {
@@ -56,6 +104,11 @@ pub struct ExternalConfig {
     /// Mean |F(x) − empirical CDF(x)| over the probe above which the chunk
     /// is declared drifted and falls back to IPS⁴o.
     pub drift_threshold: f64,
+    /// Rolling retrain policy: how many consecutive drifted chunks trigger
+    /// training a replacement model, and how many replacements one sort
+    /// may install ([`RetrainPolicy::disabled`] pins the pre-retrain
+    /// behaviour where drift always demotes the chunk).
+    pub retrain: RetrainPolicy,
     /// Worker threads (0 = all cores). `1` selects the fully serial
     /// reference pipeline; `> 1` enables overlapped chunk IO during run
     /// generation and the RMI-sharded parallel merge.
@@ -91,6 +144,7 @@ impl Default for ExternalConfig {
             min_learned_chunk: 8192,
             drift_probe: 2048,
             drift_threshold: 0.05,
+            retrain: RetrainPolicy::default(),
             threads: 0,
             merge_shards: 0,
             shard_skew_limit: 4.0,
@@ -163,6 +217,16 @@ mod tests {
         assert_eq!(cfg.effective_io_buffer(), 4096);
         cfg.memory_budget = 1 << 30;
         assert_eq!(cfg.effective_io_buffer(), cfg.io_buffer);
+    }
+
+    #[test]
+    fn retrain_policy_enablement() {
+        assert!(RetrainPolicy::default().enabled());
+        assert!(!RetrainPolicy::disabled().enabled());
+        // either knob at zero disables the policy
+        assert!(!RetrainPolicy { retrain_after: 0, max_retrains: 4 }.enabled());
+        assert!(!RetrainPolicy { retrain_after: 2, max_retrains: 0 }.enabled());
+        assert!(RetrainPolicy { retrain_after: 1, max_retrains: 1 }.enabled());
     }
 
     #[test]

@@ -196,6 +196,33 @@ mod tests {
     }
 
     #[test]
+    fn fanin_extremes_k1_and_k_max() {
+        // k = 1: the degenerate tournament (tree = [0], no internal
+        // nodes) must stream its single run through unchanged.
+        let mut rng = Xoshiro256pp::new(0xFA71);
+        let mut solo: Vec<u64> = (0..500).map(|_| rng.next_below(10_000)).collect();
+        solo.sort_unstable();
+        assert_eq!(merge_vecs(vec![solo.clone()]), solo);
+
+        // k far beyond any budget-clamped fan-in (ExternalConfig clamps
+        // to budget/io_buffer; 509 is prime, so the implicit non-power-
+        // of-two layout gets no accidental alignment help). Sources
+        // include empty runs interleaved throughout.
+        let k = 509;
+        let mut all = Vec::new();
+        let mut runs = Vec::new();
+        for i in 0..k {
+            let len = if i % 7 == 0 { 0 } else { rng.next_below(40) as usize };
+            let mut run: Vec<u64> = (0..len).map(|_| rng.next_below(100_000)).collect();
+            run.sort_unstable();
+            all.extend_from_slice(&run);
+            runs.push(run);
+        }
+        all.sort_unstable();
+        assert_eq!(merge_vecs(runs), all, "k={k}");
+    }
+
+    #[test]
     fn f64_total_order_merge() {
         let runs = vec![vec![-1.5f64, -0.0, 2.0], vec![-2.0, 0.0, 1.0]];
         let sources: Vec<VecStream<f64>> = runs.into_iter().map(VecStream::new).collect();

@@ -8,17 +8,23 @@
 //!    *first* chunk and **reused** to partition every subsequent chunk
 //!    (PCF-style model reuse). A per-chunk drift probe
 //!    ([`crate::rmi::quality::model_drift`]) demotes chunks whose
-//!    distribution no longer matches the model to the IPS⁴o path. Each
-//!    sorted chunk spills as one run ([`spill`]). With `threads > 1` the
-//!    read / sort / spill stages run as an overlapped pipeline: a reader
-//!    thread prefetches chunk `N+1` and a writer thread spills chunk `N−1`
-//!    while the pool sorts chunk `N`.
+//!    distribution no longer matches the model to the IPS⁴o path — and
+//!    once the probe fails for [`RetrainPolicy::retrain_after`]
+//!    consecutive chunks (a regime change), a **fresh RMI is retrained**
+//!    from the offending chunk and installed for the rest of the stream
+//!    (bounded by `max_retrains`), each install opening a new model
+//!    *epoch* ([`EpochStats`]). Each sorted chunk spills as one run
+//!    ([`spill`]). With `threads > 1` the read / sort / spill stages run
+//!    as an overlapped pipeline: a reader thread prefetches chunk `N+1`
+//!    and a writer thread spills chunk `N−1` while the pool sorts chunk
+//!    `N`.
 //! 2. **Merge**: intermediate k-way passes ([`loser_tree`], fan-in clamped
 //!    to the budget) run their independent merge groups concurrently on
-//!    the scheduler pool; the final pass inverts the shared RMI into `p`
-//!    quantile cuts and merges `p` range-disjoint shards in parallel
-//!    ([`shard`]), falling back to the serial loser tree when no model was
-//!    trained or the cuts come out skewed (drift guard).
+//!    the scheduler pool; the final pass inverts the keys-weighted mixture
+//!    of the epoch models into `p` quantile cuts and merges `p`
+//!    range-disjoint shards in parallel ([`shard`]), falling back to the
+//!    serial loser tree when no model was trained or the cuts come out
+//!    skewed (drift guard).
 //!
 //! Entry points: [`sort_file`] (binary key files, the `aipso gen --out` /
 //! `aipso extsort` format) and [`sort_iter`] (any in-process key stream).
@@ -51,9 +57,9 @@ pub mod run_writer;
 pub mod shard;
 pub mod spill;
 
-pub use config::{ExternalConfig, RunGen};
+pub use config::{ExternalConfig, RetrainPolicy, RunGen};
 pub use loser_tree::{KeyStream, LoserTree, VecStream};
-pub use run_writer::RunGenStats;
+pub use run_writer::{EpochStats, RunGenStats};
 pub use shard::ShardPlan;
 pub use spill::{
     file_key_count, read_keys_file, verify_sorted_file, write_keys_file, ExtKey, RunFile,
@@ -67,7 +73,7 @@ use std::sync::Mutex;
 use crate::scheduler::run_task_pool;
 
 /// Outcome of one external sort.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct ExternalSortReport {
     /// Total keys sorted.
     pub keys: u64,
@@ -77,8 +83,15 @@ pub struct ExternalSortReport {
     pub learned_runs: usize,
     /// Runs sorted via the IPS⁴o fallback.
     pub fallback_runs: usize,
-    /// Whether the shared RMI was trained (at most once per sort).
+    /// Whether the initial shared RMI was trained on the first chunk.
     pub rmi_trained: bool,
+    /// Mid-stream retrains that installed a replacement model under
+    /// [`RetrainPolicy`] (0 = the initial model served the whole stream,
+    /// or retraining is disabled).
+    pub retrains: usize,
+    /// Learned/fallback chunk counts per model epoch — epoch 0 is the
+    /// initial model, each retrain opens the next entry.
+    pub epochs: Vec<EpochStats>,
     /// K-way merge passes performed (0 when the input fit in one run).
     pub merge_passes: usize,
     /// Shards of the RMI-partitioned final merge (0 = the final pass ran
@@ -157,7 +170,31 @@ where
     };
     let mut spill = SpillDir::create(cfg.tmp_dir.as_deref())?;
     let gen = run_writer::generate_runs(next_chunk, &mut spill, cfg)?;
-    let (mut runs, stats, shared_rmi) = (gen.runs, gen.stats, gen.rmi);
+    let (mut runs, stats, models) = (gen.runs, gen.stats, gen.models);
+
+    // Cut weight per epoch model = keys of the runs generated under it
+    // (the run↔epoch map), resolved *before* intermediate merge passes
+    // collapse runs across epochs. The sharded final merge inverts this
+    // keys-weighted mixture — the stream's estimated global CDF — so its
+    // quantile cuts stay balanced across retrain-on-drift regime changes.
+    // Approximation: an epoch's weight includes its *fallback* chunks'
+    // keys, which its model demonstrably drifted from (at most
+    // `retrain_after − 1` chunks per install, plus a duplicate-heavy tail
+    // the guard refused to model). That only biases balance, never
+    // output, and the skew guard below still backstops the cuts.
+    debug_assert_eq!(gen.run_epochs.len(), runs.len());
+    let mut epoch_keys = vec![0u64; models.len()];
+    for (run, &epoch) in runs.iter().zip(&gen.run_epochs) {
+        if let Some(w) = epoch_keys.get_mut(epoch) {
+            *w += run.n;
+        }
+    }
+    let cut_models: Vec<(&crate::rmi::model::Rmi, f64)> = models
+        .iter()
+        .zip(&epoch_keys)
+        .filter(|(_, &w)| w > 0)
+        .map(|(m, &w)| (m, w as f64))
+        .collect();
 
     let mut report = ExternalSortReport {
         keys: stats.keys,
@@ -165,6 +202,8 @@ where
         learned_runs: stats.learned_chunks,
         fallback_runs: stats.fallback_chunks,
         rmi_trained: stats.rmi_trained,
+        retrains: stats.retrains,
+        epochs: stats.epochs.clone(),
         merge_passes: 0,
         merge_shards: 0,
     };
@@ -195,10 +234,10 @@ where
     } else {
         let shards = final_shards(cfg, threads, report.keys);
         let mut sharded = false;
-        if let Some(rmi) = shared_rmi.as_ref().filter(|_| shards >= 2) {
+        if !cut_models.is_empty() && shards >= 2 {
             // planning only reads the runs; the output stays untouched
             // (and thus unguarded) until a merge actually starts below
-            let plan = shard::plan_shards::<K>(rmi, &runs, shards)?;
+            let plan = shard::plan_shards::<K>(&cut_models, &runs, shards)?;
             debug_assert_eq!(plan.total_keys(), report.keys);
             if plan.skew() <= cfg.shard_skew_limit {
                 guard.armed = true;
@@ -397,6 +436,54 @@ mod tests {
         let report = sort_iter(keys.iter().copied(), &out, &cfg).unwrap();
         assert_eq!(report.merge_shards, 0, "p=1 is the serial loser tree");
         assert!(verify_sorted_file::<f64>(&out, 1 << 16).unwrap());
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn merge_fanout_extremes_clamp_and_sort() {
+        // merge_fanout = 1 clamps to the floor of 2 (a 1-way merge would
+        // never reduce the run count); usize::MAX clamps to what the
+        // budget's reader buffers allow (k = max). Both must sort exactly.
+        let mut rng = Xoshiro256pp::new(15);
+        let n = 24_000;
+        let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let mut want = keys.clone();
+        want.sort_unstable();
+        for fanout in [1usize, usize::MAX] {
+            let out = tmp(&format!("fanout-{}.bin", fanout.min(9999)));
+            let cfg = ExternalConfig {
+                memory_budget: 1024 * 8,
+                io_buffer: 4096, // budget/io_buffer = 2 readers at most
+                merge_fanout: fanout,
+                threads: 1,
+                ..ExternalConfig::default()
+            };
+            assert_eq!(cfg.effective_fanout(), 2, "fanout={fanout}");
+            let report = sort_iter(keys.iter().copied(), &out, &cfg).unwrap();
+            assert!(report.runs > 16, "runs={}", report.runs);
+            assert!(report.merge_passes >= 4, "passes={}", report.merge_passes);
+            assert_eq!(read_keys_file::<u64>(&out).unwrap(), want);
+            let _ = std::fs::remove_file(&out);
+        }
+        // a roomier budget lets the huge configured fan-in clamp to the
+        // budget's k-max (64 reader buffers) and merge all 10 runs in a
+        // single final pass
+        let keys: Vec<u64> = (0..320_000).map(|_| rng.next_u64()).collect();
+        let mut want = keys.clone();
+        want.sort_unstable();
+        let out = tmp("fanout-kmax.bin");
+        let cfg = ExternalConfig {
+            memory_budget: 32_768 * 8,
+            io_buffer: 4096,
+            merge_fanout: usize::MAX,
+            threads: 1,
+            ..ExternalConfig::default()
+        };
+        assert_eq!(cfg.effective_fanout(), 64, "k-max = budget / io_buffer");
+        let report = sort_iter(keys.iter().copied(), &out, &cfg).unwrap();
+        assert_eq!(report.runs, 10);
+        assert_eq!(report.merge_passes, 1, "all runs fit one k-max pass");
+        assert_eq!(read_keys_file::<u64>(&out).unwrap(), want);
         let _ = std::fs::remove_file(&out);
     }
 

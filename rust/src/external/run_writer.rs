@@ -10,11 +10,18 @@
 //!    guard) skip the model entirely, else train the shared RMI;
 //! 2. every chunk: score the shared model with [`quality::model_drift`]
 //!    against a fresh probe — if the stream's distribution drifted, fall
-//!    back to IPS⁴o ([`crate::sample_sort`]) for that chunk;
+//!    back to IPS⁴o ([`crate::sample_sort`]) for that chunk; once the
+//!    probe fails for [`RetrainPolicy::retrain_after`] consecutive chunks
+//!    (a regime change, not an outlier burst), resample the offending
+//!    chunk, train a **fresh** RMI on it and install it as the shared
+//!    model for subsequent chunks — each successful install opens a new
+//!    model *epoch* (bounded by `max_retrains`);
 //! 3. learned path: partition the chunk in place with the shared
 //!    [`RmiClassifier`] (the same block framework every engine uses), then
 //!    sort each bucket with sequential AIPS²o tasks on the pool;
-//! 4. write the sorted chunk as one spilled run.
+//! 4. write the sorted chunk as one spilled run, tagged with the epoch of
+//!    the model that was current when it was generated (the merge weights
+//!    its quantile cuts by keys-per-epoch; see [`crate::external::shard`]).
 //!
 //! With `threads > 1` the three per-chunk stages run as an **overlapped
 //! pipeline** on rendezvous channels: a reader thread fills chunk `N+1`
@@ -29,7 +36,7 @@ use std::sync::mpsc;
 
 use crate::classifier::rmi_classifier::RmiClassifier;
 use crate::classifier::Classifier;
-use crate::external::config::{ExternalConfig, RunGen};
+use crate::external::config::{ExternalConfig, RetrainPolicy, RunGen};
 use crate::external::spill::{ExtKey, RunFile, RunWriter, SpillDir};
 use crate::rmi::model::{Rmi, RmiConfig};
 use crate::rmi::quality;
@@ -37,8 +44,24 @@ use crate::sample_sort::partition::partition;
 use crate::scheduler::run_task_pool;
 use crate::util::rng::Xoshiro256pp;
 
+/// Per-epoch chunk counters. Epoch 0 spans the initial shared model (or
+/// the whole model-free stream when the first chunk trains nothing); each
+/// successful retrain under [`RetrainPolicy`] opens the next epoch. The
+/// split shows *where* the learned path ran: after a regime change with
+/// retraining enabled, the post-retrain epochs should be learned-dominated
+/// while the tail of the previous epoch absorbed the drift fallbacks.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EpochStats {
+    /// Chunks of this epoch sorted via the shared RMI partition.
+    pub learned: usize,
+    /// Chunks of this epoch sorted via the IPS⁴o fallback.
+    pub fallback: usize,
+    /// Keys across this epoch's chunks (the merge's cut weight).
+    pub keys: u64,
+}
+
 /// Counters describing one run-generation pass.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct RunGenStats {
     /// Chunks read (== runs written).
     pub chunks: usize,
@@ -46,8 +69,14 @@ pub struct RunGenStats {
     pub learned_chunks: usize,
     /// Chunks sorted via the IPS⁴o fallback.
     pub fallback_chunks: usize,
-    /// Whether the shared RMI was trained (at most once per sort).
+    /// Whether the initial shared RMI was trained on the first chunk.
     pub rmi_trained: bool,
+    /// Mid-stream retrains that installed a replacement model (each one
+    /// opened a new entry in `epochs`).
+    pub retrains: usize,
+    /// Learned/fallback chunk counts per model epoch (always at least one
+    /// entry once a chunk was processed).
+    pub epochs: Vec<EpochStats>,
     /// Total keys across all runs.
     pub keys: u64,
 }
@@ -58,9 +87,15 @@ pub(crate) struct GeneratedRuns {
     pub runs: Vec<RunFile>,
     /// Pass counters for the report.
     pub stats: RunGenStats,
-    /// The shared first-chunk model, when one was trained — the sharded
-    /// merge inverts it to cut the key range into quantile shards.
-    pub rmi: Option<Rmi>,
+    /// The shared models in install order — `models[e]` served epoch `e`
+    /// (empty when no model was ever trained). The sharded merge inverts
+    /// their keys-weighted mixture to cut the key range into quantiles.
+    pub models: Vec<Rmi>,
+    /// Run ↔ model map: `run_epochs[i]` is the epoch `runs[i]` was
+    /// generated under (parallel to `runs`). The merge derives each
+    /// epoch's cut weight from the runs it produced, so runs spilled
+    /// before a retrain still contribute the model that described them.
+    pub run_epochs: Vec<usize>,
 }
 
 /// Pull chunks from `next_chunk`, sort each, and spill them as sorted
@@ -198,12 +233,18 @@ where
 }
 
 /// Per-chunk sorting state shared by the serial and pipelined paths: the
-/// shared model, the drift/duplicate routing, and the pass counters.
+/// shared model, the drift/duplicate/retrain routing, and the counters.
 struct ChunkSorter<'a> {
     cfg: &'a ExternalConfig,
     threads: usize,
     rng: Xoshiro256pp,
     shared: Option<RmiClassifier>,
+    /// Installed models in epoch order (initial + retrains).
+    models: Vec<Rmi>,
+    /// Epoch of each generated run, in generation order.
+    run_epochs: Vec<usize>,
+    /// Consecutive chunks whose drift probe failed — the retrain trigger.
+    drift_streak: usize,
     first_chunk: bool,
     stats: RunGenStats,
 }
@@ -215,13 +256,17 @@ impl<'a> ChunkSorter<'a> {
             threads,
             rng: Xoshiro256pp::new(0xE87_5041 ^ chunk_keys as u64),
             shared: None,
+            models: Vec::new(),
+            run_epochs: Vec::new(),
+            drift_streak: 0,
             first_chunk: true,
             stats: RunGenStats::default(),
         }
     }
 
-    /// Sort one chunk in place, training the shared RMI on the first one
-    /// and routing drifted / duplicate-heavy chunks to the IPS⁴o path.
+    /// Sort one chunk in place: train the shared RMI on the first chunk,
+    /// route drifted / duplicate-heavy chunks to the IPS⁴o path, and
+    /// retrain the shared model when the drift streak clears the policy.
     fn sort_chunk<K: ExtKey>(&mut self, chunk: &mut [K]) {
         self.stats.chunks += 1;
         self.stats.keys += chunk.len() as u64;
@@ -229,31 +274,84 @@ impl<'a> ChunkSorter<'a> {
         if self.cfg.run_gen == RunGen::LearnedReuse && self.first_chunk {
             self.shared = train_shared_rmi(chunk, self.cfg, &mut self.rng);
             self.stats.rmi_trained = self.shared.is_some();
+            if let Some(classifier) = &self.shared {
+                self.models.push(classifier.rmi().clone());
+            }
         }
         self.first_chunk = false;
 
-        let learned = match (&self.shared, self.cfg.run_gen) {
-            (Some(classifier), RunGen::LearnedReuse) => {
-                chunk.len() >= self.cfg.min_learned_chunk
-                    && !drifted(chunk, classifier.rmi(), self.cfg, &mut self.rng)
-            }
-            _ => false,
-        };
+        let learned = self.route_chunk(chunk);
         if learned {
             learned_sort_chunk(chunk, self.shared.as_ref().unwrap(), self.cfg, self.threads);
-            self.stats.learned_chunks += 1;
         } else {
             crate::sample_sort::sort_par(chunk, self.threads);
+        }
+
+        let epoch = self.models.len().saturating_sub(1);
+        self.run_epochs.push(epoch);
+        if self.stats.epochs.len() <= epoch {
+            self.stats.epochs.resize(epoch + 1, EpochStats::default());
+        }
+        let e = &mut self.stats.epochs[epoch];
+        e.keys += chunk.len() as u64;
+        if learned {
+            e.learned += 1;
+            self.stats.learned_chunks += 1;
+        } else {
+            e.fallback += 1;
             self.stats.fallback_chunks += 1;
         }
         debug_assert!(crate::is_sorted(chunk));
     }
 
+    /// Decide the chunk's path — true selects the learned partition. This
+    /// is where the rolling retrain lives: a drifted chunk extends the
+    /// streak, and once the streak reaches `retrain_after` (with installs
+    /// left under `max_retrains`) the chunk itself becomes the training
+    /// set for a replacement model, recovering the learned path instead of
+    /// demoting the rest of the stream to IPS⁴o.
+    fn route_chunk<K: ExtKey>(&mut self, chunk: &[K]) -> bool {
+        let Some(classifier) = &self.shared else {
+            return false; // no model: duplicate-heavy/short first chunk
+        };
+        if chunk.len() < self.cfg.min_learned_chunk {
+            return false; // size guard — says nothing about drift
+        }
+        if !drifted(chunk, classifier.rmi(), self.cfg, &mut self.rng) {
+            self.drift_streak = 0;
+            return true;
+        }
+        self.drift_streak += 1;
+        let policy: RetrainPolicy = self.cfg.retrain;
+        if !policy.enabled()
+            || self.drift_streak < policy.retrain_after
+            || self.stats.retrains >= policy.max_retrains
+        {
+            return false;
+        }
+        // Reset the streak whether or not training succeeds: a failed
+        // attempt (Algorithm 5's duplicate guard) keeps the old model and
+        // must re-earn `retrain_after` drifted chunks before the next try,
+        // so duplicate-heavy regimes can't retrain-and-fail every chunk.
+        self.drift_streak = 0;
+        match train_shared_rmi(chunk, self.cfg, &mut self.rng) {
+            Some(fresh) => {
+                self.models.push(fresh.rmi().clone());
+                self.shared = Some(fresh);
+                self.stats.retrains += 1;
+                true // the replacement was fit on this very chunk
+            }
+            None => false,
+        }
+    }
+
     fn finish(self, runs: Vec<RunFile>) -> GeneratedRuns {
+        debug_assert_eq!(runs.len(), self.run_epochs.len());
         GeneratedRuns {
             runs,
             stats: self.stats,
-            rmi: self.shared.map(|c| c.rmi().clone()),
+            models: self.models,
+            run_epochs: self.run_epochs,
         }
     }
 }
@@ -307,9 +405,22 @@ fn drifted<K: ExtKey>(
     if m == 0 {
         return false;
     }
-    let mut probe: Vec<f64> = (0..m)
-        .map(|_| chunk[rng.next_below(chunk.len() as u64) as usize].to_f64())
-        .collect();
+    let mut probe: Vec<f64> = if chunk.len() <= 4 * m {
+        // Near or below the probe size, with-replacement draws would
+        // repeat and omit elements and bias the verdict; the reservoir
+        // (without replacement) scores small chunks on their (near-)exact
+        // empirical CDF, and costs only O(m) here.
+        let mut picked: Vec<K> = Vec::new();
+        rng.reservoir_sample(chunk, m, &mut picked);
+        picked.iter().map(|k| k.to_f64()).collect()
+    } else {
+        // Large chunks: O(m) index draws keep the per-chunk probe off the
+        // hot path's O(chunk) — the with-replacement collision bias is
+        // ~m/(2·chunk) and vanishes exactly where this branch runs.
+        (0..m)
+            .map(|_| chunk[rng.next_below(chunk.len() as u64) as usize].to_f64())
+            .collect()
+    };
     probe.sort_unstable_by(f64::total_cmp);
     quality::model_drift(rmi, &probe) > cfg.drift_threshold
 }
@@ -424,7 +535,7 @@ mod tests {
     }
 
     #[test]
-    fn drifted_chunks_fall_back() {
+    fn drifted_chunks_fall_back_when_retrain_disabled() {
         let mut rng = Xoshiro256pp::new(4);
         // chunk 1: U(0, 1e6); chunks 2-3: U(5e6, 6e6) — model predicts ~1
         // (threads=1 pins the serial chunk layout this scenario assumes)
@@ -433,15 +544,122 @@ mod tests {
         let cfg = ExternalConfig {
             memory_budget: 16_384 * 8,
             threads: 1,
+            retrain: RetrainPolicy::disabled(),
             ..ExternalConfig::default()
         };
         let (runs, stats, _spill) = gen_from_vec(keys, &cfg);
         assert!(stats.rmi_trained);
         assert_eq!(stats.learned_chunks, 1);
         assert_eq!(stats.fallback_chunks, 2);
+        assert_eq!(stats.retrains, 0);
+        assert_eq!(stats.epochs.len(), 1, "disabled policy never opens epochs");
         for r in &runs {
             assert!(is_sorted(&read_keys_file::<f64>(&r.path).unwrap()));
         }
+    }
+
+    #[test]
+    fn retrain_recovers_learned_path_after_regime_change() {
+        let mut rng = Xoshiro256pp::new(4);
+        // chunk 1: U(0, 1e6); chunks 2-4: U(5e6, 6e6). With
+        // retrain_after=1 the first shifted chunk triggers a retrain, so
+        // the whole shifted regime stays on the learned path.
+        let mut keys: Vec<f64> = (0..16_384).map(|_| rng.uniform(0.0, 1e6)).collect();
+        keys.extend((0..3 * 16_384).map(|_| rng.uniform(5e6, 6e6)));
+        let cfg = ExternalConfig {
+            memory_budget: 16_384 * 8,
+            threads: 1,
+            retrain: RetrainPolicy { retrain_after: 1, max_retrains: 2 },
+            ..ExternalConfig::default()
+        };
+        let mut it = keys.into_iter();
+        let src = move |max: usize| -> io::Result<Option<Vec<f64>>> {
+            let chunk: Vec<f64> = it.by_ref().take(max).collect();
+            Ok(if chunk.is_empty() { None } else { Some(chunk) })
+        };
+        let mut spill = SpillDir::create(None).unwrap();
+        let gen = generate_runs(src, &mut spill, &cfg).unwrap();
+        assert!(gen.stats.rmi_trained);
+        assert_eq!(gen.stats.retrains, 1, "one regime change, one retrain");
+        assert_eq!(gen.stats.learned_chunks, 4, "retrain keeps every chunk learned");
+        assert_eq!(gen.stats.fallback_chunks, 0);
+        assert_eq!(gen.models.len(), 2, "initial model + one replacement");
+        assert_eq!(gen.run_epochs, vec![0, 1, 1, 1], "run↔epoch map");
+        assert_eq!(gen.stats.epochs.len(), 2);
+        assert_eq!(gen.stats.epochs[0], EpochStats { learned: 1, fallback: 0, keys: 16_384 });
+        assert_eq!(
+            gen.stats.epochs[1],
+            EpochStats { learned: 3, fallback: 0, keys: 3 * 16_384 }
+        );
+        for r in &gen.runs {
+            assert!(is_sorted(&read_keys_file::<f64>(&r.path).unwrap()));
+        }
+    }
+
+    #[test]
+    fn retrain_streak_and_budget_are_honoured() {
+        let mut rng = Xoshiro256pp::new(40);
+        // Three regimes of 2 chunks each; retrain_after=2 retrains on the
+        // *second* drifted chunk of a regime, and max_retrains=1 leaves
+        // the last regime demoted even though its streak qualifies.
+        let mut keys: Vec<f64> = (0..2 * 8192).map(|_| rng.uniform(0.0, 1e6)).collect();
+        keys.extend((0..2 * 8192).map(|_| rng.uniform(5e6, 6e6)));
+        keys.extend((0..2 * 8192).map(|_| rng.uniform(9e6, 10e6)));
+        let cfg = ExternalConfig {
+            memory_budget: 8192 * 8,
+            threads: 1,
+            retrain: RetrainPolicy { retrain_after: 2, max_retrains: 1 },
+            ..ExternalConfig::default()
+        };
+        let (_runs, stats, _spill) = gen_from_vec(keys, &cfg);
+        assert_eq!(stats.retrains, 1);
+        // regime 1: 2 learned; regime 2: 1 fallback (streak=1) + retrain
+        // on the 2nd chunk; regime 3: 1 fallback building the streak, then
+        // the budget is spent → fallback.
+        assert_eq!(stats.epochs.len(), 2);
+        assert_eq!(stats.epochs[0], EpochStats { learned: 2, fallback: 1, keys: 3 * 8192 });
+        assert_eq!(stats.epochs[1], EpochStats { learned: 1, fallback: 2, keys: 3 * 8192 });
+    }
+
+    #[test]
+    fn retrain_attempt_on_duplicate_heavy_regime_keeps_old_model() {
+        let mut rng = Xoshiro256pp::new(41);
+        // smooth first regime, then a constant-valued (100% duplicate)
+        // regime: the retrain attempt trips Algorithm 5's guard, installs
+        // nothing, and does not burn the retrain budget.
+        let mut keys: Vec<f64> = (0..16_384).map(|_| rng.uniform(0.0, 1e6)).collect();
+        keys.resize(keys.len() + 2 * 16_384, 7e6);
+        let cfg = ExternalConfig {
+            memory_budget: 16_384 * 8,
+            threads: 1,
+            retrain: RetrainPolicy { retrain_after: 1, max_retrains: 2 },
+            ..ExternalConfig::default()
+        };
+        let (_runs, stats, _spill) = gen_from_vec(keys, &cfg);
+        assert!(stats.rmi_trained);
+        assert_eq!(stats.retrains, 0, "duplicate guard must block the install");
+        assert_eq!(stats.learned_chunks, 1);
+        assert_eq!(stats.fallback_chunks, 2);
+        assert_eq!(stats.epochs.len(), 1, "no install → no new epoch");
+    }
+
+    #[test]
+    fn drift_probe_is_unbiased_on_chunks_below_probe_size() {
+        let mut rng = Xoshiro256pp::new(0xD21F);
+        let mut sample: Vec<f64> = (0..8192).map(|_| rng.uniform(0.0, 1e6)).collect();
+        sample.sort_unstable_by(f64::total_cmp);
+        let rmi = Rmi::train(&sample, RmiConfig { n_leaves: 256 });
+        let cfg = ExternalConfig::default(); // drift_probe = 2048
+        // chunks *smaller* than the probe: the reservoir covers the whole
+        // chunk, so the verdict is exact — a shifted regime must read as
+        // drifted and an in-distribution one must not.
+        let shifted: Vec<f64> = (0..512).map(|_| rng.uniform(5e6, 6e6)).collect();
+        assert!(shifted.len() < cfg.drift_probe);
+        assert!(drifted(&shifted, &rmi, &cfg, &mut rng));
+        let in_dist: Vec<f64> = (0..512).map(|_| rng.uniform(0.0, 1e6)).collect();
+        assert!(!drifted(&in_dist, &rmi, &cfg, &mut rng));
+        // the empty chunk keeps reporting "no drift" (nothing to score)
+        assert!(!drifted(&[] as &[f64], &rmi, &cfg, &mut rng));
     }
 
     #[test]
@@ -498,7 +716,9 @@ mod tests {
         };
         let gen = generate_runs(src, &mut spill, &cfg).unwrap();
         assert!(gen.stats.rmi_trained);
-        assert!(gen.rmi.is_some(), "trained model must reach the merge");
+        assert_eq!(gen.models.len(), 1, "trained model must reach the merge");
+        assert!(gen.run_epochs.iter().all(|&e| e == 0), "single epoch");
+        assert_eq!(gen.run_epochs.len(), gen.runs.len());
         assert_eq!(gen.stats.keys, 60_000);
     }
 }

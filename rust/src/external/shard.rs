@@ -2,23 +2,33 @@
 //! parallelization story.
 //!
 //! The serial loser tree consumes runs one key at a time on one thread.
-//! But the run-generation phase already trained a *global* CDF model (the
-//! shared first-chunk RMI), and a monotone CDF can be inverted: cut `[0,1)`
-//! into `p` equal-probability slices, map each cut back to a boundary key
-//! ([`crate::rmi::quality::quantile_key`]), and binary-search every sorted
-//! run for the boundary offsets ([`RunIndex::lower_bound`]). The result is
-//! `p` *range-disjoint* merge problems — shard `s` of every run holds
-//! exactly the keys in `[bound_{s-1}, bound_s)` — which merge independently
-//! on the scheduler pool and land in disjoint byte ranges of the output
-//! file, concatenating into the fully sorted result with no extra pass.
+//! But the run-generation phase already trained CDF models of the stream —
+//! the shared first-chunk RMI plus one replacement per retrain-on-drift
+//! epoch — and a monotone CDF can be inverted: cut `[0,1)` into `p`
+//! equal-probability slices, map each cut back to a boundary key, and
+//! binary-search every sorted run for the boundary offsets
+//! ([`RunIndex::lower_bound`]). The result is `p` *range-disjoint* merge
+//! problems — shard `s` of every run holds exactly the keys in
+//! `[bound_{s-1}, bound_s)` — which merge independently on the scheduler
+//! pool and land in disjoint byte ranges of the output file, concatenating
+//! into the fully sorted result with no extra pass.
 //!
-//! Correctness never depends on the model: any nondecreasing boundary set
+//! After a regime change no single epoch's model describes the whole
+//! stream, so the cuts come from the **keys-weighted mixture** of all
+//! epoch models ([`crate::rmi::quality::quantile_key_weighted`]): the
+//! run↔epoch map from run generation weights each model by the keys its
+//! epoch produced, making the mixture the stream's estimated global CDF.
+//! The boundary offsets are still binary-searched *per run against the
+//! file's actual keys*, which is why runs spilled before a retrain index
+//! exactly under cuts derived from models installed after them.
+//!
+//! Correctness never depends on the models: any nondecreasing boundary set
 //! yields an exact sort (the cuts are enforced nondecreasing, and
 //! lower-bound semantics keep duplicate keys on one side of every cut).
 //! Model *quality* only shows up as shard balance, so the driver applies a
 //! drift guard: when [`ShardPlan::skew`] exceeds
 //! `ExternalConfig::shard_skew_limit`, the data no longer matches the
-//! first-chunk model and the merge falls back to the serial loser tree.
+//! epoch models and the merge falls back to the serial loser tree.
 
 use std::fs::OpenOptions;
 use std::io::{self, BufWriter, Seek, SeekFrom, Write};
@@ -82,16 +92,24 @@ impl ShardPlan {
     }
 }
 
-/// Build a `p`-shard plan for `runs` by inverting the shared RMI at the
-/// quantiles `1/p .. (p-1)/p` and binary-searching every run for the
-/// resulting boundary keys. Costs `O(p log n)` predicts plus
-/// `O(runs · p · log n)` positioned reads — negligible next to the merge.
-pub fn plan_shards<K: ExtKey>(rmi: &Rmi, runs: &[RunFile], p: usize) -> io::Result<ShardPlan> {
+/// Build a `p`-shard plan for `runs` by inverting the keys-weighted
+/// mixture of the epoch `models` (pairs of model and cut weight — the
+/// keys generated under that model's epoch) at the quantiles
+/// `1/p .. (p-1)/p` and binary-searching every run for the resulting
+/// boundary keys. A single `(model, 1.0)` entry reproduces the
+/// pre-retrain single-model cuts. Costs `O(p · models · log n)` predicts
+/// plus `O(runs · p · log n)` positioned reads — negligible next to the
+/// merge.
+pub fn plan_shards<K: ExtKey>(
+    models: &[(&Rmi, f64)],
+    runs: &[RunFile],
+    p: usize,
+) -> io::Result<ShardPlan> {
     let p = p.max(1);
     let mut bounds = Vec::with_capacity(p.saturating_sub(1));
     for i in 1..p {
         let q = i as f64 / p as f64;
-        let key: K = quality::quantile_key(rmi, q);
+        let key: K = quality::quantile_key_weighted(models, q);
         bounds.push(key.to_bits_ordered());
     }
     // The monotone model makes these nondecreasing already; enforce it so
@@ -255,7 +273,7 @@ mod tests {
             all.extend_from_slice(&keys);
             runs.push(spill_sorted(&format!("flat-{i}"), keys));
         }
-        let plan = plan_shards::<f64>(&rmi, &runs, 4).unwrap();
+        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], &runs, 4).unwrap();
         assert_eq!(plan.shards(), 4);
         assert_eq!(plan.total_keys(), all.len() as u64);
         // in-distribution data: the model's cuts are close to balanced
@@ -283,7 +301,7 @@ mod tests {
             spill_sorted("dup-0", vec![5e5; 3000]),
             spill_sorted("dup-1", vec![5e5; 2000]),
         ];
-        let plan = plan_shards::<f64>(&rmi, &runs, 4).unwrap();
+        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], &runs, 4).unwrap();
         let non_empty: Vec<&u64> = plan.shard_keys().iter().filter(|&&k| k > 0).collect();
         assert_eq!(non_empty, vec![&5000u64], "all duplicates in one shard");
         assert!(plan.skew() > 3.9, "skew={}", plan.skew());
@@ -308,7 +326,7 @@ mod tests {
         let mut all = a.clone();
         all.extend_from_slice(&b);
         let runs = vec![spill_sorted("empty-a", a), spill_sorted("empty-b", b)];
-        let plan = plan_shards::<f64>(&rmi, &runs, 4).unwrap();
+        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], &runs, 4).unwrap();
         // the two middle quantile shards see (almost) nothing
         assert_eq!(plan.total_keys(), 5000);
 
@@ -319,6 +337,78 @@ mod tests {
         let got = read_keys_file::<f64>(&out).unwrap();
         let gb: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
         let wb: Vec<u64> = all.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, wb);
+        cleanup(&runs, &out);
+    }
+
+    #[test]
+    fn epoch_mixture_cuts_rebalance_a_regime_change() {
+        // Two regimes on disjoint ranges — runs A in U(0, 1e5), runs B in
+        // U(9e5, 1e6) — modeled by one RMI each (what retrain-on-drift
+        // produces). Cuts from the first epoch's model alone collapse the
+        // whole second regime into the top shard; the keys-weighted
+        // mixture restores balance without touching correctness.
+        let mut rng = Xoshiro256pp::new(0x417E);
+        let train = |lo: f64, hi: f64, rng: &mut Xoshiro256pp| {
+            let mut s: Vec<f64> = (0..8192).map(|_| rng.uniform(lo, hi)).collect();
+            s.sort_unstable_by(f64::total_cmp);
+            Rmi::train(&s, crate::rmi::model::RmiConfig { n_leaves: 128 })
+        };
+        let model_a = train(0.0, 1e5, &mut rng);
+        let model_b = train(9e5, 1e6, &mut rng);
+        let a: Vec<f64> = (0..4000).map(|_| rng.uniform(0.0, 1e5)).collect();
+        let b: Vec<f64> = (0..4000).map(|_| rng.uniform(9e5, 1e6)).collect();
+        let mut all = a.clone();
+        all.extend_from_slice(&b);
+        let runs = vec![spill_sorted("mix-a", a), spill_sorted("mix-b", b)];
+
+        let stale = plan_shards::<f64>(&[(&model_a, 1.0)], &runs, 4).unwrap();
+        assert!(
+            stale.skew() > 1.9,
+            "first-epoch cuts must leave the shifted regime lopsided (skew={})",
+            stale.skew()
+        );
+        let mixed =
+            plan_shards::<f64>(&[(&model_a, 4000.0), (&model_b, 4000.0)], &runs, 4).unwrap();
+        assert!(
+            mixed.skew() < 1.5,
+            "mixture cuts must rebalance the shards (skew={})",
+            mixed.skew()
+        );
+
+        let out = tmp("mix-out.bin");
+        let n = merge_sharded::<f64>(&runs, &mixed, &out, &ExternalConfig::default(), 4).unwrap();
+        assert_eq!(n, 8000);
+        all.sort_unstable_by(f64::total_cmp);
+        let got = read_keys_file::<f64>(&out).unwrap();
+        let gb: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+        let wb: Vec<u64> = all.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, wb);
+        cleanup(&runs, &out);
+    }
+
+    #[test]
+    fn empty_runs_in_the_plan_merge_exactly() {
+        // Zero-key runs can reach the planner (degenerate chunk layouts);
+        // their offsets must be all-zero and the merge must skip them.
+        let mut rng = Xoshiro256pp::new(0xE317);
+        let rmi = uniform_rmi(&mut rng);
+        let keys: Vec<f64> = (0..3000).map(|_| rng.uniform(0.0, 1e6)).collect();
+        let runs = vec![
+            spill_sorted("er-0", Vec::new()),
+            spill_sorted("er-1", keys.clone()),
+            spill_sorted("er-2", Vec::new()),
+        ];
+        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], &runs, 4).unwrap();
+        assert_eq!(plan.total_keys(), 3000);
+        let out = tmp("er-out.bin");
+        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 2).unwrap();
+        assert_eq!(n, 3000);
+        let mut want = keys;
+        want.sort_unstable_by(f64::total_cmp);
+        let got = read_keys_file::<f64>(&out).unwrap();
+        let gb: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+        let wb: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
         assert_eq!(gb, wb);
         cleanup(&runs, &out);
     }
@@ -336,7 +426,7 @@ mod tests {
             all.extend_from_slice(&keys);
             runs.push(spill_sorted(&format!("p1-{i}"), keys));
         }
-        let plan = plan_shards::<f64>(&rmi, &runs, 1).unwrap();
+        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], &runs, 1).unwrap();
         assert_eq!(plan.shards(), 1);
         assert!((plan.skew() - 1.0).abs() < 1e-12);
 
@@ -380,7 +470,7 @@ mod tests {
         let mut keys = vec![cut; 100];
         keys.extend((0..400).map(|_| rng.uniform(0.0, 1e6)));
         let runs = vec![spill_sorted("cut-0", keys.clone())];
-        let plan = plan_shards::<f64>(&rmi, &runs, 2).unwrap();
+        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], &runs, 2).unwrap();
         let out = tmp("cut-out.bin");
         let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 2).unwrap();
         assert_eq!(n, 500);

@@ -482,6 +482,24 @@ mod tests {
     }
 
     #[test]
+    fn empty_run_index_is_harmless() {
+        // A zero-key run (legal: an empty input still truncates an output
+        // file, and sharding may probe any run) must index without error:
+        // every lower bound is 0, never an out-of-range read.
+        let p = tmp("empty-idx.bin");
+        write_keys_file::<u64>(&p, &[]).unwrap();
+        let mut idx = RunIndex::<u64>::open(&p).unwrap();
+        assert_eq!(idx.len(), 0);
+        assert!(idx.is_empty());
+        assert_eq!(idx.lower_bound(0).unwrap(), 0);
+        assert_eq!(idx.lower_bound(u64::MAX).unwrap(), 0);
+        // range reads over the empty file clamp to nothing
+        let mut r = RunReader::<u64>::open_range(&p, 0, 10, 4096).unwrap();
+        assert!(r.read_chunk(10).unwrap().is_empty());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
     fn odd_length_file_rejected() {
         let p = tmp("odd.bin");
         std::fs::write(&p, [0u8; 7]).unwrap();

@@ -17,7 +17,7 @@ use std::collections::BTreeMap;
 use aipso::bench_harness::{self, BenchConfig};
 use aipso::coordinator::{Coordinator, JobSpec, KeyBuf};
 use aipso::datasets::{self, FigureGroup, KeyType};
-use aipso::external::{self, ExternalConfig, RunGen};
+use aipso::external::{self, ExternalConfig, RetrainPolicy, RunGen};
 use aipso::rmi::model::{Rmi, RmiConfig};
 use aipso::runtime::RmiRuntime;
 use aipso::util::rng::Xoshiro256pp;
@@ -62,8 +62,11 @@ COMMANDS
   sort            --dataset NAME --engine ENGINE [--n N] [--threads T] [--seq]
   extsort         --input FILE --output FILE --key f64|u64 [--budget-mb MB]
                   [--fanout K] [--threads T] [--shards P] [--ips4o-runs]
+                  [--retrain N|off] [--max-retrains M]
                   (or --dataset NAME --n N to synthesize --input first;
-                   --threads 1 = serial reference pipeline)
+                   --threads 1 = serial reference pipeline; --retrain N
+                   retrains the model after N consecutive drifted chunks,
+                   'off' pins the permanent-fallback behaviour)
   bench           [--figure f1|f2|f3|f4|f5|f6|all] [--n N] [--reps R] [--threads T]
   pivot-quality   [--n N]
   phases          --dataset NAME --engine ENGINE [--n N] [--threads T]
@@ -260,6 +263,25 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
     if opts.contains_key("ips4o-runs") {
         cfg.run_gen = RunGen::Ips4o;
     }
+    // --retrain off|N (bare --retrain keeps the default-enabled policy);
+    // --max-retrains M bounds the installs per sort.
+    if let Some(v) = opts.get("retrain") {
+        cfg.retrain = match v.as_str() {
+            "off" | "false" | "0" => RetrainPolicy::disabled(),
+            "on" | "true" => RetrainPolicy::default(),
+            n => match n.parse::<usize>() {
+                Ok(after) => RetrainPolicy {
+                    retrain_after: after,
+                    ..RetrainPolicy::default()
+                },
+                Err(_) => {
+                    eprintln!("extsort: --retrain expects a chunk count, 'on' or 'off'");
+                    return 2;
+                }
+            },
+        };
+    }
+    cfg.retrain.max_retrains = opt_usize(opts, "max-retrains", cfg.retrain.max_retrains);
 
     // Optionally synthesize the input file from a named dataset first.
     let key_type = if let Some(dataset) = opts.get("dataset") {
@@ -310,8 +332,8 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
     .unwrap_or(false);
     println!(
         "extsort {} -> {}: {} keys in {} — {} [{}]\n  budget {} MiB, {} runs \
-         ({} learned, {} fallback), rmi trained: {}, merge passes: {}, \
-         final-merge shards: {}",
+         ({} learned, {} fallback), rmi trained: {}, retrains: {}, \
+         merge passes: {}, final-merge shards: {}",
         input,
         output,
         fmt::keys(report.keys as usize),
@@ -323,6 +345,7 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
         report.learned_runs,
         report.fallback_runs,
         report.rmi_trained,
+        report.retrains,
         report.merge_passes,
         if report.merge_shards == 0 {
             "serial".to_string()
@@ -330,6 +353,15 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
             report.merge_shards.to_string()
         },
     );
+    if report.retrains > 0 {
+        let epochs: Vec<String> = report
+            .epochs
+            .iter()
+            .enumerate()
+            .map(|(e, s)| format!("e{e}: {} learned / {} fallback", s.learned, s.fallback))
+            .collect();
+        println!("  epochs: {}", epochs.join(", "));
+    }
     if ok {
         0
     } else {

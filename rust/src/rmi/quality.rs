@@ -112,11 +112,45 @@ pub fn model_drift(rmi: &Rmi, probe_sorted: &[f64]) -> f64 {
 /// only needs *consistent* cuts, a model that has drifted merely skews the
 /// shard sizes (which the caller guards against), never the output.
 pub fn quantile_key<K: SortKey>(rmi: &Rmi, q: f64) -> K {
+    quantile_key_weighted(&[(rmi, 1.0)], q)
+}
+
+/// Invert a weighted *mixture* of monotone models: the smallest key of
+/// domain `K` whose weighted-mean predicted CDF reaches `q` (weights need
+/// not be normalized; non-positive weights are ignored). With one model
+/// this is exactly [`quantile_key`].
+///
+/// The external sorter's retrain-on-drift policy produces one model per
+/// regime *epoch*; no single epoch model describes the whole stream after
+/// a regime change, but the keys-per-epoch weighted mixture is precisely
+/// the stream's estimated global CDF — each `F_e` models its regime and
+/// the weights are the regimes' relative volumes. Cutting shards at the
+/// mixture's quantiles therefore keeps the parallel merge balanced where
+/// cuts from any one epoch's model would collapse the other regimes into
+/// a single shard and trip the skew guard. Like `quantile_key`, the
+/// mixture is nondecreasing (a convex combination of monotone CDFs), so
+/// the same ordered-bits binary search applies.
+pub fn quantile_key_weighted<K: SortKey>(models: &[(&Rmi, f64)], q: f64) -> K {
+    let total: f64 = models.iter().map(|(_, w)| w.max(0.0)).sum();
+    let predict = |x: f64| -> f64 {
+        if total > 0.0 {
+            models
+                .iter()
+                .map(|(m, w)| w.max(0.0) * m.predict(x))
+                .sum::<f64>()
+                / total
+        } else {
+            // degenerate weights: fall back to an unweighted mean so the
+            // search still terminates on a valid key
+            let n = models.len().max(1) as f64;
+            models.iter().map(|(m, _)| m.predict(x)).sum::<f64>() / n
+        }
+    };
     let (mut lo, mut hi) = (0u64, u64::MAX);
     while lo < hi {
         let mid = lo + (hi - lo) / 2;
         let x = K::from_bits_ordered(mid).to_f64();
-        if rmi.predict(x) >= q {
+        if predict(x) >= q {
             hi = mid;
         } else {
             lo = mid + 1;
@@ -236,6 +270,36 @@ mod tests {
         // u64 domain: degenerate extremes stay in range
         let lo: u64 = quantile_key(&rmi, 0.0);
         let _ = lo; // q=0 resolves to the domain minimum, still a valid key
+    }
+
+    #[test]
+    fn weighted_quantiles_invert_the_mixture() {
+        let mut rng = Xoshiro256pp::new(0x3140);
+        let train = |lo: f64, hi: f64, rng: &mut Xoshiro256pp| {
+            let mut s: Vec<f64> = (0..8192).map(|_| rng.uniform(lo, hi)).collect();
+            s.sort_unstable_by(f64::total_cmp);
+            Rmi::train(&s, RmiConfig { n_leaves: 128 })
+        };
+        let low = train(0.0, 1e5, &mut rng); // regime A
+        let high = train(9e5, 1e6, &mut rng); // regime B
+        // equal weights: the mixture's median separates the regimes and
+        // the quartiles land at each regime's internal median
+        let q25: f64 = quantile_key_weighted(&[(&low, 1.0), (&high, 1.0)], 0.25);
+        let q50: f64 = quantile_key_weighted(&[(&low, 1.0), (&high, 1.0)], 0.5);
+        let q75: f64 = quantile_key_weighted(&[(&low, 1.0), (&high, 1.0)], 0.75);
+        assert!((q25 - 5e4).abs() < 1e4, "q25={q25}");
+        assert!((9e4..=9.2e5).contains(&q50), "q50={q50}");
+        assert!((q75 - 9.5e5).abs() < 1e4, "q75={q75}");
+        // 3:1 weights shift the median into the heavier regime
+        let m: f64 = quantile_key_weighted(&[(&low, 3.0), (&high, 1.0)], 0.5);
+        assert!(m < 1e5, "median {m} must fall inside the 3x regime");
+        // single-model mixture == quantile_key (same search, same key)
+        let a: f64 = quantile_key_weighted(&[(&low, 7.0)], 0.3);
+        let b: f64 = quantile_key(&low, 0.3);
+        assert_eq!(a.to_bits(), b.to_bits());
+        // non-positive weights are ignored, not poisoning the sum
+        let c: f64 = quantile_key_weighted(&[(&low, 1.0), (&high, -5.0)], 0.5);
+        assert!((c - 5e4).abs() < 1e4, "c={c}");
     }
 
     #[test]

@@ -110,7 +110,9 @@ fn external_job_end_to_end() {
     let (reports, metrics) = coordinator.drain();
     assert_eq!(reports.len(), 1);
     assert!(reports[0].verified_sorted);
-    assert!(reports[0].external);
+    let ext = reports[0].external.as_ref().expect("external report surfaced");
+    assert_eq!(ext.keys as usize, n);
+    assert_eq!(ext.retrains, 0, "iid stream never retrains");
     assert_eq!(reports[0].n, n);
     assert_eq!(metrics.total_failures(), 0);
 

@@ -2,16 +2,21 @@
 //! agreement with `sort_unstable` on the reloaded output across random
 //! chunk-size/budget combinations, duplicate-heavy inputs, edge cases,
 //! the acceptance scenario (data ≥ 4x the memory budget with the RMI
-//! trained once and reused for every run), and serial/parallel pipeline
-//! equivalence on all 14 paper distributions.
+//! trained once and reused for every run), serial/parallel pipeline
+//! equivalence on all 14 paper distributions, and the regime-shift
+//! scenarios pinning the retrain-on-drift policy (enabled: the learned
+//! path recovers after a shift and the sharded merge keeps its cuts;
+//! disabled: the pre-retrain permanent-fallback behaviour).
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use aipso::datasets;
-use aipso::external::{self, read_keys_file, write_keys_file, ExternalConfig, RunGen};
+use aipso::external::{
+    self, read_keys_file, write_keys_file, ExternalConfig, RetrainPolicy, RunGen,
+};
 use aipso::util::proptest::{check_sized, PropConfig};
-use aipso::util::rng::Xoshiro256pp;
+use aipso::util::rng::{Xoshiro256pp, Zipf};
 
 fn tmp(tag: &str) -> PathBuf {
     static SEQ: AtomicU64 = AtomicU64::new(0);
@@ -192,7 +197,8 @@ fn drift_fallback_engages_and_output_still_exact() {
     // First chunk U(0, 1e6), later chunks U(5e6, 6e6): the reused model
     // maps the shifted regime to CDF ≈ 1, the drift probe catches it, and
     // those runs take the IPS4o path. threads=1 pins the serial chunk
-    // layout the scenario is built around.
+    // layout the scenario is built around; RetrainPolicy::disabled() pins
+    // the pre-retrain permanent-fallback behaviour as a regression.
     let mut rng = Xoshiro256pp::new(31);
     let chunk = (1usize << 20) / 8; // keys per 1 MiB chunk
     let mut keys: Vec<f64> = (0..chunk).map(|_| rng.uniform(0.0, 1e6)).collect();
@@ -200,12 +206,14 @@ fn drift_fallback_engages_and_output_still_exact() {
     let output = tmp("drift-out");
     let cfg = ExternalConfig {
         threads: 1,
+        retrain: RetrainPolicy::disabled(),
         ..cfg_with_budget(1 << 20)
     };
     let report = external::sort_iter(keys.iter().copied(), &output, &cfg).unwrap();
     assert!(report.rmi_trained);
     assert_eq!(report.learned_runs, 1, "only the first run fits the model");
     assert!(report.fallback_runs >= 3, "drifted runs must fall back");
+    assert_eq!(report.retrains, 0, "disabled policy must never retrain");
     let mut want = keys;
     want.sort_unstable_by(f64::total_cmp);
     assert_eq!(bits(&read_keys_file::<f64>(&output).unwrap()), bits(&want));
@@ -216,7 +224,7 @@ fn drift_fallback_engages_and_output_still_exact() {
 fn parallel_drift_shard_guard_still_sorts_exactly() {
     // Same regime shift through the parallel pipeline: whatever mix of
     // learned/fallback runs and sharded/serial final merge the guards
-    // pick, the output must stay bit-exact.
+    // pick, the output must stay bit-exact (retrain disabled regression).
     let mut rng = Xoshiro256pp::new(32);
     let chunk = (1usize << 20) / 24; // keys per pipelined chunk (budget/3)
     let mut keys: Vec<f64> = (0..chunk).map(|_| rng.uniform(0.0, 1e6)).collect();
@@ -225,15 +233,189 @@ fn parallel_drift_shard_guard_still_sorts_exactly() {
     let cfg = ExternalConfig {
         threads: 4,
         min_shard_keys: 1024,
+        retrain: RetrainPolicy::disabled(),
         ..cfg_with_budget(1 << 20)
     };
     let report = external::sort_iter(keys.iter().copied(), &output, &cfg).unwrap();
     assert!(report.rmi_trained);
     assert!(report.fallback_runs >= 3, "drifted runs must fall back");
+    assert_eq!(report.retrains, 0);
     let mut want = keys;
     want.sort_unstable_by(f64::total_cmp);
     assert_eq!(bits(&read_keys_file::<f64>(&output).unwrap()), bits(&want));
     let _ = std::fs::remove_file(&output);
+}
+
+/// The regime-shift acceptance stream: 4 pipelined chunks of uniform, 6
+/// of scaled lognormal, 2 of zipf — 12 chunks at 4x the memory budget,
+/// with both shifts landing exactly on chunk boundaries (threads=2 ⇒
+/// pipelined chunks of `budget / 3 / 8` keys).
+fn regime_shift_stream(chunk: usize) -> Vec<f64> {
+    let mut rng = Xoshiro256pp::new(0x2E61);
+    let mut keys: Vec<f64> = Vec::with_capacity(12 * chunk);
+    for _ in 0..4 * chunk {
+        keys.push(rng.uniform(0.0, 1e6));
+    }
+    for _ in 0..6 * chunk {
+        keys.push(1e5 * rng.lognormal(0.0, 0.5));
+    }
+    let zipf = Zipf::new(1_000_000, 0.75);
+    for _ in 0..2 * chunk {
+        keys.push(zipf.sample(&mut rng) as f64);
+    }
+    keys
+}
+
+#[test]
+fn regime_shift_retrain_recovers_learned_path_and_sharded_merge() {
+    // The PR's acceptance scenario: a concatenated uniform → lognormal →
+    // zipf stream at 4x the budget, retrain enabled. The lognormal shift
+    // must trigger a retrain that keeps its whole regime on the learned
+    // path, the zipf tail may stay on the fallback (duplicate guard), and
+    // the final merge must still shard — the epoch-mixture cuts describe
+    // the shifted stream, so the skew guard has no reason to fire.
+    let chunk = 16_384usize;
+    let keys = regime_shift_stream(chunk);
+    let output = tmp("regime-on-out");
+    let cfg = ExternalConfig {
+        memory_budget: 3 * chunk * 8, // threads=2 ⇒ 16Ki-key chunks
+        threads: 2,
+        min_shard_keys: 1024,
+        retrain: RetrainPolicy {
+            retrain_after: 1,
+            max_retrains: 3,
+        },
+        ..ExternalConfig::default()
+    };
+    let report = external::sort_iter(keys.iter().copied(), &output, &cfg).unwrap();
+    assert_eq!(report.keys as usize, keys.len());
+    assert_eq!(report.runs, 12, "12 aligned chunks expected");
+    assert!(report.rmi_trained);
+    assert!(
+        (1..=3).contains(&report.retrains),
+        "each regime change may retrain at most once (retrains={})",
+        report.retrains
+    );
+    // post-retrain epochs must be learned-dominated: the whole lognormal
+    // regime (6 chunks) re-learns, only the zipf tail (≤ 2 chunks) may
+    // stay demoted
+    assert_eq!(report.epochs.len(), report.retrains + 1);
+    let (post_learned, post_fallback) = report.epochs[1..]
+        .iter()
+        .fold((0, 0), |(l, f), e| (l + e.learned, f + e.fallback));
+    assert!(
+        post_learned >= 6,
+        "the lognormal regime must recover the learned path (post-retrain learned={post_learned})"
+    );
+    assert!(
+        post_learned > post_fallback,
+        "post-retrain chunks must be learned-dominated ({post_learned} !> {post_fallback})"
+    );
+    assert_eq!(report.epochs[0].learned, 4, "uniform regime all learned");
+    assert!(report.learned_runs >= 10, "learned_runs={}", report.learned_runs);
+    // the sharded merge engages on the mixture cuts — no skew fallback
+    assert!(
+        report.merge_shards >= 2,
+        "epoch-mixture cuts must keep the final merge sharded (merge_shards={})",
+        report.merge_shards
+    );
+    // and the output is byte-equal to std's total-order sort
+    let mut want = keys;
+    want.sort_unstable_by(f64::total_cmp);
+    assert_eq!(bits(&read_keys_file::<f64>(&output).unwrap()), bits(&want));
+    let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn regime_shift_disabled_policy_pins_permanent_fallback() {
+    // Same stream, retrain disabled: today's behaviour — everything after
+    // the first shift is demoted for the rest of the job — must stay
+    // exactly reproducible (and still byte-exact).
+    let chunk = 16_384usize;
+    let keys = regime_shift_stream(chunk);
+    let output = tmp("regime-off-out");
+    let cfg = ExternalConfig {
+        memory_budget: 3 * chunk * 8,
+        threads: 2,
+        min_shard_keys: 1024,
+        retrain: RetrainPolicy::disabled(),
+        ..ExternalConfig::default()
+    };
+    let report = external::sort_iter(keys.iter().copied(), &output, &cfg).unwrap();
+    assert_eq!(report.runs, 12);
+    assert!(report.rmi_trained);
+    assert_eq!(report.retrains, 0);
+    assert_eq!(report.epochs.len(), 1, "one epoch without retraining");
+    assert_eq!(report.learned_runs, 4, "only the uniform regime is learned");
+    assert_eq!(report.fallback_runs, 8, "both shifted regimes stay demoted");
+    let mut want = keys;
+    want.sort_unstable_by(f64::total_cmp);
+    assert_eq!(bits(&read_keys_file::<f64>(&output).unwrap()), bits(&want));
+    let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn property_random_retrain_configs_stay_byte_exact() {
+    // ~50 random (budget, threads, shards, drift threshold, retrain
+    // policy) configurations over random multi-regime streams: whatever
+    // the knobs select — learned or fallback runs, retrains or not,
+    // sharded or serial merges — the output must match std sort
+    // bit-for-bit. On failure the harness panics with the
+    // AIPSO_PROP_SEED=... line and the bisection-shrunk size.
+    check_sized(
+        "extsort-retrain-mixes",
+        PropConfig::with_max_size(50, 1 << 13),
+        |rng, n| {
+            // 1-3 regimes drawn from four distribution families
+            let regimes = 1 + rng.next_below(3) as usize;
+            let mut keys: Vec<f64> = Vec::with_capacity(n);
+            for r in 0..regimes {
+                let len = if r + 1 == regimes {
+                    n - keys.len()
+                } else {
+                    n / regimes
+                };
+                match rng.next_below(4) {
+                    0 => keys.extend((0..len).map(|_| rng.uniform(0.0, 1e6))),
+                    1 => keys.extend((0..len).map(|_| 1e4 * rng.lognormal(0.0, 0.5))),
+                    2 => keys.extend((0..len).map(|_| rng.uniform(5e6, 6e6))),
+                    _ => keys.extend((0..len).map(|_| rng.next_below(100) as f64)),
+                }
+            }
+            let cfg = ExternalConfig {
+                memory_budget: 512usize << rng.next_below(6),
+                io_buffer: 1 << 12,
+                threads: 1 + rng.next_below(4) as usize,
+                merge_shards: rng.next_below(5) as usize,
+                min_shard_keys: 512,
+                // chunks at these budgets hold 64–2048 keys: lower the
+                // learned-path floor so models actually train and the
+                // retrain knobs are exercised, not just carried along
+                min_learned_chunk: 512,
+                drift_threshold: [0.01, 0.05, 0.2][rng.next_below(3) as usize],
+                retrain: RetrainPolicy {
+                    retrain_after: rng.next_below(3) as usize,
+                    max_retrains: rng.next_below(4) as usize,
+                },
+                ..ExternalConfig::default()
+            };
+            let got = sort_f64_via_iter(&keys, &cfg);
+            let mut want = keys;
+            want.sort_unstable_by(f64::total_cmp);
+            if bits(&got) != bits(&want) {
+                return Err(format!(
+                    "bit mismatch at n={n} regimes={regimes} budget={} threads={} \
+                     shards={} drift={} retrain={:?}",
+                    cfg.memory_budget,
+                    cfg.threads,
+                    cfg.merge_shards,
+                    cfg.drift_threshold,
+                    cfg.retrain
+                ));
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
