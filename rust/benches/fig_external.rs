@@ -1,6 +1,6 @@
 //! External-sort figure (beyond the paper): out-of-core sorting throughput.
 //!
-//! Two sections (methodology: see `BENCHMARKS.md` at the repository root):
+//! Four sections (methodology: see `BENCHMARKS.md` at the repository root):
 //!
 //! 1. **Run-generation strategies** — learned run generation (one monotonic
 //!    RMI trained on the first chunk and reused for every run, PCF-style)
@@ -16,6 +16,10 @@
 //!    retrain policy on vs off; identical budget/threads/merge, so the
 //!    delta isolates retrain-on-drift (learned-run recovery after the
 //!    shifts, and mixture-weighted shard cuts in the final merge).
+//! 4. **Key-width sweep** — each dataset at its native 8-byte width vs
+//!    narrowed to 4 bytes (`gen --width 4`); same key count and budget,
+//!    so the delta isolates the spill width (half the bytes per key
+//!    through disk, twice the keys per chunk).
 //!
 //! Scale with AIPSO_N / AIPSO_EXT_BUDGET_MB / AIPSO_EXT_THREADS (e.g.
 //! `AIPSO_EXT_THREADS=1,2,4,8`; defaults are CI-sized: the dataset is ~4x
@@ -23,7 +27,7 @@
 
 use aipso::bench_harness::{
     render_external_rows, run_external_figure, run_external_regime_shift,
-    run_external_thread_sweep, BenchConfig,
+    run_external_thread_sweep, run_external_width_sweep, BenchConfig,
 };
 
 fn main() {
@@ -93,6 +97,22 @@ fn main() {
          off every post-shift chunk is demoted to IPS4o for the rest of the\n\
          job; with it on, run generation retrains after the drift streak and\n\
          recovers the learned path — zipf stays on the fallback by design,\n\
-         Algorithm 5's duplicate guard blocks its model)"
+         Algorithm 5's duplicate guard blocks its model)\n"
+    );
+
+    let widths = run_external_width_sweep(
+        &["uniform", "wiki_edit"],
+        budget_mb << 20,
+        &cfg,
+    );
+    print!(
+        "{}",
+        render_external_rows("External sort: 8-byte vs 4-byte keys (gen --width)", &widths)
+    );
+    println!(
+        "\n(same key count and budget at both widths: 4-byte keys spill half\n\
+         the bytes per key and fit twice the keys per chunk, so fewer, longer\n\
+         runs and less merge IO — the narrow-key speedup PCF Learned Sort\n\
+         reports, here for u32/f32 through the same width-generic pipeline)"
     );
 }

@@ -264,27 +264,15 @@ pub struct ExternalRow {
 /// already on disk, verifying the output before reporting.
 fn external_cell(
     dataset: &'static str,
-    key_type: KeyType,
+    kind: crate::key::KeyKind,
     input: &std::path::Path,
     output: &std::path::Path,
     strategy: String,
     ext: &crate::external::ExternalConfig,
     n: usize,
 ) -> ExternalRow {
-    use crate::external;
-
-    let t0 = std::time::Instant::now();
-    let report = match key_type {
-        KeyType::F64 => external::sort_file::<f64>(input, output, ext),
-        KeyType::U64 => external::sort_file::<u64>(input, output, ext),
-    }
-    .expect("external sort");
-    let secs = t0.elapsed().as_secs_f64();
-    let ok = match key_type {
-        KeyType::F64 => external::verify_sorted_file::<f64>(output, ext.effective_io_buffer()),
-        KeyType::U64 => external::verify_sorted_file::<u64>(output, ext.effective_io_buffer()),
-    }
-    .expect("verify output");
+    let (report, secs, ok) =
+        crate::external::sort_and_verify(kind, input, output, ext).expect("external sort");
     assert!(ok, "external sort produced unsorted output on {dataset}");
     assert_eq!(report.keys as usize, n, "key count drift on {dataset}");
     ExternalRow {
@@ -337,7 +325,7 @@ pub fn run_external_figure(
             };
             rows.push(external_cell(
                 spec.paper_name,
-                spec.key_type,
+                spec.key_type.kind(),
                 &input,
                 &output,
                 strategy.to_string(),
@@ -393,7 +381,7 @@ pub fn run_external_thread_sweep(
             };
             rows.push(external_cell(
                 spec.paper_name,
-                spec.key_type,
+                spec.key_type.kind(),
                 &input,
                 &output,
                 strategy,
@@ -450,7 +438,7 @@ pub fn run_external_regime_shift(budget_bytes: usize, cfg: &BenchConfig) -> Vec<
         };
         rows.push(external_cell(
             "Uniform→LogNormal→Zipf",
-            KeyType::F64,
+            crate::key::KeyKind::F64,
             &input,
             &output,
             label.to_string(),
@@ -460,6 +448,57 @@ pub fn run_external_regime_shift(budget_bytes: usize, cfg: &BenchConfig) -> Vec<
     }
     let _ = std::fs::remove_file(&input);
     let _ = std::fs::remove_file(&output);
+    rows
+}
+
+/// Key-width sweep of the learned external pipeline: each dataset sorted
+/// at its native 8-byte width and narrowed to 4 bytes (`f64 → f32`,
+/// `u64 → u32`, the `gen --width 4` files). Identical key count, budget
+/// and pipeline, so the delta isolates the spill width: 4-byte runs move
+/// half the bytes per key through disk and fit twice the keys per chunk.
+pub fn run_external_width_sweep(
+    names: &[&'static str],
+    budget_bytes: usize,
+    cfg: &BenchConfig,
+) -> Vec<ExternalRow> {
+    use crate::external::ExternalConfig;
+
+    let mut rows = Vec::new();
+    let dir = std::env::temp_dir();
+    for &name in names {
+        let spec = datasets::spec(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+        let input = dir.join(format!(
+            "aipso-extwidth-{}-{}.bin",
+            std::process::id(),
+            spec.name
+        ));
+        let output = dir.join(format!(
+            "aipso-extwidth-{}-{}.out.bin",
+            std::process::id(),
+            spec.name
+        ));
+        for width in [8usize, 4] {
+            let kind =
+                datasets::write_dataset_file_width(spec.name, cfg.n, cfg.seed, &input, 1 << 18, width)
+                    .expect("chunked dataset write");
+            let ext = ExternalConfig {
+                memory_budget: budget_bytes,
+                threads: cfg.threads,
+                ..ExternalConfig::default()
+            };
+            rows.push(external_cell(
+                spec.paper_name,
+                kind,
+                &input,
+                &output,
+                format!("{}-byte keys ({})", width, kind.name()),
+                &ext,
+                cfg.n,
+            ));
+        }
+        let _ = std::fs::remove_file(&input);
+        let _ = std::fs::remove_file(&output);
+    }
     rows
 }
 
@@ -617,6 +656,29 @@ mod tests {
         let report = render_external_rows("t", &rows);
         assert!(report.contains("Uniform"));
         assert!(report.contains("merge passes"));
+    }
+
+    #[test]
+    fn width_sweep_rows_halve_the_narrow_side() {
+        let cfg = BenchConfig {
+            n: 60_000,
+            ..tiny()
+        };
+        // budget in bytes: 8-byte chunks of 8192 keys, 4-byte of 16384
+        let rows = run_external_width_sweep(&["uniform"], 3 * 8192 * 8, &cfg);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].strategy.contains("8-byte"));
+        assert!(rows[1].strategy.contains("4-byte"));
+        assert_eq!(rows[0].n, rows[1].n, "equal key counts at both widths");
+        assert!(
+            rows[1].runs * 2 == rows[0].runs || rows[1].runs * 2 == rows[0].runs + 1,
+            "half the runs at width 4 ({} vs {})",
+            rows[1].runs,
+            rows[0].runs
+        );
+        for r in &rows {
+            assert!(r.rate > 0.0);
+        }
     }
 
     #[test]

@@ -3,8 +3,8 @@
 use std::path::PathBuf;
 
 use crate::coordinator::router::EngineChoice;
-use crate::datasets::KeyType;
 use crate::external::{ExternalConfig, ExternalSortReport};
+use crate::key::KeyKind;
 use crate::SortEngine;
 
 /// Owned key buffer, matching the paper's two key domains.
@@ -53,12 +53,14 @@ fn probe_dup(keys: impl Iterator<Item = u64>, probe: usize) -> f64 {
 /// `output` under `config.memory_budget` bytes of working set.
 #[derive(Debug, Clone)]
 pub struct ExternalJob {
-    /// Input key file (8-byte little-endian keys, `aipso gen --out` format).
+    /// Input key file (`aipso gen --out` format: self-describing header +
+    /// fixed-width LE keys, or a legacy headerless 8-byte file).
     pub input: PathBuf,
     /// Where the sorted output file is written.
     pub output: PathBuf,
-    /// How to decode the 8-byte keys.
-    pub key_type: KeyType,
+    /// Which of the four key domains to sort the file as (validated
+    /// against the input's header when one is present).
+    pub key_kind: KeyKind,
     /// Budget, threading and merge knobs for the external sorter.
     pub config: ExternalConfig,
 }
@@ -75,14 +77,15 @@ pub enum JobPayload {
 
 impl JobPayload {
     /// Key count for admission decisions. External jobs read the input's
-    /// file size; an unreadable file admits as "huge" — the exclusive path
-    /// then fails the job (`verified_sorted: false`, `n: 0`) and logs the
-    /// IO error to stderr.
+    /// spill header (falling back to `bytes / 8` for headerless v0
+    /// files); an unreadable or malformed file admits as "huge" — the
+    /// exclusive path then fails the job (`verified_sorted: false`,
+    /// `n: 0`) and logs the IO error to stderr.
     pub fn len_hint(&self) -> usize {
         match self {
             JobPayload::InMemory(keys) => keys.len(),
-            JobPayload::External(ext) => std::fs::metadata(&ext.input)
-                .map(|m| (m.len() / 8) as usize)
+            JobPayload::External(ext) => crate::external::file_key_count(&ext.input)
+                .map(|n| n as usize)
                 .unwrap_or(usize::MAX),
         }
     }
@@ -180,10 +183,26 @@ mod tests {
         let missing = JobPayload::External(ExternalJob {
             input: PathBuf::from("/definitely/not/a/file.bin"),
             output: PathBuf::from("/tmp/out.bin"),
-            key_type: KeyType::U64,
+            key_kind: KeyKind::U64,
             config: ExternalConfig::default(),
         });
         assert!(missing.is_external());
         assert_eq!(missing.len_hint(), usize::MAX);
+    }
+
+    #[test]
+    fn external_len_hint_reads_the_header_count() {
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("aipso-job-hint-{}.bin", std::process::id()));
+        crate::external::write_keys_file::<u32>(&p, &[1, 2, 3, 4, 5]).unwrap();
+        let payload = JobPayload::External(ExternalJob {
+            input: p.clone(),
+            output: dir.join("out.bin"),
+            key_kind: KeyKind::U32,
+            config: ExternalConfig::default(),
+        });
+        // bytes/8 would undercount a 4-byte file; the header knows better
+        assert_eq!(payload.len_hint(), 5);
+        let _ = std::fs::remove_file(&p);
     }
 }

@@ -41,7 +41,6 @@ pub use router::{route, EngineChoice};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
-use crate::datasets::KeyType;
 use crate::external;
 use crate::scheduler::effective_threads;
 use crate::{is_sorted, sort_parallel, sort_sequential};
@@ -256,23 +255,9 @@ fn run_external_job(
     if cfg.threads == 0 {
         cfg.threads = threads;
     }
-    let io_buffer = cfg.effective_io_buffer();
-    let outcome = match ext.key_type {
-        KeyType::F64 => external::sort_file::<f64>(&ext.input, &ext.output, &cfg).and_then(
-            |rep| {
-                external::verify_sorted_file::<f64>(&ext.output, io_buffer)
-                    .map(|ok| (rep.keys as usize, ok, rep))
-            },
-        ),
-        KeyType::U64 => external::sort_file::<u64>(&ext.input, &ext.output, &cfg).and_then(
-            |rep| {
-                external::verify_sorted_file::<u64>(&ext.output, io_buffer)
-                    .map(|ok| (rep.keys as usize, ok, rep))
-            },
-        ),
-    };
+    let outcome = external::sort_and_verify(ext.key_kind, &ext.input, &ext.output, &cfg);
     match outcome {
-        Ok(res) => res,
+        Ok((rep, _sort_secs, ok)) => (rep.keys as usize, ok, rep),
         Err(e) => {
             eprintln!("external job {id} failed: {e}");
             (0, false, external::ExternalSortReport::default())
@@ -330,8 +315,8 @@ mod tests {
 
     #[test]
     fn external_jobs_admitted_alongside_in_memory() {
-        use crate::datasets::KeyType;
         use crate::external::{read_keys_file, write_keys_file, ExternalConfig};
+        use crate::key::KeyKind;
 
         let dir = std::env::temp_dir();
         let input = dir.join(format!("aipso-coord-ext-{}.bin", std::process::id()));
@@ -347,7 +332,7 @@ mod tests {
             ExternalJob {
                 input: input.clone(),
                 output: output.clone(),
-                key_type: KeyType::U64,
+                key_kind: KeyKind::U64,
                 // 8Ki-key chunks force several runs + a real merge
                 config: ExternalConfig::with_budget(8192 * 8),
             },
@@ -373,8 +358,8 @@ mod tests {
 
     #[test]
     fn two_external_jobs_serialize_on_the_overlap_lane() {
-        use crate::datasets::KeyType;
         use crate::external::{read_keys_file, write_keys_file, ExternalConfig};
+        use crate::key::KeyKind;
 
         let dir = std::env::temp_dir();
         let mut rng = Xoshiro256pp::new(88);
@@ -395,7 +380,7 @@ mod tests {
                 ExternalJob {
                     input: input.clone(),
                     output: output.clone(),
-                    key_type: KeyType::U64,
+                    key_kind: KeyKind::U64,
                     config: ExternalConfig::with_budget(8192 * 8),
                 },
             );

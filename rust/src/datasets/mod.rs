@@ -13,6 +13,7 @@ pub mod synthetic;
 
 use std::path::Path;
 
+use crate::key::KeyKind;
 use crate::util::rng::{Xoshiro256pp, Zipf};
 
 /// Key type of a dataset, mirroring the paper (synthetic = f64 doubles,
@@ -23,6 +24,18 @@ pub enum KeyType {
     F64,
     /// 64-bit unsigned integers.
     U64,
+}
+
+impl KeyType {
+    /// The spill-codec domain of a natively-written (8-byte) file of this
+    /// dataset. (The 4-byte narrowed domains are chosen by
+    /// [`write_dataset_file_width`], which owns the narrowing rule.)
+    pub fn kind(self) -> KeyKind {
+        match self {
+            KeyType::F64 => KeyKind::F64,
+            KeyType::U64 => KeyKind::U64,
+        }
+    }
 }
 
 /// Which paper figure a dataset appears in.
@@ -314,9 +327,45 @@ pub fn write_u64_file(
     write_chunks(path, chunk_len, |len| gen.next_chunk(len))
 }
 
+/// Write a synthetic dataset narrowed to 4-byte floats (each `f64` draw
+/// cast to the nearest `f32`) — the PCF-style narrow-key workload — in
+/// bounded memory.
+pub fn write_f32_file(
+    name: &str,
+    n: usize,
+    seed: u64,
+    path: &Path,
+    chunk_len: usize,
+) -> Result<(), String> {
+    let mut gen = chunked_f64(name, n, seed)?;
+    write_chunks(path, chunk_len, |len| {
+        gen.next_chunk(len)
+            .map(|c| c.into_iter().map(|x| x as f32).collect::<Vec<f32>>())
+    })
+}
+
+/// Write a simulated real-world dataset narrowed to 4-byte integers (each
+/// `u64` draw truncated to its low 32 bits — order within the narrow
+/// domain is arbitrary but the duplicate structure survives, which is the
+/// workload "Defeating duplicates" studies) in bounded memory.
+pub fn write_u32_file(
+    name: &str,
+    n: usize,
+    seed: u64,
+    path: &Path,
+    chunk_len: usize,
+) -> Result<(), String> {
+    let mut gen = chunked_u64(name, n, seed)?;
+    write_chunks(path, chunk_len, |len| {
+        gen.next_chunk(len)
+            .map(|c| c.into_iter().map(|x| x as u32).collect::<Vec<u32>>())
+    })
+}
+
 /// Stream chunks to disk through the external sorter's spill codec (one
-/// encoding for generated files, spilled runs and sorted outputs).
-fn write_chunks<K: crate::external::ExtKey>(
+/// self-describing encoding for generated files, spilled runs and sorted
+/// outputs, at the key type's native width).
+fn write_chunks<K: crate::key::SortKey>(
     path: &Path,
     chunk_len: usize,
     mut next: impl FnMut(usize) -> Option<Vec<K>>,
@@ -331,7 +380,8 @@ fn write_chunks<K: crate::external::ExtKey>(
     Ok(())
 }
 
-/// Write any registered dataset by name (dispatching on its key type).
+/// Write any registered dataset by name at its native 8-byte width
+/// (dispatching on its key type).
 pub fn write_dataset_file(
     name: &str,
     n: usize,
@@ -345,6 +395,35 @@ pub fn write_dataset_file(
         KeyType::U64 => write_u64_file(spec.name, n, seed, path, chunk_len)?,
     }
     Ok(spec.key_type)
+}
+
+/// Write any registered dataset by name at an explicit key width: `8`
+/// writes the native `f64`/`u64` stream, `4` the narrowed `f32`/`u32`
+/// variant (`gen --width`). Returns the key domain of the written file.
+pub fn write_dataset_file_width(
+    name: &str,
+    n: usize,
+    seed: u64,
+    path: &Path,
+    chunk_len: usize,
+    width: usize,
+) -> Result<KeyKind, String> {
+    let spec = spec(name).ok_or_else(|| format!("unknown dataset {name}"))?;
+    match (width, spec.key_type) {
+        (8, _) => {
+            write_dataset_file(name, n, seed, path, chunk_len)?;
+            Ok(spec.key_type.kind())
+        }
+        (4, KeyType::F64) => {
+            write_f32_file(spec.name, n, seed, path, chunk_len)?;
+            Ok(KeyKind::F32)
+        }
+        (4, KeyType::U64) => {
+            write_u32_file(spec.name, n, seed, path, chunk_len)?;
+            Ok(KeyKind::U32)
+        }
+        _ => Err(format!("unsupported key width {width} (use 4 or 8)")),
+    }
 }
 
 #[cfg(test)]
@@ -462,6 +541,40 @@ mod tests {
         assert_eq!(one.len(), 1);
         assert!(chunked_f64("wiki_edit", 10, 1).is_err());
         assert!(chunked_u64("uniform", 10, 1).is_err());
+    }
+
+    #[test]
+    fn width_4_files_narrow_the_native_stream() {
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("aipso-ds-w4-{}.bin", std::process::id()));
+        let kind = write_dataset_file_width("uniform", 800, 5, &p, 128, 4).unwrap();
+        assert_eq!(kind, KeyKind::F32);
+        let back = crate::external::read_keys_file::<f32>(&p).unwrap();
+        let want: Vec<f32> = generate_f64("uniform", 800, 5)
+            .unwrap()
+            .into_iter()
+            .map(|x| x as f32)
+            .collect();
+        assert_eq!(back.len(), want.len());
+        let gb: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+        let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, wb, "f32 stream must be the cast of the f64 stream");
+
+        let kind = write_dataset_file_width("fb_ids", 800, 5, &p, 128, 4).unwrap();
+        assert_eq!(kind, KeyKind::U32);
+        let back = crate::external::read_keys_file::<u32>(&p).unwrap();
+        let want: Vec<u32> = generate_u64("fb_ids", 800, 5)
+            .unwrap()
+            .into_iter()
+            .map(|x| x as u32)
+            .collect();
+        assert_eq!(back, want, "u32 stream must be the truncation");
+
+        // width 8 defers to the native writer; anything else errors
+        let kind = write_dataset_file_width("uniform", 100, 5, &p, 64, 8).unwrap();
+        assert_eq!(kind, KeyKind::F64);
+        assert!(write_dataset_file_width("uniform", 10, 5, &p, 64, 2).is_err());
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

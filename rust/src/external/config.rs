@@ -164,13 +164,18 @@ impl ExternalConfig {
     }
 
     /// Keys per chunk (= per run) for key type `K` under the budget, in
-    /// the serial pipeline (one resident chunk).
+    /// the serial pipeline (one resident chunk). Scales with the key's
+    /// in-memory size — which equals its spill width for all four
+    /// supported domains — so a 4-byte key stream fits twice the keys per
+    /// chunk (and per run) of an 8-byte one under the same budget.
     pub fn chunk_keys<K>(&self) -> usize {
         (self.memory_budget / std::mem::size_of::<K>().max(1)).max(64)
     }
 
     /// Keys per chunk in the overlapped pipeline: the reader, sorter and
-    /// spill writer each hold one chunk, so the budget is split three ways.
+    /// spill writer each hold one chunk, so the budget is split three ways
+    /// (and, like [`ExternalConfig::chunk_keys`], 4-byte keys fit twice as
+    /// many per chunk).
     pub fn pipelined_chunk_keys<K>(&self) -> usize {
         (self.memory_budget / 3 / std::mem::size_of::<K>().max(1)).max(64)
     }

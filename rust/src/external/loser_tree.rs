@@ -14,7 +14,7 @@
 
 use std::io;
 
-use crate::external::spill::{ExtKey, RunReader};
+use crate::external::spill::RunReader;
 use crate::key::SortKey;
 
 /// A stream of keys consumed by the merge (each run is nondecreasing).
@@ -23,7 +23,7 @@ pub trait KeyStream<K> {
     fn next_key(&mut self) -> io::Result<Option<K>>;
 }
 
-impl<K: ExtKey> KeyStream<K> for RunReader<K> {
+impl<K: SortKey> KeyStream<K> for RunReader<K> {
     fn next_key(&mut self) -> io::Result<Option<K>> {
         self.next()
     }

@@ -28,8 +28,14 @@
 //!
 //! Entry points: [`sort_file`] (binary key files, the `aipso gen --out` /
 //! `aipso extsort` format) and [`sort_iter`] (any in-process key stream).
-//! The coordinator admits these as `JobPayload::External` jobs; see
-//! [`crate::coordinator`] for how they overlap with in-memory traffic.
+//! Both are generic over **all four** [`crate::key::SortKey`] domains —
+//! `u64`/`f64` at 8 bytes per key and `u32`/`f32` at 4 — through one
+//! width-generic codec; files carry a small self-describing header
+//! (magic, version, key-type tag, width, count; see [`spill`]) that
+//! [`sort_file`] validates up front, with legacy headerless 8-byte files
+//! still accepted as format v0. The coordinator admits these as
+//! `JobPayload::External` jobs; see [`crate::coordinator`] for how they
+//! overlap with in-memory traffic.
 //!
 //! The architecture, data flow and fallback decision points are documented
 //! end to end in `ARCHITECTURE.md` at the repository root.
@@ -62,14 +68,17 @@ pub use loser_tree::{KeyStream, LoserTree, VecStream};
 pub use run_writer::{EpochStats, RunGenStats};
 pub use shard::ShardPlan;
 pub use spill::{
-    file_key_count, read_keys_file, verify_sorted_file, write_keys_file, ExtKey, RunFile,
-    RunIndex, RunReader, RunWriter, SpillDir,
+    file_key_count, read_header, read_keys_file, verify_sorted_file, write_keys_file,
+    RunFile, RunIndex, RunReader, RunWriter, SpillDir, SpillHeader, FORMAT_VERSION,
+    HEADER_LEN, MAGIC,
 };
 
 use std::io;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
+use crate::key::{KeyKind, SortKey};
+use crate::rmi::model::Rmi;
 use crate::scheduler::run_task_pool;
 
 /// Outcome of one external sort.
@@ -85,24 +94,35 @@ pub struct ExternalSortReport {
     pub fallback_runs: usize,
     /// Whether the initial shared RMI was trained on the first chunk.
     pub rmi_trained: bool,
-    /// Mid-stream retrains that installed a replacement model under
-    /// [`RetrainPolicy`] (0 = the initial model served the whole stream,
-    /// or retraining is disabled).
+    /// Mid-stream installs under [`RetrainPolicy`]: replacement models
+    /// after drift, plus a *first* model recovered from a cold start
+    /// (0 = the initial model served the whole stream, or retraining is
+    /// disabled).
     pub retrains: usize,
     /// Learned/fallback chunk counts per model epoch — epoch 0 is the
-    /// initial model, each retrain opens the next entry.
+    /// first model, each later install opens the next entry. When the
+    /// first chunk trained (`rmi_trained`), `epochs.len() == retrains +
+    /// 1`; after a cold start the first mid-stream install *is* epoch 0
+    /// (its entry also absorbs the model-less prefix), so the count is
+    /// one lower.
     pub epochs: Vec<EpochStats>,
     /// K-way merge passes performed (0 when the input fit in one run).
     pub merge_passes: usize,
     /// Shards of the RMI-partitioned final merge (0 = the final pass ran
     /// the serial loser tree — no model, one thread, or skewed cuts).
     pub merge_shards: usize,
+    /// Intermediate-pass merge groups that themselves ran sharded (spare
+    /// threads split a group's merge into range-disjoint quantile shards;
+    /// 0 = every intermediate group merged through one serial loser tree).
+    pub sharded_groups: usize,
 }
 
-/// Sort a binary key file (8-byte little-endian keys, the format written
-/// by `aipso gen --out`) into `output`, holding at most roughly
-/// `cfg.memory_budget` bytes of keys in memory.
-pub fn sort_file<K: ExtKey>(
+/// Sort a binary key file (the self-describing `aipso gen --out` format,
+/// or a legacy headerless 8-byte file) into `output`, holding at most
+/// roughly `cfg.memory_budget` bytes of keys in memory. The input header
+/// is validated against `K` — sorting a `u32` file as `f32` (or any other
+/// mismatch) fails up front instead of decoding garbage.
+pub fn sort_file<K: SortKey>(
     input: &Path,
     output: &Path,
     cfg: &ExternalConfig,
@@ -115,10 +135,41 @@ pub fn sort_file<K: ExtKey>(
     sort_from(src, output, cfg)
 }
 
+/// [`sort_file`] dispatched by a runtime [`KeyKind`], followed by a
+/// stream-verification of the output — the one kind→generic dispatch
+/// point shared by the CLI, the coordinator and the bench harness (a
+/// future fifth key domain only needs an arm here). Returns the pipeline
+/// report, the wall-clock seconds of the sort itself (verification
+/// excluded), and whether the output verified sorted.
+pub fn sort_and_verify(
+    kind: KeyKind,
+    input: &Path,
+    output: &Path,
+    cfg: &ExternalConfig,
+) -> io::Result<(ExternalSortReport, f64, bool)> {
+    fn go<K: SortKey>(
+        input: &Path,
+        output: &Path,
+        cfg: &ExternalConfig,
+    ) -> io::Result<(ExternalSortReport, f64, bool)> {
+        let t0 = std::time::Instant::now();
+        let report = sort_file::<K>(input, output, cfg)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let ok = verify_sorted_file::<K>(output, cfg.effective_io_buffer())?;
+        Ok((report, secs, ok))
+    }
+    match kind {
+        KeyKind::U64 => go::<u64>(input, output, cfg),
+        KeyKind::F64 => go::<f64>(input, output, cfg),
+        KeyKind::U32 => go::<u32>(input, output, cfg),
+        KeyKind::F32 => go::<f32>(input, output, cfg),
+    }
+}
+
 /// Sort an arbitrary key stream into `output` under the memory budget.
 /// (`Send` because the overlapped pipeline pulls the stream from a reader
 /// thread when `cfg.threads != 1`.)
-pub fn sort_iter<K: ExtKey, I>(
+pub fn sort_iter<K: SortKey, I>(
     keys: I,
     output: &Path,
     cfg: &ExternalConfig,
@@ -161,7 +212,7 @@ fn sort_from<K, F>(
     cfg: &ExternalConfig,
 ) -> io::Result<ExternalSortReport>
 where
-    K: ExtKey,
+    K: SortKey,
     F: FnMut(usize) -> io::Result<Option<Vec<K>>> + Send,
 {
     let mut guard = OutputGuard {
@@ -189,7 +240,7 @@ where
             *w += run.n;
         }
     }
-    let cut_models: Vec<(&crate::rmi::model::Rmi, f64)> = models
+    let cut_models: Vec<(&Rmi, f64)> = models
         .iter()
         .zip(&epoch_keys)
         .filter(|(_, &w)| w > 0)
@@ -206,24 +257,31 @@ where
         epochs: stats.epochs.clone(),
         merge_passes: 0,
         merge_shards: 0,
+        sharded_groups: 0,
     };
     let threads = crate::scheduler::effective_threads(cfg.threads);
 
     if runs.is_empty() {
-        // empty input — still produce (truncate to) an empty output file
+        // empty input — still produce (truncate to) an empty, validly
+        // headered output file
         guard.armed = true;
-        std::fs::File::create(output)?;
+        write_keys_file::<K>(output, &[])?;
         guard.armed = false;
         return Ok(report);
     }
 
     // Intermediate passes while the run count exceeds the fan-in; the
     // merge groups of one pass are independent, so they run concurrently
-    // on the pool (each group's readers get a slice of the io budget).
+    // on the pool (each group's readers get a slice of the io budget),
+    // and spare threads shard *within* groups along the same mixture cuts
+    // the final pass uses.
     let fanout = cfg.effective_fanout();
     while runs.len() > fanout {
-        runs = merge_pass::<K>(runs, &mut spill, cfg, threads)?;
+        let (merged, sharded_groups) =
+            merge_pass::<K>(runs, &mut spill, cfg, threads, &cut_models)?;
+        runs = merged;
         report.merge_passes += 1;
+        report.sharded_groups += sharded_groups;
     }
 
     // Final pass streams straight into the output file.
@@ -271,48 +329,171 @@ fn final_shards(cfg: &ExternalConfig, threads: usize, total_keys: u64) -> usize 
     want.min(cap.max(1))
 }
 
+/// An intermediate-pass merge group whose output is produced by parallel
+/// quantile shards instead of one serial loser tree.
+struct ShardedGroup {
+    /// Index of the group's slot in the next round.
+    slot: usize,
+    /// The group's source runs.
+    runs: Vec<RunFile>,
+    /// Quantile cuts + per-run offsets (skew-guarded before admission).
+    plan: ShardPlan,
+    /// The group's pre-sized output run.
+    out: PathBuf,
+    /// Total keys across the group.
+    total: u64,
+}
+
 /// One intermediate merge pass: groups of up to `fanout` runs merge
 /// concurrently into fresh spill files; trailing singletons carry forward
 /// untouched (no point rewriting a whole run through a 1-way merge).
-fn merge_pass<K: ExtKey>(
+///
+/// When the pass has fewer multi-run groups than worker threads, the
+/// spare threads **shard within groups**: each group's merge splits into
+/// range-disjoint quantile shards along the same epoch-mixture cuts the
+/// final pass uses ([`shard::plan_shards`]), with the same skew guard
+/// demoting a group back to the serial loser tree when the cuts no longer
+/// describe its data. All group- and shard-tasks of the pass run in one
+/// flat pool, so shards of different groups interleave freely. Returns
+/// the next round's runs plus how many groups merged sharded.
+fn merge_pass<K: SortKey>(
     runs: Vec<RunFile>,
-    spill: &mut SpillDir,
+    spill_dir: &mut SpillDir,
     cfg: &ExternalConfig,
     threads: usize,
-) -> io::Result<Vec<RunFile>> {
+    cut_models: &[(&Rmi, f64)],
+) -> io::Result<(Vec<RunFile>, usize)> {
     let fanout = cfg.effective_fanout();
     let n_groups = runs.len().div_ceil(fanout);
     let mut next_round: Vec<Option<RunFile>> = vec![None; n_groups];
-    let mut jobs: Vec<(usize, Vec<RunFile>, PathBuf)> = Vec::new();
+
+    let multi = runs.chunks(fanout).filter(|g| g.len() > 1).count();
+    // Threads beyond one-per-group are spent sharding *inside* groups.
+    let per_group = if multi == 0 { 1 } else { (threads / multi).max(1) };
+    let mut serial: Vec<(usize, Vec<RunFile>, PathBuf)> = Vec::new();
+    let mut sharded: Vec<ShardedGroup> = Vec::new();
     for (slot, group) in runs.chunks(fanout).enumerate() {
         if group.len() == 1 {
             next_round[slot] = Some(group[0].clone());
-        } else {
-            jobs.push((slot, group.to_vec(), spill.next_run_path()));
+            continue;
+        }
+        let total: u64 = group.iter().map(|r| r.n).sum();
+        let cap = (total / cfg.min_shard_keys.max(1) as u64).min(256) as usize;
+        let p = per_group.min(cap.max(1));
+        let out = spill_dir.next_run_path();
+        let mut plan = None;
+        if p >= 2 && !cut_models.is_empty() {
+            let candidate = shard::plan_shards::<K>(cut_models, group, p)?;
+            if candidate.skew() <= cfg.shard_skew_limit {
+                plan = Some(candidate);
+            }
+            // else: stale cuts would serialize behind one lopsided shard;
+            // the serial tree is the better merge for this group
+        }
+        match plan {
+            Some(plan) => {
+                spill::create_presized::<K>(&out, total)?;
+                sharded.push(ShardedGroup {
+                    slot,
+                    runs: group.to_vec(),
+                    plan,
+                    out,
+                    total,
+                });
+            }
+            None => serial.push((slot, group.to_vec(), out)),
         }
     }
-    let workers = threads.min(jobs.len()).max(1);
-    // each in-flight group holds up to `fanout` reader buffers + 1 writer;
-    // split the io budget across the groups that can run at once
-    let io_buffer = (cfg.effective_io_buffer() / workers).max(4096);
-    let results: Mutex<Vec<(usize, io::Result<RunFile>)>> = Mutex::new(Vec::new());
-    run_task_pool(workers, jobs, |(slot, group, out), _spawner| {
-        let res = merge_group::<K>(&group, out, io_buffer);
-        if res.is_ok() {
-            for r in &group {
-                let _ = std::fs::remove_file(&r.path);
+
+    /// A unit of work in the pass's flat pool.
+    enum Task {
+        /// Merge serial group `i` through one loser tree.
+        Serial(usize),
+        /// Merge shard `s` of sharded group `g`.
+        Shard(usize, usize),
+    }
+    let mut tasks: Vec<Task> = (0..serial.len()).map(Task::Serial).collect();
+    for (g, grp) in sharded.iter().enumerate() {
+        for s in 0..grp.plan.shards() {
+            if grp.plan.shard_keys()[s] > 0 {
+                tasks.push(Task::Shard(g, s));
             }
         }
-        results.lock().unwrap().push((slot, res));
+    }
+    let workers = threads.min(tasks.len()).max(1);
+    // each in-flight task holds up to `fanout` reader buffers + 1 writer;
+    // split the io budget across the tasks that can run at once
+    let io_buffer = (cfg.effective_io_buffer() / workers).max(4096);
+    let shard_offsets: Vec<Vec<u64>> = sharded.iter().map(|g| g.plan.out_key_offsets()).collect();
+    let serial_results: Mutex<Vec<(usize, io::Result<RunFile>)>> = Mutex::new(Vec::new());
+    let first_err: Mutex<Option<io::Error>> = Mutex::new(None);
+    // Once any task fails the whole pass's result is discarded, so every
+    // queued task — serial or shard — drains cheaply instead of grinding
+    // a failing disk through more whole-group merges.
+    let failed = std::sync::atomic::AtomicBool::new(false);
+    use std::sync::atomic::Ordering::Relaxed;
+    run_task_pool(workers, tasks, |task, _spawner| match task {
+        Task::Serial(i) => {
+            if failed.load(Relaxed) {
+                return;
+            }
+            let (slot, group, out) = &serial[i];
+            let res = merge_group::<K>(group, out.clone(), io_buffer);
+            match &res {
+                Ok(_) => {
+                    for r in group {
+                        let _ = std::fs::remove_file(&r.path);
+                    }
+                }
+                Err(_) => failed.store(true, Relaxed),
+            }
+            serial_results.lock().unwrap().push((*slot, res));
+        }
+        Task::Shard(g, s) => {
+            if failed.load(Relaxed) {
+                return;
+            }
+            let grp = &sharded[g];
+            if let Err(e) = shard::merge_one_shard::<K>(
+                &grp.runs,
+                &grp.plan,
+                s,
+                shard_offsets[g][s],
+                &grp.out,
+                io_buffer,
+            ) {
+                failed.store(true, Relaxed);
+                let mut slot = first_err.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(e);
+                }
+            }
+        }
     });
-    for (slot, res) in results.into_inner().unwrap() {
+    for (slot, res) in serial_results.into_inner().unwrap() {
         next_round[slot] = Some(res?);
     }
-    Ok(next_round.into_iter().map(Option::unwrap).collect())
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+    let n_sharded = sharded.len();
+    for grp in sharded {
+        for r in &grp.runs {
+            let _ = std::fs::remove_file(&r.path);
+        }
+        next_round[grp.slot] = Some(RunFile {
+            path: grp.out,
+            n: grp.total,
+        });
+    }
+    Ok((
+        next_round.into_iter().map(Option::unwrap).collect(),
+        n_sharded,
+    ))
 }
 
 /// Merge one group of runs into `out_path` through the loser tree.
-fn merge_group<K: ExtKey>(
+fn merge_group<K: SortKey>(
     runs: &[RunFile],
     out_path: PathBuf,
     io_buffer: usize,
@@ -401,6 +582,44 @@ mod tests {
         );
         let _ = std::fs::remove_file(&serial_out);
         let _ = std::fs::remove_file(&parallel_out);
+    }
+
+    #[test]
+    fn intermediate_passes_shard_when_threads_exceed_groups() {
+        // 10 runs at fan-in 4 → one intermediate pass of 3 groups; with 8
+        // threads each group gets 2 quantile shards. The sharded groups
+        // must merge byte-identically to the serial reference.
+        let mut rng = Xoshiro256pp::new(21);
+        let n = 10 * 8192;
+        let keys: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1e6)).collect();
+        let mut cfg = ExternalConfig {
+            memory_budget: 3 * 8192 * 8, // pipelined chunks of 8192 keys
+            io_buffer: 4096,
+            merge_fanout: 4,
+            threads: 8,
+            min_shard_keys: 1024,
+            ..ExternalConfig::default()
+        };
+        let out = tmp("inter-shard.bin");
+        let report = sort_iter(keys.iter().copied(), &out, &cfg).unwrap();
+        assert_eq!(report.runs, 10);
+        assert!(report.rmi_trained);
+        assert!(report.merge_passes >= 2, "passes={}", report.merge_passes);
+        assert_eq!(
+            report.sharded_groups, 3,
+            "all three intermediate groups must shard"
+        );
+        let serial_out = tmp("inter-shard-serial.bin");
+        cfg.threads = 1;
+        let serial = sort_iter(keys.iter().copied(), &serial_out, &cfg).unwrap();
+        assert_eq!(serial.sharded_groups, 0, "one thread never shards groups");
+        assert_eq!(
+            std::fs::read(&out).unwrap(),
+            std::fs::read(&serial_out).unwrap(),
+            "sharded intermediate passes must not change a single byte"
+        );
+        let _ = std::fs::remove_file(&out);
+        let _ = std::fs::remove_file(&serial_out);
     }
 
     #[test]
@@ -494,7 +713,13 @@ mod tests {
             sort_iter::<u64, _>(std::iter::empty(), &out, &ExternalConfig::default()).unwrap();
         assert_eq!(report.keys, 0);
         assert_eq!(report.runs, 0);
-        assert_eq!(std::fs::metadata(&out).unwrap().len(), 0);
+        // header only: a valid self-describing file of zero keys
+        assert_eq!(
+            std::fs::metadata(&out).unwrap().len(),
+            spill::HEADER_LEN as u64
+        );
+        assert_eq!(file_key_count(&out).unwrap(), 0);
+        assert!(read_keys_file::<u64>(&out).unwrap().is_empty());
         let _ = std::fs::remove_file(&out);
     }
 

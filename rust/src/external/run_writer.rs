@@ -37,16 +37,19 @@ use std::sync::mpsc;
 use crate::classifier::rmi_classifier::RmiClassifier;
 use crate::classifier::Classifier;
 use crate::external::config::{ExternalConfig, RetrainPolicy, RunGen};
-use crate::external::spill::{ExtKey, RunFile, RunWriter, SpillDir};
+use crate::external::spill::{RunFile, RunWriter, SpillDir};
+use crate::key::SortKey;
 use crate::rmi::model::{Rmi, RmiConfig};
 use crate::rmi::quality;
 use crate::sample_sort::partition::partition;
 use crate::scheduler::run_task_pool;
 use crate::util::rng::Xoshiro256pp;
 
-/// Per-epoch chunk counters. Epoch 0 spans the initial shared model (or
-/// the whole model-free stream when the first chunk trains nothing); each
-/// successful retrain under [`RetrainPolicy`] opens the next epoch. The
+/// Per-epoch chunk counters. Epoch 0 spans the first installed model —
+/// trained on the first chunk, or recovered mid-stream from a cold start
+/// (its entry then also absorbs the model-less prefix; a fully model-free
+/// stream is a single epoch-0 entry) — and each later install under
+/// [`RetrainPolicy`] opens the next epoch. The
 /// split shows *where* the learned path ran: after a regime change with
 /// retraining enabled, the post-retrain epochs should be learned-dominated
 /// while the tail of the previous epoch absorbed the drift fallbacks.
@@ -71,8 +74,9 @@ pub struct RunGenStats {
     pub fallback_chunks: usize,
     /// Whether the initial shared RMI was trained on the first chunk.
     pub rmi_trained: bool,
-    /// Mid-stream retrains that installed a replacement model (each one
-    /// opened a new entry in `epochs`).
+    /// Mid-stream installs: replacement models after drift, plus a first
+    /// model recovered from a cold start (which reuses epoch 0 instead of
+    /// opening a new entry).
     pub retrains: usize,
     /// Learned/fallback chunk counts per model epoch (always at least one
     /// entry once a chunk was processed).
@@ -101,7 +105,7 @@ pub(crate) struct GeneratedRuns {
 /// Pull chunks from `next_chunk`, sort each, and spill them as sorted
 /// runs. `threads == 1` runs the serial reference loop; more threads run
 /// the overlapped read/sort/write pipeline.
-pub(crate) fn generate_runs<K: ExtKey, F>(
+pub(crate) fn generate_runs<K: SortKey, F>(
     next_chunk: F,
     spill: &mut SpillDir,
     cfg: &ExternalConfig,
@@ -118,7 +122,7 @@ where
 }
 
 /// The serial reference pipeline: read → sort → write, one chunk resident.
-fn generate_runs_serial<K: ExtKey, F>(
+fn generate_runs_serial<K: SortKey, F>(
     mut next_chunk: F,
     spill: &mut SpillDir,
     cfg: &ExternalConfig,
@@ -145,7 +149,7 @@ where
 /// writer thread spills chunk `N−1` while the caller's thread sorts chunk
 /// `N` on the pool. Rendezvous (zero-capacity) channels give backpressure
 /// with exactly one resident chunk per stage.
-fn generate_runs_pipelined<K: ExtKey, F>(
+fn generate_runs_pipelined<K: SortKey, F>(
     next_chunk: F,
     spill: &mut SpillDir,
     cfg: &ExternalConfig,
@@ -267,7 +271,7 @@ impl<'a> ChunkSorter<'a> {
     /// Sort one chunk in place: train the shared RMI on the first chunk,
     /// route drifted / duplicate-heavy chunks to the IPS⁴o path, and
     /// retrain the shared model when the drift streak clears the policy.
-    fn sort_chunk<K: ExtKey>(&mut self, chunk: &mut [K]) {
+    fn sort_chunk<K: SortKey>(&mut self, chunk: &mut [K]) {
         self.stats.chunks += 1;
         self.stats.keys += chunk.len() as u64;
 
@@ -310,10 +314,18 @@ impl<'a> ChunkSorter<'a> {
     /// left under `max_retrains`) the chunk itself becomes the training
     /// set for a replacement model, recovering the learned path instead of
     /// demoting the rest of the stream to IPS⁴o.
-    fn route_chunk<K: ExtKey>(&mut self, chunk: &[K]) -> bool {
-        let Some(classifier) = &self.shared else {
-            return false; // no model: duplicate-heavy/short first chunk
-        };
+    ///
+    /// The same machinery covers the **cold start**: when the first chunk
+    /// trained nothing (duplicate-heavy or tiny), there is no model for
+    /// the drift probe to score — so every model-eligible chunk counts as
+    /// trivially drifted and [`RetrainPolicy`] can install a *first* model
+    /// mid-stream once a later regime turns tractable. Without this, a
+    /// bad first chunk used to demote the whole stream to IPS⁴o forever.
+    fn route_chunk<K: SortKey>(&mut self, chunk: &[K]) -> bool {
+        if self.shared.is_none() {
+            return self.route_cold_start(chunk);
+        }
+        let classifier = self.shared.as_ref().unwrap();
         if chunk.len() < self.cfg.min_learned_chunk {
             return false; // size guard — says nothing about drift
         }
@@ -322,6 +334,36 @@ impl<'a> ChunkSorter<'a> {
             return true;
         }
         self.drift_streak += 1;
+        self.try_install_model(chunk)
+    }
+
+    /// Model-less routing: no shared RMI exists (the first chunk was
+    /// duplicate-heavy or too small to train). Model-eligible chunks build
+    /// the drift streak exactly as drifted chunks do, and the retrain
+    /// policy may install a *first* model from one of them; until then
+    /// every chunk takes the IPS⁴o path. The very first chunk never counts
+    /// — its training attempt just failed in `sort_chunk`, and an
+    /// immediate second draw from the same data would be wasted work.
+    fn route_cold_start<K: SortKey>(&mut self, chunk: &[K]) -> bool {
+        if self.cfg.run_gen != RunGen::LearnedReuse
+            || chunk.len() < self.cfg.min_learned_chunk
+            || self.stats.chunks <= 1
+        {
+            return false;
+        }
+        self.drift_streak += 1;
+        self.try_install_model(chunk)
+    }
+
+    /// Shared tail of both retrain paths (drifted and cold-start): gate on
+    /// the policy, streak and install budget, then try to fit a model from
+    /// this chunk and install it as the shared classifier. Attempts —
+    /// successful or vetoed by Algorithm 5's duplicate guard — reset the
+    /// streak, so a persistently intractable stream must re-earn
+    /// `retrain_after` chunks before the next attempt and can't
+    /// retrain-and-fail on every chunk. Returns true when the chunk should
+    /// take the learned path (the installed model was fit on it).
+    fn try_install_model<K: SortKey>(&mut self, chunk: &[K]) -> bool {
         let policy: RetrainPolicy = self.cfg.retrain;
         if !policy.enabled()
             || self.drift_streak < policy.retrain_after
@@ -329,17 +371,13 @@ impl<'a> ChunkSorter<'a> {
         {
             return false;
         }
-        // Reset the streak whether or not training succeeds: a failed
-        // attempt (Algorithm 5's duplicate guard) keeps the old model and
-        // must re-earn `retrain_after` drifted chunks before the next try,
-        // so duplicate-heavy regimes can't retrain-and-fail every chunk.
         self.drift_streak = 0;
         match train_shared_rmi(chunk, self.cfg, &mut self.rng) {
             Some(fresh) => {
                 self.models.push(fresh.rmi().clone());
                 self.shared = Some(fresh);
                 self.stats.retrains += 1;
-                true // the replacement was fit on this very chunk
+                true
             }
             None => false,
         }
@@ -359,7 +397,7 @@ impl<'a> ChunkSorter<'a> {
 /// Train the shared RMI from a sample of the first chunk; `None` when the
 /// chunk is too small to amortize a model or the sample is duplicate-heavy
 /// (every chunk then takes the IPS⁴o path, exactly Algorithm 5's routing).
-fn train_shared_rmi<K: ExtKey>(
+fn train_shared_rmi<K: SortKey>(
     chunk: &[K],
     cfg: &ExternalConfig,
     rng: &mut Xoshiro256pp,
@@ -395,7 +433,7 @@ fn train_shared_rmi<K: ExtKey>(
 
 /// Probe the chunk and score the shared model; true when the stream's
 /// distribution no longer matches what the model was trained on.
-fn drifted<K: ExtKey>(
+fn drifted<K: SortKey>(
     chunk: &[K],
     rmi: &Rmi,
     cfg: &ExternalConfig,
@@ -428,7 +466,7 @@ fn drifted<K: ExtKey>(
 /// Partition the chunk with the shared RMI, then sort the buckets as
 /// pool tasks (the same pattern as `aips2o::sort_par`, with the top-level
 /// model fixed instead of retrained).
-fn learned_sort_chunk<K: ExtKey>(
+fn learned_sort_chunk<K: SortKey>(
     chunk: &mut [K],
     classifier: &RmiClassifier,
     cfg: &ExternalConfig,
@@ -464,7 +502,7 @@ mod tests {
     use crate::external::spill::read_keys_file;
     use crate::is_sorted;
 
-    fn gen_from_vec<K: ExtKey>(
+    fn gen_from_vec<K: SortKey>(
         keys: Vec<K>,
         cfg: &ExternalConfig,
     ) -> (Vec<RunFile>, RunGenStats, SpillDir) {
@@ -641,6 +679,68 @@ mod tests {
         assert_eq!(stats.learned_chunks, 1);
         assert_eq!(stats.fallback_chunks, 2);
         assert_eq!(stats.epochs.len(), 1, "no install → no new epoch");
+    }
+
+    #[test]
+    fn cold_start_installs_first_model_mid_stream() {
+        let mut rng = Xoshiro256pp::new(42);
+        // Chunks 1-2 are constant (Algorithm 5's guard vetoes any model);
+        // chunks 3-6 are smooth uniform. The cold-start path must keep
+        // probing and install a *first* model once the stream turns
+        // tractable, instead of demoting the rest of it to IPS⁴o.
+        let mut keys: Vec<f64> = vec![7e6; 2 * 16_384];
+        keys.extend((0..4 * 16_384).map(|_| rng.uniform(0.0, 1e6)));
+        let cfg = ExternalConfig {
+            memory_budget: 16_384 * 8,
+            threads: 1,
+            retrain: RetrainPolicy { retrain_after: 1, max_retrains: 2 },
+            ..ExternalConfig::default()
+        };
+        let mut it = keys.into_iter();
+        let src = move |max: usize| -> io::Result<Option<Vec<f64>>> {
+            let chunk: Vec<f64> = it.by_ref().take(max).collect();
+            Ok(if chunk.is_empty() { None } else { Some(chunk) })
+        };
+        let mut spill = SpillDir::create(None).unwrap();
+        let gen = generate_runs(src, &mut spill, &cfg).unwrap();
+        assert!(!gen.stats.rmi_trained, "first chunk must not train");
+        assert_eq!(gen.stats.retrains, 1, "first model installs mid-stream");
+        assert_eq!(gen.models.len(), 1);
+        // chunk 2's attempt is vetoed (constant data); chunk 3 installs
+        // and sorts learned, as do chunks 4-6
+        assert_eq!(gen.stats.learned_chunks, 4);
+        assert_eq!(gen.stats.fallback_chunks, 2);
+        assert_eq!(gen.run_epochs, vec![0, 0, 0, 0, 0, 0], "one epoch only");
+        for r in &gen.runs {
+            assert!(is_sorted(&read_keys_file::<f64>(&r.path).unwrap()));
+        }
+    }
+
+    #[test]
+    fn cold_start_never_engages_for_ips4o_strategy_or_tiny_chunks() {
+        // Dup-heavy stream under RunGen::Ips4o: no cold-start installs.
+        let keys: Vec<u64> = (0..60_000).map(|i| i % 7).collect();
+        let cfg = ExternalConfig {
+            memory_budget: 16_384 * 8,
+            threads: 1,
+            run_gen: RunGen::Ips4o,
+            retrain: RetrainPolicy { retrain_after: 1, max_retrains: 4 },
+            ..ExternalConfig::default()
+        };
+        let (_runs, stats, _spill) = gen_from_vec(keys, &cfg);
+        assert!(!stats.rmi_trained);
+        assert_eq!(stats.retrains, 0);
+        // Chunks below min_learned_chunk never build a cold-start streak.
+        let keys: Vec<u64> = (0..4096).collect();
+        let cfg = ExternalConfig {
+            memory_budget: 512 * 8,
+            threads: 1,
+            retrain: RetrainPolicy { retrain_after: 1, max_retrains: 4 },
+            ..ExternalConfig::default()
+        };
+        let (_runs, stats, _spill) = gen_from_vec(keys, &cfg);
+        assert!(!stats.rmi_trained);
+        assert_eq!(stats.retrains, 0, "tiny chunks must stay model-less");
     }
 
     #[test]

@@ -29,15 +29,22 @@
 //! drift guard: when [`ShardPlan::skew`] exceeds
 //! `ExternalConfig::shard_skew_limit`, the data no longer matches the
 //! epoch models and the merge falls back to the serial loser tree.
+//!
+//! The same plan/merge machinery serves two call sites: the **final pass**
+//! ([`merge_sharded`] over all surviving runs into the output file) and
+//! the **intermediate passes** (the driver shards each merge *group* when
+//! it has threads to spare — see `external::merge_pass`). Each shard's
+//! output is double-buffered: a flusher thread seek-writes one full buffer
+//! while the merge loop fills the other.
 
 use std::fs::OpenOptions;
-use std::io::{self, BufWriter, Seek, SeekFrom, Write};
+use std::io::{self, Seek, SeekFrom, Write};
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{mpsc, Mutex};
 
 use crate::external::config::ExternalConfig;
 use crate::external::loser_tree::LoserTree;
-use crate::external::spill::{ExtKey, RunFile, RunIndex, RunReader, KEY_BYTES};
+use crate::external::spill::{self, RunFile, RunIndex, RunReader, HEADER_LEN};
 use crate::key::SortKey;
 use crate::rmi::model::Rmi;
 use crate::rmi::quality;
@@ -78,6 +85,19 @@ impl ShardPlan {
         self.shard_keys.iter().sum()
     }
 
+    /// Key offset of each shard inside the merged output (prefix sums of
+    /// the shard sizes; `p + 1` entries, the last being the total).
+    pub fn out_key_offsets(&self) -> Vec<u64> {
+        let mut offs = Vec::with_capacity(self.shards() + 1);
+        let mut acc = 0u64;
+        offs.push(0);
+        for &keys in &self.shard_keys {
+            acc += keys;
+            offs.push(acc);
+        }
+        offs
+    }
+
     /// Load imbalance: largest shard relative to the ideal `total / p`.
     /// `1.0` is perfect balance; the driver falls back to the serial merge
     /// above `ExternalConfig::shard_skew_limit`.
@@ -100,7 +120,7 @@ impl ShardPlan {
 /// pre-retrain single-model cuts. Costs `O(p · models · log n)` predicts
 /// plus `O(runs · p · log n)` positioned reads — negligible next to the
 /// merge.
-pub fn plan_shards<K: ExtKey>(
+pub fn plan_shards<K: SortKey>(
     models: &[(&Rmi, f64)],
     runs: &[RunFile],
     p: usize,
@@ -156,7 +176,7 @@ pub fn plan_shards<K: ExtKey>(
 /// scheduler pool; every shard seek-writes its own disjoint byte range of
 /// the pre-sized output file, so shard order never serializes the work.
 /// Returns the total key count written.
-pub fn merge_sharded<K: ExtKey>(
+pub fn merge_sharded<K: SortKey>(
     runs: &[RunFile],
     plan: &ShardPlan,
     output: &Path,
@@ -165,22 +185,13 @@ pub fn merge_sharded<K: ExtKey>(
 ) -> io::Result<u64> {
     let p = plan.shards();
     let total = plan.total_keys();
-    // Pre-size the output so every shard can open + seek independently.
-    {
-        let f = std::fs::File::create(output)?;
-        f.set_len(total * KEY_BYTES as u64)?;
-    }
-    // Output byte offset of each shard = prefix sum of shard sizes.
-    let mut out_key_off = Vec::with_capacity(p + 1);
-    let mut acc = 0u64;
-    out_key_off.push(0u64);
-    for &keys in &plan.shard_keys {
-        acc += keys;
-        out_key_off.push(acc);
-    }
+    // Header + pre-sized payload so every shard can open + seek
+    // independently (and the count is correct from the start).
+    spill::create_presized::<K>(output, total)?;
+    let out_key_off = plan.out_key_offsets();
     // Up to `threads` shards in flight, each with `runs.len()` readers and
-    // one writer: scale the per-stream buffer so the whole merge stays
-    // within one io-buffer budget per worker.
+    // one double-buffered writer: scale the per-stream buffer so the whole
+    // merge stays within one io-buffer budget per worker.
     let buf = (cfg.effective_io_buffer() / threads.max(1)).max(4096);
 
     let first_err: Mutex<Option<io::Error>> = Mutex::new(None);
@@ -203,8 +214,12 @@ pub fn merge_sharded<K: ExtKey>(
 }
 
 /// Merge shard `s` of every run into the output range starting at key
-/// offset `out_key_off`.
-fn merge_one_shard<K: ExtKey>(
+/// offset `out_key_off` (an index into the payload; the header offset is
+/// added here). The output write is **double-buffered**: a flusher thread
+/// owns the file handle and seek-writes one full buffer while the merge
+/// loop fills the other, so disk latency no longer serializes behind the
+/// comparison work (mirroring run generation's reader/writer threads).
+pub(crate) fn merge_one_shard<K: SortKey>(
     runs: &[RunFile],
     plan: &ShardPlan,
     s: usize,
@@ -219,18 +234,78 @@ fn merge_one_shard<K: ExtKey>(
             sources.push(RunReader::<K>::open_range(&run.path, lo, hi - lo, io_buffer)?);
         }
     }
-    let mut out = OpenOptions::new().write(true).open(output)?;
-    out.seek(SeekFrom::Start(out_key_off * KEY_BYTES as u64))?;
-    let mut w = BufWriter::with_capacity(io_buffer, out);
     let mut tree = LoserTree::new(sources)?;
-    let mut written = 0u64;
-    while let Some(k) = tree.next()? {
-        w.write_all(&k.to_le8())?;
-        written += 1;
-    }
-    w.flush()?;
-    debug_assert_eq!(written, plan.shard_keys[s]);
-    Ok(())
+    let byte_off = HEADER_LEN as u64 + out_key_off * K::WIDTH as u64;
+    let cap = io_buffer.max(4096);
+
+    std::thread::scope(|scope| -> io::Result<()> {
+        // Rendezvous on full buffers (at most one queued ⇒ two in flight
+        // total: the one being filled and the one being written); emptied
+        // buffers come back on the free channel for reuse.
+        let (full_tx, full_rx) = mpsc::sync_channel::<Vec<u8>>(1);
+        let (free_tx, free_rx) = mpsc::channel::<Vec<u8>>();
+        let flusher = scope.spawn(move || -> io::Result<u64> {
+            let mut out = OpenOptions::new().write(true).open(output)?;
+            out.seek(SeekFrom::Start(byte_off))?;
+            let mut written = 0u64;
+            for buf in full_rx.iter() {
+                out.write_all(&buf)?;
+                written += buf.len() as u64;
+                let mut b = buf;
+                b.clear();
+                let _ = free_tx.send(b); // merge may already have finished
+            }
+            Ok(written)
+        });
+
+        let mut merge_err: Option<io::Error> = None;
+        let mut pushed = 0u64;
+        let mut buf: Vec<u8> = Vec::with_capacity(cap + K::WIDTH);
+        let mut spare: Option<Vec<u8>> = Some(Vec::with_capacity(cap + K::WIDTH));
+        loop {
+            match tree.next() {
+                Err(e) => {
+                    merge_err = Some(e);
+                    break;
+                }
+                Ok(None) => break,
+                Ok(Some(k)) => {
+                    buf.extend_from_slice(k.to_le_bytes().as_ref());
+                    pushed += 1;
+                    if buf.len() >= cap {
+                        let next = match spare.take() {
+                            Some(b) => b,
+                            // recycle the flushed buffer; a closed channel
+                            // means the flusher died on an IO error, which
+                            // its join below reports
+                            None => match free_rx.recv() {
+                                Ok(b) => b,
+                                Err(_) => break,
+                            },
+                        };
+                        if full_tx.send(std::mem::replace(&mut buf, next)).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        if merge_err.is_none() && !buf.is_empty() {
+            let _ = full_tx.send(std::mem::take(&mut buf));
+        }
+        drop(full_tx); // close the flusher's queue so it can finish
+        let flushed = match flusher.join() {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        if let Some(e) = merge_err {
+            return Err(e);
+        }
+        let flushed = flushed?;
+        debug_assert_eq!(pushed, plan.shard_keys[s]);
+        debug_assert_eq!(flushed, plan.shard_keys[s] * K::WIDTH as u64);
+        Ok(())
+    })
 }
 
 #[cfg(test)]

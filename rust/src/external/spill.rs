@@ -1,10 +1,40 @@
 //! Spill codec and run files — the IO substrate of the external sorter.
 //!
-//! Keys are stored as fixed-width 8-byte little-endian values in their
-//! *native* encoding (`f64::to_le_bytes` / `u64::to_le_bytes`), the same
-//! format `aipso gen --out` writes, so any generated dataset file is a
-//! valid `sort_file` input and outputs round-trip byte-exactly. The
-//! [`ExtKey`] trait bounds the codec to the paper's two key domains.
+//! Keys are stored as fixed-width little-endian values in their *native*
+//! encoding ([`SortKey::to_le_bytes`]), `K::WIDTH` bytes per key — the
+//! same format `aipso gen --out` writes, so any generated dataset file is
+//! a valid `sort_file` input and outputs round-trip byte-exactly. All four
+//! [`SortKey`] domains (`u64`/`f64` at 8 bytes, `u32`/`f32` at 4) flow
+//! through the one codec.
+//!
+//! # Spill format
+//!
+//! Every file this module writes is **self-describing**: a fixed
+//! [`HEADER_LEN`]-byte header precedes the key payload.
+//!
+//! | offset | size | field |
+//! |-------:|-----:|-------|
+//! | 0      | 8    | magic `b"AIPSPILL"` |
+//! | 8      | 2    | format version (little-endian, currently [`FORMAT_VERSION`]) |
+//! | 10     | 1    | key-type tag ([`KeyKind::tag`]: 0=u64, 1=f64, 2=u32, 3=f32) |
+//! | 11     | 1    | key width in bytes (redundant with the tag; cross-checked) |
+//! | 12     | 4    | reserved (zero; future codecs — varint, compressed runs) |
+//! | 16     | 8    | key count (little-endian) |
+//!
+//! Version table:
+//!
+//! * **v0** — legacy headerless files: raw 8-byte little-endian keys,
+//!   nothing else. Still accepted on *read* (the pre-header `gen --out`
+//!   format), for 8-byte key types only; `length % 8 == 0` is the only
+//!   validation available.
+//! * **v1** — the current format above. Readers validate magic, version,
+//!   key-type tag and that the payload holds exactly `count` keys, so a
+//!   truncated or mis-typed file fails loudly instead of decoding garbage.
+//!
+//! Readers distinguish the two by the magic: a v0 file whose first eight
+//! bytes spell `b"AIPSPILL"` (one specific key value) would be
+//! misdetected, which is why v1 exists — new files always carry the
+//! header.
 
 use std::fs::File;
 use std::io::{self, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
@@ -12,42 +42,211 @@ use std::marker::PhantomData;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::key::SortKey;
+use crate::key::{KeyKind, SortKey};
 
-/// Bytes per encoded key.
-pub const KEY_BYTES: usize = 8;
+/// Magic prefix of self-describing (v1+) key files.
+pub const MAGIC: [u8; 8] = *b"AIPSPILL";
 
-/// A key type the external sorter can spill: [`SortKey`] plus a fixed
-/// 8-byte little-endian native encoding (the paper's two domains).
-pub trait ExtKey: SortKey {
-    /// Encode the key as 8 little-endian bytes (its native representation).
-    fn to_le8(self) -> [u8; 8];
-    /// Decode a key from its 8-byte little-endian encoding.
-    fn from_le8(bytes: [u8; 8]) -> Self;
+/// Newest spill-format version this build writes (and the highest it
+/// accepts on read).
+pub const FORMAT_VERSION: u16 = 1;
+
+/// Bytes of header preceding the key payload in v1+ files.
+pub const HEADER_LEN: usize = 24;
+
+/// Byte offset of the key-count field inside the header (patched by
+/// [`RunWriter::finish`] once the count is known).
+const COUNT_OFFSET: u64 = 16;
+
+/// Decoded header of a self-describing key file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpillHeader {
+    /// Format version the file was written with.
+    pub version: u16,
+    /// Key domain of the payload.
+    pub kind: KeyKind,
+    /// Keys in the payload.
+    pub count: u64,
 }
 
-impl ExtKey for u64 {
-    #[inline(always)]
-    fn to_le8(self) -> [u8; 8] {
-        self.to_le_bytes()
+impl SpillHeader {
+    /// Header for a fresh file of `count` keys in the current format.
+    pub fn new(kind: KeyKind, count: u64) -> SpillHeader {
+        SpillHeader {
+            version: FORMAT_VERSION,
+            kind,
+            count,
+        }
     }
 
-    #[inline(always)]
-    fn from_le8(bytes: [u8; 8]) -> Self {
-        u64::from_le_bytes(bytes)
+    /// Serialize into the on-disk layout (see the module docs).
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut b = [0u8; HEADER_LEN];
+        b[..8].copy_from_slice(&MAGIC);
+        b[8..10].copy_from_slice(&self.version.to_le_bytes());
+        b[10] = self.kind.tag();
+        b[11] = self.kind.width() as u8;
+        b[16..24].copy_from_slice(&self.count.to_le_bytes());
+        b
+    }
+
+    /// Parse and validate an on-disk header (the caller has already
+    /// matched the magic).
+    fn decode(b: &[u8; HEADER_LEN], path: &Path) -> io::Result<SpillHeader> {
+        debug_assert_eq!(&b[..8], &MAGIC);
+        let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
+        let version = u16::from_le_bytes([b[8], b[9]]);
+        if version == 0 || version > FORMAT_VERSION {
+            return Err(bad(format!(
+                "{}: unsupported spill format version {version} (this build reads v1..=v{FORMAT_VERSION})",
+                path.display()
+            )));
+        }
+        let kind = KeyKind::from_tag(b[10]).ok_or_else(|| {
+            bad(format!(
+                "{}: unknown key-type tag {} in spill header",
+                path.display(),
+                b[10]
+            ))
+        })?;
+        if b[11] as usize != kind.width() {
+            return Err(bad(format!(
+                "{}: header key width {} does not match key type {} (width {})",
+                path.display(),
+                b[11],
+                kind.name(),
+                kind.width()
+            )));
+        }
+        let count = u64::from_le_bytes(b[16..24].try_into().unwrap());
+        Ok(SpillHeader {
+            version,
+            kind,
+            count,
+        })
     }
 }
 
-impl ExtKey for f64 {
-    #[inline(always)]
-    fn to_le8(self) -> [u8; 8] {
-        self.to_le_bytes()
-    }
+/// Read the header of a key file: `Some` for self-describing (v1+) files,
+/// `None` for legacy headerless (v0) files. Malformed headers — matching
+/// magic but bad version/tag/width — are errors, not `None`.
+pub fn read_header(path: &Path) -> io::Result<Option<SpillHeader>> {
+    let mut file = File::open(path)?;
+    parse_header(&mut file, path)
+}
 
-    #[inline(always)]
-    fn from_le8(bytes: [u8; 8]) -> Self {
-        f64::from_le_bytes(bytes)
+/// Header probe over an open file; leaves the cursor unspecified.
+fn parse_header(file: &mut File, path: &Path) -> io::Result<Option<SpillHeader>> {
+    let len = file.metadata()?.len();
+    if len < MAGIC.len() as u64 {
+        return Ok(None);
     }
+    file.seek(SeekFrom::Start(0))?;
+    let mut probe = [0u8; 8];
+    file.read_exact(&mut probe)?;
+    if probe != MAGIC {
+        return Ok(None);
+    }
+    if len < HEADER_LEN as u64 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!(
+                "{}: truncated spill header ({len} bytes, need {HEADER_LEN})",
+                path.display()
+            ),
+        ));
+    }
+    let mut buf = [0u8; HEADER_LEN];
+    buf[..8].copy_from_slice(&probe);
+    file.read_exact(&mut buf[8..])?;
+    SpillHeader::decode(&buf, path).map(Some)
+}
+
+/// Resolved location of the key payload inside a file.
+#[derive(Debug, Clone, Copy)]
+struct KeyLayout {
+    /// Byte offset of the first key ([`HEADER_LEN`], or 0 for v0 files).
+    data_start: u64,
+    /// Keys in the file.
+    n: u64,
+}
+
+/// Check that a v1 file's byte length holds exactly the header's `count`
+/// keys (shared by [`resolve_layout`] and [`file_key_count`]).
+fn validate_payload(h: &SpillHeader, len: u64, path: &Path) -> io::Result<()> {
+    let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
+    let payload = len - HEADER_LEN as u64;
+    let expect = h.count.checked_mul(h.kind.width() as u64).ok_or_else(|| {
+        bad(format!(
+            "{}: absurd key count {} in spill header",
+            path.display(),
+            h.count
+        ))
+    })?;
+    if payload != expect {
+        return Err(bad(format!(
+            "{}: truncated or oversized payload — header promises {} {} keys \
+             ({expect} bytes) but the file holds {payload}",
+            path.display(),
+            h.count,
+            h.kind.name()
+        )));
+    }
+    Ok(())
+}
+
+/// Validate a file against the expected key domain and locate its
+/// payload. Accepts v1 files of exactly `kind` and headerless v0 files
+/// when `kind` is 8 bytes wide.
+fn resolve_layout(file: &mut File, path: &Path, kind: KeyKind) -> io::Result<KeyLayout> {
+    let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
+    let len = file.metadata()?.len();
+    match parse_header(file, path)? {
+        Some(h) => {
+            if h.kind != kind {
+                return Err(bad(format!(
+                    "{}: file holds {} keys but the sort was invoked for {}",
+                    path.display(),
+                    h.kind.name(),
+                    kind.name()
+                )));
+            }
+            validate_payload(&h, len, path)?;
+            Ok(KeyLayout {
+                data_start: HEADER_LEN as u64,
+                n: h.count,
+            })
+        }
+        None => {
+            if kind.width() != 8 {
+                return Err(bad(format!(
+                    "{}: headerless (v0) key files hold 8-byte keys; {} requires \
+                     a self-describing v1 header (write it with this build's gen)",
+                    path.display(),
+                    kind.name()
+                )));
+            }
+            Ok(KeyLayout {
+                data_start: 0,
+                n: v0_key_count(len, path)?,
+            })
+        }
+    }
+}
+
+/// Validate a headerless (v0) file's length and return its key count —
+/// `length % 8 == 0` is the only check the legacy format affords.
+fn v0_key_count(len: u64, path: &Path) -> io::Result<u64> {
+    if len % 8 != 0 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!(
+                "{}: length {len} is not a multiple of 8 (headerless v0 key file)",
+                path.display()
+            ),
+        ));
+    }
+    Ok(len / 8)
 }
 
 /// A spilled run (or any key file) on disk.
@@ -102,32 +301,22 @@ impl Drop for SpillDir {
     }
 }
 
+/// Keys per decode/encode slab pass (the slab is a fixed byte array so
+/// peak memory stays `O(slab)` regardless of chunk size).
+const SLAB_BYTES: usize = 8192;
+
 /// Buffered streaming reader over a key file.
-pub struct RunReader<K: ExtKey> {
+pub struct RunReader<K: SortKey> {
     r: BufReader<File>,
     remaining: u64,
     _pd: PhantomData<K>,
 }
 
-impl<K: ExtKey> RunReader<K> {
-    /// Open a buffered reader over a whole key file.
+impl<K: SortKey> RunReader<K> {
+    /// Open a buffered reader over a whole key file (validating its
+    /// header, or accepting a headerless v0 file for 8-byte key types).
     pub fn open(path: &Path, io_buffer: usize) -> io::Result<RunReader<K>> {
-        let file = File::open(path)?;
-        let len = file.metadata()?.len();
-        if len % KEY_BYTES as u64 != 0 {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidData,
-                format!(
-                    "{}: length {len} is not a multiple of {KEY_BYTES}",
-                    path.display()
-                ),
-            ));
-        }
-        Ok(RunReader {
-            r: BufReader::with_capacity(io_buffer.max(4096), file),
-            remaining: len / KEY_BYTES as u64,
-            _pd: PhantomData,
-        })
+        Self::open_range(path, 0, u64::MAX, io_buffer)
     }
 
     /// Open a buffered reader over the key range `[start, start + len)` of
@@ -140,20 +329,10 @@ impl<K: ExtKey> RunReader<K> {
         io_buffer: usize,
     ) -> io::Result<RunReader<K>> {
         let mut file = File::open(path)?;
-        let bytes = file.metadata()?.len();
-        if bytes % KEY_BYTES as u64 != 0 {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidData,
-                format!(
-                    "{}: length {bytes} is not a multiple of {KEY_BYTES}",
-                    path.display()
-                ),
-            ));
-        }
-        let n = bytes / KEY_BYTES as u64;
-        let start = start.min(n);
-        let len = len.min(n - start);
-        file.seek(SeekFrom::Start(start * KEY_BYTES as u64))?;
+        let layout = resolve_layout(&mut file, path, K::KIND)?;
+        let start = start.min(layout.n);
+        let len = len.min(layout.n - start);
+        file.seek(SeekFrom::Start(layout.data_start + start * K::WIDTH as u64))?;
         Ok(RunReader {
             r: BufReader::with_capacity(io_buffer.max(4096), file),
             remaining: len,
@@ -172,31 +351,32 @@ impl<K: ExtKey> RunReader<K> {
         if self.remaining == 0 {
             return Ok(None);
         }
-        let mut buf = [0u8; KEY_BYTES];
-        self.r.read_exact(&mut buf)?;
+        let mut buf = K::Bytes::default();
+        self.r.read_exact(buf.as_mut())?;
         self.remaining -= 1;
-        Ok(Some(K::from_le8(buf)))
+        Ok(Some(K::from_le_bytes(buf)))
     }
 
     /// Read up to `max` keys; an empty vec means EOF. Decodes through a
-    /// fixed scratch slab so peak memory stays `max * 8 + O(slab)` — not
-    /// double the chunk, which would break the sorter's byte budget.
+    /// fixed scratch slab so peak memory stays `max * WIDTH + O(slab)` —
+    /// not double the chunk, which would break the sorter's byte budget.
     pub fn read_chunk(&mut self, max: usize) -> io::Result<Vec<K>> {
         let take = (self.remaining.min(max as u64)) as usize;
         if take == 0 {
             return Ok(Vec::new());
         }
+        let per_slab = SLAB_BYTES / K::WIDTH;
         let mut out = Vec::with_capacity(take);
-        let mut slab = [0u8; 1024 * KEY_BYTES];
+        let mut slab = [0u8; SLAB_BYTES];
         let mut left = take;
         while left > 0 {
-            let now = left.min(slab.len() / KEY_BYTES);
-            let bytes = &mut slab[..now * KEY_BYTES];
+            let now = left.min(per_slab);
+            let bytes = &mut slab[..now * K::WIDTH];
             self.r.read_exact(bytes)?;
-            for c in bytes.chunks_exact(KEY_BYTES) {
-                let mut b = [0u8; KEY_BYTES];
-                b.copy_from_slice(c);
-                out.push(K::from_le8(b));
+            for c in bytes.chunks_exact(K::WIDTH) {
+                let mut b = K::Bytes::default();
+                b.as_mut().copy_from_slice(c);
+                out.push(K::from_le_bytes(b));
             }
             left -= now;
         }
@@ -209,29 +389,22 @@ impl<K: ExtKey> RunReader<K> {
 /// and a lower-bound binary search over the key order. The shard planner
 /// uses this to locate shard boundaries in `O(log n)` seeks per run
 /// instead of streaming the whole file.
-pub struct RunIndex<K: ExtKey> {
+pub struct RunIndex<K: SortKey> {
     file: File,
+    data_start: u64,
     n: u64,
     _pd: PhantomData<K>,
 }
 
-impl<K: ExtKey> RunIndex<K> {
+impl<K: SortKey> RunIndex<K> {
     /// Open a key file for random access.
     pub fn open(path: &Path) -> io::Result<RunIndex<K>> {
-        let file = File::open(path)?;
-        let bytes = file.metadata()?.len();
-        if bytes % KEY_BYTES as u64 != 0 {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidData,
-                format!(
-                    "{}: length {bytes} is not a multiple of {KEY_BYTES}",
-                    path.display()
-                ),
-            ));
-        }
+        let mut file = File::open(path)?;
+        let layout = resolve_layout(&mut file, path, K::KIND)?;
         Ok(RunIndex {
             file,
-            n: bytes / KEY_BYTES as u64,
+            data_start: layout.data_start,
+            n: layout.n,
             _pd: PhantomData,
         })
     }
@@ -249,10 +422,11 @@ impl<K: ExtKey> RunIndex<K> {
     /// Read the key at index `idx` with one positioned read.
     pub fn key_at(&mut self, idx: u64) -> io::Result<K> {
         debug_assert!(idx < self.n);
-        self.file.seek(SeekFrom::Start(idx * KEY_BYTES as u64))?;
-        let mut buf = [0u8; KEY_BYTES];
-        self.file.read_exact(&mut buf)?;
-        Ok(K::from_le8(buf))
+        self.file
+            .seek(SeekFrom::Start(self.data_start + idx * K::WIDTH as u64))?;
+        let mut buf = K::Bytes::default();
+        self.file.read_exact(buf.as_mut())?;
+        Ok(K::from_le_bytes(buf))
     }
 
     /// First index whose key's ordered bits are `>= bound_bits`, assuming
@@ -273,20 +447,24 @@ impl<K: ExtKey> RunIndex<K> {
     }
 }
 
-/// Buffered streaming writer producing a [`RunFile`].
-pub struct RunWriter<K: ExtKey> {
+/// Buffered streaming writer producing a [`RunFile`] in the current
+/// (v1, self-describing) spill format.
+pub struct RunWriter<K: SortKey> {
     w: BufWriter<File>,
     path: PathBuf,
     n: u64,
     _pd: PhantomData<K>,
 }
 
-impl<K: ExtKey> RunWriter<K> {
-    /// Create (truncate) the file at `path` and return a writer over it.
+impl<K: SortKey> RunWriter<K> {
+    /// Create (truncate) the file at `path`, write its header with a
+    /// placeholder count, and return a writer over it.
     pub fn create(path: PathBuf, io_buffer: usize) -> io::Result<RunWriter<K>> {
         let file = File::create(&path)?;
+        let mut w = BufWriter::with_capacity(io_buffer.max(4096), file);
+        w.write_all(&SpillHeader::new(K::KIND, 0).encode())?;
         Ok(RunWriter {
-            w: BufWriter::with_capacity(io_buffer.max(4096), file),
+            w,
             path,
             n: 0,
             _pd: PhantomData,
@@ -296,7 +474,7 @@ impl<K: ExtKey> RunWriter<K> {
     /// Append one key.
     #[inline]
     pub fn push(&mut self, key: K) -> io::Result<()> {
-        self.w.write_all(&key.to_le8())?;
+        self.w.write_all(key.to_le_bytes().as_ref())?;
         self.n += 1;
         Ok(())
     }
@@ -304,11 +482,12 @@ impl<K: ExtKey> RunWriter<K> {
     /// Bulk spill: encodes through a fixed slab and writes in blocks,
     /// mirroring `RunReader::read_chunk` (no per-key `write_all`).
     pub fn write_slice(&mut self, keys: &[K]) -> io::Result<()> {
-        let mut slab = [0u8; 1024 * KEY_BYTES];
-        for block in keys.chunks(1024) {
-            let bytes = &mut slab[..block.len() * KEY_BYTES];
-            for (c, k) in bytes.chunks_exact_mut(KEY_BYTES).zip(block) {
-                c.copy_from_slice(&k.to_le8());
+        let per_slab = SLAB_BYTES / K::WIDTH;
+        let mut slab = [0u8; SLAB_BYTES];
+        for block in keys.chunks(per_slab) {
+            let bytes = &mut slab[..block.len() * K::WIDTH];
+            for (c, k) in bytes.chunks_exact_mut(K::WIDTH).zip(block) {
+                c.copy_from_slice(k.to_le_bytes().as_ref());
             }
             self.w.write_all(bytes)?;
         }
@@ -316,9 +495,13 @@ impl<K: ExtKey> RunWriter<K> {
         Ok(())
     }
 
-    /// Flush and close, returning the finished run's metadata.
+    /// Flush, patch the real key count into the header, and close,
+    /// returning the finished run's metadata.
     pub fn finish(mut self) -> io::Result<RunFile> {
         self.w.flush()?;
+        let file = self.w.get_mut();
+        file.seek(SeekFrom::Start(COUNT_OFFSET))?;
+        file.write_all(&self.n.to_le_bytes())?;
         Ok(RunFile {
             path: self.path,
             n: self.n,
@@ -326,38 +509,48 @@ impl<K: ExtKey> RunWriter<K> {
     }
 }
 
+/// Create a v1 key file of exactly `count` keys whose payload will be
+/// filled by positioned writes (the sharded merges): header up front,
+/// file pre-sized so every shard can open + seek independently.
+pub(crate) fn create_presized<K: SortKey>(path: &Path, count: u64) -> io::Result<()> {
+    let mut f = File::create(path)?;
+    f.write_all(&SpillHeader::new(K::KIND, count).encode())?;
+    f.set_len(HEADER_LEN as u64 + count * K::WIDTH as u64)?;
+    Ok(())
+}
+
 /// Write a whole in-memory slice as a key file.
-pub fn write_keys_file<K: ExtKey>(path: &Path, keys: &[K]) -> io::Result<RunFile> {
+pub fn write_keys_file<K: SortKey>(path: &Path, keys: &[K]) -> io::Result<RunFile> {
     let mut w = RunWriter::create(path.to_path_buf(), 1 << 16)?;
     w.write_slice(keys)?;
     w.finish()
 }
 
 /// Load a whole key file into memory (tests / small files only).
-pub fn read_keys_file<K: ExtKey>(path: &Path) -> io::Result<Vec<K>> {
+pub fn read_keys_file<K: SortKey>(path: &Path) -> io::Result<Vec<K>> {
     let mut r = RunReader::<K>::open(path, 1 << 16)?;
     let n = r.remaining() as usize;
     r.read_chunk(n)
 }
 
-/// Number of keys in a key file (from its byte length).
+/// Number of keys in a key file: the header's count for self-describing
+/// files (validated against the payload length), the byte length over 8
+/// for headerless v0 files.
 pub fn file_key_count(path: &Path) -> io::Result<u64> {
-    let len = std::fs::metadata(path)?.len();
-    if len % KEY_BYTES as u64 != 0 {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidData,
-            format!(
-                "{}: length {len} is not a multiple of {KEY_BYTES}",
-                path.display()
-            ),
-        ));
+    let mut file = File::open(path)?;
+    let len = file.metadata()?.len();
+    match parse_header(&mut file, path)? {
+        Some(h) => {
+            validate_payload(&h, len, path)?;
+            Ok(h.count)
+        }
+        None => v0_key_count(len, path),
     }
-    Ok(len / KEY_BYTES as u64)
 }
 
 /// Stream-verify that a key file is nondecreasing under the key's total
 /// order, in O(io_buffer) memory.
-pub fn verify_sorted_file<K: ExtKey>(path: &Path, io_buffer: usize) -> io::Result<bool> {
+pub fn verify_sorted_file<K: SortKey>(path: &Path, io_buffer: usize) -> io::Result<bool> {
     let mut r = RunReader::<K>::open(path, io_buffer)?;
     let mut prev: Option<u64> = None;
     while let Some(k) = r.next()? {
@@ -396,6 +589,122 @@ mod tests {
         let a: Vec<u64> = keys.iter().map(|x| x.to_bits()).collect();
         let b: Vec<u64> = back.iter().map(|x| x.to_bits()).collect();
         assert_eq!(a, b, "bit-exact reload");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn roundtrip_u32_and_f32_at_half_the_bytes() {
+        let p32 = tmp("rt-u32.bin");
+        let keys32: Vec<u32> = vec![0, 1, u32::MAX, 42, 7];
+        write_keys_file(&p32, &keys32).unwrap();
+        assert_eq!(file_key_count(&p32).unwrap(), 5);
+        assert_eq!(read_keys_file::<u32>(&p32).unwrap(), keys32);
+
+        let p64 = tmp("rt-u64-vs-u32.bin");
+        let keys64: Vec<u64> = keys32.iter().map(|&x| x as u64).collect();
+        write_keys_file(&p64, &keys64).unwrap();
+        let payload32 = std::fs::metadata(&p32).unwrap().len() - HEADER_LEN as u64;
+        let payload64 = std::fs::metadata(&p64).unwrap().len() - HEADER_LEN as u64;
+        assert_eq!(payload32 * 2, payload64, "4-byte keys halve the payload");
+        let _ = std::fs::remove_file(&p32);
+        let _ = std::fs::remove_file(&p64);
+
+        let p = tmp("rt-f32.bin");
+        let keys: Vec<f32> = vec![-1.5, 0.0, -0.0, 1e30, 1e-30];
+        write_keys_file(&p, &keys).unwrap();
+        let back = read_keys_file::<f32>(&p).unwrap();
+        let a: Vec<u32> = keys.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "bit-exact reload");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn header_roundtrips_and_reports() {
+        let p = tmp("hdr.bin");
+        write_keys_file::<u32>(&p, &[1, 2, 3]).unwrap();
+        let h = read_header(&p).unwrap().expect("v1 file has a header");
+        assert_eq!(
+            h,
+            SpillHeader {
+                version: FORMAT_VERSION,
+                kind: KeyKind::U32,
+                count: 3
+            }
+        );
+        // encode/decode are inverses
+        let enc = h.encode();
+        assert_eq!(SpillHeader::decode(&enc, &p).unwrap(), h);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn legacy_v0_files_read_as_8_byte_keys_only() {
+        let p = tmp("v0.bin");
+        let keys: Vec<u64> = vec![9, 1, 5];
+        let raw: Vec<u8> = keys.iter().flat_map(|k| k.to_le_bytes()).collect();
+        std::fs::write(&p, &raw).unwrap();
+        assert_eq!(read_header(&p).unwrap(), None, "no header on v0 files");
+        assert_eq!(file_key_count(&p).unwrap(), 3);
+        assert_eq!(read_keys_file::<u64>(&p).unwrap(), keys);
+        // but a 4-byte type cannot claim a headerless file
+        let err = read_keys_file::<u32>(&p).unwrap_err();
+        assert!(err.to_string().contains("headerless"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn mismatched_key_type_is_rejected() {
+        let p = tmp("mismatch.bin");
+        write_keys_file::<f32>(&p, &[1.0, 2.0]).unwrap();
+        for (err, want) in [
+            (read_keys_file::<u32>(&p).unwrap_err(), "f32"),
+            (read_keys_file::<f64>(&p).unwrap_err(), "f32"),
+        ] {
+            assert!(err.to_string().contains(want), "{err}");
+            assert!(err.to_string().contains("invoked for"), "{err}");
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn truncated_and_corrupt_headers_fail_loudly() {
+        let p = tmp("bad-hdr.bin");
+
+        // payload shorter than the header's count
+        let mut bytes = SpillHeader::new(KeyKind::U64, 4).encode().to_vec();
+        bytes.extend_from_slice(&7u64.to_le_bytes()); // only 1 of 4 keys
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_keys_file::<u64>(&p).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        assert!(file_key_count(&p).is_err());
+
+        // magic but the header itself is cut off
+        std::fs::write(&p, &MAGIC[..]).unwrap();
+        let err = read_keys_file::<u64>(&p).unwrap_err();
+        assert!(err.to_string().contains("truncated spill header"), "{err}");
+
+        // future version
+        let mut h = SpillHeader::new(KeyKind::U64, 0).encode();
+        h[8..10].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        std::fs::write(&p, h).unwrap();
+        let err = read_keys_file::<u64>(&p).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+
+        // unknown key-type tag
+        let mut h = SpillHeader::new(KeyKind::U64, 0).encode();
+        h[10] = 9;
+        std::fs::write(&p, h).unwrap();
+        let err = read_keys_file::<u64>(&p).unwrap_err();
+        assert!(err.to_string().contains("key-type tag"), "{err}");
+
+        // width byte contradicting the tag
+        let mut h = SpillHeader::new(KeyKind::U32, 0).encode();
+        h[11] = 8;
+        std::fs::write(&p, h).unwrap();
+        let err = read_keys_file::<u32>(&p).unwrap_err();
+        assert!(err.to_string().contains("width"), "{err}");
+
         let _ = std::fs::remove_file(&p);
     }
 
@@ -482,6 +791,21 @@ mod tests {
     }
 
     #[test]
+    fn range_reads_and_index_work_on_4_byte_keys() {
+        let p = tmp("range-u32.bin");
+        let keys: Vec<u32> = (0..500).map(|i| i * 2).collect();
+        write_keys_file(&p, &keys).unwrap();
+        let mut r = RunReader::<u32>::open_range(&p, 10, 3, 4096).unwrap();
+        assert_eq!(r.read_chunk(10).unwrap(), vec![20, 22, 24]);
+        let mut idx = RunIndex::<u32>::open(&p).unwrap();
+        assert_eq!(idx.len(), 500);
+        assert_eq!(idx.key_at(499).unwrap(), 998);
+        assert_eq!(idx.lower_bound(40u32.to_bits_ordered()).unwrap(), 20);
+        assert_eq!(idx.lower_bound(u32::MAX as u64).unwrap(), 500);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
     fn empty_run_index_is_harmless() {
         // A zero-key run (legal: an empty input still truncates an output
         // file, and sharding may probe any run) must index without error:
@@ -500,7 +824,7 @@ mod tests {
     }
 
     #[test]
-    fn odd_length_file_rejected() {
+    fn odd_length_headerless_file_rejected() {
         let p = tmp("odd.bin");
         std::fs::write(&p, [0u8; 7]).unwrap();
         assert!(RunReader::<u64>::open(&p, 4096).is_err());

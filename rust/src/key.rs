@@ -9,9 +9,84 @@
 //!   engines (this is the "key extractor that maps floats to integers" the
 //!   paper passes to IPS²Ra);
 //! * a **model embedding** ([`SortKey::to_f64`]) used by the learned
-//!   engines to feed the RMI.
+//!   engines to feed the RMI;
+//! * a **fixed-width little-endian codec** ([`SortKey::to_le_bytes`] /
+//!   [`SortKey::from_le_bytes`], [`SortKey::WIDTH`]) — the on-disk
+//!   encoding the external sorter spills and merges through, plus the
+//!   [`KeyKind`] tag stored in the self-describing spill-file header.
 
 use std::fmt::Debug;
+
+/// The four key domains the pipeline understands, as recorded in the
+/// spill-file header's key-type tag (see [`crate::external::spill`]).
+///
+/// The paper's two domains are `f64` (synthetic datasets) and `u64`
+/// (real-world datasets); the 32-bit variants open the narrower workloads
+/// of PCF Learned Sort and the duplicate-heavy integer streams of
+/// "Defeating duplicates" at half the spill bytes per key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KeyKind {
+    /// 64-bit unsigned integers.
+    U64,
+    /// 64-bit IEEE-754 doubles.
+    F64,
+    /// 32-bit unsigned integers.
+    U32,
+    /// 32-bit IEEE-754 floats.
+    F32,
+}
+
+impl KeyKind {
+    /// Tag byte stored in the spill header (stable across versions).
+    pub const fn tag(self) -> u8 {
+        match self {
+            KeyKind::U64 => 0,
+            KeyKind::F64 => 1,
+            KeyKind::U32 => 2,
+            KeyKind::F32 => 3,
+        }
+    }
+
+    /// Encoded bytes per key of this kind.
+    pub const fn width(self) -> usize {
+        match self {
+            KeyKind::U64 | KeyKind::F64 => 8,
+            KeyKind::U32 | KeyKind::F32 => 4,
+        }
+    }
+
+    /// CLI / header-error spelling of the kind.
+    pub const fn name(self) -> &'static str {
+        match self {
+            KeyKind::U64 => "u64",
+            KeyKind::F64 => "f64",
+            KeyKind::U32 => "u32",
+            KeyKind::F32 => "f32",
+        }
+    }
+
+    /// Inverse of [`KeyKind::tag`]; `None` for tags no version defines.
+    pub const fn from_tag(tag: u8) -> Option<KeyKind> {
+        match tag {
+            0 => Some(KeyKind::U64),
+            1 => Some(KeyKind::F64),
+            2 => Some(KeyKind::U32),
+            3 => Some(KeyKind::F32),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI spelling (`u64`, `f64`, `u32`, `f32`).
+    pub fn parse(s: &str) -> Option<KeyKind> {
+        match s {
+            "u64" => Some(KeyKind::U64),
+            "f64" => Some(KeyKind::F64),
+            "u32" => Some(KeyKind::U32),
+            "f32" => Some(KeyKind::F32),
+            _ => None,
+        }
+    }
+}
 
 /// A sortable key: `u64`, `u32`, `f64` or `f32`.
 pub trait SortKey: Copy + Send + Sync + Debug + 'static {
@@ -28,6 +103,43 @@ pub trait SortKey: Copy + Send + Sync + Debug + 'static {
     /// Number of significant bytes in [`SortKey::to_bits_ordered`]
     /// (8 for 64-bit keys, 4 for 32-bit keys) — the radix digit count.
     const RADIX_BYTES: usize;
+
+    /// Which of the four key domains this is — the tag the external
+    /// sorter's self-describing spill header records, so a file sorted as
+    /// one type can never be silently decoded as another.
+    const KIND: KeyKind;
+
+    /// Bytes per key in the fixed-width little-endian spill encoding
+    /// (always `size_of::<Self>()` for the four supported domains).
+    const WIDTH: usize;
+
+    /// The encoded form: the `[u8; WIDTH]` array [`SortKey::to_le_bytes`]
+    /// produces. An associated type because array lengths cannot depend on
+    /// an associated const on stable Rust.
+    type Bytes: AsRef<[u8]> + AsMut<[u8]> + Copy + Default + Send + Sync + Debug;
+
+    /// Encode the key as `WIDTH` little-endian bytes in its *native*
+    /// representation (`u64::to_le_bytes`-style, not the ordered bits) —
+    /// the spill/`gen --out` on-disk format, chosen so dataset files and
+    /// sorted outputs round-trip byte-exactly.
+    fn to_le_bytes(self) -> Self::Bytes;
+
+    /// Decode a key from its fixed-width little-endian encoding.
+    fn from_le_bytes(bytes: Self::Bytes) -> Self;
+
+    /// Largest value [`SortKey::to_bits_ordered`] can produce for this
+    /// domain (`u64::MAX` for 64-bit keys, `u32::MAX` for 32-bit keys).
+    /// Binary searches over ordered-bits space must clamp to this: beyond
+    /// it, [`SortKey::from_bits_ordered`] truncates and the order mapping
+    /// is no longer monotone.
+    #[inline(always)]
+    fn max_ordered_bits() -> u64 {
+        if Self::RADIX_BYTES >= 8 {
+            u64::MAX
+        } else {
+            (1u64 << (8 * Self::RADIX_BYTES)) - 1
+        }
+    }
 
     /// `self < other` under the key's total order.
     #[inline(always)]
@@ -79,6 +191,9 @@ pub trait SortKey: Copy + Send + Sync + Debug + 'static {
 
 impl SortKey for u64 {
     const RADIX_BYTES: usize = 8;
+    const KIND: KeyKind = KeyKind::U64;
+    const WIDTH: usize = 8;
+    type Bytes = [u8; 8];
 
     #[inline(always)]
     fn to_bits_ordered(self) -> u64 {
@@ -94,10 +209,23 @@ impl SortKey for u64 {
     fn from_bits_ordered(bits: u64) -> Self {
         bits
     }
+
+    #[inline(always)]
+    fn to_le_bytes(self) -> [u8; 8] {
+        u64::to_le_bytes(self)
+    }
+
+    #[inline(always)]
+    fn from_le_bytes(bytes: [u8; 8]) -> Self {
+        u64::from_le_bytes(bytes)
+    }
 }
 
 impl SortKey for u32 {
     const RADIX_BYTES: usize = 4;
+    const KIND: KeyKind = KeyKind::U32;
+    const WIDTH: usize = 4;
+    type Bytes = [u8; 4];
 
     #[inline(always)]
     fn to_bits_ordered(self) -> u64 {
@@ -113,10 +241,23 @@ impl SortKey for u32 {
     fn from_bits_ordered(bits: u64) -> Self {
         bits as u32
     }
+
+    #[inline(always)]
+    fn to_le_bytes(self) -> [u8; 4] {
+        u32::to_le_bytes(self)
+    }
+
+    #[inline(always)]
+    fn from_le_bytes(bytes: [u8; 4]) -> Self {
+        u32::from_le_bytes(bytes)
+    }
 }
 
 impl SortKey for f64 {
     const RADIX_BYTES: usize = 8;
+    const KIND: KeyKind = KeyKind::F64;
+    const WIDTH: usize = 8;
+    type Bytes = [u8; 8];
 
     /// Standard IEEE-754 total-order flip: negative floats reverse, the
     /// sign bit becomes the top of the unsigned range.
@@ -144,10 +285,23 @@ impl SortKey for f64 {
         };
         f64::from_bits(b)
     }
+
+    #[inline(always)]
+    fn to_le_bytes(self) -> [u8; 8] {
+        f64::to_le_bytes(self)
+    }
+
+    #[inline(always)]
+    fn from_le_bytes(bytes: [u8; 8]) -> Self {
+        f64::from_le_bytes(bytes)
+    }
 }
 
 impl SortKey for f32 {
     const RADIX_BYTES: usize = 4;
+    const KIND: KeyKind = KeyKind::F32;
+    const WIDTH: usize = 4;
+    type Bytes = [u8; 4];
 
     #[inline(always)]
     fn to_bits_ordered(self) -> u64 {
@@ -170,6 +324,16 @@ impl SortKey for f32 {
             !bits
         };
         f32::from_bits(b)
+    }
+
+    #[inline(always)]
+    fn to_le_bytes(self) -> [u8; 4] {
+        f32::to_le_bytes(self)
+    }
+
+    #[inline(always)]
+    fn from_le_bytes(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
     }
 }
 
@@ -234,5 +398,49 @@ mod tests {
         assert!(2.5f64.key_eq(2.5));
         assert_eq!(3u64.key_max(5), 5);
         assert_eq!(3u64.key_min(5), 3);
+    }
+
+    #[test]
+    fn le_codec_is_native_and_width_consistent() {
+        assert_eq!(SortKey::to_le_bytes(0x0102_0304u32), [4, 3, 2, 1]);
+        assert_eq!(SortKey::to_le_bytes(1.5f64), 1.5f64.to_le_bytes());
+        assert_eq!(<u32 as SortKey>::WIDTH, 4);
+        assert_eq!(<f32 as SortKey>::WIDTH, 4);
+        assert_eq!(<u64 as SortKey>::WIDTH, 8);
+        assert_eq!(<f64 as SortKey>::WIDTH, 8);
+        assert_eq!(<u32 as SortKey>::WIDTH, std::mem::size_of::<u32>());
+        assert_eq!(u64::from_le_bytes(SortKey::to_le_bytes(77u64)), 77);
+        let x = -3.25f32;
+        assert_eq!(<f32 as SortKey>::from_le_bytes(SortKey::to_le_bytes(x)), x);
+    }
+
+    #[test]
+    fn kind_tags_roundtrip() {
+        for kind in [KeyKind::U64, KeyKind::F64, KeyKind::U32, KeyKind::F32] {
+            assert_eq!(KeyKind::from_tag(kind.tag()), Some(kind));
+            assert_eq!(KeyKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(KeyKind::from_tag(250), None);
+        assert_eq!(KeyKind::parse("i64"), None);
+        assert_eq!(KeyKind::U32.width(), 4);
+        assert_eq!(KeyKind::F64.width(), 8);
+        assert_eq!(<u32 as SortKey>::KIND, KeyKind::U32);
+        assert_eq!(<f64 as SortKey>::KIND, KeyKind::F64);
+    }
+
+    #[test]
+    fn max_ordered_bits_caps_narrow_domains() {
+        assert_eq!(u64::max_ordered_bits(), u64::MAX);
+        assert_eq!(f64::max_ordered_bits(), u64::MAX);
+        assert_eq!(u32::max_ordered_bits(), u32::MAX as u64);
+        assert_eq!(f32::max_ordered_bits(), u32::MAX as u64);
+        // the cap really is the top of the ordered range (for floats the
+        // IEEE total order puts positive NaN above +inf)
+        assert_eq!(u32::from_bits_ordered(u32::max_ordered_bits()), u32::MAX);
+        assert!(f32::from_bits_ordered(f32::max_ordered_bits()).is_nan());
+        assert!(
+            f32::INFINITY.to_bits_ordered() <= f32::max_ordered_bits(),
+            "every representable key must stay inside the cap"
+        );
     }
 }

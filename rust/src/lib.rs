@@ -76,7 +76,7 @@ pub mod sample_sort;
 pub mod scheduler;
 pub mod util;
 
-pub use key::SortKey;
+pub use key::{KeyKind, SortKey};
 
 /// Every sorting engine in the paper's evaluation, by paper name.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -18,6 +18,7 @@ use aipso::bench_harness::{self, BenchConfig};
 use aipso::coordinator::{Coordinator, JobSpec, KeyBuf};
 use aipso::datasets::{self, FigureGroup, KeyType};
 use aipso::external::{self, ExternalConfig, RetrainPolicy, RunGen};
+use aipso::key::{KeyKind, SortKey};
 use aipso::rmi::model::{Rmi, RmiConfig};
 use aipso::runtime::RmiRuntime;
 use aipso::util::rng::Xoshiro256pp;
@@ -59,14 +60,17 @@ USAGE: aipso <command> [--key value ...]
 
 COMMANDS
   gen             --dataset NAME [--n N] [--seed S] [--out FILE] [--stream]
+                  [--width 4|8]  (4 narrows to f32/u32 at half the bytes;
+                  files carry a self-describing header)
   sort            --dataset NAME --engine ENGINE [--n N] [--threads T] [--seq]
-  extsort         --input FILE --output FILE --key f64|u64 [--budget-mb MB]
-                  [--fanout K] [--threads T] [--shards P] [--ips4o-runs]
-                  [--retrain N|off] [--max-retrains M]
-                  (or --dataset NAME --n N to synthesize --input first;
-                   --threads 1 = serial reference pipeline; --retrain N
-                   retrains the model after N consecutive drifted chunks,
-                   'off' pins the permanent-fallback behaviour)
+  extsort         --input FILE --output FILE [--key f64|u64|f32|u32]
+                  [--budget-mb MB] [--fanout K] [--threads T] [--shards P]
+                  [--ips4o-runs] [--retrain N|off] [--max-retrains M]
+                  (--key is inferred from the input's header when omitted;
+                   or --dataset NAME --n N [--width 4|8] to synthesize
+                   --input first; --threads 1 = serial reference pipeline;
+                   --retrain N retrains the model after N consecutive
+                   drifted chunks, 'off' pins the permanent fallback)
   bench           [--figure f1|f2|f3|f4|f5|f6|all] [--n N] [--reps R] [--threads T]
   pivot-quality   [--n N]
   phases          --dataset NAME --engine ENGINE [--n N] [--threads T]
@@ -121,6 +125,11 @@ fn cmd_gen(opts: &BTreeMap<String, String>) -> i32 {
     };
     let n = opt_usize(opts, "n", 1_000_000);
     let seed = opt_u64(opts, "seed", 42);
+    let width = opt_usize(opts, "width", 8);
+    if width != 4 && width != 8 {
+        eprintln!("gen: --width must be 4 or 8");
+        return 2;
+    }
     let Some(spec) = datasets::spec(name) else {
         eprintln!("unknown dataset {name}");
         return 2;
@@ -132,15 +141,12 @@ fn cmd_gen(opts: &BTreeMap<String, String>) -> i32 {
             return 2;
         };
         let chunk = opt_usize(opts, "chunk", 1 << 20);
-        match datasets::write_dataset_file(spec.name, n, seed, out.as_ref(), chunk) {
-            Ok(kt) => {
+        match datasets::write_dataset_file_width(spec.name, n, seed, out.as_ref(), chunk, width) {
+            Ok(kind) => {
                 println!(
-                    "wrote {out} ({n} {} keys, {} bytes, chunked)",
-                    match kt {
-                        KeyType::F64 => "f64",
-                        KeyType::U64 => "u64",
-                    },
-                    n * 8,
+                    "wrote {out} ({n} {} keys, {} payload bytes + header, chunked)",
+                    kind.name(),
+                    n * kind.width(),
                 );
                 return 0;
             }
@@ -150,27 +156,61 @@ fn cmd_gen(opts: &BTreeMap<String, String>) -> i32 {
             }
         }
     }
-    let bytes: Vec<u8> = match spec.key_type {
+    // In-memory generation: narrow first when --width 4 so the printed
+    // stats describe the keys actually written, then (optionally) write
+    // the file through the spill codec.
+    let written = match spec.key_type {
         KeyType::F64 => {
             let v = datasets::generate_f64(spec.name, n, seed).unwrap();
-            print_f64_stats(spec.name, &v);
-            v.iter().flat_map(|x| x.to_le_bytes()).collect()
+            if width == 8 {
+                print_f64_stats(spec.name, &v);
+                opts.get("out").map(|out| write_gen_file::<f64>(out, &v))
+            } else {
+                let narrow: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+                let f: Vec<f64> = narrow.iter().map(|&x| x as f64).collect();
+                print_f64_stats(spec.name, &f);
+                opts.get("out").map(|out| write_gen_file::<f32>(out, &narrow))
+            }
         }
         KeyType::U64 => {
             let v = datasets::generate_u64(spec.name, n, seed).unwrap();
-            let f: Vec<f64> = v.iter().map(|&x| x as f64).collect();
-            print_f64_stats(spec.name, &f);
-            v.iter().flat_map(|x| x.to_le_bytes()).collect()
+            if width == 8 {
+                let f: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+                print_f64_stats(spec.name, &f);
+                opts.get("out").map(|out| write_gen_file::<u64>(out, &v))
+            } else {
+                let narrow: Vec<u32> = v.iter().map(|&x| x as u32).collect();
+                let f: Vec<f64> = narrow.iter().map(|&x| x as f64).collect();
+                print_f64_stats(spec.name, &f);
+                opts.get("out").map(|out| write_gen_file::<u32>(out, &narrow))
+            }
         }
     };
-    if let Some(out) = opts.get("out") {
-        if let Err(e) = std::fs::write(out, &bytes) {
-            eprintln!("write {out}: {e}");
-            return 1;
-        }
-        println!("wrote {} ({} keys, {} bytes)", out, n, bytes.len());
+    match written {
+        Some(Err(code)) => code,
+        _ => 0,
     }
-    0
+}
+
+/// Write a generated key slice as a self-describing key file; returns the
+/// process exit code on failure.
+fn write_gen_file<K: SortKey>(out: &str, keys: &[K]) -> Result<(), i32> {
+    match external::write_keys_file::<K>(std::path::Path::new(out), keys) {
+        Ok(run) => {
+            println!(
+                "wrote {} ({} {} keys, {} payload bytes + header)",
+                out,
+                run.n,
+                K::KIND.name(),
+                run.n * K::WIDTH as u64,
+            );
+            Ok(())
+        }
+        Err(e) => {
+            eprintln!("write {out}: {e}");
+            Err(1)
+        }
+    }
 }
 
 fn print_f64_stats(name: &str, v: &[f64]) {
@@ -283,59 +323,67 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
     }
     cfg.retrain.max_retrains = opt_usize(opts, "max-retrains", cfg.retrain.max_retrains);
 
-    // Optionally synthesize the input file from a named dataset first.
-    let key_type = if let Some(dataset) = opts.get("dataset") {
+    // Resolve the key domain: synthesize from a dataset, take --key, or
+    // read it off the input's self-describing header.
+    let kind: KeyKind = if let Some(dataset) = opts.get("dataset") {
         let n = opt_usize(opts, "n", 8_000_000);
         let seed = opt_u64(opts, "seed", 42);
-        match datasets::write_dataset_file(dataset, n, seed, input.as_ref(), 1 << 20) {
-            Ok(kt) => {
-                println!("synthesized {input}: {dataset}, {n} keys");
-                kt
+        let width = opt_usize(opts, "width", 8);
+        match datasets::write_dataset_file_width(dataset, n, seed, input.as_ref(), 1 << 20, width)
+        {
+            Ok(kind) => {
+                println!("synthesized {input}: {dataset}, {n} {} keys", kind.name());
+                kind
             }
             Err(e) => {
                 eprintln!("extsort: {e}");
                 return 2;
             }
         }
-    } else {
-        match opts.get("key").map(|s| s.as_str()) {
-            Some("f64") => KeyType::F64,
-            Some("u64") => KeyType::U64,
-            _ => {
-                eprintln!("extsort: --key f64|u64 required (or --dataset NAME)");
+    } else if let Some(k) = opts.get("key") {
+        match KeyKind::parse(k) {
+            Some(kind) => kind,
+            None => {
+                eprintln!("extsort: unknown --key {k} (use f64|u64|f32|u32)");
                 return 2;
+            }
+        }
+    } else {
+        match external::read_header(input.as_ref()) {
+            Ok(Some(h)) => {
+                println!("{input}: {} keys per its spill header", h.kind.name());
+                h.kind
+            }
+            Ok(None) => {
+                eprintln!(
+                    "extsort: {input} is a headerless (v0) file — pass --key f64|u64"
+                );
+                return 2;
+            }
+            Err(e) => {
+                eprintln!("extsort: {e}");
+                return 1;
             }
         }
     };
 
-    let t0 = std::time::Instant::now();
-    let result = match key_type {
-        KeyType::F64 => external::sort_file::<f64>(input.as_ref(), output.as_ref(), &cfg),
-        KeyType::U64 => external::sort_file::<u64>(input.as_ref(), output.as_ref(), &cfg),
-    };
-    let report = match result {
+    let result = external::sort_and_verify(kind, input.as_ref(), output.as_ref(), &cfg);
+    let (report, secs, ok) = match result {
         Ok(r) => r,
         Err(e) => {
             eprintln!("extsort failed: {e}");
             return 1;
         }
     };
-    let secs = t0.elapsed().as_secs_f64();
-    let ok = match key_type {
-        KeyType::F64 => {
-            external::verify_sorted_file::<f64>(output.as_ref(), cfg.effective_io_buffer())
-        }
-        KeyType::U64 => {
-            external::verify_sorted_file::<u64>(output.as_ref(), cfg.effective_io_buffer())
-        }
-    }
-    .unwrap_or(false);
     println!(
-        "extsort {} -> {}: {} keys in {} — {} [{}]\n  budget {} MiB, {} runs \
-         ({} learned, {} fallback), rmi trained: {}, retrains: {}, \
-         merge passes: {}, final-merge shards: {}",
+        "extsort {} -> {} ({} keys, {} B/key): {} keys in {} — {} [{}]\n  \
+         budget {} MiB, {} runs ({} learned, {} fallback), rmi trained: {}, \
+         retrains: {}, merge passes: {} ({} sharded groups), \
+         final-merge shards: {}",
         input,
         output,
+        kind.name(),
+        kind.width(),
         fmt::keys(report.keys as usize),
         fmt::secs(secs),
         fmt::rate(report.keys as f64 / secs.max(1e-12)),
@@ -347,6 +395,7 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
         report.rmi_trained,
         report.retrains,
         report.merge_passes,
+        report.sharded_groups,
         if report.merge_shards == 0 {
             "serial".to_string()
         } else {

@@ -146,7 +146,10 @@ pub fn quantile_key_weighted<K: SortKey>(models: &[(&Rmi, f64)], q: f64) -> K {
             models.iter().map(|(m, _)| m.predict(x)).sum::<f64>() / n
         }
     };
-    let (mut lo, mut hi) = (0u64, u64::MAX);
+    // Clamp the search to the domain's ordered range: past
+    // `max_ordered_bits` the bits→key mapping of 32-bit domains truncates
+    // and the predicate stops being monotone.
+    let (mut lo, mut hi) = (0u64, K::max_ordered_bits());
     while lo < hi {
         let mid = lo + (hi - lo) / 2;
         let x = K::from_bits_ordered(mid).to_f64();

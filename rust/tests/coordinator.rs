@@ -86,8 +86,8 @@ fn fixed_engine_jobs_and_throughput_reporting() {
 #[test]
 fn external_job_end_to_end() {
     use aipso::coordinator::ExternalJob;
-    use aipso::datasets::KeyType;
     use aipso::external::{read_keys_file, ExternalConfig};
+    use aipso::KeyKind;
 
     let dir = std::env::temp_dir();
     let input = dir.join(format!("aipso-it-coord-ext-{}.bin", std::process::id()));
@@ -103,7 +103,7 @@ fn external_job_end_to_end() {
         ExternalJob {
             input: input.clone(),
             output: output.clone(),
-            key_type: KeyType::F64,
+            key_kind: KeyKind::F64,
             config: ExternalConfig::with_budget(n / 4 * 8),
         },
     ));

@@ -13,10 +13,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use aipso::datasets;
 use aipso::external::{
-    self, read_keys_file, write_keys_file, ExternalConfig, RetrainPolicy, RunGen,
+    self, read_header, read_keys_file, write_keys_file, ExternalConfig, RetrainPolicy, RunGen,
+    SpillHeader, HEADER_LEN,
 };
 use aipso::util::proptest::{check_sized, PropConfig};
 use aipso::util::rng::{Xoshiro256pp, Zipf};
+use aipso::{KeyKind, SortKey};
 
 fn tmp(tag: &str) -> PathBuf {
     static SEQ: AtomicU64 = AtomicU64::new(0);
@@ -465,6 +467,243 @@ fn parallel_matches_serial_bytes_on_all_14_distributions() {
         let _ = std::fs::remove_file(&serial_out);
         let _ = std::fs::remove_file(&parallel_out);
     }
+}
+
+/// Sort the key file at `input` as `K` and require byte-equality (under
+/// the key's ordered bits) with `std`'s total-order sort of the same
+/// keys, reloaded from the file itself.
+fn assert_width_sort_matches_std<K: SortKey>(
+    input: &PathBuf,
+    output: &PathBuf,
+    cfg: &ExternalConfig,
+    label: &str,
+) {
+    let keys = read_keys_file::<K>(input).unwrap();
+    let report = external::sort_file::<K>(input, output, cfg).unwrap();
+    assert_eq!(report.keys as usize, keys.len(), "{label}");
+    let got = read_keys_file::<K>(output).unwrap();
+    let mut want = keys;
+    want.sort_unstable_by(|a, b| a.to_bits_ordered().cmp(&b.to_bits_ordered()));
+    let gb: Vec<u64> = got.iter().map(|k| k.to_bits_ordered()).collect();
+    let wb: Vec<u64> = want.iter().map(|k| k.to_bits_ordered()).collect();
+    assert_eq!(gb, wb, "{label}: external sort differs from std sort");
+}
+
+#[test]
+fn acceptance_u32_f32_sort_all_14_distributions_byte_equal_to_std() {
+    // The PR's acceptance bar: every paper distribution, narrowed to 4
+    // bytes by `gen --width 4`, sorts through the external pipeline with
+    // byte-equality to the in-memory std sort of the same keys.
+    let n = 40_000;
+    for spec in datasets::ALL.iter() {
+        let input = tmp(&format!("w4-{}", spec.name));
+        let output = tmp(&format!("w4-{}-out", spec.name));
+        let kind =
+            datasets::write_dataset_file_width(spec.name, n, 77, &input, 1 << 14, 4).unwrap();
+        // budget in *bytes*: 4-byte keys make these 8192-key pipelined
+        // chunks, which clear min_learned_chunk where the data allows
+        let cfg = ExternalConfig {
+            memory_budget: 3 * 8192 * 4,
+            io_buffer: 1 << 12,
+            threads: 2,
+            min_shard_keys: 1024,
+            ..ExternalConfig::default()
+        };
+        let header = read_header(&input).unwrap().expect("gen writes v1 files");
+        assert_eq!(header.kind, kind, "{}", spec.name);
+        assert_eq!(header.count, n as u64, "{}", spec.name);
+        match kind {
+            KeyKind::F32 => assert_width_sort_matches_std::<f32>(&input, &output, &cfg, spec.name),
+            KeyKind::U32 => assert_width_sort_matches_std::<u32>(&input, &output, &cfg, spec.name),
+            other => panic!("{}: unexpected kind {other:?}", spec.name),
+        }
+        let _ = std::fs::remove_file(&input);
+        let _ = std::fs::remove_file(&output);
+    }
+}
+
+#[test]
+fn four_byte_keys_halve_spill_bytes_and_run_count() {
+    // Equal key counts under the same byte budget: the 4-byte stream
+    // spills half the bytes per key, so chunks hold twice the keys and
+    // half as many runs land on disk; outputs carry exactly n*4 vs n*8
+    // payload bytes behind identical headers.
+    let mut rng = Xoshiro256pp::new(0x4B1D);
+    let n = 65_536usize;
+    let keys64: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+    let keys32: Vec<u32> = keys64.iter().map(|&x| (x >> 32) as u32).collect();
+    let cfg = ExternalConfig {
+        memory_budget: 8192 * 8,
+        io_buffer: 1 << 12,
+        threads: 1,
+        ..ExternalConfig::default()
+    };
+    let out64 = tmp("width-out64");
+    let out32 = tmp("width-out32");
+    let r64 = external::sort_iter(keys64.iter().copied(), &out64, &cfg).unwrap();
+    let r32 = external::sort_iter(keys32.iter().copied(), &out32, &cfg).unwrap();
+    assert_eq!(r64.runs, 8, "8Ki-key chunks over 64Ki u64 keys");
+    assert_eq!(
+        r32.runs, 4,
+        "the same budget holds twice the u32 keys per chunk"
+    );
+    let payload64 = std::fs::metadata(&out64).unwrap().len() - HEADER_LEN as u64;
+    let payload32 = std::fs::metadata(&out32).unwrap().len() - HEADER_LEN as u64;
+    assert_eq!(payload64, (n * 8) as u64);
+    assert_eq!(payload32, (n * 4) as u64);
+    assert_eq!(
+        payload32 * 2,
+        payload64,
+        "equal key counts must occupy half the bytes at width 4"
+    );
+    let mut want = keys32;
+    want.sort_unstable();
+    assert_eq!(read_keys_file::<u32>(&out32).unwrap(), want);
+    let _ = std::fs::remove_file(&out64);
+    let _ = std::fs::remove_file(&out32);
+}
+
+#[test]
+fn property_codec_and_header_roundtrip_all_four_widths() {
+    // Write/read roundtrips through the self-describing codec for every
+    // key domain, on arbitrary bit patterns (floats are compared by bits,
+    // so even NaN payloads must survive).
+    check_sized(
+        "spill-codec-roundtrip",
+        PropConfig::with_max_size(16, 1 << 12),
+        |rng, n| {
+            let p = tmp("prop-codec");
+            let expect_header = |kind: KeyKind, path: &PathBuf| -> Result<(), String> {
+                let h = read_header(path)
+                    .map_err(|e| e.to_string())?
+                    .ok_or("missing header")?;
+                if h.kind != kind || h.count != n as u64 {
+                    return Err(format!("header {h:?} != ({kind:?}, {n})"));
+                }
+                Ok(())
+            };
+
+            let k: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            write_keys_file(&p, &k).map_err(|e| e.to_string())?;
+            expect_header(KeyKind::U64, &p)?;
+            if read_keys_file::<u64>(&p).map_err(|e| e.to_string())? != k {
+                return Err("u64 roundtrip".into());
+            }
+
+            let k: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+            write_keys_file(&p, &k).map_err(|e| e.to_string())?;
+            expect_header(KeyKind::U32, &p)?;
+            if read_keys_file::<u32>(&p).map_err(|e| e.to_string())? != k {
+                return Err("u32 roundtrip".into());
+            }
+
+            let k: Vec<f64> = (0..n).map(|_| f64::from_bits(rng.next_u64())).collect();
+            write_keys_file(&p, &k).map_err(|e| e.to_string())?;
+            expect_header(KeyKind::F64, &p)?;
+            let back = read_keys_file::<f64>(&p).map_err(|e| e.to_string())?;
+            let a: Vec<u64> = k.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u64> = back.iter().map(|x| x.to_bits()).collect();
+            if a != b {
+                return Err("f64 roundtrip".into());
+            }
+
+            let k: Vec<f32> = (0..n)
+                .map(|_| f32::from_bits(rng.next_u64() as u32))
+                .collect();
+            write_keys_file(&p, &k).map_err(|e| e.to_string())?;
+            expect_header(KeyKind::F32, &p)?;
+            let back = read_keys_file::<f32>(&p).map_err(|e| e.to_string())?;
+            let a: Vec<u32> = k.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+            if a != b {
+                return Err("f32 roundtrip".into());
+            }
+
+            let _ = std::fs::remove_file(&p);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn legacy_headerless_v0_files_still_sort_unchanged() {
+    // Pre-header files — raw 8-byte LE keys, the old `gen --out` format —
+    // must keep sorting exactly; the output is upgraded to v1.
+    let mut rng = Xoshiro256pp::new(0x0F0F);
+    let keys: Vec<u64> = (0..50_000).map(|_| rng.next_u64()).collect();
+    let input = tmp("v0-in");
+    let output = tmp("v0-out");
+    let raw: Vec<u8> = keys.iter().flat_map(|k| k.to_le_bytes()).collect();
+    std::fs::write(&input, &raw).unwrap();
+    assert_eq!(read_header(&input).unwrap(), None, "v0 files have no header");
+
+    let cfg = cfg_with_budget(8192 * 8);
+    let report = external::sort_file::<u64>(&input, &output, &cfg).unwrap();
+    assert_eq!(report.keys as usize, keys.len());
+    assert!(report.runs > 1, "the v0 input must really spill");
+    let mut want = keys;
+    want.sort_unstable();
+    assert_eq!(read_keys_file::<u64>(&output).unwrap(), want);
+    assert!(
+        read_header(&output).unwrap().is_some(),
+        "outputs are always written in the current format"
+    );
+
+    // v0 f64 files decode through the same path
+    let fkeys: Vec<f64> = (0..20_000).map(|_| rng.uniform(-1e6, 1e6)).collect();
+    let raw: Vec<u8> = fkeys.iter().flat_map(|k| k.to_le_bytes()).collect();
+    std::fs::write(&input, &raw).unwrap();
+    let report = external::sort_file::<f64>(&input, &output, &cfg).unwrap();
+    assert_eq!(report.keys as usize, fkeys.len());
+    let mut want = fkeys;
+    want.sort_unstable_by(f64::total_cmp);
+    assert_eq!(bits(&read_keys_file::<f64>(&output).unwrap()), bits(&want));
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn sort_file_rejects_bad_inputs_with_clear_errors() {
+    let input = tmp("bad-in");
+    let output = tmp("bad-out");
+    let cfg = ExternalConfig::default();
+
+    // truncated v1 payload: header promises more keys than the file holds
+    let mut bytes = SpillHeader::new(KeyKind::U64, 100).encode().to_vec();
+    bytes.extend((0..50u64).flat_map(|k| k.to_le_bytes()));
+    std::fs::write(&input, &bytes).unwrap();
+    let err = external::sort_file::<u64>(&input, &output, &cfg).unwrap_err();
+    assert!(err.to_string().contains("truncated"), "{err}");
+
+    // key-type mismatch: a u32 file sorted as u64 (or f32)
+    write_keys_file::<u32>(&input, &[3, 1, 2]).unwrap();
+    for err in [
+        external::sort_file::<u64>(&input, &output, &cfg).unwrap_err(),
+        external::sort_file::<f32>(&input, &output, &cfg).unwrap_err(),
+    ] {
+        assert!(err.to_string().contains("u32"), "{err}");
+    }
+
+    // headerless files cannot be read as 4-byte keys at all
+    std::fs::write(&input, 7u64.to_le_bytes()).unwrap();
+    let err = external::sort_file::<u32>(&input, &output, &cfg).unwrap_err();
+    assert!(err.to_string().contains("headerless"), "{err}");
+
+    // headerless length not a multiple of 8
+    std::fs::write(&input, [0u8; 12]).unwrap();
+    let err = external::sort_file::<u64>(&input, &output, &cfg).unwrap_err();
+    assert!(err.to_string().contains("multiple of 8"), "{err}");
+
+    // corrupted magic tail: right magic, unsupported version
+    let mut h = SpillHeader::new(KeyKind::U64, 0).encode();
+    h[8] = 0xFF;
+    std::fs::write(&input, h).unwrap();
+    let err = external::sort_file::<u64>(&input, &output, &cfg).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+
+    // every failure happened before the merge: no output was created
+    assert!(!output.exists(), "failed validation must not touch the output");
+    let _ = std::fs::remove_file(&input);
 }
 
 #[test]
