@@ -258,6 +258,12 @@ pub struct ExternalRow {
     pub threads: usize,
     /// Final-merge shards (0 = serial loser tree).
     pub merge_shards: usize,
+    /// Actual bytes of the run-generation spill files on disk.
+    pub spill_bytes: u64,
+    /// Bytes the raw fixed-width codec would have spilled for the same
+    /// runs (the compression baseline; equal to `spill_bytes` under the
+    /// raw codec).
+    pub spill_bytes_raw: u64,
 }
 
 /// Measure one external-sort configuration on a dataset file that is
@@ -287,6 +293,8 @@ fn external_cell(
         merge_passes: report.merge_passes,
         threads: crate::scheduler::effective_threads(ext.threads),
         merge_shards: report.merge_shards,
+        spill_bytes: report.spill_bytes,
+        spill_bytes_raw: report.spill_bytes_raw,
     }
 }
 
@@ -502,6 +510,67 @@ pub fn run_external_width_sweep(
     rows
 }
 
+/// Spill-codec sweep of the learned external pipeline: each dataset
+/// sorted with the raw fixed-width spill codec vs the delta+varint block
+/// codec (`ExternalConfig::spill_codec`). Identical key count, budget,
+/// threads and merge — and *byte-identical outputs*, since the output is
+/// always raw — so the rate delta isolates the spill IO volume, and the
+/// spill column shows the compression the merge's reads ran on.
+pub fn run_external_codec_sweep(
+    names: &[&'static str],
+    budget_bytes: usize,
+    cfg: &BenchConfig,
+) -> Vec<ExternalRow> {
+    use crate::external::{ExternalConfig, SpillCodec};
+
+    let mut rows = Vec::new();
+    let dir = std::env::temp_dir();
+    for &name in names {
+        let spec = datasets::spec(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+        let input = dir.join(format!(
+            "aipso-extcodec-{}-{}.bin",
+            std::process::id(),
+            spec.name
+        ));
+        let output = dir.join(format!(
+            "aipso-extcodec-{}-{}.out.bin",
+            std::process::id(),
+            spec.name
+        ));
+        datasets::write_dataset_file(spec.name, cfg.n, cfg.seed, &input, 1 << 18)
+            .expect("chunked dataset write");
+        for codec in [SpillCodec::Raw, SpillCodec::Delta] {
+            let ext = ExternalConfig {
+                memory_budget: budget_bytes,
+                threads: cfg.threads,
+                spill_codec: codec,
+                ..ExternalConfig::default()
+            };
+            rows.push(external_cell(
+                spec.paper_name,
+                spec.key_type.kind(),
+                &input,
+                &output,
+                format!("{} spill codec", codec.name()),
+                &ext,
+                cfg.n,
+            ));
+        }
+        let _ = std::fs::remove_file(&input);
+        let _ = std::fs::remove_file(&output);
+    }
+    rows
+}
+
+/// Human-readable spill cell: on-disk bytes + ratio to the raw baseline.
+fn spill_cell(bytes: u64, raw: u64) -> String {
+    format!(
+        "{:.1} MiB ({:.2}x)",
+        bytes as f64 / (1 << 20) as f64,
+        bytes as f64 / raw.max(1) as f64
+    )
+}
+
 /// Render external rows as a markdown table.
 pub fn render_external_rows(title: &str, rows: &[ExternalRow]) -> String {
     let mut out = format!("## {title}\n\n");
@@ -522,6 +591,7 @@ pub fn render_external_rows(title: &str, rows: &[ExternalRow]) -> String {
                 } else {
                     format!("{} shards", r.merge_shards)
                 },
+                spill_cell(r.spill_bytes, r.spill_bytes_raw),
             ]
         })
         .collect();
@@ -536,6 +606,7 @@ pub fn render_external_rows(title: &str, rows: &[ExternalRow]) -> String {
             "retrains",
             "merge passes",
             "final merge",
+            "spill",
         ],
         &table,
     ));
@@ -679,6 +750,36 @@ mod tests {
         for r in &rows {
             assert!(r.rate > 0.0);
         }
+    }
+
+    #[test]
+    fn codec_sweep_compresses_dup_heavy_spills() {
+        let cfg = BenchConfig {
+            n: 60_000,
+            ..tiny()
+        };
+        // wiki_edit: duplicate-heavy sorted timestamps — the delta codec's
+        // best case (small varint gaps + run-length dup escapes)
+        let rows = run_external_codec_sweep(&["wiki_edit"], 3 * 8192 * 8, &cfg);
+        assert_eq!(rows.len(), 2);
+        let raw = &rows[0];
+        let delta = &rows[1];
+        assert!(raw.strategy.starts_with("raw"));
+        assert!(delta.strategy.starts_with("delta"));
+        assert_eq!(
+            raw.spill_bytes, raw.spill_bytes_raw,
+            "raw codec spills at the fixed-width baseline"
+        );
+        assert_eq!(raw.spill_bytes_raw, delta.spill_bytes_raw, "same baseline");
+        assert!(
+            delta.spill_bytes * 2 < delta.spill_bytes_raw,
+            "dup-heavy delta spill must compress ({} vs {})",
+            delta.spill_bytes,
+            delta.spill_bytes_raw
+        );
+        let report = render_external_rows("codec", &rows);
+        assert!(report.contains("spill"));
+        assert!(report.contains("0."), "delta ratio below 1 rendered");
     }
 
     #[test]

@@ -154,9 +154,11 @@ pub struct JobReport {
     pub threads: usize,
     /// The out-of-core pipeline's report when the job ran through the
     /// external path (`None` = in-memory job). Surfaces the run counts,
-    /// mid-stream `retrains` and per-epoch learned/fallback chunk splits;
-    /// a failed external job carries a zeroed default report so callers
-    /// can still tell the paths apart.
+    /// mid-stream `retrains`, per-epoch learned/fallback chunk splits and
+    /// the spill-codec accounting (`spill_bytes` vs `spill_bytes_raw` —
+    /// what the configured `ExternalConfig::spill_codec` actually wrote
+    /// vs the fixed-width baseline); a failed external job carries a
+    /// zeroed default report so callers can still tell the paths apart.
     pub external: Option<ExternalSortReport>,
 }
 

@@ -357,6 +357,53 @@ mod tests {
     }
 
     #[test]
+    fn external_job_spill_codec_flows_through_the_report() {
+        // An external job configured with the delta spill codec must sort
+        // exactly and surface its compressed-vs-raw spill accounting in
+        // JobReport.external.
+        use crate::external::{read_keys_file, write_keys_file, ExternalConfig, SpillCodec};
+        use crate::key::KeyKind;
+
+        let dir = std::env::temp_dir();
+        let input = dir.join(format!("aipso-coord-codec-{}.bin", std::process::id()));
+        let output = dir.join(format!("aipso-coord-codec-{}.out.bin", std::process::id()));
+        let mut rng = Xoshiro256pp::new(91);
+        // duplicate-heavy ids so the delta codec has something to collapse
+        let keys: Vec<u64> = (0..40_000).map(|_| rng.next_below(500)).collect();
+        write_keys_file(&input, &keys).unwrap();
+
+        let c = Coordinator::new(2);
+        c.submit(JobSpec::external(
+            7,
+            ExternalJob {
+                input: input.clone(),
+                output: output.clone(),
+                key_kind: KeyKind::U64,
+                config: ExternalConfig {
+                    spill_codec: SpillCodec::Delta,
+                    ..ExternalConfig::with_budget(8192 * 8)
+                },
+            },
+        ));
+        let (reports, _) = c.drain();
+        assert_eq!(reports.len(), 1);
+        assert!(reports[0].verified_sorted);
+        let ext = reports[0].external.as_ref().expect("external report");
+        assert!(ext.runs >= 4, "runs={}", ext.runs);
+        assert!(
+            ext.spill_bytes * 2 < ext.spill_bytes_raw,
+            "dup-heavy delta spill must compress ({} vs raw {})",
+            ext.spill_bytes,
+            ext.spill_bytes_raw
+        );
+        let mut want = keys;
+        want.sort_unstable();
+        assert_eq!(read_keys_file::<u64>(&output).unwrap(), want);
+        let _ = std::fs::remove_file(&input);
+        let _ = std::fs::remove_file(&output);
+    }
+
+    #[test]
     fn two_external_jobs_serialize_on_the_overlap_lane() {
         use crate::external::{read_keys_file, write_keys_file, ExternalConfig};
         use crate::key::KeyKind;

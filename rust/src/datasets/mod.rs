@@ -327,8 +327,136 @@ pub fn write_u64_file(
     write_chunks(path, chunk_len, |len| gen.next_chunk(len))
 }
 
-/// Write a synthetic dataset narrowed to 4-byte floats (each `f64` draw
-/// cast to the nearest `f32`) — the PCF-style narrow-key workload — in
+/// Stateful chunk stream over a synthetic dataset in the f32 domain:
+/// each law is sampled at full generator resolution and rounded to the
+/// nearest representable `f32`. For the continuous synthetic laws the
+/// nearest-f32 rounding *is* the natural f32 parameterization (same
+/// values the old width-4 cast produced — the float side never had a
+/// truncation artifact; [`chunked_u32`] is where narrowing semantics
+/// actually changed), packaged as a first-class sampler so the width-4
+/// pipeline has one code path per domain.
+pub struct ChunkedF32 {
+    inner: ChunkedF64,
+}
+
+/// Open a native f32 chunk stream over a synthetic dataset of `n` keys.
+pub fn chunked_f32(name: &str, n: usize, seed: u64) -> Result<ChunkedF32, String> {
+    Ok(ChunkedF32 {
+        inner: chunked_f64(name, n, seed)?,
+    })
+}
+
+impl ChunkedF32 {
+    /// Keys not yet produced.
+    pub fn remaining(&self) -> usize {
+        self.inner.remaining()
+    }
+
+    /// Next up-to-`max_len` keys; `None` once `n` keys were produced.
+    pub fn next_chunk(&mut self, max_len: usize) -> Option<Vec<f32>> {
+        self.inner
+            .next_chunk(max_len)
+            .map(|c| c.into_iter().map(|x| x as f32).collect())
+    }
+}
+
+enum U32Kind {
+    Osm {
+        centers: Vec<(f64, f64, f64)>,
+        zipf: Zipf,
+    },
+    Wiki {
+        t: u64,
+    },
+    Fb,
+    Books(Zipf),
+    Nyc,
+}
+
+/// Stateful chunk stream over a real-world dataset *native to the u32
+/// domain*. The previous width-4 path truncated each `u64` draw to its
+/// low 32 bits, which wraps every distribution whose entropy lives in the
+/// top bits into structureless near-noise (OSM loses its cluster
+/// prefixes, FB its heavy tail). The native arms re-scope each law
+/// instead: 32-bit Morton codes for OSM, a u32-spanning heavy-tail id law
+/// for FB, and direct (lossless — all values `< 2³²`) sampling for the
+/// timestamp/sales laws.
+pub struct ChunkedU32 {
+    kind: U32Kind,
+    rng: Xoshiro256pp,
+    n: usize,
+    produced: usize,
+}
+
+/// Open a native u32 chunk stream over a real-world dataset of `n` keys.
+pub fn chunked_u32(name: &str, n: usize, seed: u64) -> Result<ChunkedU32, String> {
+    let mut rng = Xoshiro256pp::new(seed);
+    let kind = match name {
+        "osm_cellids" => {
+            let (centers, zipf) = realworld::osm_components(&mut rng);
+            U32Kind::Osm { centers, zipf }
+        }
+        "wiki_edit" => U32Kind::Wiki {
+            t: realworld::WIKI_T0,
+        },
+        "fb_ids" => U32Kind::Fb,
+        "books_sales" => U32Kind::Books(realworld::books_rank_law(n)),
+        "nyc_pickup" => U32Kind::Nyc,
+        _ => {
+            return Err(format!(
+                "unknown u32 dataset '{name}' (f64 dataset? use chunked_f32)"
+            ))
+        }
+    };
+    Ok(ChunkedU32 {
+        kind,
+        rng,
+        n,
+        produced: 0,
+    })
+}
+
+impl ChunkedU32 {
+    /// Keys not yet produced.
+    pub fn remaining(&self) -> usize {
+        self.n - self.produced
+    }
+
+    /// Next up-to-`max_len` keys; `None` once `n` keys were produced.
+    pub fn next_chunk(&mut self, max_len: usize) -> Option<Vec<u32>> {
+        let ChunkedU32 {
+            kind,
+            rng,
+            n,
+            produced,
+        } = self;
+        let len = max_len.min(*n - *produced);
+        if len == 0 {
+            return None;
+        }
+        let out: Vec<u32> = match kind {
+            U32Kind::Osm { centers, zipf } => (0..len)
+                .map(|_| realworld::osm_sample_u32(centers, zipf, rng))
+                .collect(),
+            // timestamps fit u32 until 2106 — the cast is lossless
+            U32Kind::Wiki { t } => realworld::wiki_edit_fill(t, len, rng, true)
+                .into_iter()
+                .map(|x| x as u32)
+                .collect(),
+            U32Kind::Fb => (0..len).map(|_| realworld::fb_id_sample_u32(rng)).collect(),
+            // sales counts top out near 5e7 — lossless
+            U32Kind::Books(z) => (0..len)
+                .map(|_| realworld::books_sample(z, rng) as u32)
+                .collect(),
+            U32Kind::Nyc => (0..len).map(|_| realworld::nyc_sample(rng) as u32).collect(),
+        };
+        *produced += len;
+        Some(out)
+    }
+}
+
+/// Write a synthetic dataset at 4-byte width through the dataset-native
+/// f32 sampler ([`chunked_f32`]) — the PCF-style narrow-key workload — in
 /// bounded memory.
 pub fn write_f32_file(
     name: &str,
@@ -337,17 +465,13 @@ pub fn write_f32_file(
     path: &Path,
     chunk_len: usize,
 ) -> Result<(), String> {
-    let mut gen = chunked_f64(name, n, seed)?;
-    write_chunks(path, chunk_len, |len| {
-        gen.next_chunk(len)
-            .map(|c| c.into_iter().map(|x| x as f32).collect::<Vec<f32>>())
-    })
+    let mut gen = chunked_f32(name, n, seed)?;
+    write_chunks(path, chunk_len, |len| gen.next_chunk(len))
 }
 
-/// Write a simulated real-world dataset narrowed to 4-byte integers (each
-/// `u64` draw truncated to its low 32 bits — order within the narrow
-/// domain is arbitrary but the duplicate structure survives, which is the
-/// workload "Defeating duplicates" studies) in bounded memory.
+/// Write a simulated real-world dataset at 4-byte width through the
+/// dataset-native u32 sampler ([`chunked_u32`] — no low-32 truncation of
+/// the 8-byte stream) in bounded memory.
 pub fn write_u32_file(
     name: &str,
     n: usize,
@@ -355,11 +479,8 @@ pub fn write_u32_file(
     path: &Path,
     chunk_len: usize,
 ) -> Result<(), String> {
-    let mut gen = chunked_u64(name, n, seed)?;
-    write_chunks(path, chunk_len, |len| {
-        gen.next_chunk(len)
-            .map(|c| c.into_iter().map(|x| x as u32).collect::<Vec<u32>>())
-    })
+    let mut gen = chunked_u32(name, n, seed)?;
+    write_chunks(path, chunk_len, |len| gen.next_chunk(len))
 }
 
 /// Stream chunks to disk through the external sorter's spill codec (one
@@ -398,8 +519,10 @@ pub fn write_dataset_file(
 }
 
 /// Write any registered dataset by name at an explicit key width: `8`
-/// writes the native `f64`/`u64` stream, `4` the narrowed `f32`/`u32`
-/// variant (`gen --width`). Returns the key domain of the written file.
+/// writes the native `f64`/`u64` stream, `4` the dataset-native
+/// `f32`/`u32` stream (`gen --width` — [`chunked_f32`]/[`chunked_u32`],
+/// not a truncation of the 8-byte draws). Returns the key domain of the
+/// written file.
 pub fn write_dataset_file_width(
     name: &str,
     n: usize,
@@ -544,37 +667,89 @@ mod tests {
     }
 
     #[test]
-    fn width_4_files_narrow_the_native_stream() {
+    fn width_4_files_use_the_native_32_bit_streams() {
         let dir = std::env::temp_dir();
         let p = dir.join(format!("aipso-ds-w4-{}.bin", std::process::id()));
         let kind = write_dataset_file_width("uniform", 800, 5, &p, 128, 4).unwrap();
         assert_eq!(kind, KeyKind::F32);
         let back = crate::external::read_keys_file::<f32>(&p).unwrap();
-        let want: Vec<f32> = generate_f64("uniform", 800, 5)
-            .unwrap()
-            .into_iter()
-            .map(|x| x as f32)
-            .collect();
-        assert_eq!(back.len(), want.len());
+        let mut gen = chunked_f32("uniform", 800, 5).unwrap();
+        let want = gen.next_chunk(800).unwrap();
+        assert!(gen.next_chunk(1).is_none());
         let gb: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
         let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
-        assert_eq!(gb, wb, "f32 stream must be the cast of the f64 stream");
+        assert_eq!(gb, wb, "the file must be the native f32 stream");
 
         let kind = write_dataset_file_width("fb_ids", 800, 5, &p, 128, 4).unwrap();
         assert_eq!(kind, KeyKind::U32);
         let back = crate::external::read_keys_file::<u32>(&p).unwrap();
-        let want: Vec<u32> = generate_u64("fb_ids", 800, 5)
-            .unwrap()
-            .into_iter()
-            .map(|x| x as u32)
-            .collect();
-        assert_eq!(back, want, "u32 stream must be the truncation");
+        let mut gen = chunked_u32("fb_ids", 800, 5).unwrap();
+        let want = gen.next_chunk(800).unwrap();
+        assert_eq!(back, want, "the file must be the native u32 stream");
 
         // width 8 defers to the native writer; anything else errors
         let kind = write_dataset_file_width("uniform", 100, 5, &p, 64, 8).unwrap();
         assert_eq!(kind, KeyKind::F64);
         assert!(write_dataset_file_width("uniform", 10, 5, &p, 64, 2).is_err());
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn chunked_32_bit_streams_cover_all_datasets_and_reject_mismatches() {
+        for name in f64_names() {
+            let mut g = chunked_f32(name, 2000, 9).unwrap();
+            let mut total = 0;
+            while let Some(c) = g.next_chunk(700) {
+                assert!(c.iter().all(|x| x.is_finite()), "{name}");
+                total += c.len();
+            }
+            assert_eq!(total, 2000, "{name}");
+        }
+        for name in u64_names() {
+            let mut g = chunked_u32(name, 2000, 9).unwrap();
+            let mut total = 0;
+            while let Some(c) = g.next_chunk(700) {
+                total += c.len();
+            }
+            assert_eq!(total, 2000, "{name}");
+        }
+        assert!(chunked_f32("wiki_edit", 10, 1).is_err());
+        assert!(chunked_u32("uniform", 10, 1).is_err());
+        assert!(chunked_f32("uniform", 0, 1).unwrap().next_chunk(10).is_none());
+        assert!(chunked_u32("fb_ids", 0, 1).unwrap().next_chunk(10).is_none());
+    }
+
+    fn distinct_ratio(bits: &mut [u64]) -> f64 {
+        bits.sort_unstable();
+        let distinct = 1 + bits.windows(2).filter(|w| w[0] != w[1]).count();
+        distinct as f64 / bits.len().max(1) as f64
+    }
+
+    #[test]
+    fn width_4_zipf_and_uniform_keep_their_distinct_key_ratio() {
+        // The narrow-width bugfix's acceptance: a width-4 file of zipf or
+        // uniform must carry (about) the same distinct-key structure as
+        // the width-8 stream — narrowing is a re-parameterization of the
+        // law, not a collapse into near-duplicates.
+        let n = 40_000;
+        for name in ["zipf", "uniform"] {
+            let mut wide: Vec<u64> = generate_f64(name, n, 11)
+                .unwrap()
+                .iter()
+                .map(|x| x.to_bits())
+                .collect();
+            let mut g = chunked_f32(name, n, 11).unwrap();
+            let mut narrow: Vec<u64> = Vec::with_capacity(n);
+            while let Some(c) = g.next_chunk(8192) {
+                narrow.extend(c.iter().map(|x| x.to_bits() as u64));
+            }
+            let rw = distinct_ratio(&mut wide);
+            let rn = distinct_ratio(&mut narrow);
+            assert!(
+                rn > 0.9 * rw,
+                "{name}: width-4 distinct ratio {rn} collapsed vs width-8 {rw}"
+            );
+        }
     }
 
     #[test]

@@ -8,6 +8,8 @@
 
 use std::path::PathBuf;
 
+use crate::external::spill::SpillCodec;
+
 /// How sorted runs are produced from raw chunks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RunGen {
@@ -109,6 +111,23 @@ pub struct ExternalConfig {
     /// may install ([`RetrainPolicy::disabled`] pins the pre-retrain
     /// behaviour where drift always demotes the chunk).
     pub retrain: RetrainPolicy,
+    /// Payload codec for spilled runs: [`SpillCodec::Raw`] writes
+    /// fixed-width keys, [`SpillCodec::Delta`] writes delta+varint blocks
+    /// (sorted runs compress, duplicate-heavy ones dramatically — the
+    /// merge is IO-bound, so fewer spill bytes are wall-clock). The final
+    /// output file is always raw (the interchange format), so both codecs
+    /// produce byte-identical outputs. Defaults to the `SPILL_CODEC`
+    /// environment variable (`raw`/`delta`) when set, else raw — CI runs
+    /// the external suite once per codec through that variable.
+    pub spill_codec: SpillCodec,
+    /// Exponential age decay applied to the epoch mixture weights the
+    /// sharded merge cuts its quantiles from: epoch `e` of `E` weighs
+    /// `learned_keys(e) × decay^(E−1−e)`. `1.0` (the default) weighs
+    /// epochs purely by their learned keys; values below 1 tilt the cuts
+    /// toward the most recent regimes of a long stream. Balance-only —
+    /// the skew guard still backstops any weighting. Values outside
+    /// `(0, 1]` are treated as 1.0.
+    pub epoch_age_decay: f64,
     /// Worker threads (0 = all cores). `1` selects the fully serial
     /// reference pipeline; `> 1` enables overlapped chunk IO during run
     /// generation and the RMI-sharded parallel merge.
@@ -145,6 +164,8 @@ impl Default for ExternalConfig {
             drift_probe: 2048,
             drift_threshold: 0.05,
             retrain: RetrainPolicy::default(),
+            spill_codec: SpillCodec::from_env().unwrap_or(SpillCodec::Raw),
+            epoch_age_decay: 1.0,
             threads: 0,
             merge_shards: 0,
             shard_skew_limit: 4.0,
@@ -232,6 +253,16 @@ mod tests {
         assert!(!RetrainPolicy { retrain_after: 0, max_retrains: 4 }.enabled());
         assert!(!RetrainPolicy { retrain_after: 2, max_retrains: 0 }.enabled());
         assert!(RetrainPolicy { retrain_after: 1, max_retrains: 1 }.enabled());
+    }
+
+    #[test]
+    fn codec_and_decay_defaults() {
+        let cfg = ExternalConfig::default();
+        // default honours SPILL_CODEC when set; otherwise raw (the tests
+        // run under both via CI, so assert consistency with the env)
+        let expect = SpillCodec::from_env().unwrap_or(SpillCodec::Raw);
+        assert_eq!(cfg.spill_codec, expect);
+        assert_eq!(cfg.epoch_age_decay, 1.0, "no age decay by default");
     }
 
     #[test]

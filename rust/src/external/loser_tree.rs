@@ -11,6 +11,11 @@
 //! `1..k`, the leaf of source `s` is node `k + s`, and the parent of node
 //! `m` is `m / 2`. Exhausted sources hold `None`, which loses to every
 //! live key, so the merge needs no sentinel keys.
+//!
+//! Sources are [`KeyStream`]s, so the tree is codec-agnostic: a
+//! [`RunReader`] source decodes raw fixed-width (v0/v1) or delta+varint
+//! block (v2) payloads per its file's header, and runs of different
+//! codecs merge together in one tournament.
 
 use std::io;
 
@@ -220,6 +225,38 @@ mod tests {
         }
         all.sort_unstable();
         assert_eq!(merge_vecs(runs), all, "k={k}");
+    }
+
+    #[test]
+    fn mixed_codec_run_readers_merge_exactly() {
+        // One raw (v1) and one delta (v2) run through the same tree: the
+        // header-dispatched readers must interleave transparently.
+        use crate::external::spill::{write_keys_file, RunReader, RunWriter, SpillCodec};
+        let dir = std::env::temp_dir();
+        let p_raw = dir.join(format!("aipso-lt-raw-{}.bin", std::process::id()));
+        let p_delta = dir.join(format!("aipso-lt-delta-{}.bin", std::process::id()));
+        let mut rng = Xoshiro256pp::new(0x717E);
+        let mut a: Vec<u64> = (0..4000).map(|_| rng.next_below(10_000)).collect();
+        let mut b: Vec<u64> = (0..4000).map(|_| rng.next_below(10_000)).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        write_keys_file(&p_raw, &a).unwrap();
+        let mut w =
+            RunWriter::<u64>::create_with(p_delta.clone(), 4096, SpillCodec::Delta).unwrap();
+        w.write_slice(&b).unwrap();
+        w.finish().unwrap();
+
+        let sources = vec![
+            RunReader::<u64>::open(&p_raw, 4096).unwrap(),
+            RunReader::<u64>::open(&p_delta, 4096).unwrap(),
+        ];
+        let got = LoserTree::new(sources).unwrap().collect_all().unwrap();
+        let mut want = a;
+        want.extend_from_slice(&b);
+        want.sort_unstable();
+        assert_eq!(got, want);
+        let _ = std::fs::remove_file(&p_raw);
+        let _ = std::fs::remove_file(&p_delta);
     }
 
     #[test]

@@ -33,9 +33,14 @@
 //! width-generic codec; files carry a small self-describing header
 //! (magic, version, key-type tag, width, count; see [`spill`]) that
 //! [`sort_file`] validates up front, with legacy headerless 8-byte files
-//! still accepted as format v0. The coordinator admits these as
-//! `JobPayload::External` jobs; see [`crate::coordinator`] for how they
-//! overlap with in-memory traffic.
+//! still accepted as format v0. Spilled runs optionally compress through
+//! the delta+varint block codec ([`SpillCodec::Delta`], format v2):
+//! sorted runs delta-encode in non-negative varints with duplicate
+//! run-length escapes, cutting the IO the merge is bound by — while the
+//! sorted *output* stays raw v1, so both codecs produce byte-identical
+//! results ([`ExternalSortReport::spill_bytes`] reports the savings).
+//! The coordinator admits these as `JobPayload::External` jobs; see
+//! [`crate::coordinator`] for how they overlap with in-memory traffic.
 //!
 //! The architecture, data flow and fallback decision points are documented
 //! end to end in `ARCHITECTURE.md` at the repository root.
@@ -69,8 +74,8 @@ pub use run_writer::{EpochStats, RunGenStats};
 pub use shard::ShardPlan;
 pub use spill::{
     file_key_count, read_header, read_keys_file, verify_sorted_file, write_keys_file,
-    RunFile, RunIndex, RunReader, RunWriter, SpillDir, SpillHeader, FORMAT_VERSION,
-    HEADER_LEN, MAGIC,
+    RunFile, RunIndex, RunReader, RunWriter, SpillCodec, SpillDir, SpillHeader,
+    SpillVersion, DELTA_VERSION, FORMAT_VERSION, HEADER_LEN, MAGIC, RAW_VERSION,
 };
 
 use std::io;
@@ -115,6 +120,14 @@ pub struct ExternalSortReport {
     /// threads split a group's merge into range-disjoint quantile shards;
     /// 0 = every intermediate group merged through one serial loser tree).
     pub sharded_groups: usize,
+    /// Actual bytes of the run-generation spill files on disk (headers
+    /// included). With [`SpillCodec::Delta`] this is the compressed size;
+    /// with [`SpillCodec::Raw`] it equals `spill_bytes_raw`.
+    pub spill_bytes: u64,
+    /// Bytes the raw fixed-width codec would have spilled for the same
+    /// runs (`runs × header + keys × width`) — the baseline the codec's
+    /// savings are measured against.
+    pub spill_bytes_raw: u64,
 }
 
 /// Sort a binary key file (the self-describing `aipso gen --out` format,
@@ -223,28 +236,25 @@ where
     let gen = run_writer::generate_runs(next_chunk, &mut spill, cfg)?;
     let (mut runs, stats, models) = (gen.runs, gen.stats, gen.models);
 
-    // Cut weight per epoch model = keys of the runs generated under it
-    // (the run↔epoch map), resolved *before* intermediate merge passes
-    // collapse runs across epochs. The sharded final merge inverts this
-    // keys-weighted mixture — the stream's estimated global CDF — so its
+    // Cut weight per epoch model = the keys its model *actually sorted*
+    // (`EpochStats::learned_keys`), resolved before intermediate merge
+    // passes collapse runs across epochs, optionally age-decayed
+    // (`cfg.epoch_age_decay`). The sharded final merge inverts this
+    // weighted mixture — the stream's estimated global CDF — so its
     // quantile cuts stay balanced across retrain-on-drift regime changes.
-    // Approximation: an epoch's weight includes its *fallback* chunks'
-    // keys, which its model demonstrably drifted from (at most
-    // `retrain_after − 1` chunks per install, plus a duplicate-heavy tail
-    // the guard refused to model). That only biases balance, never
-    // output, and the skew guard below still backstops the cuts.
+    // Fallback chunks' keys are excluded on purpose: their epoch's model
+    // demonstrably drifted from them (or Algorithm 5's guard refused to
+    // model them at all), so counting them — as earlier revisions did —
+    // inflated a stale model's share of the cuts whenever a vetoed tail
+    // (e.g. zipf) rode an epoch out. Balance-only either way: the skew
+    // guard below still backstops the cuts.
     debug_assert_eq!(gen.run_epochs.len(), runs.len());
-    let mut epoch_keys = vec![0u64; models.len()];
-    for (run, &epoch) in runs.iter().zip(&gen.run_epochs) {
-        if let Some(w) = epoch_keys.get_mut(epoch) {
-            *w += run.n;
-        }
-    }
+    let weights = epoch_cut_weights(&stats.epochs, cfg.epoch_age_decay);
     let cut_models: Vec<(&Rmi, f64)> = models
         .iter()
-        .zip(&epoch_keys)
-        .filter(|(_, &w)| w > 0)
-        .map(|(m, &w)| (m, w as f64))
+        .zip(&weights)
+        .filter(|(_, &w)| w > 0.0)
+        .map(|(m, &w)| (m, w))
         .collect();
 
     let mut report = ExternalSortReport {
@@ -258,6 +268,8 @@ where
         merge_passes: 0,
         merge_shards: 0,
         sharded_groups: 0,
+        spill_bytes: runs.iter().map(|r| r.bytes).sum(),
+        spill_bytes_raw: raw_spill_bytes::<K>(&runs),
     };
     let threads = crate::scheduler::effective_threads(cfg.threads);
 
@@ -284,11 +296,18 @@ where
         report.sharded_groups += sharded_groups;
     }
 
-    // Final pass streams straight into the output file.
+    // Final pass streams straight into the output file. The output is
+    // always raw v1 — the interchange format — whatever codec the runs
+    // spilled through, so raw and delta sorts are byte-identical.
     if runs.len() == 1 {
-        // single run: plain buffered copy, no tree needed
         guard.armed = true;
-        std::fs::copy(&runs[0].path, output)?;
+        if cfg.spill_codec == SpillCodec::Raw {
+            // single raw run: plain buffered copy, no tree needed
+            std::fs::copy(&runs[0].path, output)?;
+        } else {
+            // single delta run: stream-rewrite it as raw
+            spill::transcode_raw::<K>(&runs[0].path, output, cfg.effective_io_buffer())?;
+        }
     } else {
         let shards = final_shards(cfg, threads, report.keys);
         let mut sharded = false;
@@ -308,13 +327,46 @@ where
         }
         if !sharded {
             guard.armed = true;
-            let merged = merge_group::<K>(&runs, output.to_path_buf(), cfg.effective_io_buffer())?;
+            let merged = merge_group::<K>(
+                &runs,
+                output.to_path_buf(),
+                cfg.effective_io_buffer(),
+                SpillCodec::Raw, // the output contract, independent of the spill codec
+            )?;
             debug_assert_eq!(merged.n, report.keys);
         }
         report.merge_passes += 1;
     }
     guard.armed = false;
     Ok(report)
+}
+
+/// Bytes the raw fixed-width codec spills for `runs` (header + `n ×
+/// WIDTH` each) — the baseline `ExternalSortReport.spill_bytes_raw`
+/// measures the configured codec against.
+fn raw_spill_bytes<K: SortKey>(runs: &[RunFile]) -> u64 {
+    runs.iter()
+        .map(|r| HEADER_LEN as u64 + r.n * K::WIDTH as u64)
+        .sum()
+}
+
+/// Cut weight per epoch model for the sharded merge's mixture quantiles:
+/// the keys the epoch's model actually sorted (`learned_keys` — fallback
+/// chunks drifted from it and must not inflate its share), scaled by an
+/// exponential age decay so `decay < 1` tilts a long stream's cuts toward
+/// its most recent regimes. `decay` outside `(0, 1]` means no decay.
+fn epoch_cut_weights(epochs: &[EpochStats], decay: f64) -> Vec<f64> {
+    let decay = if decay.is_finite() && decay > 0.0 && decay < 1.0 {
+        decay
+    } else {
+        1.0
+    };
+    let last = epochs.len().saturating_sub(1);
+    epochs
+        .iter()
+        .enumerate()
+        .map(|(e, s)| s.learned_keys as f64 * decay.powi((last - e) as i32))
+        .collect()
 }
 
 /// Shards for the final merge: the configured count (or one per thread),
@@ -438,7 +490,7 @@ fn merge_pass<K: SortKey>(
                 return;
             }
             let (slot, group, out) = &serial[i];
-            let res = merge_group::<K>(group, out.clone(), io_buffer);
+            let res = merge_group::<K>(group, out.clone(), io_buffer, cfg.spill_codec);
             match &res {
                 Ok(_) => {
                     for r in group {
@@ -484,6 +536,9 @@ fn merge_pass<K: SortKey>(
         next_round[grp.slot] = Some(RunFile {
             path: grp.out,
             n: grp.total,
+            // sharded group outputs are pre-sized raw files (seek-written
+            // disjoint ranges are incompatible with variable-length blocks)
+            bytes: HEADER_LEN as u64 + grp.total * K::WIDTH as u64,
         });
     }
     Ok((
@@ -492,18 +547,22 @@ fn merge_pass<K: SortKey>(
     ))
 }
 
-/// Merge one group of runs into `out_path` through the loser tree.
+/// Merge one group of runs into `out_path` through the loser tree,
+/// writing with `codec` (the spill codec for intermediate runs, raw for
+/// the final output). The sources dispatch their own codec per file, so
+/// raw and delta runs merge together freely.
 fn merge_group<K: SortKey>(
     runs: &[RunFile],
     out_path: PathBuf,
     io_buffer: usize,
+    codec: SpillCodec,
 ) -> io::Result<RunFile> {
     let mut sources = Vec::with_capacity(runs.len());
     for r in runs {
         sources.push(RunReader::<K>::open(&r.path, io_buffer)?);
     }
     let mut tree = LoserTree::new(sources)?;
-    let mut w = RunWriter::<K>::create(out_path, io_buffer)?;
+    let mut w = RunWriter::<K>::create_with(out_path, io_buffer, codec)?;
     while let Some(k) = tree.next()? {
         w.push(k)?;
     }
@@ -703,6 +762,120 @@ mod tests {
         assert_eq!(report.runs, 10);
         assert_eq!(report.merge_passes, 1, "all runs fit one k-max pass");
         assert_eq!(read_keys_file::<u64>(&out).unwrap(), want);
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn epoch_cut_weights_use_learned_keys_and_decay() {
+        let epochs = vec![
+            EpochStats { learned: 2, fallback: 1, keys: 3000, learned_keys: 2000 },
+            EpochStats { learned: 1, fallback: 2, keys: 3000, learned_keys: 1000 },
+            EpochStats { learned: 4, fallback: 0, keys: 4000, learned_keys: 4000 },
+        ];
+        // no decay: the weights are exactly the learned keys — fallback
+        // keys (the vetoed/drifted chunks) never inflate an epoch
+        assert_eq!(epoch_cut_weights(&epochs, 1.0), vec![2000.0, 1000.0, 4000.0]);
+        // decay 0.5: each older epoch halves relative to the newest
+        assert_eq!(epoch_cut_weights(&epochs, 0.5), vec![500.0, 500.0, 4000.0]);
+        // out-of-range decay values mean "no decay", never a poisoned weight
+        for bad in [0.0, -1.0, 2.0, f64::NAN, f64::INFINITY] {
+            assert_eq!(epoch_cut_weights(&epochs, bad), vec![2000.0, 1000.0, 4000.0]);
+        }
+        // an all-fallback epoch weighs zero and is filtered from the cuts
+        let dead = vec![EpochStats { learned: 0, fallback: 3, keys: 900, learned_keys: 0 }];
+        assert_eq!(epoch_cut_weights(&dead, 1.0), vec![0.0]);
+        assert!(epoch_cut_weights(&[], 0.5).is_empty());
+    }
+
+    #[test]
+    fn delta_codec_pipeline_is_byte_identical_to_raw() {
+        // The tentpole's core contract at the driver level: same stream,
+        // raw vs delta spill codec, identical output bytes — including
+        // the multi-pass + sharded-merge path — with the delta report
+        // showing fewer spill bytes on this dup-heavy input.
+        let mut rng = Xoshiro256pp::new(0xC0DEC);
+        let n = 60_000;
+        let keys: Vec<u64> = (0..n).map(|_| 7_000_000 + rng.next_below(5_000)).collect();
+        let raw_out = tmp("codec-raw.bin");
+        let delta_out = tmp("codec-delta.bin");
+        let base = ExternalConfig {
+            memory_budget: 3 * 8192 * 8,
+            io_buffer: 4096,
+            merge_fanout: 4,
+            threads: 2,
+            min_shard_keys: 1024,
+            ..ExternalConfig::default()
+        };
+        let raw_cfg = ExternalConfig { spill_codec: SpillCodec::Raw, ..base.clone() };
+        let delta_cfg = ExternalConfig { spill_codec: SpillCodec::Delta, ..base };
+        let raw = sort_iter(keys.iter().copied(), &raw_out, &raw_cfg).unwrap();
+        let delta = sort_iter(keys.iter().copied(), &delta_out, &delta_cfg).unwrap();
+        assert_eq!(raw.keys, delta.keys);
+        assert_eq!(
+            std::fs::read(&raw_out).unwrap(),
+            std::fs::read(&delta_out).unwrap(),
+            "spill codec must never change the output bytes"
+        );
+        assert_eq!(raw.spill_bytes, raw.spill_bytes_raw, "raw spills at parity");
+        assert_eq!(delta.spill_bytes_raw, raw.spill_bytes_raw);
+        assert!(
+            delta.spill_bytes * 2 < delta.spill_bytes_raw,
+            "dup-heavy spill must compress (delta {} vs raw {})",
+            delta.spill_bytes,
+            delta.spill_bytes_raw
+        );
+        let _ = std::fs::remove_file(&raw_out);
+        let _ = std::fs::remove_file(&delta_out);
+    }
+
+    #[test]
+    fn delta_codec_single_run_transcodes_to_raw_output() {
+        // One run (input fits the budget) under the delta codec: the
+        // copy-through path must rewrite the run as a raw v1 output, not
+        // leak a v2 file into the interchange format.
+        let out = tmp("codec-single.bin");
+        let keys: Vec<u64> = vec![5, 3, 9, 9, 1];
+        let cfg = ExternalConfig {
+            spill_codec: SpillCodec::Delta,
+            ..ExternalConfig::default()
+        };
+        let report = sort_iter(keys, &out, &cfg).unwrap();
+        assert_eq!(report.runs, 1);
+        assert_eq!(report.merge_passes, 0);
+        let h = read_header(&out).unwrap().expect("output carries a header");
+        assert_eq!(h.version, spill::RAW_VERSION, "outputs are always raw v1");
+        assert_eq!(read_keys_file::<u64>(&out).unwrap(), vec![1, 3, 5, 9, 9]);
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn age_decay_shifts_cuts_toward_recent_epochs_and_stays_exact() {
+        // Three-regime shard-balance pin for the age-decay knob: with an
+        // aggressive decay the sort must still be byte-exact (balance
+        // only), and the weight helper must tilt toward late epochs.
+        let mut rng = Xoshiro256pp::new(0xA9ED);
+        let chunk = 16_384usize;
+        let mut keys: Vec<f64> = (0..2 * chunk).map(|_| rng.uniform(0.0, 1e5)).collect();
+        keys.extend((0..2 * chunk).map(|_| rng.uniform(4e5, 5e5)));
+        keys.extend((0..2 * chunk).map(|_| rng.uniform(9e5, 1e6)));
+        let out = tmp("age-decay.bin");
+        let cfg = ExternalConfig {
+            memory_budget: chunk * 8,
+            threads: 1,
+            min_shard_keys: 1024,
+            merge_shards: 3,
+            epoch_age_decay: 0.25,
+            retrain: RetrainPolicy { retrain_after: 1, max_retrains: 4 },
+            ..ExternalConfig::default()
+        };
+        let report = sort_iter(keys.iter().copied(), &out, &cfg).unwrap();
+        assert!(report.retrains >= 1, "regime changes must retrain");
+        let mut want = keys;
+        want.sort_unstable_by(f64::total_cmp);
+        let got = read_keys_file::<f64>(&out).unwrap();
+        let gb: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+        let wb: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, wb, "age decay is balance-only, never correctness");
         let _ = std::fs::remove_file(&out);
     }
 

@@ -19,9 +19,12 @@
 //! 3. learned path: partition the chunk in place with the shared
 //!    [`RmiClassifier`] (the same block framework every engine uses), then
 //!    sort each bucket with sequential AIPS²o tasks on the pool;
-//! 4. write the sorted chunk as one spilled run, tagged with the epoch of
-//!    the model that was current when it was generated (the merge weights
-//!    its quantile cuts by keys-per-epoch; see [`crate::external::shard`]).
+//! 4. write the sorted chunk as one spilled run — through the configured
+//!    spill codec (`ExternalConfig::spill_codec`; the delta codec
+//!    compresses the sorted run as varint blocks) — tagged with the epoch
+//!    of the model that was current when it was generated (the merge
+//!    weights its quantile cuts by each epoch's *learned* keys; see
+//!    [`crate::external::shard`]).
 //!
 //! With `threads > 1` the three per-chunk stages run as an **overlapped
 //! pipeline** on rendezvous channels: a reader thread fills chunk `N+1`
@@ -59,8 +62,14 @@ pub struct EpochStats {
     pub learned: usize,
     /// Chunks of this epoch sorted via the IPS⁴o fallback.
     pub fallback: usize,
-    /// Keys across this epoch's chunks (the merge's cut weight).
+    /// Keys across this epoch's chunks, learned and fallback alike.
     pub keys: u64,
+    /// Keys of the chunks the epoch's model actually sorted — the merge's
+    /// cut weight. Fallback chunks' keys are excluded: they demonstrably
+    /// drifted from (or were never described by) this epoch's model, so
+    /// counting them toward it would inflate a stale model's share of the
+    /// mixture cuts (e.g. a vetoed zipf tail skewing the shard plan).
+    pub learned_keys: u64,
 }
 
 /// Counters describing one run-generation pass.
@@ -96,9 +105,10 @@ pub(crate) struct GeneratedRuns {
     /// their keys-weighted mixture to cut the key range into quantiles.
     pub models: Vec<Rmi>,
     /// Run ↔ model map: `run_epochs[i]` is the epoch `runs[i]` was
-    /// generated under (parallel to `runs`). The merge derives each
-    /// epoch's cut weight from the runs it produced, so runs spilled
-    /// before a retrain still contribute the model that described them.
+    /// generated under (parallel to `runs`). The merge's cut weights come
+    /// from each epoch's *learned* keys ([`EpochStats::learned_keys`]);
+    /// this map remains the per-run provenance record (and the
+    /// consistency check between run generation and the driver).
     pub run_epochs: Vec<usize>,
 }
 
@@ -138,7 +148,11 @@ where
             continue;
         }
         sorter.sort_chunk(&mut chunk);
-        let mut w = RunWriter::<K>::create(spill.next_run_path(), cfg.effective_io_buffer())?;
+        let mut w = RunWriter::<K>::create_with(
+            spill.next_run_path(),
+            cfg.effective_io_buffer(),
+            cfg.spill_codec,
+        )?;
         w.write_slice(&chunk)?;
         runs.push(w.finish()?);
     }
@@ -160,6 +174,7 @@ where
 {
     let chunk_keys = cfg.pipelined_chunk_keys::<K>();
     let io_buffer = cfg.effective_io_buffer();
+    let codec = cfg.spill_codec;
     let mut sorter = ChunkSorter::new(cfg, threads, chunk_keys);
     let mut source_err: Option<io::Error> = None;
 
@@ -193,7 +208,7 @@ where
         let writer = scope.spawn(move || -> io::Result<Vec<RunFile>> {
             let mut runs = Vec::new();
             for chunk in sorted_rx.iter() {
-                let mut w = RunWriter::<K>::create(spill.next_run_path(), io_buffer)?;
+                let mut w = RunWriter::<K>::create_with(spill.next_run_path(), io_buffer, codec)?;
                 w.write_slice(&chunk)?;
                 runs.push(w.finish()?);
             }
@@ -300,6 +315,7 @@ impl<'a> ChunkSorter<'a> {
         e.keys += chunk.len() as u64;
         if learned {
             e.learned += 1;
+            e.learned_keys += chunk.len() as u64;
             self.stats.learned_chunks += 1;
         } else {
             e.fallback += 1;
@@ -624,10 +640,13 @@ mod tests {
         assert_eq!(gen.models.len(), 2, "initial model + one replacement");
         assert_eq!(gen.run_epochs, vec![0, 1, 1, 1], "run↔epoch map");
         assert_eq!(gen.stats.epochs.len(), 2);
-        assert_eq!(gen.stats.epochs[0], EpochStats { learned: 1, fallback: 0, keys: 16_384 });
+        assert_eq!(
+            gen.stats.epochs[0],
+            EpochStats { learned: 1, fallback: 0, keys: 16_384, learned_keys: 16_384 }
+        );
         assert_eq!(
             gen.stats.epochs[1],
-            EpochStats { learned: 3, fallback: 0, keys: 3 * 16_384 }
+            EpochStats { learned: 3, fallback: 0, keys: 3 * 16_384, learned_keys: 3 * 16_384 }
         );
         for r in &gen.runs {
             assert!(is_sorted(&read_keys_file::<f64>(&r.path).unwrap()));
@@ -655,8 +674,14 @@ mod tests {
         // on the 2nd chunk; regime 3: 1 fallback building the streak, then
         // the budget is spent → fallback.
         assert_eq!(stats.epochs.len(), 2);
-        assert_eq!(stats.epochs[0], EpochStats { learned: 2, fallback: 1, keys: 3 * 8192 });
-        assert_eq!(stats.epochs[1], EpochStats { learned: 1, fallback: 2, keys: 3 * 8192 });
+        assert_eq!(
+            stats.epochs[0],
+            EpochStats { learned: 2, fallback: 1, keys: 3 * 8192, learned_keys: 2 * 8192 }
+        );
+        assert_eq!(
+            stats.epochs[1],
+            EpochStats { learned: 1, fallback: 2, keys: 3 * 8192, learned_keys: 8192 }
+        );
     }
 
     #[test]
@@ -679,6 +704,67 @@ mod tests {
         assert_eq!(stats.learned_chunks, 1);
         assert_eq!(stats.fallback_chunks, 2);
         assert_eq!(stats.epochs.len(), 1, "no install → no new epoch");
+    }
+
+    #[test]
+    fn vetoed_tail_keys_stay_out_of_the_epoch_cut_weight() {
+        // Smooth regime trains the model, then a constant (100% dup) tail
+        // drifts away and every retrain attempt is vetoed by Algorithm 5's
+        // guard. The tail's keys land in epoch 0's `keys` but must NOT
+        // count toward its `learned_keys` — the stale model never
+        // described them, and weighting it by them used to inflate its
+        // share of the merge's mixture cuts (the ROADMAP-named bug).
+        let mut rng = Xoshiro256pp::new(0x7A11);
+        let mut keys: Vec<f64> = (0..2 * 16_384).map(|_| rng.uniform(0.0, 1e6)).collect();
+        keys.resize(keys.len() + 2 * 16_384, 7e6);
+        let cfg = ExternalConfig {
+            memory_budget: 16_384 * 8,
+            threads: 1,
+            retrain: RetrainPolicy { retrain_after: 1, max_retrains: 2 },
+            ..ExternalConfig::default()
+        };
+        let (_runs, stats, _spill) = gen_from_vec(keys, &cfg);
+        assert!(stats.rmi_trained);
+        assert_eq!(stats.retrains, 0, "constant tail must veto every install");
+        assert_eq!(stats.epochs.len(), 1);
+        assert_eq!(stats.epochs[0].keys, 4 * 16_384, "all keys counted");
+        assert_eq!(
+            stats.epochs[0].learned_keys,
+            2 * 16_384,
+            "only the learned regime may weight the model's cuts"
+        );
+    }
+
+    #[test]
+    fn delta_codec_spills_identical_runs_in_fewer_bytes() {
+        // Same stream, both codecs: identical sorted keys per run, and the
+        // duplicate-heavy runs shrink under delta (RunFile.bytes is what
+        // the report's spill accounting sums).
+        use crate::external::spill::SpillCodec;
+        let keys: Vec<u64> = (0..40_000u64).map(|i| 1_000_000_000 + (i * i) % 97).collect();
+        let base = ExternalConfig {
+            memory_budget: 8192 * 8,
+            threads: 1,
+            ..ExternalConfig::default()
+        };
+        let raw_cfg = ExternalConfig { spill_codec: SpillCodec::Raw, ..base.clone() };
+        let delta_cfg = ExternalConfig { spill_codec: SpillCodec::Delta, ..base };
+        let (raw_runs, _, _raw_spill) = gen_from_vec(keys.clone(), &raw_cfg);
+        let (delta_runs, _, _delta_spill) = gen_from_vec(keys, &delta_cfg);
+        assert_eq!(raw_runs.len(), delta_runs.len());
+        for (r, d) in raw_runs.iter().zip(&delta_runs) {
+            assert_eq!(
+                read_keys_file::<u64>(&r.path).unwrap(),
+                read_keys_file::<u64>(&d.path).unwrap(),
+                "codecs must decode to identical runs"
+            );
+            assert!(
+                d.bytes < r.bytes / 2,
+                "97 distinct values per run must collapse (delta {} vs raw {})",
+                d.bytes,
+                r.bytes
+            );
+        }
     }
 
     #[test]

@@ -7,17 +7,24 @@
 //! epoch — and a monotone CDF can be inverted: cut `[0,1)` into `p`
 //! equal-probability slices, map each cut back to a boundary key, and
 //! binary-search every sorted run for the boundary offsets
-//! ([`RunIndex::lower_bound`]). The result is `p` *range-disjoint* merge
+//! ([`RunIndex::lower_bound`] — on delta-compressed v2 runs the search
+//! runs over the block directory's restart keys and decodes exactly one
+//! candidate block per cut). The result is `p` *range-disjoint* merge
 //! problems — shard `s` of every run holds exactly the keys in
 //! `[bound_{s-1}, bound_s)` — which merge independently on the scheduler
 //! pool and land in disjoint byte ranges of the output file, concatenating
-//! into the fully sorted result with no extra pass.
+//! into the fully sorted result with no extra pass. The seek-written
+//! output is therefore always a *raw* pre-sized file, whatever codec the
+//! source runs spilled through; the shard range readers dispatch their
+//! codec per file, so raw and delta runs mix freely in one plan.
 //!
 //! After a regime change no single epoch's model describes the whole
-//! stream, so the cuts come from the **keys-weighted mixture** of all
-//! epoch models ([`crate::rmi::quality::quantile_key_weighted`]): the
-//! run↔epoch map from run generation weights each model by the keys its
-//! epoch produced, making the mixture the stream's estimated global CDF.
+//! stream, so the cuts come from the **learned-keys-weighted mixture** of
+//! all epoch models ([`crate::rmi::quality::quantile_key_weighted`]):
+//! each model is weighted by the keys its epoch actually sorted on the
+//! learned path (fallback chunks drifted from their epoch's model and are
+//! excluded, optionally age-decayed — `ExternalConfig::epoch_age_decay`),
+//! making the mixture the stream's estimated global CDF.
 //! The boundary offsets are still binary-searched *per run against the
 //! file's actual keys*, which is why runs spilled before a retrain index
 //! exactly under cuts derived from models installed after them.
@@ -533,6 +540,102 @@ mod tests {
         );
         cleanup(&runs, &sharded_out);
         let _ = std::fs::remove_file(&serial_out);
+    }
+
+    #[test]
+    fn delta_coded_runs_plan_and_merge_identically_to_raw() {
+        // The same runs spilled through both codecs must produce the same
+        // plan (cut offsets found via the v2 restart-point search) and a
+        // byte-identical sharded merge output.
+        use crate::external::spill::{RunWriter, SpillCodec};
+        let mut rng = Xoshiro256pp::new(0xDE17A);
+        let rmi = uniform_rmi(&mut rng);
+        let mut raw_runs = Vec::new();
+        let mut delta_runs = Vec::new();
+        for i in 0..4 {
+            let mut keys: Vec<f64> = (0..6000).map(|_| rng.uniform(0.0, 1e6)).collect();
+            // dup plateaus so the run-length escape is exercised in-plan
+            for j in 0..keys.len() / 4 {
+                keys[4 * j + 1] = keys[4 * j];
+            }
+            keys.sort_unstable_by(f64::total_cmp);
+            raw_runs.push(write_keys_file(&tmp(&format!("codec-raw-{i}")), &keys).unwrap());
+            let mut w = RunWriter::<f64>::create_with(
+                tmp(&format!("codec-delta-{i}")),
+                1 << 14,
+                SpillCodec::Delta,
+            )
+            .unwrap();
+            w.write_slice(&keys).unwrap();
+            delta_runs.push(w.finish().unwrap());
+        }
+        let models = [(&rmi, 1.0)];
+        let raw_plan = plan_shards::<f64>(&models, &raw_runs, 4).unwrap();
+        let delta_plan = plan_shards::<f64>(&models, &delta_runs, 4).unwrap();
+        assert_eq!(raw_plan.bounds(), delta_plan.bounds());
+        assert_eq!(raw_plan.shard_keys(), delta_plan.shard_keys());
+        assert_eq!(raw_plan.offsets, delta_plan.offsets, "identical cut offsets");
+
+        let raw_out = tmp("codec-raw-out.bin");
+        let delta_out = tmp("codec-delta-out.bin");
+        let cfg = ExternalConfig::default();
+        let a = merge_sharded::<f64>(&raw_runs, &raw_plan, &raw_out, &cfg, 3).unwrap();
+        let b = merge_sharded::<f64>(&delta_runs, &delta_plan, &delta_out, &cfg, 3).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(
+            std::fs::read(&raw_out).unwrap(),
+            std::fs::read(&delta_out).unwrap(),
+            "sharded merge over delta runs must be byte-identical to raw"
+        );
+        cleanup(&raw_runs, &raw_out);
+        cleanup(&delta_runs, &delta_out);
+    }
+
+    #[test]
+    fn faithful_weights_beat_stale_fallback_inflated_weights() {
+        // Regression for the mixture-weight bugfix. Two modeled regimes —
+        // A on U(0, 1e5), B on U(9e5, 1e6) — plus a fallback run whose
+        // keys landed back in A's range *after* the retrain budget was
+        // spent (epoch B's fallback chunks). The old weighting credited
+        // those 8000 fallback keys to model B, overweighting the top of
+        // the range; weighting each model by its *learned* keys only
+        // (4000:4000) tracks the data better and plans flatter shards.
+        let mut rng = Xoshiro256pp::new(0xFA17);
+        let train = |lo: f64, hi: f64, rng: &mut Xoshiro256pp| {
+            let mut s: Vec<f64> = (0..8192).map(|_| rng.uniform(lo, hi)).collect();
+            s.sort_unstable_by(f64::total_cmp);
+            Rmi::train(&s, crate::rmi::model::RmiConfig { n_leaves: 128 })
+        };
+        let model_a = train(0.0, 1e5, &mut rng);
+        let model_b = train(9e5, 1e6, &mut rng);
+        let a: Vec<f64> = (0..4000).map(|_| rng.uniform(0.0, 1e5)).collect();
+        let b: Vec<f64> = (0..4000).map(|_| rng.uniform(9e5, 1e6)).collect();
+        let tail: Vec<f64> = (0..8000).map(|_| rng.uniform(0.0, 1e5)).collect();
+        let runs = vec![
+            spill_sorted("fw-a", a),
+            spill_sorted("fw-b", b),
+            spill_sorted("fw-tail", tail),
+        ];
+        // stale: epoch B inflated by the 8000 fallback keys it never sorted
+        let stale =
+            plan_shards::<f64>(&[(&model_a, 4000.0), (&model_b, 12_000.0)], &runs, 4).unwrap();
+        // faithful: learned keys only
+        let faithful =
+            plan_shards::<f64>(&[(&model_a, 4000.0), (&model_b, 4000.0)], &runs, 4).unwrap();
+        assert!(
+            faithful.skew() < stale.skew(),
+            "learned-keys weights must plan flatter shards (faithful {} !< stale {})",
+            faithful.skew(),
+            stale.skew()
+        );
+        // and the stale plan really was lopsided: its bottom shard holds
+        // at least the whole low regime
+        assert!(stale.skew() > 2.5, "stale skew {}", stale.skew());
+        let out = tmp("fw-out.bin");
+        let cfg = ExternalConfig::default();
+        let n = merge_sharded::<f64>(&runs, &faithful, &out, &cfg, 4).unwrap();
+        assert_eq!(n, 16_000);
+        cleanup(&runs, &out);
     }
 
     #[test]

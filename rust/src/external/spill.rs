@@ -1,11 +1,22 @@
 //! Spill codec and run files — the IO substrate of the external sorter.
 //!
-//! Keys are stored as fixed-width little-endian values in their *native*
-//! encoding ([`SortKey::to_le_bytes`]), `K::WIDTH` bytes per key — the
-//! same format `aipso gen --out` writes, so any generated dataset file is
-//! a valid `sort_file` input and outputs round-trip byte-exactly. All four
-//! [`SortKey`] domains (`u64`/`f64` at 8 bytes, `u32`/`f32` at 4) flow
-//! through the one codec.
+//! Two payload codecs share one self-describing container:
+//!
+//! * **Raw** (format v1): keys as fixed-width little-endian values in
+//!   their *native* encoding ([`SortKey::to_le_bytes`]), `K::WIDTH` bytes
+//!   per key — the same format `aipso gen --out` writes, so any generated
+//!   dataset file is a valid `sort_file` input and outputs round-trip
+//!   byte-exactly. This is the interchange format: inputs, sorted outputs
+//!   and pre-sized shard-merge targets are always raw.
+//! * **Delta** (format v2): *sorted* runs as blocks of delta-encoded,
+//!   LEB128-varint keys. A run is nondecreasing by construction, so
+//!   consecutive ordered-bit deltas are non-negative and duplicate keys
+//!   collapse into run-length escapes — dup-heavy spills (zipf,
+//!   timestamps, sales plateaus) shrink well below `n × WIDTH` bytes,
+//!   which is exactly where the IO-bound merge spends its time.
+//!
+//! All four [`SortKey`] domains (`u64`/`f64` at 8 bytes, `u32`/`f32` at 4)
+//! flow through both codecs.
 //!
 //! # Spill format
 //!
@@ -15,26 +26,48 @@
 //! | offset | size | field |
 //! |-------:|-----:|-------|
 //! | 0      | 8    | magic `b"AIPSPILL"` |
-//! | 8      | 2    | format version (little-endian, currently [`FORMAT_VERSION`]) |
+//! | 8      | 2    | format version (little-endian; dispatches the payload codec) |
 //! | 10     | 1    | key-type tag ([`KeyKind::tag`]: 0=u64, 1=f64, 2=u32, 3=f32) |
 //! | 11     | 1    | key width in bytes (redundant with the tag; cross-checked) |
-//! | 12     | 4    | reserved (zero; future codecs — varint, compressed runs) |
+//! | 12     | 4    | reserved (zero) |
 //! | 16     | 8    | key count (little-endian) |
 //!
-//! Version table:
+//! Version table ([`SpillVersion`] dispatches readers off the version
+//! field):
 //!
 //! * **v0** — legacy headerless files: raw 8-byte little-endian keys,
 //!   nothing else. Still accepted on *read* (the pre-header `gen --out`
 //!   format), for 8-byte key types only; `length % 8 == 0` is the only
 //!   validation available.
-//! * **v1** — the current format above. Readers validate magic, version,
-//!   key-type tag and that the payload holds exactly `count` keys, so a
-//!   truncated or mis-typed file fails loudly instead of decoding garbage.
+//! * **v1** ([`RAW_VERSION`]) — header above + `count × WIDTH` bytes of
+//!   fixed-width native-LE keys. Readers validate magic, version,
+//!   key-type tag and that the payload holds exactly `count` keys.
+//! * **v2** ([`DELTA_VERSION`]) — header above + a sequence of delta
+//!   blocks holding `count` keys total. Requires nondecreasing keys
+//!   (sorted runs); [`RunWriter`] rejects out-of-order pushes.
 //!
-//! Readers distinguish the two by the magic: a v0 file whose first eight
-//! bytes spell `b"AIPSPILL"` (one specific key value) would be
-//! misdetected, which is why v1 exists — new files always carry the
-//! header.
+//! # v2 block layout
+//!
+//! | field | size | meaning |
+//! |---|---:|---|
+//! | key count | 4 | keys in this block (`1..=` [`BLOCK_KEYS`], LE) |
+//! | payload length | 4 | bytes of token payload after the restart key (LE) |
+//! | restart key | `WIDTH` | first key of the block as its **ordered bits** ([`SortKey::to_bits_ordered`], LE) |
+//! | payload | payload length | varint tokens encoding keys 2..=count |
+//!
+//! Payload tokens (LEB128 varints over the ordered-bits space):
+//!
+//! * `d ≥ 1` — next key = previous key + `d`;
+//! * `0` followed by `r ≥ 1` — the previous key repeats `r` more times
+//!   (the duplicate-run escape: a plateau of `m` equal keys costs
+//!   `1 + varint(m)` bytes instead of `m × WIDTH`).
+//!
+//! The restart key plus the explicit payload length keep blocks
+//! *seekable*: [`RunIndex`] walks the block directory once and
+//! binary-searches restart keys (block minima — the file is sorted), and
+//! [`RunReader::open_range`] skips whole blocks without decoding them, so
+//! the sharded merge's cut-offset searches stay `O(log blocks)` +
+//! one-block decodes.
 
 use std::fs::File;
 use std::io::{self, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
@@ -47,9 +80,14 @@ use crate::key::{KeyKind, SortKey};
 /// Magic prefix of self-describing (v1+) key files.
 pub const MAGIC: [u8; 8] = *b"AIPSPILL";
 
-/// Newest spill-format version this build writes (and the highest it
-/// accepts on read).
-pub const FORMAT_VERSION: u16 = 1;
+/// Format version of raw fixed-width files (the interchange format).
+pub const RAW_VERSION: u16 = 1;
+
+/// Format version of delta+varint block-compressed run files.
+pub const DELTA_VERSION: u16 = 2;
+
+/// Newest spill-format version this build understands.
+pub const FORMAT_VERSION: u16 = DELTA_VERSION;
 
 /// Bytes of header preceding the key payload in v1+ files.
 pub const HEADER_LEN: usize = 24;
@@ -57,6 +95,84 @@ pub const HEADER_LEN: usize = 24;
 /// Byte offset of the key-count field inside the header (patched by
 /// [`RunWriter::finish`] once the count is known).
 const COUNT_OFFSET: u64 = 16;
+
+/// Keys per v2 delta block. Small enough that a one-block decode (the
+/// unit of [`RunIndex`] random access) stays cheap, large enough that
+/// the fixed block framing (8 bytes + one restart key) is noise.
+pub const BLOCK_KEYS: usize = 4096;
+
+/// Payload codec of files the external sorter writes. The version byte in
+/// every file's header records which codec wrote it, so readers dispatch
+/// per file and the two codecs interoperate freely within one sort.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpillCodec {
+    /// Fixed-width native-LE keys (format v1) — the interchange format;
+    /// works for sorted and unsorted files alike.
+    Raw,
+    /// Delta+varint blocks (format v2) — sorted runs only; shrinks
+    /// duplicate-heavy and small-gap spills well below `WIDTH` bytes/key.
+    Delta,
+}
+
+impl SpillCodec {
+    /// Header version this codec writes.
+    pub const fn version(self) -> u16 {
+        match self {
+            SpillCodec::Raw => RAW_VERSION,
+            SpillCodec::Delta => DELTA_VERSION,
+        }
+    }
+
+    /// CLI spelling of the codec.
+    pub const fn name(self) -> &'static str {
+        match self {
+            SpillCodec::Raw => "raw",
+            SpillCodec::Delta => "delta",
+        }
+    }
+
+    /// Parse a CLI spelling (`raw`, `delta`).
+    pub fn parse(s: &str) -> Option<SpillCodec> {
+        match s {
+            "raw" => Some(SpillCodec::Raw),
+            "delta" => Some(SpillCodec::Delta),
+            _ => None,
+        }
+    }
+
+    /// Codec selected by the `SPILL_CODEC` environment variable, if set to
+    /// a valid spelling (CI runs the external suite once per codec this
+    /// way; see `ExternalConfig::spill_codec`).
+    pub fn from_env() -> Option<SpillCodec> {
+        std::env::var("SPILL_CODEC")
+            .ok()
+            .and_then(|v| SpillCodec::parse(v.trim()))
+    }
+}
+
+/// Payload layout of a key file, dispatched from the header's version
+/// field (`V0` = no header at all).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpillVersion {
+    /// Legacy headerless raw 8-byte keys (read-only).
+    V0,
+    /// Raw fixed-width keys behind the v1 header.
+    V1,
+    /// Delta+varint blocks behind the v2 header.
+    V2,
+}
+
+impl SpillVersion {
+    /// Map a header version field to its layout; `None` for versions this
+    /// build does not understand.
+    pub const fn of(version: u16) -> Option<SpillVersion> {
+        match version {
+            1 => Some(SpillVersion::V1),
+            2 => Some(SpillVersion::V2),
+            _ => None,
+        }
+    }
+}
 
 /// Decoded header of a self-describing key file.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,13 +186,28 @@ pub struct SpillHeader {
 }
 
 impl SpillHeader {
-    /// Header for a fresh file of `count` keys in the current format.
+    /// Header for a fresh **raw** (v1, interchange-format) file of `count`
+    /// keys.
     pub fn new(kind: KeyKind, count: u64) -> SpillHeader {
         SpillHeader {
-            version: FORMAT_VERSION,
+            version: RAW_VERSION,
             kind,
             count,
         }
+    }
+
+    /// Header for a fresh file written with `codec`.
+    pub fn for_codec(codec: SpillCodec, kind: KeyKind, count: u64) -> SpillHeader {
+        SpillHeader {
+            version: codec.version(),
+            kind,
+            count,
+        }
+    }
+
+    /// Payload layout behind this header.
+    pub fn spill_version(&self) -> SpillVersion {
+        SpillVersion::of(self.version).expect("decode validated the version")
     }
 
     /// Serialize into the on-disk layout (see the module docs).
@@ -96,7 +227,7 @@ impl SpillHeader {
         debug_assert_eq!(&b[..8], &MAGIC);
         let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
         let version = u16::from_le_bytes([b[8], b[9]]);
-        if version == 0 || version > FORMAT_VERSION {
+        if SpillVersion::of(version).is_none() {
             return Err(bad(format!(
                 "{}: unsupported spill format version {version} (this build reads v1..=v{FORMAT_VERSION})",
                 path.display()
@@ -125,6 +256,14 @@ impl SpillHeader {
             count,
         })
     }
+}
+
+/// `InvalidData` error with the file path prefixed.
+fn bad_data(path: &Path, msg: &str) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::InvalidData,
+        format!("{}: {msg}", path.display()),
+    )
 }
 
 /// Read the header of a key file: `Some` for self-describing (v1+) files,
@@ -162,9 +301,11 @@ fn parse_header(file: &mut File, path: &Path) -> io::Result<Option<SpillHeader>>
     SpillHeader::decode(&buf, path).map(Some)
 }
 
-/// Resolved location of the key payload inside a file.
+/// Resolved location and layout of the key payload inside a file.
 #[derive(Debug, Clone, Copy)]
 struct KeyLayout {
+    /// Payload codec (dispatched from the header's version byte).
+    version: SpillVersion,
     /// Byte offset of the first key ([`HEADER_LEN`], or 0 for v0 files).
     data_start: u64,
     /// Keys in the file.
@@ -173,7 +314,7 @@ struct KeyLayout {
 
 /// Check that a v1 file's byte length holds exactly the header's `count`
 /// keys (shared by [`resolve_layout`] and [`file_key_count`]).
-fn validate_payload(h: &SpillHeader, len: u64, path: &Path) -> io::Result<()> {
+fn validate_payload_v1(h: &SpillHeader, len: u64, path: &Path) -> io::Result<()> {
     let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
     let payload = len - HEADER_LEN as u64;
     let expect = h.count.checked_mul(h.kind.width() as u64).ok_or_else(|| {
@@ -195,8 +336,29 @@ fn validate_payload(h: &SpillHeader, len: u64, path: &Path) -> io::Result<()> {
     Ok(())
 }
 
+/// Cheap open-time sanity check of a v2 file's length (a nonempty file
+/// must at least hold one block header; the exact key count is validated
+/// by the block walk in [`file_key_count`]/[`RunIndex`] and by streaming
+/// reads).
+fn validate_payload_v2(h: &SpillHeader, len: u64, path: &Path) -> io::Result<()> {
+    let payload = len - HEADER_LEN as u64;
+    if h.count == 0 && payload != 0 {
+        return Err(bad_data(
+            path,
+            "delta file promises 0 keys but carries payload bytes",
+        ));
+    }
+    if h.count > 0 && payload < (8 + h.kind.width()) as u64 {
+        return Err(bad_data(
+            path,
+            "truncated delta payload (shorter than one block header)",
+        ));
+    }
+    Ok(())
+}
+
 /// Validate a file against the expected key domain and locate its
-/// payload. Accepts v1 files of exactly `kind` and headerless v0 files
+/// payload. Accepts v1/v2 files of exactly `kind` and headerless v0 files
 /// when `kind` is 8 bytes wide.
 fn resolve_layout(file: &mut File, path: &Path, kind: KeyKind) -> io::Result<KeyLayout> {
     let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
@@ -211,8 +373,14 @@ fn resolve_layout(file: &mut File, path: &Path, kind: KeyKind) -> io::Result<Key
                     kind.name()
                 )));
             }
-            validate_payload(&h, len, path)?;
+            let version = h.spill_version();
+            match version {
+                SpillVersion::V1 => validate_payload_v1(&h, len, path)?,
+                SpillVersion::V2 => validate_payload_v2(&h, len, path)?,
+                SpillVersion::V0 => unreachable!("headered files are v1+"),
+            }
             Ok(KeyLayout {
+                version,
                 data_start: HEADER_LEN as u64,
                 n: h.count,
             })
@@ -227,6 +395,7 @@ fn resolve_layout(file: &mut File, path: &Path, kind: KeyKind) -> io::Result<Key
                 )));
             }
             Ok(KeyLayout {
+                version: SpillVersion::V0,
                 data_start: 0,
                 n: v0_key_count(len, path)?,
             })
@@ -249,6 +418,192 @@ fn v0_key_count(len: u64, path: &Path) -> io::Result<u64> {
     Ok(len / 8)
 }
 
+// ---------------------------------------------------------------------------
+// v2 block primitives: LEB128 varints + block header IO + block decode.
+// ---------------------------------------------------------------------------
+
+/// Append `v` as an LEB128 varint (7 payload bits per byte, continuation
+/// in the top bit; at most 10 bytes for a `u64`).
+fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// `read_exact` with truncation mapped to a clear block-level error.
+fn read_exact_block<R: Read>(r: &mut R, buf: &mut [u8], path: &Path) -> io::Result<()> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            bad_data(path, "truncated delta block")
+        } else {
+            e
+        }
+    })
+}
+
+/// Read one LEB128 varint, charging each byte against the block's
+/// remaining payload `budget` so a corrupt payload length fails loudly
+/// instead of decoding into the next block.
+fn read_varint<R: Read>(r: &mut R, budget: &mut u32, path: &Path) -> io::Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        if *budget == 0 {
+            return Err(bad_data(
+                path,
+                "delta block payload ends mid-varint (corrupt payload length)",
+            ));
+        }
+        let mut b = [0u8; 1];
+        read_exact_block(r, &mut b, path)?;
+        *budget -= 1;
+        let byte = b[0];
+        if shift >= 63 && (byte & 0x7F) > 1 {
+            return Err(bad_data(path, "varint overflows 64 bits in delta block"));
+        }
+        v |= ((byte & 0x7F) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(bad_data(path, "varint longer than 10 bytes in delta block"));
+        }
+    }
+}
+
+/// Read a v2 block header: `(key count, payload length, restart key's
+/// ordered bits)`. `key_width` is in bytes (≤ 8; the restart key
+/// zero-extends into the `u64` ordered-bits space).
+fn read_block_header<R: Read>(
+    r: &mut R,
+    key_width: usize,
+    path: &Path,
+) -> io::Result<(u32, u32, u64)> {
+    let mut fixed = [0u8; 8];
+    read_exact_block(r, &mut fixed, path)?;
+    let count = u32::from_le_bytes(fixed[..4].try_into().unwrap());
+    let payload_len = u32::from_le_bytes(fixed[4..8].try_into().unwrap());
+    if count == 0 {
+        return Err(bad_data(path, "empty delta block (key count 0)"));
+    }
+    if count as usize > BLOCK_KEYS {
+        // the bound the format promises — and the cap on what a corrupt
+        // count can make the block-decode paths allocate
+        return Err(bad_data(path, "oversized delta block (key count over the block cap)"));
+    }
+    let mut kb = [0u8; 8];
+    read_exact_block(r, &mut kb[..key_width], path)?;
+    Ok((count, payload_len, u64::from_le_bytes(kb)))
+}
+
+/// Decode one whole block's keys (as ordered bits) from its token
+/// payload. Used by [`RunIndex`] random access; the streaming readers
+/// decode incrementally instead.
+fn decode_block_bits<K: SortKey>(
+    payload: &[u8],
+    first: u64,
+    count: u32,
+    path: &Path,
+) -> io::Result<Vec<u64>> {
+    let mut out = Vec::with_capacity(count as usize);
+    out.push(first);
+    let mut prev = first;
+    let mut cur = payload;
+    let mut budget = payload.len() as u32;
+    while (out.len() as u32) < count {
+        let d = read_varint(&mut cur, &mut budget, path)?;
+        if d == 0 {
+            let run = read_varint(&mut cur, &mut budget, path)?;
+            if run == 0 {
+                return Err(bad_data(path, "zero-length duplicate run in delta block"));
+            }
+            if out.len() as u64 + run > count as u64 {
+                return Err(bad_data(path, "duplicate run overruns its delta block"));
+            }
+            for _ in 0..run {
+                out.push(prev);
+            }
+        } else {
+            prev = match prev.checked_add(d) {
+                Some(b) if b <= K::max_ordered_bits() => b,
+                _ => return Err(bad_data(path, "key delta overflows the key domain")),
+            };
+            out.push(prev);
+        }
+    }
+    if budget != 0 {
+        return Err(bad_data(
+            path,
+            "delta block payload is longer than its tokens (corrupt block framing)",
+        ));
+    }
+    Ok(out)
+}
+
+/// One entry of a v2 file's block directory.
+struct BlockEntry {
+    /// Ordered bits of the block's first (minimum) key.
+    first_bits: u64,
+    /// Key index of the block's first key within the file.
+    start_idx: u64,
+    /// Byte offset of the token payload (past the block header).
+    payload_offset: u64,
+    /// Keys in the block.
+    count: u32,
+    /// Bytes of token payload.
+    payload_len: u32,
+}
+
+/// Walk a v2 file's blocks, validating framing (exact file length, key
+/// counts summing to the header's promise, nondecreasing restart keys)
+/// and returning the directory.
+fn walk_v2_blocks(
+    file: &mut File,
+    path: &Path,
+    n: u64,
+    width: usize,
+) -> io::Result<Vec<BlockEntry>> {
+    let len = file.metadata()?.len();
+    let mut pos = HEADER_LEN as u64;
+    file.seek(SeekFrom::Start(pos))?;
+    let mut blocks: Vec<BlockEntry> = Vec::new();
+    let mut start_idx = 0u64;
+    while pos < len {
+        let (count, payload_len, first_bits) = read_block_header(file, width, path)?;
+        pos += (8 + width) as u64;
+        if pos + payload_len as u64 > len {
+            return Err(bad_data(path, "truncated delta block payload"));
+        }
+        if blocks.last().is_some_and(|prev| first_bits < prev.first_bits) {
+            return Err(bad_data(path, "delta block restart keys out of order"));
+        }
+        blocks.push(BlockEntry {
+            first_bits,
+            start_idx,
+            payload_offset: pos,
+            count,
+            payload_len,
+        });
+        start_idx += count as u64;
+        pos += payload_len as u64;
+        file.seek(SeekFrom::Start(pos))?;
+    }
+    if start_idx != n {
+        return Err(bad_data(
+            path,
+            &format!("delta blocks hold {start_idx} keys but the header promises {n}"),
+        ));
+    }
+    Ok(blocks)
+}
+
 /// A spilled run (or any key file) on disk.
 #[derive(Debug, Clone)]
 pub struct RunFile {
@@ -256,6 +611,10 @@ pub struct RunFile {
     pub path: PathBuf,
     /// Number of keys in the file.
     pub n: u64,
+    /// Total bytes on disk (header + payload) — with the delta codec this
+    /// is what the run *actually* costs in IO, vs `HEADER_LEN + n × WIDTH`
+    /// for raw.
+    pub bytes: u64,
 }
 
 /// Scratch directory owning the spilled runs of one sort; removed
@@ -305,10 +664,116 @@ impl Drop for SpillDir {
 /// peak memory stays `O(slab)` regardless of chunk size).
 const SLAB_BYTES: usize = 8192;
 
-/// Buffered streaming reader over a key file.
+/// Streaming decoder state of one v2 reader: at most one block is "open"
+/// at a time, and within it at most one duplicate run — O(1) memory.
+#[derive(Default)]
+struct DeltaState {
+    /// Ordered bits of the last decoded key.
+    prev: u64,
+    /// Keys of the current block not yet emitted.
+    block_remaining: u32,
+    /// Token-payload bytes of the current block not yet consumed.
+    payload_remaining: u32,
+    /// Further copies of `prev` still owed by a duplicate-run token.
+    pending_run: u64,
+    /// The next emit is the block's restart key itself.
+    emit_restart: bool,
+}
+
+/// Per-codec decoding state of a [`RunReader`].
+enum Dec {
+    /// v0/v1 fixed-width keys.
+    Raw,
+    /// v2 delta blocks.
+    Delta(DeltaState),
+}
+
+/// Decode the next key of a v2 stream (the caller tracks how many keys
+/// remain and never over-calls).
+fn next_delta<K: SortKey>(
+    r: &mut BufReader<File>,
+    st: &mut DeltaState,
+    path: &Path,
+) -> io::Result<K> {
+    if st.block_remaining == 0 {
+        if st.payload_remaining != 0 {
+            return Err(bad_data(
+                path,
+                "delta block payload is longer than its tokens (corrupt block framing)",
+            ));
+        }
+        let (count, payload_len, first) = read_block_header(r, K::WIDTH, path)?;
+        st.prev = first;
+        st.block_remaining = count;
+        st.payload_remaining = payload_len;
+        st.pending_run = 0;
+        st.emit_restart = true;
+    }
+    st.block_remaining -= 1;
+    if st.emit_restart {
+        st.emit_restart = false;
+        return Ok(K::from_bits_ordered(st.prev));
+    }
+    if st.pending_run > 0 {
+        st.pending_run -= 1;
+        return Ok(K::from_bits_ordered(st.prev));
+    }
+    let d = read_varint(r, &mut st.payload_remaining, path)?;
+    if d == 0 {
+        let run = read_varint(r, &mut st.payload_remaining, path)?;
+        if run == 0 {
+            return Err(bad_data(path, "zero-length duplicate run in delta block"));
+        }
+        if run - 1 > st.block_remaining as u64 {
+            return Err(bad_data(path, "duplicate run overruns its delta block"));
+        }
+        st.pending_run = run - 1;
+        return Ok(K::from_bits_ordered(st.prev));
+    }
+    let next = match st.prev.checked_add(d) {
+        Some(b) if b <= K::max_ordered_bits() => b,
+        _ => return Err(bad_data(path, "key delta overflows the key domain")),
+    };
+    st.prev = next;
+    Ok(K::from_bits_ordered(next))
+}
+
+/// Skip `skip` keys of a v2 stream positioned at a block boundary,
+/// seeking over whole blocks (restart key + payload length — no decode)
+/// and decode-skipping only inside the final partial block.
+fn skip_delta<K: SortKey>(
+    r: &mut BufReader<File>,
+    st: &mut DeltaState,
+    path: &Path,
+    mut skip: u64,
+) -> io::Result<()> {
+    while skip > 0 {
+        if st.block_remaining == 0 {
+            let (count, payload_len, first) = read_block_header(r, K::WIDTH, path)?;
+            if count as u64 <= skip {
+                skip -= count as u64;
+                r.seek_relative(payload_len as i64)?;
+                continue;
+            }
+            st.prev = first;
+            st.block_remaining = count;
+            st.payload_remaining = payload_len;
+            st.pending_run = 0;
+            st.emit_restart = true;
+        }
+        next_delta::<K>(r, st, path)?;
+        skip -= 1;
+    }
+    Ok(())
+}
+
+/// Buffered streaming reader over a key file (any version — the payload
+/// codec is dispatched from the file's header).
 pub struct RunReader<K: SortKey> {
     r: BufReader<File>,
+    path: PathBuf,
     remaining: u64,
+    dec: Dec,
     _pd: PhantomData<K>,
 }
 
@@ -321,7 +786,9 @@ impl<K: SortKey> RunReader<K> {
 
     /// Open a buffered reader over the key range `[start, start + len)` of
     /// a key file (indices in keys, clamped to the file). The sharded
-    /// merge streams each run's shard segment through one of these.
+    /// merge streams each run's shard segment through one of these; on v2
+    /// files the skip to `start` seeks over whole blocks and decodes only
+    /// the final partial one.
     pub fn open_range(
         path: &Path,
         start: u64,
@@ -332,12 +799,30 @@ impl<K: SortKey> RunReader<K> {
         let layout = resolve_layout(&mut file, path, K::KIND)?;
         let start = start.min(layout.n);
         let len = len.min(layout.n - start);
-        file.seek(SeekFrom::Start(layout.data_start + start * K::WIDTH as u64))?;
-        Ok(RunReader {
+        let dec = match layout.version {
+            SpillVersion::V0 | SpillVersion::V1 => {
+                file.seek(SeekFrom::Start(layout.data_start + start * K::WIDTH as u64))?;
+                Dec::Raw
+            }
+            SpillVersion::V2 => {
+                file.seek(SeekFrom::Start(layout.data_start))?;
+                Dec::Delta(DeltaState::default())
+            }
+        };
+        let mut reader = RunReader {
             r: BufReader::with_capacity(io_buffer.max(4096), file),
+            path: path.to_path_buf(),
             remaining: len,
+            dec,
             _pd: PhantomData,
-        })
+        };
+        if let Dec::Delta(st) = &mut reader.dec {
+            // a zero-length range must not walk block headers that may
+            // not exist past the clamped start
+            let skip = if len == 0 { 0 } else { start };
+            skip_delta::<K>(&mut reader.r, st, &reader.path, skip)?;
+        }
+        Ok(reader)
     }
 
     /// Keys left in the file.
@@ -351,19 +836,36 @@ impl<K: SortKey> RunReader<K> {
         if self.remaining == 0 {
             return Ok(None);
         }
-        let mut buf = K::Bytes::default();
-        self.r.read_exact(buf.as_mut())?;
+        let key = match &mut self.dec {
+            Dec::Raw => {
+                let mut buf = K::Bytes::default();
+                self.r.read_exact(buf.as_mut())?;
+                K::from_le_bytes(buf)
+            }
+            Dec::Delta(st) => next_delta::<K>(&mut self.r, st, &self.path)?,
+        };
         self.remaining -= 1;
-        Ok(Some(K::from_le_bytes(buf)))
+        Ok(Some(key))
     }
 
-    /// Read up to `max` keys; an empty vec means EOF. Decodes through a
-    /// fixed scratch slab so peak memory stays `max * WIDTH + O(slab)` —
-    /// not double the chunk, which would break the sorter's byte budget.
+    /// Read up to `max` keys; an empty vec means EOF. Raw files decode
+    /// through a fixed scratch slab so peak memory stays `max * WIDTH +
+    /// O(slab)` — not double the chunk, which would break the sorter's
+    /// byte budget; v2 files decode incrementally in O(1) extra memory.
     pub fn read_chunk(&mut self, max: usize) -> io::Result<Vec<K>> {
         let take = (self.remaining.min(max as u64)) as usize;
         if take == 0 {
             return Ok(Vec::new());
+        }
+        if matches!(self.dec, Dec::Delta(_)) {
+            let mut out = Vec::with_capacity(take);
+            for _ in 0..take {
+                match self.next()? {
+                    Some(k) => out.push(k),
+                    None => break,
+                }
+            }
+            return Ok(out);
         }
         let per_slab = SLAB_BYTES / K::WIDTH;
         let mut out = Vec::with_capacity(take);
@@ -385,26 +887,55 @@ impl<K: SortKey> RunReader<K> {
     }
 }
 
+/// Version-specific random-access state of a [`RunIndex`].
+enum IndexKind {
+    /// v0/v1: positioned fixed-width reads.
+    Raw {
+        /// Byte offset of the first key.
+        data_start: u64,
+    },
+    /// v2: block directory + one-block decode cache. `lower_bound` binary
+    /// searches the restart keys (block minima) and decodes exactly one
+    /// candidate block.
+    Delta {
+        blocks: Vec<BlockEntry>,
+        cache: Option<(usize, Vec<u64>)>,
+    },
+}
+
 /// Random-access view of a sorted run file: positioned single-key reads
 /// and a lower-bound binary search over the key order. The shard planner
 /// uses this to locate shard boundaries in `O(log n)` seeks per run
-/// instead of streaming the whole file.
+/// (v0/v1) or `O(log blocks)` + one block decode (v2) instead of
+/// streaming the whole file.
 pub struct RunIndex<K: SortKey> {
     file: File,
-    data_start: u64,
+    path: PathBuf,
     n: u64,
+    kind: IndexKind,
     _pd: PhantomData<K>,
 }
 
 impl<K: SortKey> RunIndex<K> {
-    /// Open a key file for random access.
+    /// Open a key file for random access. v2 files get their block
+    /// framing fully validated here (the walk that builds the directory).
     pub fn open(path: &Path) -> io::Result<RunIndex<K>> {
         let mut file = File::open(path)?;
         let layout = resolve_layout(&mut file, path, K::KIND)?;
+        let kind = match layout.version {
+            SpillVersion::V0 | SpillVersion::V1 => IndexKind::Raw {
+                data_start: layout.data_start,
+            },
+            SpillVersion::V2 => IndexKind::Delta {
+                blocks: walk_v2_blocks(&mut file, path, layout.n, K::WIDTH)?,
+                cache: None,
+            },
+        };
         Ok(RunIndex {
             file,
-            data_start: layout.data_start,
+            path: path.to_path_buf(),
             n: layout.n,
+            kind,
             _pd: PhantomData,
         })
     }
@@ -419,21 +950,57 @@ impl<K: SortKey> RunIndex<K> {
         self.n == 0
     }
 
-    /// Read the key at index `idx` with one positioned read.
+    /// Read the key at index `idx` — one positioned read (v0/v1) or a
+    /// cached one-block decode (v2).
     pub fn key_at(&mut self, idx: u64) -> io::Result<K> {
         debug_assert!(idx < self.n);
-        self.file
-            .seek(SeekFrom::Start(self.data_start + idx * K::WIDTH as u64))?;
-        let mut buf = K::Bytes::default();
-        self.file.read_exact(buf.as_mut())?;
-        Ok(K::from_le_bytes(buf))
+        if let IndexKind::Raw { data_start } = &self.kind {
+            let off = *data_start + idx * K::WIDTH as u64;
+            self.file.seek(SeekFrom::Start(off))?;
+            let mut buf = K::Bytes::default();
+            self.file.read_exact(buf.as_mut())?;
+            return Ok(K::from_le_bytes(buf));
+        }
+        let (b, start) = {
+            let IndexKind::Delta { blocks, .. } = &self.kind else {
+                unreachable!();
+            };
+            // last block whose start index is <= idx
+            let b = blocks.partition_point(|e| e.start_idx <= idx) - 1;
+            (b, blocks[b].start_idx)
+        };
+        let bits = self.ensure_block(b)?;
+        Ok(K::from_bits_ordered(bits[(idx - start) as usize]))
+    }
+
+    /// Decode (or reuse the cached decode of) block `b`, returning its
+    /// keys as ordered bits.
+    fn ensure_block(&mut self, b: usize) -> io::Result<&[u64]> {
+        let IndexKind::Delta { blocks, cache } = &mut self.kind else {
+            unreachable!("ensure_block is v2-only");
+        };
+        if cache.as_ref().map(|(i, _)| *i) != Some(b) {
+            let e = &blocks[b];
+            self.file.seek(SeekFrom::Start(e.payload_offset))?;
+            let mut payload = vec![0u8; e.payload_len as usize];
+            read_exact_block(&mut self.file, &mut payload, &self.path)?;
+            let bits = decode_block_bits::<K>(&payload, e.first_bits, e.count, &self.path)?;
+            *cache = Some((b, bits));
+        }
+        Ok(&cache.as_ref().unwrap().1)
     }
 
     /// First index whose key's ordered bits are `>= bound_bits`, assuming
     /// the file is sorted (`n` when every key is below the bound). This is
     /// the shard-boundary cut: keys equal to the bound fall into the shard
     /// that *starts* at the bound, so duplicates never straddle a cut.
+    ///
+    /// On v2 files the search runs over the block directory's restart
+    /// keys first, then decodes exactly one candidate block.
     pub fn lower_bound(&mut self, bound_bits: u64) -> io::Result<u64> {
+        if matches!(self.kind, IndexKind::Delta { .. }) {
+            return self.delta_lower_bound(bound_bits);
+        }
         let (mut lo, mut hi) = (0u64, self.n);
         while lo < hi {
             let mid = lo + (hi - lo) / 2;
@@ -445,28 +1012,82 @@ impl<K: SortKey> RunIndex<K> {
         }
         Ok(lo)
     }
+
+    /// v2 lower bound: restart keys are block minima of a sorted file, so
+    /// the only block that can straddle the bound is the last one whose
+    /// restart key is below it.
+    fn delta_lower_bound(&mut self, bound_bits: u64) -> io::Result<u64> {
+        let (cand, cand_start) = {
+            let IndexKind::Delta { blocks, .. } = &self.kind else {
+                unreachable!();
+            };
+            let p = blocks.partition_point(|e| e.first_bits < bound_bits);
+            if p == 0 {
+                return Ok(0); // every block starts at or above the bound
+            }
+            (p - 1, blocks[p - 1].start_idx)
+        };
+        let bits = self.ensure_block(cand)?;
+        let off = bits.partition_point(|&b| b < bound_bits) as u64;
+        Ok(cand_start + off)
+    }
 }
 
-/// Buffered streaming writer producing a [`RunFile`] in the current
-/// (v1, self-describing) spill format.
+/// Per-block encoder state of a delta [`RunWriter`]: keys accumulate as
+/// encoded tokens (never as a key buffer), with at most one duplicate run
+/// pending coalescence.
+#[derive(Default)]
+struct DeltaBlock {
+    /// Keys in the open block.
+    count: u32,
+    /// Ordered bits of the block's first key.
+    restart: u64,
+    /// Ordered bits of the last pushed key.
+    prev: u64,
+    /// Duplicates of `prev` not yet flushed as a run token.
+    pending_run: u64,
+    /// Encoded token payload of the open block.
+    payload: Vec<u8>,
+}
+
+/// Buffered streaming writer producing a [`RunFile`] in the configured
+/// codec: raw v1 (the default — the interchange format `gen --out`
+/// writes) or delta v2 for sorted runs ([`RunWriter::create_with`]).
 pub struct RunWriter<K: SortKey> {
     w: BufWriter<File>,
     path: PathBuf,
     n: u64,
+    bytes: u64,
+    codec: SpillCodec,
+    block: DeltaBlock,
     _pd: PhantomData<K>,
 }
 
 impl<K: SortKey> RunWriter<K> {
-    /// Create (truncate) the file at `path`, write its header with a
-    /// placeholder count, and return a writer over it.
+    /// Create (truncate) the file at `path` in the raw (v1) codec, write
+    /// its header with a placeholder count, and return a writer over it.
     pub fn create(path: PathBuf, io_buffer: usize) -> io::Result<RunWriter<K>> {
+        Self::create_with(path, io_buffer, SpillCodec::Raw)
+    }
+
+    /// [`RunWriter::create`] with an explicit codec. The delta codec
+    /// requires nondecreasing keys (sorted runs) — an out-of-order push
+    /// fails with `InvalidInput` rather than writing an undecodable file.
+    pub fn create_with(
+        path: PathBuf,
+        io_buffer: usize,
+        codec: SpillCodec,
+    ) -> io::Result<RunWriter<K>> {
         let file = File::create(&path)?;
         let mut w = BufWriter::with_capacity(io_buffer.max(4096), file);
-        w.write_all(&SpillHeader::new(K::KIND, 0).encode())?;
+        w.write_all(&SpillHeader::for_codec(codec, K::KIND, 0).encode())?;
         Ok(RunWriter {
             w,
             path,
             n: 0,
+            bytes: HEADER_LEN as u64,
+            codec,
+            block: DeltaBlock::default(),
             _pd: PhantomData,
         })
     }
@@ -474,14 +1095,84 @@ impl<K: SortKey> RunWriter<K> {
     /// Append one key.
     #[inline]
     pub fn push(&mut self, key: K) -> io::Result<()> {
-        self.w.write_all(key.to_le_bytes().as_ref())?;
+        match self.codec {
+            SpillCodec::Raw => {
+                self.w.write_all(key.to_le_bytes().as_ref())?;
+                self.bytes += K::WIDTH as u64;
+            }
+            SpillCodec::Delta => self.push_delta(key.to_bits_ordered())?,
+        }
         self.n += 1;
         Ok(())
     }
 
-    /// Bulk spill: encodes through a fixed slab and writes in blocks,
-    /// mirroring `RunReader::read_chunk` (no per-key `write_all`).
+    /// Delta-encode one key into the open block, flushing the block once
+    /// it holds [`BLOCK_KEYS`] keys.
+    fn push_delta(&mut self, bits: u64) -> io::Result<()> {
+        let b = &mut self.block;
+        if b.count == 0 {
+            b.restart = bits;
+            b.prev = bits;
+            b.count = 1;
+        } else if bits == b.prev {
+            b.pending_run += 1;
+            b.count += 1;
+        } else if bits > b.prev {
+            if b.pending_run > 0 {
+                push_varint(&mut b.payload, 0);
+                push_varint(&mut b.payload, b.pending_run);
+                b.pending_run = 0;
+            }
+            push_varint(&mut b.payload, bits - b.prev);
+            b.prev = bits;
+            b.count += 1;
+        } else {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "{}: the delta spill codec encodes sorted runs only \
+                     (keys must be nondecreasing)",
+                    self.path.display()
+                ),
+            ));
+        }
+        if b.count as usize >= BLOCK_KEYS {
+            self.flush_block()?;
+        }
+        Ok(())
+    }
+
+    /// Write the open block (if any) and reset the encoder.
+    fn flush_block(&mut self) -> io::Result<()> {
+        let b = &mut self.block;
+        if b.count == 0 {
+            return Ok(());
+        }
+        if b.pending_run > 0 {
+            push_varint(&mut b.payload, 0);
+            push_varint(&mut b.payload, b.pending_run);
+            b.pending_run = 0;
+        }
+        self.w.write_all(&b.count.to_le_bytes())?;
+        self.w.write_all(&(b.payload.len() as u32).to_le_bytes())?;
+        self.w.write_all(&b.restart.to_le_bytes()[..K::WIDTH])?;
+        self.w.write_all(&b.payload)?;
+        self.bytes += (8 + K::WIDTH + b.payload.len()) as u64;
+        b.payload.clear();
+        b.count = 0;
+        Ok(())
+    }
+
+    /// Bulk spill. Raw encodes through a fixed slab and writes in blocks,
+    /// mirroring `RunReader::read_chunk` (no per-key `write_all`); delta
+    /// feeds the block encoder.
     pub fn write_slice(&mut self, keys: &[K]) -> io::Result<()> {
+        if self.codec == SpillCodec::Delta {
+            for &k in keys {
+                self.push(k)?;
+            }
+            return Ok(());
+        }
         let per_slab = SLAB_BYTES / K::WIDTH;
         let mut slab = [0u8; SLAB_BYTES];
         for block in keys.chunks(per_slab) {
@@ -492,12 +1183,16 @@ impl<K: SortKey> RunWriter<K> {
             self.w.write_all(bytes)?;
         }
         self.n += keys.len() as u64;
+        self.bytes += (keys.len() * K::WIDTH) as u64;
         Ok(())
     }
 
-    /// Flush, patch the real key count into the header, and close,
-    /// returning the finished run's metadata.
+    /// Flush (including a partial final block), patch the real key count
+    /// into the header, and close, returning the finished run's metadata.
     pub fn finish(mut self) -> io::Result<RunFile> {
+        if self.codec == SpillCodec::Delta {
+            self.flush_block()?;
+        }
         self.w.flush()?;
         let file = self.w.get_mut();
         file.seek(SeekFrom::Start(COUNT_OFFSET))?;
@@ -505,13 +1200,16 @@ impl<K: SortKey> RunWriter<K> {
         Ok(RunFile {
             path: self.path,
             n: self.n,
+            bytes: self.bytes,
         })
     }
 }
 
-/// Create a v1 key file of exactly `count` keys whose payload will be
-/// filled by positioned writes (the sharded merges): header up front,
-/// file pre-sized so every shard can open + seek independently.
+/// Create a raw (v1) key file of exactly `count` keys whose payload will
+/// be filled by positioned writes (the sharded merges): header up front,
+/// file pre-sized so every shard can open + seek independently. Always
+/// raw — seek-written disjoint ranges are incompatible with a
+/// variable-length payload.
 pub(crate) fn create_presized<K: SortKey>(path: &Path, count: u64) -> io::Result<()> {
     let mut f = File::create(path)?;
     f.write_all(&SpillHeader::new(K::KIND, count).encode())?;
@@ -519,7 +1217,28 @@ pub(crate) fn create_presized<K: SortKey>(path: &Path, count: u64) -> io::Result
     Ok(())
 }
 
-/// Write a whole in-memory slice as a key file.
+/// Stream-rewrite any key file as raw v1 (the interchange format). Used
+/// by the single-run fast path when the spilled run was delta-coded: the
+/// output file contract is raw regardless of the spill codec.
+pub(crate) fn transcode_raw<K: SortKey>(
+    src: &Path,
+    dst: &Path,
+    io_buffer: usize,
+) -> io::Result<RunFile> {
+    let mut r = RunReader::<K>::open(src, io_buffer)?;
+    let mut w = RunWriter::<K>::create(dst.to_path_buf(), io_buffer)?;
+    let chunk_keys = (io_buffer / K::WIDTH).max(1024);
+    loop {
+        let chunk = r.read_chunk(chunk_keys)?;
+        if chunk.is_empty() {
+            break;
+        }
+        w.write_slice(&chunk)?;
+    }
+    w.finish()
+}
+
+/// Write a whole in-memory slice as a raw (v1) key file.
 pub fn write_keys_file<K: SortKey>(path: &Path, keys: &[K]) -> io::Result<RunFile> {
     let mut w = RunWriter::create(path.to_path_buf(), 1 << 16)?;
     w.write_slice(keys)?;
@@ -534,14 +1253,20 @@ pub fn read_keys_file<K: SortKey>(path: &Path) -> io::Result<Vec<K>> {
 }
 
 /// Number of keys in a key file: the header's count for self-describing
-/// files (validated against the payload length), the byte length over 8
-/// for headerless v0 files.
+/// files (validated against the payload — exact length for v1, a full
+/// block walk for v2), the byte length over 8 for headerless v0 files.
 pub fn file_key_count(path: &Path) -> io::Result<u64> {
     let mut file = File::open(path)?;
     let len = file.metadata()?.len();
     match parse_header(&mut file, path)? {
         Some(h) => {
-            validate_payload(&h, len, path)?;
+            match h.spill_version() {
+                SpillVersion::V1 => validate_payload_v1(&h, len, path)?,
+                SpillVersion::V2 => {
+                    walk_v2_blocks(&mut file, path, h.count, h.kind.width())?;
+                }
+                SpillVersion::V0 => unreachable!("headered files are v1+"),
+            }
             Ok(h.count)
         }
         None => v0_key_count(len, path),
@@ -571,6 +1296,14 @@ mod tests {
 
     fn tmp(name: &str) -> PathBuf {
         std::env::temp_dir().join(format!("aipso-spill-test-{}-{name}", std::process::id()))
+    }
+
+    /// Write sorted keys through the delta codec.
+    fn write_delta<K: SortKey>(path: &Path, keys: &[K]) -> RunFile {
+        let mut w =
+            RunWriter::<K>::create_with(path.to_path_buf(), 1 << 14, SpillCodec::Delta).unwrap();
+        w.write_slice(keys).unwrap();
+        w.finish().unwrap()
     }
 
     #[test]
@@ -627,15 +1360,32 @@ mod tests {
         assert_eq!(
             h,
             SpillHeader {
-                version: FORMAT_VERSION,
+                version: RAW_VERSION,
                 kind: KeyKind::U32,
                 count: 3
             }
         );
+        assert_eq!(h.spill_version(), SpillVersion::V1);
         // encode/decode are inverses
         let enc = h.encode();
         assert_eq!(SpillHeader::decode(&enc, &p).unwrap(), h);
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn codec_and_version_tables_agree() {
+        assert_eq!(SpillCodec::Raw.version(), RAW_VERSION);
+        assert_eq!(SpillCodec::Delta.version(), DELTA_VERSION);
+        assert_eq!(SpillCodec::parse("raw"), Some(SpillCodec::Raw));
+        assert_eq!(SpillCodec::parse("delta"), Some(SpillCodec::Delta));
+        assert_eq!(SpillCodec::parse("zstd"), None);
+        assert_eq!(SpillVersion::of(1), Some(SpillVersion::V1));
+        assert_eq!(SpillVersion::of(2), Some(SpillVersion::V2));
+        assert_eq!(SpillVersion::of(0), None);
+        assert_eq!(SpillVersion::of(3), None);
+        let h = SpillHeader::for_codec(SpillCodec::Delta, KeyKind::F32, 9);
+        assert_eq!(h.version, DELTA_VERSION);
+        assert_eq!(h.spill_version(), SpillVersion::V2);
     }
 
     #[test]
@@ -829,6 +1579,323 @@ mod tests {
         std::fs::write(&p, [0u8; 7]).unwrap();
         assert!(RunReader::<u64>::open(&p, 4096).is_err());
         assert!(file_key_count(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    // -- v2 delta codec ----------------------------------------------------
+
+    #[test]
+    fn varint_roundtrips_edge_values() {
+        let p = tmp("varint-probe");
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX - 1, u64::MAX] {
+            let mut buf = Vec::new();
+            push_varint(&mut buf, v);
+            assert!(buf.len() <= 10, "v={v}: {} bytes", buf.len());
+            let mut budget = buf.len() as u32;
+            let got = read_varint(&mut buf.as_slice(), &mut budget, &p).unwrap();
+            assert_eq!(got, v);
+            assert_eq!(budget, 0, "v={v}: trailing bytes");
+        }
+    }
+
+    #[test]
+    fn delta_roundtrip_sorted_runs_all_four_widths() {
+        // Sorted keys through the v2 writer must reload identically via
+        // both the streaming reader and the block index, in every domain.
+        let p = tmp("delta-rt.bin");
+
+        let keys: Vec<u64> = vec![0, 0, 1, 5, 5, 5, 1000, u64::MAX - 1, u64::MAX, u64::MAX];
+        let run = write_delta(&p, &keys);
+        assert_eq!(run.n, keys.len() as u64);
+        let h = read_header(&p).unwrap().unwrap();
+        assert_eq!(h.version, DELTA_VERSION);
+        assert_eq!(h.count, keys.len() as u64);
+        assert_eq!(file_key_count(&p).unwrap(), keys.len() as u64);
+        assert_eq!(read_keys_file::<u64>(&p).unwrap(), keys);
+        assert!(verify_sorted_file::<u64>(&p, 4096).unwrap());
+
+        let keys: Vec<u32> = vec![0, 7, 7, 7, 9, u32::MAX];
+        write_delta(&p, &keys);
+        assert_eq!(read_keys_file::<u32>(&p).unwrap(), keys);
+
+        let mut keys: Vec<f64> = vec![f64::NEG_INFINITY, -2.5, -0.0, 0.0, 0.0, 7.25, 1e300];
+        keys.sort_unstable_by(f64::total_cmp);
+        write_delta(&p, &keys);
+        let back = read_keys_file::<f64>(&p).unwrap();
+        let a: Vec<u64> = keys.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u64> = back.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "bit-exact f64 reload through the delta codec");
+
+        let keys: Vec<f32> = vec![-1e30, -1.5, 0.0, 0.0, 2.5, 1e30];
+        write_delta(&p, &keys);
+        let back = read_keys_file::<f32>(&p).unwrap();
+        let a: Vec<u32> = keys.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "bit-exact f32 reload through the delta codec");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn delta_single_key_all_dups_and_max_delta_blocks() {
+        let p = tmp("delta-edges.bin");
+
+        // single-key file: one block, empty payload
+        write_delta::<u64>(&p, &[42]);
+        assert_eq!(read_keys_file::<u64>(&p).unwrap(), vec![42]);
+        assert_eq!(
+            std::fs::metadata(&p).unwrap().len(),
+            (HEADER_LEN + 8 + 8) as u64,
+            "single-key block is header + block framing + restart key"
+        );
+
+        // all-duplicates: the run-length escape collapses the payload
+        let dups = vec![7u64; 3 * BLOCK_KEYS + 5];
+        let run = write_delta(&p, &dups);
+        assert_eq!(read_keys_file::<u64>(&p).unwrap(), dups);
+        assert!(
+            run.bytes < (dups.len() * 8) as u64 / 100,
+            "all-dup blocks must collapse ({} bytes for {} keys)",
+            run.bytes,
+            dups.len()
+        );
+
+        // maximum delta: 0 -> u64::MAX in one 10-byte varint
+        write_delta::<u64>(&p, &[0, u64::MAX]);
+        assert_eq!(read_keys_file::<u64>(&p).unwrap(), vec![0, u64::MAX]);
+
+        // empty file: header only
+        write_delta::<u64>(&p, &[]);
+        assert_eq!(file_key_count(&p).unwrap(), 0);
+        assert!(read_keys_file::<u64>(&p).unwrap().is_empty());
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), HEADER_LEN as u64);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn delta_spans_block_boundaries() {
+        // More keys than one block holds: framing + restarts must stitch
+        // blocks back together seamlessly.
+        let p = tmp("delta-blocks.bin");
+        let keys: Vec<u64> = (0..(2 * BLOCK_KEYS + 123) as u64).map(|i| i * 3).collect();
+        write_delta(&p, &keys);
+        assert_eq!(read_keys_file::<u64>(&p).unwrap(), keys);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn delta_range_reads_and_index_lower_bound() {
+        // The v2 analogue of `range_reads_and_index_lower_bound`: ranged
+        // readers skip whole blocks, and the index searches restart points.
+        let p = tmp("delta-range.bin");
+        let n = 2 * BLOCK_KEYS as u64 + 500;
+        let keys: Vec<u64> = (0..n).map(|i| i * 2).collect();
+        write_delta(&p, &keys);
+
+        let mut r = RunReader::<u64>::open_range(&p, 10, 5, 4096).unwrap();
+        assert_eq!(r.read_chunk(100).unwrap(), vec![20, 22, 24, 26, 28]);
+
+        // a range starting beyond the first block exercises the block skip
+        let start = BLOCK_KEYS as u64 + 7;
+        let mut r = RunReader::<u64>::open_range(&p, start, 3, 4096).unwrap();
+        assert_eq!(
+            r.read_chunk(10).unwrap(),
+            vec![start * 2, start * 2 + 2, start * 2 + 4]
+        );
+        let mut r = RunReader::<u64>::open_range(&p, n - 2, 100, 4096).unwrap();
+        assert_eq!(r.read_chunk(100).unwrap(), vec![(n - 2) * 2, (n - 1) * 2]);
+        let mut r = RunReader::<u64>::open_range(&p, n + 9999, 10, 4096).unwrap();
+        assert!(r.read_chunk(10).unwrap().is_empty());
+
+        let mut idx = RunIndex::<u64>::open(&p).unwrap();
+        assert_eq!(idx.len(), n);
+        assert_eq!(idx.key_at(0).unwrap(), 0);
+        assert_eq!(idx.key_at(n - 1).unwrap(), (n - 1) * 2);
+        assert_eq!(idx.key_at(BLOCK_KEYS as u64).unwrap(), BLOCK_KEYS as u64 * 2);
+        // present key -> its index; absent key -> insertion point; cuts
+        // beyond the first block land via the restart-key directory
+        assert_eq!(idx.lower_bound(40).unwrap(), 20);
+        assert_eq!(idx.lower_bound(41).unwrap(), 21);
+        let mid = (BLOCK_KEYS as u64 + 100) * 2;
+        assert_eq!(idx.lower_bound(mid).unwrap(), BLOCK_KEYS as u64 + 100);
+        assert_eq!(idx.lower_bound(0).unwrap(), 0);
+        assert_eq!(idx.lower_bound(u64::MAX).unwrap(), n);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn delta_duplicate_runs_split_across_blocks_index_exactly() {
+        // A duplicate plateau longer than one block: lower_bound must put
+        // the cut at the plateau's first copy even though several blocks
+        // share the same restart key.
+        let p = tmp("delta-dup-cut.bin");
+        let mut keys: Vec<u64> = vec![1; 100];
+        keys.extend(vec![5u64; 2 * BLOCK_KEYS]);
+        keys.extend(vec![9u64; 100]);
+        write_delta(&p, &keys);
+        let mut idx = RunIndex::<u64>::open(&p).unwrap();
+        assert_eq!(idx.lower_bound(5).unwrap(), 100);
+        assert_eq!(idx.lower_bound(6).unwrap(), 100 + 2 * BLOCK_KEYS as u64);
+        assert_eq!(idx.lower_bound(9).unwrap(), 100 + 2 * BLOCK_KEYS as u64);
+        assert_eq!(read_keys_file::<u64>(&p).unwrap(), keys);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn delta_writer_rejects_unsorted_keys() {
+        let p = tmp("delta-unsorted.bin");
+        let mut w = RunWriter::<u64>::create_with(p.clone(), 4096, SpillCodec::Delta).unwrap();
+        w.push(10).unwrap();
+        let err = w.push(9).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        assert!(err.to_string().contains("nondecreasing"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    /// Build a v2 file from hand-crafted block bytes.
+    fn craft_v2(kind: KeyKind, count: u64, blocks: &[u8]) -> Vec<u8> {
+        let mut bytes = SpillHeader::for_codec(SpillCodec::Delta, kind, count)
+            .encode()
+            .to_vec();
+        bytes.extend_from_slice(blocks);
+        bytes
+    }
+
+    /// One encoded block: count + payload_len + restart (width bytes) + payload.
+    fn craft_block(count: u32, restart: u64, width: usize, payload: &[u8]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&count.to_le_bytes());
+        b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        b.extend_from_slice(&restart.to_le_bytes()[..width]);
+        b.extend_from_slice(payload);
+        b
+    }
+
+    #[test]
+    fn corrupted_delta_blocks_fail_loudly() {
+        // The v2 mirror of `truncated_and_corrupt_headers_fail_loudly`:
+        // every class of block corruption gets a specific error.
+        let p = tmp("delta-corrupt.bin");
+
+        // zero-count block
+        let bytes = craft_v2(KeyKind::U64, 1, &craft_block(0, 5, 8, &[]));
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_keys_file::<u64>(&p).unwrap_err();
+        assert!(err.to_string().contains("empty delta block"), "{err}");
+        assert!(file_key_count(&p).is_err());
+
+        // count past the block cap must error, never size an allocation
+        let huge = craft_block(u32::MAX, 5, 8, &[0x00, 0x01]);
+        let bytes = craft_v2(KeyKind::U64, u32::MAX as u64, &huge);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_keys_file::<u64>(&p).unwrap_err();
+        assert!(err.to_string().contains("oversized delta block"), "{err}");
+        assert!(file_key_count(&p).is_err());
+
+        // payload ends mid-varint (continuation bit set on the last byte)
+        let bytes = craft_v2(KeyKind::U64, 2, &craft_block(2, 5, 8, &[0x80]));
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_keys_file::<u64>(&p).unwrap_err();
+        assert!(err.to_string().contains("mid-varint"), "{err}");
+
+        // zero-length duplicate run (token 0 followed by run 0)
+        let bytes = craft_v2(KeyKind::U64, 2, &craft_block(2, 5, 8, &[0x00, 0x00]));
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_keys_file::<u64>(&p).unwrap_err();
+        assert!(err.to_string().contains("zero-length duplicate run"), "{err}");
+
+        // duplicate run overrunning its block (run 5 in a 2-key block)
+        let bytes = craft_v2(KeyKind::U64, 2, &craft_block(2, 5, 8, &[0x00, 0x05]));
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_keys_file::<u64>(&p).unwrap_err();
+        assert!(err.to_string().contains("overruns"), "{err}");
+
+        // delta overflowing a narrow key domain (u32: restart MAX, delta 1)
+        let bytes = craft_v2(KeyKind::U32, 2, &craft_block(2, u32::MAX as u64, 4, &[0x01]));
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_keys_file::<u32>(&p).unwrap_err();
+        assert!(err.to_string().contains("overflows the key domain"), "{err}");
+
+        // truncated block payload (payload_len reaches past EOF)
+        let mut blk = craft_block(3, 5, 8, &[0x01, 0x01]);
+        let cut = blk.len() - 1;
+        blk.truncate(cut);
+        blk[4..8].copy_from_slice(&2u32.to_le_bytes()); // still promises 2 bytes
+        let bytes = craft_v2(KeyKind::U64, 3, &blk);
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_keys_file::<u64>(&p).is_err());
+        let err = file_key_count(&p).unwrap_err();
+        assert!(err.to_string().contains("truncated delta block"), "{err}");
+
+        // blocks holding fewer keys than the header promises
+        let bytes = craft_v2(KeyKind::U64, 9, &craft_block(2, 5, 8, &[0x01]));
+        std::fs::write(&p, &bytes).unwrap();
+        let err = file_key_count(&p).unwrap_err();
+        assert!(err.to_string().contains("header promises"), "{err}");
+        // the streaming reader hits EOF looking for the missing block
+        assert!(read_keys_file::<u64>(&p).is_err());
+
+        // payload longer than its tokens (framing says 3 bytes, tokens use 1)
+        let blocks = [
+            craft_block(2, 5, 8, &[0x01, 0x00, 0x00]),
+            craft_block(2, 50, 8, &[0x01]),
+        ]
+        .concat();
+        let bytes = craft_v2(KeyKind::U64, 4, &blocks);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_keys_file::<u64>(&p).unwrap_err();
+        assert!(
+            err.to_string().contains("longer than its tokens")
+                || err.to_string().contains("zero-length duplicate run"),
+            "{err}"
+        );
+
+        // restart keys out of order across blocks (not a sorted run)
+        let bytes = craft_v2(
+            KeyKind::U64,
+            2,
+            &[craft_block(1, 50, 8, &[]), craft_block(1, 5, 8, &[])].concat(),
+        );
+        std::fs::write(&p, &bytes).unwrap();
+        let err = RunIndex::<u64>::open(&p).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("out of order"), "{err}");
+
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn transcode_raw_rewrites_delta_as_interchange() {
+        let src = tmp("transcode-src.bin");
+        let dst = tmp("transcode-dst.bin");
+        let keys: Vec<u64> = (0..10_000).map(|i| i / 3).collect();
+        write_delta(&src, &keys);
+        let out = transcode_raw::<u64>(&src, &dst, 4096).unwrap();
+        assert_eq!(out.n, keys.len() as u64);
+        let h = read_header(&dst).unwrap().unwrap();
+        assert_eq!(h.version, RAW_VERSION, "outputs are always raw");
+        assert_eq!(read_keys_file::<u64>(&dst).unwrap(), keys);
+        assert_eq!(
+            std::fs::metadata(&dst).unwrap().len(),
+            (HEADER_LEN + keys.len() * 8) as u64
+        );
+        let _ = std::fs::remove_file(&src);
+        let _ = std::fs::remove_file(&dst);
+    }
+
+    #[test]
+    fn run_file_bytes_track_the_on_disk_size() {
+        let p = tmp("bytes.bin");
+        let keys: Vec<u64> = (0..5000).collect();
+        let raw = write_keys_file(&p, &keys).unwrap();
+        assert_eq!(raw.bytes, std::fs::metadata(&p).unwrap().len());
+        let delta = write_delta(&p, &keys);
+        assert_eq!(delta.bytes, std::fs::metadata(&p).unwrap().len());
+        // consecutive integers: 1-byte deltas vs 8-byte raw keys
+        assert!(
+            delta.bytes * 4 < raw.bytes,
+            "delta {} !<< raw {}",
+            delta.bytes,
+            raw.bytes
+        );
         let _ = std::fs::remove_file(&p);
     }
 }

@@ -17,7 +17,7 @@ use std::collections::BTreeMap;
 use aipso::bench_harness::{self, BenchConfig};
 use aipso::coordinator::{Coordinator, JobSpec, KeyBuf};
 use aipso::datasets::{self, FigureGroup, KeyType};
-use aipso::external::{self, ExternalConfig, RetrainPolicy, RunGen};
+use aipso::external::{self, ExternalConfig, RetrainPolicy, RunGen, SpillCodec};
 use aipso::key::{KeyKind, SortKey};
 use aipso::rmi::model::{Rmi, RmiConfig};
 use aipso::runtime::RmiRuntime;
@@ -60,17 +60,23 @@ USAGE: aipso <command> [--key value ...]
 
 COMMANDS
   gen             --dataset NAME [--n N] [--seed S] [--out FILE] [--stream]
-                  [--width 4|8]  (4 narrows to f32/u32 at half the bytes;
-                  files carry a self-describing header)
+                  [--width 4|8]  (4 writes the dataset-native f32/u32
+                  stream at half the bytes; files carry a self-describing
+                  header)
   sort            --dataset NAME --engine ENGINE [--n N] [--threads T] [--seq]
   extsort         --input FILE --output FILE [--key f64|u64|f32|u32]
                   [--budget-mb MB] [--fanout K] [--threads T] [--shards P]
                   [--ips4o-runs] [--retrain N|off] [--max-retrains M]
+                  [--codec raw|delta] [--age-decay D]
                   (--key is inferred from the input's header when omitted;
                    or --dataset NAME --n N [--width 4|8] to synthesize
                    --input first; --threads 1 = serial reference pipeline;
                    --retrain N retrains the model after N consecutive
-                   drifted chunks, 'off' pins the permanent fallback)
+                   drifted chunks, 'off' pins the permanent fallback;
+                   --codec delta spills sorted runs as compressed
+                   delta+varint blocks — the output stays raw either way;
+                   --age-decay D<1 tilts the merge's shard cuts toward
+                   recent model epochs)
   bench           [--figure f1|f2|f3|f4|f5|f6|all] [--n N] [--reps R] [--threads T]
   pivot-quality   [--n N]
   phases          --dataset NAME --engine ENGINE [--n N] [--threads T]
@@ -322,6 +328,24 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
         };
     }
     cfg.retrain.max_retrains = opt_usize(opts, "max-retrains", cfg.retrain.max_retrains);
+    if let Some(c) = opts.get("codec") {
+        cfg.spill_codec = match SpillCodec::parse(c) {
+            Some(codec) => codec,
+            None => {
+                eprintln!("extsort: unknown --codec {c} (use raw|delta)");
+                return 2;
+            }
+        };
+    }
+    if let Some(d) = opts.get("age-decay") {
+        cfg.epoch_age_decay = match d.parse::<f64>() {
+            Ok(decay) if decay > 0.0 && decay <= 1.0 => decay,
+            _ => {
+                eprintln!("extsort: --age-decay expects a number in (0, 1]");
+                return 2;
+            }
+        };
+    }
 
     // Resolve the key domain: synthesize from a dataset, take --key, or
     // read it off the input's self-describing header.
@@ -401,6 +425,16 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
         } else {
             report.merge_shards.to_string()
         },
+    );
+    // raw-vs-compressed spill accounting: with --codec raw the two sides
+    // are equal; with delta the ratio is the codec's IO saving
+    let ratio = report.spill_bytes as f64 / report.spill_bytes_raw.max(1) as f64;
+    println!(
+        "  spill ({}): {} B on disk vs {} B raw ({:.2}x)",
+        cfg.spill_codec.name(),
+        report.spill_bytes,
+        report.spill_bytes_raw,
+        ratio,
     );
     if report.retrains > 0 {
         let epochs: Vec<String> = report
