@@ -28,7 +28,10 @@
 //!
 //! Scale with AIPSO_N / AIPSO_EXT_BUDGET_MB / AIPSO_EXT_THREADS (e.g.
 //! `AIPSO_EXT_THREADS=1,2,4,8`; defaults are CI-sized: the dataset is ~4x
-//! the memory budget).
+//! the memory budget). Set AIPSO_TRACE=1 to run every job with phase-span
+//! tracing on: each table gains a `phases` column breaking the row's wall
+//! time down by pipeline phase (chunk-read / chunk-sort / spill-write /
+//! merge-pass / retrain / shard-merge).
 
 use aipso::bench_harness::{
     render_external_rows, run_external_codec_sweep, run_external_figure,
@@ -38,6 +41,11 @@ use aipso::bench_harness::{
 
 fn main() {
     let cfg = BenchConfig::default();
+    let trace = std::env::var("AIPSO_TRACE").map(|v| v != "0").unwrap_or(false);
+    if trace {
+        aipso::obs::reset();
+        aipso::obs::set_enabled(true);
+    }
     let budget_mb: usize = std::env::var("AIPSO_EXT_BUDGET_MB")
         .ok()
         .and_then(|v| v.parse().ok())

@@ -264,6 +264,28 @@ pub struct ExternalRow {
     /// runs (the compression baseline; equal to `spill_bytes` under the
     /// raw codec).
     pub spill_bytes_raw: u64,
+    /// Per-phase wall-clock breakdown `(span name, seconds)`, collected
+    /// when [`crate::obs`] tracing was enabled while the cell ran; empty
+    /// otherwise. Phase seconds are cumulative across threads (overlapped
+    /// pipeline stages can sum past the row's wall clock).
+    pub phases: Vec<(&'static str, f64)>,
+}
+
+/// Aggregate the spans recorded since `mark` into `(phase, seconds)`
+/// pairs, ordered by the span taxonomy. The whole-job root is excluded
+/// (its total duplicates the row's wall clock).
+fn phase_breakdown(mark: usize) -> Vec<(&'static str, f64)> {
+    use std::collections::BTreeMap;
+    let spans = crate::obs::trace::snapshot();
+    let mut acc: BTreeMap<&'static str, u64> = BTreeMap::new();
+    for s in spans.get(mark..).unwrap_or(&[]) {
+        *acc.entry(s.name).or_default() += s.dur_ns;
+    }
+    crate::obs::KNOWN_SPANS
+        .iter()
+        .filter(|&&s| s != crate::obs::S_EXTSORT)
+        .filter_map(|&s| acc.remove(s).map(|ns| (s, ns as f64 / 1e9)))
+        .collect()
 }
 
 /// Measure one external-sort configuration on a dataset file that is
@@ -277,10 +299,14 @@ fn external_cell(
     ext: &crate::external::ExternalConfig,
     n: usize,
 ) -> ExternalRow {
+    // Watermark (not reset) the global trace so the cell's breakdown can
+    // be sliced out without clobbering spans owned by anyone else.
+    let trace_mark = crate::obs::enabled().then(crate::obs::trace::span_count);
     let (report, secs, ok) =
         crate::external::sort_and_verify(kind, input, output, ext).expect("external sort");
     assert!(ok, "external sort produced unsorted output on {dataset}");
     assert_eq!(report.keys as usize, n, "key count drift on {dataset}");
+    let phases = trace_mark.map(phase_breakdown).unwrap_or_default();
     ExternalRow {
         dataset,
         strategy,
@@ -295,6 +321,7 @@ fn external_cell(
         merge_shards: report.merge_shards,
         spill_bytes: report.spill_bytes,
         spill_bytes_raw: report.spill_bytes_raw,
+        phases,
     }
 }
 
@@ -571,6 +598,19 @@ fn spill_cell(bytes: u64, raw: u64) -> String {
     )
 }
 
+/// Human-readable phase cell: each traced phase as a share of the row's
+/// wall clock ("—" when the row ran untraced).
+fn phase_cell(r: &ExternalRow) -> String {
+    if r.phases.is_empty() {
+        return "—".to_string();
+    }
+    r.phases
+        .iter()
+        .map(|(name, s)| format!("{} {:.0}%", name, 100.0 * s / r.secs.max(1e-12)))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
 /// Render external rows as a markdown table.
 pub fn render_external_rows(title: &str, rows: &[ExternalRow]) -> String {
     let mut out = format!("## {title}\n\n");
@@ -592,6 +632,7 @@ pub fn render_external_rows(title: &str, rows: &[ExternalRow]) -> String {
                     format!("{} shards", r.merge_shards)
                 },
                 spill_cell(r.spill_bytes, r.spill_bytes_raw),
+                phase_cell(r),
             ]
         })
         .collect();
@@ -607,6 +648,7 @@ pub fn render_external_rows(title: &str, rows: &[ExternalRow]) -> String {
             "merge passes",
             "final merge",
             "spill",
+            "phases",
         ],
         &table,
     ));
@@ -727,6 +769,42 @@ mod tests {
         let report = render_external_rows("t", &rows);
         assert!(report.contains("Uniform"));
         assert!(report.contains("merge passes"));
+    }
+
+    #[test]
+    fn external_rows_carry_phase_breakdowns_when_tracing() {
+        let _l = crate::obs::test_lock();
+        crate::obs::reset();
+        crate::obs::set_enabled(true);
+        let cfg = BenchConfig {
+            n: 40_000,
+            ..tiny()
+        };
+        let rows = run_external_figure(&["uniform"], 3 * 8192 * 8, &cfg);
+        crate::obs::set_enabled(false);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(
+                !r.phases.is_empty(),
+                "{}: traced rows carry a phase breakdown",
+                r.strategy
+            );
+            let names: Vec<&str> = r.phases.iter().map(|p| p.0).collect();
+            for s in crate::obs::BASE_EXTSORT_SPANS {
+                assert!(names.contains(s), "{s} missing from {names:?}");
+            }
+            assert!(
+                !names.contains(&crate::obs::S_EXTSORT),
+                "the whole-job root is excluded from the breakdown"
+            );
+        }
+        let report = render_external_rows("traced", &rows);
+        assert!(report.contains("phases"));
+        assert!(report.contains("chunk-read"));
+        // untraced rows render the placeholder cell
+        let quiet = run_external_figure(&["uniform"], 3 * 8192 * 8, &cfg);
+        assert!(quiet.iter().all(|r| r.phases.is_empty()));
+        assert!(render_external_rows("quiet", &quiet).contains("—"));
     }
 
     #[test]

@@ -162,6 +162,34 @@ pub struct JobReport {
     pub external: Option<ExternalSortReport>,
 }
 
+impl JobReport {
+    /// Serialize for machine consumption — the per-job entries of `aipso
+    /// serve --metrics-json` and the `report` section of an external
+    /// job's telemetry document.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("id".to_string(), Json::Num(self.id as f64));
+        m.insert(
+            "engine".to_string(),
+            Json::Str(self.engine.paper_name(self.threads > 1).to_string()),
+        );
+        m.insert("n".to_string(), Json::Num(self.n as f64));
+        m.insert("secs".to_string(), Json::Num(self.secs));
+        m.insert("keys_per_sec".to_string(), Json::Num(self.keys_per_sec));
+        m.insert("verified_sorted".to_string(), Json::Bool(self.verified_sorted));
+        m.insert("threads".to_string(), Json::Num(self.threads as f64));
+        m.insert(
+            "external".to_string(),
+            self.external
+                .as_ref()
+                .map(ExternalSortReport::to_json)
+                .unwrap_or(Json::Null),
+        );
+        Json::Obj(m)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

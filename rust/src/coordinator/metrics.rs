@@ -1,9 +1,29 @@
-//! Per-engine aggregate metrics for the coordinator.
+//! Per-engine aggregate metrics for the coordinator, backed by the
+//! observability layer's [`MetricSet`].
+//!
+//! The registry keeps its original surface (`record`, `total_*`,
+//! `engines`, `report`) but the scalar aggregation now lives in a
+//! per-service [`MetricSet`] instance — the same counter/histogram
+//! machinery the pipeline's process-global telemetry uses — so the
+//! coordinator's accounting exports through the identical JSON shape
+//! ([`MetricsRegistry::to_json`], served by `aipso serve
+//! --metrics-json`). Unlike the global helpers this instance is *not*
+//! gated on [`crate::obs::enabled`]: the coordinator always accounted
+//! for its jobs, and still does.
 
 use std::collections::BTreeMap;
 
 use crate::coordinator::job::JobReport;
+use crate::obs::metrics::{MetricSet, DEPTH_BUCKETS};
 use crate::util::fmt;
+use crate::util::json::Json;
+
+/// Counter: jobs completed across all engines.
+pub const C_JOBS: &str = "coord.jobs.completed";
+/// Counter: keys sorted across all engines.
+pub const C_KEYS: &str = "coord.keys.sorted";
+/// Counter: jobs whose output failed verification.
+pub const C_FAILURES: &str = "coord.jobs.failed";
 
 /// Aggregate counters for one engine.
 #[derive(Debug, Default, Clone)]
@@ -22,6 +42,7 @@ pub struct EngineStats {
 #[derive(Debug, Default)]
 pub struct MetricsRegistry {
     per_engine: BTreeMap<&'static str, EngineStats>,
+    set: MetricSet,
 }
 
 impl MetricsRegistry {
@@ -37,26 +58,59 @@ impl MetricsRegistry {
         if !rep.verified_sorted {
             e.failures += 1;
         }
+        self.set.add(C_JOBS, 1);
+        self.set.add(C_KEYS, rep.n as u64);
+        if !rep.verified_sorted {
+            self.set.add(C_FAILURES, 1);
+        }
+    }
+
+    /// Sample the overlap lane's pending-external queue depth into the
+    /// [`crate::obs::M_LANE_DEPTH`] histogram (the dispatcher calls this
+    /// at every lane event: park, promote, spawn).
+    pub fn observe_lane_depth(&self, depth: usize) {
+        self.set
+            .observe(crate::obs::M_LANE_DEPTH, DEPTH_BUCKETS, depth as f64);
     }
 
     /// Jobs recorded across all engines.
     pub fn total_jobs(&self) -> usize {
-        self.per_engine.values().map(|e| e.jobs).sum()
+        self.set.counter(C_JOBS) as usize
     }
 
     /// Keys sorted across all engines.
     pub fn total_keys(&self) -> usize {
-        self.per_engine.values().map(|e| e.keys).sum()
+        self.set.counter(C_KEYS) as usize
     }
 
     /// Verification failures across all engines.
     pub fn total_failures(&self) -> usize {
-        self.per_engine.values().map(|e| e.failures).sum()
+        self.set.counter(C_FAILURES) as usize
     }
 
     /// Iterate (engine paper name, stats) pairs in name order.
     pub fn engines(&self) -> impl Iterator<Item = (&&'static str, &EngineStats)> {
         self.per_engine.iter()
+    }
+
+    /// Machine-readable dump: per-engine aggregates plus the backing
+    /// registry's counters and histograms (same shape as the telemetry
+    /// document's `metrics` section). `aipso serve --metrics-json` writes
+    /// this.
+    pub fn to_json(&self) -> Json {
+        let mut engines = BTreeMap::new();
+        for (name, e) in &self.per_engine {
+            let mut o = BTreeMap::new();
+            o.insert("jobs".to_string(), Json::Num(e.jobs as f64));
+            o.insert("keys".to_string(), Json::Num(e.keys as f64));
+            o.insert("secs".to_string(), Json::Num(e.secs));
+            o.insert("failures".to_string(), Json::Num(e.failures as f64));
+            engines.insert(name.to_string(), Json::Obj(o));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("engines".to_string(), Json::Obj(engines));
+        m.insert("metrics".to_string(), self.set.snapshot().to_json());
+        Json::Obj(m)
     }
 
     /// Markdown summary table.
@@ -112,5 +166,51 @@ mod tests {
         let report = m.report();
         assert!(report.contains("AIPS2o"));
         assert!(report.contains("IPS4o"));
+    }
+
+    #[test]
+    fn totals_come_from_the_metric_set() {
+        // The registry's totals are the MetricSet counters — not a
+        // parallel tally that could drift from the export.
+        let mut m = MetricsRegistry::default();
+        m.record(&rep(SortEngine::Aips2o, 1234, false));
+        let j = m.to_json();
+        let counters = j.get("metrics").and_then(|s| s.get("counters")).unwrap();
+        assert_eq!(
+            counters.get(C_JOBS).and_then(Json::as_usize),
+            Some(m.total_jobs())
+        );
+        assert_eq!(
+            counters.get(C_KEYS).and_then(Json::as_usize),
+            Some(1234)
+        );
+        assert_eq!(counters.get(C_FAILURES).and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn lane_depth_lands_in_the_histogram_export() {
+        let m = MetricsRegistry::default();
+        m.observe_lane_depth(0);
+        m.observe_lane_depth(3);
+        let j = m.to_json();
+        let h = j
+            .get("metrics")
+            .and_then(|s| s.get("histograms"))
+            .and_then(|hs| hs.get(crate::obs::M_LANE_DEPTH))
+            .expect("lane-depth histogram exported");
+        assert_eq!(h.get("count").and_then(Json::as_usize), Some(2));
+        assert_eq!(h.get("max").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn engine_breakdown_serializes() {
+        let mut m = MetricsRegistry::default();
+        m.record(&rep(SortEngine::Aips2o, 1000, true));
+        let j = m.to_json();
+        let engines = j.get("engines").unwrap();
+        let (name, _) = m.engines().next().unwrap();
+        let e = engines.get(name).expect("engine entry present");
+        assert_eq!(e.get("jobs").and_then(Json::as_usize), Some(1));
+        assert_eq!(e.get("keys").and_then(Json::as_usize), Some(1000));
     }
 }

@@ -124,6 +124,10 @@ impl Coordinator {
                 if external_lane.is_none() {
                     if let Some(next) = pending_external.pop_front() {
                         external_lane = Some(spawn_external(next));
+                        metrics_w
+                            .lock()
+                            .unwrap()
+                            .observe_lane_depth(pending_external.len());
                     }
                 }
                 if !job.payload.is_external() && job.payload.len_hint() < SMALL_JOB {
@@ -139,6 +143,10 @@ impl Coordinator {
                     } else {
                         pending_external.push_back(job);
                     }
+                    metrics_w
+                        .lock()
+                        .unwrap()
+                        .observe_lane_depth(pending_external.len());
                     continue;
                 }
                 if job.payload.is_external() {

@@ -24,8 +24,21 @@ pub const PROBE: usize = 1024;
 /// Probe duplicate fraction above which IPS⁴o is preferred.
 pub const DUP_THRESHOLD: f64 = 0.30;
 
+/// Counter: jobs routed to the external pipeline.
+pub const C_ROUTE_EXTERNAL: &str = "coord.route.external";
+/// Counter: jobs with a caller-fixed engine.
+pub const C_ROUTE_FIXED: &str = "coord.route.fixed";
+/// Counter: auto-routed small jobs (pdqsort).
+pub const C_ROUTE_SMALL: &str = "coord.route.auto.small";
+/// Counter: auto-routed duplicate-heavy jobs (IPS⁴o).
+pub const C_ROUTE_DUP: &str = "coord.route.auto.dup-heavy";
+/// Counter: auto-routed large smooth jobs (AIPS²o).
+pub const C_ROUTE_LARGE: &str = "coord.route.auto.large";
+
 /// Pick the engine for a job (paper Section 5.2's guidance; see the
-/// module docs for the policy).
+/// module docs for the policy). While observability is enabled, every
+/// decision bumps its `coord.route.*` counter so a service dump shows
+/// which policy arms actually fire.
 pub fn route(job: &JobSpec) -> SortEngine {
     // Out-of-core jobs always run the external pipeline; their engine
     // label follows the configured run-generation strategy (learned runs
@@ -34,22 +47,29 @@ pub fn route(job: &JobSpec) -> SortEngine {
     // metrics.
     let keys = match &job.payload {
         JobPayload::External(ext) => {
+            crate::obs::metrics::counter_add(C_ROUTE_EXTERNAL, 1);
             return match ext.config.run_gen {
                 crate::external::RunGen::LearnedReuse => SortEngine::Aips2o,
                 crate::external::RunGen::Ips4o => SortEngine::Ips4o,
-            }
+            };
         }
         JobPayload::InMemory(keys) => keys,
     };
     match job.engine {
-        EngineChoice::Fixed(e) => e,
+        EngineChoice::Fixed(e) => {
+            crate::obs::metrics::counter_add(C_ROUTE_FIXED, 1);
+            e
+        }
         EngineChoice::Auto => {
             let n = keys.len();
             if n < SMALL_INPUT {
+                crate::obs::metrics::counter_add(C_ROUTE_SMALL, 1);
                 SortEngine::StdSort
             } else if keys.probe_duplicate_fraction(PROBE) > DUP_THRESHOLD {
+                crate::obs::metrics::counter_add(C_ROUTE_DUP, 1);
                 SortEngine::Ips4o
             } else {
+                crate::obs::metrics::counter_add(C_ROUTE_LARGE, 1);
                 SortEngine::Aips2o
             }
         }
@@ -88,5 +108,20 @@ mod tests {
         let mut j = spec(KeyBuf::U64((0..100).collect()));
         j.engine = EngineChoice::Fixed(SortEngine::LearnedSort);
         assert_eq!(route(&j), SortEngine::LearnedSort);
+    }
+
+    #[test]
+    fn route_decisions_are_counted_when_tracing() {
+        let _l = crate::obs::test_lock();
+        crate::obs::reset();
+        crate::obs::set_enabled(true);
+        route(&spec(KeyBuf::U64((0..100).collect())));
+        route(&spec(KeyBuf::U64((0..100_000).collect())));
+        route(&spec(KeyBuf::U64((0..100_000).map(|i| i % 5).collect())));
+        crate::obs::set_enabled(false);
+        let m = crate::obs::metrics::snapshot();
+        assert_eq!(m.counters.get(C_ROUTE_SMALL), Some(&1));
+        assert_eq!(m.counters.get(C_ROUTE_LARGE), Some(&1));
+        assert_eq!(m.counters.get(C_ROUTE_DUP), Some(&1));
     }
 }

@@ -21,10 +21,19 @@
 //! 2. **Merge**: intermediate k-way passes ([`loser_tree`], fan-in clamped
 //!    to the budget) run their independent merge groups concurrently on
 //!    the scheduler pool; the final pass inverts the keys-weighted mixture
-//!    of the epoch models into `p` quantile cuts and merges `p`
-//!    range-disjoint shards in parallel ([`shard`]), falling back to the
-//!    serial loser tree when no model was trained or the cuts come out
-//!    skewed (drift guard).
+//!    of the epoch models — plus an **empirical CDF component** standing
+//!    in for the fallback chunks' keys (reservoir-sampled during run
+//!    generation, weighted by their true count) — into `p` quantile cuts
+//!    and merges `p` range-disjoint shards in parallel ([`shard`]),
+//!    falling back to the serial loser tree when neither a model nor a
+//!    fallback sample exists or the cuts come out skewed (drift guard).
+//!
+//! The whole pipeline is threaded with [`crate::obs`] spans (`extsort` →
+//! `chunk-read`/`chunk-sort`/`spill-write`/`retrain` → `merge-pass` →
+//! `shard-merge`) and metrics (spill bytes, drift error, shard skew,
+//! merge fan-in); `aipso extsort --trace-json` dumps the resulting
+//! `JobTelemetry` document. All of it is disabled (one relaxed atomic
+//! load per site) unless [`crate::obs::set_enabled`] turned it on.
 //!
 //! Entry points: [`sort_file`] (binary key files, the `aipso gen --out` /
 //! `aipso extsort` format) and [`sort_iter`] (any in-process key stream).
@@ -83,8 +92,10 @@ use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
 use crate::key::{KeyKind, SortKey};
+use crate::obs;
 use crate::rmi::model::Rmi;
 use crate::scheduler::run_task_pool;
+use crate::util::json::Json;
 
 /// Outcome of one external sort.
 #[derive(Debug, Clone, Default)]
@@ -128,6 +139,40 @@ pub struct ExternalSortReport {
     /// runs (`runs × header + keys × width`) — the baseline the codec's
     /// savings are measured against.
     pub spill_bytes_raw: u64,
+}
+
+impl ExternalSortReport {
+    /// The report as a JSON object — the `report` section of the
+    /// `JobTelemetry` document ([`crate::obs::job_telemetry`]).
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let epochs: Vec<Json> = self
+            .epochs
+            .iter()
+            .map(|e| {
+                let mut o = BTreeMap::new();
+                o.insert("learned".to_string(), Json::Num(e.learned as f64));
+                o.insert("fallback".to_string(), Json::Num(e.fallback as f64));
+                o.insert("keys".to_string(), Json::Num(e.keys as f64));
+                o.insert("learned_keys".to_string(), Json::Num(e.learned_keys as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("keys".to_string(), Json::Num(self.keys as f64));
+        m.insert("runs".to_string(), Json::Num(self.runs as f64));
+        m.insert("learned_runs".to_string(), Json::Num(self.learned_runs as f64));
+        m.insert("fallback_runs".to_string(), Json::Num(self.fallback_runs as f64));
+        m.insert("rmi_trained".to_string(), Json::Bool(self.rmi_trained));
+        m.insert("retrains".to_string(), Json::Num(self.retrains as f64));
+        m.insert("epochs".to_string(), Json::Arr(epochs));
+        m.insert("merge_passes".to_string(), Json::Num(self.merge_passes as f64));
+        m.insert("merge_shards".to_string(), Json::Num(self.merge_shards as f64));
+        m.insert("sharded_groups".to_string(), Json::Num(self.sharded_groups as f64));
+        m.insert("spill_bytes".to_string(), Json::Num(self.spill_bytes as f64));
+        m.insert("spill_bytes_raw".to_string(), Json::Num(self.spill_bytes_raw as f64));
+        Json::Obj(m)
+    }
 }
 
 /// Sort a binary key file (the self-describing `aipso gen --out` format,
@@ -233,8 +278,10 @@ where
         armed: false,
     };
     let mut spill = SpillDir::create(cfg.tmp_dir.as_deref())?;
+    let mut job_span = obs::trace::span(obs::S_EXTSORT);
     let gen = run_writer::generate_runs(next_chunk, &mut spill, cfg)?;
-    let (mut runs, stats, models) = (gen.runs, gen.stats, gen.models);
+    let (mut runs, stats, models, fallback_sample) =
+        (gen.runs, gen.stats, gen.models, gen.fallback_sample);
 
     // Cut weight per epoch model = the keys its model *actually sorted*
     // (`EpochStats::learned_keys`), resolved before intermediate merge
@@ -256,6 +303,21 @@ where
         .filter(|(_, &w)| w > 0.0)
         .map(|(m, &w)| (m, w))
         .collect();
+
+    // The excluded fallback mass re-enters the mixture as an *empirical*
+    // CDF component: run generation reservoir-sampled the fallback
+    // chunks' keys (sorted ordered bits), and those keys weigh in at
+    // their true count. A fallback-heavy stream's cuts thus track where
+    // the un-modelled keys actually live instead of only the learned
+    // regimes — and an all-fallback stream (no usable model at all) can
+    // still merge sharded off the sample alone.
+    let learned_keys: u64 = stats.epochs.iter().map(|e| e.learned_keys).sum();
+    let fallback_keys = stats.keys.saturating_sub(learned_keys);
+    let empirical: Option<(&[u64], f64)> = if fallback_sample.is_empty() || fallback_keys == 0 {
+        None
+    } else {
+        Some((&fallback_sample, fallback_keys as f64))
+    };
 
     let mut report = ExternalSortReport {
         keys: stats.keys,
@@ -290,7 +352,7 @@ where
     let fanout = cfg.effective_fanout();
     while runs.len() > fanout {
         let (merged, sharded_groups) =
-            merge_pass::<K>(runs, &mut spill, cfg, threads, &cut_models)?;
+            merge_pass::<K>(runs, &mut spill, cfg, threads, &cut_models, empirical)?;
         runs = merged;
         report.merge_passes += 1;
         report.sharded_groups += sharded_groups;
@@ -309,12 +371,23 @@ where
             spill::transcode_raw::<K>(&runs[0].path, output, cfg.effective_io_buffer())?;
         }
     } else {
+        let _pass_span = obs::trace::span_n(
+            obs::S_MERGE_PASS,
+            report.keys,
+            report.keys * K::WIDTH as u64,
+        );
+        obs::metrics::counter_add(obs::C_MERGE_PASSES, 1);
+        obs::metrics::observe(
+            obs::M_MERGE_FANIN,
+            obs::metrics::FANIN_BUCKETS,
+            runs.len() as f64,
+        );
         let shards = final_shards(cfg, threads, report.keys);
         let mut sharded = false;
-        if !cut_models.is_empty() && shards >= 2 {
+        if (!cut_models.is_empty() || empirical.is_some()) && shards >= 2 {
             // planning only reads the runs; the output stays untouched
             // (and thus unguarded) until a merge actually starts below
-            let plan = shard::plan_shards::<K>(&cut_models, &runs, shards)?;
+            let plan = shard::plan_shards::<K>(&cut_models, empirical, &runs, shards)?;
             debug_assert_eq!(plan.total_keys(), report.keys);
             if plan.skew() <= cfg.shard_skew_limit {
                 guard.armed = true;
@@ -338,6 +411,8 @@ where
         report.merge_passes += 1;
     }
     guard.armed = false;
+    job_span.set_keys(report.keys);
+    job_span.set_bytes(report.keys * K::WIDTH as u64);
     Ok(report)
 }
 
@@ -402,7 +477,8 @@ struct ShardedGroup {
 ///
 /// When the pass has fewer multi-run groups than worker threads, the
 /// spare threads **shard within groups**: each group's merge splits into
-/// range-disjoint quantile shards along the same epoch-mixture cuts the
+/// range-disjoint quantile shards along the same epoch-mixture (plus
+/// empirical fallback component) cuts the
 /// final pass uses ([`shard::plan_shards`]), with the same skew guard
 /// demoting a group back to the serial loser tree when the cuts no longer
 /// describe its data. All group- and shard-tasks of the pass run in one
@@ -414,7 +490,14 @@ fn merge_pass<K: SortKey>(
     cfg: &ExternalConfig,
     threads: usize,
     cut_models: &[(&Rmi, f64)],
+    empirical: Option<(&[u64], f64)>,
 ) -> io::Result<(Vec<RunFile>, usize)> {
+    let _span = obs::trace::span_n(
+        obs::S_MERGE_PASS,
+        runs.iter().map(|r| r.n).sum(),
+        runs.iter().map(|r| r.bytes).sum(),
+    );
+    obs::metrics::counter_add(obs::C_MERGE_PASSES, 1);
     let fanout = cfg.effective_fanout();
     let n_groups = runs.len().div_ceil(fanout);
     let mut next_round: Vec<Option<RunFile>> = vec![None; n_groups];
@@ -430,12 +513,17 @@ fn merge_pass<K: SortKey>(
             continue;
         }
         let total: u64 = group.iter().map(|r| r.n).sum();
+        obs::metrics::observe(
+            obs::M_MERGE_FANIN,
+            obs::metrics::FANIN_BUCKETS,
+            group.len() as f64,
+        );
         let cap = (total / cfg.min_shard_keys.max(1) as u64).min(256) as usize;
         let p = per_group.min(cap.max(1));
         let out = spill_dir.next_run_path();
         let mut plan = None;
-        if p >= 2 && !cut_models.is_empty() {
-            let candidate = shard::plan_shards::<K>(cut_models, group, p)?;
+        if p >= 2 && (!cut_models.is_empty() || empirical.is_some()) {
+            let candidate = shard::plan_shards::<K>(cut_models, empirical, group, p)?;
             if candidate.skew() <= cfg.shard_skew_limit {
                 plan = Some(candidate);
             }
@@ -876,6 +964,105 @@ mod tests {
         let gb: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
         let wb: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
         assert_eq!(gb, wb, "age decay is balance-only, never correctness");
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn all_fallback_stream_shards_off_the_empirical_mixture() {
+        // No model ever trains (min_learned_chunk above the chunk size),
+        // so the final merge's quantile cuts come purely from the
+        // fallback chunks' empirical sample — which must still admit a
+        // balanced sharded merge where the old pipeline forced the
+        // serial loser tree.
+        let mut rng = Xoshiro256pp::new(0xE417);
+        let n = 40_000;
+        let keys: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1e6)).collect();
+        let out = tmp("empirical-shard.bin");
+        let cfg = ExternalConfig {
+            memory_budget: 8192 * 8,
+            threads: 2,
+            min_learned_chunk: usize::MAX,
+            min_shard_keys: 1024,
+            merge_shards: 4,
+            ..ExternalConfig::default()
+        };
+        let report = sort_iter(keys.iter().copied(), &out, &cfg).unwrap();
+        assert!(!report.rmi_trained);
+        assert_eq!(report.learned_runs, 0);
+        assert_eq!(report.fallback_runs, report.runs);
+        assert!(
+            report.merge_shards >= 2,
+            "empirical-only cuts must shard: {report:?}"
+        );
+        let mut want = keys;
+        want.sort_unstable_by(f64::total_cmp);
+        let got = read_keys_file::<f64>(&out).unwrap();
+        let gb: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+        let wb: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, wb);
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn report_serializes_to_json() {
+        let report = ExternalSortReport {
+            keys: 100,
+            runs: 2,
+            rmi_trained: true,
+            epochs: vec![EpochStats { learned: 1, fallback: 1, keys: 100, learned_keys: 60 }],
+            ..Default::default()
+        };
+        let back = Json::parse(&report.to_json().dump()).unwrap();
+        assert_eq!(back.get("keys").and_then(Json::as_usize), Some(100));
+        assert_eq!(back.get("runs").and_then(Json::as_usize), Some(2));
+        assert!(matches!(back.get("rmi_trained"), Some(Json::Bool(true))));
+        let e0 = back.get("epochs").and_then(|e| e.idx(0)).unwrap();
+        assert_eq!(e0.get("learned_keys").and_then(Json::as_usize), Some(60));
+    }
+
+    #[test]
+    fn pipeline_emits_phase_spans_and_counters() {
+        let _l = crate::obs::test_lock();
+        crate::obs::reset();
+        crate::obs::set_enabled(true);
+        let mut rng = Xoshiro256pp::new(0x0B5);
+        let keys: Vec<u64> = (0..20_000).map(|_| rng.next_u64()).collect();
+        let out = tmp("obs-spans.bin");
+        // serial pipeline, 8Ki-key chunks: the model trains, every later
+        // chunk runs the drift probe, and 3 runs force one merge pass
+        let cfg = ExternalConfig {
+            memory_budget: 8192 * 8,
+            threads: 1,
+            ..ExternalConfig::default()
+        };
+        let report = sort_iter(keys.iter().copied(), &out, &cfg).unwrap();
+        crate::obs::set_enabled(false);
+        let doc = crate::obs::job_telemetry(Some(report.to_json()));
+        crate::obs::validate_telemetry(
+            &doc,
+            &[
+                crate::obs::S_EXTSORT,
+                crate::obs::S_CHUNK_READ,
+                crate::obs::S_CHUNK_SORT,
+                crate::obs::S_SPILL_WRITE,
+                crate::obs::S_MERGE_PASS,
+            ],
+            &[
+                crate::obs::M_SPILL_BYTES_ENCODED,
+                crate::obs::M_SPILL_BYTES_RAW,
+                crate::obs::M_DRIFT_ERROR,
+            ],
+        )
+        .unwrap();
+        let m = crate::obs::metrics::snapshot();
+        assert_eq!(
+            m.counters.get(crate::obs::C_SPILL_RUNS),
+            Some(&(report.runs as u64))
+        );
+        assert_eq!(
+            m.counters.get(crate::obs::C_MERGE_PASSES),
+            Some(&(report.merge_passes as u64))
+        );
         let _ = std::fs::remove_file(&out);
     }
 

@@ -37,11 +37,14 @@
 use std::io;
 use std::sync::mpsc;
 
+use std::path::PathBuf;
+
 use crate::classifier::rmi_classifier::RmiClassifier;
 use crate::classifier::Classifier;
 use crate::external::config::{ExternalConfig, RetrainPolicy, RunGen};
-use crate::external::spill::{RunFile, RunWriter, SpillDir};
+use crate::external::spill::{RunFile, RunWriter, SpillCodec, SpillDir, HEADER_LEN};
 use crate::key::SortKey;
+use crate::obs;
 use crate::rmi::model::{Rmi, RmiConfig};
 use crate::rmi::quality;
 use crate::sample_sort::partition::partition;
@@ -110,7 +113,24 @@ pub(crate) struct GeneratedRuns {
     /// this map remains the per-run provenance record (and the
     /// consistency check between run generation and the driver).
     pub run_epochs: Vec<usize>,
+    /// Sorted ordered-bits sample of the *fallback* chunks' keys (capped
+    /// at [`FALLBACK_SAMPLE_CAP`]). Fallback chunks have no epoch model,
+    /// so their mass would otherwise be invisible to the merge's mixture
+    /// cuts; the shard planner folds this sample in as an empirical-CDF
+    /// component weighted by the fallback key count
+    /// ([`crate::rmi::quality::quantile_key_mixture`]). Empty when every
+    /// chunk took the learned path.
+    pub fallback_sample: Vec<u64>,
 }
+
+/// Keys sampled from each fallback chunk for the empirical mixture
+/// component (a reservoir draw, so cost is O(chunk) scans it already pays).
+const FALLBACK_SAMPLE_PER_CHUNK: usize = 1024;
+
+/// Cap on the total fallback sample handed to the merge planner; above it
+/// the sorted sample is thinned at an even stride, which preserves its
+/// quantiles — all the planner reads from it.
+pub(crate) const FALLBACK_SAMPLE_CAP: usize = 8192;
 
 /// Pull chunks from `next_chunk`, sort each, and spill them as sorted
 /// runs. `threads == 1` runs the serial reference loop; more threads run
@@ -143,20 +163,56 @@ where
     let chunk_keys = cfg.chunk_keys::<K>();
     let mut sorter = ChunkSorter::new(cfg, 1, chunk_keys);
     let mut runs = Vec::new();
-    while let Some(mut chunk) = next_chunk(chunk_keys)? {
+    loop {
+        let mut read_span = obs::trace::span(obs::S_CHUNK_READ);
+        let Some(mut chunk) = next_chunk(chunk_keys)? else {
+            break;
+        };
+        read_span.set_keys(chunk.len() as u64);
+        read_span.set_bytes((chunk.len() * K::WIDTH) as u64);
+        drop(read_span);
         if chunk.is_empty() {
             continue;
         }
         sorter.sort_chunk(&mut chunk);
-        let mut w = RunWriter::<K>::create_with(
+        runs.push(spill_run(
+            &chunk,
             spill.next_run_path(),
             cfg.effective_io_buffer(),
             cfg.spill_codec,
-        )?;
-        w.write_slice(&chunk)?;
-        runs.push(w.finish()?);
+        )?);
     }
     Ok(sorter.finish(runs))
+}
+
+/// Spill one sorted chunk as a run, recording the spill-write span and the
+/// per-run byte histograms (encoded = actual on-disk size in the run's
+/// codec; raw = what the same run costs uncompressed — the pair is the
+/// codec's measured compression ratio).
+fn spill_run<K: SortKey>(
+    chunk: &[K],
+    path: PathBuf,
+    io_buffer: usize,
+    codec: SpillCodec,
+) -> io::Result<RunFile> {
+    let mut span = obs::trace::span(obs::S_SPILL_WRITE);
+    let mut w = RunWriter::<K>::create_with(path, io_buffer, codec)?;
+    w.write_slice(chunk)?;
+    let run = w.finish()?;
+    span.set_keys(run.n);
+    span.set_bytes(run.bytes);
+    obs::metrics::counter_add(obs::C_SPILL_RUNS, 1);
+    obs::metrics::observe(
+        obs::M_SPILL_BYTES_ENCODED,
+        obs::metrics::BYTES_BUCKETS,
+        run.bytes as f64,
+    );
+    obs::metrics::observe(
+        obs::M_SPILL_BYTES_RAW,
+        obs::metrics::BYTES_BUCKETS,
+        (HEADER_LEN as u64 + run.n * K::WIDTH as u64) as f64,
+    );
+    Ok(run)
 }
 
 /// The overlapped pipeline: a reader thread prefetches chunk `N+1` and a
@@ -186,8 +242,12 @@ where
         // sorter hung up (a downstream error); just stop.
         let mut source = next_chunk;
         let reader = scope.spawn(move || loop {
+            let mut read_span = obs::trace::span(obs::S_CHUNK_READ);
             match source(chunk_keys) {
                 Ok(Some(chunk)) => {
+                    read_span.set_keys(chunk.len() as u64);
+                    read_span.set_bytes((chunk.len() * K::WIDTH) as u64);
+                    drop(read_span);
                     if chunk.is_empty() {
                         continue;
                     }
@@ -208,9 +268,7 @@ where
         let writer = scope.spawn(move || -> io::Result<Vec<RunFile>> {
             let mut runs = Vec::new();
             for chunk in sorted_rx.iter() {
-                let mut w = RunWriter::<K>::create_with(spill.next_run_path(), io_buffer, codec)?;
-                w.write_slice(&chunk)?;
-                runs.push(w.finish()?);
+                runs.push(spill_run(&chunk, spill.next_run_path(), io_buffer, codec)?);
             }
             Ok(runs)
         });
@@ -264,6 +322,10 @@ struct ChunkSorter<'a> {
     run_epochs: Vec<usize>,
     /// Consecutive chunks whose drift probe failed — the retrain trigger.
     drift_streak: usize,
+    /// Ordered-bits reservoir over the fallback chunks' keys (the merge
+    /// planner's empirical mixture component; sorted + thinned in
+    /// [`ChunkSorter::finish`]).
+    fallback_bits: Vec<u64>,
     first_chunk: bool,
     stats: RunGenStats,
 }
@@ -278,6 +340,7 @@ impl<'a> ChunkSorter<'a> {
             models: Vec::new(),
             run_epochs: Vec::new(),
             drift_streak: 0,
+            fallback_bits: Vec::new(),
             first_chunk: true,
             stats: RunGenStats::default(),
         }
@@ -287,6 +350,11 @@ impl<'a> ChunkSorter<'a> {
     /// route drifted / duplicate-heavy chunks to the IPS⁴o path, and
     /// retrain the shared model when the drift streak clears the policy.
     fn sort_chunk<K: SortKey>(&mut self, chunk: &mut [K]) {
+        let _span = obs::trace::span_n(
+            obs::S_CHUNK_SORT,
+            chunk.len() as u64,
+            (chunk.len() * K::WIDTH) as u64,
+        );
         self.stats.chunks += 1;
         self.stats.keys += chunk.len() as u64;
 
@@ -320,6 +388,13 @@ impl<'a> ChunkSorter<'a> {
         } else {
             e.fallback += 1;
             self.stats.fallback_chunks += 1;
+            // sample this fallback chunk's keys for the merge planner's
+            // empirical mixture component (no epoch model describes them)
+            let m = FALLBACK_SAMPLE_PER_CHUNK.min(chunk.len());
+            let mut picked: Vec<K> = Vec::new();
+            self.rng.reservoir_sample(chunk, m, &mut picked);
+            self.fallback_bits
+                .extend(picked.iter().map(|k| k.to_bits_ordered()));
         }
         debug_assert!(crate::is_sorted(chunk));
     }
@@ -388,24 +463,47 @@ impl<'a> ChunkSorter<'a> {
             return false;
         }
         self.drift_streak = 0;
+        let mut span = obs::trace::span_n(obs::S_RETRAIN, chunk.len() as u64, 0);
         match train_shared_rmi(chunk, self.cfg, &mut self.rng) {
             Some(fresh) => {
+                drop(span);
                 self.models.push(fresh.rmi().clone());
                 self.shared = Some(fresh);
                 self.stats.retrains += 1;
+                obs::metrics::counter_add(obs::C_RETRAINS, 1);
                 true
             }
-            None => false,
+            None => {
+                span.set_keys(0); // vetoed attempt: no keys re-modeled
+                false
+            }
         }
     }
 
-    fn finish(self, runs: Vec<RunFile>) -> GeneratedRuns {
+    fn finish(mut self, runs: Vec<RunFile>) -> GeneratedRuns {
         debug_assert_eq!(runs.len(), self.run_epochs.len());
+        self.fallback_bits.sort_unstable();
+        if self.fallback_bits.len() > FALLBACK_SAMPLE_CAP {
+            // even-stride thinning of a sorted sample preserves its
+            // quantiles — all the shard planner reads from it
+            let step = self.fallback_bits.len().div_ceil(FALLBACK_SAMPLE_CAP);
+            self.fallback_bits = self.fallback_bits.into_iter().step_by(step).collect();
+        }
+        for e in &self.stats.epochs {
+            if e.keys > 0 {
+                obs::metrics::observe(
+                    obs::M_EPOCH_LEARNED_RATIO,
+                    obs::metrics::RATIO_BUCKETS,
+                    e.learned_keys as f64 / e.keys as f64,
+                );
+            }
+        }
         GeneratedRuns {
             runs,
             stats: self.stats,
             models: self.models,
             run_epochs: self.run_epochs,
+            fallback_sample: self.fallback_bits,
         }
     }
 }
@@ -476,7 +574,9 @@ fn drifted<K: SortKey>(
             .collect()
     };
     probe.sort_unstable_by(f64::total_cmp);
-    quality::model_drift(rmi, &probe) > cfg.drift_threshold
+    let err = quality::model_drift(rmi, &probe);
+    obs::metrics::observe(obs::M_DRIFT_ERROR, obs::metrics::RATIO_BUCKETS, err);
+    err > cfg.drift_threshold
 }
 
 /// Partition the chunk with the shared RMI, then sort the buckets as
@@ -610,6 +710,50 @@ mod tests {
         for r in &runs {
             assert!(is_sorted(&read_keys_file::<f64>(&r.path).unwrap()));
         }
+    }
+
+    #[test]
+    fn fallback_chunks_feed_the_empirical_sample() {
+        let mut rng = Xoshiro256pp::new(4);
+        // chunk 1 trains the model; chunks 2-3 drift (retrain disabled) and
+        // take the fallback path, so their keys must reach the sample
+        let mut keys: Vec<f64> = (0..16_384).map(|_| rng.uniform(0.0, 1e6)).collect();
+        keys.extend((0..32_768).map(|_| rng.uniform(5e6, 6e6)));
+        let cfg = ExternalConfig {
+            memory_budget: 16_384 * 8,
+            threads: 1,
+            retrain: RetrainPolicy::disabled(),
+            ..ExternalConfig::default()
+        };
+        let mut it = keys.into_iter();
+        let src = move |max: usize| -> io::Result<Option<Vec<f64>>> {
+            let chunk: Vec<f64> = it.by_ref().take(max).collect();
+            Ok(if chunk.is_empty() { None } else { Some(chunk) })
+        };
+        let mut spill = SpillDir::create(None).unwrap();
+        let gen = generate_runs(src, &mut spill, &cfg).unwrap();
+        assert_eq!(gen.stats.fallback_chunks, 2);
+        let s = &gen.fallback_sample;
+        assert_eq!(s.len(), 2 * 1024, "one reservoir draw per fallback chunk");
+        assert!(s.len() <= FALLBACK_SAMPLE_CAP);
+        assert!(s.windows(2).all(|w| w[0] <= w[1]), "sample must be sorted");
+        let (lo, hi) = (5e6f64.to_bits_ordered(), 6e6f64.to_bits_ordered());
+        assert!(
+            s.iter().all(|&b| (lo..=hi).contains(&b)),
+            "sample must come from the drifted regime only"
+        );
+        // an all-learned stream leaves the sample empty
+        let mut rng = Xoshiro256pp::new(9);
+        let smooth: Vec<f64> = (0..49_152).map(|_| rng.uniform(0.0, 1e6)).collect();
+        let mut it = smooth.into_iter();
+        let src = move |max: usize| -> io::Result<Option<Vec<f64>>> {
+            let chunk: Vec<f64> = it.by_ref().take(max).collect();
+            Ok(if chunk.is_empty() { None } else { Some(chunk) })
+        };
+        let mut spill = SpillDir::create(None).unwrap();
+        let gen = generate_runs(src, &mut spill, &cfg).unwrap();
+        assert_eq!(gen.stats.fallback_chunks, 0);
+        assert!(gen.fallback_sample.is_empty());
     }
 
     #[test]

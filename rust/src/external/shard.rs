@@ -51,7 +51,7 @@ use std::sync::{mpsc, Mutex};
 
 use crate::external::config::ExternalConfig;
 use crate::external::loser_tree::LoserTree;
-use crate::external::spill::{self, RunFile, RunIndex, RunReader, HEADER_LEN};
+use crate::external::spill::{self, BlockDirectory, RunFile, RunIndex, RunReader, HEADER_LEN};
 use crate::key::SortKey;
 use crate::rmi::model::Rmi;
 use crate::rmi::quality;
@@ -68,6 +68,11 @@ pub struct ShardPlan {
     offsets: Vec<Vec<u64>>,
     /// Total keys per shard across all runs.
     shard_keys: Vec<u64>,
+    /// Per run, the v2 block directory the planner's [`RunIndex`] built
+    /// while locating cut offsets (`None` for raw runs). The merge's
+    /// range-opens reuse it so each shard seeks straight to its first
+    /// block instead of re-walking every block header before it.
+    dirs: Vec<Option<BlockDirectory>>,
 }
 
 impl ShardPlan {
@@ -105,6 +110,12 @@ impl ShardPlan {
         offs
     }
 
+    /// The per-run block directories the planner collected (`None` for
+    /// raw runs), indexed like the `runs` slice the plan was built over.
+    pub fn directories(&self) -> &[Option<BlockDirectory>] {
+        &self.dirs
+    }
+
     /// Load imbalance: largest shard relative to the ideal `total / p`.
     /// `1.0` is perfect balance; the driver falls back to the serial merge
     /// above `ExternalConfig::shard_skew_limit`.
@@ -127,8 +138,17 @@ impl ShardPlan {
 /// pre-retrain single-model cuts. Costs `O(p · models · log n)` predicts
 /// plus `O(runs · p · log n)` positioned reads — negligible next to the
 /// merge.
+///
+/// `empirical` is the fallback chunks' mixture component: a sorted sample
+/// of their keys' ordered bits plus the fallback key count (see
+/// [`quality::quantile_key_mixture`]). Fallback chunks have no epoch
+/// model, so without this component their mass is invisible to the cuts —
+/// a drift-heavy stream would shard on whatever the *learned* minority
+/// looked like. `None` (or an empty sample) reproduces the models-only
+/// cuts exactly.
 pub fn plan_shards<K: SortKey>(
     models: &[(&Rmi, f64)],
+    empirical: Option<(&[u64], f64)>,
     runs: &[RunFile],
     p: usize,
 ) -> io::Result<ShardPlan> {
@@ -136,7 +156,7 @@ pub fn plan_shards<K: SortKey>(
     let mut bounds = Vec::with_capacity(p.saturating_sub(1));
     for i in 1..p {
         let q = i as f64 / p as f64;
-        let key: K = quality::quantile_key_weighted(models, q);
+        let key: K = quality::quantile_key_mixture(models, empirical, q);
         bounds.push(key.to_bits_ordered());
     }
     // The monotone model makes these nondecreasing already; enforce it so
@@ -148,6 +168,7 @@ pub fn plan_shards<K: SortKey>(
     }
 
     let mut offsets = Vec::with_capacity(runs.len());
+    let mut dirs = Vec::with_capacity(runs.len());
     for run in runs {
         let mut idx = RunIndex::<K>::open(&run.path)?;
         let mut offs = Vec::with_capacity(p + 1);
@@ -164,6 +185,8 @@ pub fn plan_shards<K: SortKey>(
             }
         }
         offsets.push(offs);
+        // keep the index's block directory for the merge's range-opens
+        dirs.push(idx.into_directory());
     }
 
     let mut shard_keys = vec![0u64; p];
@@ -172,11 +195,18 @@ pub fn plan_shards<K: SortKey>(
             *keys += offs[s + 1] - offs[s];
         }
     }
-    Ok(ShardPlan {
+    let plan = ShardPlan {
         bounds,
         offsets,
         shard_keys,
-    })
+        dirs,
+    };
+    crate::obs::metrics::observe(
+        crate::obs::M_SHARD_SKEW,
+        crate::obs::metrics::SKEW_BUCKETS,
+        plan.skew(),
+    );
+    Ok(plan)
 }
 
 /// Merge all runs into `output` by running one loser tree per shard on the
@@ -234,11 +264,23 @@ pub(crate) fn merge_one_shard<K: SortKey>(
     output: &Path,
     io_buffer: usize,
 ) -> io::Result<()> {
+    // scoped span over the whole shard merge (keys + output bytes)
+    let _span = crate::obs::trace::span_n(
+        crate::obs::S_SHARD_MERGE,
+        plan.shard_keys[s],
+        plan.shard_keys[s] * K::WIDTH as u64,
+    );
     let mut sources = Vec::new();
-    for (run, offs) in runs.iter().zip(&plan.offsets) {
+    for ((run, offs), dir) in runs.iter().zip(&plan.offsets).zip(&plan.dirs) {
         let (lo, hi) = (offs[s], offs[s + 1]);
         if hi > lo {
-            sources.push(RunReader::<K>::open_range(&run.path, lo, hi - lo, io_buffer)?);
+            sources.push(RunReader::<K>::open_range_with(
+                &run.path,
+                lo,
+                hi - lo,
+                io_buffer,
+                dir.as_ref(),
+            )?);
         }
     }
     let mut tree = LoserTree::new(sources)?;
@@ -355,7 +397,7 @@ mod tests {
             all.extend_from_slice(&keys);
             runs.push(spill_sorted(&format!("flat-{i}"), keys));
         }
-        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], &runs, 4).unwrap();
+        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], None, &runs, 4).unwrap();
         assert_eq!(plan.shards(), 4);
         assert_eq!(plan.total_keys(), all.len() as u64);
         // in-distribution data: the model's cuts are close to balanced
@@ -383,7 +425,7 @@ mod tests {
             spill_sorted("dup-0", vec![5e5; 3000]),
             spill_sorted("dup-1", vec![5e5; 2000]),
         ];
-        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], &runs, 4).unwrap();
+        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], None, &runs, 4).unwrap();
         let non_empty: Vec<&u64> = plan.shard_keys().iter().filter(|&&k| k > 0).collect();
         assert_eq!(non_empty, vec![&5000u64], "all duplicates in one shard");
         assert!(plan.skew() > 3.9, "skew={}", plan.skew());
@@ -408,7 +450,7 @@ mod tests {
         let mut all = a.clone();
         all.extend_from_slice(&b);
         let runs = vec![spill_sorted("empty-a", a), spill_sorted("empty-b", b)];
-        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], &runs, 4).unwrap();
+        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], None, &runs, 4).unwrap();
         // the two middle quantile shards see (almost) nothing
         assert_eq!(plan.total_keys(), 5000);
 
@@ -444,14 +486,14 @@ mod tests {
         all.extend_from_slice(&b);
         let runs = vec![spill_sorted("mix-a", a), spill_sorted("mix-b", b)];
 
-        let stale = plan_shards::<f64>(&[(&model_a, 1.0)], &runs, 4).unwrap();
+        let stale = plan_shards::<f64>(&[(&model_a, 1.0)], None, &runs, 4).unwrap();
         assert!(
             stale.skew() > 1.9,
             "first-epoch cuts must leave the shifted regime lopsided (skew={})",
             stale.skew()
         );
         let mixed =
-            plan_shards::<f64>(&[(&model_a, 4000.0), (&model_b, 4000.0)], &runs, 4).unwrap();
+            plan_shards::<f64>(&[(&model_a, 4000.0), (&model_b, 4000.0)], None, &runs, 4).unwrap();
         assert!(
             mixed.skew() < 1.5,
             "mixture cuts must rebalance the shards (skew={})",
@@ -481,7 +523,7 @@ mod tests {
             spill_sorted("er-1", keys.clone()),
             spill_sorted("er-2", Vec::new()),
         ];
-        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], &runs, 4).unwrap();
+        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], None, &runs, 4).unwrap();
         assert_eq!(plan.total_keys(), 3000);
         let out = tmp("er-out.bin");
         let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 2).unwrap();
@@ -508,7 +550,7 @@ mod tests {
             all.extend_from_slice(&keys);
             runs.push(spill_sorted(&format!("p1-{i}"), keys));
         }
-        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], &runs, 1).unwrap();
+        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], None, &runs, 1).unwrap();
         assert_eq!(plan.shards(), 1);
         assert!((plan.skew() - 1.0).abs() < 1e-12);
 
@@ -570,8 +612,12 @@ mod tests {
             delta_runs.push(w.finish().unwrap());
         }
         let models = [(&rmi, 1.0)];
-        let raw_plan = plan_shards::<f64>(&models, &raw_runs, 4).unwrap();
-        let delta_plan = plan_shards::<f64>(&models, &delta_runs, 4).unwrap();
+        let raw_plan = plan_shards::<f64>(&models, None, &raw_runs, 4).unwrap();
+        let delta_plan = plan_shards::<f64>(&models, None, &delta_runs, 4).unwrap();
+        // the planner keeps every v2 run's block directory for the merge;
+        // raw runs have none (their range seeks are already O(1))
+        assert!(raw_plan.directories().iter().all(Option::is_none));
+        assert!(delta_plan.directories().iter().all(Option::is_some));
         assert_eq!(raw_plan.bounds(), delta_plan.bounds());
         assert_eq!(raw_plan.shard_keys(), delta_plan.shard_keys());
         assert_eq!(raw_plan.offsets, delta_plan.offsets, "identical cut offsets");
@@ -618,10 +664,10 @@ mod tests {
         ];
         // stale: epoch B inflated by the 8000 fallback keys it never sorted
         let stale =
-            plan_shards::<f64>(&[(&model_a, 4000.0), (&model_b, 12_000.0)], &runs, 4).unwrap();
+            plan_shards::<f64>(&[(&model_a, 4000.0), (&model_b, 12_000.0)], None, &runs, 4).unwrap();
         // faithful: learned keys only
         let faithful =
-            plan_shards::<f64>(&[(&model_a, 4000.0), (&model_b, 4000.0)], &runs, 4).unwrap();
+            plan_shards::<f64>(&[(&model_a, 4000.0), (&model_b, 4000.0)], None, &runs, 4).unwrap();
         assert!(
             faithful.skew() < stale.skew(),
             "learned-keys weights must plan flatter shards (faithful {} !< stale {})",
@@ -639,6 +685,64 @@ mod tests {
     }
 
     #[test]
+    fn empirical_component_rebalances_a_fallback_heavy_plan() {
+        // The only trained model saw the low regime; two thirds of the
+        // stream are *fallback* keys in a disjoint high regime (drifted
+        // chunks sorted by IPS⁴o, so no epoch model describes them).
+        // Models-only cuts squeeze the whole high regime into the top
+        // shard; folding a sample of the fallback keys in as an
+        // empirical-CDF component restores balance. Correctness is
+        // unconditional either way — the offsets always come from the
+        // runs' actual keys.
+        let mut rng = Xoshiro256pp::new(0xFBC7);
+        let mut sample: Vec<f64> = (0..8192).map(|_| rng.uniform(0.0, 1e5)).collect();
+        sample.sort_unstable_by(f64::total_cmp);
+        let low = Rmi::train(&sample, RmiConfig { n_leaves: 128 });
+        let learned: Vec<f64> = (0..4000).map(|_| rng.uniform(0.0, 1e5)).collect();
+        let fb_a: Vec<f64> = (0..4000).map(|_| rng.uniform(9e5, 1e6)).collect();
+        let fb_b: Vec<f64> = (0..4000).map(|_| rng.uniform(9e5, 1e6)).collect();
+        let mut all = learned.clone();
+        all.extend_from_slice(&fb_a);
+        all.extend_from_slice(&fb_b);
+        // what run generation's fallback reservoir would hold: a sample of
+        // the fallback keys' ordered bits, sorted
+        let mut fb_bits: Vec<u64> = fb_a
+            .iter()
+            .chain(&fb_b)
+            .step_by(8)
+            .map(|k| k.to_bits_ordered())
+            .collect();
+        fb_bits.sort_unstable();
+        let runs = vec![
+            spill_sorted("fbc-l", learned),
+            spill_sorted("fbc-a", fb_a),
+            spill_sorted("fbc-b", fb_b),
+        ];
+        let blind = plan_shards::<f64>(&[(&low, 4000.0)], None, &runs, 4).unwrap();
+        assert!(
+            blind.skew() > 2.5,
+            "models-only cuts must leave the fallback regime lopsided (skew={})",
+            blind.skew()
+        );
+        let seen =
+            plan_shards::<f64>(&[(&low, 4000.0)], Some((&fb_bits, 8000.0)), &runs, 4).unwrap();
+        assert!(
+            seen.skew() < 1.8,
+            "empirical component must rebalance the shards (skew={})",
+            seen.skew()
+        );
+        let out = tmp("fbc-out.bin");
+        let n = merge_sharded::<f64>(&runs, &seen, &out, &ExternalConfig::default(), 4).unwrap();
+        assert_eq!(n, 12_000);
+        all.sort_unstable_by(f64::total_cmp);
+        let got = read_keys_file::<f64>(&out).unwrap();
+        let gb: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+        let wb: Vec<u64> = all.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(gb, wb);
+        cleanup(&runs, &out);
+    }
+
+    #[test]
     fn boundary_duplicates_never_straddle_a_cut() {
         // A value sitting exactly on a quantile cut: lower-bound semantics
         // must put every copy in the shard that starts at the cut.
@@ -648,7 +752,7 @@ mod tests {
         let mut keys = vec![cut; 100];
         keys.extend((0..400).map(|_| rng.uniform(0.0, 1e6)));
         let runs = vec![spill_sorted("cut-0", keys.clone())];
-        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], &runs, 2).unwrap();
+        let plan = plan_shards::<f64>(&[(&rmi, 1.0)], None, &runs, 2).unwrap();
         let out = tmp("cut-out.bin");
         let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 2).unwrap();
         assert_eq!(n, 500);

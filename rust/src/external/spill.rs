@@ -548,6 +548,7 @@ fn decode_block_bits<K: SortKey>(
 }
 
 /// One entry of a v2 file's block directory.
+#[derive(Debug, Clone)]
 struct BlockEntry {
     /// Ordered bits of the block's first (minimum) key.
     first_bits: u64,
@@ -602,6 +603,28 @@ fn walk_v2_blocks(
         ));
     }
     Ok(blocks)
+}
+
+/// A v2 run's validated block directory, detached from the [`RunIndex`]
+/// that built it. The shard planner walks every v2 run's block headers
+/// once (inside [`RunIndex::open`]); handing the resulting directory to
+/// [`RunReader::open_range_with`] lets each shard's range-open seek
+/// straight to its first block — `O(log blocks)` — instead of re-walking
+/// every block header before the range start.
+#[derive(Debug, Clone)]
+pub struct BlockDirectory {
+    blocks: Vec<BlockEntry>,
+    /// Key count of the file the directory was built from (cross-checked
+    /// on use so a stale directory degrades to the re-walk path instead
+    /// of mis-seeking).
+    n: u64,
+}
+
+impl BlockDirectory {
+    /// Number of delta blocks in the indexed file.
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
 }
 
 /// A spilled run (or any key file) on disk.
@@ -795,6 +818,24 @@ impl<K: SortKey> RunReader<K> {
         len: u64,
         io_buffer: usize,
     ) -> io::Result<RunReader<K>> {
+        Self::open_range_with(path, start, len, io_buffer, None)
+    }
+
+    /// [`RunReader::open_range`] with an optional precomputed
+    /// [`BlockDirectory`]. On v2 files with a matching directory the skip
+    /// to `start` becomes one binary search plus a direct seek to the
+    /// containing block (`obs` counter `shard.dir.hit`); without one —
+    /// or on a directory whose key count no longer matches the file —
+    /// the reader falls back to walking block headers from the front
+    /// (`shard.dir.rewalk`). Raw files ignore the directory: their seek
+    /// is already O(1) arithmetic.
+    pub fn open_range_with(
+        path: &Path,
+        start: u64,
+        len: u64,
+        io_buffer: usize,
+        dir: Option<&BlockDirectory>,
+    ) -> io::Result<RunReader<K>> {
         let mut file = File::open(path)?;
         let layout = resolve_layout(&mut file, path, K::KIND)?;
         let start = start.min(layout.n);
@@ -819,7 +860,22 @@ impl<K: SortKey> RunReader<K> {
         if let Dec::Delta(st) = &mut reader.dec {
             // a zero-length range must not walk block headers that may
             // not exist past the clamped start
-            let skip = if len == 0 { 0 } else { start };
+            let mut skip = if len == 0 { 0 } else { start };
+            if skip > 0 {
+                match dir.filter(|d| d.n == layout.n && !d.blocks.is_empty()) {
+                    Some(d) => {
+                        // last block whose first key index is <= start:
+                        // seek to its header and decode-skip only within it
+                        let b = d.blocks.partition_point(|e| e.start_idx <= skip) - 1;
+                        let e = &d.blocks[b];
+                        let header_off = e.payload_offset - (8 + K::WIDTH) as u64;
+                        reader.r.seek(SeekFrom::Start(header_off))?;
+                        skip -= e.start_idx;
+                        crate::obs::metrics::counter_add(crate::obs::C_DIR_HIT, 1);
+                    }
+                    None => crate::obs::metrics::counter_add(crate::obs::C_DIR_REWALK, 1),
+                }
+            }
             skip_delta::<K>(&mut reader.r, st, &reader.path, skip)?;
         }
         Ok(reader)
@@ -1030,6 +1086,20 @@ impl<K: SortKey> RunIndex<K> {
         let bits = self.ensure_block(cand)?;
         let off = bits.partition_point(|&b| b < bound_bits) as u64;
         Ok(cand_start + off)
+    }
+
+    /// Detach the block directory this index built when it opened a v2
+    /// file, so the shard planner can hand it to the merge's range-opens
+    /// ([`RunReader::open_range_with`]). `None` for raw files, whose
+    /// range-opens are already O(1).
+    pub fn into_directory(self) -> Option<BlockDirectory> {
+        match self.kind {
+            IndexKind::Raw { .. } => None,
+            IndexKind::Delta { blocks, .. } => Some(BlockDirectory {
+                blocks,
+                n: self.n,
+            }),
+        }
     }
 }
 
@@ -1896,6 +1966,95 @@ mod tests {
             delta.bytes,
             raw.bytes
         );
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn directory_seeks_match_the_block_walk_exactly() {
+        // > 4 blocks, with a duplicate plateau straddling a boundary so
+        // partial-block skips exercise the run-token path too
+        let mut keys: Vec<u64> = (0..(BLOCK_KEYS as u64 * 4 + 777)).map(|i| i / 3).collect();
+        keys.sort_unstable();
+        let p = tmp("dir-seek");
+        write_delta(&p, &keys);
+        let dir = RunIndex::<u64>::open(&p).unwrap().into_directory().unwrap();
+        assert!(dir.num_blocks() >= 4, "blocks={}", dir.num_blocks());
+        let n = keys.len() as u64;
+        for (start, len) in [
+            (0u64, 100u64),
+            (1, 5),
+            (BLOCK_KEYS as u64 - 1, 3),
+            (BLOCK_KEYS as u64, BLOCK_KEYS as u64),
+            (BLOCK_KEYS as u64 * 2 + 17, 9000),
+            (n - 1, 1),
+            (n - 1, 100), // len clamps
+            (n, 10),      // start clamps to EOF → empty
+            (n / 2, 0),   // explicit empty range
+        ] {
+            let mut walk = RunReader::<u64>::open_range(&p, start, len, 1 << 12).unwrap();
+            let mut seek =
+                RunReader::<u64>::open_range_with(&p, start, len, 1 << 12, Some(&dir)).unwrap();
+            assert_eq!(walk.remaining(), seek.remaining(), "range ({start},{len})");
+            loop {
+                let (a, b) = (walk.next().unwrap(), seek.next().unwrap());
+                assert_eq!(a, b, "range ({start},{len})");
+                if a.is_none() {
+                    break;
+                }
+            }
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn raw_files_have_no_directory_and_ignore_one() {
+        let keys: Vec<u64> = (0..5000).collect();
+        let p = tmp("dir-raw");
+        write_keys_file(&p, &keys).unwrap();
+        assert!(RunIndex::<u64>::open(&p).unwrap().into_directory().is_none());
+        // a (v2) directory handed to a raw open is simply unused
+        let d = tmp("dir-raw-donor");
+        write_delta(&d, &keys);
+        let dir = RunIndex::<u64>::open(&d).unwrap().into_directory().unwrap();
+        let mut r = RunReader::<u64>::open_range_with(&p, 1000, 5, 1 << 12, Some(&dir)).unwrap();
+        assert_eq!(r.next().unwrap(), Some(1000));
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(&d);
+    }
+
+    #[test]
+    fn stale_directory_falls_back_to_the_walk() {
+        let keys: Vec<u64> = (0..(BLOCK_KEYS as u64 * 2 + 5)).collect();
+        let p = tmp("dir-stale");
+        write_delta(&p, &keys);
+        let dir = RunIndex::<u64>::open(&p).unwrap().into_directory().unwrap();
+        // rewrite the file shorter: the directory's key count no longer
+        // matches, so the open must ignore it and still read correctly
+        let shorter: Vec<u64> = (0..(BLOCK_KEYS as u64 + 3)).collect();
+        write_delta(&p, &shorter);
+        let mut r =
+            RunReader::<u64>::open_range_with(&p, BLOCK_KEYS as u64, 3, 1 << 12, Some(&dir))
+                .unwrap();
+        assert_eq!(r.next().unwrap(), Some(BLOCK_KEYS as u64));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn directory_hits_and_rewalks_are_counted() {
+        let _l = crate::obs::test_lock();
+        let keys: Vec<u64> = (0..(BLOCK_KEYS as u64 * 2)).collect();
+        let p = tmp("dir-count");
+        write_delta(&p, &keys);
+        let dir = RunIndex::<u64>::open(&p).unwrap().into_directory().unwrap();
+        crate::obs::set_enabled(true);
+        crate::obs::metrics::reset();
+        drop(RunReader::<u64>::open_range_with(&p, 10, 5, 1 << 12, Some(&dir)).unwrap());
+        drop(RunReader::<u64>::open_range(&p, 10, 5, 1 << 12).unwrap());
+        drop(RunReader::<u64>::open_range(&p, 0, 5, 1 << 12).unwrap()); // no skip: uncounted
+        crate::obs::set_enabled(false);
+        let snap = crate::obs::metrics::snapshot();
+        assert_eq!(snap.counters.get(crate::obs::C_DIR_HIT), Some(&1));
+        assert_eq!(snap.counters.get(crate::obs::C_DIR_REWALK), Some(&1));
         let _ = std::fs::remove_file(&p);
     }
 }

@@ -69,6 +69,7 @@ pub mod external;
 pub mod key;
 pub mod learned_qs;
 pub mod learned_sort;
+pub mod obs;
 pub mod radix_sort;
 pub mod rmi;
 pub mod runtime;

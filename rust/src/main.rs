@@ -19,8 +19,10 @@ use aipso::coordinator::{Coordinator, JobSpec, KeyBuf};
 use aipso::datasets::{self, FigureGroup, KeyType};
 use aipso::external::{self, ExternalConfig, RetrainPolicy, RunGen, SpillCodec};
 use aipso::key::{KeyKind, SortKey};
+use aipso::obs;
 use aipso::rmi::model::{Rmi, RmiConfig};
 use aipso::runtime::RmiRuntime;
+use aipso::util::json::Json;
 use aipso::util::rng::Xoshiro256pp;
 use aipso::util::timer;
 use aipso::util::{fmt, stats};
@@ -40,6 +42,7 @@ fn main() {
         "pivot-quality" => cmd_pivot_quality(&opts),
         "phases" => cmd_phases(&opts),
         "serve" => cmd_serve(&opts),
+        "telemetry-check" => cmd_telemetry_check(&opts),
         "artifacts-check" => cmd_artifacts_check(&opts),
         "help" | "--help" | "-h" => {
             usage_and_exit(None);
@@ -67,8 +70,11 @@ COMMANDS
   extsort         --input FILE --output FILE [--key f64|u64|f32|u32]
                   [--budget-mb MB] [--fanout K] [--threads T] [--shards P]
                   [--ips4o-runs] [--retrain N|off] [--max-retrains M]
-                  [--codec raw|delta] [--age-decay D]
-                  (--key is inferred from the input's header when omitted;
+                  [--codec raw|delta] [--age-decay D] [--trace-json FILE]
+                  (--trace-json traces the job and writes the
+                   machine-readable aipso.telemetry.v1 document — phase
+                   spans, pipeline counters/histograms, final report;
+                   --key is inferred from the input's header when omitted;
                    or --dataset NAME --n N [--width 4|8] to synthesize
                    --input first; --threads 1 = serial reference pipeline;
                    --retrain N retrains the model after N consecutive
@@ -80,7 +86,11 @@ COMMANDS
   bench           [--figure f1|f2|f3|f4|f5|f6|all] [--n N] [--reps R] [--threads T]
   pivot-quality   [--n N]
   phases          --dataset NAME --engine ENGINE [--n N] [--threads T]
-  serve           [--jobs J] [--n N] [--threads T]
+  serve           [--jobs J] [--n N] [--threads T] [--metrics-json FILE]
+  telemetry-check --input FILE
+                  (validate an extsort --trace-json document against the
+                   aipso.telemetry.v1 schema and the base span/histogram
+                   sets; exits 1 on a malformed or incomplete document)
   artifacts-check [--dir artifacts]
 
 ENGINES: aips2o ips4o ips2ra learnedsort std learnedpivotqs learnedqs
@@ -391,7 +401,17 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
         }
     };
 
+    // --trace-json: collect phase spans + pipeline metrics for this job
+    // and write the aipso.telemetry.v1 document next to the report.
+    let trace_path = opts.get("trace-json");
+    if trace_path.is_some() {
+        obs::reset();
+        obs::set_enabled(true);
+    }
     let result = external::sort_and_verify(kind, input.as_ref(), output.as_ref(), &cfg);
+    if trace_path.is_some() {
+        obs::set_enabled(false);
+    }
     let (report, secs, ok) = match result {
         Ok(r) => r,
         Err(e) => {
@@ -445,10 +465,53 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
             .collect();
         println!("  epochs: {}", epochs.join(", "));
     }
+    if let Some(path) = trace_path {
+        let doc = obs::job_telemetry(Some(report.to_json()));
+        if let Err(e) = std::fs::write(path, doc.dump()) {
+            eprintln!("extsort: writing {path}: {e}");
+            return 1;
+        }
+        println!("  telemetry: wrote {path} ({})", obs::SCHEMA);
+    }
     if ok {
         0
     } else {
         1
+    }
+}
+
+fn cmd_telemetry_check(opts: &BTreeMap<String, String>) -> i32 {
+    let Some(input) = opts.get("input") else {
+        eprintln!("telemetry-check: --input required");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(input) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("telemetry-check: {input}: {e}");
+            return 1;
+        }
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("telemetry-check: {input}: parse error: {e}");
+            return 1;
+        }
+    };
+    // The acceptance contract: the whole-job root span, every base
+    // pipeline phase, and the spill/drift/skew histograms.
+    let mut spans: Vec<&str> = vec![obs::S_EXTSORT];
+    spans.extend_from_slice(obs::BASE_EXTSORT_SPANS);
+    match obs::validate_telemetry(&doc, &spans, obs::BASE_EXTSORT_HISTS) {
+        Ok(()) => {
+            println!("{input}: telemetry OK ({})", obs::SCHEMA);
+            0
+        }
+        Err(e) => {
+            eprintln!("{input}: telemetry INVALID: {e}");
+            1
+        }
     }
 }
 
@@ -549,6 +612,13 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> i32 {
     let n = opt_usize(opts, "n", 500_000);
     let threads = opt_usize(opts, "threads", 0);
     let mut rng = Xoshiro256pp::new(opt_u64(opts, "seed", 7));
+    // --metrics-json: also collect the process-global observability
+    // metrics (router decisions, pool depth) for the dump.
+    let metrics_path = opts.get("metrics-json");
+    if metrics_path.is_some() {
+        obs::reset();
+        obs::set_enabled(true);
+    }
     let coordinator = Coordinator::new(threads);
     // synthetic trace: mix of sizes, distributions and key types
     for id in 0..jobs as u64 {
@@ -572,6 +642,9 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> i32 {
         coordinator.submit(JobSpec::auto(id, keys));
     }
     let (reports, metrics) = coordinator.drain();
+    if metrics_path.is_some() {
+        obs::set_enabled(false);
+    }
     let failures = reports.iter().filter(|r| !r.verified_sorted).count();
     println!(
         "served {} jobs ({} failures)\n\n{}",
@@ -579,6 +652,21 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> i32 {
         failures,
         metrics.report()
     );
+    if let Some(path) = metrics_path {
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".to_string(), Json::Str(obs::SCHEMA.to_string()));
+        doc.insert("coordinator".to_string(), metrics.to_json());
+        doc.insert("global".to_string(), obs::metrics::snapshot().to_json());
+        doc.insert(
+            "jobs".to_string(),
+            Json::Arr(reports.iter().map(|r| r.to_json()).collect()),
+        );
+        if let Err(e) = std::fs::write(path, Json::Obj(doc).dump()) {
+            eprintln!("serve: writing {path}: {e}");
+            return 1;
+        }
+        println!("\nmetrics dump: wrote {path}");
+    }
     if failures == 0 {
         0
     } else {

@@ -1,0 +1,432 @@
+//! Counters, gauges, and fixed-bucket histograms — the numeric side of
+//! the observability layer.
+//!
+//! A [`MetricSet`] is a self-contained registry instance: the
+//! coordinator's `MetricsRegistry` owns one per service lifetime, while
+//! the pipeline-level helpers ([`counter_add`], [`gauge_set`],
+//! [`observe`]) write to a process-global set that
+//! [`crate::obs::job_telemetry`] exports. The global helpers check
+//! [`crate::obs::enabled`] first, so with observability off a call is one
+//! relaxed atomic load — no lock, no allocation.
+//!
+//! Histograms use *fixed* bucket bounds supplied at the observe site (the
+//! `*_BUCKETS` constants below): cumulative-style upper bounds plus an
+//! implicit overflow bucket, with exact `count`/`sum`/`min`/`max`
+//! alongside, so exports stay mergeable and schema-stable.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Bucket upper bounds for byte-volume histograms (4 KiB … 4 GiB, powers
+/// of four).
+pub const BYTES_BUCKETS: &[f64] = &[
+    4096.0,
+    16384.0,
+    65536.0,
+    262144.0,
+    1048576.0,
+    4194304.0,
+    16777216.0,
+    67108864.0,
+    268435456.0,
+    1073741824.0,
+    4294967296.0,
+];
+
+/// Bucket upper bounds for error/ratio-style values in `[0, 1]` (drift
+/// probe error, per-epoch learned ratio).
+pub const RATIO_BUCKETS: &[f64] = &[0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 0.75, 0.9, 1.0];
+
+/// Bucket upper bounds for shard-skew factors (1 = perfectly balanced).
+pub const SKEW_BUCKETS: &[f64] = &[1.0, 1.25, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0, 16.0];
+
+/// Bucket upper bounds for fan-in / small-count histograms.
+pub const FANIN_BUCKETS: &[f64] = &[2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+
+/// Bucket upper bounds for queue depths (coordinator lane, task pool).
+pub const DEPTH_BUCKETS: &[f64] = &[0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 256.0];
+
+/// One fixed-bucket histogram: `counts[i]` tallies observations `<=
+/// bounds[i]` (and above `bounds[i-1]`); the final slot is the overflow
+/// bucket.
+#[derive(Debug, Clone)]
+struct Histogram {
+    bounds: &'static [f64],
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    fn new(bounds: &'static [f64]) -> Histogram {
+        Histogram {
+            bounds,
+            counts: vec![0; bounds.len() + 1],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let slot = self.bounds.partition_point(|&b| b < v);
+        self.counts[slot] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+}
+
+/// Read-only copy of one histogram's state, as exported by
+/// [`MetricSet::snapshot`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Bucket upper bounds (the overflow bucket is implicit).
+    pub bounds: Vec<f64>,
+    /// Per-bucket tallies (`bounds.len() + 1` slots, last = overflow).
+    pub counts: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Sum of all observed values.
+    pub sum: f64,
+    /// Smallest observed value.
+    pub min: f64,
+    /// Largest observed value.
+    pub max: f64,
+}
+
+impl HistogramSnapshot {
+    /// Serialize for the telemetry document: `{count, sum, min, max,
+    /// buckets: [{le, count}...]}` with `le: null` on the overflow
+    /// bucket.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("sum".to_string(), Json::Num(self.sum));
+        m.insert("min".to_string(), Json::Num(self.min));
+        m.insert("max".to_string(), Json::Num(self.max));
+        let buckets = self
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let mut b = BTreeMap::new();
+                let le = match self.bounds.get(i) {
+                    Some(&bound) => Json::Num(bound),
+                    None => Json::Null, // overflow bucket
+                };
+                b.insert("le".to_string(), le);
+                b.insert("count".to_string(), Json::Num(c as f64));
+                Json::Obj(b)
+            })
+            .collect();
+        m.insert("buckets".to_string(), Json::Arr(buckets));
+        Json::Obj(m)
+    }
+}
+
+/// Read-only copy of a whole [`MetricSet`].
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Counter values by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauge values by name.
+    pub gauges: BTreeMap<String, f64>,
+    /// Histogram states by name.
+    pub hists: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// Serialize for the telemetry document:
+    /// `{counters: {..}, gauges: {..}, histograms: {..}}`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "counters".to_string(),
+            Json::Obj(
+                self.counters
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "gauges".to_string(),
+            Json::Obj(
+                self.gauges
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "histograms".to_string(),
+            Json::Obj(
+                self.hists
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.to_json()))
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Inner mutable state of a [`MetricSet`].
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+/// A registry instance: thread-safe counters, gauges, and fixed-bucket
+/// histograms keyed by name. `const`-constructible so a process-global
+/// set costs nothing until first use.
+pub struct MetricSet {
+    inner: Mutex<Inner>,
+}
+
+impl MetricSet {
+    /// Empty registry.
+    pub const fn new() -> MetricSet {
+        MetricSet {
+            inner: Mutex::new(Inner {
+                counters: BTreeMap::new(),
+                gauges: BTreeMap::new(),
+                hists: BTreeMap::new(),
+            }),
+        }
+    }
+
+    /// Add `v` to counter `name` (creating it at zero).
+    pub fn add(&self, name: &str, v: u64) {
+        let mut g = self.inner.lock().unwrap();
+        match g.counters.get_mut(name) {
+            Some(c) => *c += v,
+            None => {
+                g.counters.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    /// Set gauge `name` to `v`.
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        match g.gauges.get_mut(name) {
+            Some(s) => *s = v,
+            None => {
+                g.gauges.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    /// Record `v` into histogram `name`, creating it with `bounds` on
+    /// first use (later calls keep the original bounds — fixed buckets).
+    pub fn observe(&self, name: &str, bounds: &'static [f64], v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        match g.hists.get_mut(name) {
+            Some(h) => h.observe(v),
+            None => {
+                let mut h = Histogram::new(bounds);
+                h.observe(v);
+                g.hists.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    /// Read one counter (0 when never written).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Copy out the whole registry.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            counters: g.counters.clone(),
+            gauges: g.gauges.clone(),
+            hists: g
+                .hists
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        HistogramSnapshot {
+                            bounds: h.bounds.to_vec(),
+                            counts: h.counts.clone(),
+                            count: h.count,
+                            sum: h.sum,
+                            min: h.min,
+                            max: h.max,
+                        },
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    /// Clear every counter, gauge, and histogram.
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.clear();
+        g.gauges.clear();
+        g.hists.clear();
+    }
+}
+
+impl Default for MetricSet {
+    fn default() -> Self {
+        MetricSet::new()
+    }
+}
+
+impl std::fmt::Debug for MetricSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let g = self.inner.lock().unwrap();
+        f.debug_struct("MetricSet")
+            .field("counters", &g.counters.len())
+            .field("gauges", &g.gauges.len())
+            .field("histograms", &g.hists.len())
+            .finish()
+    }
+}
+
+/// The process-global registry the pipeline helpers write to.
+static GLOBAL: MetricSet = MetricSet::new();
+
+/// The process-global registry (for direct reads in tests/tools).
+pub fn global() -> &'static MetricSet {
+    &GLOBAL
+}
+
+/// Add `v` to global counter `name` — no-op while observability is off.
+pub fn counter_add(name: &str, v: u64) {
+    if crate::obs::enabled() {
+        GLOBAL.add(name, v);
+    }
+}
+
+/// Set global gauge `name` — no-op while observability is off.
+pub fn gauge_set(name: &str, v: f64) {
+    if crate::obs::enabled() {
+        GLOBAL.set_gauge(name, v);
+    }
+}
+
+/// Record `v` into global histogram `name` — no-op while observability
+/// is off.
+pub fn observe(name: &str, bounds: &'static [f64], v: f64) {
+    if crate::obs::enabled() {
+        GLOBAL.observe(name, bounds, v);
+    }
+}
+
+/// Snapshot the global registry (works regardless of the enabled flag).
+pub fn snapshot() -> MetricsSnapshot {
+    GLOBAL.snapshot()
+}
+
+/// Clear the global registry.
+pub fn reset() {
+    GLOBAL.reset();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_hists_roundtrip() {
+        let set = MetricSet::new();
+        set.add("obs.test.jobs", 2);
+        set.add("obs.test.jobs", 3);
+        set.set_gauge("obs.test.depth", 7.0);
+        set.set_gauge("obs.test.depth", 4.0);
+        set.observe("obs.test.skew", SKEW_BUCKETS, 1.1);
+        set.observe("obs.test.skew", SKEW_BUCKETS, 3.5);
+        set.observe("obs.test.skew", SKEW_BUCKETS, 100.0); // overflow
+        assert_eq!(set.counter("obs.test.jobs"), 5);
+        let snap = set.snapshot();
+        assert_eq!(snap.gauges["obs.test.depth"], 4.0);
+        let h = &snap.hists["obs.test.skew"];
+        assert_eq!(h.count, 3);
+        assert_eq!(h.min, 1.1);
+        assert_eq!(h.max, 100.0);
+        assert_eq!(*h.counts.last().unwrap(), 1, "100 lands in overflow");
+        // 1.1 -> first bound >= 1.1 is 1.25 (index 1); 3.5 -> 4.0 (index 5)
+        assert_eq!(h.counts[1], 1);
+        assert_eq!(h.counts[5], 1);
+        assert_eq!(h.counts.len(), SKEW_BUCKETS.len() + 1);
+    }
+
+    #[test]
+    fn bucket_edges_are_inclusive_upper_bounds() {
+        let set = MetricSet::new();
+        set.observe("obs.test.edge", FANIN_BUCKETS, 2.0);
+        set.observe("obs.test.edge", FANIN_BUCKETS, 2.0001);
+        let h = &set.snapshot().hists["obs.test.edge"];
+        assert_eq!(h.counts[0], 1, "v == bound stays in its bucket");
+        assert_eq!(h.counts[1], 1, "v just above moves up");
+    }
+
+    #[test]
+    fn disabled_global_helpers_record_nothing() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(false);
+        reset();
+        counter_add("obs.test.off", 1);
+        gauge_set("obs.test.off.g", 1.0);
+        observe("obs.test.off.h", RATIO_BUCKETS, 0.5);
+        let snap = snapshot();
+        assert!(!snap.counters.contains_key("obs.test.off"));
+        assert!(!snap.gauges.contains_key("obs.test.off.g"));
+        assert!(!snap.hists.contains_key("obs.test.off.h"));
+    }
+
+    #[test]
+    fn enabled_global_helpers_record() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+        reset();
+        counter_add("obs.test.on", 2);
+        observe("obs.test.on.h", DEPTH_BUCKETS, 3.0);
+        crate::obs::set_enabled(false);
+        let snap = snapshot();
+        assert_eq!(snap.counters["obs.test.on"], 2);
+        assert_eq!(snap.hists["obs.test.on.h"].count, 1);
+    }
+
+    #[test]
+    fn snapshot_serializes_schema_shape() {
+        let set = MetricSet::new();
+        set.add("c", 1);
+        set.observe("h", RATIO_BUCKETS, 0.03);
+        let j = set.snapshot().to_json();
+        assert!(j.get("counters").and_then(|c| c.get("c")).is_some());
+        let h = j.get("histograms").and_then(|hs| hs.get("h")).unwrap();
+        assert_eq!(h.get("count").and_then(|c| c.as_f64()), Some(1.0));
+        let buckets = h.get("buckets").unwrap();
+        assert_eq!(
+            buckets.idx(RATIO_BUCKETS.len()).unwrap().get("le"),
+            Some(&crate::util::json::Json::Null),
+            "overflow bucket has null le"
+        );
+    }
+}

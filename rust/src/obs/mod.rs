@@ -1,0 +1,357 @@
+//! Observability: phase-span tracing, pipeline metrics, and
+//! machine-readable job telemetry.
+//!
+//! Always compiled, near-zero overhead when disabled: every
+//! instrumentation point ([`trace::span`], [`metrics::counter_add`], …)
+//! checks one process-global relaxed [`AtomicBool`] and does nothing —
+//! no lock, no allocation — until [`set_enabled`]`(true)`. The pipeline
+//! is threaded with spans (the taxonomy in [`KNOWN_SPANS`]) and metrics
+//! (the `M_*`/`C_*` names below); [`job_telemetry`] folds both into one
+//! `JobTelemetry` JSON document:
+//!
+//! ```json
+//! {
+//!   "schema": "aipso.telemetry.v1",
+//!   "trace": {"spans": [{"name", "count", "total_ns", "keys", "bytes",
+//!                        "children": [...]}]},
+//!   "metrics": {"counters": {}, "gauges": {},
+//!               "histograms": {"name": {"count", "sum", "min", "max",
+//!                              "buckets": [{"le", "count"}]}}},
+//!   "report": {...} | null
+//! }
+//! ```
+//!
+//! `aipso extsort --trace-json <path>` emits the document;
+//! `aipso telemetry-check` (and the golden-schema test) validate it with
+//! [`validate_telemetry`] — unknown span names fail, so the taxonomy
+//! stays pinned.
+//!
+//! ```
+//! use aipso::obs;
+//!
+//! obs::reset();
+//! obs::set_enabled(true);
+//! {
+//!     let mut s = obs::trace::span("chunk-sort");
+//!     s.set_keys(1024);
+//! }
+//! obs::metrics::observe(obs::M_SHARD_SKEW, obs::metrics::SKEW_BUCKETS, 1.5);
+//! obs::set_enabled(false);
+//! let doc = obs::job_telemetry(None);
+//! assert!(obs::validate_telemetry(&doc, &["chunk-sort"], &[obs::M_SHARD_SKEW]).is_ok());
+//! ```
+
+pub mod metrics;
+pub mod trace;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::util::json::Json;
+
+/// Schema identifier pinned by the golden test and checked by
+/// [`validate_telemetry`].
+pub const SCHEMA: &str = "aipso.telemetry.v1";
+
+/// Whole-job root span of an external sort.
+pub const S_EXTSORT: &str = "extsort";
+/// One chunk read from the input (run generation).
+pub const S_CHUNK_READ: &str = "chunk-read";
+/// One chunk sorted (learned partition or IPS⁴o fallback).
+pub const S_CHUNK_SORT: &str = "chunk-sort";
+/// One sorted chunk spilled as a run.
+pub const S_SPILL_WRITE: &str = "spill-write";
+/// One mid-stream model retrain attempt (drift streak tripped).
+pub const S_RETRAIN: &str = "retrain";
+/// One k-way merge pass (intermediate or final).
+pub const S_MERGE_PASS: &str = "merge-pass";
+/// One range-disjoint shard of a sharded merge.
+pub const S_SHARD_MERGE: &str = "shard-merge";
+/// In-memory engines: pivot/splitter sampling.
+pub const S_SAMPLE: &str = "sample";
+/// In-memory engines: RMI/decision-tree training.
+pub const S_TRAIN: &str = "train";
+/// In-memory engines: classification + block permutation + cleanup.
+pub const S_PARTITION: &str = "partition";
+/// In-memory engines: base-case sorts.
+pub const S_SORT: &str = "sort";
+
+/// The complete span taxonomy. [`validate_telemetry`] rejects any other
+/// name, so adding a phase means extending this list (and the docs).
+pub const KNOWN_SPANS: &[&str] = &[
+    S_EXTSORT,
+    S_CHUNK_READ,
+    S_CHUNK_SORT,
+    S_SPILL_WRITE,
+    S_RETRAIN,
+    S_MERGE_PASS,
+    S_SHARD_MERGE,
+    S_SAMPLE,
+    S_TRAIN,
+    S_PARTITION,
+    S_SORT,
+];
+
+/// External-pipeline phases every multi-run `extsort` emits (retrain and
+/// shard-merge are input-dependent and validated separately).
+pub const BASE_EXTSORT_SPANS: &[&str] =
+    &[S_CHUNK_READ, S_CHUNK_SORT, S_SPILL_WRITE, S_MERGE_PASS];
+
+/// Histogram: encoded on-disk bytes per spilled run.
+pub const M_SPILL_BYTES_ENCODED: &str = "spill.run.bytes.encoded";
+/// Histogram: fixed-width (raw-equivalent) bytes per spilled run.
+pub const M_SPILL_BYTES_RAW: &str = "spill.run.bytes.raw";
+/// Histogram: drift-probe error (mean |F(x) − empirical CDF|) per probe.
+pub const M_DRIFT_ERROR: &str = "drift.probe.error";
+/// Histogram: learned-chunk fraction per model epoch.
+pub const M_EPOCH_LEARNED_RATIO: &str = "epoch.learned.ratio";
+/// Histogram: shard-plan skew factor (largest shard ÷ ideal).
+pub const M_SHARD_SKEW: &str = "merge.shard.skew";
+/// Histogram: runs per merge group (the effective fan-in).
+pub const M_MERGE_FANIN: &str = "merge.fan.in";
+/// Histogram: pending external jobs behind the coordinator's overlap
+/// lane, sampled at every lane event.
+pub const M_LANE_DEPTH: &str = "coord.lane.queue.depth";
+/// Histogram: task-pool queue depth, sampled at every spawn.
+pub const M_POOL_DEPTH: &str = "pool.queue.depth";
+/// Counter: sharded-merge range opens served by the planner's v2 block
+/// directory (O(log blocks) seek, no header walk).
+pub const C_DIR_HIT: &str = "shard.dir.hit";
+/// Counter: v2 range opens that re-walked block headers (no directory).
+pub const C_DIR_REWALK: &str = "shard.dir.rewalk";
+/// Counter: sorted runs spilled.
+pub const C_SPILL_RUNS: &str = "spill.runs";
+/// Counter: successful mid-stream model installs.
+pub const C_RETRAINS: &str = "retrain.count";
+/// Counter: merge passes executed (intermediate + final).
+pub const C_MERGE_PASSES: &str = "merge.passes";
+
+/// Histograms every learned-path `extsort` telemetry document carries
+/// (the acceptance set: spill volume, drift error, shard skew).
+pub const BASE_EXTSORT_HISTS: &[&str] = &[
+    M_SPILL_BYTES_ENCODED,
+    M_SPILL_BYTES_RAW,
+    M_DRIFT_ERROR,
+    M_SHARD_SKEW,
+];
+
+/// Master switch for spans and the global metric helpers.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn tracing + global metrics collection on or off (off at startup).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// True while the observability layer is collecting.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Clear all recorded spans and global metrics (the per-job epoch:
+/// `reset` → `set_enabled(true)` → run → [`job_telemetry`]).
+pub fn reset() {
+    trace::reset();
+    metrics::reset();
+}
+
+/// Assemble the `JobTelemetry` document from the current trace buffer and
+/// global metric registry. `report` is the job-level summary (e.g. an
+/// `ExternalSortReport` as JSON); `None` serializes as `null`.
+pub fn job_telemetry(report: Option<Json>) -> Json {
+    let spans = trace::snapshot();
+    telemetry_document(&trace::trace_tree(&spans), &metrics::snapshot(), report)
+}
+
+/// [`job_telemetry`] from explicit parts — the golden test builds a
+/// deterministic document through this.
+pub fn telemetry_document(
+    tree: &[trace::TraceNode],
+    metrics: &metrics::MetricsSnapshot,
+    report: Option<Json>,
+) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("schema".to_string(), Json::Str(SCHEMA.to_string()));
+    let mut t = std::collections::BTreeMap::new();
+    t.insert(
+        "spans".to_string(),
+        Json::Arr(tree.iter().map(trace::TraceNode::to_json).collect()),
+    );
+    m.insert("trace".to_string(), Json::Obj(t));
+    m.insert("metrics".to_string(), metrics.to_json());
+    m.insert("report".to_string(), report.unwrap_or(Json::Null));
+    Json::Obj(m)
+}
+
+/// Collect every span name appearing in a telemetry document's trace
+/// tree.
+fn collect_names<'a>(node: &'a Json, out: &mut Vec<&'a str>) {
+    if let Some(name) = node.get("name").and_then(Json::as_str) {
+        out.push(name);
+    }
+    if let Some(Json::Arr(children)) = node.get("children") {
+        for c in children {
+            collect_names(c, out);
+        }
+    }
+}
+
+/// Validate a `JobTelemetry` document against the pinned schema:
+/// the schema tag must match [`SCHEMA`], every span name must be in
+/// [`KNOWN_SPANS`], every name in `required_spans` must appear, and every
+/// histogram in `required_hists` must be present, well-formed, and
+/// non-empty. Returns the first violation as an error message.
+pub fn validate_telemetry(
+    doc: &Json,
+    required_spans: &[&str],
+    required_hists: &[&str],
+) -> Result<(), String> {
+    match doc.get("schema").and_then(Json::as_str) {
+        Some(s) if s == SCHEMA => {}
+        Some(s) => return Err(format!("schema is {s:?}, expected {SCHEMA:?}")),
+        None => return Err("missing schema field".to_string()),
+    }
+    let spans = doc
+        .get("trace")
+        .and_then(|t| t.get("spans"))
+        .ok_or("missing trace.spans")?;
+    let Json::Arr(roots) = spans else {
+        return Err("trace.spans is not an array".to_string());
+    };
+    let mut names = Vec::new();
+    for r in roots {
+        collect_names(r, &mut names);
+    }
+    for n in &names {
+        if !KNOWN_SPANS.contains(n) {
+            return Err(format!("unknown span name {n:?}"));
+        }
+    }
+    for want in required_spans {
+        if !names.contains(want) {
+            return Err(format!("required span {want:?} missing"));
+        }
+    }
+    let metrics = doc.get("metrics").ok_or("missing metrics section")?;
+    for section in ["counters", "gauges", "histograms"] {
+        if !matches!(metrics.get(section), Some(Json::Obj(_))) {
+            return Err(format!("metrics.{section} missing or not an object"));
+        }
+    }
+    let hists = metrics.get("histograms").unwrap();
+    for want in required_hists {
+        let h = hists
+            .get(want)
+            .ok_or_else(|| format!("required histogram {want:?} missing"))?;
+        let count = h
+            .get("count")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("histogram {want:?} has no count"))?;
+        if count < 1.0 {
+            return Err(format!("histogram {want:?} is empty"));
+        }
+        if !matches!(h.get("buckets"), Some(Json::Arr(_))) {
+            return Err(format!("histogram {want:?} has no buckets array"));
+        }
+    }
+    if doc.get("report").is_none() {
+        return Err("missing report field".to_string());
+    }
+    Ok(())
+}
+
+/// Serializes tests that flip the global enabled flag (spans and global
+/// metrics are process-wide, so concurrent tests would cross-pollute).
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_doc() -> Json {
+        let _l = test_lock();
+        set_enabled(true);
+        reset();
+        {
+            let mut job = trace::span(S_EXTSORT);
+            job.set_keys(100);
+            {
+                let mut c = trace::span(S_CHUNK_SORT);
+                c.set_keys(50);
+            }
+        }
+        metrics::observe(M_DRIFT_ERROR, metrics::RATIO_BUCKETS, 0.02);
+        set_enabled(false);
+        job_telemetry(None)
+    }
+
+    #[test]
+    fn telemetry_document_validates() {
+        let doc = sample_doc();
+        validate_telemetry(&doc, &[S_EXTSORT, S_CHUNK_SORT], &[M_DRIFT_ERROR])
+            .expect("well-formed document validates");
+    }
+
+    #[test]
+    fn missing_required_span_fails() {
+        let doc = sample_doc();
+        let err = validate_telemetry(&doc, &[S_RETRAIN], &[]).unwrap_err();
+        assert!(err.contains("retrain"), "{err}");
+    }
+
+    #[test]
+    fn missing_required_histogram_fails() {
+        let doc = sample_doc();
+        let err = validate_telemetry(&doc, &[], &[M_SHARD_SKEW]).unwrap_err();
+        assert!(err.contains(M_SHARD_SKEW), "{err}");
+    }
+
+    #[test]
+    fn unknown_span_name_fails() {
+        let tree = vec![trace::TraceNode {
+            name: "not-a-phase",
+            count: 1,
+            total_ns: 1,
+            keys: 0,
+            bytes: 0,
+            children: Vec::new(),
+        }];
+        let doc =
+            telemetry_document(&tree, &metrics::MetricsSnapshot::default(), None);
+        let err = validate_telemetry(&doc, &[], &[]).unwrap_err();
+        assert!(err.contains("not-a-phase"), "{err}");
+    }
+
+    #[test]
+    fn wrong_schema_tag_fails() {
+        let doc = Json::parse(r#"{"schema": "something.else.v9"}"#).unwrap();
+        assert!(validate_telemetry(&doc, &[], &[]).is_err());
+    }
+
+    #[test]
+    fn disabled_mode_records_no_spans_and_no_metrics() {
+        let _l = test_lock();
+        set_enabled(false);
+        reset();
+        {
+            let mut s = trace::span(S_CHUNK_READ);
+            s.set_keys(1);
+        }
+        metrics::counter_add(C_SPILL_RUNS, 1);
+        metrics::observe(M_SHARD_SKEW, metrics::SKEW_BUCKETS, 2.0);
+        assert_eq!(trace::span_count(), 0, "disabled: zero spans recorded");
+        assert!(metrics::snapshot().is_empty(), "disabled: zero metrics");
+    }
+
+    #[test]
+    fn roundtrips_through_the_json_parser() {
+        let doc = sample_doc();
+        let text = doc.dump();
+        let back = Json::parse(&text).expect("serialized telemetry reparses");
+        assert_eq!(back.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        validate_telemetry(&back, &[S_EXTSORT], &[M_DRIFT_ERROR]).unwrap();
+    }
+}

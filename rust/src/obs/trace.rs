@@ -1,0 +1,427 @@
+//! Scoped span tracer — the phase-level wall-clock record of one job.
+//!
+//! A [`Span`] is an RAII guard opened with [`span`] (or [`span_n`] when
+//! the key/byte volume is known up front). While [`crate::obs::enabled`]
+//! is off, opening a span is one relaxed atomic load and the guard holds
+//! nothing — no allocation, no lock, no record. While on, every span
+//! records its name, wall time, parent, and optional key/byte volumes
+//! into a global buffer that [`snapshot`] drains into [`SpanData`] rows
+//! and [`trace_tree`] folds into the aggregated per-phase tree the
+//! telemetry export serializes.
+//!
+//! Parenting is per thread: a span opened while another span is open *on
+//! the same thread* becomes its child; spans opened on worker threads
+//! (pool tasks, pipeline stages) become roots. The tree aggregation
+//! groups spans by name per nesting level, so repeated phases (one
+//! `chunk-sort` per chunk) collapse into one node with a count.
+
+use std::cell::RefCell;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One recorded span, as drained by [`snapshot`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanData {
+    /// Phase name (one of the taxonomy in [`crate::obs::KNOWN_SPANS`],
+    /// or a test-local name).
+    pub name: &'static str,
+    /// Index of the parent span in the same snapshot (`None` = root).
+    pub parent: Option<u32>,
+    /// Start time in nanoseconds since the trace epoch (first span after
+    /// the last [`reset`]).
+    pub start_ns: u64,
+    /// Wall-clock duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Keys processed under this span (0 when not applicable).
+    pub keys: u64,
+    /// Bytes read or written under this span (0 when not applicable).
+    pub bytes: u64,
+}
+
+/// Global trace buffer. `generation` invalidates open guards and
+/// thread-local parent stacks across [`reset`] calls, so a guard that
+/// outlives a reset can never patch an unrelated record.
+struct TraceState {
+    spans: Vec<SpanData>,
+    epoch: Option<Instant>,
+    generation: u64,
+}
+
+static STATE: Mutex<TraceState> = Mutex::new(TraceState {
+    spans: Vec::new(),
+    epoch: None,
+    generation: 0,
+});
+
+thread_local! {
+    /// Stack of `(generation, span index)` for spans open on this thread.
+    static PARENTS: RefCell<Vec<(u64, u32)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Scoped span guard: records its duration (and any volumes set on it)
+/// when dropped. Inert when tracing was disabled at open time.
+pub struct Span {
+    inner: Option<OpenSpan>,
+}
+
+struct OpenSpan {
+    generation: u64,
+    id: u32,
+    start: Instant,
+    keys: u64,
+    bytes: u64,
+}
+
+impl Span {
+    /// Attribute `keys` processed keys to this span.
+    pub fn set_keys(&mut self, keys: u64) {
+        if let Some(s) = &mut self.inner {
+            s.keys = keys;
+        }
+    }
+
+    /// Attribute `bytes` of IO to this span.
+    pub fn set_bytes(&mut self, bytes: u64) {
+        if let Some(s) = &mut self.inner {
+            s.bytes = bytes;
+        }
+    }
+
+    /// Add to this span's key count (for incremental producers).
+    pub fn add_keys(&mut self, keys: u64) {
+        if let Some(s) = &mut self.inner {
+            s.keys += keys;
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(open) = self.inner.take() else {
+            return;
+        };
+        let dur_ns = open.start.elapsed().as_nanos() as u64;
+        {
+            let mut st = STATE.lock().unwrap();
+            if st.generation == open.generation {
+                if let Some(rec) = st.spans.get_mut(open.id as usize) {
+                    rec.dur_ns = dur_ns;
+                    rec.keys = open.keys;
+                    rec.bytes = open.bytes;
+                }
+            }
+        }
+        PARENTS.with(|p| {
+            let mut stack = p.borrow_mut();
+            if stack.last() == Some(&(open.generation, open.id)) {
+                stack.pop();
+            } else {
+                // reset happened under an open guard: drop stale entries
+                stack.retain(|&(g, i)| (g, i) != (open.generation, open.id));
+            }
+        });
+    }
+}
+
+/// Open a span named `name`. Near-free when tracing is disabled (one
+/// relaxed atomic load; the guard is inert).
+pub fn span(name: &'static str) -> Span {
+    if !crate::obs::enabled() {
+        return Span { inner: None };
+    }
+    let start = Instant::now();
+    let mut st = STATE.lock().unwrap();
+    let epoch = *st.epoch.get_or_insert(start);
+    let generation = st.generation;
+    let parent = PARENTS.with(|p| {
+        let mut stack = p.borrow_mut();
+        stack.retain(|&(g, _)| g == generation);
+        stack.last().map(|&(_, id)| id)
+    });
+    let id = st.spans.len() as u32;
+    st.spans.push(SpanData {
+        name,
+        parent,
+        start_ns: start.duration_since(epoch).as_nanos() as u64,
+        dur_ns: 0,
+        keys: 0,
+        bytes: 0,
+    });
+    drop(st);
+    PARENTS.with(|p| p.borrow_mut().push((generation, id)));
+    Span {
+        inner: Some(OpenSpan {
+            generation,
+            id,
+            start,
+            keys: 0,
+            bytes: 0,
+        }),
+    }
+}
+
+/// [`span`] with key/byte volumes known up front.
+pub fn span_n(name: &'static str, keys: u64, bytes: u64) -> Span {
+    let mut s = span(name);
+    s.set_keys(keys);
+    s.set_bytes(bytes);
+    s
+}
+
+/// Snapshot every span recorded since the last [`reset`] (closed spans
+/// carry their durations; still-open spans appear with `dur_ns == 0`).
+pub fn snapshot() -> Vec<SpanData> {
+    STATE.lock().unwrap().spans.clone()
+}
+
+/// Number of spans recorded since the last [`reset`].
+pub fn span_count() -> usize {
+    STATE.lock().unwrap().spans.len()
+}
+
+/// Clear the trace buffer and start a fresh epoch. Guards still open
+/// across a reset become no-ops (they never patch the new buffer).
+pub fn reset() {
+    let mut st = STATE.lock().unwrap();
+    st.spans.clear();
+    st.epoch = None;
+    st.generation += 1;
+}
+
+/// One node of the aggregated trace tree: all spans sharing a name *and*
+/// a parent path fold into one node, so per-chunk phases collapse into a
+/// count instead of an unbounded list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceNode {
+    /// Phase name.
+    pub name: &'static str,
+    /// Spans folded into this node.
+    pub count: u64,
+    /// Total wall-clock nanoseconds across the folded spans.
+    pub total_ns: u64,
+    /// Total keys attributed across the folded spans.
+    pub keys: u64,
+    /// Total bytes attributed across the folded spans.
+    pub bytes: u64,
+    /// Child phases, sorted by name.
+    pub children: Vec<TraceNode>,
+}
+
+impl TraceNode {
+    /// Serialize this node (recursively) for the telemetry document.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.to_string()));
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("total_ns".to_string(), Json::Num(self.total_ns as f64));
+        m.insert("keys".to_string(), Json::Num(self.keys as f64));
+        m.insert("bytes".to_string(), Json::Num(self.bytes as f64));
+        m.insert(
+            "children".to_string(),
+            Json::Arr(self.children.iter().map(TraceNode::to_json).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Fold a flat span snapshot into the aggregated tree (roots sorted by
+/// name, spans grouped by name at every level).
+pub fn trace_tree(spans: &[SpanData]) -> Vec<TraceNode> {
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); spans.len()];
+    let mut roots: Vec<usize> = Vec::new();
+    for (i, s) in spans.iter().enumerate() {
+        match s.parent {
+            Some(p) if (p as usize) < i => children[p as usize].push(i),
+            _ => roots.push(i),
+        }
+    }
+    fold_level(spans, &roots, &children)
+}
+
+/// Group one level's span indices by name and aggregate each group.
+fn fold_level(
+    spans: &[SpanData],
+    level: &[usize],
+    children: &[Vec<usize>],
+) -> Vec<TraceNode> {
+    let mut by_name: std::collections::BTreeMap<&'static str, Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for &i in level {
+        by_name.entry(spans[i].name).or_default().push(i);
+    }
+    by_name
+        .into_iter()
+        .map(|(name, idxs)| {
+            let mut node = TraceNode {
+                name,
+                count: idxs.len() as u64,
+                total_ns: 0,
+                keys: 0,
+                bytes: 0,
+                children: Vec::new(),
+            };
+            let mut kids: Vec<usize> = Vec::new();
+            for &i in &idxs {
+                node.total_ns += spans[i].dur_ns;
+                node.keys += spans[i].keys;
+                node.bytes += spans[i].bytes;
+                kids.extend_from_slice(&children[i]);
+            }
+            node.children = fold_level(spans, &kids, children);
+            node
+        })
+        .collect()
+}
+
+/// Every distinct span name in a snapshot (sorted, deduplicated).
+pub fn span_names(spans: &[SpanData]) -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = spans.iter().map(|s| s.name).collect();
+    names.sort_unstable();
+    names.dedup();
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        // No set_enabled here: rely on unique names instead of global
+        // state, so parallel tests that enable tracing can't interfere
+        // with an assertion about *these* names never being recorded.
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(false);
+        {
+            let mut s = span("obs-test-disabled");
+            s.set_keys(10);
+            s.set_bytes(20);
+        }
+        let recorded = snapshot()
+            .iter()
+            .filter(|s| s.name == "obs-test-disabled")
+            .count();
+        assert_eq!(recorded, 0, "disabled tracing must record no spans");
+    }
+
+    #[test]
+    fn nesting_links_parents_on_one_thread() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+        reset();
+        {
+            let mut outer = span("obs-test-outer");
+            outer.set_keys(100);
+            {
+                let mut inner = span("obs-test-inner");
+                inner.set_bytes(7);
+            }
+        }
+        crate::obs::set_enabled(false);
+        let spans = snapshot();
+        let outer = spans
+            .iter()
+            .position(|s| s.name == "obs-test-outer")
+            .expect("outer recorded");
+        let inner = spans
+            .iter()
+            .find(|s| s.name == "obs-test-inner")
+            .expect("inner recorded");
+        assert_eq!(inner.parent, Some(outer as u32));
+        assert_eq!(spans[outer].parent, None);
+        assert_eq!(spans[outer].keys, 100);
+        assert_eq!(inner.bytes, 7);
+        let tree = trace_tree(&spans);
+        let root = tree.iter().find(|n| n.name == "obs-test-outer").unwrap();
+        assert_eq!(root.count, 1);
+        assert_eq!(root.children.len(), 1);
+        assert_eq!(root.children[0].name, "obs-test-inner");
+    }
+
+    #[test]
+    fn threads_record_independent_roots() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+        reset();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..25 {
+                        let mut g = span("obs-test-thread");
+                        g.set_keys(1);
+                    }
+                });
+            }
+        });
+        crate::obs::set_enabled(false);
+        let spans = snapshot();
+        let mine: Vec<_> = spans
+            .iter()
+            .filter(|s| s.name == "obs-test-thread")
+            .collect();
+        assert_eq!(mine.len(), 100);
+        assert!(mine.iter().all(|s| s.parent.is_none()), "workers are roots");
+        assert_eq!(mine.iter().map(|s| s.keys).sum::<u64>(), 100);
+    }
+
+    #[test]
+    fn tree_aggregates_repeated_phases() {
+        // Pure aggregation — no global state involved.
+        let spans = vec![
+            SpanData {
+                name: "job",
+                parent: None,
+                start_ns: 0,
+                dur_ns: 100,
+                keys: 0,
+                bytes: 0,
+            },
+            SpanData {
+                name: "chunk",
+                parent: Some(0),
+                start_ns: 1,
+                dur_ns: 10,
+                keys: 5,
+                bytes: 40,
+            },
+            SpanData {
+                name: "chunk",
+                parent: Some(0),
+                start_ns: 20,
+                dur_ns: 30,
+                keys: 7,
+                bytes: 56,
+            },
+        ];
+        let tree = trace_tree(&spans);
+        assert_eq!(tree.len(), 1);
+        let job = &tree[0];
+        assert_eq!((job.name, job.count, job.total_ns), ("job", 1, 100));
+        assert_eq!(job.children.len(), 1);
+        let chunk = &job.children[0];
+        assert_eq!(chunk.count, 2);
+        assert_eq!(chunk.total_ns, 40);
+        assert_eq!(chunk.keys, 12);
+        assert_eq!(chunk.bytes, 96);
+        assert_eq!(span_names(&spans), vec!["chunk", "job"]);
+    }
+
+    #[test]
+    fn reset_orphans_open_guards_safely() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+        reset();
+        let g = span("obs-test-orphan");
+        reset(); // new generation while g is still open
+        let mut h = span("obs-test-fresh");
+        h.set_keys(3);
+        drop(h);
+        drop(g); // must not patch (or corrupt) the new buffer
+        crate::obs::set_enabled(false);
+        let spans = snapshot();
+        assert!(spans.iter().all(|s| s.name != "obs-test-orphan"));
+        let fresh = spans.iter().find(|s| s.name == "obs-test-fresh").unwrap();
+        assert_eq!(fresh.keys, 3);
+    }
+}

@@ -131,19 +131,53 @@ pub fn quantile_key<K: SortKey>(rmi: &Rmi, q: f64) -> K {
 /// mixture is nondecreasing (a convex combination of monotone CDFs), so
 /// the same ordered-bits binary search applies.
 pub fn quantile_key_weighted<K: SortKey>(models: &[(&Rmi, f64)], q: f64) -> K {
-    let total: f64 = models.iter().map(|(_, w)| w.max(0.0)).sum();
-    let predict = |x: f64| -> f64 {
+    quantile_key_mixture(models, None, q)
+}
+
+/// [`quantile_key_weighted`] extended with an optional **empirical-CDF
+/// component**: a sorted sample of ordered key bits plus its weight.
+///
+/// Fallback chunks (drifted, duplicate-vetoed, or sorted before any model
+/// existed) carry no epoch model, so a mostly-fallback stream used to cut
+/// its merge shards from whatever stale models remained. Feeding a sample
+/// of the fallback keys in as one more mixture component restores their
+/// mass: the component's CDF is the sample's step function
+/// `|{s ≤ x}| / |sample|`, weighted by the fallback key count, so the
+/// mixture stays the stream's estimated global CDF even when most of the
+/// stream never went through a model. A step function is nondecreasing,
+/// so the ordered-bits binary search still applies; an empty sample (or a
+/// non-positive weight) contributes nothing.
+pub fn quantile_key_mixture<K: SortKey>(
+    models: &[(&Rmi, f64)],
+    empirical: Option<(&[u64], f64)>,
+    q: f64,
+) -> K {
+    let emp = match empirical {
+        Some((bits, w)) if !bits.is_empty() && w > 0.0 => Some((bits, w)),
+        _ => None,
+    };
+    let total: f64 = models.iter().map(|(_, w)| w.max(0.0)).sum::<f64>()
+        + emp.map_or(0.0, |(_, w)| w);
+    let predict = |bits: u64| -> f64 {
+        let x = K::from_bits_ordered(bits).to_f64();
+        let emp_cdf = |sample: &[u64]| {
+            sample.partition_point(|&s| s <= bits) as f64 / sample.len() as f64
+        };
         if total > 0.0 {
-            models
-                .iter()
-                .map(|(m, w)| w.max(0.0) * m.predict(x))
-                .sum::<f64>()
-                / total
+            let mut sum: f64 = models.iter().map(|(m, w)| w.max(0.0) * m.predict(x)).sum();
+            if let Some((sample, w)) = emp {
+                sum += w * emp_cdf(sample);
+            }
+            sum / total
         } else {
             // degenerate weights: fall back to an unweighted mean so the
             // search still terminates on a valid key
-            let n = models.len().max(1) as f64;
-            models.iter().map(|(m, _)| m.predict(x)).sum::<f64>() / n
+            let n = (models.len() + emp.iter().len()).max(1) as f64;
+            let mut sum: f64 = models.iter().map(|(m, _)| m.predict(x)).sum();
+            if let Some((sample, _)) = emp {
+                sum += emp_cdf(sample);
+            }
+            sum / n
         }
     };
     // Clamp the search to the domain's ordered range: past
@@ -152,8 +186,7 @@ pub fn quantile_key_weighted<K: SortKey>(models: &[(&Rmi, f64)], q: f64) -> K {
     let (mut lo, mut hi) = (0u64, K::max_ordered_bits());
     while lo < hi {
         let mid = lo + (hi - lo) / 2;
-        let x = K::from_bits_ordered(mid).to_f64();
-        if predict(x) >= q {
+        if predict(mid) >= q {
             hi = mid;
         } else {
             lo = mid + 1;
@@ -303,6 +336,57 @@ mod tests {
         // non-positive weights are ignored, not poisoning the sum
         let c: f64 = quantile_key_weighted(&[(&low, 1.0), (&high, -5.0)], 0.5);
         assert!((c - 5e4).abs() < 1e4, "c={c}");
+    }
+
+    #[test]
+    fn empirical_only_mixture_recovers_sample_quantiles() {
+        // a pure-fallback stream: no models at all, only the sampled keys
+        let sample: Vec<f64> = (1..=100).map(|i| i as f64 * 10.0).collect();
+        let bits: Vec<u64> = sample.iter().map(|k| k.to_bits_ordered()).collect();
+        for q in [0.1, 0.25, 0.5, 0.75, 0.9] {
+            let k: f64 = quantile_key_mixture(&[], Some((&bits, 1.0)), q);
+            // the step CDF jumps to q exactly at the ceil(q*n)-th sample key
+            let expect = sample[(q * 100.0).ceil() as usize - 1];
+            assert!(
+                (k - expect).abs() < 1e-9,
+                "q={q}: key {k} != sample quantile {expect}"
+            );
+        }
+        // empty sample / non-positive weight: inert, falls back to models
+        let mut rng = Xoshiro256pp::new(0xE3);
+        let mut s: Vec<f64> = (0..8192).map(|_| rng.uniform(0.0, 1e6)).collect();
+        s.sort_unstable_by(f64::total_cmp);
+        let rmi = Rmi::train(&s, RmiConfig { n_leaves: 128 });
+        let base: f64 = quantile_key_weighted(&[(&rmi, 1.0)], 0.5);
+        let empty: f64 = quantile_key_mixture(&[(&rmi, 1.0)], Some((&[], 1.0)), 0.5);
+        let zero_w: f64 = quantile_key_mixture(&[(&rmi, 1.0)], Some((&bits, 0.0)), 0.5);
+        assert_eq!(base.to_bits(), empty.to_bits());
+        assert_eq!(base.to_bits(), zero_w.to_bits());
+    }
+
+    #[test]
+    fn empirical_component_pulls_cuts_toward_fallback_regime() {
+        let mut rng = Xoshiro256pp::new(0x5A17);
+        // the learned model only saw the low regime ...
+        let mut s: Vec<f64> = (0..8192).map(|_| rng.uniform(0.0, 1e5)).collect();
+        s.sort_unstable_by(f64::total_cmp);
+        let low = Rmi::train(&s, RmiConfig { n_leaves: 128 });
+        // ... while the fallback chunks all live in a high regime
+        let mut high_bits: Vec<u64> = (0..2048)
+            .map(|_| rng.uniform(9e5, 1e6).to_bits_ordered())
+            .collect();
+        high_bits.sort_unstable();
+        let without: f64 = quantile_key_weighted(&[(&low, 1.0)], 0.5);
+        let with: f64 =
+            quantile_key_mixture(&[(&low, 1.0)], Some((&high_bits, 1.0)), 0.5);
+        // model alone cuts inside the low regime; the equal-mass empirical
+        // component pushes the median to the boundary between regimes
+        assert!(without < 1.1e5, "without={without}");
+        assert!(with > 9e4, "with={with}");
+        // and the 75% cut lands inside the fallback regime itself
+        let q75: f64 =
+            quantile_key_mixture(&[(&low, 1.0)], Some((&high_bits, 1.0)), 0.75);
+        assert!((9e5..=1e6).contains(&q75), "q75={q75}");
     }
 
     #[test]

@@ -24,7 +24,9 @@ impl<'a, T> Spawner<'a, T> {
     pub fn spawn(&self, task: T) {
         let mut q = self.state.lock().unwrap();
         q.tasks.push(task);
+        let depth = q.tasks.len();
         drop(q);
+        observe_depth(depth);
         self.cv.notify_one();
     }
 
@@ -32,8 +34,22 @@ impl<'a, T> Spawner<'a, T> {
     pub fn spawn_all(&self, tasks: impl IntoIterator<Item = T>) {
         let mut q = self.state.lock().unwrap();
         q.tasks.extend(tasks);
+        let depth = q.tasks.len();
         drop(q);
+        observe_depth(depth);
         self.cv.notify_all();
+    }
+}
+
+/// Sample the queue depth into the observability histogram — outside the
+/// queue lock, and a single relaxed load while tracing is off.
+fn observe_depth(depth: usize) {
+    if crate::obs::enabled() {
+        crate::obs::metrics::observe(
+            crate::obs::M_POOL_DEPTH,
+            crate::obs::metrics::DEPTH_BUCKETS,
+            depth as f64,
+        );
     }
 }
 
@@ -169,6 +185,23 @@ mod tests {
     #[test]
     fn empty_initial_returns_immediately() {
         run_task_pool::<usize, _>(4, vec![], |_, _| panic!("no tasks"));
+    }
+
+    #[test]
+    fn spawns_sample_queue_depth_when_tracing() {
+        let _l = crate::obs::test_lock();
+        crate::obs::reset();
+        crate::obs::set_enabled(true);
+        run_task_pool(2, vec![0usize], |t, s| {
+            if t == 0 {
+                s.spawn_all(1..=8);
+            }
+        });
+        crate::obs::set_enabled(false);
+        let m = crate::obs::metrics::snapshot();
+        let h = m.hists.get(crate::obs::M_POOL_DEPTH).expect("depth sampled");
+        assert!(h.count >= 1);
+        assert!(h.max >= 8.0, "the batch spawn saw 8 queued tasks");
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! Minimal JSON parser for the artifact manifest (no serde offline).
-//! Supports the full JSON value grammar; no serialization beyond what the
-//! manifest needs.
+//! Minimal JSON parser and serializer (no serde offline). Parsing covers
+//! the full JSON value grammar (the artifact manifest's consumer);
+//! [`Json::dump`] serializes values back out — the telemetry export path
+//! (`obs::job_telemetry`) and the coordinator's JSON dump go through it.
 
 use std::collections::BTreeMap;
 
@@ -73,6 +74,72 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Serialize to compact JSON text. Numbers use the shortest exact
+    /// `f64` form (`3`, not `3.0`); non-finite numbers (which JSON cannot
+    /// represent) serialize as `null`.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    out.push_str(&format!("{x}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Append `s` as a JSON string literal (quotes, backslash escapes, and
+/// `\u00XX` for other control characters).
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -297,6 +364,38 @@ mod tests {
             Json::parse(r#""a\n\"bA""#).unwrap().as_str(),
             Some("a\n\"bA")
         );
+    }
+
+    #[test]
+    fn dump_roundtrips_values() {
+        for src in [
+            r#"{"a":[1,2.5,-3],"b":{"c":"x\ny","d":null},"e":true}"#,
+            "[]",
+            "{}",
+            r#""plain""#,
+            "false",
+        ] {
+            let v = Json::parse(src).unwrap();
+            let text = v.dump();
+            assert_eq!(Json::parse(&text).unwrap(), v, "roundtrip of {src}");
+        }
+    }
+
+    #[test]
+    fn dump_number_forms() {
+        assert_eq!(Json::Num(3.0).dump(), "3", "whole floats print as ints");
+        assert_eq!(Json::Num(0.25).dump(), "0.25");
+        assert_eq!(Json::Num(f64::NAN).dump(), "null", "NaN is not JSON");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+    }
+
+    #[test]
+    fn dump_escapes_strings_and_sorts_keys() {
+        let v = Json::parse(r#"{"z":1,"a":"q\"\\"}"#).unwrap();
+        let text = v.dump();
+        assert!(text.starts_with(r#"{"a":"#), "BTreeMap keys sort: {text}");
+        assert!(text.contains("\\\"") && text.contains("\\\\"), "escapes: {text}");
+        assert_eq!(Json::parse(&text).unwrap(), v);
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! its major phases with [`phase_scope`]; the bench harness reads the
 //! accumulated per-phase nanoseconds to locate bottlenecks
 //! (EXPERIMENTS.md §Perf). Overhead when disabled: one relaxed atomic load.
+//!
+//! [`phase_scope`] also bridges into the observability layer: while
+//! `obs` tracing is enabled, each bracketed region additionally records
+//! an `obs::trace` span under the in-memory taxonomy
+//! (sampling→`sample`, model-train→`train`, classification /
+//! block-permutation / cleanup→`partition`, base-case→`sort`), so
+//! in-memory engine phases appear in the same `JobTelemetry` trace tree
+//! as the external pipeline's.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Instant;
@@ -84,14 +92,33 @@ pub fn phase_snapshot() -> [u64; NUM_PHASES] {
     out
 }
 
-/// RAII guard accumulating wall time into a phase counter.
+impl Phase {
+    /// Span name of this phase in the observability taxonomy, or `None`
+    /// for phases the trace tree does not surface (scheduling, other).
+    pub const fn obs_span(self) -> Option<&'static str> {
+        match self {
+            Phase::Sampling => Some(crate::obs::S_SAMPLE),
+            Phase::ModelTrain => Some(crate::obs::S_TRAIN),
+            Phase::Classification | Phase::BlockPermutation | Phase::Cleanup => {
+                Some(crate::obs::S_PARTITION)
+            }
+            Phase::BaseCase => Some(crate::obs::S_SORT),
+            Phase::Scheduling | Phase::Other => None,
+        }
+    }
+}
+
+/// RAII guard accumulating wall time into a phase counter (and, while
+/// obs tracing is on, recording the region as a trace span).
 pub struct PhaseScope {
     phase: Phase,
     start: Option<Instant>,
+    // dropped with the struct, closing the span at scope exit
+    _span: Option<crate::obs::trace::Span>,
 }
 
-/// Bracket a region with a phase label. No-op (single atomic load) when
-/// profiling is disabled.
+/// Bracket a region with a phase label. No-op (two relaxed atomic loads)
+/// when both the profiler and obs tracing are disabled.
 #[inline]
 pub fn phase_scope(phase: Phase) -> PhaseScope {
     let start = if phase_profiling_enabled() {
@@ -99,7 +126,16 @@ pub fn phase_scope(phase: Phase) -> PhaseScope {
     } else {
         None
     };
-    PhaseScope { phase, start }
+    let _span = if crate::obs::enabled() {
+        phase.obs_span().map(crate::obs::trace::span)
+    } else {
+        None
+    };
+    PhaseScope {
+        phase,
+        start,
+        _span,
+    }
 }
 
 impl Drop for PhaseScope {
@@ -167,6 +203,23 @@ mod tests {
         assert!(snap[Phase::Cleanup as usize] >= 1_000_000);
         let rep = phase_report(&snap);
         assert!(rep.contains("cleanup"));
+    }
+
+    #[test]
+    fn phase_scope_bridges_into_obs_spans() {
+        let _l = crate::obs::test_lock();
+        crate::obs::set_enabled(true);
+        crate::obs::trace::reset();
+        {
+            let _g = phase_scope(Phase::ModelTrain);
+        }
+        {
+            let _g = phase_scope(Phase::Scheduling); // unmapped: no span
+        }
+        crate::obs::set_enabled(false);
+        let spans = crate::obs::trace::snapshot();
+        assert!(spans.iter().any(|s| s.name == crate::obs::S_TRAIN));
+        assert!(spans.iter().all(|s| s.name != "scheduling"));
     }
 
     #[test]

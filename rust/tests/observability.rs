@@ -1,0 +1,222 @@
+//! End-to-end tests for the observability layer: the golden-file pin of
+//! the `aipso.telemetry.v1` document shape, full-pipeline span coverage
+//! (every external phase, including the drift-triggered `retrain` and the
+//! sharded final merge), the block-directory hit counters under the delta
+//! spill codec, and the disabled-mode contract (zero spans recorded and
+//! byte-identical output with tracing on vs off).
+//!
+//! The span buffer and global metric registry are process-wide, so every
+//! test that flips [`aipso::obs::set_enabled`] serializes on a local lock.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use aipso::datasets;
+use aipso::external::{self, ExternalConfig, RunWriter, SpillCodec};
+use aipso::obs;
+use aipso::util::json::Json;
+
+/// Serializes tests that touch the process-global trace/metric state.
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "aipso-obs-it-{}-{}-{tag}.bin",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Pipelined config whose chunks (budget/3/width = 8192 keys at f64)
+/// still clear `min_learned_chunk`, with the sharded final merge allowed
+/// to engage at test sizes.
+fn traced_cfg() -> ExternalConfig {
+    ExternalConfig {
+        memory_budget: 3 * 8192 * 8,
+        threads: 2,
+        merge_shards: 4,
+        min_shard_keys: 1024,
+        ..ExternalConfig::default()
+    }
+}
+
+/// Write the regime-shift stream (equal thirds uniform → lognormal →
+/// zipf) that trips the retrain policy mid-sort.
+fn write_regime_stream(path: &PathBuf, n: usize) -> usize {
+    let regimes = ["uniform", "lognormal", "zipf"];
+    let per = n / regimes.len();
+    let mut w = RunWriter::<f64>::create(path.clone(), 1 << 16).expect("create stream");
+    for name in regimes {
+        let mut gen = datasets::chunked_f64(name, per, 11).expect("regime generator");
+        while let Some(chunk) = gen.next_chunk(1 << 14) {
+            w.write_slice(&chunk).expect("write regime chunk");
+        }
+    }
+    w.finish().expect("finish stream");
+    per * regimes.len()
+}
+
+#[test]
+fn golden_telemetry_document_shape() {
+    // Deterministic document through the explicit-parts constructor —
+    // no wall clock, no global state, no lock needed.
+    use aipso::obs::metrics::{MetricSet, RATIO_BUCKETS};
+    use aipso::obs::trace::TraceNode;
+
+    let leaf = |name, count, total_ns, keys, bytes| TraceNode {
+        name,
+        count,
+        total_ns,
+        keys,
+        bytes,
+        children: Vec::new(),
+    };
+    let tree = vec![TraceNode {
+        name: obs::S_EXTSORT,
+        count: 1,
+        total_ns: 1_000_000,
+        keys: 1000,
+        bytes: 8000,
+        children: vec![
+            leaf(obs::S_CHUNK_READ, 4, 200_000, 1000, 8000),
+            leaf(obs::S_CHUNK_SORT, 4, 300_000, 1000, 0),
+            leaf(obs::S_MERGE_PASS, 1, 250_000, 1000, 8000),
+            leaf(obs::S_SPILL_WRITE, 4, 150_000, 1000, 8000),
+        ],
+    }];
+    let set = MetricSet::new();
+    set.add(obs::C_SPILL_RUNS, 4);
+    set.observe(obs::M_DRIFT_ERROR, RATIO_BUCKETS, 0.02);
+    let report = Json::parse(r#"{"keys": 1000, "runs": 4}"#).unwrap();
+    let doc = obs::telemetry_document(&tree, &set.snapshot(), Some(report));
+
+    let golden =
+        Json::parse(include_str!("golden/job_telemetry.golden.json")).expect("golden parses");
+    assert_eq!(doc, golden, "telemetry document drifted from the golden file");
+    assert_eq!(
+        doc.dump(),
+        golden.dump(),
+        "canonical serialization drifted from the golden file"
+    );
+    obs::validate_telemetry(&golden, obs::BASE_EXTSORT_SPANS, &[obs::M_DRIFT_ERROR])
+        .expect("the golden document validates against its own schema");
+}
+
+#[test]
+fn regime_shift_trace_covers_every_phase_including_retrain() {
+    let _l = lock();
+    let input = tmp("regime-in");
+    let output = tmp("regime-out");
+    let n = write_regime_stream(&input, 120_000);
+
+    obs::reset();
+    obs::set_enabled(true);
+    let report = external::sort_file::<f64>(&input, &output, &traced_cfg()).unwrap();
+    obs::set_enabled(false);
+    assert_eq!(report.keys as usize, n);
+    assert!(
+        report.retrains >= 1,
+        "the regime shifts must trip the retrain policy"
+    );
+
+    let doc = obs::job_telemetry(Some(report.to_json()));
+    let mut spans = vec![obs::S_EXTSORT, obs::S_RETRAIN];
+    spans.extend_from_slice(obs::BASE_EXTSORT_SPANS);
+    let mut hists = vec![
+        obs::M_SPILL_BYTES_ENCODED,
+        obs::M_SPILL_BYTES_RAW,
+        obs::M_DRIFT_ERROR,
+    ];
+    if report.merge_shards >= 2 {
+        spans.push(obs::S_SHARD_MERGE);
+        hists.push(obs::M_SHARD_SKEW);
+    }
+    obs::validate_telemetry(&doc, &spans, &hists).expect("full phase coverage");
+
+    // the retrain counter agrees with the report
+    let m = obs::metrics::snapshot();
+    assert_eq!(
+        m.counters.get(obs::C_RETRAINS).copied().unwrap_or(0),
+        report.retrains as u64
+    );
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn sharded_delta_merge_emits_skew_and_directory_hits() {
+    let _l = lock();
+    let input = tmp("shard-in");
+    let output = tmp("shard-out");
+    let n = 100_000;
+    datasets::write_dataset_file("uniform", n, 5, &input, 1 << 14).expect("dataset write");
+    let cfg = ExternalConfig {
+        spill_codec: SpillCodec::Delta,
+        ..traced_cfg()
+    };
+
+    obs::reset();
+    obs::set_enabled(true);
+    let report = external::sort_file::<f64>(&input, &output, &cfg).unwrap();
+    obs::set_enabled(false);
+    assert_eq!(report.keys as usize, n);
+    assert!(
+        report.merge_shards >= 2,
+        "uniform data at this size must engage the sharded merge"
+    );
+
+    let doc = obs::job_telemetry(Some(report.to_json()));
+    let mut spans = vec![obs::S_EXTSORT, obs::S_SHARD_MERGE];
+    spans.extend_from_slice(obs::BASE_EXTSORT_SPANS);
+    obs::validate_telemetry(&doc, &spans, obs::BASE_EXTSORT_HISTS)
+        .expect("sharded telemetry carries the full acceptance set");
+
+    // v2 delta runs expose a block directory through the shard plan, so
+    // the sharded merge's range opens must hit it rather than re-walk
+    // block headers.
+    let m = obs::metrics::snapshot();
+    let hits = m.counters.get(obs::C_DIR_HIT).copied().unwrap_or(0);
+    assert!(hits >= 1, "sharded range opens must use the block directory");
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn disabled_mode_records_nothing_and_output_is_byte_identical() {
+    let _l = lock();
+    let input = tmp("quiet-in");
+    let out_quiet = tmp("quiet-out");
+    let out_traced = tmp("traced-out");
+    let n = 60_000;
+    datasets::write_dataset_file("lognormal", n, 9, &input, 1 << 14).expect("dataset write");
+    let cfg = traced_cfg();
+
+    // tracing off: the whole sort must leave the buffers untouched
+    obs::reset();
+    obs::set_enabled(false);
+    let quiet = external::sort_file::<f64>(&input, &out_quiet, &cfg).unwrap();
+    assert_eq!(quiet.keys as usize, n);
+    assert_eq!(obs::trace::span_count(), 0, "disabled mode records no spans");
+    assert!(
+        obs::metrics::snapshot().is_empty(),
+        "disabled mode records no global metrics"
+    );
+
+    // tracing on: same input, same config — the output bytes must match
+    obs::set_enabled(true);
+    let traced = external::sort_file::<f64>(&input, &out_traced, &cfg).unwrap();
+    obs::set_enabled(false);
+    assert!(obs::trace::span_count() > 0, "enabled mode records spans");
+    assert_eq!(quiet.keys, traced.keys);
+    let a = std::fs::read(&out_quiet).unwrap();
+    let b = std::fs::read(&out_traced).unwrap();
+    assert_eq!(a, b, "tracing must not change the sorted output");
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&out_quiet);
+    let _ = std::fs::remove_file(&out_traced);
+}
