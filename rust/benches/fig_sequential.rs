@@ -1,14 +1,25 @@
 //! Regenerates paper Figures 1–3: sequential sorting throughput of
 //! LearnedSort, I1S⁴o, I1S²Ra, AI1S²o and std::sort over all 14 datasets.
 //!
+//! Also runs the LearnedSort 2.0 duplicate sweep (beyond the paper's
+//! figures; methodology in `BENCHMARKS.md`): uniform keys with 0–99% of
+//! them overwritten by two heavy values, sorted by the 2.0 fragmented
+//! scheme (equality buckets), the 1.x block scheme (spill bucket) and
+//! std::sort. Set AIPSO_TRACE=1 to run the sweep with phase-span tracing
+//! on: its table gains a `phases` column breaking each row down by
+//! sample / train / partition / frag-partition / frag-compact / sort.
+//!
 //! Scale with AIPSO_N / AIPSO_REPS (defaults are CI-sized; the paper used
 //! N = 1e8 / 2e8 and 10 reps — shape, not absolute keys/s, is the target).
 
-use aipso::bench_harness::{count_wins, render_rows, run_figure, BenchConfig};
+use aipso::bench_harness::{
+    count_wins, render_dup_rows, render_rows, run_dup_sweep, run_figure, BenchConfig,
+};
 use aipso::datasets::FigureGroup;
 
 fn main() {
     let cfg = BenchConfig::default();
+    let trace = std::env::var("AIPSO_TRACE").map(|v| v != "0").unwrap_or(false);
     println!(
         "# Sequential figures (n = {}, reps = {})\n",
         cfg.n, cfg.reps
@@ -27,4 +38,20 @@ fn main() {
     for (engine, wins) in count_wins(&all) {
         println!("  {engine}: {wins}/14");
     }
+
+    if trace {
+        aipso::obs::reset();
+        aipso::obs::set_enabled(true);
+    }
+    let dup_rows = run_dup_sweep(&[0.0, 0.5, 0.9, 0.99], &cfg);
+    if trace {
+        aipso::obs::set_enabled(false);
+    }
+    print!(
+        "\n{}",
+        render_dup_rows(
+            "Duplicate sweep: fragmented (2.0) vs block (1.x) partition",
+            &dup_rows
+        )
+    );
 }

@@ -93,6 +93,10 @@ impl<K: SortKey> Classifier<K> for Strategy<K> {
     }
 
     fn classify_batch(&self, keys: &[K], out: &mut [u32]) {
+        // The RMI arm dispatches into the shared 8-wide branchless batch
+        // kernel (`Rmi::predict_batch`) — the same prediction loop the
+        // LearnedSort 2.0 fragmentation sweep runs, so both learned paths
+        // pipeline their leaf-table loads identically.
         match self {
             Strategy::Rmi(c) => c.classify_batch(keys, out),
             Strategy::Tree(c) => c.classify_batch(keys, out),

@@ -598,17 +598,129 @@ fn spill_cell(bytes: u64, raw: u64) -> String {
     )
 }
 
-/// Human-readable phase cell: each traced phase as a share of the row's
-/// wall clock ("—" when the row ran untraced).
-fn phase_cell(r: &ExternalRow) -> String {
-    if r.phases.is_empty() {
+/// Human-readable phase cell: each traced phase as a share of `secs`
+/// ("—" when the row ran untraced).
+fn phase_share_cell(phases: &[(&'static str, f64)], secs: f64) -> String {
+    if phases.is_empty() {
         return "—".to_string();
     }
-    r.phases
+    phases
         .iter()
-        .map(|(name, s)| format!("{} {:.0}%", name, 100.0 * s / r.secs.max(1e-12)))
+        .map(|(name, s)| format!("{} {:.0}%", name, 100.0 * s / secs.max(1e-12)))
         .collect::<Vec<_>>()
         .join(", ")
+}
+
+fn phase_cell(r: &ExternalRow) -> String {
+    phase_share_cell(&r.phases, r.secs)
+}
+
+/// One measured cell of the in-memory duplicate sweep (bench
+/// `fig_sequential`, LearnedSort 2.0 section).
+#[derive(Debug, Clone)]
+pub struct DupRow {
+    /// Sweep label: base distribution + duplicate share.
+    pub dataset: String,
+    /// Engine / partition-scheme label.
+    pub engine: &'static str,
+    /// Keys sorted per repetition.
+    pub n: usize,
+    /// Fraction of keys overwritten with the heavy values.
+    pub dup_fraction: f64,
+    /// Mean sorting rate in keys/second.
+    pub mean_rate: f64,
+    /// Mean wall-clock seconds per repetition.
+    pub mean_secs: f64,
+    /// Mean per-phase seconds per repetition `(span name, seconds)`,
+    /// collected when [`crate::obs`] tracing was enabled while the cell
+    /// ran; empty otherwise. The fragmented scheme additionally reports
+    /// its `frag-partition` / `frag-compact` spans here.
+    pub phases: Vec<(&'static str, f64)>,
+}
+
+/// In-memory duplicate sweep: uniform keys with a swept share of them
+/// overwritten by two heavy values — LearnedSort's adversarial case.
+/// Each fraction is sorted by the 2.0 fragmented scheme (equality
+/// buckets), the 1.x block scheme (spill bucket) and `std::sort`;
+/// identical inputs per fraction, so the deltas isolate the partition
+/// scheme's duplicate handling.
+pub fn run_dup_sweep(fractions: &[f64], cfg: &BenchConfig) -> Vec<DupRow> {
+    use crate::learned_sort::{self, LearnedSortConfig};
+
+    let mut rows = Vec::new();
+    for &frac in fractions {
+        let mut base = datasets::generate_f64("uniform", cfg.n, cfg.seed).unwrap();
+        let mut rng = Xoshiro256pp::new(cfg.seed ^ (frac * 1e6) as u64);
+        for k in base.iter_mut() {
+            if rng.uniform(0.0, 1.0) < frac {
+                *k = if rng.next_u64() % 2 == 0 { 123.25 } else { 987.5 };
+            }
+        }
+        let v2 = LearnedSortConfig::default();
+        let v1 = LearnedSortConfig::v1();
+        let cells: [(&'static str, Option<&LearnedSortConfig>); 3] = [
+            ("LearnedSort 2.0 (fragments)", Some(&v2)),
+            ("LearnedSort (blocks)", Some(&v1)),
+            ("std::sort", None),
+        ];
+        for (label, ls) in cells {
+            // Watermark (not reset) the global trace — see external_cell.
+            let mark = crate::obs::enabled().then(crate::obs::trace::span_count);
+            let mut secs_all = Vec::with_capacity(cfg.reps);
+            for _ in 0..cfg.reps {
+                let mut keys = base.clone();
+                let t0 = std::time::Instant::now();
+                match ls {
+                    Some(c) => learned_sort::sort_cfg(&mut keys, c),
+                    None => sort_sequential(SortEngine::StdSort, &mut keys),
+                }
+                secs_all.push(t0.elapsed().as_secs_f64());
+                assert!(crate::is_sorted(&keys), "{label} produced unsorted output");
+            }
+            let reps = cfg.reps.max(1) as f64;
+            let phases: Vec<(&'static str, f64)> = mark
+                .map(phase_breakdown)
+                .unwrap_or_default()
+                .into_iter()
+                .map(|(name, s)| (name, s / reps))
+                .collect();
+            let mean_secs = stats::mean(&secs_all);
+            rows.push(DupRow {
+                dataset: format!("uniform + {:.0}% dups", frac * 100.0),
+                engine: label,
+                n: base.len(),
+                dup_fraction: frac,
+                mean_rate: base.len() as f64 / mean_secs.max(1e-12),
+                mean_secs,
+                phases,
+            });
+        }
+    }
+    rows
+}
+
+/// Render duplicate-sweep rows as a markdown table.
+pub fn render_dup_rows(title: &str, rows: &[DupRow]) -> String {
+    let mut out = format!("## {title}\n\n");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.dataset.clone(),
+                r.engine.to_string(),
+                fmt::keys(r.n),
+                format!("{:.0}%", r.dup_fraction * 100.0),
+                fmt::rate(r.mean_rate),
+                fmt::secs(r.mean_secs),
+                phase_share_cell(&r.phases, r.mean_secs),
+            ]
+        })
+        .collect();
+    out.push_str(&fmt::markdown_table(
+        &["dataset", "engine", "n", "dups", "rate", "time", "phases"],
+        &table,
+    ));
+    out
 }
 
 /// Render external rows as a markdown table.
@@ -904,6 +1016,51 @@ mod tests {
             assert!(r.rate > 0.0);
             assert!(r.runs >= 2, "{}: runs={}", r.strategy, r.runs);
         }
+    }
+
+    #[test]
+    fn dup_sweep_rows_cover_both_schemes() {
+        // hold the obs lock so no concurrent test enables tracing — the
+        // placeholder assertion below needs genuinely untraced rows
+        let _l = crate::obs::test_lock();
+        let cfg = BenchConfig {
+            n: 60_000,
+            ..tiny()
+        };
+        let rows = run_dup_sweep(&[0.0, 0.9], &cfg);
+        assert_eq!(rows.len(), 6, "3 engines per fraction");
+        for r in &rows {
+            assert!(r.mean_rate > 0.0, "{} / {}", r.dataset, r.engine);
+            assert_eq!(r.n, 60_000);
+        }
+        let report = render_dup_rows("dups", &rows);
+        assert!(report.contains("LearnedSort 2.0 (fragments)"));
+        assert!(report.contains("LearnedSort (blocks)"));
+        assert!(report.contains("90%"));
+        assert!(report.contains("—"), "untraced rows render the placeholder");
+    }
+
+    #[test]
+    fn dup_sweep_traces_the_fragment_phases() {
+        let _l = crate::obs::test_lock();
+        crate::obs::reset();
+        crate::obs::set_enabled(true);
+        let cfg = BenchConfig {
+            n: 60_000,
+            ..tiny()
+        };
+        let rows = run_dup_sweep(&[0.9], &cfg);
+        crate::obs::set_enabled(false);
+        let v2 = rows.iter().find(|r| r.engine.contains("fragments")).unwrap();
+        let names: Vec<&str> = v2.phases.iter().map(|p| p.0).collect();
+        assert!(names.contains(&crate::obs::S_FRAG_PARTITION), "{names:?}");
+        assert!(names.contains(&crate::obs::S_FRAG_COMPACT), "{names:?}");
+        let v1 = rows.iter().find(|r| r.engine.contains("blocks")).unwrap();
+        let v1names: Vec<&str> = v1.phases.iter().map(|p| p.0).collect();
+        assert!(
+            !v1names.contains(&crate::obs::S_FRAG_PARTITION),
+            "the block scheme must not record fragment spans: {v1names:?}"
+        );
     }
 
     #[test]

@@ -59,14 +59,21 @@ impl<K: SortKey> Classifier<K> for RmiClassifier {
 
     fn classify_batch(&self, keys: &[K], out: &mut [u32]) {
         debug_assert_eq!(keys.len(), out.len());
-        // 4-way unroll: independent model evaluations pipeline well.
-        let mut kc = keys.chunks_exact(4);
-        let mut oc = out.chunks_exact_mut(4);
-        for (k4, o4) in (&mut kc).zip(&mut oc) {
-            o4[0] = Classifier::<K>::classify(self, k4[0]) as u32;
-            o4[1] = Classifier::<K>::classify(self, k4[1]) as u32;
-            o4[2] = Classifier::<K>::classify(self, k4[2]) as u32;
-            o4[3] = Classifier::<K>::classify(self, k4[3]) as u32;
+        // 8-wide branchless batches through the shared Rmi::predict_batch
+        // (the same kernel the LearnedSort 2.0 fragmentation sweep uses).
+        let mut kc = keys.chunks_exact(8);
+        let mut oc = out.chunks_exact_mut(8);
+        for (k8, o8) in (&mut kc).zip(&mut oc) {
+            let mut xs = [0.0f64; 8];
+            for (x, k) in xs.iter_mut().zip(k8.iter()) {
+                *x = k.to_f64();
+            }
+            let ps = self.rmi.predict_batch(&xs);
+            for (o, &p) in o8.iter_mut().zip(ps.iter()) {
+                let b = (p * self.scale) as usize;
+                let b = if b >= self.n_buckets { self.n_buckets - 1 } else { b };
+                *o = b as u32;
+            }
         }
         for (k, o) in kc.remainder().iter().zip(oc.into_remainder()) {
             *o = Classifier::<K>::classify(self, *k) as u32;

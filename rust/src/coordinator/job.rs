@@ -7,13 +7,19 @@ use crate::external::{ExternalConfig, ExternalSortReport};
 use crate::key::KeyKind;
 use crate::SortEngine;
 
-/// Owned key buffer, matching the paper's two key domains.
+/// Owned key buffer, covering the four key widths of the pipeline (the
+/// paper's two 64-bit domains plus the narrow widths the external path's
+/// self-describing spill format already handles).
 #[derive(Debug, Clone)]
 pub enum KeyBuf {
     /// 64-bit doubles (the synthetic datasets).
     F64(Vec<f64>),
     /// 64-bit unsigned integers (the real-world datasets).
     U64(Vec<u64>),
+    /// 32-bit floats (narrow synthetic streams).
+    F32(Vec<f32>),
+    /// 32-bit unsigned integers (narrow real-world streams).
+    U32(Vec<u32>),
 }
 
 impl KeyBuf {
@@ -22,6 +28,8 @@ impl KeyBuf {
         match self {
             KeyBuf::F64(v) => v.len(),
             KeyBuf::U64(v) => v.len(),
+            KeyBuf::F32(v) => v.len(),
+            KeyBuf::U32(v) => v.len(),
         }
     }
 
@@ -31,10 +39,14 @@ impl KeyBuf {
     }
 
     /// Duplicate fraction of a probe prefix (router heuristic input).
+    /// Narrow widths widen their bit patterns into the shared u64 probe —
+    /// only equality matters here, not order.
     pub fn probe_duplicate_fraction(&self, probe: usize) -> f64 {
         match self {
             KeyBuf::F64(v) => probe_dup(v.iter().map(|x| x.to_bits()), probe),
             KeyBuf::U64(v) => probe_dup(v.iter().copied(), probe),
+            KeyBuf::F32(v) => probe_dup(v.iter().map(|x| u64::from(x.to_bits())), probe),
+            KeyBuf::U32(v) => probe_dup(v.iter().map(|&x| u64::from(x)), probe),
         }
     }
 }
@@ -203,6 +215,18 @@ mod tests {
         let f = KeyBuf::F64(vec![1.0, 2.0, 3.0]);
         assert_eq!(f.probe_duplicate_fraction(3), 0.0);
         assert_eq!(KeyBuf::U64(vec![]).probe_duplicate_fraction(10), 0.0);
+    }
+
+    #[test]
+    fn keybuf_narrow_widths() {
+        let b = KeyBuf::U32(vec![9, 9, 9, 3]);
+        assert_eq!(b.len(), 4);
+        assert!((b.probe_duplicate_fraction(4) - 0.5).abs() < 1e-12);
+        let f = KeyBuf::F32(vec![1.5, 1.5, 2.5, 3.5]);
+        assert_eq!(f.len(), 4);
+        assert!((f.probe_duplicate_fraction(4) - 0.25).abs() < 1e-12);
+        assert_eq!(KeyBuf::F32(vec![]).probe_duplicate_fraction(10), 0.0);
+        assert_eq!(KeyBuf::U32(vec![7]).probe_duplicate_fraction(10), 0.0);
     }
 
     #[test]

@@ -232,6 +232,22 @@ fn run_job(mut job: JobSpec, threads: usize) -> JobReport {
             }
             (v.len(), is_sorted(v), None)
         }
+        JobPayload::InMemory(KeyBuf::F32(v)) => {
+            if threads > 1 && job.parallel {
+                sort_parallel(engine, v, threads);
+            } else {
+                sort_sequential(engine, v);
+            }
+            (v.len(), is_sorted(v), None)
+        }
+        JobPayload::InMemory(KeyBuf::U32(v)) => {
+            if threads > 1 && job.parallel {
+                sort_parallel(engine, v, threads);
+            } else {
+                sort_sequential(engine, v);
+            }
+            (v.len(), is_sorted(v), None)
+        }
         JobPayload::External(ext) => {
             let ext_threads = if job.parallel { threads } else { 1 };
             let (n, ok, report) = run_external_job(job.id, ext, ext_threads);

@@ -104,6 +104,20 @@ mod tests {
     }
 
     #[test]
+    fn narrow_widths_route_like_wide_ones() {
+        let j = spec(KeyBuf::U32((0..100_000).collect()));
+        assert_eq!(route(&j), SortEngine::Aips2o);
+        let j = spec(KeyBuf::U32((0..100_000).map(|i| i % 5).collect()));
+        assert_eq!(route(&j), SortEngine::Ips4o);
+        let mut dups = vec![0.5f32; 80_000];
+        dups.extend((0..20_000).map(|i| i as f32));
+        let j = spec(KeyBuf::F32(dups));
+        assert_eq!(route(&j), SortEngine::Ips4o);
+        let j = spec(KeyBuf::F32(vec![1.0; 64]));
+        assert_eq!(route(&j), SortEngine::StdSort);
+    }
+
+    #[test]
     fn fixed_overrides() {
         let mut j = spec(KeyBuf::U64((0..100).collect()));
         j.engine = EngineChoice::Fixed(SortEngine::LearnedSort);

@@ -122,6 +122,20 @@ pub fn generate_u64(name: &str, n: usize, seed: u64) -> Result<Vec<u64>, String>
     Ok(gen.next_chunk(n).unwrap_or_default())
 }
 
+/// Generate a narrow-width (f32) synthetic dataset by name: one
+/// all-at-once chunk of the [`chunked_f32`] stream.
+pub fn generate_f32(name: &str, n: usize, seed: u64) -> Result<Vec<f32>, String> {
+    let mut gen = chunked_f32(name, n, seed)?;
+    Ok(gen.next_chunk(n).unwrap_or_default())
+}
+
+/// Generate a narrow-width (u32) simulated real-world dataset by name:
+/// one all-at-once chunk of the [`chunked_u32`] stream.
+pub fn generate_u32(name: &str, n: usize, seed: u64) -> Result<Vec<u32>, String> {
+    let mut gen = chunked_u32(name, n, seed)?;
+    Ok(gen.next_chunk(n).unwrap_or_default())
+}
+
 // ---------------------------------------------------------------------------
 // Chunked generation — every paper distribution as an on-disk file.
 //

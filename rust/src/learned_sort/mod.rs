@@ -5,34 +5,57 @@
 //! Four routines, matching the paper's description:
 //!
 //! 1. **Train the model** once: RMI on a ~1% random sample (the paper's
-//!    key deviation from SampleSort — sample once, in bulk).
-//! 2. **Two rounds of partitioning** with per-bucket buffers and a
-//!    defragmentation pass — our shared block-partition framework *is*
-//!    that routine (the paper, Section 2.4: "the blocking strategy adopted
-//!    by IPS⁴o shares many ideas with those adopted by LearnedSort").
-//!    Round 2 re-uses the same global model, rescaled to the bucket's CDF
-//!    range — LearnedSort never retrains ("samples data only once").
-//! 3. **Homogeneity check** per bucket: all-equal buckets are already
-//!    sorted and skipped (the duplicate fix of LearnedSort 2.0).
+//!    key deviation from SampleSort — sample once, in bulk). The sample
+//!    also drives two duplicate defenses: the round-1 fan-out is capped
+//!    by the sample's distinct count (more buckets than distinct values
+//!    cannot subdivide anything), and values heavy enough to dominate a
+//!    bucket are promoted to equality buckets.
+//! 2. **Two rounds of partitioning.** Two interchangeable schemes (see
+//!    [`PartitionScheme`]): the 2.0 re-design's in-place fragmented
+//!    partition ([`partition2`] — variable-size buckets emulated by
+//!    overwriting the input in fragments, equality buckets instead of a
+//!    spill bucket; the default), or the shared IPS⁴o block-partition
+//!    framework (the 1.x-shaped formulation kept as the differential
+//!    baseline). Round 2 re-uses the same global model, rescaled to the
+//!    bucket's CDF range — LearnedSort never retrains ("samples data
+//!    only once").
+//! 3. **Homogeneity check** per bucket: all-equal buckets (and equality
+//!    buckets) are already sorted and skipped (the duplicate fix of
+//!    LearnedSort 2.0).
 //! 4. **Model-based Counting Sort** in the sub-buckets, then an
 //!    **Insertion Sort** correction pass.
 //!
-//! Bucket counts scale with input size (`B = clamp(n/5000, 2, 1000)`) so
-//! small benchmark inputs keep the paper's ~1000-key base-case granularity
+//! Bucket counts scale with input size (`B = clamp(n/2000, 2, 1000)`,
+//! duplicate-aware — see [`LearnedSortConfig::bucket_target`]) so small
+//! benchmark inputs keep the paper's ~1000-key base-case granularity
 //! (the paper's fixed B=1000 assumes N ≈ 10⁸ — Section 3.3 discusses
 //! exactly this trade-off).
 
 pub mod counting_sort;
+pub mod partition2;
 
 use crate::classifier::Classifier;
 use crate::key::SortKey;
-use crate::rmi::model::{sample_f64, Rmi, RmiConfig};
+use crate::rmi::model::{Rmi, RmiConfig};
 use crate::sample_sort::base_case::small_sort;
 use crate::sample_sort::partition::partition;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::timer::{phase_scope, Phase};
 
 use counting_sort::model_counting_sort;
+
+/// Which of the two partition implementations LearnedSort runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionScheme {
+    /// v1: the shared IPS⁴o block-partition framework (fixed-capacity
+    /// block buffers, count-then-permute; kept as the differential
+    /// baseline for the 2.0 path).
+    Blocks,
+    /// v2: the 2.0 re-design's in-place fragmented-bucket partition
+    /// ([`partition2`]) — variable-size buckets, batched branchless RMI
+    /// prediction, equality buckets for heavy duplicates.
+    Fragments,
+}
 
 /// Tuning knobs of LearnedSort 2.0.
 #[derive(Debug, Clone, Copy)]
@@ -47,14 +70,24 @@ pub struct LearnedSortConfig {
     pub leaves: usize,
     /// Max fan-out per partitioning round (paper: 1000).
     pub max_fanout: usize,
-    /// Target keys per round-1 bucket.
+    /// Target keys per round-1 bucket. The effective fan-out is
+    /// duplicate-aware: `n / bucket_target` is additionally capped by the
+    /// training sample's distinct count when the sampled distinct ratio
+    /// is low (dup-heavy streams get fewer, proportionally larger
+    /// buckets instead of thousands of mostly-empty ones).
     pub bucket_target: usize,
     /// Below this, sort directly with the base case.
     pub base_case: usize,
     /// Sub-buckets at or below this size go to model counting sort.
     pub counting_threshold: usize,
-    /// Keys per buffer block in the partition rounds.
+    /// Keys per buffer block in the v1 block-partition rounds.
     pub block: usize,
+    /// Which partition scheme runs the two rounds.
+    pub scheme: PartitionScheme,
+    /// Keys per fragment in the v2 fragmented partition.
+    pub fragment: usize,
+    /// Max equality buckets (heavy duplicate values) per round (v2).
+    pub max_equality: usize,
 }
 
 impl Default for LearnedSortConfig {
@@ -73,6 +106,21 @@ impl Default for LearnedSortConfig {
             base_case: 2048,
             counting_threshold: 2048,
             block: 128,
+            scheme: PartitionScheme::Fragments,
+            fragment: 128,
+            max_equality: 16,
+        }
+    }
+}
+
+impl LearnedSortConfig {
+    /// The 1.x-shaped configuration: block partition, no equality
+    /// buckets. Kept callable so the differential harness can pin the
+    /// two schemes against each other.
+    pub fn v1() -> LearnedSortConfig {
+        LearnedSortConfig {
+            scheme: PartitionScheme::Blocks,
+            ..LearnedSortConfig::default()
         }
     }
 }
@@ -106,6 +154,29 @@ impl<'a, K: SortKey> Classifier<K> for SubRangeRmi<'a> {
     fn is_equality_bucket(&self, _b: usize) -> bool {
         false
     }
+
+    fn classify_batch(&self, keys: &[K], out: &mut [u32]) {
+        debug_assert_eq!(keys.len(), out.len());
+        // the shared 8-wide branchless prediction kernel
+        let mut kc = keys.chunks_exact(8);
+        let mut oc = out.chunks_exact_mut(8);
+        for (k8, o8) in (&mut kc).zip(&mut oc) {
+            let mut xs = [0.0f64; 8];
+            for (x, k) in xs.iter_mut().zip(k8.iter()) {
+                *x = k.to_f64();
+            }
+            let ps = self.rmi.predict_batch(&xs);
+            for (o, &p) in o8.iter_mut().zip(ps.iter()) {
+                let rel = (p - self.lo) * self.inv_width * self.nb as f64;
+                let b = rel as usize;
+                let b = if b >= self.nb { self.nb - 1 } else { b };
+                *o = b as u32;
+            }
+        }
+        for (k, o) in kc.remainder().iter().zip(oc.into_remainder()) {
+            *o = Classifier::<K>::classify(self, *k) as u32;
+        }
+    }
 }
 
 /// Sort with LearnedSort 2.0 (sequential — the paper benchmarks it
@@ -125,19 +196,72 @@ pub fn sort_cfg<K: SortKey>(data: &mut [K], cfg: &LearnedSortConfig) {
     let mut rng = Xoshiro256pp::new(0x1EA2_4ED ^ n as u64);
 
     // ---- Routine 1: train the CDF model (once) -----------------------
-    let rmi = {
+    let (rmi, skeys) = {
         let _g = phase_scope(Phase::ModelTrain);
         let ssz = ((n as f64 * cfg.sample_frac) as usize)
             .clamp(cfg.min_sample, cfg.max_sample)
             .min(n);
-        let mut sample = Vec::new();
-        sample_f64(data, ssz, &mut rng, &mut sample);
-        sample.sort_unstable_by(f64::total_cmp);
-        Rmi::train(&sample, RmiConfig { n_leaves: cfg.leaves })
+        // drawn as keys (not embeddings): the duplicate defenses below
+        // need exact bit patterns, not the lossy f64 embedding
+        let mut skeys: Vec<K> = Vec::with_capacity(ssz);
+        for _ in 0..ssz {
+            skeys.push(data[rng.next_below(n as u64) as usize]);
+        }
+        skeys.sort_unstable_by(|a, b| a.to_bits_ordered().cmp(&b.to_bits_ordered()));
+        // bit order embeds monotonically into f64, so this stays sorted
+        let sample: Vec<f64> = skeys.iter().map(|k| k.to_f64()).collect();
+        (Rmi::train(&sample, RmiConfig { n_leaves: cfg.leaves }), skeys)
     };
 
-    // ---- Routine 2a: first partitioning round ------------------------
-    let nb1 = (n / cfg.bucket_target).clamp(2, cfg.max_fanout);
+    // ---- Routine 2 fan-out: duplicate-aware round-1 bucket count -----
+    let distinct = count_distinct_sorted(&skeys);
+    let nb1 = round1_fanout(n, distinct, skeys.len(), cfg);
+    match cfg.scheme {
+        PartitionScheme::Blocks => sort_rounds_blocks(data, rmi, nb1, cfg),
+        PartitionScheme::Fragments => sort_rounds_fragments(data, rmi, &skeys, nb1, cfg),
+    }
+}
+
+/// Distinct values in a bit-sorted sample.
+fn count_distinct_sorted<K: SortKey>(sample: &[K]) -> usize {
+    if sample.is_empty() {
+        return 0;
+    }
+    1 + sample
+        .windows(2)
+        .filter(|w| w[0].to_bits_ordered() != w[1].to_bits_ordered())
+        .count()
+}
+
+/// Round-1 fan-out: the density target `n / bucket_target`, capped by the
+/// sample's distinct count when the sampled distinct ratio says the
+/// stream is duplicate-heavy. A fan-out beyond the number of distinct
+/// values only manufactures empty buckets while the heavy values still
+/// pile into few of them — the 1.x failure mode this config fixes.
+fn round1_fanout(
+    n: usize,
+    sample_distinct: usize,
+    sample_len: usize,
+    cfg: &LearnedSortConfig,
+) -> usize {
+    let base = (n / cfg.bucket_target.max(1)).clamp(2, cfg.max_fanout);
+    if sample_len == 0 {
+        return base;
+    }
+    let ratio = sample_distinct as f64 / sample_len as f64;
+    if ratio >= 0.5 {
+        return base;
+    }
+    base.min(sample_distinct.max(2))
+}
+
+/// v1 rounds: the shared IPS⁴o block-partition framework.
+fn sort_rounds_blocks<K: SortKey>(
+    data: &mut [K],
+    rmi: Rmi,
+    nb1: usize,
+    cfg: &LearnedSortConfig,
+) {
     let c1 = crate::classifier::rmi_classifier::RmiClassifier::new(rmi, nb1);
     let r1 = partition(data, &c1, cfg.block, 1);
     let rmi = c1.rmi();
@@ -158,8 +282,8 @@ pub fn sort_cfg<K: SortKey>(data: &mut [K], cfg: &LearnedSortConfig) {
         let f_width = 1.0 / nb1 as f64;
         if bucket.len() > cfg.counting_threshold {
             // ---- Routine 2b: second partitioning round ---------------
-            let nb2 = (bucket.len() / (cfg.counting_threshold / 2).max(1))
-                .clamp(2, cfg.max_fanout);
+            let nb2 =
+                (bucket.len() / (cfg.counting_threshold / 2).max(1)).clamp(2, cfg.max_fanout);
             let c2 = SubRangeRmi {
                 rmi,
                 lo: f_lo,
@@ -177,11 +301,88 @@ pub fn sort_cfg<K: SortKey>(data: &mut [K], cfg: &LearnedSortConfig) {
                     continue;
                 }
                 // ---- Routine 4: model counting sort + correction -----
-                counting_base(sub, rmi, f_lo + (b2 as f64 / nb2 as f64) * f_width,
-                    nb1 as f64 * nb2 as f64, &mut scratch, &mut counts);
+                counting_base(
+                    sub,
+                    rmi,
+                    f_lo + (b2 as f64 / nb2 as f64) * f_width,
+                    nb1 as f64 * nb2 as f64,
+                    &mut scratch,
+                    &mut counts,
+                );
             }
         } else {
             counting_base(bucket, rmi, f_lo, nb1 as f64, &mut scratch, &mut counts);
+        }
+    }
+}
+
+/// v2 rounds: the 2.0 in-place fragmented partition with equality
+/// buckets ([`partition2`]).
+fn sort_rounds_fragments<K: SortKey>(
+    data: &mut [K],
+    rmi: Rmi,
+    sample_sorted: &[K],
+    nb1: usize,
+    cfg: &LearnedSortConfig,
+) {
+    let heavy = partition2::detect_heavy(sample_sorted, nb1, cfg.max_equality);
+    let c1 = partition2::EqRmiClassifier::new(rmi, nb1, &heavy);
+    let r1 = partition2::fragmented_partition(data, &c1, cfg.fragment);
+    let nb = c1.total_buckets();
+    let rmi = c1.rmi();
+
+    let mut scratch: Vec<K> = Vec::new();
+    let mut counts: Vec<u32> = Vec::new();
+    for b1 in 0..nb {
+        let (lo, hi) = (r1.boundaries[b1], r1.boundaries[b1 + 1]);
+        if hi - lo < 2 {
+            continue;
+        }
+        // ---- Routine 3: equality buckets hold one value — sorted -----
+        if c1.is_eq_bucket(b1) {
+            continue;
+        }
+        let bucket = &mut data[lo..hi];
+        if is_homogeneous(bucket) {
+            continue;
+        }
+        // rescale over the CDF window of the model bucket this final
+        // bucket was split from (the window of the whole split group —
+        // correctness only needs the counting base's insertion repair)
+        let (f_lo, f_hi) = c1.model_range(b1);
+        let scale1 = 1.0 / (f_hi - f_lo);
+        if bucket.len() > cfg.counting_threshold {
+            // ---- Routine 2b: second fragmented round -----------------
+            let nb2 =
+                (bucket.len() / (cfg.counting_threshold / 2).max(1)).clamp(2, cfg.max_fanout);
+            let c2 = SubRangeRmi {
+                rmi,
+                lo: f_lo,
+                inv_width: scale1,
+                nb: nb2,
+            };
+            let r2 = partition2::fragmented_partition(bucket, &c2, cfg.fragment);
+            for b2 in 0..nb2 {
+                let (slo, shi) = (r2.boundaries[b2], r2.boundaries[b2 + 1]);
+                if shi - slo < 2 {
+                    continue;
+                }
+                let sub = &mut bucket[slo..shi];
+                if is_homogeneous(sub) {
+                    continue;
+                }
+                // ---- Routine 4: model counting sort + correction -----
+                counting_base(
+                    sub,
+                    rmi,
+                    f_lo + (b2 as f64 / nb2 as f64) / scale1,
+                    scale1 * nb2 as f64,
+                    &mut scratch,
+                    &mut counts,
+                );
+            }
+        } else {
+            counting_base(bucket, rmi, f_lo, scale1, &mut scratch, &mut counts);
         }
     }
 }
@@ -284,5 +485,75 @@ mod tests {
         let mut v: Vec<f64> = (0..100_000).rev().map(|i| i as f64).collect();
         sort(&mut v);
         assert!(is_sorted(&v));
+    }
+
+    #[test]
+    fn v1_blocks_scheme_still_sorts() {
+        let cfg = LearnedSortConfig::v1();
+        assert_eq!(cfg.scheme, PartitionScheme::Blocks);
+        let mut rng = Xoshiro256pp::new(7);
+        let mut v: Vec<f64> = (0..120_000).map(|_| rng.lognormal(0.0, 1.5)).collect();
+        let mut want = v.clone();
+        want.sort_unstable_by(f64::total_cmp);
+        sort_cfg(&mut v, &cfg);
+        assert_eq!(v, want);
+        let mut v: Vec<u64> = (0..120_000).map(|_| rng.next_below(64)).collect();
+        let mut want = v.clone();
+        want.sort_unstable();
+        sort_cfg(&mut v, &cfg);
+        assert_eq!(v, want);
+    }
+
+    #[test]
+    fn v2_matches_std_sort_bitwise_on_dup_heavy_input() {
+        // ≥90% duplicates: the 1.x spill-bucket failure mode
+        let mut rng = Xoshiro256pp::new(8);
+        let n = 150_000;
+        let mut v: Vec<f64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            if rng.next_below(10) < 9 {
+                v.push(77.25);
+            } else {
+                v.push(rng.uniform(0.0, 1e4));
+            }
+        }
+        let mut want = v.clone();
+        want.sort_unstable_by(f64::total_cmp);
+        sort(&mut v);
+        let got: Vec<u64> = v.iter().map(|x| x.to_bits()).collect();
+        let exp: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, exp);
+    }
+
+    #[test]
+    fn dup_heavy_fanout_is_capped_by_distinct_estimate() {
+        let cfg = LearnedSortConfig::default();
+        // dup-heavy: 30 distinct values in a 4096-key sample caps the
+        // fan-out at 30 (the 1.x config would have opened 500 buckets)
+        assert!(round1_fanout(1_000_000, 30, 4096, &cfg) <= 30);
+        // smooth streams keep the density target untouched
+        assert_eq!(round1_fanout(1_000_000, 4000, 4096, &cfg), 500);
+        // degenerate distinct counts still yield a valid 2-way fan-out
+        assert_eq!(round1_fanout(1_000_000, 1, 4096, &cfg), 2);
+        // the cap never raises the fan-out above the density target
+        assert_eq!(round1_fanout(10_000, 4, 4096, &cfg), 4);
+        assert_eq!(round1_fanout(10_000, 900, 4096, &cfg), 5);
+    }
+
+    #[test]
+    fn narrow_width_keys_sort() {
+        let mut rng = Xoshiro256pp::new(9);
+        let mut v: Vec<u32> = (0..80_000).map(|_| rng.next_below(1 << 20) as u32).collect();
+        let mut want = v.clone();
+        want.sort_unstable();
+        sort(&mut v);
+        assert_eq!(v, want);
+        let mut v: Vec<f32> = (0..80_000).map(|_| rng.uniform(-1e3, 1e3) as f32).collect();
+        let mut want = v.clone();
+        want.sort_unstable_by(f32::total_cmp);
+        sort(&mut v);
+        let got: Vec<u32> = v.iter().map(|x| x.to_bits()).collect();
+        let exp: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, exp);
     }
 }

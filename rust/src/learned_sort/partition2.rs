@@ -1,0 +1,632 @@
+//! The LearnedSort 2.0 in-place fragmented-bucket partition (Kristo,
+//! Vaidya & Kraska, "Defeating duplicates", arXiv 2107.03290, §3).
+//!
+//! LearnedSort 1.x gave every bucket a fixed capacity and overflowed the
+//! excess into a *spill bucket* that was comparison-sorted at the end —
+//! on duplicate-heavy inputs most keys land in few buckets, the spill
+//! grows to Θ(n), and the algorithm collapses to `std::sort`. The 2.0
+//! re-design emulates **variable-size buckets** instead: the predicted
+//! keys stream through small per-bucket buffers, and every full buffer
+//! is flushed as a *fragment* over the already-consumed prefix of the
+//! input array. A bucket owns a chain of fragments scattered through the
+//! array; a compaction pass then reassembles the chains into contiguous
+//! buckets, in bucket order. No bucket can overflow, so there is no
+//! spill bucket to collapse into.
+//!
+//! Layout during the fragmentation sweep (`F` = fragment size):
+//!
+//! ```text
+//!           0        F        2F       3F        read              n
+//!           +--------+--------+--------+----//----+----------------+
+//!   data    | frag 0 | frag 1 | frag 2 |  free    |   unconsumed   |
+//!           | (b=4)  | (b=1)  | (b=4)  |          |                |
+//!           +--------+--------+--------+----//----+----------------+
+//!   chains: bucket 1 -> [frag 1]     bucket 4 -> [frag 0, frag 2]
+//!   buffers: per-bucket partial fills (< F keys each)
+//! ```
+//!
+//! The flush target never overtakes the read cursor: after `r` keys are
+//! consumed, `flushed·F = r − buffered` and a flush requires `buffered ≥
+//! F`, so `flushed·F + F ≤ r` — fragments only ever overwrite input that
+//! has already been copied out. Auxiliary memory is the per-bucket
+//! buffers (`nb·F` keys) plus one `u32` per fragment (`n/F`), a small
+//! fraction of the input for the default `F = 128`.
+//!
+//! Duplicates get **equality buckets** instead of a spill: values that
+//! dominate the training sample are promoted by [`EqRmiClassifier`] into
+//! dedicated single-value buckets spliced between the model buckets (so
+//! the partition stays an ordered partition), and the recursion skips
+//! them — an all-equal bucket is already sorted.
+//!
+//! The classification sweep is batched: [`Rmi::predict_batch`] evaluates
+//! [`PREDICT_BATCH`] keys per loop iteration (independent model
+//! evaluations pipeline without data-dependent branches) and the flush
+//! targets are software-prefetched on x86-64.
+
+use crate::classifier::Classifier;
+use crate::key::SortKey;
+use crate::rmi::model::Rmi;
+use crate::util::timer::{phase_scope, Phase};
+
+/// Keys classified per hot-loop iteration in the fragmentation sweep.
+pub const PREDICT_BATCH: usize = 16;
+
+/// Result of a fragmented partition: `boundaries[b]..boundaries[b+1]`
+/// holds bucket `b`, exactly sized (variable-size buckets — no spill).
+#[derive(Debug, Clone)]
+pub struct FragPartition {
+    /// `num_buckets + 1` cumulative bucket boundaries over the input.
+    pub boundaries: Vec<usize>,
+}
+
+/// Partition `data` in place into `classifier.num_buckets()` variable-size
+/// buckets with the LearnedSort 2.0 fragment scheme: classify in batches
+/// into per-bucket buffers of `frag` keys, flush full buffers as fragments
+/// over the consumed prefix, then compact the fragment chains into
+/// contiguous buckets in bucket order.
+pub fn fragmented_partition<K: SortKey, C: Classifier<K> + ?Sized>(
+    data: &mut [K],
+    classifier: &C,
+    frag: usize,
+) -> FragPartition {
+    let n = data.len();
+    let nb = classifier.num_buckets();
+    assert!(nb >= 2, "need at least two buckets");
+    assert!(frag >= 1, "fragment size must be positive");
+    let mut boundaries = vec![0usize; nb + 1];
+    if n == 0 {
+        return FragPartition { boundaries };
+    }
+
+    // ---- Fragmentation sweep: classify + flush full buffers ----------
+    let mut buffers: Vec<K> = vec![data[0]; nb * frag];
+    let mut lens: Vec<u32> = vec![0u32; nb];
+    // fragment chain, in flush order: fragment f sits at data[f*frag..]
+    // and belongs to bucket frag_bucket[f]
+    let mut frag_bucket: Vec<u32> = Vec::with_capacity(n / frag + 1);
+    {
+        let _p = phase_scope(Phase::Classification);
+        let _s = crate::obs::enabled()
+            .then(|| crate::obs::trace::span_n(crate::obs::S_FRAG_PARTITION, n as u64, 0));
+        let mut idx = [0u32; PREDICT_BATCH];
+        let mut read = 0usize;
+        while read < n {
+            let m = PREDICT_BATCH.min(n - read);
+            classifier.classify_batch(&data[read..read + m], &mut idx[..m]);
+            prefetch_targets(&buffers, &lens, &idx[..m], frag);
+            for (i, &bu) in idx[..m].iter().enumerate() {
+                let b = bu as usize;
+                let key = data[read + i];
+                let len = lens[b] as usize;
+                buffers[b * frag + len] = key;
+                if len + 1 == frag {
+                    let dst = frag_bucket.len() * frag;
+                    // the flush target lies inside the consumed prefix
+                    debug_assert!(dst + frag <= read + i + 1);
+                    data[dst..dst + frag].copy_from_slice(&buffers[b * frag..(b + 1) * frag]);
+                    frag_bucket.push(b as u32);
+                    lens[b] = 0;
+                } else {
+                    lens[b] = (len + 1) as u32;
+                }
+            }
+            read += m;
+        }
+    }
+
+    // ---- Compaction: reassemble fragment chains in bucket order ------
+    {
+        let _p = phase_scope(Phase::Cleanup);
+        let _s = crate::obs::enabled()
+            .then(|| crate::obs::trace::span_n(crate::obs::S_FRAG_COMPACT, n as u64, 0));
+        let nf = frag_bucket.len();
+        let mut fcnt = vec![0usize; nb];
+        for &b in &frag_bucket {
+            fcnt[b as usize] += 1;
+        }
+        // fragment-slot prefix sums: bucket b's fragments belong in slots
+        // fstart[b]..fstart[b+1] once the chains are gathered
+        let mut fstart = vec![0usize; nb + 1];
+        for b in 0..nb {
+            fstart[b + 1] = fstart[b] + fcnt[b];
+        }
+        // destination slot of every fragment (chain order preserved)
+        let mut next = fstart.clone();
+        let mut dest = vec![0u32; nf];
+        for (f, &b) in frag_bucket.iter().enumerate() {
+            dest[f] = next[b as usize] as u32;
+            next[b as usize] += 1;
+        }
+        // apply the slot permutation by following its cycles: lift one
+        // fragment, then keep displacing the occupant of its destination
+        // until the cycle closes — every fragment moves exactly once
+        if nf > 0 {
+            let mut placed = vec![false; nf];
+            let mut hold: Vec<K> = vec![data[0]; frag];
+            let mut disp: Vec<K> = vec![data[0]; frag];
+            for s in 0..nf {
+                if placed[s] || dest[s] as usize == s {
+                    placed[s] = true;
+                    continue;
+                }
+                hold.copy_from_slice(&data[s * frag..(s + 1) * frag]);
+                let mut cur = s;
+                loop {
+                    let d = dest[cur] as usize;
+                    if d == s {
+                        data[s * frag..(s + 1) * frag].copy_from_slice(&hold);
+                        break;
+                    }
+                    disp.copy_from_slice(&data[d * frag..(d + 1) * frag]);
+                    data[d * frag..(d + 1) * frag].copy_from_slice(&hold);
+                    std::mem::swap(&mut hold, &mut disp);
+                    placed[d] = true;
+                    cur = d;
+                }
+                placed[s] = true;
+            }
+        }
+        // exact variable-size boundaries (fragments + partial buffer)
+        for b in 0..nb {
+            boundaries[b + 1] = boundaries[b] + fcnt[b] * frag + lens[b] as usize;
+        }
+        debug_assert_eq!(boundaries[nb], n);
+        // shift each bucket's gathered fragment block right onto its final
+        // (unaligned) offset and append the partial buffer. Every source
+        // start is ≤ its destination (slots undercount by the partials of
+        // lower buckets), so walking right-to-left never clobbers an
+        // unmoved block; the self-overlapping move is a `copy_within`.
+        for b in (0..nb).rev() {
+            let src = fstart[b] * frag;
+            let flen = fcnt[b] * frag;
+            let dst = boundaries[b];
+            debug_assert!(src <= dst);
+            if flen > 0 && src != dst {
+                data.copy_within(src..src + flen, dst);
+            }
+            let plen = lens[b] as usize;
+            data[dst + flen..dst + flen + plen]
+                .copy_from_slice(&buffers[b * frag..b * frag + plen]);
+        }
+    }
+    FragPartition { boundaries }
+}
+
+/// Software-prefetch the buffer slots an incoming batch will write
+/// (x86-64 only; a no-op hint elsewhere and under Miri).
+#[inline]
+fn prefetch_targets<K>(buffers: &[K], lens: &[u32], idx: &[u32], frag: usize) {
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        for &b in idx {
+            let slot = b as usize * frag + lens[b as usize] as usize;
+            // SAFETY: prefetch is a cache hint and never dereferences;
+            // `slot < nb*frag = buffers.len()` keeps the address in-bounds.
+            unsafe { _mm_prefetch::<{ _MM_HINT_T0 }>(buffers.as_ptr().add(slot) as *const i8) };
+        }
+    }
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
+    {
+        let _ = (buffers, lens, idx, frag);
+    }
+}
+
+/// Heavy duplicate values found in a sorted training sample: the ordered
+/// bit pattern (classifier comparison domain) and the f64 model embedding
+/// of each, ascending.
+pub type HeavyValues = Vec<(u64, f64)>;
+
+/// Scan a **sorted** sample for values heavy enough to deserve equality
+/// buckets: a run whose expected mass covers ≥ 2 of `model_buckets`
+/// average-sized buckets would dominate its bucket and recurse uselessly.
+/// Returns at most `max_heavy` values (the heaviest), ascending.
+pub fn detect_heavy<K: SortKey>(
+    sample_sorted: &[K],
+    model_buckets: usize,
+    max_heavy: usize,
+) -> HeavyValues {
+    let n = sample_sorted.len();
+    if n == 0 || max_heavy == 0 {
+        return Vec::new();
+    }
+    let mut runs: Vec<(usize, u64, f64)> = Vec::new();
+    let mut start = 0usize;
+    let mut bits = sample_sorted[0].to_bits_ordered();
+    for i in 1..=n {
+        let b = if i < n {
+            sample_sorted[i].to_bits_ordered()
+        } else {
+            !bits // sentinel differing from the current run
+        };
+        if b != bits {
+            let len = i - start;
+            // run mass ≥ 2 average buckets ⇔ len · B ≥ 2 · n
+            if len * model_buckets >= 2 * n {
+                runs.push((len, bits, sample_sorted[start].to_f64()));
+            }
+            start = i;
+            bits = b;
+        }
+    }
+    // keep the heaviest, then restore value order for the classifier
+    runs.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    runs.truncate(max_heavy);
+    runs.sort_unstable_by_key(|r| r.1);
+    runs.into_iter().map(|(_, b, e)| (b, e)).collect()
+}
+
+/// A monotone RMI bucket map with **equality buckets** spliced in for
+/// heavy duplicate values (LearnedSort 2.0's replacement for the spill
+/// bucket).
+///
+/// Each of the `model_buckets` RMI buckets that contains `k` heavy values
+/// is split into `2k + 1` final buckets: regular segment, equality bucket
+/// for the first heavy value, regular segment, … — so the final map is
+/// still an ordered partition (keys of bucket `i` order before keys of
+/// bucket `i+1`) and every equality bucket holds exactly one value.
+#[derive(Debug, Clone)]
+pub struct EqRmiClassifier {
+    rmi: Rmi,
+    model_buckets: usize,
+    scale: f64,
+    /// Heavy values in ordered-bits domain, ascending; the slice with
+    /// model bucket `m` is `extra_before[m]/2 .. extra_before[m+1]/2`.
+    heavy_bits: Vec<u64>,
+    /// `extra_before[m]` = final-bucket inflation before model bucket
+    /// `m`, i.e. `2 ·` (heavy values in model buckets `< m`).
+    extra_before: Vec<u32>,
+    /// Per final bucket: is it an equality bucket?
+    eq_flag: Vec<bool>,
+    /// Per final bucket: the model bucket it was split from.
+    model_of: Vec<u32>,
+}
+
+impl EqRmiClassifier {
+    /// Wrap a trained model as a `model_buckets`-way classifier with
+    /// equality buckets for `heavy` (as returned by [`detect_heavy`]:
+    /// `(ordered_bits, f64_embedding)` pairs, ascending).
+    pub fn new(rmi: Rmi, model_buckets: usize, heavy: &[(u64, f64)]) -> EqRmiClassifier {
+        assert!(model_buckets >= 2);
+        let scale = model_buckets as f64;
+        let mut per_bucket = vec![0u32; model_buckets];
+        let mut heavy_bits = Vec::with_capacity(heavy.len());
+        let mut heavy_model = Vec::with_capacity(heavy.len());
+        let mut prev_m = 0usize;
+        for &(bits, embed) in heavy {
+            let m = bucket_of(rmi.predict(embed), scale, model_buckets);
+            // ascending values + monotone model ⇒ nondecreasing buckets
+            debug_assert!(m >= prev_m);
+            prev_m = m;
+            per_bucket[m] += 1;
+            heavy_bits.push(bits);
+            heavy_model.push(m);
+        }
+        let mut extra_before = vec![0u32; model_buckets + 1];
+        for m in 0..model_buckets {
+            extra_before[m + 1] = extra_before[m] + 2 * per_bucket[m];
+        }
+        let total = model_buckets + 2 * heavy.len();
+        let mut eq_flag = vec![false; total];
+        for (i, &m) in heavy_model.iter().enumerate() {
+            let within = i - (extra_before[m] / 2) as usize;
+            eq_flag[m + extra_before[m] as usize + 2 * within + 1] = true;
+        }
+        let mut model_of = vec![0u32; total];
+        for m in 0..model_buckets {
+            let lo = m + extra_before[m] as usize;
+            let hi = m + extra_before[m + 1] as usize;
+            for slot in model_of.iter_mut().take(hi + 1).skip(lo) {
+                *slot = m as u32;
+            }
+        }
+        EqRmiClassifier {
+            rmi,
+            model_buckets,
+            scale,
+            heavy_bits,
+            extra_before,
+            eq_flag,
+            model_of,
+        }
+    }
+
+    /// The underlying trained model.
+    pub fn rmi(&self) -> &Rmi {
+        &self.rmi
+    }
+
+    /// Total final buckets (model buckets + 2 per heavy value).
+    pub fn total_buckets(&self) -> usize {
+        self.model_buckets + 2 * self.heavy_bits.len()
+    }
+
+    /// Whether final bucket `b` is a single-value equality bucket.
+    pub fn is_eq_bucket(&self, b: usize) -> bool {
+        self.eq_flag[b]
+    }
+
+    /// CDF range `[lo, hi)` of the model bucket that final bucket `b`
+    /// was split from — the rescaling window for the second round.
+    pub fn model_range(&self, b: usize) -> (f64, f64) {
+        let m = self.model_of[b] as f64;
+        (m / self.scale, (m + 1.0) / self.scale)
+    }
+
+    /// Final bucket from a model prediction `p` and the key's ordered
+    /// bits: splice the key around the heavy values of its model bucket.
+    #[inline]
+    fn classify_embedded(&self, p: f64, kb: u64) -> usize {
+        let m = bucket_of(p, self.scale, self.model_buckets);
+        let mut idx = m + self.extra_before[m] as usize;
+        let lo = (self.extra_before[m] / 2) as usize;
+        let hi = (self.extra_before[m + 1] / 2) as usize;
+        for &hb in &self.heavy_bits[lo..hi] {
+            if kb > hb {
+                idx += 2;
+            } else if kb == hb {
+                return idx + 1;
+            } else {
+                break;
+            }
+        }
+        idx
+    }
+}
+
+/// `floor(p · scale)` clamped into `0..nb`.
+#[inline(always)]
+fn bucket_of(p: f64, scale: f64, nb: usize) -> usize {
+    let b = (p * scale) as usize;
+    if b >= nb {
+        nb - 1
+    } else {
+        b
+    }
+}
+
+impl<K: SortKey> Classifier<K> for EqRmiClassifier {
+    fn num_buckets(&self) -> usize {
+        self.total_buckets()
+    }
+
+    #[inline(always)]
+    fn classify(&self, key: K) -> usize {
+        self.classify_embedded(self.rmi.predict(key.to_f64()), key.to_bits_ordered())
+    }
+
+    fn is_equality_bucket(&self, b: usize) -> bool {
+        self.eq_flag[b]
+    }
+
+    fn classify_batch(&self, keys: &[K], out: &mut [u32]) {
+        debug_assert_eq!(keys.len(), out.len());
+        let mut kc = keys.chunks_exact(8);
+        let mut oc = out.chunks_exact_mut(8);
+        for (k8, o8) in (&mut kc).zip(&mut oc) {
+            let mut xs = [0.0f64; 8];
+            for (x, k) in xs.iter_mut().zip(k8.iter()) {
+                *x = k.to_f64();
+            }
+            let ps = self.rmi.predict_batch(&xs);
+            for ((o, &p), k) in o8.iter_mut().zip(ps.iter()).zip(k8.iter()) {
+                *o = self.classify_embedded(p, k.to_bits_ordered()) as u32;
+            }
+        }
+        for (k, o) in kc.remainder().iter().zip(oc.into_remainder()) {
+            *o = Classifier::<K>::classify(self, *k) as u32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmi::model::RmiConfig;
+    use crate::util::rng::Xoshiro256pp;
+
+    /// Fixed-step range classifier: bucket = key / step (monotone).
+    struct StepClassifier {
+        nb: usize,
+        step: u64,
+    }
+
+    impl Classifier<u64> for StepClassifier {
+        fn num_buckets(&self) -> usize {
+            self.nb
+        }
+
+        fn classify(&self, key: u64) -> usize {
+            ((key / self.step) as usize).min(self.nb - 1)
+        }
+
+        fn is_equality_bucket(&self, _b: usize) -> bool {
+            false
+        }
+    }
+
+    fn check_partition(data: &[u64], c: &StepClassifier, frag: usize) {
+        let mut v = data.to_vec();
+        let r = fragmented_partition(&mut v, c, frag);
+        // permutation: same multiset
+        let mut got = v.clone();
+        let mut want = data.to_vec();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "frag={frag} n={}", data.len());
+        // boundaries cover and respect the bucket map
+        assert_eq!(r.boundaries[0], 0);
+        assert_eq!(*r.boundaries.last().unwrap(), data.len());
+        for b in 0..c.nb {
+            for &k in &v[r.boundaries[b]..r.boundaries[b + 1]] {
+                assert_eq!(Classifier::<u64>::classify(c, k), b, "key {k} in bucket {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn partitions_exactly_with_fragment_chains() {
+        let c = StepClassifier { nb: 8, step: 100 };
+        let mut rng = Xoshiro256pp::new(21);
+        for n in [0usize, 1, 2, 3, 7, 64, 100, 257, 1024, 4096] {
+            let data: Vec<u64> = (0..n).map(|_| rng.next_below(800)).collect();
+            for frag in [1usize, 4, 16, 128] {
+                check_partition(&data, &c, frag);
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_chains_and_empty_buckets() {
+        let c = StepClassifier { nb: 8, step: 100 };
+        let mut rng = Xoshiro256pp::new(22);
+        // all keys in one middle bucket: one long chain, 7 empty buckets
+        let data: Vec<u64> = vec![450; 999];
+        check_partition(&data, &c, 16);
+        // two-value input on the extreme buckets
+        let data: Vec<u64> = (0..1000).map(|_| rng.next_below(2) * 799).collect();
+        check_partition(&data, &c, 8);
+        // already sorted and reverse sorted
+        let data: Vec<u64> = (0..2000u64).map(|i| i % 800).collect();
+        check_partition(&data, &c, 32);
+        let data: Vec<u64> = (0..2000u64).rev().map(|i| i % 800).collect();
+        check_partition(&data, &c, 32);
+    }
+
+    #[test]
+    fn partial_buffers_only_no_flushes() {
+        // n < frag: nothing is ever flushed; compaction assembles the
+        // buckets purely from the partial buffers
+        let c = StepClassifier { nb: 4, step: 25 };
+        let data: Vec<u64> = vec![99, 0, 50, 26, 1, 75];
+        check_partition(&data, &c, 64);
+    }
+
+    fn trained_rmi(sample: &mut Vec<f64>) -> Rmi {
+        sample.sort_unstable_by(f64::total_cmp);
+        Rmi::train(sample, RmiConfig { n_leaves: 64 })
+    }
+
+    #[test]
+    fn detect_heavy_finds_dominant_runs() {
+        // 60% of the sample is the value 7, 20% is 42
+        let mut sample: Vec<f64> = vec![7.0; 600];
+        sample.extend(vec![42.0f64; 200]);
+        sample.extend((0..200).map(|i| i as f64 * 0.001));
+        sample.sort_unstable_by(f64::total_cmp);
+        let heavy = detect_heavy(&sample, 16, 8);
+        let values: Vec<f64> = heavy.iter().map(|&(_, e)| e).collect();
+        assert_eq!(values, vec![7.0, 42.0]);
+        // ascending in the ordered-bits domain too
+        assert!(heavy.windows(2).all(|w| w[0].0 < w[1].0));
+        // a uniform sample has no heavy values
+        let uni: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        assert!(detect_heavy(&uni, 16, 8).is_empty());
+    }
+
+    #[test]
+    fn equality_classifier_is_an_ordered_partition() {
+        let mut rng = Xoshiro256pp::new(23);
+        let mut sample: Vec<f64> = Vec::new();
+        for _ in 0..2000 {
+            if rng.next_below(2) == 0 {
+                sample.push(500.0);
+            } else {
+                sample.push(rng.uniform(0.0, 1000.0));
+            }
+        }
+        let rmi = trained_rmi(&mut sample);
+        let heavy = detect_heavy(&sample, 32, 8);
+        assert!(heavy.iter().any(|&(_, e)| e == 500.0));
+        let c = EqRmiClassifier::new(rmi, 32, &heavy);
+        // the heavy value maps to an equality bucket
+        let eq = Classifier::<f64>::classify(&c, 500.0f64);
+        assert!(c.is_eq_bucket(eq));
+        // bucket map is monotone over a sorted probe
+        let mut probe: Vec<f64> = (0..4000).map(|_| rng.uniform(-10.0, 1010.0)).collect();
+        probe.push(500.0);
+        probe.sort_unstable_by(f64::total_cmp);
+        let mut prev = 0usize;
+        for &x in &probe {
+            let b = Classifier::<f64>::classify(&c, x);
+            assert!(b < c.total_buckets());
+            assert!(b >= prev, "bucket map must stay monotone at {x}");
+            prev = b;
+        }
+        // neighbors of the heavy value stay out of its equality bucket
+        assert!(Classifier::<f64>::classify(&c, 499.999f64) < eq);
+        assert!(Classifier::<f64>::classify(&c, 500.001f64) > eq);
+        // model_range round-trips the split
+        let (lo, hi) = c.model_range(eq);
+        assert!(lo < hi && hi <= 1.0);
+    }
+
+    #[test]
+    fn eq_classifier_batch_matches_scalar() {
+        let mut rng = Xoshiro256pp::new(24);
+        let mut sample: Vec<f64> = Vec::new();
+        for _ in 0..1500 {
+            if rng.next_below(3) == 0 {
+                sample.push(250.0);
+            } else {
+                sample.push(rng.uniform(0.0, 1000.0));
+            }
+        }
+        let rmi = trained_rmi(&mut sample);
+        let heavy = detect_heavy(&sample, 16, 4);
+        let c = EqRmiClassifier::new(rmi, 16, &heavy);
+        let mut keys: Vec<f64> = Vec::new();
+        for i in 0..533 {
+            if i % 5 == 0 {
+                keys.push(250.0);
+            } else {
+                keys.push(rng.uniform(-50.0, 1050.0));
+            }
+        }
+        let mut out = vec![0u32; keys.len()];
+        c.classify_batch(&keys, &mut out);
+        for (k, o) in keys.iter().zip(&out) {
+            assert_eq!(*o as usize, Classifier::<f64>::classify(&c, *k));
+        }
+    }
+
+    #[test]
+    fn fragmented_partition_with_equality_buckets() {
+        let mut rng = Xoshiro256pp::new(25);
+        let n = 4000;
+        let draw = |rng: &mut Xoshiro256pp| {
+            if rng.next_below(10) < 9 {
+                123.0f64
+            } else {
+                rng.uniform(0.0, 1000.0)
+            }
+        };
+        let mut sample: Vec<f64> = (0..1000).map(|_| draw(&mut rng)).collect();
+        let rmi = trained_rmi(&mut sample);
+        let heavy = detect_heavy(&sample, 8, 4);
+        let c = EqRmiClassifier::new(rmi, 8, &heavy);
+        let data: Vec<f64> = (0..n).map(|_| draw(&mut rng)).collect();
+        let mut v = data.clone();
+        let r = fragmented_partition(&mut v, &c, 32);
+        let mut got: Vec<u64> = v.iter().map(|x| x.to_bits()).collect();
+        let mut want: Vec<u64> = data.iter().map(|x| x.to_bits()).collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
+        let nb = c.total_buckets();
+        assert_eq!(r.boundaries.len(), nb + 1);
+        for b in 0..nb {
+            let bucket = &v[r.boundaries[b]..r.boundaries[b + 1]];
+            for &k in bucket {
+                assert_eq!(Classifier::<f64>::classify(&c, k), b);
+            }
+            if c.is_eq_bucket(b) {
+                assert!(bucket.windows(2).all(|w| w[0] == w[1]));
+            }
+        }
+        // ≥90% duplicates: the heavy value's equality bucket caught it
+        let eq = Classifier::<f64>::classify(&c, 123.0f64);
+        assert!(c.is_eq_bucket(eq));
+        assert!(r.boundaries[eq + 1] - r.boundaries[eq] > n / 2);
+    }
+}

@@ -628,12 +628,18 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> i32 {
             2 => n / 16,
             _ => 4_000,
         };
-        let keys = match id % 3 {
+        let keys = match id % 5 {
             0 => KeyBuf::F64(
                 datasets::generate_f64("uniform", size, rng.next_u64()).unwrap(),
             ),
             1 => KeyBuf::U64(
                 datasets::generate_u64("wiki_edit", size, rng.next_u64()).unwrap(),
+            ),
+            2 => KeyBuf::F32(
+                datasets::generate_f32("normal", size, rng.next_u64()).unwrap(),
+            ),
+            3 => KeyBuf::U32(
+                datasets::generate_u32("fb_ids", size, rng.next_u64()).unwrap(),
             ),
             _ => KeyBuf::F64(
                 datasets::generate_f64("root_dups", size, rng.next_u64()).unwrap(),

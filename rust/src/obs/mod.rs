@@ -74,6 +74,12 @@ pub const S_TRAIN: &str = "train";
 pub const S_PARTITION: &str = "partition";
 /// In-memory engines: base-case sorts.
 pub const S_SORT: &str = "sort";
+/// LearnedSort 2.0 fragmentation sweep (batched classify + fragment
+/// flushes over the consumed prefix); nested under [`S_PARTITION`].
+pub const S_FRAG_PARTITION: &str = "frag-partition";
+/// LearnedSort 2.0 compaction pass (fragment-chain permutation + bucket
+/// reassembly); nested under [`S_PARTITION`].
+pub const S_FRAG_COMPACT: &str = "frag-compact";
 
 /// The complete span taxonomy. [`validate_telemetry`] rejects any other
 /// name, so adding a phase means extending this list (and the docs).
@@ -89,6 +95,8 @@ pub const KNOWN_SPANS: &[&str] = &[
     S_TRAIN,
     S_PARTITION,
     S_SORT,
+    S_FRAG_PARTITION,
+    S_FRAG_COMPACT,
 ];
 
 /// External-pipeline phases every multi-run `extsort` emits (retrain and

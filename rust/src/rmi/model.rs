@@ -164,6 +164,27 @@ impl Rmi {
         p.max(0.0).min(ONE_MINUS_EPS)
     }
 
+    /// Batched prediction: `W` independent evaluations of [`Rmi::predict`]
+    /// per call. The evaluations carry no cross-lane dependencies and no
+    /// data-dependent branches (the clamps compile to `maxsd`/`minsd`), so
+    /// the leaf-table loads pipeline instead of serializing — the shared
+    /// hot path of the LearnedSort 2.0 fragmentation sweep and AIPS²o's
+    /// learned classifier (both call with `W = 8`).
+    #[inline]
+    pub fn predict_batch<const W: usize>(&self, xs: &[f64; W]) -> [f64; W] {
+        let n_leaves = self.leaves.len();
+        let mut out = [0.0f64; W];
+        for (o, x) in out.iter_mut().zip(xs.iter()) {
+            let x = x.clamp(f64::MIN, f64::MAX);
+            let i = leaf_index(self.root_a, self.root_b, n_leaves, x);
+            // SAFETY: leaf_index clamps into 0..n_leaves.
+            let l = unsafe { self.leaves.get_unchecked(i) };
+            let p = (l.a * x + l.b).max(l.lo).min(l.hi);
+            *o = p.max(0.0).min(ONE_MINUS_EPS);
+        }
+        out
+    }
+
     /// Bucket index for a `n_buckets`-way partition: floor(F(x) * n_buckets).
     #[inline(always)]
     pub fn bucket(&self, x: f64, n_buckets: usize) -> usize {
@@ -290,6 +311,22 @@ mod tests {
             let b = rmi.bucket(x, 1000);
             assert!(b < 1000);
         }
+    }
+
+    #[test]
+    fn predict_batch_matches_scalar() {
+        let sample = uniform_sample(4096);
+        let rmi = Rmi::train(&sample, RmiConfig { n_leaves: 64 });
+        let xs = [-1e9, 0.0, 1.0, 2.5e5, 5e5, 7.5e5, 1e6, 2e9];
+        let ps = rmi.predict_batch(&xs);
+        for (x, p) in xs.iter().zip(ps.iter()) {
+            assert_eq!(*p, rmi.predict(*x));
+        }
+        // infinities clamp the same way in both paths
+        let edge = [f64::NEG_INFINITY, f64::INFINITY];
+        let pe = rmi.predict_batch(&edge);
+        assert_eq!(pe[0], rmi.predict(f64::NEG_INFINITY));
+        assert_eq!(pe[1], rmi.predict(f64::INFINITY));
     }
 
     #[test]

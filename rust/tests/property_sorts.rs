@@ -4,11 +4,13 @@
 
 use aipso::classifier::decision_tree::DecisionTree;
 use aipso::classifier::Classifier;
+use aipso::learned_sort::partition2::{detect_heavy, fragmented_partition, EqRmiClassifier};
+use aipso::rmi::model::{Rmi, RmiConfig};
 use aipso::sample_sort::partition::partition;
 use aipso::util::proptest::{check_sized, PropConfig};
 use aipso::util::rng::Xoshiro256pp;
 use aipso::util::stats::multiset_digest;
-use aipso::{is_sorted, sort_parallel, sort_sequential, SortEngine};
+use aipso::{is_sorted, sort_parallel, sort_sequential, SortEngine, SortKey};
 
 fn random_keys(rng: &mut Xoshiro256pp, n: usize) -> Vec<u64> {
     // mixture of distributions, chosen by the rng itself
@@ -111,6 +113,163 @@ fn prop_partition_routes_every_key_to_its_bucket() {
             Ok(())
         },
     );
+}
+
+/// Shared invariant check for the LearnedSort 2.0 fragmented partition:
+/// boundaries form a monotone cover, every key sits in the bucket the
+/// classifier assigns it, and the input multiset is preserved (the
+/// compaction is a permutation).
+fn check_frag_partition<K: SortKey, C: Classifier<K>>(
+    data: &mut [K],
+    classifier: &C,
+    frag: usize,
+) -> Result<(), String> {
+    let nb = classifier.num_buckets();
+    let before = multiset_digest(data);
+    let res = fragmented_partition(data, classifier, frag);
+    if res.boundaries.len() != nb + 1 {
+        return Err(format!(
+            "expected {} boundaries, got {}",
+            nb + 1,
+            res.boundaries.len()
+        ));
+    }
+    if res.boundaries[0] != 0 || *res.boundaries.last().unwrap() != data.len() {
+        return Err("boundaries do not cover input".into());
+    }
+    for w in res.boundaries.windows(2) {
+        if w[0] > w[1] {
+            return Err("boundaries not monotone".into());
+        }
+    }
+    for b in 0..nb {
+        for &k in &data[res.boundaries[b]..res.boundaries[b + 1]] {
+            if classifier.classify(k) != b {
+                return Err(format!(
+                    "key {k:?} landed in bucket {b}, classifier says {} (frag={frag})",
+                    classifier.classify(k)
+                ));
+            }
+        }
+    }
+    if before != multiset_digest(data) {
+        return Err("fragmented partition changed the multiset".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_fragmented_partition_routes_and_preserves() {
+    check_sized(
+        "fragmented partition routing",
+        PropConfig::with_max_size(40, 60_000),
+        |rng, n| {
+            if n == 0 {
+                return Ok(());
+            }
+            // adversarial input modes: random, all-equal, two-value,
+            // Zipf-like heavy head, sorted, reverse-sorted
+            let mode = rng.next_below(6);
+            let mut data: Vec<u64> = (0..n)
+                .map(|i| match mode {
+                    0 => rng.next_u64(),
+                    1 => 42,
+                    2 => [7u64, 9000][(rng.next_u64() % 2) as usize],
+                    3 => {
+                        let r = rng.uniform(0.0, 1.0);
+                        if r < 0.5 {
+                            1
+                        } else if r < 0.75 {
+                            2
+                        } else {
+                            rng.next_below(1 << 30)
+                        }
+                    }
+                    4 => i as u64,
+                    _ => (n - i) as u64,
+                })
+                .collect();
+            let mut sample: Vec<u64> = (0..256.min(n))
+                .map(|_| data[rng.next_below(n as u64) as usize])
+                .collect();
+            sample.sort_unstable();
+            let buckets = [4usize, 16, 64][rng.next_below(3) as usize];
+            let frag = [1usize, 4, 64, 128][rng.next_below(4) as usize];
+            let tree = DecisionTree::from_sorted_sample(&sample, buckets);
+            check_frag_partition(&mut data, &tree, frag)
+        },
+    );
+}
+
+#[test]
+fn prop_fragmented_partition_with_equality_classifier() {
+    // the real v2 stack: heavy-value detection + EqRmiClassifier on
+    // duplicate-heavy floats, swept over random sizes and fragment sizes
+    check_sized(
+        "fragmented partition + equality buckets",
+        PropConfig::with_max_size(16, 40_000),
+        |rng, n| {
+            if n < 64 {
+                return Ok(());
+            }
+            let mut data: Vec<f64> = (0..n)
+                .map(|_| {
+                    let r = rng.uniform(0.0, 1.0);
+                    if r < 0.4 {
+                        123.25
+                    } else if r < 0.6 {
+                        -55.5
+                    } else {
+                        rng.uniform(-1e4, 1e4)
+                    }
+                })
+                .collect();
+            let ssz = 512.min(n);
+            let mut skeys: Vec<f64> = (0..ssz)
+                .map(|_| data[rng.next_below(n as u64) as usize])
+                .collect();
+            skeys.sort_unstable_by(f64::total_cmp);
+            let nb = 32;
+            let heavy = detect_heavy(&skeys, nb, 8);
+            let rmi = Rmi::train(&skeys, RmiConfig { n_leaves: 64 });
+            let c = EqRmiClassifier::new(rmi, nb, &heavy);
+            let frag = 1 + rng.next_below(128) as usize;
+            check_frag_partition(&mut data, &c, frag)
+        },
+    );
+}
+
+#[test]
+fn fragmented_partition_small_lengths_and_float_edges() {
+    // lengths 0..=small primes, at fragment sizes around the length
+    let sample = vec![-3.0f64, -1.0, 0.0, 1.5, 2.5];
+    let tree = DecisionTree::from_sorted_sample(&sample, 4);
+    for n in [0usize, 1, 2, 3, 5, 7, 11, 13, 17, 19, 23] {
+        for frag in [1usize, 2, 3, 8] {
+            let mut asc: Vec<f64> = (0..n).map(|i| i as f64 * 0.37 - 2.0).collect();
+            check_frag_partition(&mut asc, &tree, frag).unwrap();
+            let mut desc: Vec<f64> = (0..n).map(|i| i as f64 * 0.37 - 2.0).rev().collect();
+            check_frag_partition(&mut desc, &tree, frag).unwrap();
+        }
+    }
+    // NaN-free f32 edge patterns: signed zeros, subnormals, infinities
+    let edges: Vec<f32> = vec![
+        0.0,
+        -0.0,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        1e-44,
+        -1e-44,
+        f32::MAX,
+        f32::MIN,
+    ];
+    let mut data: Vec<f32> = (0..311).map(|i| edges[i % edges.len()]).collect();
+    let mut esample = data.clone();
+    esample.sort_unstable_by(|a, b| a.to_bits_ordered().cmp(&b.to_bits_ordered()));
+    let etree = DecisionTree::from_sorted_sample(&esample, 8);
+    check_frag_partition(&mut data, &etree, 4).unwrap();
 }
 
 #[test]
