@@ -6,7 +6,10 @@
 //!  * simulated on the paper's 48 cores via the partition-balance model
 //!    (real measured bucket sizes -> LPT makespan; see bench_harness::balance).
 
-use aipso::bench_harness::{count_wins, render_rows, run_figure, run_figure_simulated, BenchConfig};
+use aipso::bench_harness::{
+    count_wins, render_learned_par_rows, render_rows, run_figure, run_figure_simulated,
+    run_learned_thread_sweep, BenchConfig,
+};
 use aipso::datasets::FigureGroup;
 use aipso::scheduler::effective_threads;
 
@@ -31,6 +34,33 @@ fn main() {
     for (engine, wins) in count_wins(&all) {
         println!("  {engine}: {wins}/14");
     }
+
+    // Beyond the paper: the thread-parallel fragmented LearnedSort
+    // (per-thread fragment chains + deterministic merge/compaction,
+    // byte-identical to the sequential engine at every thread count).
+    // The paper excludes LearnedSort from its parallel figures; this
+    // sweep shows what its parallelization buys on this box.
+    let mut sweep = vec![1usize];
+    let mut t = 2;
+    while t <= cores {
+        sweep.push(t);
+        t *= 2;
+    }
+    if *sweep.last().unwrap() != cores {
+        sweep.push(cores);
+    }
+    let par_rows = run_learned_thread_sweep(
+        &["uniform", "lognormal", "zipf", "wiki_edit"],
+        &sweep,
+        &cfg,
+    );
+    print!(
+        "{}\n",
+        render_learned_par_rows(
+            "Parallel LearnedSort 2.0 thread sweep (beyond the paper)",
+            &par_rows
+        )
+    );
 
     // The paper's testbed has 48 cores; when this box has fewer, the
     // ranking mechanism (partition balance -> thread utilization) is

@@ -723,6 +723,138 @@ pub fn render_dup_rows(title: &str, rows: &[DupRow]) -> String {
     out
 }
 
+/// One measured cell of the parallel-LearnedSort thread sweep (bench
+/// `fig_parallel`, LearnedSort 2.0 section).
+#[derive(Debug, Clone)]
+pub struct LearnedParRow {
+    /// Paper name of the dataset.
+    pub dataset: &'static str,
+    /// Worker threads for the cell (1 = the sequential fragmented path,
+    /// which the parallel formulation must reproduce byte-for-byte).
+    pub threads: usize,
+    /// Keys sorted per repetition.
+    pub n: usize,
+    /// Mean sorting rate in keys/second.
+    pub mean_rate: f64,
+    /// Standard deviation of the rate across repetitions.
+    pub stddev_rate: f64,
+    /// Speedup over the same dataset's first (single-thread) row.
+    pub speedup: f64,
+    /// Mean per-phase seconds per repetition `(span name, seconds)`,
+    /// collected when [`crate::obs`] tracing was enabled while the cell
+    /// ran; empty otherwise. Parallel cells additionally report the
+    /// `frag-par-sweep` / `frag-par-merge` spans here.
+    pub phases: Vec<(&'static str, f64)>,
+}
+
+/// Thread sweep of the parallel fragmented LearnedSort
+/// ([`crate::learned_sort::sort_par`]): each dataset is sorted at every
+/// requested thread count on identical inputs, with the single-thread
+/// cell as the speedup baseline. The paper benchmarks LearnedSort
+/// sequentially only; this sweep measures the repo's thread-parallel
+/// formulation (per-thread fragment chains stitched by a deterministic
+/// merge/compaction), whose output is byte-identical to the sequential
+/// engine at every thread count.
+pub fn run_learned_thread_sweep(
+    names: &[&'static str],
+    threads: &[usize],
+    cfg: &BenchConfig,
+) -> Vec<LearnedParRow> {
+    let mut rows = Vec::new();
+    for &name in names {
+        let spec = datasets::spec(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+        let mut base_rate = f64::NAN;
+        for &t in threads {
+            let (rates, phases) = match spec.key_type {
+                KeyType::F64 => {
+                    let base = datasets::generate_f64(name, cfg.n, cfg.seed).unwrap();
+                    measure_learned_par(&base, t, cfg)
+                }
+                KeyType::U64 => {
+                    let base = datasets::generate_u64(name, cfg.n, cfg.seed).unwrap();
+                    measure_learned_par(&base, t, cfg)
+                }
+            };
+            let mean_rate = stats::mean(&rates);
+            if base_rate.is_nan() {
+                base_rate = mean_rate;
+            }
+            rows.push(LearnedParRow {
+                dataset: spec.paper_name,
+                threads: t,
+                n: cfg.n,
+                mean_rate,
+                stddev_rate: stats::stddev(&rates),
+                speedup: mean_rate / base_rate.max(1e-12),
+                phases,
+            });
+        }
+    }
+    rows
+}
+
+fn measure_learned_par<K: SortKey>(
+    base: &[K],
+    threads: usize,
+    cfg: &BenchConfig,
+) -> (Vec<f64>, Vec<(&'static str, f64)>) {
+    use crate::learned_sort;
+    // Watermark (not reset) the global trace — see external_cell.
+    let mark = crate::obs::enabled().then(crate::obs::trace::span_count);
+    let mut rates = Vec::with_capacity(cfg.reps);
+    for _ in 0..cfg.reps {
+        let mut keys = base.to_vec();
+        let t0 = std::time::Instant::now();
+        if threads <= 1 {
+            learned_sort::sort(&mut keys);
+        } else {
+            learned_sort::sort_par(&mut keys, threads);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(
+            crate::is_sorted(&keys),
+            "sort_par(t={threads}) produced unsorted output"
+        );
+        rates.push(keys.len() as f64 / secs.max(1e-12));
+    }
+    let reps = cfg.reps.max(1) as f64;
+    let phases = mark
+        .map(phase_breakdown)
+        .unwrap_or_default()
+        .into_iter()
+        .map(|(name, s)| (name, s / reps))
+        .collect();
+    (rates, phases)
+}
+
+/// Render thread-sweep rows as a markdown table.
+pub fn render_learned_par_rows(title: &str, rows: &[LearnedParRow]) -> String {
+    let mut out = format!("## {title}\n\n");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.dataset.to_string(),
+                if r.threads == 1 {
+                    "1 (sequential)".to_string()
+                } else {
+                    r.threads.to_string()
+                },
+                fmt::keys(r.n),
+                fmt::rate(r.mean_rate),
+                format!("±{}", fmt::rate(r.stddev_rate)),
+                format!("{:.2}x", r.speedup),
+                phase_share_cell(&r.phases, r.n as f64 / r.mean_rate.max(1e-12)),
+            ]
+        })
+        .collect();
+    out.push_str(&fmt::markdown_table(
+        &["dataset", "threads", "n", "rate", "stddev", "speedup", "phases"],
+        &table,
+    ));
+    out
+}
+
 /// Render external rows as a markdown table.
 pub fn render_external_rows(title: &str, rows: &[ExternalRow]) -> String {
     let mut out = format!("## {title}\n\n");
@@ -1061,6 +1193,57 @@ mod tests {
             !v1names.contains(&crate::obs::S_FRAG_PARTITION),
             "the block scheme must not record fragment spans: {v1names:?}"
         );
+    }
+
+    #[test]
+    fn learned_thread_sweep_reports_speedup_column() {
+        // hold the obs lock so no concurrent test enables tracing — the
+        // placeholder assertion below needs genuinely untraced rows
+        let _l = crate::obs::test_lock();
+        let cfg = BenchConfig {
+            n: 60_000,
+            ..tiny()
+        };
+        let rows = run_learned_thread_sweep(&["uniform", "wiki_edit"], &[1, 2], &cfg);
+        assert_eq!(rows.len(), 4, "2 datasets x 2 thread counts");
+        for r in &rows {
+            assert!(r.mean_rate > 0.0, "{} t={}", r.dataset, r.threads);
+            assert_eq!(r.n, 60_000);
+        }
+        assert_eq!(rows[0].threads, 1);
+        assert!(
+            (rows[0].speedup - 1.0).abs() < 1e-9,
+            "the single-thread row is its own baseline"
+        );
+        assert_eq!(rows[2].dataset, "Wiki/Edit", "u64 datasets sweep too");
+        let report = render_learned_par_rows("threads", &rows);
+        assert!(report.contains("speedup"));
+        assert!(report.contains("1 (sequential)"));
+        assert!(report.contains("—"), "untraced rows render the placeholder");
+    }
+
+    #[test]
+    fn learned_thread_sweep_traces_the_frag_par_phases() {
+        let _l = crate::obs::test_lock();
+        crate::obs::reset();
+        crate::obs::set_enabled(true);
+        let cfg = BenchConfig {
+            n: 120_000,
+            ..tiny()
+        };
+        let rows = run_learned_thread_sweep(&["uniform"], &[1, 4], &cfg);
+        crate::obs::set_enabled(false);
+        let par = rows.iter().find(|r| r.threads == 4).unwrap();
+        let names: Vec<&str> = par.phases.iter().map(|p| p.0).collect();
+        assert!(names.contains(&crate::obs::S_FRAG_PAR_SWEEP), "{names:?}");
+        assert!(names.contains(&crate::obs::S_FRAG_PAR_MERGE), "{names:?}");
+        let seq = rows.iter().find(|r| r.threads == 1).unwrap();
+        let seqnames: Vec<&str> = seq.phases.iter().map(|p| p.0).collect();
+        assert!(
+            !seqnames.contains(&crate::obs::S_FRAG_PAR_SWEEP),
+            "the sequential cell must not record frag-par spans: {seqnames:?}"
+        );
+        crate::obs::reset();
     }
 
     #[test]

@@ -47,7 +47,6 @@ use crate::key::SortKey;
 use crate::obs;
 use crate::rmi::model::{Rmi, RmiConfig};
 use crate::rmi::quality;
-use crate::sample_sort::partition::partition;
 use crate::scheduler::run_task_pool;
 use crate::util::rng::Xoshiro256pp;
 
@@ -579,9 +578,12 @@ fn drifted<K: SortKey>(
     err > cfg.drift_threshold
 }
 
-/// Partition the chunk with the shared RMI, then sort the buckets as
-/// pool tasks (the same pattern as `aips2o::sort_par`, with the top-level
-/// model fixed instead of retrained).
+/// Partition the chunk with the shared RMI through the LearnedSort 2.0
+/// parallel fragmented partition, then sort the buckets as pool tasks
+/// (the same pattern as `aips2o::sort_par`, with the top-level model
+/// fixed instead of retrained). The runs stay byte-identical to the v1
+/// block-partition path: every bucket is fully sorted before spilling,
+/// so only the internal shuffle differs.
 fn learned_sort_chunk<K: SortKey>(
     chunk: &mut [K],
     classifier: &RmiClassifier,
@@ -589,13 +591,16 @@ fn learned_sort_chunk<K: SortKey>(
     threads: usize,
 ) {
     // cooperative partition only pays off with enough keys per thread
-    // (same guard as the in-memory engines)
+    // (same guard as the in-memory engines; the fragmented partition
+    // applies its own slots-per-worker fallback on top)
     let threads = if chunk.len() >= 4 * cfg.block * threads.max(1) {
         threads
     } else {
         1
     };
-    let result = partition(chunk, classifier, cfg.block, threads);
+    let result = crate::learned_sort::partition2_par::fragmented_partition_par(
+        chunk, classifier, cfg.block, threads,
+    );
     let nb = Classifier::<K>::num_buckets(classifier);
     let base = chunk.as_mut_ptr() as usize;
     let mut tasks: Vec<(usize, usize)> = Vec::new();

@@ -33,12 +33,14 @@
 
 pub mod counting_sort;
 pub mod partition2;
+pub mod partition2_par;
 
 use crate::classifier::Classifier;
 use crate::key::SortKey;
 use crate::rmi::model::{Rmi, RmiConfig};
 use crate::sample_sort::base_case::small_sort;
 use crate::sample_sort::partition::partition;
+use crate::scheduler::run_task_pool;
 use crate::util::rng::Xoshiro256pp;
 use crate::util::timer::{phase_scope, Phase};
 
@@ -193,25 +195,7 @@ pub fn sort_cfg<K: SortKey>(data: &mut [K], cfg: &LearnedSortConfig) {
         small_sort(data);
         return;
     }
-    let mut rng = Xoshiro256pp::new(0x1EA2_4ED ^ n as u64);
-
-    // ---- Routine 1: train the CDF model (once) -----------------------
-    let (rmi, skeys) = {
-        let _g = phase_scope(Phase::ModelTrain);
-        let ssz = ((n as f64 * cfg.sample_frac) as usize)
-            .clamp(cfg.min_sample, cfg.max_sample)
-            .min(n);
-        // drawn as keys (not embeddings): the duplicate defenses below
-        // need exact bit patterns, not the lossy f64 embedding
-        let mut skeys: Vec<K> = Vec::with_capacity(ssz);
-        for _ in 0..ssz {
-            skeys.push(data[rng.next_below(n as u64) as usize]);
-        }
-        skeys.sort_unstable_by(|a, b| a.to_bits_ordered().cmp(&b.to_bits_ordered()));
-        // bit order embeds monotonically into f64, so this stays sorted
-        let sample: Vec<f64> = skeys.iter().map(|k| k.to_f64()).collect();
-        (Rmi::train(&sample, RmiConfig { n_leaves: cfg.leaves }), skeys)
-    };
+    let (rmi, skeys) = train_model(data, cfg);
 
     // ---- Routine 2 fan-out: duplicate-aware round-1 bucket count -----
     let distinct = count_distinct_sorted(&skeys);
@@ -220,6 +204,66 @@ pub fn sort_cfg<K: SortKey>(data: &mut [K], cfg: &LearnedSortConfig) {
         PartitionScheme::Blocks => sort_rounds_blocks(data, rmi, nb1, cfg),
         PartitionScheme::Fragments => sort_rounds_fragments(data, rmi, &skeys, nb1, cfg),
     }
+}
+
+/// Sort with LearnedSort 2.0 across `threads` workers: the parallel
+/// fragmented partition ([`partition2_par`]) for the round-1 split, then
+/// the round-1 buckets recurse independently on the scheduler's task
+/// pool (each runs the unmodified sequential second round + counting
+/// base). `threads <= 1` and base-case-sized inputs take the sequential
+/// [`sort`] path outright.
+///
+/// The model is trained exactly as in the sequential path (the sample
+/// rng is keyed on `n` alone), the partition boundaries depend only on
+/// the per-key bucket map, and every bucket is fully sorted — so the
+/// output is byte-identical to the sequential sort for any thread count
+/// (pinned by the differential matrix in `tests/differential.rs`).
+pub fn sort_par<K: SortKey>(data: &mut [K], threads: usize) {
+    sort_par_cfg(data, &LearnedSortConfig::default(), threads);
+}
+
+/// Parallel sort with explicit configuration (tests and ablations).
+/// Both [`PartitionScheme`]s are honored: `Fragments` runs the parallel
+/// fragmented partition, `Blocks` the shared IPS⁴o block partition.
+pub fn sort_par_cfg<K: SortKey>(data: &mut [K], cfg: &LearnedSortConfig, threads: usize) {
+    let threads = threads.max(1);
+    let n = data.len();
+    if threads == 1 || n <= cfg.base_case {
+        sort_cfg(data, cfg);
+        return;
+    }
+    let (rmi, skeys) = train_model(data, cfg);
+    let distinct = count_distinct_sorted(&skeys);
+    let nb1 = round1_fanout(n, distinct, skeys.len(), cfg);
+    match cfg.scheme {
+        PartitionScheme::Blocks => sort_rounds_blocks_par(data, rmi, nb1, cfg, threads),
+        PartitionScheme::Fragments => {
+            sort_rounds_fragments_par(data, rmi, &skeys, nb1, cfg, threads)
+        }
+    }
+}
+
+/// Routine 1: train the CDF model (once). Returns the trained RMI and
+/// the bit-sorted key sample that drives the duplicate defenses. The
+/// sample rng is keyed on `n` alone, so the sequential and parallel
+/// entry points train identical models over the same input.
+fn train_model<K: SortKey>(data: &[K], cfg: &LearnedSortConfig) -> (Rmi, Vec<K>) {
+    let n = data.len();
+    let mut rng = Xoshiro256pp::new(0x1EA2_4ED ^ n as u64);
+    let _g = phase_scope(Phase::ModelTrain);
+    let ssz = ((n as f64 * cfg.sample_frac) as usize)
+        .clamp(cfg.min_sample, cfg.max_sample)
+        .min(n);
+    // drawn as keys (not embeddings): the duplicate defenses need exact
+    // bit patterns, not the lossy f64 embedding
+    let mut skeys: Vec<K> = Vec::with_capacity(ssz);
+    for _ in 0..ssz {
+        skeys.push(data[rng.next_below(n as u64) as usize]);
+    }
+    skeys.sort_unstable_by(|a, b| a.to_bits_ordered().cmp(&b.to_bits_ordered()));
+    // bit order embeds monotonically into f64, so this stays sorted
+    let sample: Vec<f64> = skeys.iter().map(|k| k.to_f64()).collect();
+    (Rmi::train(&sample, RmiConfig { n_leaves: cfg.leaves }), skeys)
 }
 
 /// Distinct values in a bit-sorted sample.
@@ -274,46 +318,100 @@ fn sort_rounds_blocks<K: SortKey>(
             continue;
         }
         let bucket = &mut data[lo..hi];
-        // ---- Routine 3: homogeneity check (duplicate fix) ------------
-        if is_homogeneous(bucket) {
+        sort_block_bucket(bucket, rmi, b1, nb1, cfg, &mut scratch, &mut counts);
+    }
+}
+
+/// Finish one round-1 bucket of the v1 block scheme: homogeneity check,
+/// optional second block-partition round, model counting sort. Shared by
+/// the sequential loop and the parallel task pool.
+fn sort_block_bucket<K: SortKey>(
+    bucket: &mut [K],
+    rmi: &Rmi,
+    b1: usize,
+    nb1: usize,
+    cfg: &LearnedSortConfig,
+    scratch: &mut Vec<K>,
+    counts: &mut Vec<u32>,
+) {
+    // ---- Routine 3: homogeneity check (duplicate fix) ----------------
+    if is_homogeneous(bucket) {
+        return;
+    }
+    let f_lo = b1 as f64 / nb1 as f64;
+    let f_width = 1.0 / nb1 as f64;
+    if bucket.len() > cfg.counting_threshold {
+        // ---- Routine 2b: second partitioning round -------------------
+        let nb2 = (bucket.len() / (cfg.counting_threshold / 2).max(1)).clamp(2, cfg.max_fanout);
+        let c2 = SubRangeRmi {
+            rmi,
+            lo: f_lo,
+            inv_width: nb1 as f64,
+            nb: nb2,
+        };
+        let r2 = partition(bucket, &c2, cfg.block, 1);
+        for b2 in 0..nb2 {
+            let (slo, shi) = (r2.boundaries[b2], r2.boundaries[b2 + 1]);
+            if shi - slo < 2 {
+                continue;
+            }
+            let sub = &mut bucket[slo..shi];
+            if is_homogeneous(sub) {
+                continue;
+            }
+            // ---- Routine 4: model counting sort + correction ---------
+            counting_base(
+                sub,
+                rmi,
+                f_lo + (b2 as f64 / nb2 as f64) * f_width,
+                nb1 as f64 * nb2 as f64,
+                scratch,
+                counts,
+            );
+        }
+    } else {
+        counting_base(bucket, rmi, f_lo, nb1 as f64, scratch, counts);
+    }
+}
+
+/// Parallel v1 rounds: the block partition runs striped across the
+/// workers, then each round-1 bucket becomes a task on the scheduler
+/// pool. Kept so `Blocks` stays honored under [`sort_par_cfg`] (it is
+/// the differential baseline, not the default).
+fn sort_rounds_blocks_par<K: SortKey>(
+    data: &mut [K],
+    rmi: Rmi,
+    nb1: usize,
+    cfg: &LearnedSortConfig,
+    threads: usize,
+) {
+    let c1 = crate::classifier::rmi_classifier::RmiClassifier::new(rmi, nb1);
+    // striping pays for itself only when every worker gets a few blocks
+    let pthreads = if data.len() >= 4 * cfg.block * threads {
+        threads
+    } else {
+        1
+    };
+    let r1 = partition(data, &c1, cfg.block, pthreads);
+    let rmi = c1.rmi();
+
+    let base = data.as_mut_ptr() as usize;
+    let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
+    for b1 in 0..nb1 {
+        let (lo, hi) = (r1.boundaries[b1], r1.boundaries[b1 + 1]);
+        if hi - lo < 2 {
             continue;
         }
-        let f_lo = b1 as f64 / nb1 as f64;
-        let f_width = 1.0 / nb1 as f64;
-        if bucket.len() > cfg.counting_threshold {
-            // ---- Routine 2b: second partitioning round ---------------
-            let nb2 =
-                (bucket.len() / (cfg.counting_threshold / 2).max(1)).clamp(2, cfg.max_fanout);
-            let c2 = SubRangeRmi {
-                rmi,
-                lo: f_lo,
-                inv_width: nb1 as f64,
-                nb: nb2,
-            };
-            let r2 = partition(bucket, &c2, cfg.block, 1);
-            for b2 in 0..nb2 {
-                let (slo, shi) = (r2.boundaries[b2], r2.boundaries[b2 + 1]);
-                if shi - slo < 2 {
-                    continue;
-                }
-                let sub = &mut bucket[slo..shi];
-                if is_homogeneous(sub) {
-                    continue;
-                }
-                // ---- Routine 4: model counting sort + correction -----
-                counting_base(
-                    sub,
-                    rmi,
-                    f_lo + (b2 as f64 / nb2 as f64) * f_width,
-                    nb1 as f64 * nb2 as f64,
-                    &mut scratch,
-                    &mut counts,
-                );
-            }
-        } else {
-            counting_base(bucket, rmi, f_lo, nb1 as f64, &mut scratch, &mut counts);
-        }
+        tasks.push((b1, lo, hi - lo));
     }
+    run_task_pool(threads, tasks, |(b1, lo, len), _spawner| {
+        // SAFETY: bucket extents are disjoint sub-ranges of `data`, one
+        // task each, and the pool joins before `data` is touched again.
+        let bucket = unsafe { std::slice::from_raw_parts_mut((base as *mut K).add(lo), len) };
+        let mut scratch: Vec<K> = Vec::new();
+        let mut counts: Vec<u32> = Vec::new();
+        sort_block_bucket(bucket, rmi, b1, nb1, cfg, &mut scratch, &mut counts);
+    });
 }
 
 /// v2 rounds: the 2.0 in-place fragmented partition with equality
@@ -343,48 +441,109 @@ fn sort_rounds_fragments<K: SortKey>(
             continue;
         }
         let bucket = &mut data[lo..hi];
-        if is_homogeneous(bucket) {
+        let (f_lo, f_hi) = c1.model_range(b1);
+        sort_fragment_bucket(bucket, rmi, f_lo, f_hi, cfg, &mut scratch, &mut counts);
+    }
+}
+
+/// Finish one round-1 bucket of the v2 fragmented scheme: homogeneity
+/// check, optional second fragmented round rescaled over the bucket's
+/// model CDF window `[f_lo, f_hi)`, model counting sort. Shared by the
+/// sequential loop and the parallel task pool (equality buckets are
+/// skipped by both callers before reaching here).
+fn sort_fragment_bucket<K: SortKey>(
+    bucket: &mut [K],
+    rmi: &Rmi,
+    f_lo: f64,
+    f_hi: f64,
+    cfg: &LearnedSortConfig,
+    scratch: &mut Vec<K>,
+    counts: &mut Vec<u32>,
+) {
+    if is_homogeneous(bucket) {
+        return;
+    }
+    // rescale over the CDF window of the model bucket this final bucket
+    // was split from (the window of the whole split group — correctness
+    // only needs the counting base's insertion repair)
+    let scale1 = 1.0 / (f_hi - f_lo);
+    if bucket.len() > cfg.counting_threshold {
+        // ---- Routine 2b: second fragmented round ---------------------
+        let nb2 = (bucket.len() / (cfg.counting_threshold / 2).max(1)).clamp(2, cfg.max_fanout);
+        let c2 = SubRangeRmi {
+            rmi,
+            lo: f_lo,
+            inv_width: scale1,
+            nb: nb2,
+        };
+        let r2 = partition2::fragmented_partition(bucket, &c2, cfg.fragment);
+        for b2 in 0..nb2 {
+            let (slo, shi) = (r2.boundaries[b2], r2.boundaries[b2 + 1]);
+            if shi - slo < 2 {
+                continue;
+            }
+            let sub = &mut bucket[slo..shi];
+            if is_homogeneous(sub) {
+                continue;
+            }
+            // ---- Routine 4: model counting sort + correction ---------
+            counting_base(
+                sub,
+                rmi,
+                f_lo + (b2 as f64 / nb2 as f64) / scale1,
+                scale1 * nb2 as f64,
+                scratch,
+                counts,
+            );
+        }
+    } else {
+        counting_base(bucket, rmi, f_lo, scale1, scratch, counts);
+    }
+}
+
+/// Parallel v2 rounds: the thread-parallel fragmented partition
+/// ([`partition2_par`]) for the round-1 split, then every non-equality
+/// round-1 bucket recurses as an independent task on the scheduler pool
+/// (the per-bucket second round and counting base are the unmodified
+/// sequential routines). Heavy-value equality buckets and the
+/// duplicate-aware fan-out work exactly as in the sequential path: the
+/// classifier is built from the same sample before any thread forks.
+fn sort_rounds_fragments_par<K: SortKey>(
+    data: &mut [K],
+    rmi: Rmi,
+    sample_sorted: &[K],
+    nb1: usize,
+    cfg: &LearnedSortConfig,
+    threads: usize,
+) {
+    let heavy = partition2::detect_heavy(sample_sorted, nb1, cfg.max_equality);
+    let c1 = partition2::EqRmiClassifier::new(rmi, nb1, &heavy);
+    let r1 = partition2_par::fragmented_partition_par(data, &c1, cfg.fragment, threads);
+    let nb = c1.total_buckets();
+    let rmi = c1.rmi();
+
+    let base = data.as_mut_ptr() as usize;
+    let mut tasks: Vec<(usize, usize, usize)> = Vec::new();
+    for b1 in 0..nb {
+        let (lo, hi) = (r1.boundaries[b1], r1.boundaries[b1 + 1]);
+        if hi - lo < 2 {
             continue;
         }
-        // rescale over the CDF window of the model bucket this final
-        // bucket was split from (the window of the whole split group —
-        // correctness only needs the counting base's insertion repair)
-        let (f_lo, f_hi) = c1.model_range(b1);
-        let scale1 = 1.0 / (f_hi - f_lo);
-        if bucket.len() > cfg.counting_threshold {
-            // ---- Routine 2b: second fragmented round -----------------
-            let nb2 =
-                (bucket.len() / (cfg.counting_threshold / 2).max(1)).clamp(2, cfg.max_fanout);
-            let c2 = SubRangeRmi {
-                rmi,
-                lo: f_lo,
-                inv_width: scale1,
-                nb: nb2,
-            };
-            let r2 = partition2::fragmented_partition(bucket, &c2, cfg.fragment);
-            for b2 in 0..nb2 {
-                let (slo, shi) = (r2.boundaries[b2], r2.boundaries[b2 + 1]);
-                if shi - slo < 2 {
-                    continue;
-                }
-                let sub = &mut bucket[slo..shi];
-                if is_homogeneous(sub) {
-                    continue;
-                }
-                // ---- Routine 4: model counting sort + correction -----
-                counting_base(
-                    sub,
-                    rmi,
-                    f_lo + (b2 as f64 / nb2 as f64) / scale1,
-                    scale1 * nb2 as f64,
-                    &mut scratch,
-                    &mut counts,
-                );
-            }
-        } else {
-            counting_base(bucket, rmi, f_lo, scale1, &mut scratch, &mut counts);
+        // ---- Routine 3: equality buckets hold one value — sorted -----
+        if c1.is_eq_bucket(b1) {
+            continue;
         }
+        tasks.push((b1, lo, hi - lo));
     }
+    run_task_pool(threads, tasks, |(b1, lo, len), _spawner| {
+        // SAFETY: bucket extents are disjoint sub-ranges of `data`, one
+        // task each, and the pool joins before `data` is touched again.
+        let bucket = unsafe { std::slice::from_raw_parts_mut((base as *mut K).add(lo), len) };
+        let (f_lo, f_hi) = c1.model_range(b1);
+        let mut scratch: Vec<K> = Vec::new();
+        let mut counts: Vec<u32> = Vec::new();
+        sort_fragment_bucket(bucket, rmi, f_lo, f_hi, cfg, &mut scratch, &mut counts);
+    });
 }
 
 /// Model counting sort over a sub-bucket covering CDF range
@@ -538,6 +697,73 @@ mod tests {
         // the cap never raises the fan-out above the density target
         assert_eq!(round1_fanout(10_000, 4, 4096, &cfg), 4);
         assert_eq!(round1_fanout(10_000, 900, 4096, &cfg), 5);
+    }
+
+    #[test]
+    fn sort_par_matches_sequential_bytes() {
+        // same model (rng keyed on n), same boundaries, fully sorted
+        // buckets ⇒ byte-identical output for any thread count
+        let mut rng = Xoshiro256pp::new(10);
+        let n = 150_000;
+        let data: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.next_below(10) < 9 {
+                    3.25
+                } else {
+                    rng.lognormal(0.0, 2.0)
+                }
+            })
+            .collect();
+        for threads in [1usize, 2, 3, 4] {
+            for cfg in [LearnedSortConfig::default(), LearnedSortConfig::v1()] {
+                let mut seq = data.clone();
+                sort_cfg(&mut seq, &cfg);
+                let mut par = data.clone();
+                sort_par_cfg(&mut par, &cfg, threads);
+                let a: Vec<u64> = seq.iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u64> = par.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b, "threads={threads} scheme={:?}", cfg.scheme);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_fragments_scheme_executes_fragment_path() {
+        // regression: sort_par must honor PartitionScheme::Fragments
+        // (it used to fall back to the v1 block scheme silently) — the
+        // frag-par spans prove the parallel fragment partition ran
+        let _l = crate::obs::test_lock();
+        let mut rng = Xoshiro256pp::new(11);
+        let data: Vec<f64> = (0..120_000).map(|_| rng.uniform(0.0, 1e6)).collect();
+
+        crate::obs::reset();
+        crate::obs::set_enabled(true);
+        let mut v = data.clone();
+        sort_par(&mut v, 4);
+        crate::obs::set_enabled(false);
+        assert!(is_sorted(&v));
+        let names = crate::obs::trace::span_names(&crate::obs::trace::snapshot());
+        assert!(
+            names.contains(&crate::obs::S_FRAG_PAR_SWEEP),
+            "parallel sweep span missing: {names:?}"
+        );
+        assert!(
+            names.contains(&crate::obs::S_FRAG_PAR_MERGE),
+            "merge/compaction span missing: {names:?}"
+        );
+        let m = crate::obs::metrics::snapshot();
+        assert!(m.counters.get(crate::obs::C_FRAG_PAR).copied().unwrap_or(0) >= 1);
+
+        // the v1 Blocks config must stay off the fragment path
+        crate::obs::reset();
+        crate::obs::set_enabled(true);
+        let mut v = data;
+        sort_par_cfg(&mut v, &LearnedSortConfig::v1(), 4);
+        crate::obs::set_enabled(false);
+        assert!(is_sorted(&v));
+        let names = crate::obs::trace::span_names(&crate::obs::trace::snapshot());
+        assert!(!names.contains(&crate::obs::S_FRAG_PAR_SWEEP));
+        crate::obs::reset();
     }
 
     #[test]

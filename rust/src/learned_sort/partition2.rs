@@ -88,30 +88,7 @@ pub fn fragmented_partition<K: SortKey, C: Classifier<K> + ?Sized>(
         let _p = phase_scope(Phase::Classification);
         let _s = crate::obs::enabled()
             .then(|| crate::obs::trace::span_n(crate::obs::S_FRAG_PARTITION, n as u64, 0));
-        let mut idx = [0u32; PREDICT_BATCH];
-        let mut read = 0usize;
-        while read < n {
-            let m = PREDICT_BATCH.min(n - read);
-            classifier.classify_batch(&data[read..read + m], &mut idx[..m]);
-            prefetch_targets(&buffers, &lens, &idx[..m], frag);
-            for (i, &bu) in idx[..m].iter().enumerate() {
-                let b = bu as usize;
-                let key = data[read + i];
-                let len = lens[b] as usize;
-                buffers[b * frag + len] = key;
-                if len + 1 == frag {
-                    let dst = frag_bucket.len() * frag;
-                    // the flush target lies inside the consumed prefix
-                    debug_assert!(dst + frag <= read + i + 1);
-                    data[dst..dst + frag].copy_from_slice(&buffers[b * frag..(b + 1) * frag]);
-                    frag_bucket.push(b as u32);
-                    lens[b] = 0;
-                } else {
-                    lens[b] = (len + 1) as u32;
-                }
-            }
-            read += m;
-        }
+        fragment_sweep(data, classifier, frag, &mut buffers, &mut lens, &mut frag_bucket);
     }
 
     // ---- Compaction: reassemble fragment chains in bucket order ------
@@ -190,6 +167,50 @@ pub fn fragmented_partition<K: SortKey, C: Classifier<K> + ?Sized>(
         }
     }
     FragPartition { boundaries }
+}
+
+/// The fragmentation sweep shared by the sequential partition and the
+/// per-thread stripes of the parallel formulation
+/// ([`super::partition2_par`]): classify `data` in [`PREDICT_BATCH`]
+/// batches into the per-bucket `buffers` (`num_buckets · frag` keys,
+/// fill levels in `lens`), flushing every full buffer as a fragment over
+/// the consumed prefix of `data` and recording its owning bucket in
+/// `frag_bucket` — fragment `j` ends up at `data[j * frag..]`. The flush
+/// cursor never overtakes the read cursor (see the module docs), so the
+/// sweep is safe on any slice, including a stripe of a larger array.
+pub(super) fn fragment_sweep<K: SortKey, C: Classifier<K> + ?Sized>(
+    data: &mut [K],
+    classifier: &C,
+    frag: usize,
+    buffers: &mut [K],
+    lens: &mut [u32],
+    frag_bucket: &mut Vec<u32>,
+) {
+    let n = data.len();
+    let mut idx = [0u32; PREDICT_BATCH];
+    let mut read = 0usize;
+    while read < n {
+        let m = PREDICT_BATCH.min(n - read);
+        classifier.classify_batch(&data[read..read + m], &mut idx[..m]);
+        prefetch_targets(buffers, lens, &idx[..m], frag);
+        for (i, &bu) in idx[..m].iter().enumerate() {
+            let b = bu as usize;
+            let key = data[read + i];
+            let len = lens[b] as usize;
+            buffers[b * frag + len] = key;
+            if len + 1 == frag {
+                let dst = frag_bucket.len() * frag;
+                // the flush target lies inside the consumed prefix
+                debug_assert!(dst + frag <= read + i + 1);
+                data[dst..dst + frag].copy_from_slice(&buffers[b * frag..(b + 1) * frag]);
+                frag_bucket.push(b as u32);
+                lens[b] = 0;
+            } else {
+                lens[b] = (len + 1) as u32;
+            }
+        }
+        read += m;
+    }
 }
 
 /// Software-prefetch the buffer slots an incoming batch will write

@@ -1,0 +1,371 @@
+//! Thread-parallel formulation of the LearnedSort 2.0 fragmented-bucket
+//! partition ([`super::partition2`]).
+//!
+//! The parallelization follows the shape the paper inherits from IPS⁴o:
+//! a cooperative fork-join classification phase over disjoint stripes of
+//! the input, then a deterministic sequential reconciliation over the
+//! per-thread metadata. Concretely:
+//!
+//! 1. **Stripe sweeps.** The input is cut into at most `threads`
+//!    contiguous stripes whose starts are multiples of the fragment size
+//!    `F` ([`crate::scheduler::aligned_ranges`]), so every stripe's flush
+//!    targets land on the *global* `F`-aligned slot grid. Each worker
+//!    runs the unmodified sequential fragmentation sweep
+//!    ([`super::partition2::fragment_sweep`]) over its own stripe with a
+//!    private set of per-bucket buffers — producing a *per-thread
+//!    fragment chain* per bucket plus per-thread partial buffers. Stripe
+//!    `t` with `f_t` flushed fragments occupies global slots
+//!    `start_t/F .. start_t/F + f_t`; the sweep invariant `f_t·F ≤ len_t`
+//!    keeps those slots inside the stripe, so the stripes never race.
+//!
+//! 2. **Chain merge.** The per-thread chains are stitched per bucket in
+//!    (thread, local-flush-order) order — a purely counting step over the
+//!    per-thread `frag_bucket` vectors that assigns each source slot a
+//!    destination slot in the bucket-ordered global prefix `0..nf`. The
+//!    assignment is deterministic, so repeated runs (and any thread
+//!    schedule) produce the same layout.
+//!
+//! 3. **Slot compaction.** Unlike the sequential case, the occupied
+//!    source slots are *scattered* (a per-stripe prefix each), so the
+//!    slot map is an injective — not bijective — map onto the global
+//!    prefix. The cycle-following rotation generalizes to
+//!    path-following: starting from any unmoved source, displace the
+//!    occupant of its destination if that occupant is itself an unmoved
+//!    source, else terminate the path (the destination holds dead bytes
+//!    already copied into some stripe's buffers, or a previously moved
+//!    fragment's stale copy). Injectivity guarantees each destination is
+//!    written exactly once, so each fragment still moves exactly once.
+//!
+//! 4. **Boundary shift.** Identical to the sequential epilogue — bucket
+//!    extents are `fcnt[b]·F` gathered fragment bytes plus the summed
+//!    per-thread partial lengths — except each bucket's partial buffers
+//!    are appended in thread order. `fstart[b]·F ≤ boundaries[b]` for
+//!    every bucket (slots undercount by lower buckets' partials), so the
+//!    right-to-left walk never clobbers an unmoved block.
+//!
+//! An IPS⁴o-style block-trading pass over fragments (swap misplaced
+//! fragments pairwise across per-bucket write heads) would avoid the
+//! `O(n/F)` destination table, but needs atomics on the write heads and
+//! loses the deterministic layout; with `F = 128` the table is ~3% of
+//! the input and the deterministic merge wins (see ARCHITECTURE.md).
+//! Degenerate inputs — fewer than two slots per worker — fall back to
+//! the sequential partition, which produces the same boundaries (they
+//! depend only on the per-key bucket map, not on the execution
+//! schedule).
+
+use std::sync::Mutex;
+
+use crate::classifier::Classifier;
+use crate::key::SortKey;
+use crate::scheduler::{aligned_ranges, parallel_for};
+use crate::util::timer::{phase_scope, Phase};
+
+use super::partition2::{fragment_sweep, fragmented_partition, FragPartition};
+
+/// Raw-pointer wrapper so the stripe closures can carve disjoint
+/// `&mut [K]` sub-slices out of one array across threads.
+#[derive(Clone, Copy)]
+struct SendPtr<K>(*mut K);
+// SAFETY: the wrapped pointer is only dereferenced through disjoint
+// stripe ranges, one per worker (see `fragmented_partition_par`).
+unsafe impl<K> Send for SendPtr<K> {}
+unsafe impl<K> Sync for SendPtr<K> {}
+
+impl<K> SendPtr<K> {
+    /// Accessor (not field) so closures capture the Sync wrapper whole.
+    fn get(self) -> *mut K {
+        self.0
+    }
+}
+
+/// One stripe's sweep output: its fragment chain (global-slot anchored)
+/// and its private partial buffers.
+struct StripeOut<K> {
+    /// Global slot index of the stripe's first fragment (`start / frag`).
+    first_slot: usize,
+    /// Owning bucket of the stripe's fragment `j` (at global slot
+    /// `first_slot + j`), in local flush order.
+    frag_bucket: Vec<u32>,
+    /// Per-bucket partial buffers (`num_buckets · frag` keys).
+    buffers: Vec<K>,
+    /// Per-bucket partial fill levels (`< frag` each).
+    lens: Vec<u32>,
+}
+
+/// Partition `data` in place into `classifier.num_buckets()` variable-size
+/// buckets with the thread-parallel fragmented scheme: per-thread stripe
+/// sweeps into private fragment chains, then a deterministic chain merge,
+/// injective-slot compaction and boundary shift (see the module docs).
+///
+/// Returns the same boundaries as the sequential
+/// [`fragmented_partition`] — they depend only on the per-key bucket map
+/// — and falls back to it outright when `threads <= 1` or the input is
+/// too small to give every worker at least two fragment slots.
+pub fn fragmented_partition_par<K: SortKey, C: Classifier<K> + ?Sized>(
+    data: &mut [K],
+    classifier: &C,
+    frag: usize,
+    threads: usize,
+) -> FragPartition {
+    let n = data.len();
+    let nb = classifier.num_buckets();
+    assert!(nb >= 2, "need at least two buckets");
+    assert!(frag >= 1, "fragment size must be positive");
+    let threads = threads.max(1);
+    if threads == 1 || n / frag < 2 * threads {
+        return fragmented_partition(data, classifier, frag);
+    }
+    let stripes = aligned_ranges(n, frag, threads);
+    let nt = stripes.len();
+    crate::obs::metrics::counter_add(crate::obs::C_FRAG_PAR, 1);
+
+    // ---- Phase 1: per-thread stripe sweeps ---------------------------
+    let fill = data[0];
+    let mut outs: Vec<Option<StripeOut<K>>> = Vec::with_capacity(nt);
+    outs.resize_with(nt, || None);
+    {
+        let _p = phase_scope(Phase::Classification);
+        let _s = crate::obs::enabled()
+            .then(|| crate::obs::trace::span_n(crate::obs::S_FRAG_PAR_SWEEP, n as u64, 0));
+        let results = Mutex::new(&mut outs);
+        let data_ptr = SendPtr(data.as_mut_ptr());
+        let stripes_ref = &stripes;
+        parallel_for(nt, nt, |_, range| {
+            for t in range {
+                let r = stripes_ref[t].clone();
+                // SAFETY: stripe ranges are contiguous, disjoint and
+                // in-bounds (`aligned_ranges` covers 0..n exactly), and
+                // each index t is visited by exactly one worker.
+                let stripe = unsafe {
+                    std::slice::from_raw_parts_mut(data_ptr.get().add(r.start), r.len())
+                };
+                let mut buffers: Vec<K> = vec![fill; nb * frag];
+                let mut lens: Vec<u32> = vec![0u32; nb];
+                let mut frag_bucket: Vec<u32> = Vec::with_capacity(stripe.len() / frag + 1);
+                fragment_sweep(stripe, classifier, frag, &mut buffers, &mut lens, &mut frag_bucket);
+                let out = StripeOut {
+                    first_slot: r.start / frag,
+                    frag_bucket,
+                    buffers,
+                    lens,
+                };
+                results.lock().unwrap()[t] = Some(out);
+            }
+        });
+    }
+    let outs: Vec<StripeOut<K>> = outs
+        .into_iter()
+        .map(|o| o.expect("every stripe sweep completed"))
+        .collect();
+
+    // ---- Phase 2: chain merge + compaction + boundary shift ----------
+    let mut boundaries = vec![0usize; nb + 1];
+    {
+        let _p = phase_scope(Phase::Cleanup);
+        let _s = crate::obs::enabled()
+            .then(|| crate::obs::trace::span_n(crate::obs::S_FRAG_PAR_MERGE, n as u64, 0));
+        // global per-bucket fragment and partial-key counts
+        let mut fcnt = vec![0usize; nb];
+        let mut plen = vec![0usize; nb];
+        for out in &outs {
+            for &b in &out.frag_bucket {
+                fcnt[b as usize] += 1;
+            }
+            for (b, &l) in out.lens.iter().enumerate() {
+                plen[b] += l as usize;
+            }
+        }
+        // bucket-ordered destination prefix: bucket b's fragments gather
+        // into slots fstart[b]..fstart[b+1]
+        let mut fstart = vec![0usize; nb + 1];
+        for b in 0..nb {
+            fstart[b + 1] = fstart[b] + fcnt[b];
+        }
+        let nf = fstart[nb];
+        let n_slots = n / frag;
+        debug_assert!(nf <= n_slots);
+        // stitch the per-thread chains: iterate stripes in thread order,
+        // each chain in local flush order — deterministic dest per slot
+        let mut dest_of = vec![u32::MAX; n_slots];
+        let mut next = fstart.clone();
+        for out in &outs {
+            for (j, &b) in out.frag_bucket.iter().enumerate() {
+                dest_of[out.first_slot + j] = next[b as usize] as u32;
+                next[b as usize] += 1;
+            }
+        }
+        // path/cycle-following application of the injective slot map:
+        // every destination is written exactly once, every source's
+        // content is lifted before its slot can be overwritten
+        if nf > 0 {
+            let mut lifted = vec![false; n_slots];
+            let mut hold: Vec<K> = vec![data[0]; frag];
+            let mut disp: Vec<K> = vec![data[0]; frag];
+            for s in 0..n_slots {
+                if dest_of[s] == u32::MAX || lifted[s] {
+                    continue;
+                }
+                if dest_of[s] as usize == s {
+                    lifted[s] = true;
+                    continue;
+                }
+                hold.copy_from_slice(&data[s * frag..(s + 1) * frag]);
+                lifted[s] = true;
+                let mut cur = s;
+                loop {
+                    let d = dest_of[cur] as usize;
+                    if dest_of[d] != u32::MAX && !lifted[d] {
+                        // d is an unmoved source: displace its content
+                        disp.copy_from_slice(&data[d * frag..(d + 1) * frag]);
+                        data[d * frag..(d + 1) * frag].copy_from_slice(&hold);
+                        std::mem::swap(&mut hold, &mut disp);
+                        lifted[d] = true;
+                        cur = d;
+                    } else {
+                        // d holds dead bytes (non-source slot, or a
+                        // source already lifted — incl. the cycle close
+                        // d == s): the path ends here
+                        data[d * frag..(d + 1) * frag].copy_from_slice(&hold);
+                        break;
+                    }
+                }
+            }
+        }
+        // exact variable-size boundaries (fragments + summed partials)
+        for b in 0..nb {
+            boundaries[b + 1] = boundaries[b] + fcnt[b] * frag + plen[b];
+        }
+        debug_assert_eq!(boundaries[nb], n);
+        // shift each bucket's gathered fragment block right onto its
+        // final offset and append the per-thread partials in thread
+        // order; right-to-left is safe because fstart[b]·frag ≤
+        // boundaries[b] for every b
+        for b in (0..nb).rev() {
+            let src = fstart[b] * frag;
+            let flen = fcnt[b] * frag;
+            let dst = boundaries[b];
+            debug_assert!(src <= dst);
+            if flen > 0 && src != dst {
+                data.copy_within(src..src + flen, dst);
+            }
+            let mut w = dst + flen;
+            for out in &outs {
+                let l = out.lens[b] as usize;
+                data[w..w + l].copy_from_slice(&out.buffers[b * frag..b * frag + l]);
+                w += l;
+            }
+            debug_assert_eq!(w, boundaries[b + 1]);
+        }
+    }
+    FragPartition { boundaries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    /// Fixed-step range classifier: bucket = key / step (monotone).
+    struct StepClassifier {
+        nb: usize,
+        step: u64,
+    }
+
+    impl Classifier<u64> for StepClassifier {
+        fn num_buckets(&self) -> usize {
+            self.nb
+        }
+
+        fn classify(&self, key: u64) -> usize {
+            ((key / self.step) as usize).min(self.nb - 1)
+        }
+
+        fn is_equality_bucket(&self, _b: usize) -> bool {
+            false
+        }
+    }
+
+    /// Run the parallel partition and check it against the sequential
+    /// one: identical boundaries, same multiset, correct routing.
+    fn check_par(data: &[u64], c: &StepClassifier, frag: usize, threads: usize) {
+        let mut seq = data.to_vec();
+        let want = fragmented_partition(&mut seq, c, frag);
+        let mut par = data.to_vec();
+        let got = fragmented_partition_par(&mut par, c, frag, threads);
+        assert_eq!(
+            got.boundaries, want.boundaries,
+            "boundaries diverge: frag={frag} threads={threads} n={}",
+            data.len()
+        );
+        let mut a = par.clone();
+        let mut b = data.to_vec();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "multiset changed: frag={frag} threads={threads}");
+        for bu in 0..c.nb {
+            for &k in &par[got.boundaries[bu]..got.boundaries[bu + 1]] {
+                assert_eq!(
+                    Classifier::<u64>::classify(c, k),
+                    bu,
+                    "key {k} misrouted to bucket {bu} (frag={frag} threads={threads})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_boundaries() {
+        let c = StepClassifier { nb: 8, step: 100 };
+        let mut rng = Xoshiro256pp::new(31);
+        for n in [0usize, 1, 64, 257, 1024, 4096] {
+            let data: Vec<u64> = (0..n).map(|_| rng.next_below(800)).collect();
+            for frag in [1usize, 4, 16, 128] {
+                for threads in [1usize, 2, 3, 4] {
+                    check_par(&data, &c, frag, threads);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_stripe_splits() {
+        let c = StepClassifier { nb: 5, step: 160 };
+        let mut rng = Xoshiro256pp::new(32);
+        // prime lengths × frag sizes: unaligned tails in the last stripe
+        for n in [97usize, 101, 997, 2003] {
+            let data: Vec<u64> = (0..n).map(|_| rng.next_below(800)).collect();
+            for frag in [3usize, 7, 16] {
+                for threads in [2usize, 3, 7, 64] {
+                    check_par(&data, &c, frag, threads);
+                }
+            }
+        }
+        // frag larger than the whole input / than a fair stripe share:
+        // the slot-count guard falls back to the sequential path
+        let data: Vec<u64> = (0..50u64).map(|_| rng.next_below(800)).collect();
+        check_par(&data, &c, 64, 4);
+        check_par(&data, &c, 128, 4);
+        // threads far exceeding the slot count → fallback, still exact
+        let data: Vec<u64> = (0..40u64).map(|_| rng.next_below(800)).collect();
+        check_par(&data, &c, 4, 64);
+    }
+
+    #[test]
+    fn skewed_and_duplicate_chains() {
+        let c = StepClassifier { nb: 8, step: 100 };
+        let mut rng = Xoshiro256pp::new(33);
+        // every key in one middle bucket: one long chain per stripe
+        let data: Vec<u64> = vec![450; 2048];
+        check_par(&data, &c, 16, 4);
+        // two-value input on the extreme buckets (≥ 90% duplicates)
+        let data: Vec<u64> = (0..2048)
+            .map(|_| if rng.next_below(10) < 9 { 0 } else { 799 })
+            .collect();
+        check_par(&data, &c, 8, 3);
+        // sorted and reverse-sorted inputs
+        let data: Vec<u64> = (0..3000u64).map(|i| i % 800).collect();
+        check_par(&data, &c, 32, 4);
+        let data: Vec<u64> = (0..3000u64).rev().map(|i| i % 800).collect();
+        check_par(&data, &c, 32, 4);
+    }
+}

@@ -80,6 +80,14 @@ pub const S_FRAG_PARTITION: &str = "frag-partition";
 /// LearnedSort 2.0 compaction pass (fragment-chain permutation + bucket
 /// reassembly); nested under [`S_PARTITION`].
 pub const S_FRAG_COMPACT: &str = "frag-compact";
+/// Parallel fragmented partition: the per-thread stripe sweeps (each
+/// worker classifies its stripe into a private fragment chain). Emitted
+/// on the caller thread around the fork-join.
+pub const S_FRAG_PAR_SWEEP: &str = "frag-par-sweep";
+/// Parallel fragmented partition: the deterministic per-thread chain
+/// merge, the global cycle-following slot compaction and the boundary
+/// shift.
+pub const S_FRAG_PAR_MERGE: &str = "frag-par-merge";
 
 /// The complete span taxonomy. [`validate_telemetry`] rejects any other
 /// name, so adding a phase means extending this list (and the docs).
@@ -97,6 +105,8 @@ pub const KNOWN_SPANS: &[&str] = &[
     S_SORT,
     S_FRAG_PARTITION,
     S_FRAG_COMPACT,
+    S_FRAG_PAR_SWEEP,
+    S_FRAG_PAR_MERGE,
 ];
 
 /// External-pipeline phases every multi-run `extsort` emits (retrain and
@@ -132,6 +142,10 @@ pub const C_SPILL_RUNS: &str = "spill.runs";
 pub const C_RETRAINS: &str = "retrain.count";
 /// Counter: merge passes executed (intermediate + final).
 pub const C_MERGE_PASSES: &str = "merge.passes";
+/// Counter: thread-parallel fragmented partitions executed (the
+/// LearnedSort 2.0 parallel formulation; the sequential fallback for
+/// degenerate splits does not count).
+pub const C_FRAG_PAR: &str = "frag.par.partitions";
 
 /// Histograms every learned-path `extsort` telemetry document carries
 /// (the acceptance set: spill volume, drift error, shard skew).

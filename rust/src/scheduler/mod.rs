@@ -39,7 +39,7 @@
 pub mod parallel_for;
 pub mod pool;
 
-pub use parallel_for::{par_chunks_mut, parallel_for};
+pub use parallel_for::{aligned_ranges, par_chunks_mut, parallel_for};
 pub use pool::{run_task_pool, Spawner};
 
 /// Resolve a thread-count argument: 0 = all available cores.

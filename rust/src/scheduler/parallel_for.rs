@@ -33,6 +33,37 @@ where
     });
 }
 
+/// Split `0..n` into at most `parts` contiguous, non-empty ranges whose
+/// starts are multiples of `align`; the last range absorbs the unaligned
+/// tail. Fewer than `parts` ranges come back when `n / align < parts` —
+/// a worker is never handed an empty range. The LearnedSort 2.0 parallel
+/// fragmented partition stripes its input with this so every stripe's
+/// fragment slots stay aligned to the global slot grid.
+pub fn aligned_ranges(n: usize, align: usize, parts: usize) -> Vec<Range<usize>> {
+    assert!(align >= 1, "alignment must be positive");
+    if n == 0 {
+        return Vec::new();
+    }
+    let units = n / align;
+    let workers = parts.max(1).min(units.max(1));
+    let chunk = units.div_ceil(workers);
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0usize;
+    for t in 0..workers {
+        let end = if t + 1 == workers {
+            n
+        } else {
+            ((t + 1) * chunk * align).min(n)
+        };
+        if start >= end {
+            break;
+        }
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
 /// Split a mutable slice into at most `threads` contiguous chunks and run
 /// `f(chunk index, start offset, chunk)` per chunk in parallel.
 pub fn par_chunks_mut<T: Send, F>(threads: usize, data: &mut [T], f: F)
@@ -97,6 +128,35 @@ mod tests {
         for (i, &x) in v.iter().enumerate() {
             assert_eq!(x, i);
         }
+    }
+
+    #[test]
+    fn aligned_ranges_cover_and_align() {
+        for (n, align, parts) in [
+            (1000usize, 128usize, 4usize),
+            (1001, 128, 4),
+            (127, 128, 4),
+            (128, 128, 4),
+            (129, 128, 4),
+            (131, 8, 7),
+            (4096, 1, 16),
+            (65_537, 64, 8),
+            (13, 4, 64),
+        ] {
+            let ranges = aligned_ranges(n, align, parts);
+            assert!(ranges.len() <= parts, "n={n} align={align} parts={parts}");
+            assert!(!ranges.is_empty());
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous cover");
+            }
+            for r in &ranges {
+                assert!(r.start < r.end, "no empty range");
+                assert_eq!(r.start % align, 0, "aligned start");
+            }
+        }
+        assert!(aligned_ranges(0, 8, 4).is_empty());
     }
 
     #[test]

@@ -16,6 +16,14 @@
 //! the two analysis-only learned quicksorts — plus the 1.x block
 //! partition kept reachable behind `LearnedSortConfig::v1()`.
 //!
+//! A second matrix pins the **parallel** fragmented scheme against the
+//! sequential one: for every distribution × width × thread count in
+//! {1, 2, 3, 7, max}, `learned_sort::sort_par_cfg` must produce output
+//! byte-identical to `learned_sort::sort_cfg` (both under the default
+//! `Fragments` scheme), including the ≥90%-dup and float-edge inputs.
+//! "max" honors `AIPSO_DIFF_THREADS` (default: the machine's available
+//! parallelism), so CI can sweep an oversubscribed count.
+//!
 //! Scale with `AIPSO_DIFF_N` (default 48 000 keys per cell).
 
 use aipso::datasets::{self, KeyType};
@@ -97,6 +105,63 @@ fn diff_result<K: SortKey>(base: &[K], label: &str) -> Result<(), String> {
 
 fn diff_check<K: SortKey>(base: &[K], label: &str) {
     if let Err(msg) = diff_result(base, label) {
+        panic!("{msg}");
+    }
+}
+
+/// Thread counts for the parallel==sequential matrix: 1 (the fallback
+/// path), small counts that leave stripes unevenly loaded, a prime
+/// count, and "max" from `AIPSO_DIFF_THREADS` (default: all cores).
+fn sweep_threads() -> Vec<usize> {
+    let max = std::env::var("AIPSO_DIFF_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&t: &usize| t >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+    let mut v = vec![1usize, 2, 3, 7, max];
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Sequential vs parallel fragmented LearnedSort, byte for byte at every
+/// thread count in the sweep. The model is retrained per run from an
+/// rng keyed only on `n`, so the comparison is exact, not probabilistic.
+fn par_diff_result<K: SortKey>(base: &[K], label: &str) -> Result<(), String> {
+    let cfg = LearnedSortConfig::default();
+    let mut seq = base.to_vec();
+    learned_sort::sort_cfg(&mut seq, &cfg);
+    let want: Vec<u64> = seq.iter().map(|k| k.to_bits_ordered()).collect();
+    for threads in sweep_threads() {
+        let mut keys = base.to_vec();
+        learned_sort::sort_par_cfg(&mut keys, &cfg, threads);
+        let got: Vec<u64> = keys.iter().map(|k| k.to_bits_ordered()).collect();
+        if got != want {
+            let at = got
+                .iter()
+                .zip(&want)
+                .position(|(g, w)| g != w)
+                .unwrap_or(got.len().min(want.len()));
+            return Err(format!(
+                "parallel fragmented LearnedSort (threads={threads}) diverged \
+                 from sequential on {} (n={}, seed={SEED:#x}): first mismatch \
+                 at index {at} (got bits {:#x?}, want {:#x?})",
+                label,
+                base.len(),
+                got.get(at),
+                want.get(at),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn par_diff_check<K: SortKey>(base: &[K], label: &str) {
+    if let Err(msg) = par_diff_result(base, label) {
         panic!("{msg}");
     }
 }
@@ -232,4 +297,91 @@ fn random_length_sweep_shrinks_failures() {
             diff_result(&base, "random/two-value")
         },
     );
+}
+
+#[test]
+fn parallel_fragmented_all_distributions_all_widths() {
+    let n = env_n();
+    for ds in datasets::ALL.iter() {
+        match ds.key_type {
+            KeyType::F64 => {
+                let wide = datasets::generate_f64(ds.name, n, SEED).unwrap();
+                par_diff_check(&wide, &format!("{}/f64", ds.name));
+                let narrow = datasets::generate_f32(ds.name, n, SEED).unwrap();
+                par_diff_check(&narrow, &format!("{}/f32", ds.name));
+            }
+            KeyType::U64 => {
+                let wide = datasets::generate_u64(ds.name, n, SEED).unwrap();
+                par_diff_check(&wide, &format!("{}/u64", ds.name));
+                let narrow = datasets::generate_u32(ds.name, n, SEED).unwrap();
+                par_diff_check(&narrow, &format!("{}/u32", ds.name));
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_fragmented_dup_heavy_inputs() {
+    let n = env_n();
+    let mut rng = Xoshiro256pp::new(SEED ^ 0xFA2_D0B);
+
+    // 95% of the keys one heavy f64 value: the equality bucket must
+    // swallow the mass identically under concurrency
+    let mut f: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1e6)).collect();
+    for k in f.iter_mut() {
+        if rng.uniform(0.0, 1.0) < 0.95 {
+            *k = 1234.5;
+        }
+    }
+    par_diff_check(&f, "95%-dup/f64");
+    let f_narrow: Vec<f32> = f.iter().map(|&x| x as f32).collect();
+    par_diff_check(&f_narrow, "95%-dup/f32");
+
+    // 90% of the keys drawn from four u64 values spread across the range
+    let heavy = [3u64, 1 << 20, 1 << 40, u64::MAX - 7];
+    let u: Vec<u64> = (0..n)
+        .map(|_| {
+            if rng.uniform(0.0, 1.0) < 0.9 {
+                heavy[(rng.next_u64() % 4) as usize]
+            } else {
+                rng.next_u64()
+            }
+        })
+        .collect();
+    par_diff_check(&u, "90%-dup/u64");
+    let u_narrow: Vec<u32> = u.iter().map(|&x| (x & 0xFFFF_FFFF) as u32).collect();
+    par_diff_check(&u_narrow, "90%-dup/u32");
+}
+
+#[test]
+fn parallel_fragmented_float_edges() {
+    let mut wide: Vec<f64> = vec![
+        0.0,
+        -0.0,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        f64::MIN_POSITIVE,
+        -f64::MIN_POSITIVE,
+        1e-320, // subnormal
+        -1e-320,
+        f64::MAX,
+        f64::MIN,
+    ];
+    wide.extend((0..30_000).map(|i| (i as f64 - 15_000.0) * 1e90));
+    par_diff_check(&wide, "edge/f64");
+
+    let mut narrow: Vec<f32> = vec![
+        0.0,
+        -0.0,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        1e-44, // subnormal
+        -1e-44,
+        f32::MAX,
+        f32::MIN,
+    ];
+    narrow.extend((0..30_000).map(|i| (i as f32 - 15_000.0) * 1e30));
+    par_diff_check(&narrow, "edge/f32");
 }

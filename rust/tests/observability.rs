@@ -16,6 +16,7 @@ use aipso::datasets;
 use aipso::external::{self, ExternalConfig, RunWriter, SpillCodec};
 use aipso::obs;
 use aipso::util::json::Json;
+use aipso::{sort_parallel, SortEngine};
 
 /// Serializes tests that touch the process-global trace/metric state.
 fn lock() -> MutexGuard<'static, ()> {
@@ -219,4 +220,53 @@ fn disabled_mode_records_nothing_and_output_is_byte_identical() {
     let _ = std::fs::remove_file(&input);
     let _ = std::fs::remove_file(&out_quiet);
     let _ = std::fs::remove_file(&out_traced);
+}
+
+#[test]
+fn parallel_learned_sort_traces_the_fragment_path() {
+    // Acceptance pin for the thread-parallel fragmented partition:
+    // `sort_parallel(LearnedSort, …)` under the default Fragments scheme
+    // must demonstrably execute the fragment path (frag-par spans + the
+    // partition counter), the spans must pass schema validation against
+    // the known-span taxonomy, and tracing must not change the output.
+    let _l = lock();
+    let n = 120_000;
+    let base = datasets::generate_f64("lognormal", n, 13).expect("dataset");
+
+    // tracing off: baseline bytes
+    obs::reset();
+    obs::set_enabled(false);
+    let mut quiet = base.clone();
+    sort_parallel(SortEngine::LearnedSort, &mut quiet, 4);
+    assert_eq!(obs::trace::span_count(), 0, "disabled mode records no spans");
+
+    // tracing on: frag-par phases visible, output byte-identical
+    obs::set_enabled(true);
+    let mut traced = base.clone();
+    sort_parallel(SortEngine::LearnedSort, &mut traced, 4);
+    obs::set_enabled(false);
+    let qa: Vec<u64> = quiet.iter().map(|x| x.to_bits()).collect();
+    let tb: Vec<u64> = traced.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(qa, tb, "tracing must not change the sorted output");
+
+    let names = obs::trace::span_names(&obs::trace::snapshot());
+    assert!(
+        names.contains(&obs::S_FRAG_PAR_SWEEP),
+        "parallel sweep span missing: {names:?}"
+    );
+    assert!(
+        names.contains(&obs::S_FRAG_PAR_MERGE),
+        "merge/compaction span missing: {names:?}"
+    );
+    let m = obs::metrics::snapshot();
+    assert!(
+        m.counters.get(obs::C_FRAG_PAR).copied().unwrap_or(0) >= 1,
+        "frag-par partition counter must be nonzero"
+    );
+
+    // the full document passes schema validation with the new spans
+    let doc = obs::job_telemetry(None);
+    obs::validate_telemetry(&doc, &[obs::S_FRAG_PAR_SWEEP, obs::S_FRAG_PAR_MERGE], &[])
+        .expect("frag-par spans validate against the span taxonomy");
+    obs::reset();
 }

@@ -87,6 +87,78 @@ fn more_threads_than_work() {
 }
 
 #[test]
+fn coordinator_mixed_jobs_hit_parallel_fragment_path() {
+    // Hammer the parallel fragmented LearnedSort under the coordinator's
+    // mixed job stream: large jobs of all four KeyBuf widths (admitted
+    // on the full pool, threads > 1 ⇒ the frag-par path), a ≥90%-dup
+    // stream (equality buckets under concurrency) and small jobs riding
+    // the sequential batch lane. Every report must verify sorted, and
+    // the telemetry must show nonzero frag-par span and counter counts —
+    // proof the parallel fragment partition actually ran, not a silent
+    // fallback.
+    use aipso::coordinator::{Coordinator, EngineChoice, JobSpec, KeyBuf};
+    use aipso::obs;
+
+    obs::reset();
+    obs::set_enabled(true);
+    let mut rng = Xoshiro256pp::new(11);
+    let n = 40_000; // above the coordinator's small-job threshold
+    let coord = Coordinator::new(4);
+    let mut id = 0u64;
+    let mut large_jobs = 0u64;
+    {
+        let mut submit = |keys: KeyBuf, large: bool| {
+            let mut job = JobSpec::auto(id, keys);
+            job.engine = EngineChoice::Fixed(SortEngine::LearnedSort);
+            coord.submit(job);
+            id += 1;
+            if large {
+                large_jobs += 1;
+            }
+        };
+        for _rep in 0..3 {
+            let f64s: Vec<f64> = (0..n).map(|_| rng.normal() * 1e6).collect();
+            submit(KeyBuf::F64(f64s), true);
+            let u64s: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            submit(KeyBuf::U64(u64s), true);
+            let f32s: Vec<f32> = (0..n).map(|_| rng.uniform(-1e5, 1e5) as f32).collect();
+            submit(KeyBuf::F32(f32s), true);
+            let u32s: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+            submit(KeyBuf::U32(u32s), true);
+            // ≥90% duplicates: eight distinct values across 40k keys
+            let dups: Vec<u64> = (0..n).map(|_| rng.next_below(8)).collect();
+            submit(KeyBuf::U64(dups), true);
+            // small jobs interleave on the sequential batch lane
+            submit(KeyBuf::U64((0..1000u64).rev().collect()), false);
+            submit(KeyBuf::F64((0..1000).map(|i| i as f64).collect()), false);
+        }
+    }
+    let (reports, _metrics) = coord.drain();
+    obs::set_enabled(false);
+
+    assert_eq!(reports.len() as u64, id, "every job must report");
+    for r in &reports {
+        assert!(r.verified_sorted, "job {} failed post-sort verification", r.id);
+        assert_eq!(r.engine, SortEngine::LearnedSort, "job {}", r.id);
+    }
+    let names = obs::trace::span_names(&obs::trace::snapshot());
+    let sweeps = names.iter().filter(|&&s| s == obs::S_FRAG_PAR_SWEEP).count();
+    let merges = names.iter().filter(|&&s| s == obs::S_FRAG_PAR_MERGE).count();
+    assert!(
+        sweeps > 0 && merges > 0,
+        "no frag-par spans recorded (sweeps={sweeps} merges={merges}): \
+         the parallel fragment path did not run"
+    );
+    let m = obs::metrics::snapshot();
+    let par_partitions = m.counters.get(obs::C_FRAG_PAR).copied().unwrap_or(0);
+    assert!(
+        par_partitions >= large_jobs,
+        "expected ≥{large_jobs} parallel fragmented partitions, counted {par_partitions}"
+    );
+    obs::reset();
+}
+
+#[test]
 fn concurrent_independent_sorts() {
     // Engines must be safe to run concurrently from independent threads
     // (the coordinator does this for small-job batches).

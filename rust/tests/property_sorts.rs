@@ -5,6 +5,7 @@
 use aipso::classifier::decision_tree::DecisionTree;
 use aipso::classifier::Classifier;
 use aipso::learned_sort::partition2::{detect_heavy, fragmented_partition, EqRmiClassifier};
+use aipso::learned_sort::partition2_par::fragmented_partition_par;
 use aipso::rmi::model::{Rmi, RmiConfig};
 use aipso::sample_sort::partition::partition;
 use aipso::util::proptest::{check_sized, PropConfig};
@@ -158,6 +159,49 @@ fn check_frag_partition<K: SortKey, C: Classifier<K>>(
     Ok(())
 }
 
+/// Parallel variant of [`check_frag_partition`]: the thread-parallel
+/// fragmented partition must satisfy the same boundary-cover / routing /
+/// multiset oracle, *and* return boundaries identical to the sequential
+/// partition of the same input (they depend only on the bucket map, not
+/// on the stripe split or thread schedule).
+fn check_frag_partition_par<K: SortKey, C: Classifier<K>>(
+    data: &mut [K],
+    classifier: &C,
+    frag: usize,
+    threads: usize,
+) -> Result<(), String> {
+    let mut seq = data.to_vec();
+    let want = fragmented_partition(&mut seq, classifier, frag);
+    let nb = classifier.num_buckets();
+    let before = multiset_digest(data);
+    let res = fragmented_partition_par(data, classifier, frag, threads);
+    if res.boundaries != want.boundaries {
+        return Err(format!(
+            "parallel boundaries diverge from sequential (frag={frag} threads={threads}): \
+             {:?} vs {:?}",
+            res.boundaries, want.boundaries
+        ));
+    }
+    if res.boundaries[0] != 0 || *res.boundaries.last().unwrap() != data.len() {
+        return Err("boundaries do not cover input".into());
+    }
+    for b in 0..nb {
+        for &k in &data[res.boundaries[b]..res.boundaries[b + 1]] {
+            if classifier.classify(k) != b {
+                return Err(format!(
+                    "key {k:?} landed in bucket {b}, classifier says {} \
+                     (frag={frag} threads={threads})",
+                    classifier.classify(k)
+                ));
+            }
+        }
+    }
+    if before != multiset_digest(data) {
+        return Err("parallel fragmented partition changed the multiset".into());
+    }
+    Ok(())
+}
+
 #[test]
 fn prop_fragmented_partition_routes_and_preserves() {
     check_sized(
@@ -235,6 +279,145 @@ fn prop_fragmented_partition_with_equality_classifier() {
             let c = EqRmiClassifier::new(rmi, nb, &heavy);
             let frag = 1 + rng.next_below(128) as usize;
             check_frag_partition(&mut data, &c, frag)
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_fragmented_partition_matches_sequential() {
+    // the tentpole oracle: per-thread chain merge + compaction over
+    // adversarial inputs and thread counts, against the sequential
+    // partition's boundaries and the shared routing/multiset checks
+    check_sized(
+        "parallel fragmented partition",
+        PropConfig::with_max_size(40, 60_000),
+        |rng, n| {
+            if n == 0 {
+                return Ok(());
+            }
+            let mode = rng.next_below(6);
+            let mut data: Vec<u64> = (0..n)
+                .map(|i| match mode {
+                    0 => rng.next_u64(),
+                    1 => 42,
+                    2 => [7u64, 9000][(rng.next_u64() % 2) as usize],
+                    3 => {
+                        let r = rng.uniform(0.0, 1.0);
+                        if r < 0.5 {
+                            1
+                        } else if r < 0.75 {
+                            2
+                        } else {
+                            rng.next_below(1 << 30)
+                        }
+                    }
+                    4 => i as u64,
+                    _ => (n - i) as u64,
+                })
+                .collect();
+            let mut sample: Vec<u64> = (0..256.min(n))
+                .map(|_| data[rng.next_below(n as u64) as usize])
+                .collect();
+            sample.sort_unstable();
+            let buckets = [4usize, 16, 64][rng.next_below(3) as usize];
+            let frag = [1usize, 4, 64, 128][rng.next_below(4) as usize];
+            // include oversubscribed thread counts: workers beyond the
+            // slot supply must degrade into fewer stripes or the
+            // sequential fallback, never an empty-stripe crash
+            let threads = [1usize, 2, 3, 7, 16, 64][rng.next_below(6) as usize];
+            let tree = DecisionTree::from_sorted_sample(&sample, buckets);
+            check_frag_partition_par(&mut data, &tree, frag, threads)
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_fragmented_with_equality_classifier() {
+    // heavy-value equality buckets under concurrency: the per-thread
+    // chains of an equality bucket must merge into one extent holding
+    // only the heavy value, at every thread count
+    check_sized(
+        "parallel fragmented partition + equality buckets",
+        PropConfig::with_max_size(16, 40_000),
+        |rng, n| {
+            if n < 64 {
+                return Ok(());
+            }
+            let mut data: Vec<f64> = (0..n)
+                .map(|_| {
+                    let r = rng.uniform(0.0, 1.0);
+                    if r < 0.4 {
+                        123.25
+                    } else if r < 0.6 {
+                        -55.5
+                    } else {
+                        rng.uniform(-1e4, 1e4)
+                    }
+                })
+                .collect();
+            let ssz = 512.min(n);
+            let mut skeys: Vec<f64> = (0..ssz)
+                .map(|_| data[rng.next_below(n as u64) as usize])
+                .collect();
+            skeys.sort_unstable_by(f64::total_cmp);
+            let nb = 32;
+            let heavy = detect_heavy(&skeys, nb, 8);
+            let rmi = Rmi::train(&skeys, RmiConfig { n_leaves: 64 });
+            let c = EqRmiClassifier::new(rmi, nb, &heavy);
+            let frag = 1 + rng.next_below(128) as usize;
+            let threads = 1 + rng.next_below(8) as usize;
+            check_frag_partition_par(&mut data, &c, frag, threads)
+        },
+    );
+}
+
+#[test]
+fn parallel_fragmented_adversarial_splits() {
+    // deterministic worst cases for the stripe cutter: prime lengths ×
+    // fragment sizes (unaligned tails), fragments larger than a fair
+    // per-worker share (a worker would get no whole slot — the
+    // slots-per-worker guard must fall back), and thread counts far
+    // beyond the slot supply (empty worker slices structurally
+    // impossible, fewer stripes come back instead)
+    let sample = vec![-3.0f64, -1.0, 0.0, 1.5, 2.5];
+    let tree = DecisionTree::from_sorted_sample(&sample, 4);
+    for n in [2usize, 3, 5, 7, 11, 13, 17, 19, 23, 97, 101, 997] {
+        for frag in [1usize, 2, 3, 8, 64] {
+            for threads in [2usize, 3, 7, 64] {
+                let mut asc: Vec<f64> = (0..n).map(|i| i as f64 * 0.37 - 2.0).collect();
+                check_frag_partition_par(&mut asc, &tree, frag, threads).unwrap();
+                let mut desc: Vec<f64> =
+                    (0..n).map(|i| i as f64 * 0.37 - 2.0).rev().collect();
+                check_frag_partition_par(&mut desc, &tree, frag, threads).unwrap();
+            }
+        }
+    }
+    // fragment bigger than the whole input, many workers
+    let mut tiny: Vec<f64> = (0..37).map(|i| i as f64 * 0.11 - 2.0).collect();
+    check_frag_partition_par(&mut tiny, &tree, 128, 8).unwrap();
+    // empty input
+    let mut empty: Vec<f64> = Vec::new();
+    check_frag_partition_par(&mut empty, &tree, 16, 4).unwrap();
+}
+
+#[test]
+fn prop_learned_sort_parallel_equals_sequential() {
+    // the full engine: parallel fragmented LearnedSort must be
+    // byte-identical to the sequential sort at any thread count
+    check_sized(
+        "learned_sort parallel == sequential",
+        PropConfig::with_max_size(16, 150_000),
+        |rng, n| {
+            let base = random_keys(rng, n);
+            let threads = 1 + rng.next_below(8) as usize;
+            let mut a = base.clone();
+            let mut b = base;
+            sort_sequential(SortEngine::LearnedSort, &mut a);
+            sort_parallel(SortEngine::LearnedSort, &mut b, threads);
+            if a != b {
+                return Err(format!("LearnedSort t={threads}: parallel != sequential"));
+            }
+            Ok(())
         },
     );
 }
