@@ -589,6 +589,75 @@ pub fn run_external_codec_sweep(
     rows
 }
 
+/// IO-substrate sweep of the learned external pipeline: the sync
+/// reference backend vs the submission-queue pool backend, with spill
+/// runs striped across one or two directories and — on the widest
+/// variant — `O_DIRECT` run-generation spills (silently buffered where
+/// the filesystem refuses, e.g. tmpfs). Identical key count, budget,
+/// threads, codec and merge, *and byte-identical outputs* (the substrate
+/// is pure transport), so the rate delta isolates how spill IO is issued
+/// and where it lands.
+pub fn run_external_io_sweep(
+    names: &[&'static str],
+    budget_bytes: usize,
+    cfg: &BenchConfig,
+) -> Vec<ExternalRow> {
+    use crate::external::{ExternalConfig, IoBackendKind};
+    use std::path::PathBuf;
+
+    let mut rows = Vec::new();
+    let dir = std::env::temp_dir();
+    let stripe_a = dir.join(format!("aipso-extio-stripe-a-{}", std::process::id()));
+    let stripe_b = dir.join(format!("aipso-extio-stripe-b-{}", std::process::id()));
+    for &name in names {
+        let spec = datasets::spec(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+        let input = dir.join(format!(
+            "aipso-extio-{}-{}.bin",
+            std::process::id(),
+            spec.name
+        ));
+        let output = dir.join(format!(
+            "aipso-extio-{}-{}.out.bin",
+            std::process::id(),
+            spec.name
+        ));
+        datasets::write_dataset_file(spec.name, cfg.n, cfg.seed, &input, 1 << 18)
+            .expect("chunked dataset write");
+        let one: Vec<PathBuf> = vec![stripe_a.clone()];
+        let two: Vec<PathBuf> = vec![stripe_a.clone(), stripe_b.clone()];
+        let variants: [(IoBackendKind, &Vec<PathBuf>, bool, &str); 4] = [
+            (IoBackendKind::Sync, &one, false, "sync backend, 1 spill dir"),
+            (IoBackendKind::Pool, &one, false, "pool backend, 1 spill dir"),
+            (IoBackendKind::Pool, &two, false, "pool backend, 2-dir stripe"),
+            (IoBackendKind::Pool, &two, true, "pool backend, 2-dir stripe, O_DIRECT"),
+        ];
+        for (io_backend, spill_dirs, direct_io, label) in variants {
+            let ext = ExternalConfig {
+                memory_budget: budget_bytes,
+                threads: cfg.threads,
+                io_backend,
+                spill_dirs: spill_dirs.clone(),
+                direct_io,
+                ..ExternalConfig::default()
+            };
+            rows.push(external_cell(
+                spec.paper_name,
+                spec.key_type.kind(),
+                &input,
+                &output,
+                label.to_string(),
+                &ext,
+                cfg.n,
+            ));
+        }
+        let _ = std::fs::remove_file(&input);
+        let _ = std::fs::remove_file(&output);
+    }
+    let _ = std::fs::remove_dir_all(&stripe_a);
+    let _ = std::fs::remove_dir_all(&stripe_b);
+    rows
+}
+
 /// Human-readable spill cell: on-disk bytes + ratio to the raw baseline.
 fn spill_cell(bytes: u64, raw: u64) -> String {
     format!(
@@ -1102,6 +1171,27 @@ mod tests {
         let report = render_external_rows("codec", &rows);
         assert!(report.contains("spill"));
         assert!(report.contains("0."), "delta ratio below 1 rendered");
+    }
+
+    #[test]
+    fn io_sweep_rows_cover_every_substrate_variant() {
+        let cfg = BenchConfig {
+            n: 60_000,
+            ..tiny()
+        };
+        // external_cell verifies each output, so the four variants passing
+        // at all pins the substrate's byte-transparency on a real dataset
+        let rows = run_external_io_sweep(&["uniform"], 3 * 8192 * 8, &cfg);
+        assert_eq!(rows.len(), 4);
+        assert!(rows[0].strategy.starts_with("sync"));
+        assert!(rows[1].strategy.starts_with("pool"));
+        assert!(rows[2].strategy.contains("2-dir"));
+        assert!(rows[3].strategy.contains("O_DIRECT"));
+        for r in &rows {
+            assert_eq!(r.n, rows[0].n);
+            assert_eq!(r.runs, rows[0].runs, "same chunking on every backend");
+            assert!(r.rate > 0.0);
+        }
     }
 
     #[test]

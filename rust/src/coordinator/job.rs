@@ -136,7 +136,11 @@ impl JobSpec {
     /// Out-of-core job. Admitted on the coordinator's overlap lane: it
     /// runs concurrently with in-memory jobs (its memory is bounded by its
     /// own budget and much of its time is disk-bound), but never alongside
-    /// another external job — two would compete for the same disk.
+    /// another external job — even with `ExternalConfig::spill_dirs`
+    /// striping runs across several disks, two jobs would interleave their
+    /// spill traffic on every stripe rather than partition it, so the
+    /// serializing lane keeps each job's IO (sync or pooled, see
+    /// `external::io`) sequential per device.
     pub fn external(id: u64, job: ExternalJob) -> JobSpec {
         JobSpec {
             id,

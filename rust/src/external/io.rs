@@ -1,0 +1,991 @@
+//! Pluggable spill-IO substrate: submission-based positioned writes and
+//! reads, optional `O_DIRECT`, and the aligned-buffer plumbing behind
+//! both.
+//!
+//! The external pipeline used to do all spill IO through buffered
+//! `std::fs` streams, with one ad-hoc flusher thread per merge shard and
+//! a dedicated writer thread in the pipelined run generator. This module
+//! replaces those with one substrate:
+//!
+//! - [`IoBackendKind`] selects between the **sync** backend (positioned
+//!   writes issued inline on the calling thread — the reference
+//!   behavior) and the **pool** backend (a fixed worker pool consuming a
+//!   submission queue of positioned `read_at`/`write_at` ops, returning
+//!   completion handles). Both produce byte-identical files; the pool
+//!   overlaps encode/merge compute with disk time without per-call-site
+//!   thread management.
+//! - [`SpillSink`] is the sequential append writer both backends share:
+//!   it accumulates into [`ALIGN`]-aligned buffers, dispatches full
+//!   buffers (inline or to the pool), and in `O_DIRECT` mode keeps the
+//!   unaligned tail resident until [`SpillSink::seal`] zero-pads it to
+//!   the alignment — the pad is reported to the caller so the spill
+//!   header can record it and readers stop before it.
+//! - [`PoolReader`] is the pool-backed counterpart of a
+//!   `BufReader<File>`: it prefetches the next buffer through the
+//!   submission queue while the current one is consumed, and implements
+//!   the small [`SpillRead`] seek surface the v2 block decoder needs.
+//! - `O_DIRECT` is attempted per file (create-time probe write); when
+//!   the filesystem refuses (tmpfs does), the sink silently reopens
+//!   buffered and counts an `io.direct.fallback`, so a striped set of
+//!   dirs with mixed filesystems still works.
+//!
+//! Nothing here changes file contents: the backends, direct mode, and
+//! striping are pure transport. The only on-disk difference direct mode
+//! makes is the zero pad after the final block, which is recorded in the
+//! spill header and invisible to every reader.
+
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::obs;
+
+/// Alignment for `O_DIRECT` buffers, offsets, and lengths (one page —
+/// satisfies the 512-byte logical-block floor on every common device).
+pub const ALIGN: usize = 4096;
+
+/// Worker threads in a submission-queue pool. Spill IO is bandwidth- not
+/// IOPS-bound; a few workers saturate a handful of striped disks.
+const POOL_WORKERS: usize = 4;
+
+/// Completed-but-unrecycled writes a [`SpillSink`] keeps in flight
+/// before it backpressures on the oldest submission.
+const MAX_INFLIGHT: usize = 4;
+
+/// `O_DIRECT` bit for [`open_direct`]: 0o200000 on arm/aarch64,
+/// 0o40000 elsewhere (x86, the generic value).
+#[cfg(all(unix, any(target_arch = "aarch64", target_arch = "arm")))]
+const O_DIRECT: i32 = 0o200000;
+#[cfg(all(unix, not(any(target_arch = "aarch64", target_arch = "arm"))))]
+const O_DIRECT: i32 = 0o40000;
+
+/// Which transport executes spill reads and writes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoBackendKind {
+    /// Positioned IO issued inline on the calling thread (reference).
+    Sync,
+    /// Submission-queue thread pool with completion handles.
+    Pool,
+}
+
+impl IoBackendKind {
+    /// Parse a backend name as spelled on the CLI (`sync` | `pool`).
+    pub fn parse(s: &str) -> Option<IoBackendKind> {
+        match s {
+            "sync" => Some(IoBackendKind::Sync),
+            "pool" => Some(IoBackendKind::Pool),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            IoBackendKind::Sync => "sync",
+            IoBackendKind::Pool => "pool",
+        }
+    }
+
+    /// Backend named by the `AIPSO_IO_BACKEND` environment variable, if
+    /// set and valid (the CI matrix re-runs suites under `pool`).
+    pub fn from_env() -> Option<IoBackendKind> {
+        std::env::var("AIPSO_IO_BACKEND").ok().and_then(|v| IoBackendKind::parse(&v))
+    }
+}
+
+/// Per-job IO context: the chosen backend (owning the worker pool when
+/// one is configured) and the `O_DIRECT` preference. Cheap to clone and
+/// share across merge workers — clones reference one pool.
+#[derive(Clone)]
+pub struct IoCtx {
+    backend: IoBackendKind,
+    direct: bool,
+    pool: Option<Arc<IoPool>>,
+}
+
+impl IoCtx {
+    /// Build a context for a job; `Pool` spawns the worker pool here.
+    pub fn new(backend: IoBackendKind, direct: bool) -> IoCtx {
+        let pool = match backend {
+            IoBackendKind::Pool => Some(Arc::new(IoPool::new(POOL_WORKERS))),
+            IoBackendKind::Sync => None,
+        };
+        IoCtx { backend, direct, pool }
+    }
+
+    /// The reference context: inline IO, no direct mode (what every
+    /// legacy call site gets).
+    pub fn sync() -> IoCtx {
+        IoCtx { backend: IoBackendKind::Sync, direct: false, pool: None }
+    }
+
+    /// The configured backend.
+    pub fn backend(&self) -> IoBackendKind {
+        self.backend
+    }
+
+    /// Whether `O_DIRECT` should be attempted for spill-file writes.
+    pub fn direct(&self) -> bool {
+        self.direct
+    }
+
+    pub(crate) fn pool(&self) -> Option<&Arc<IoPool>> {
+        self.pool.as_ref()
+    }
+}
+
+impl Default for IoCtx {
+    fn default() -> IoCtx {
+        IoCtx::sync()
+    }
+}
+
+impl std::fmt::Debug for IoCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("IoCtx")
+            .field("backend", &self.backend)
+            .field("direct", &self.direct)
+            .finish()
+    }
+}
+
+/// A positioned-IO file handle shareable between submitters and pool
+/// workers. On unix this is `pread`/`pwrite`; elsewhere positioned IO is
+/// emulated with seek+read/write under a lock.
+#[derive(Clone)]
+pub(crate) struct PFile {
+    file: Arc<File>,
+    #[cfg(not(unix))]
+    lock: Arc<Mutex<()>>,
+}
+
+impl PFile {
+    pub(crate) fn new(file: File) -> PFile {
+        PFile {
+            file: Arc::new(file),
+            #[cfg(not(unix))]
+            lock: Arc::new(Mutex::new(())),
+        }
+    }
+
+    /// Write the whole buffer at `off` (no file-cursor involvement).
+    #[cfg(unix)]
+    pub(crate) fn write_all_at(&self, buf: &[u8], off: u64) -> io::Result<()> {
+        use std::os::unix::fs::FileExt;
+        self.file.write_all_at(buf, off)
+    }
+
+    #[cfg(not(unix))]
+    pub(crate) fn write_all_at(&self, buf: &[u8], off: u64) -> io::Result<()> {
+        use std::io::{Seek, SeekFrom, Write};
+        let _g = self.lock.lock().unwrap();
+        let mut f = &*self.file;
+        f.seek(SeekFrom::Start(off))?;
+        f.write_all(buf)
+    }
+
+    /// Read at `off` until the buffer is full or EOF; returns the bytes
+    /// read (short only at end of file).
+    #[cfg(unix)]
+    pub(crate) fn read_some_at(&self, buf: &mut [u8], mut off: u64) -> io::Result<usize> {
+        use std::os::unix::fs::FileExt;
+        let mut total = 0;
+        while total < buf.len() {
+            match self.file.read_at(&mut buf[total..], off) {
+                Ok(0) => break,
+                Ok(n) => {
+                    total += n;
+                    off += n as u64;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(total)
+    }
+
+    #[cfg(not(unix))]
+    pub(crate) fn read_some_at(&self, buf: &mut [u8], off: u64) -> io::Result<usize> {
+        use std::io::{Seek, SeekFrom};
+        let _g = self.lock.lock().unwrap();
+        let mut f = &*self.file;
+        f.seek(SeekFrom::Start(off))?;
+        let mut total = 0;
+        while total < buf.len() {
+            match Read::read(&mut f, &mut buf[total..]) {
+                Ok(0) => break,
+                Ok(n) => total += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(total)
+    }
+}
+
+/// A heap buffer whose usable region starts on an [`ALIGN`] boundary
+/// (required by `O_DIRECT`, harmless otherwise), with a usable capacity
+/// rounded up to a multiple of [`ALIGN`]. The backing allocation is
+/// never grown, so the alignment computed at construction stays valid.
+pub(crate) struct AlignedBuf {
+    raw: Vec<u8>,
+    start: usize,
+    len: usize,
+    cap: usize,
+}
+
+impl AlignedBuf {
+    /// Allocate with at least `want` usable bytes (rounded up to a
+    /// multiple of [`ALIGN`]).
+    pub(crate) fn with_capacity(want: usize) -> AlignedBuf {
+        let cap = want.max(ALIGN).div_ceil(ALIGN) * ALIGN;
+        let raw = vec![0u8; cap + ALIGN];
+        let start = {
+            let addr = raw.as_ptr() as usize;
+            (ALIGN - addr % ALIGN) % ALIGN
+        };
+        AlignedBuf { raw, start, len: 0, cap }
+    }
+
+    /// Live bytes.
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Usable capacity (a multiple of [`ALIGN`]).
+    pub(crate) fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Drop the live bytes (capacity is retained for reuse).
+    pub(crate) fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// The live region.
+    pub(crate) fn filled(&self) -> &[u8] {
+        &self.raw[self.start..self.start + self.len]
+    }
+
+    /// Append up to the remaining capacity; returns the bytes copied.
+    pub(crate) fn extend(&mut self, data: &[u8]) -> usize {
+        let n = data.len().min(self.cap - self.len);
+        let at = self.start + self.len;
+        self.raw[at..at + n].copy_from_slice(&data[..n]);
+        self.len += n;
+        n
+    }
+
+    /// Zero-fill to the next multiple of `align`; returns the pad bytes
+    /// appended (0 when already aligned or empty).
+    pub(crate) fn pad_to(&mut self, align: usize) -> usize {
+        let pad = (align - self.len % align) % align;
+        let at = self.start + self.len;
+        self.raw[at..at + pad].fill(0);
+        self.len += pad;
+        pad
+    }
+
+    /// Mutable scratch space for positioned reads: the first
+    /// `len.min(capacity)` usable bytes. Pair with [`set_len`].
+    ///
+    /// [`set_len`]: AlignedBuf::set_len
+    pub(crate) fn space(&mut self, len: usize) -> &mut [u8] {
+        let len = len.min(self.cap);
+        &mut self.raw[self.start..self.start + len]
+    }
+
+    /// Declare `n` live bytes (after a read filled [`space`]).
+    ///
+    /// [`space`]: AlignedBuf::space
+    pub(crate) fn set_len(&mut self, n: usize) {
+        debug_assert!(n <= self.cap);
+        self.len = n;
+    }
+}
+
+/// Completion handle for one submitted op; [`wait`] blocks until the
+/// worker finishes and yields the op's result (recycling the buffer).
+///
+/// [`wait`]: Completion::wait
+pub(crate) struct Completion<T> {
+    rx: Receiver<io::Result<T>>,
+}
+
+impl<T> Completion<T> {
+    pub(crate) fn wait(self) -> io::Result<T> {
+        match self.rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(io::Error::other("io pool worker dropped a submission")),
+        }
+    }
+}
+
+enum IoOp {
+    Write {
+        file: PFile,
+        off: u64,
+        buf: AlignedBuf,
+        done: SyncSender<io::Result<AlignedBuf>>,
+    },
+    Read {
+        file: PFile,
+        off: u64,
+        len: usize,
+        buf: AlignedBuf,
+        done: SyncSender<io::Result<(AlignedBuf, usize)>>,
+    },
+}
+
+/// The submission-queue backend: a fixed pool of workers draining one
+/// queue of positioned ops. Submitters get [`Completion`] handles;
+/// dropping the pool closes the queue and joins the workers.
+pub(crate) struct IoPool {
+    tx: Mutex<Option<Sender<IoOp>>>,
+    workers: Vec<JoinHandle<()>>,
+    depth: Arc<AtomicUsize>,
+}
+
+impl IoPool {
+    pub(crate) fn new(workers: usize) -> IoPool {
+        let (tx, rx) = std::sync::mpsc::channel::<IoOp>();
+        let rx = Arc::new(Mutex::new(rx));
+        let depth = Arc::new(AtomicUsize::new(0));
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let depth = Arc::clone(&depth);
+                std::thread::spawn(move || worker_loop(&rx, &depth))
+            })
+            .collect();
+        IoPool { tx: Mutex::new(Some(tx)), workers: handles, depth }
+    }
+
+    fn submit(&self, op: IoOp) {
+        let tx = self
+            .tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .expect("io pool already shut down")
+            .clone();
+        let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        obs::metrics::gauge_set(obs::G_IO_QUEUE, d as f64);
+        tx.send(op).expect("io pool workers alive");
+    }
+
+    /// Submit a positioned write of the buffer's live bytes.
+    pub(crate) fn submit_write(
+        &self,
+        file: PFile,
+        off: u64,
+        buf: AlignedBuf,
+    ) -> Completion<AlignedBuf> {
+        let (done, rx) = std::sync::mpsc::sync_channel(1);
+        self.submit(IoOp::Write { file, off, buf, done });
+        Completion { rx }
+    }
+
+    /// Submit a positioned read of up to `len` bytes into the buffer.
+    pub(crate) fn submit_read(
+        &self,
+        file: PFile,
+        off: u64,
+        len: usize,
+        buf: AlignedBuf,
+    ) -> Completion<(AlignedBuf, usize)> {
+        let (done, rx) = std::sync::mpsc::sync_channel(1);
+        self.submit(IoOp::Read { file, off, len, buf, done });
+        Completion { rx }
+    }
+}
+
+impl Drop for IoPool {
+    fn drop(&mut self) {
+        drop(self.tx.lock().unwrap().take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<IoOp>>, depth: &AtomicUsize) {
+    loop {
+        // The guard is held only while blocked in recv; it drops as soon
+        // as an op is dequeued, so other workers keep draining.
+        let op = match rx.lock().unwrap().recv() {
+            Ok(op) => op,
+            Err(_) => break,
+        };
+        let d = depth.fetch_sub(1, Ordering::Relaxed).saturating_sub(1);
+        obs::metrics::gauge_set(obs::G_IO_QUEUE, d as f64);
+        match op {
+            IoOp::Write { file, off, buf, done } => {
+                obs::metrics::counter_add(obs::C_IO_WRITES, 1);
+                let res = {
+                    let _s = obs::trace::span_n(obs::S_SPILL_IO, 0, buf.len() as u64);
+                    file.write_all_at(buf.filled(), off)
+                };
+                let _ = done.send(res.map(|()| buf));
+            }
+            IoOp::Read { file, off, len, mut buf, done } => {
+                obs::metrics::counter_add(obs::C_IO_READS, 1);
+                let res = {
+                    let mut s = obs::trace::span(obs::S_SPILL_IO);
+                    match file.read_some_at(buf.space(len), off) {
+                        Ok(n) => {
+                            s.set_bytes(n as u64);
+                            buf.set_len(n);
+                            Ok((buf, n))
+                        }
+                        Err(e) => Err(e),
+                    }
+                };
+                let _ = done.send(res);
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+fn open_direct(path: &Path) -> io::Result<File> {
+    use std::os::unix::fs::OpenOptionsExt;
+    let f = OpenOptions::new()
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .custom_flags(O_DIRECT)
+        .open(path)?;
+    // Probe: some filesystems accept the flag at open but refuse the
+    // first direct write (and tmpfs refuses at open on some kernels).
+    // One aligned block of zeros at offset 0 settles it; real data
+    // overwrites the probe and the truncate below drops it meanwhile.
+    let mut probe = AlignedBuf::with_capacity(ALIGN);
+    probe.set_len(ALIGN);
+    PFile::new(f.try_clone()?).write_all_at(probe.filled(), 0)?;
+    f.set_len(0)?;
+    Ok(f)
+}
+
+#[cfg(not(unix))]
+fn open_direct(_path: &Path) -> io::Result<File> {
+    Err(io::Error::new(io::ErrorKind::Unsupported, "O_DIRECT requires a unix platform"))
+}
+
+/// Sequential append writer over either backend, with optional
+/// `O_DIRECT`.
+///
+/// Bytes accumulate in an aligned buffer of `target` capacity; full
+/// buffers are dispatched as positioned writes at monotonically
+/// increasing offsets (inline on the sync backend, submitted on the
+/// pool backend with bounded in-flight depth and buffer recycling).
+/// In direct mode only whole [`ALIGN`] multiples leave the sink until
+/// [`seal`] zero-pads the tail; the caller records the returned pad in
+/// the spill header. [`patch`] rewrites small header fields after seal
+/// (through a plain descriptor when the data fd is direct).
+///
+/// [`seal`]: SpillSink::seal
+/// [`patch`]: SpillSink::patch
+pub(crate) struct SpillSink {
+    path: PathBuf,
+    file: PFile,
+    pool: Option<Arc<IoPool>>,
+    buf: AlignedBuf,
+    spare: Vec<AlignedBuf>,
+    inflight: VecDeque<Completion<AlignedBuf>>,
+    base: u64,
+    appended: u64,
+    disk: u64,
+    target: usize,
+    direct: bool,
+    sealed: bool,
+}
+
+impl SpillSink {
+    /// Create (or truncate) `path` for sequential writing from offset 0.
+    /// Direct mode is attempted only when both the context asks for it
+    /// and the call site allows it (spill-dir files only — never final
+    /// outputs, whose bytes must not carry a pad).
+    pub(crate) fn create(
+        path: &Path,
+        target: usize,
+        io: &IoCtx,
+        allow_direct: bool,
+    ) -> io::Result<SpillSink> {
+        let (file, direct) = if allow_direct && io.direct() {
+            match open_direct(path) {
+                Ok(f) => (f, true),
+                Err(_) => {
+                    obs::metrics::counter_add(obs::C_IO_DIRECT_FALLBACK, 1);
+                    (plain_create(path)?, false)
+                }
+            }
+        } else {
+            (plain_create(path)?, false)
+        };
+        Ok(SpillSink::from_file(path, file, 0, target, io.pool().cloned(), direct))
+    }
+
+    /// Open an existing (presized) file for sequential writing starting
+    /// at `offset` — the sharded merge's disjoint output ranges. Interior
+    /// offsets are unaligned, so direct mode never applies here.
+    pub(crate) fn append_at(
+        path: &Path,
+        offset: u64,
+        target: usize,
+        io: &IoCtx,
+    ) -> io::Result<SpillSink> {
+        let file = OpenOptions::new().write(true).open(path)?;
+        Ok(SpillSink::from_file(path, file, offset, target, io.pool().cloned(), false))
+    }
+
+    fn from_file(
+        path: &Path,
+        file: File,
+        base: u64,
+        target: usize,
+        pool: Option<Arc<IoPool>>,
+        direct: bool,
+    ) -> SpillSink {
+        let target = target.max(ALIGN);
+        SpillSink {
+            path: path.to_path_buf(),
+            file: PFile::new(file),
+            pool,
+            buf: AlignedBuf::with_capacity(target),
+            spare: Vec::new(),
+            inflight: VecDeque::new(),
+            base,
+            appended: 0,
+            disk: 0,
+            target,
+            direct,
+            sealed: false,
+        }
+    }
+
+    /// Logical bytes appended so far (pads excluded).
+    pub(crate) fn position(&self) -> u64 {
+        self.appended
+    }
+
+    /// True when the file descriptor is in `O_DIRECT` mode.
+    pub(crate) fn is_direct(&self) -> bool {
+        self.direct
+    }
+
+    /// Append `data` after everything written so far.
+    pub(crate) fn write_all(&mut self, mut data: &[u8]) -> io::Result<()> {
+        debug_assert!(!self.sealed, "write after seal");
+        self.appended += data.len() as u64;
+        while !data.is_empty() {
+            let n = self.buf.extend(data);
+            data = &data[n..];
+            if self.buf.len() == self.buf.capacity() {
+                self.flush_buf()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Dispatch the accumulation buffer. In direct mode only whole
+    /// [`ALIGN`] multiples leave; the tail moves into the next buffer.
+    fn flush_buf(&mut self) -> io::Result<()> {
+        let len = self.buf.len();
+        let keep = if self.direct { len % ALIGN } else { 0 };
+        let send = len - keep;
+        if send == 0 {
+            return Ok(());
+        }
+        let mut next = self.take_spare();
+        if keep > 0 {
+            next.extend(&self.buf.filled()[send..]);
+        }
+        let mut full = std::mem::replace(&mut self.buf, next);
+        full.set_len(send);
+        let off = self.base + self.disk;
+        self.disk += send as u64;
+        self.dispatch(full, off)
+    }
+
+    fn take_spare(&mut self) -> AlignedBuf {
+        match self.spare.pop() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => AlignedBuf::with_capacity(self.target),
+        }
+    }
+
+    fn dispatch(&mut self, buf: AlignedBuf, off: u64) -> io::Result<()> {
+        match &self.pool {
+            None => {
+                obs::metrics::counter_add(obs::C_IO_WRITES, 1);
+                let _s = obs::trace::span_n(obs::S_SPILL_IO, 0, buf.len() as u64);
+                self.file.write_all_at(buf.filled(), off)?;
+                self.spare.push(buf);
+                Ok(())
+            }
+            Some(pool) => {
+                self.inflight.push_back(pool.submit_write(self.file.clone(), off, buf));
+                if self.inflight.len() > MAX_INFLIGHT {
+                    let done = self.inflight.pop_front().unwrap();
+                    self.spare.push(done.wait()?);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Flush everything and wait for all in-flight writes. In direct
+    /// mode the tail is zero-padded to [`ALIGN`] first; the pad length
+    /// is returned so the caller can record it in the spill header
+    /// (0 on buffered files).
+    pub(crate) fn seal(&mut self) -> io::Result<u32> {
+        debug_assert!(!self.sealed, "seal called twice");
+        let mut pad = 0u32;
+        if self.direct {
+            self.flush_buf()?;
+            pad = self.buf.pad_to(ALIGN) as u32;
+        }
+        if self.buf.len() > 0 {
+            let off = self.base + self.disk;
+            self.disk += self.buf.len() as u64;
+            let buf = std::mem::replace(&mut self.buf, AlignedBuf::with_capacity(ALIGN));
+            self.dispatch(buf, off)?;
+        }
+        while let Some(c) = self.inflight.pop_front() {
+            self.spare.push(c.wait()?);
+        }
+        self.sealed = true;
+        Ok(pad)
+    }
+
+    /// Positioned rewrite of a small already-written region (header
+    /// count/pad patching) — only valid after [`seal`]. A direct-mode
+    /// sink reopens the file with a plain descriptor, since `O_DIRECT`
+    /// would reject the unaligned write.
+    ///
+    /// [`seal`]: SpillSink::seal
+    pub(crate) fn patch(&mut self, off: u64, data: &[u8]) -> io::Result<()> {
+        debug_assert!(self.sealed, "patch before seal");
+        if self.direct {
+            let f = OpenOptions::new().write(true).open(&self.path)?;
+            PFile::new(f).write_all_at(data, off)
+        } else {
+            self.file.write_all_at(data, off)
+        }
+    }
+}
+
+fn plain_create(path: &Path) -> io::Result<File> {
+    OpenOptions::new().write(true).create(true).truncate(true).open(path)
+}
+
+/// Minimal read surface the v2 block decoder needs from a spill source:
+/// `Read` plus a relative seek (block skips).
+pub(crate) trait SpillRead: Read {
+    /// Move the logical read position by `delta` bytes.
+    fn seek_relative(&mut self, delta: i64) -> io::Result<()>;
+}
+
+impl SpillRead for std::io::BufReader<File> {
+    fn seek_relative(&mut self, delta: i64) -> io::Result<()> {
+        std::io::BufReader::seek_relative(self, delta)
+    }
+}
+
+/// Pool-backed sequential reader with one-buffer read-ahead: while the
+/// caller consumes the current buffer, the next chunk is already
+/// submitted. Seeks inside the buffered window are free; seeks outside
+/// it drop the window and refill lazily at the target.
+pub(crate) struct PoolReader {
+    file: PFile,
+    pool: Arc<IoPool>,
+    chunk: usize,
+    cur: AlignedBuf,
+    cur_off: usize,
+    cur_file: u64,
+    pending: Option<(u64, Completion<(AlignedBuf, usize)>)>,
+    eof_at: Option<u64>,
+    spare: Option<AlignedBuf>,
+}
+
+impl PoolReader {
+    /// Wrap an open file; `chunk` is the per-submission read size.
+    pub(crate) fn new(file: File, chunk: usize, pool: Arc<IoPool>) -> PoolReader {
+        let chunk = chunk.max(ALIGN);
+        PoolReader {
+            file: PFile::new(file),
+            pool,
+            chunk,
+            cur: AlignedBuf::with_capacity(chunk),
+            cur_off: 0,
+            cur_file: 0,
+            pending: None,
+            eof_at: None,
+            spare: None,
+        }
+    }
+
+    /// Position the next read at absolute file offset `off`.
+    pub(crate) fn seek_to(&mut self, off: u64) {
+        let window_end = self.cur_file + self.cur.len() as u64;
+        if off >= self.cur_file && off <= window_end {
+            self.cur_off = (off - self.cur_file) as usize;
+            return;
+        }
+        self.pending = None;
+        self.cur.clear();
+        self.cur_off = 0;
+        self.cur_file = off;
+        self.eof_at = None;
+    }
+
+    fn take_buf(&mut self) -> AlignedBuf {
+        match self.spare.take() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => AlignedBuf::with_capacity(self.chunk),
+        }
+    }
+
+    /// Bytes available at the read cursor after refilling (0 = EOF).
+    fn fill(&mut self) -> io::Result<usize> {
+        if self.cur_off < self.cur.len() {
+            return Ok(self.cur.len() - self.cur_off);
+        }
+        let next_off = self.cur_file + self.cur.len() as u64;
+        if let Some(end) = self.eof_at {
+            if next_off >= end {
+                return Ok(0);
+            }
+        }
+        let (buf, n) = match self.pending.take() {
+            Some((off, c)) if off == next_off => c.wait()?,
+            stale => {
+                drop(stale);
+                let buf = self.take_buf();
+                self.pool.submit_read(self.file.clone(), next_off, self.chunk, buf).wait()?
+            }
+        };
+        let mut old = std::mem::replace(&mut self.cur, buf);
+        old.clear();
+        self.spare = Some(old);
+        self.cur_file = next_off;
+        self.cur_off = 0;
+        if n < self.chunk {
+            // read_some_at is short only at EOF
+            self.eof_at = Some(next_off + n as u64);
+        } else {
+            let buf = self.take_buf();
+            let ahead = next_off + n as u64;
+            self.pending =
+                Some((ahead, self.pool.submit_read(self.file.clone(), ahead, self.chunk, buf)));
+        }
+        Ok(n)
+    }
+}
+
+impl Read for PoolReader {
+    fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+        if out.is_empty() {
+            return Ok(0);
+        }
+        let avail = self.fill()?;
+        if avail == 0 {
+            return Ok(0);
+        }
+        let n = avail.min(out.len());
+        out[..n].copy_from_slice(&self.cur.filled()[self.cur_off..self.cur_off + n]);
+        self.cur_off += n;
+        Ok(n)
+    }
+}
+
+impl SpillRead for PoolReader {
+    fn seek_relative(&mut self, delta: i64) -> io::Result<()> {
+        let here = self.cur_file + self.cur_off as u64;
+        let target = here.checked_add_signed(delta).ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidInput, "seek before start of file")
+        })?;
+        self.seek_to(target);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("aipso-io-{}-{}", name, std::process::id()))
+    }
+
+    #[test]
+    fn backend_names_parse_and_roundtrip() {
+        assert_eq!(IoBackendKind::parse("sync"), Some(IoBackendKind::Sync));
+        assert_eq!(IoBackendKind::parse("pool"), Some(IoBackendKind::Pool));
+        assert_eq!(IoBackendKind::parse("uring"), None);
+        for b in [IoBackendKind::Sync, IoBackendKind::Pool] {
+            assert_eq!(IoBackendKind::parse(b.name()), Some(b));
+        }
+    }
+
+    #[test]
+    fn aligned_buf_is_aligned_and_tracks_len() {
+        let mut b = AlignedBuf::with_capacity(1000);
+        assert_eq!(b.capacity() % ALIGN, 0);
+        assert!(b.capacity() >= 1000);
+        assert_eq!(b.filled().as_ptr() as usize % ALIGN, 0, "start is aligned");
+        assert_eq!(b.extend(&[7u8; 10]), 10);
+        assert_eq!(b.len(), 10);
+        assert_eq!(b.filled(), &[7u8; 10]);
+        let pad = b.pad_to(ALIGN);
+        assert_eq!(pad, ALIGN - 10);
+        assert_eq!(b.len() % ALIGN, 0);
+        assert!(b.filled()[10..].iter().all(|&x| x == 0), "pad is zeros");
+        b.clear();
+        let huge = vec![1u8; b.capacity() + 5];
+        assert_eq!(b.extend(&huge), b.capacity(), "extend clamps to capacity");
+    }
+
+    /// Deterministic pseudo-random payload (no RNG dependency needed).
+    fn payload(n: usize) -> Vec<u8> {
+        let mut v = Vec::with_capacity(n);
+        let mut x = 0x9e3779b97f4a7c15u64;
+        while v.len() < n {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        v.truncate(n);
+        v
+    }
+
+    fn write_through(path: &std::path::Path, io: &IoCtx, direct: bool, data: &[u8]) -> u32 {
+        let mut sink = SpillSink::create(path, 1 << 14, io, direct).unwrap();
+        // uneven write sizes exercise buffer boundaries
+        let mut rest = data;
+        let mut step = 1;
+        while !rest.is_empty() {
+            let n = step.min(rest.len());
+            sink.write_all(&rest[..n]).unwrap();
+            rest = &rest[n..];
+            step = step * 3 % 7001 + 1;
+        }
+        assert_eq!(sink.position(), data.len() as u64);
+        let pad = sink.seal().unwrap();
+        sink.patch(0, &data[..8.min(data.len())]).unwrap();
+        pad
+    }
+
+    #[test]
+    fn sync_and_pool_sinks_write_identical_bytes() {
+        let data = payload(150_000);
+        let a = tmp("sink-sync.bin");
+        let b = tmp("sink-pool.bin");
+        write_through(&a, &IoCtx::sync(), false, &data);
+        {
+            let pool = IoCtx::new(IoBackendKind::Pool, false);
+            write_through(&b, &pool, false, &data);
+        }
+        let got_a = std::fs::read(&a).unwrap();
+        let got_b = std::fs::read(&b).unwrap();
+        assert_eq!(got_a, got_b, "backends must be byte-identical");
+        assert_eq!(got_a.len(), data.len());
+        assert_eq!(&got_a[8..], &data[8..]);
+        let _ = std::fs::remove_file(&a);
+        let _ = std::fs::remove_file(&b);
+    }
+
+    #[test]
+    fn direct_mode_or_fallback_produces_the_same_payload() {
+        // Whether the filesystem grants O_DIRECT (disk-backed /tmp) or
+        // refuses it (tmpfs), the payload bytes must match; only a
+        // trailing zero pad may differ, and it is exactly what seal
+        // reported.
+        let data = payload(10_000);
+        let p = tmp("sink-direct.bin");
+        let io = IoCtx::new(IoBackendKind::Sync, true);
+        let pad = write_through(&p, &io, true, &data);
+        let got = std::fs::read(&p).unwrap();
+        assert_eq!(got.len(), data.len() + pad as usize);
+        assert_eq!(&got[8..data.len()], &data[8..]);
+        assert!(got[data.len()..].iter().all(|&x| x == 0), "pad is zeros");
+        if pad > 0 {
+            assert_eq!((data.len() + pad as usize) % ALIGN, 0);
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn append_at_writes_disjoint_interior_ranges() {
+        let p = tmp("sink-append.bin");
+        let f = std::fs::File::create(&p).unwrap();
+        f.set_len(300).unwrap();
+        drop(f);
+        let io = IoCtx::new(IoBackendKind::Pool, false);
+        let mut hi = SpillSink::append_at(&p, 200, 1 << 12, &io).unwrap();
+        let mut lo = SpillSink::append_at(&p, 100, 1 << 12, &io).unwrap();
+        hi.write_all(&[2u8; 100]).unwrap();
+        lo.write_all(&[1u8; 100]).unwrap();
+        assert_eq!(hi.seal().unwrap(), 0);
+        assert_eq!(lo.seal().unwrap(), 0);
+        drop((lo, hi, io));
+        let got = std::fs::read(&p).unwrap();
+        assert_eq!(&got[..100], &[0u8; 100][..]);
+        assert_eq!(&got[100..200], &[1u8; 100][..]);
+        assert_eq!(&got[200..], &[2u8; 100][..]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn pool_reader_streams_and_seeks() {
+        let data = payload(70_000);
+        let p = tmp("pool-read.bin");
+        std::fs::write(&p, &data).unwrap();
+        let pool = Arc::new(IoPool::new(2));
+        let mut r = PoolReader::new(File::open(&p).unwrap(), 8192, Arc::clone(&pool));
+        let mut got = Vec::new();
+        r.read_to_end(&mut got).unwrap();
+        assert_eq!(got, data, "sequential read matches");
+
+        // absolute seek back, then relative skips both ways
+        r.seek_to(1000);
+        let mut four = [0u8; 4];
+        r.read_exact(&mut four).unwrap();
+        assert_eq!(four, data[1000..1004]);
+        r.seek_relative(9996).unwrap();
+        r.read_exact(&mut four).unwrap();
+        assert_eq!(four, data[11000..11004]);
+        r.seek_relative(-10_000).unwrap();
+        r.read_exact(&mut four).unwrap();
+        assert_eq!(four, data[1004..1008]);
+        drop(r);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn pool_reader_hits_eof_cleanly_past_the_end() {
+        let p = tmp("pool-eof.bin");
+        std::fs::write(&p, payload(100)).unwrap();
+        let pool = Arc::new(IoPool::new(1));
+        let mut r = PoolReader::new(File::open(&p).unwrap(), 4096, pool);
+        let mut buf = Vec::new();
+        assert_eq!(r.read_to_end(&mut buf).unwrap(), 100);
+        assert_eq!(r.read(&mut [0u8; 8]).unwrap(), 0, "EOF is sticky");
+        r.seek_to(1_000_000);
+        assert_eq!(r.read(&mut [0u8; 8]).unwrap(), 0, "seek past end reads 0");
+        let _ = std::fs::remove_file(&p);
+    }
+}

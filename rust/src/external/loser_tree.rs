@@ -18,9 +18,53 @@
 //! codecs merge together in one tournament.
 
 use std::io;
+use std::path::Path;
 
-use crate::external::spill::RunReader;
+use crate::external::io::IoCtx;
+use crate::external::spill::{BlockDirectory, RunReader, SpillHeader};
 use crate::key::SortKey;
+
+/// One merge input: the run path, the key range to read, and whatever
+/// the caller already learned about the file — the decoded spill header
+/// and (for v2 runs) the planner's block directory — so opening the
+/// source re-reads neither. Before this, every merge open re-read the
+/// 24-byte header from a fresh buffered reader even when a [`RunIndex`]
+/// had just walked the same file.
+///
+/// [`RunIndex`]: crate::external::spill::RunIndex
+pub(crate) struct MergeSource<'a> {
+    /// The run file.
+    pub path: &'a Path,
+    /// First key of the range.
+    pub start: u64,
+    /// Keys in the range (empty sources are skipped at open).
+    pub len: u64,
+    /// The planner's block directory, when one was built.
+    pub dir: Option<&'a BlockDirectory>,
+    /// The cached spill header, when the caller already decoded it.
+    pub header: Option<&'a SpillHeader>,
+}
+
+/// Open every nonempty source of a merge through one code path — the
+/// serial group merge and the sharded merge share it — reusing whatever
+/// cached metadata each [`MergeSource`] carries and routing reads
+/// through the configured IO backend.
+pub(crate) fn open_merge_sources<K: SortKey>(
+    specs: &[MergeSource<'_>],
+    io_buffer: usize,
+    io: &IoCtx,
+) -> io::Result<Vec<RunReader<K>>> {
+    let mut sources = Vec::with_capacity(specs.len());
+    for s in specs {
+        if s.len == 0 {
+            continue;
+        }
+        sources.push(RunReader::open_range_ctx(
+            s.path, s.start, s.len, io_buffer, s.dir, s.header, io,
+        )?);
+    }
+    Ok(sources)
+}
 
 /// A stream of keys consumed by the merge (each run is nondecreasing).
 pub trait KeyStream<K> {

@@ -16,8 +16,9 @@
 //!    *epoch* ([`EpochStats`]). Each sorted chunk spills as one run
 //!    ([`spill`]). With `threads > 1` the read / sort / spill stages run
 //!    as an overlapped pipeline: a reader thread prefetches chunk `N+1`
-//!    and a writer thread spills chunk `N−1` while the pool sorts chunk
-//!    `N`.
+//!    while the pool sorts chunk `N`, and chunk `N−1` spills on a writer
+//!    thread (sync backend) or through the IO pool's submission queue
+//!    (pool backend).
 //! 2. **Merge**: intermediate k-way passes ([`loser_tree`], fan-in clamped
 //!    to the budget) run their independent merge groups concurrently on
 //!    the scheduler pool; the final pass inverts the keys-weighted mixture
@@ -28,12 +29,22 @@
 //!    falling back to the serial loser tree when neither a model nor a
 //!    fallback sample exists or the cuts come out skewed (drift guard).
 //!
+//! All spill reads and writes go through the pluggable [`io`] substrate:
+//! the **sync** backend issues positioned IO inline (the reference), the
+//! **pool** backend drains a submission queue on a fixed worker pool so
+//! disk time overlaps compute, optional `O_DIRECT` keeps budget-accounted
+//! spill data out of the page cache (with automatic buffered fallback),
+//! and [`ExternalConfig::spill_dirs`] stripes runs round-robin across
+//! several directories/disks. Every combination produces byte-identical
+//! outputs — the substrate is pure transport.
+//!
 //! The whole pipeline is threaded with [`crate::obs`] spans (`extsort` →
 //! `chunk-read`/`chunk-sort`/`spill-write`/`retrain` → `merge-pass` →
-//! `shard-merge`) and metrics (spill bytes, drift error, shard skew,
-//! merge fan-in); `aipso extsort --trace-json` dumps the resulting
-//! `JobTelemetry` document. All of it is disabled (one relaxed atomic
-//! load per site) unless [`crate::obs::set_enabled`] turned it on.
+//! `shard-merge`, plus `spill-io` under the pool backend) and metrics
+//! (spill bytes, drift error, shard skew, merge fan-in, io queue depth);
+//! `aipso extsort --trace-json` dumps the resulting `JobTelemetry`
+//! document. All of it is disabled (one relaxed atomic load per site)
+//! unless [`crate::obs::set_enabled`] turned it on.
 //!
 //! Entry points: [`sort_file`] (binary key files, the `aipso gen --out` /
 //! `aipso extsort` format) and [`sort_iter`] (any in-process key stream).
@@ -72,22 +83,24 @@
 //! ```
 
 pub mod config;
+pub mod io;
 pub mod loser_tree;
 pub mod run_writer;
 pub mod shard;
 pub mod spill;
 
 pub use config::{ExternalConfig, RetrainPolicy, RunGen};
+pub use io::{IoBackendKind, IoCtx};
 pub use loser_tree::{KeyStream, LoserTree, VecStream};
 pub use run_writer::{EpochStats, RunGenStats};
 pub use shard::ShardPlan;
 pub use spill::{
     file_key_count, read_header, read_keys_file, verify_sorted_file, write_keys_file,
-    RunFile, RunIndex, RunReader, RunWriter, SpillCodec, SpillDir, SpillHeader,
-    SpillVersion, DELTA_VERSION, FORMAT_VERSION, HEADER_LEN, MAGIC, RAW_VERSION,
+    write_keys_file_codec, RunFile, RunIndex, RunReader, RunWriter, SpillCodec, SpillDir,
+    SpillHeader, SpillVersion, DELTA_VERSION, FORMAT_VERSION, HEADER_LEN, MAGIC, RAW_VERSION,
+    ZIGZAG_VERSION,
 };
 
-use std::io;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
@@ -184,9 +197,9 @@ pub fn sort_file<K: SortKey>(
     input: &Path,
     output: &Path,
     cfg: &ExternalConfig,
-) -> io::Result<ExternalSortReport> {
+) -> std::io::Result<ExternalSortReport> {
     let mut reader = RunReader::<K>::open(input, cfg.effective_io_buffer())?;
-    let src = move |max: usize| -> io::Result<Option<Vec<K>>> {
+    let src = move |max: usize| -> std::io::Result<Option<Vec<K>>> {
         let chunk = reader.read_chunk(max)?;
         Ok(if chunk.is_empty() { None } else { Some(chunk) })
     };
@@ -204,12 +217,12 @@ pub fn sort_and_verify(
     input: &Path,
     output: &Path,
     cfg: &ExternalConfig,
-) -> io::Result<(ExternalSortReport, f64, bool)> {
+) -> std::io::Result<(ExternalSortReport, f64, bool)> {
     fn go<K: SortKey>(
         input: &Path,
         output: &Path,
         cfg: &ExternalConfig,
-    ) -> io::Result<(ExternalSortReport, f64, bool)> {
+    ) -> std::io::Result<(ExternalSortReport, f64, bool)> {
         let t0 = std::time::Instant::now();
         let report = sort_file::<K>(input, output, cfg)?;
         let secs = t0.elapsed().as_secs_f64();
@@ -231,13 +244,13 @@ pub fn sort_iter<K: SortKey, I>(
     keys: I,
     output: &Path,
     cfg: &ExternalConfig,
-) -> io::Result<ExternalSortReport>
+) -> std::io::Result<ExternalSortReport>
 where
     I: IntoIterator<Item = K>,
     I::IntoIter: Send,
 {
     let mut it = keys.into_iter();
-    let src = move |max: usize| -> io::Result<Option<Vec<K>>> {
+    let src = move |max: usize| -> std::io::Result<Option<Vec<K>>> {
         let chunk: Vec<K> = it.by_ref().take(max).collect();
         Ok(if chunk.is_empty() { None } else { Some(chunk) })
     };
@@ -268,18 +281,19 @@ fn sort_from<K, F>(
     next_chunk: F,
     output: &Path,
     cfg: &ExternalConfig,
-) -> io::Result<ExternalSortReport>
+) -> std::io::Result<ExternalSortReport>
 where
     K: SortKey,
-    F: FnMut(usize) -> io::Result<Option<Vec<K>>> + Send,
+    F: FnMut(usize) -> std::io::Result<Option<Vec<K>>> + Send,
 {
     let mut guard = OutputGuard {
         path: output,
         armed: false,
     };
-    let mut spill = SpillDir::create(cfg.tmp_dir.as_deref())?;
+    let io = IoCtx::new(cfg.io_backend, cfg.direct_io);
+    let mut spill = SpillDir::create_striped(&cfg.spill_dirs)?;
     let mut job_span = obs::trace::span(obs::S_EXTSORT);
-    let gen = run_writer::generate_runs(next_chunk, &mut spill, cfg)?;
+    let gen = run_writer::generate_runs(next_chunk, &mut spill, cfg, &io)?;
     let (mut runs, stats, models, fallback_sample) =
         (gen.runs, gen.stats, gen.models, gen.fallback_sample);
 
@@ -352,7 +366,7 @@ where
     let fanout = cfg.effective_fanout();
     while runs.len() > fanout {
         let (merged, sharded_groups) =
-            merge_pass::<K>(runs, &mut spill, cfg, threads, &cut_models, empirical)?;
+            merge_pass::<K>(runs, &mut spill, cfg, threads, &cut_models, empirical, &io)?;
         runs = merged;
         report.merge_passes += 1;
         report.sharded_groups += sharded_groups;
@@ -363,11 +377,13 @@ where
     // spilled through, so raw and delta sorts are byte-identical.
     if runs.len() == 1 {
         guard.armed = true;
-        if cfg.spill_codec == SpillCodec::Raw {
+        let pad = read_header(&runs[0].path)?.map_or(0, |h| h.pad);
+        if cfg.spill_codec == SpillCodec::Raw && pad == 0 {
             // single raw run: plain buffered copy, no tree needed
             std::fs::copy(&runs[0].path, output)?;
         } else {
-            // single delta run: stream-rewrite it as raw
+            // single delta run — or a raw run whose direct-IO writer
+            // padded the final block: stream-rewrite it as plain raw
             spill::transcode_raw::<K>(&runs[0].path, output, cfg.effective_io_buffer())?;
         }
     } else {
@@ -391,7 +407,7 @@ where
             debug_assert_eq!(plan.total_keys(), report.keys);
             if plan.skew() <= cfg.shard_skew_limit {
                 guard.armed = true;
-                shard::merge_sharded::<K>(&runs, &plan, output, cfg, threads)?;
+                shard::merge_sharded::<K>(&runs, &plan, output, cfg, threads, &io)?;
                 report.merge_shards = shards;
                 sharded = true;
             }
@@ -405,6 +421,7 @@ where
                 output.to_path_buf(),
                 cfg.effective_io_buffer(),
                 SpillCodec::Raw, // the output contract, independent of the spill codec
+                &io,
             )?;
             debug_assert_eq!(merged.n, report.keys);
         }
@@ -484,6 +501,7 @@ struct ShardedGroup {
 /// describe its data. All group- and shard-tasks of the pass run in one
 /// flat pool, so shards of different groups interleave freely. Returns
 /// the next round's runs plus how many groups merged sharded.
+#[allow(clippy::too_many_arguments)]
 fn merge_pass<K: SortKey>(
     runs: Vec<RunFile>,
     spill_dir: &mut SpillDir,
@@ -491,7 +509,8 @@ fn merge_pass<K: SortKey>(
     threads: usize,
     cut_models: &[(&Rmi, f64)],
     empirical: Option<(&[u64], f64)>,
-) -> io::Result<(Vec<RunFile>, usize)> {
+    io: &IoCtx,
+) -> std::io::Result<(Vec<RunFile>, usize)> {
     let _span = obs::trace::span_n(
         obs::S_MERGE_PASS,
         runs.iter().map(|r| r.n).sum(),
@@ -565,8 +584,8 @@ fn merge_pass<K: SortKey>(
     // split the io budget across the tasks that can run at once
     let io_buffer = (cfg.effective_io_buffer() / workers).max(4096);
     let shard_offsets: Vec<Vec<u64>> = sharded.iter().map(|g| g.plan.out_key_offsets()).collect();
-    let serial_results: Mutex<Vec<(usize, io::Result<RunFile>)>> = Mutex::new(Vec::new());
-    let first_err: Mutex<Option<io::Error>> = Mutex::new(None);
+    let serial_results: Mutex<Vec<(usize, std::io::Result<RunFile>)>> = Mutex::new(Vec::new());
+    let first_err: Mutex<Option<std::io::Error>> = Mutex::new(None);
     // Once any task fails the whole pass's result is discarded, so every
     // queued task — serial or shard — drains cheaply instead of grinding
     // a failing disk through more whole-group merges.
@@ -578,11 +597,12 @@ fn merge_pass<K: SortKey>(
                 return;
             }
             let (slot, group, out) = &serial[i];
-            let res = merge_group::<K>(group, out.clone(), io_buffer, cfg.spill_codec);
+            let res = merge_group::<K>(group, out.clone(), io_buffer, cfg.spill_codec, io);
             match &res {
                 Ok(_) => {
                     for r in group {
                         let _ = std::fs::remove_file(&r.path);
+                        let _ = std::fs::remove_file(spill::sidecar_path(&r.path));
                     }
                 }
                 Err(_) => failed.store(true, Relaxed),
@@ -601,6 +621,7 @@ fn merge_pass<K: SortKey>(
                 shard_offsets[g][s],
                 &grp.out,
                 io_buffer,
+                io,
             ) {
                 failed.store(true, Relaxed);
                 let mut slot = first_err.lock().unwrap();
@@ -620,6 +641,7 @@ fn merge_pass<K: SortKey>(
     for grp in sharded {
         for r in &grp.runs {
             let _ = std::fs::remove_file(&r.path);
+            let _ = std::fs::remove_file(spill::sidecar_path(&r.path));
         }
         next_round[grp.slot] = Some(RunFile {
             path: grp.out,
@@ -638,19 +660,30 @@ fn merge_pass<K: SortKey>(
 /// Merge one group of runs into `out_path` through the loser tree,
 /// writing with `codec` (the spill codec for intermediate runs, raw for
 /// the final output). The sources dispatch their own codec per file, so
-/// raw and delta runs merge together freely.
+/// raw and delta runs merge together freely. Reads and writes route
+/// through the configured IO backend; intermediate delta outputs also
+/// get a block-bounds side-car so a later sharded pass can skip blocks.
+/// The output is never `O_DIRECT` — final outputs are the interchange
+/// contract and intermediate runs are read straight back.
 fn merge_group<K: SortKey>(
     runs: &[RunFile],
     out_path: PathBuf,
     io_buffer: usize,
     codec: SpillCodec,
-) -> io::Result<RunFile> {
-    let mut sources = Vec::with_capacity(runs.len());
-    for r in runs {
-        sources.push(RunReader::<K>::open(&r.path, io_buffer)?);
-    }
-    let mut tree = LoserTree::new(sources)?;
-    let mut w = RunWriter::<K>::create_with(out_path, io_buffer, codec)?;
+    io: &IoCtx,
+) -> std::io::Result<RunFile> {
+    let specs: Vec<loser_tree::MergeSource<'_>> = runs
+        .iter()
+        .map(|r| loser_tree::MergeSource {
+            path: &r.path,
+            start: 0,
+            len: r.n,
+            dir: None,
+            header: None,
+        })
+        .collect();
+    let mut tree = LoserTree::new(loser_tree::open_merge_sources::<K>(&specs, io_buffer, io)?)?;
+    let mut w = RunWriter::<K>::create_io(out_path, io_buffer, codec, io, true, false)?;
     while let Some(k) = tree.next()? {
         w.push(k)?;
     }
@@ -1096,14 +1129,15 @@ mod tests {
 
     #[test]
     fn early_failure_preserves_preexisting_output() {
-        // tmp_dir is a *file*, so SpillDir::create fails before this run
-        // ever touches the output — a pre-existing result must survive.
+        // the spill dir is a *file*, so SpillDir::create_striped fails
+        // before this run ever touches the output — a pre-existing
+        // result must survive.
         let bad_tmp = tmp("bad-tmp-as-file");
         std::fs::write(&bad_tmp, b"x").unwrap();
         let out = tmp("preexisting-out.bin");
         std::fs::write(&out, b"12345678").unwrap(); // prior run's data
         let cfg = ExternalConfig {
-            tmp_dir: Some(bad_tmp.clone()),
+            spill_dirs: vec![bad_tmp.clone()],
             threads: 1,
             ..ExternalConfig::default()
         };
@@ -1131,7 +1165,7 @@ mod tests {
         let cfg = ExternalConfig {
             memory_budget: 2048 * 8,
             threads: 1,
-            tmp_dir: Some(base.clone()),
+            spill_dirs: vec![base.clone()],
             ..ExternalConfig::default()
         };
         let err = sort_iter(keys.iter().copied(), &out, &cfg);

@@ -42,6 +42,7 @@ use std::path::PathBuf;
 use crate::classifier::rmi_classifier::RmiClassifier;
 use crate::classifier::Classifier;
 use crate::external::config::{ExternalConfig, RetrainPolicy, RunGen};
+use crate::external::io::IoCtx;
 use crate::external::spill::{RunFile, RunWriter, SpillCodec, SpillDir, HEADER_LEN};
 use crate::key::SortKey;
 use crate::obs;
@@ -138,15 +139,16 @@ pub(crate) fn generate_runs<K: SortKey, F>(
     next_chunk: F,
     spill: &mut SpillDir,
     cfg: &ExternalConfig,
+    io: &IoCtx,
 ) -> io::Result<GeneratedRuns>
 where
     F: FnMut(usize) -> io::Result<Option<Vec<K>>> + Send,
 {
     let threads = crate::scheduler::effective_threads(cfg.threads);
     if threads <= 1 {
-        generate_runs_serial(next_chunk, spill, cfg)
+        generate_runs_serial(next_chunk, spill, cfg, io)
     } else {
-        generate_runs_pipelined(next_chunk, spill, cfg, threads)
+        generate_runs_pipelined(next_chunk, spill, cfg, io, threads)
     }
 }
 
@@ -155,6 +157,7 @@ fn generate_runs_serial<K: SortKey, F>(
     mut next_chunk: F,
     spill: &mut SpillDir,
     cfg: &ExternalConfig,
+    io: &IoCtx,
 ) -> io::Result<GeneratedRuns>
 where
     F: FnMut(usize) -> io::Result<Option<Vec<K>>>,
@@ -179,6 +182,7 @@ where
             spill.next_run_path(),
             cfg.effective_io_buffer(),
             cfg.spill_codec,
+            io,
         )?);
     }
     Ok(sorter.finish(runs))
@@ -193,9 +197,14 @@ fn spill_run<K: SortKey>(
     path: PathBuf,
     io_buffer: usize,
     codec: SpillCodec,
+    io: &IoCtx,
 ) -> io::Result<RunFile> {
     let mut span = obs::trace::span(obs::S_SPILL_WRITE);
-    let mut w = RunWriter::<K>::create_with(path, io_buffer, codec)?;
+    // Spilled runs go through the configured backend, write a block
+    // side-car (delta codec), and are the one place direct mode applies:
+    // they live in the spill dirs and are read back only by our own
+    // pad-aware readers.
+    let mut w = RunWriter::<K>::create_io(path, io_buffer, codec, io, true, true)?;
     w.write_slice(chunk)?;
     let run = w.finish()?;
     span.set_keys(run.n);
@@ -214,14 +223,19 @@ fn spill_run<K: SortKey>(
     Ok(run)
 }
 
-/// The overlapped pipeline: a reader thread prefetches chunk `N+1` and a
-/// writer thread spills chunk `N−1` while the caller's thread sorts chunk
-/// `N` on the pool. Rendezvous (zero-capacity) channels give backpressure
-/// with exactly one resident chunk per stage.
+/// The overlapped pipeline: a reader thread prefetches chunk `N+1` while
+/// the caller's thread sorts chunk `N` on the pool, and chunk `N−1` is
+/// spilled concurrently — by a dedicated writer thread on the sync
+/// backend, or by the submission queue itself on the pool backend (the
+/// sink's bounded in-flight writes already overlap encode with disk
+/// time, so a writer thread would only add a resident chunk). Rendezvous
+/// (zero-capacity) channels give backpressure with exactly one resident
+/// chunk per stage.
 fn generate_runs_pipelined<K: SortKey, F>(
     next_chunk: F,
     spill: &mut SpillDir,
     cfg: &ExternalConfig,
+    io: &IoCtx,
     threads: usize,
 ) -> io::Result<GeneratedRuns>
 where
@@ -235,7 +249,6 @@ where
 
     let runs = std::thread::scope(|scope| -> io::Result<Vec<RunFile>> {
         let (chunk_tx, chunk_rx) = mpsc::sync_channel::<io::Result<Vec<K>>>(0);
-        let (sorted_tx, sorted_rx) = mpsc::sync_channel::<Vec<K>>(0);
 
         // Reader: pulls raw chunks off the source. A failed send means the
         // sorter hung up (a downstream error); just stop.
@@ -262,39 +275,78 @@ where
             }
         });
 
-        // Writer: spills sorted chunks in arrival order. An IO error ends
-        // the loop; dropping sorted_rx then unblocks the sorter's send.
-        let writer = scope.spawn(move || -> io::Result<Vec<RunFile>> {
+        let write_result = if io.pool().is_some() {
+            // Pool backend: spill inline after the sort — the sink's
+            // submissions drain on the IO workers while the next chunk
+            // sorts.
             let mut runs = Vec::new();
-            for chunk in sorted_rx.iter() {
-                runs.push(spill_run(&chunk, spill.next_run_path(), io_buffer, codec)?);
-            }
-            Ok(runs)
-        });
-
-        // Sorter: this thread — model training and the pool-parallel sort.
-        loop {
-            let msg = match chunk_rx.recv() {
-                Ok(m) => m,
-                Err(_) => break, // reader done (EOF or after sending an error)
-            };
-            let mut chunk = match msg {
-                Ok(c) => c,
-                Err(e) => {
-                    source_err = Some(e);
-                    break;
+            let mut failed: Option<io::Error> = None;
+            loop {
+                let msg = match chunk_rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                };
+                let mut chunk = match msg {
+                    Ok(c) => c,
+                    Err(e) => {
+                        source_err = Some(e);
+                        break;
+                    }
+                };
+                sorter.sort_chunk(&mut chunk);
+                match spill_run(&chunk, spill.next_run_path(), io_buffer, codec, io) {
+                    Ok(r) => runs.push(r),
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
                 }
-            };
-            sorter.sort_chunk(&mut chunk);
-            if sorted_tx.send(chunk).is_err() {
-                break; // writer failed; its join below reports the cause
             }
-        }
-        drop(chunk_rx); // unblock a reader mid-send so it can exit
-        drop(sorted_tx); // close the writer's queue
-        let write_result = match writer.join() {
-            Ok(r) => r,
-            Err(p) => std::panic::resume_unwind(p),
+            drop(chunk_rx); // unblock a reader mid-send so it can exit
+            match failed {
+                Some(e) => Err(e),
+                None => Ok(runs),
+            }
+        } else {
+            let (sorted_tx, sorted_rx) = mpsc::sync_channel::<Vec<K>>(0);
+
+            // Writer: spills sorted chunks in arrival order. An IO error
+            // ends the loop; dropping sorted_rx then unblocks the
+            // sorter's send.
+            let spill = &mut *spill;
+            let writer = scope.spawn(move || -> io::Result<Vec<RunFile>> {
+                let mut runs = Vec::new();
+                for chunk in sorted_rx.iter() {
+                    runs.push(spill_run(&chunk, spill.next_run_path(), io_buffer, codec, io)?);
+                }
+                Ok(runs)
+            });
+
+            // Sorter: this thread — model training and the pool-parallel
+            // sort.
+            loop {
+                let msg = match chunk_rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break, // reader done (EOF or after an error)
+                };
+                let mut chunk = match msg {
+                    Ok(c) => c,
+                    Err(e) => {
+                        source_err = Some(e);
+                        break;
+                    }
+                };
+                sorter.sort_chunk(&mut chunk);
+                if sorted_tx.send(chunk).is_err() {
+                    break; // writer failed; its join below reports the cause
+                }
+            }
+            drop(chunk_rx); // unblock a reader mid-send so it can exit
+            drop(sorted_tx); // close the writer's queue
+            match writer.join() {
+                Ok(r) => r,
+                Err(p) => std::panic::resume_unwind(p),
+            }
         };
         if let Err(p) = reader.join() {
             std::panic::resume_unwind(p);
@@ -633,7 +685,7 @@ mod tests {
             Ok(if chunk.is_empty() { None } else { Some(chunk) })
         };
         let mut spill = SpillDir::create(None).unwrap();
-        let gen = generate_runs(src, &mut spill, cfg).unwrap();
+        let gen = generate_runs(src, &mut spill, cfg, &IoCtx::sync()).unwrap();
         (gen.runs, gen.stats, spill)
     }
 
@@ -736,7 +788,7 @@ mod tests {
             Ok(if chunk.is_empty() { None } else { Some(chunk) })
         };
         let mut spill = SpillDir::create(None).unwrap();
-        let gen = generate_runs(src, &mut spill, &cfg).unwrap();
+        let gen = generate_runs(src, &mut spill, &cfg, &IoCtx::sync()).unwrap();
         assert_eq!(gen.stats.fallback_chunks, 2);
         let s = &gen.fallback_sample;
         assert_eq!(s.len(), 2 * 1024, "one reservoir draw per fallback chunk");
@@ -756,7 +808,7 @@ mod tests {
             Ok(if chunk.is_empty() { None } else { Some(chunk) })
         };
         let mut spill = SpillDir::create(None).unwrap();
-        let gen = generate_runs(src, &mut spill, &cfg).unwrap();
+        let gen = generate_runs(src, &mut spill, &cfg, &IoCtx::sync()).unwrap();
         assert_eq!(gen.stats.fallback_chunks, 0);
         assert!(gen.fallback_sample.is_empty());
     }
@@ -781,7 +833,7 @@ mod tests {
             Ok(if chunk.is_empty() { None } else { Some(chunk) })
         };
         let mut spill = SpillDir::create(None).unwrap();
-        let gen = generate_runs(src, &mut spill, &cfg).unwrap();
+        let gen = generate_runs(src, &mut spill, &cfg, &IoCtx::sync()).unwrap();
         assert!(gen.stats.rmi_trained);
         assert_eq!(gen.stats.retrains, 1, "one regime change, one retrain");
         assert_eq!(gen.stats.learned_chunks, 4, "retrain keeps every chunk learned");
@@ -937,7 +989,7 @@ mod tests {
             Ok(if chunk.is_empty() { None } else { Some(chunk) })
         };
         let mut spill = SpillDir::create(None).unwrap();
-        let gen = generate_runs(src, &mut spill, &cfg).unwrap();
+        let gen = generate_runs(src, &mut spill, &cfg, &IoCtx::sync()).unwrap();
         assert!(!gen.stats.rmi_trained, "first chunk must not train");
         assert_eq!(gen.stats.retrains, 1, "first model installs mid-stream");
         assert_eq!(gen.models.len(), 1);
@@ -1030,7 +1082,7 @@ mod tests {
             threads: 2,
             ..ExternalConfig::default()
         };
-        let err = generate_runs::<u64, _>(src, &mut spill, &cfg).unwrap_err();
+        let err = generate_runs::<u64, _>(src, &mut spill, &cfg, &IoCtx::sync()).unwrap_err();
         assert_eq!(err.to_string(), "source failed");
     }
 
@@ -1049,7 +1101,7 @@ mod tests {
             threads: 2,
             ..ExternalConfig::default()
         };
-        let gen = generate_runs(src, &mut spill, &cfg).unwrap();
+        let gen = generate_runs(src, &mut spill, &cfg, &IoCtx::sync()).unwrap();
         assert!(gen.stats.rmi_trained);
         assert_eq!(gen.models.len(), 1, "trained model must reach the merge");
         assert!(gen.run_epochs.iter().all(|&e| e == 0), "single epoch");

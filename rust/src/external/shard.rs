@@ -40,18 +40,22 @@
 //! The same plan/merge machinery serves two call sites: the **final pass**
 //! ([`merge_sharded`] over all surviving runs into the output file) and
 //! the **intermediate passes** (the driver shards each merge *group* when
-//! it has threads to spare — see `external::merge_pass`). Each shard's
-//! output is double-buffered: a flusher thread seek-writes one full buffer
-//! while the merge loop fills the other.
+//! it has threads to spare — see `external::merge_pass`). Each shard
+//! writes its disjoint output range through a
+//! [`SpillSink`](crate::external::io::SpillSink) positioned at the
+//! shard's byte offset: on the pool backend full buffers drain on the IO
+//! workers while the merge loop keeps comparing (what a per-shard
+//! flusher thread used to do by hand), and on the sync backend they are
+//! issued inline as positioned writes.
 
-use std::fs::OpenOptions;
-use std::io::{self, Seek, SeekFrom, Write};
+use std::io;
 use std::path::Path;
-use std::sync::{mpsc, Mutex};
+use std::sync::Mutex;
 
 use crate::external::config::ExternalConfig;
-use crate::external::loser_tree::LoserTree;
-use crate::external::spill::{self, BlockDirectory, RunFile, RunIndex, RunReader, HEADER_LEN};
+use crate::external::io::{IoCtx, SpillSink};
+use crate::external::loser_tree::{open_merge_sources, LoserTree, MergeSource};
+use crate::external::spill::{self, BlockDirectory, RunFile, RunIndex, SpillHeader, HEADER_LEN};
 use crate::key::SortKey;
 use crate::rmi::model::Rmi;
 use crate::rmi::quality;
@@ -73,6 +77,10 @@ pub struct ShardPlan {
     /// range-opens reuse it so each shard seeks straight to its first
     /// block instead of re-walking every block header before it.
     dirs: Vec<Option<BlockDirectory>>,
+    /// Per run, the spill header the planner decoded (`None` only for
+    /// headerless v0 files). The merge's range-opens reuse it so each
+    /// shard skips the per-source header re-read.
+    headers: Vec<Option<SpillHeader>>,
 }
 
 impl ShardPlan {
@@ -169,6 +177,7 @@ pub fn plan_shards<K: SortKey>(
 
     let mut offsets = Vec::with_capacity(runs.len());
     let mut dirs = Vec::with_capacity(runs.len());
+    let mut headers = Vec::with_capacity(runs.len());
     for run in runs {
         let mut idx = RunIndex::<K>::open(&run.path)?;
         let mut offs = Vec::with_capacity(p + 1);
@@ -185,7 +194,9 @@ pub fn plan_shards<K: SortKey>(
             }
         }
         offsets.push(offs);
-        // keep the index's block directory for the merge's range-opens
+        // keep the index's header and block directory for the merge's
+        // range-opens
+        headers.push(idx.header());
         dirs.push(idx.into_directory());
     }
 
@@ -200,6 +211,7 @@ pub fn plan_shards<K: SortKey>(
         offsets,
         shard_keys,
         dirs,
+        headers,
     };
     crate::obs::metrics::observe(
         crate::obs::M_SHARD_SKEW,
@@ -219,6 +231,7 @@ pub fn merge_sharded<K: SortKey>(
     output: &Path,
     cfg: &ExternalConfig,
     threads: usize,
+    io: &IoCtx,
 ) -> io::Result<u64> {
     let p = plan.shards();
     let total = plan.total_keys();
@@ -227,8 +240,8 @@ pub fn merge_sharded<K: SortKey>(
     spill::create_presized::<K>(output, total)?;
     let out_key_off = plan.out_key_offsets();
     // Up to `threads` shards in flight, each with `runs.len()` readers and
-    // one double-buffered writer: scale the per-stream buffer so the whole
-    // merge stays within one io-buffer budget per worker.
+    // one output sink: scale the per-stream buffer so the whole merge
+    // stays within one io-buffer budget per worker.
     let buf = (cfg.effective_io_buffer() / threads.max(1)).max(4096);
 
     let first_err: Mutex<Option<io::Error>> = Mutex::new(None);
@@ -237,7 +250,7 @@ pub fn merge_sharded<K: SortKey>(
         if first_err.lock().unwrap().is_some() {
             return; // a shard already failed; drain the queue cheaply
         }
-        if let Err(e) = merge_one_shard::<K>(runs, plan, s, out_key_off[s], output, buf) {
+        if let Err(e) = merge_one_shard::<K>(runs, plan, s, out_key_off[s], output, buf, io) {
             let mut slot = first_err.lock().unwrap();
             if slot.is_none() {
                 *slot = Some(e);
@@ -252,10 +265,12 @@ pub fn merge_sharded<K: SortKey>(
 
 /// Merge shard `s` of every run into the output range starting at key
 /// offset `out_key_off` (an index into the payload; the header offset is
-/// added here). The output write is **double-buffered**: a flusher thread
-/// owns the file handle and seek-writes one full buffer while the merge
-/// loop fills the other, so disk latency no longer serializes behind the
-/// comparison work (mirroring run generation's reader/writer threads).
+/// added here). The output goes through a [`SpillSink`] positioned at
+/// the shard's byte offset: the sink buffers full blocks and, on the
+/// pool backend, submits them to the IO workers so disk time overlaps
+/// the comparison work — replacing the hand-rolled per-shard flusher
+/// thread. Sources are opened through [`open_merge_sources`], which
+/// reuses the plan's cached headers and block directories.
 pub(crate) fn merge_one_shard<K: SortKey>(
     runs: &[RunFile],
     plan: &ShardPlan,
@@ -263,6 +278,7 @@ pub(crate) fn merge_one_shard<K: SortKey>(
     out_key_off: u64,
     output: &Path,
     io_buffer: usize,
+    io: &IoCtx,
 ) -> io::Result<()> {
     // scoped span over the whole shard merge (keys + output bytes)
     let _span = crate::obs::trace::span_n(
@@ -270,97 +286,40 @@ pub(crate) fn merge_one_shard<K: SortKey>(
         plan.shard_keys[s],
         plan.shard_keys[s] * K::WIDTH as u64,
     );
-    let mut sources = Vec::new();
-    for ((run, offs), dir) in runs.iter().zip(&plan.offsets).zip(&plan.dirs) {
-        let (lo, hi) = (offs[s], offs[s + 1]);
-        if hi > lo {
-            sources.push(RunReader::<K>::open_range_with(
-                &run.path,
-                lo,
-                hi - lo,
-                io_buffer,
-                dir.as_ref(),
-            )?);
-        }
-    }
-    let mut tree = LoserTree::new(sources)?;
+    let specs: Vec<MergeSource<'_>> = runs
+        .iter()
+        .zip(&plan.offsets)
+        .zip(&plan.dirs)
+        .zip(&plan.headers)
+        .map(|(((run, offs), dir), header)| MergeSource {
+            path: &run.path,
+            start: offs[s],
+            len: offs[s + 1] - offs[s],
+            dir: dir.as_ref(),
+            header: header.as_ref(),
+        })
+        .collect();
+    let mut tree = LoserTree::new(open_merge_sources::<K>(&specs, io_buffer, io)?)?;
     let byte_off = HEADER_LEN as u64 + out_key_off * K::WIDTH as u64;
-    let cap = io_buffer.max(4096);
-
-    std::thread::scope(|scope| -> io::Result<()> {
-        // Rendezvous on full buffers (at most one queued ⇒ two in flight
-        // total: the one being filled and the one being written); emptied
-        // buffers come back on the free channel for reuse.
-        let (full_tx, full_rx) = mpsc::sync_channel::<Vec<u8>>(1);
-        let (free_tx, free_rx) = mpsc::channel::<Vec<u8>>();
-        let flusher = scope.spawn(move || -> io::Result<u64> {
-            let mut out = OpenOptions::new().write(true).open(output)?;
-            out.seek(SeekFrom::Start(byte_off))?;
-            let mut written = 0u64;
-            for buf in full_rx.iter() {
-                out.write_all(&buf)?;
-                written += buf.len() as u64;
-                let mut b = buf;
-                b.clear();
-                let _ = free_tx.send(b); // merge may already have finished
-            }
-            Ok(written)
-        });
-
-        let mut merge_err: Option<io::Error> = None;
-        let mut pushed = 0u64;
-        let mut buf: Vec<u8> = Vec::with_capacity(cap + K::WIDTH);
-        let mut spare: Option<Vec<u8>> = Some(Vec::with_capacity(cap + K::WIDTH));
-        loop {
-            match tree.next() {
-                Err(e) => {
-                    merge_err = Some(e);
-                    break;
-                }
-                Ok(None) => break,
-                Ok(Some(k)) => {
-                    buf.extend_from_slice(k.to_le_bytes().as_ref());
-                    pushed += 1;
-                    if buf.len() >= cap {
-                        let next = match spare.take() {
-                            Some(b) => b,
-                            // recycle the flushed buffer; a closed channel
-                            // means the flusher died on an IO error, which
-                            // its join below reports
-                            None => match free_rx.recv() {
-                                Ok(b) => b,
-                                Err(_) => break,
-                            },
-                        };
-                        if full_tx.send(std::mem::replace(&mut buf, next)).is_err() {
-                            break;
-                        }
-                    }
-                }
-            }
-        }
-        if merge_err.is_none() && !buf.is_empty() {
-            let _ = full_tx.send(std::mem::take(&mut buf));
-        }
-        drop(full_tx); // close the flusher's queue so it can finish
-        let flushed = match flusher.join() {
-            Ok(r) => r,
-            Err(p) => std::panic::resume_unwind(p),
-        };
-        if let Some(e) = merge_err {
-            return Err(e);
-        }
-        let flushed = flushed?;
-        debug_assert_eq!(pushed, plan.shard_keys[s]);
-        debug_assert_eq!(flushed, plan.shard_keys[s] * K::WIDTH as u64);
-        Ok(())
-    })
+    // Interior offsets are unaligned and the bytes are final output, so
+    // direct mode never applies here (append_at enforces that).
+    let mut sink = SpillSink::append_at(output, byte_off, io_buffer.max(4096), io)?;
+    let mut pushed = 0u64;
+    while let Some(k) = tree.next()? {
+        sink.write_all(k.to_le_bytes().as_ref())?;
+        pushed += 1;
+    }
+    let pad = sink.seal()?;
+    debug_assert_eq!(pad, 0);
+    debug_assert_eq!(pushed, plan.shard_keys[s]);
+    debug_assert_eq!(sink.position(), plan.shard_keys[s] * K::WIDTH as u64);
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::external::spill::{read_keys_file, write_keys_file};
+    use crate::external::spill::{read_keys_file, write_keys_file, RunReader};
     use crate::rmi::model::RmiConfig;
     use crate::util::rng::Xoshiro256pp;
 
@@ -404,7 +363,7 @@ mod tests {
         assert!(plan.skew() < 2.0, "skew={}", plan.skew());
 
         let out = tmp("flat-out.bin");
-        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 4).unwrap();
+        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 4, &IoCtx::sync()).unwrap();
         assert_eq!(n, all.len() as u64);
         all.sort_unstable_by(f64::total_cmp);
         let got = read_keys_file::<f64>(&out).unwrap();
@@ -431,7 +390,7 @@ mod tests {
         assert!(plan.skew() > 3.9, "skew={}", plan.skew());
 
         let out = tmp("dup-out.bin");
-        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 4).unwrap();
+        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 4, &IoCtx::sync()).unwrap();
         assert_eq!(n, 5000);
         let got = read_keys_file::<f64>(&out).unwrap();
         assert_eq!(got.len(), 5000);
@@ -455,7 +414,7 @@ mod tests {
         assert_eq!(plan.total_keys(), 5000);
 
         let out = tmp("empty-out.bin");
-        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 4).unwrap();
+        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 4, &IoCtx::sync()).unwrap();
         assert_eq!(n, 5000);
         all.sort_unstable_by(f64::total_cmp);
         let got = read_keys_file::<f64>(&out).unwrap();
@@ -501,7 +460,7 @@ mod tests {
         );
 
         let out = tmp("mix-out.bin");
-        let n = merge_sharded::<f64>(&runs, &mixed, &out, &ExternalConfig::default(), 4).unwrap();
+        let n = merge_sharded::<f64>(&runs, &mixed, &out, &ExternalConfig::default(), 4, &IoCtx::sync()).unwrap();
         assert_eq!(n, 8000);
         all.sort_unstable_by(f64::total_cmp);
         let got = read_keys_file::<f64>(&out).unwrap();
@@ -526,7 +485,7 @@ mod tests {
         let plan = plan_shards::<f64>(&[(&rmi, 1.0)], None, &runs, 4).unwrap();
         assert_eq!(plan.total_keys(), 3000);
         let out = tmp("er-out.bin");
-        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 2).unwrap();
+        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 2, &IoCtx::sync()).unwrap();
         assert_eq!(n, 3000);
         let mut want = keys;
         want.sort_unstable_by(f64::total_cmp);
@@ -555,7 +514,7 @@ mod tests {
         assert!((plan.skew() - 1.0).abs() < 1e-12);
 
         let sharded_out = tmp("p1-sharded.bin");
-        merge_sharded::<f64>(&runs, &plan, &sharded_out, &ExternalConfig::default(), 2).unwrap();
+        merge_sharded::<f64>(&runs, &plan, &sharded_out, &ExternalConfig::default(), 2, &IoCtx::sync()).unwrap();
 
         // serial reference: one loser tree over full-range readers
         let serial_out = tmp("p1-serial.bin");
@@ -625,8 +584,8 @@ mod tests {
         let raw_out = tmp("codec-raw-out.bin");
         let delta_out = tmp("codec-delta-out.bin");
         let cfg = ExternalConfig::default();
-        let a = merge_sharded::<f64>(&raw_runs, &raw_plan, &raw_out, &cfg, 3).unwrap();
-        let b = merge_sharded::<f64>(&delta_runs, &delta_plan, &delta_out, &cfg, 3).unwrap();
+        let a = merge_sharded::<f64>(&raw_runs, &raw_plan, &raw_out, &cfg, 3, &IoCtx::sync()).unwrap();
+        let b = merge_sharded::<f64>(&delta_runs, &delta_plan, &delta_out, &cfg, 3, &IoCtx::sync()).unwrap();
         assert_eq!(a, b);
         assert_eq!(
             std::fs::read(&raw_out).unwrap(),
@@ -679,7 +638,7 @@ mod tests {
         assert!(stale.skew() > 2.5, "stale skew {}", stale.skew());
         let out = tmp("fw-out.bin");
         let cfg = ExternalConfig::default();
-        let n = merge_sharded::<f64>(&runs, &faithful, &out, &cfg, 4).unwrap();
+        let n = merge_sharded::<f64>(&runs, &faithful, &out, &cfg, 4, &IoCtx::sync()).unwrap();
         assert_eq!(n, 16_000);
         cleanup(&runs, &out);
     }
@@ -732,7 +691,7 @@ mod tests {
             seen.skew()
         );
         let out = tmp("fbc-out.bin");
-        let n = merge_sharded::<f64>(&runs, &seen, &out, &ExternalConfig::default(), 4).unwrap();
+        let n = merge_sharded::<f64>(&runs, &seen, &out, &ExternalConfig::default(), 4, &IoCtx::sync()).unwrap();
         assert_eq!(n, 12_000);
         all.sort_unstable_by(f64::total_cmp);
         let got = read_keys_file::<f64>(&out).unwrap();
@@ -754,7 +713,7 @@ mod tests {
         let runs = vec![spill_sorted("cut-0", keys.clone())];
         let plan = plan_shards::<f64>(&[(&rmi, 1.0)], None, &runs, 2).unwrap();
         let out = tmp("cut-out.bin");
-        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 2).unwrap();
+        let n = merge_sharded::<f64>(&runs, &plan, &out, &ExternalConfig::default(), 2, &IoCtx::sync()).unwrap();
         assert_eq!(n, 500);
         keys.sort_unstable_by(f64::total_cmp);
         let got = read_keys_file::<f64>(&out).unwrap();

@@ -1,6 +1,7 @@
-//! Spill codec and run files — the IO substrate of the external sorter.
+//! Spill codec and run files — the on-disk formats of the external
+//! sorter (the byte-moving machinery lives in [`crate::external::io`]).
 //!
-//! Two payload codecs share one self-describing container:
+//! Three payload codecs share one self-describing container:
 //!
 //! * **Raw** (format v1): keys as fixed-width little-endian values in
 //!   their *native* encoding ([`SortKey::to_le_bytes`]), `K::WIDTH` bytes
@@ -14,6 +15,10 @@
 //!   collapse into run-length escapes — dup-heavy spills (zipf,
 //!   timestamps, sales plateaus) shrink well below `n × WIDTH` bytes,
 //!   which is exactly where the IO-bound merge spends its time.
+//! * **Zigzag** (format v3): *unsorted* keys in the same block framing,
+//!   with deltas zigzag-mapped into the varint token space so negative
+//!   steps stay cheap. `gen` outputs ship compressed without the
+//!   sorted-run precondition; the run/merge paths never produce v3.
 //!
 //! All four [`SortKey`] domains (`u64`/`f64` at 8 bytes, `u32`/`f32` at 4)
 //! flow through both codecs.
@@ -29,7 +34,7 @@
 //! | 8      | 2    | format version (little-endian; dispatches the payload codec) |
 //! | 10     | 1    | key-type tag ([`KeyKind::tag`]: 0=u64, 1=f64, 2=u32, 3=f32) |
 //! | 11     | 1    | key width in bytes (redundant with the tag; cross-checked) |
-//! | 12     | 4    | reserved (zero) |
+//! | 12     | 4    | direct-IO pad: trailing zero bytes past the payload (LE; 0 unless `O_DIRECT` wrote the file) |
 //! | 16     | 8    | key count (little-endian) |
 //!
 //! Version table ([`SpillVersion`] dispatches readers off the version
@@ -45,6 +50,10 @@
 //! * **v2** ([`DELTA_VERSION`]) — header above + a sequence of delta
 //!   blocks holding `count` keys total. Requires nondecreasing keys
 //!   (sorted runs); [`RunWriter`] rejects out-of-order pushes.
+//! * **v3** ([`ZIGZAG_VERSION`]) — the same block layout with the delta
+//!   token carrying `zigzag(next − prev)` over the ordered-bits space
+//!   (wrapping arithmetic), so any key order encodes. v3 files stream
+//!   and sort like any input but have no sorted-run index.
 //!
 //! # v2 block layout
 //!
@@ -57,7 +66,8 @@
 //!
 //! Payload tokens (LEB128 varints over the ordered-bits space):
 //!
-//! * `d ≥ 1` — next key = previous key + `d`;
+//! * `d ≥ 1` — v2: next key = previous key + `d`; v3: next key =
+//!   previous key `+ unzigzag(d)` (wrapping);
 //! * `0` followed by `r ≥ 1` — the previous key repeats `r` more times
 //!   (the duplicate-run escape: a plateau of `m` equal keys costs
 //!   `1 + varint(m)` bytes instead of `m × WIDTH`).
@@ -68,13 +78,28 @@
 //! [`RunReader::open_range`] skips whole blocks without decoding them, so
 //! the sharded merge's cut-offset searches stay `O(log blocks)` +
 //! one-block decodes.
+//!
+//! # Block side-cars
+//!
+//! A v2 run written by the spill path carries a sibling `<run>.bin.idx`
+//! file: a 24-byte header (magic `b"AIPSIDX\0"`, version `u16`, key
+//! width `u8`, reserved `u8`, block count `u32`, key count `u64`) and
+//! one 32-byte entry per block — `first_bits u64 | last_bits u64 |
+//! payload_offset u64 | count u32 | payload_len u32`. The side-car gives
+//! [`RunIndex`] the block directory without walking block headers, and
+//! its *exact* per-block maxima let shard-boundary searches and narrow
+//! range-opens skip whole blocks without decoding them
+//! (`shard.blocks.skipped`). Side-cars are advisory: a missing, stale or
+//! malformed one falls back to the header walk (`shard.sidecar.miss`),
+//! so pre-side-car v2 files keep merging unchanged.
 
 use std::fs::File;
-use std::io::{self, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::io::{self, BufReader, Read, Seek, SeekFrom, Write};
 use std::marker::PhantomData;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::external::io::{IoCtx, PoolReader, SpillRead, SpillSink};
 use crate::key::{KeyKind, SortKey};
 
 /// Magic prefix of self-describing (v1+) key files.
@@ -86,8 +111,11 @@ pub const RAW_VERSION: u16 = 1;
 /// Format version of delta+varint block-compressed run files.
 pub const DELTA_VERSION: u16 = 2;
 
+/// Format version of zigzag+varint block-compressed (unsorted) files.
+pub const ZIGZAG_VERSION: u16 = 3;
+
 /// Newest spill-format version this build understands.
-pub const FORMAT_VERSION: u16 = DELTA_VERSION;
+pub const FORMAT_VERSION: u16 = ZIGZAG_VERSION;
 
 /// Bytes of header preceding the key payload in v1+ files.
 pub const HEADER_LEN: usize = 24;
@@ -112,6 +140,10 @@ pub enum SpillCodec {
     /// Delta+varint blocks (format v2) — sorted runs only; shrinks
     /// duplicate-heavy and small-gap spills well below `WIDTH` bytes/key.
     Delta,
+    /// Zigzag+varint blocks (format v3) — any key order; `gen` outputs
+    /// ship compressed without the sorted-run precondition. Never
+    /// produced by the run/merge paths.
+    Zigzag,
 }
 
 impl SpillCodec {
@@ -120,6 +152,7 @@ impl SpillCodec {
         match self {
             SpillCodec::Raw => RAW_VERSION,
             SpillCodec::Delta => DELTA_VERSION,
+            SpillCodec::Zigzag => ZIGZAG_VERSION,
         }
     }
 
@@ -128,14 +161,16 @@ impl SpillCodec {
         match self {
             SpillCodec::Raw => "raw",
             SpillCodec::Delta => "delta",
+            SpillCodec::Zigzag => "zigzag",
         }
     }
 
-    /// Parse a CLI spelling (`raw`, `delta`).
+    /// Parse a CLI spelling (`raw`, `delta`, `zigzag`).
     pub fn parse(s: &str) -> Option<SpillCodec> {
         match s {
             "raw" => Some(SpillCodec::Raw),
             "delta" => Some(SpillCodec::Delta),
+            "zigzag" => Some(SpillCodec::Zigzag),
             _ => None,
         }
     }
@@ -160,6 +195,8 @@ pub enum SpillVersion {
     V1,
     /// Delta+varint blocks behind the v2 header.
     V2,
+    /// Zigzag+varint blocks behind the v3 header (unsorted-capable).
+    V3,
 }
 
 impl SpillVersion {
@@ -169,7 +206,19 @@ impl SpillVersion {
         match version {
             1 => Some(SpillVersion::V1),
             2 => Some(SpillVersion::V2),
+            3 => Some(SpillVersion::V3),
             _ => None,
+        }
+    }
+
+    /// The header version field this layout is spelled as (0 for the
+    /// headerless legacy format).
+    pub const fn code(self) -> u16 {
+        match self {
+            SpillVersion::V0 => 0,
+            SpillVersion::V1 => RAW_VERSION,
+            SpillVersion::V2 => DELTA_VERSION,
+            SpillVersion::V3 => ZIGZAG_VERSION,
         }
     }
 }
@@ -183,6 +232,12 @@ pub struct SpillHeader {
     pub kind: KeyKind,
     /// Keys in the payload.
     pub count: u64,
+    /// Trailing zero bytes past the payload — nonzero only when an
+    /// `O_DIRECT` writer rounded the file up to the IO alignment. Readers
+    /// subtract it from the file length everywhere the payload's byte
+    /// extent matters; pre-pad writers left these header bytes zero, so
+    /// old files decode as `pad == 0` unchanged.
+    pub pad: u32,
 }
 
 impl SpillHeader {
@@ -193,6 +248,7 @@ impl SpillHeader {
             version: RAW_VERSION,
             kind,
             count,
+            pad: 0,
         }
     }
 
@@ -202,6 +258,7 @@ impl SpillHeader {
             version: codec.version(),
             kind,
             count,
+            pad: 0,
         }
     }
 
@@ -217,6 +274,7 @@ impl SpillHeader {
         b[8..10].copy_from_slice(&self.version.to_le_bytes());
         b[10] = self.kind.tag();
         b[11] = self.kind.width() as u8;
+        b[12..16].copy_from_slice(&self.pad.to_le_bytes());
         b[16..24].copy_from_slice(&self.count.to_le_bytes());
         b
     }
@@ -249,11 +307,13 @@ impl SpillHeader {
                 kind.width()
             )));
         }
+        let pad = u32::from_le_bytes(b[12..16].try_into().unwrap());
         let count = u64::from_le_bytes(b[16..24].try_into().unwrap());
         Ok(SpillHeader {
             version,
             kind,
             count,
+            pad,
         })
     }
 }
@@ -310,13 +370,23 @@ struct KeyLayout {
     data_start: u64,
     /// Keys in the file.
     n: u64,
+    /// Direct-IO pad bytes past the payload (0 for v0 files).
+    pad: u64,
+}
+
+/// Byte length of a headered file's payload: the file length minus the
+/// header and the direct-IO pad, rejecting a pad the file cannot hold.
+fn payload_extent(h: &SpillHeader, len: u64, path: &Path) -> io::Result<u64> {
+    (len - HEADER_LEN as u64)
+        .checked_sub(h.pad as u64)
+        .ok_or_else(|| bad_data(path, "direct-IO pad larger than the file's payload"))
 }
 
 /// Check that a v1 file's byte length holds exactly the header's `count`
 /// keys (shared by [`resolve_layout`] and [`file_key_count`]).
 fn validate_payload_v1(h: &SpillHeader, len: u64, path: &Path) -> io::Result<()> {
     let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
-    let payload = len - HEADER_LEN as u64;
+    let payload = payload_extent(h, len, path)?;
     let expect = h.count.checked_mul(h.kind.width() as u64).ok_or_else(|| {
         bad(format!(
             "{}: absurd key count {} in spill header",
@@ -341,7 +411,7 @@ fn validate_payload_v1(h: &SpillHeader, len: u64, path: &Path) -> io::Result<()>
 /// by the block walk in [`file_key_count`]/[`RunIndex`] and by streaming
 /// reads).
 fn validate_payload_v2(h: &SpillHeader, len: u64, path: &Path) -> io::Result<()> {
-    let payload = len - HEADER_LEN as u64;
+    let payload = payload_extent(h, len, path)?;
     if h.count == 0 && payload != 0 {
         return Err(bad_data(
             path,
@@ -376,13 +446,14 @@ fn resolve_layout(file: &mut File, path: &Path, kind: KeyKind) -> io::Result<Key
             let version = h.spill_version();
             match version {
                 SpillVersion::V1 => validate_payload_v1(&h, len, path)?,
-                SpillVersion::V2 => validate_payload_v2(&h, len, path)?,
+                SpillVersion::V2 | SpillVersion::V3 => validate_payload_v2(&h, len, path)?,
                 SpillVersion::V0 => unreachable!("headered files are v1+"),
             }
             Ok(KeyLayout {
                 version,
                 data_start: HEADER_LEN as u64,
                 n: h.count,
+                pad: h.pad as u64,
             })
         }
         None => {
@@ -398,6 +469,7 @@ fn resolve_layout(file: &mut File, path: &Path, kind: KeyKind) -> io::Result<Key
                 version: SpillVersion::V0,
                 data_start: 0,
                 n: v0_key_count(len, path)?,
+                pad: 0,
             })
         }
     }
@@ -434,6 +506,19 @@ fn push_varint(out: &mut Vec<u8>, mut v: u64) {
         }
         out.push(b | 0x80);
     }
+}
+
+/// Map a signed delta into the varint token space (v3): interleaves
+/// negatives and positives so small steps of either sign stay short.
+/// `zigzag(d) == 0` iff `d == 0`, which the dup-run escape owns — a v3
+/// payload never encodes a zero delta as a plain token.
+fn zigzag(d: i64) -> u64 {
+    ((d << 1) ^ (d >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+fn unzigzag(t: u64) -> i64 {
+    ((t >> 1) as i64) ^ -((t & 1) as i64)
 }
 
 /// `read_exact` with truncation mapped to a clear block-level error.
@@ -552,6 +637,12 @@ fn decode_block_bits<K: SortKey>(
 struct BlockEntry {
     /// Ordered bits of the block's first (minimum) key.
     first_bits: u64,
+    /// Ordered bits of an upper bound on the block's last (maximum) key:
+    /// exact when the entry came from a side-car, the next block's
+    /// restart key (or `u64::MAX` for the final block) when derived from
+    /// a header walk. Skip decisions fire only when a bound exceeds this,
+    /// so an inexact bound degrades to a decode, never a wrong answer.
+    last_bits: u64,
     /// Key index of the block's first key within the file.
     start_idx: u64,
     /// Byte offset of the token payload (past the block header).
@@ -570,8 +661,14 @@ fn walk_v2_blocks(
     path: &Path,
     n: u64,
     width: usize,
+    pad: u64,
+    sorted: bool,
 ) -> io::Result<Vec<BlockEntry>> {
-    let len = file.metadata()?.len();
+    let len = file
+        .metadata()?
+        .len()
+        .checked_sub(pad)
+        .ok_or_else(|| bad_data(path, "direct-IO pad larger than the file's payload"))?;
     let mut pos = HEADER_LEN as u64;
     file.seek(SeekFrom::Start(pos))?;
     let mut blocks: Vec<BlockEntry> = Vec::new();
@@ -582,11 +679,17 @@ fn walk_v2_blocks(
         if pos + payload_len as u64 > len {
             return Err(bad_data(path, "truncated delta block payload"));
         }
-        if blocks.last().is_some_and(|prev| first_bits < prev.first_bits) {
+        if sorted && blocks.last().is_some_and(|prev| first_bits < prev.first_bits) {
             return Err(bad_data(path, "delta block restart keys out of order"));
+        }
+        // the walk never decodes payloads, so the per-block maximum is
+        // only bounded by the next block's restart (patched up below)
+        if let Some(prev) = blocks.last_mut() {
+            prev.last_bits = first_bits;
         }
         blocks.push(BlockEntry {
             first_bits,
+            last_bits: u64::MAX,
             start_idx,
             payload_offset: pos,
             count,
@@ -627,6 +730,110 @@ impl BlockDirectory {
     }
 }
 
+/// Magic prefix of block side-car (`.idx`) files.
+const SIDECAR_MAGIC: [u8; 8] = *b"AIPSIDX\0";
+
+/// Side-car format version.
+const SIDECAR_VERSION: u16 = 1;
+
+/// Bytes of side-car header (magic, version, width, reserved, block
+/// count, key count).
+const SIDECAR_HEADER_LEN: usize = 24;
+
+/// Bytes per side-car block entry.
+const SIDECAR_ENTRY_LEN: usize = 32;
+
+/// Location of a run's block side-car: the run path with `.idx`
+/// appended (not substituted — `run-000001.bin.idx` sits next to
+/// `run-000001.bin`).
+pub(crate) fn sidecar_path(run: &Path) -> PathBuf {
+    let mut s = run.as_os_str().to_os_string();
+    s.push(".idx");
+    PathBuf::from(s)
+}
+
+/// Write a run's block side-car. Callers treat failure as advisory
+/// (remove the partial file, keep the run).
+fn write_sidecar(run: &Path, width: usize, n: u64, blocks: &[BlockEntry]) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(SIDECAR_HEADER_LEN + blocks.len() * SIDECAR_ENTRY_LEN);
+    buf.extend_from_slice(&SIDECAR_MAGIC);
+    buf.extend_from_slice(&SIDECAR_VERSION.to_le_bytes());
+    buf.push(width as u8);
+    buf.push(0);
+    buf.extend_from_slice(&(blocks.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&n.to_le_bytes());
+    for e in blocks {
+        buf.extend_from_slice(&e.first_bits.to_le_bytes());
+        buf.extend_from_slice(&e.last_bits.to_le_bytes());
+        buf.extend_from_slice(&e.payload_offset.to_le_bytes());
+        buf.extend_from_slice(&e.count.to_le_bytes());
+        buf.extend_from_slice(&e.payload_len.to_le_bytes());
+    }
+    std::fs::write(sidecar_path(run), &buf)
+}
+
+/// Load and validate a run's block side-car against the run's header
+/// (`width`/`n`) and payload extent (`payload_len`, already pad-free).
+/// Any mismatch — missing file, framing that does not chain exactly
+/// through the payload, counts that disagree with the header, unordered
+/// or inconsistent key bounds — returns `None` and the caller falls back
+/// to the block-header walk, so a stale side-car can degrade performance
+/// but never correctness.
+fn load_sidecar(run: &Path, width: usize, n: u64, payload_len: u64) -> Option<Vec<BlockEntry>> {
+    let bytes = std::fs::read(sidecar_path(run)).ok()?;
+    if bytes.len() < SIDECAR_HEADER_LEN || bytes[..8] != SIDECAR_MAGIC {
+        return None;
+    }
+    if u16::from_le_bytes(bytes[8..10].try_into().unwrap()) != SIDECAR_VERSION
+        || bytes[10] as usize != width
+    {
+        return None;
+    }
+    let n_blocks = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    if u64::from_le_bytes(bytes[16..24].try_into().unwrap()) != n
+        || bytes.len() != SIDECAR_HEADER_LEN + n_blocks * SIDECAR_ENTRY_LEN
+    {
+        return None;
+    }
+    let mut blocks = Vec::with_capacity(n_blocks);
+    let mut start_idx = 0u64;
+    let mut expect_off = (HEADER_LEN + 8 + width) as u64;
+    for chunk in bytes[SIDECAR_HEADER_LEN..].chunks_exact(SIDECAR_ENTRY_LEN) {
+        let first_bits = u64::from_le_bytes(chunk[..8].try_into().unwrap());
+        let last_bits = u64::from_le_bytes(chunk[8..16].try_into().unwrap());
+        let payload_offset = u64::from_le_bytes(chunk[16..24].try_into().unwrap());
+        let count = u32::from_le_bytes(chunk[24..28].try_into().unwrap());
+        let plen = u32::from_le_bytes(chunk[28..32].try_into().unwrap());
+        let in_order = blocks
+            .last()
+            .is_none_or(|p: &BlockEntry| p.first_bits <= first_bits && p.last_bits <= first_bits);
+        if payload_offset != expect_off
+            || count == 0
+            || count as usize > BLOCK_KEYS
+            || first_bits > last_bits
+            || !in_order
+        {
+            return None;
+        }
+        blocks.push(BlockEntry {
+            first_bits,
+            last_bits,
+            start_idx,
+            payload_offset,
+            count,
+            payload_len: plen,
+        });
+        start_idx += count as u64;
+        expect_off += plen as u64 + (8 + width) as u64;
+    }
+    // the chained offsets must land exactly at the payload's end, and
+    // the per-block counts must sum to the header's promise
+    if start_idx != n || expect_off - (8 + width) as u64 != HEADER_LEN as u64 + payload_len {
+        return None;
+    }
+    Some(blocks)
+}
+
 /// A spilled run (or any key file) on disk.
 #[derive(Debug, Clone)]
 pub struct RunFile {
@@ -640,46 +847,76 @@ pub struct RunFile {
     pub bytes: u64,
 }
 
-/// Scratch directory owning the spilled runs of one sort; removed
-/// (best-effort) on drop.
+/// Scratch directories owning the spilled runs of one sort — one stripe
+/// per configured spill root, with run paths dealt round-robin across
+/// stripes so a multi-disk setup spreads spill bandwidth. All stripes
+/// are removed (best-effort) on drop.
 #[derive(Debug)]
 pub struct SpillDir {
-    dir: PathBuf,
+    dirs: Vec<PathBuf>,
     counter: u64,
 }
 
 impl SpillDir {
     /// Create a fresh uniquely-named scratch directory under `base`
-    /// (`None` = the OS temp dir).
+    /// (`None` = the OS temp dir) — the single-stripe case.
     pub fn create(base: Option<&Path>) -> io::Result<SpillDir> {
+        match base {
+            Some(b) => Self::create_striped(std::slice::from_ref(&b.to_path_buf())),
+            None => Self::create_striped(&[]),
+        }
+    }
+
+    /// Create one uniquely-named scratch directory under *each* root
+    /// (`[]` = one stripe in the OS temp dir). Every stripe of one sort
+    /// shares a sequence number; stripes are suffixed `-s0`, `-s1`, …
+    pub fn create_striped(roots: &[PathBuf]) -> io::Result<SpillDir> {
         static SEQ: AtomicU64 = AtomicU64::new(0);
-        let base = base
-            .map(Path::to_path_buf)
-            .unwrap_or_else(std::env::temp_dir);
-        let dir = base.join(format!(
-            "aipso-extsort-{}-{}",
-            std::process::id(),
-            SEQ.fetch_add(1, Ordering::Relaxed)
-        ));
-        std::fs::create_dir_all(&dir)?;
-        Ok(SpillDir { dir, counter: 0 })
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp;
+        let roots: &[PathBuf] = if roots.is_empty() {
+            tmp = [std::env::temp_dir()];
+            &tmp
+        } else {
+            roots
+        };
+        let mut dirs: Vec<PathBuf> = Vec::with_capacity(roots.len());
+        for (i, root) in roots.iter().enumerate() {
+            let dir = root.join(format!("aipso-extsort-{}-{seq}-s{i}", std::process::id()));
+            if let Err(e) = std::fs::create_dir_all(&dir) {
+                for made in &dirs {
+                    let _ = std::fs::remove_dir_all(made);
+                }
+                return Err(e);
+            }
+            dirs.push(dir);
+        }
+        Ok(SpillDir { dirs, counter: 0 })
     }
 
-    /// The scratch directory's location.
+    /// The first stripe's location (the only one in unstriped setups).
     pub fn path(&self) -> &Path {
-        &self.dir
+        &self.dirs[0]
     }
 
-    /// Fresh path for the next spilled run.
+    /// Number of stripes runs are dealt across.
+    pub fn num_stripes(&self) -> usize {
+        self.dirs.len()
+    }
+
+    /// Fresh path for the next spilled run, rotating across stripes.
     pub fn next_run_path(&mut self) -> PathBuf {
+        let dir = &self.dirs[(self.counter as usize) % self.dirs.len()];
         self.counter += 1;
-        self.dir.join(format!("run-{:06}.bin", self.counter))
+        dir.join(format!("run-{:06}.bin", self.counter))
     }
 }
 
 impl Drop for SpillDir {
     fn drop(&mut self) {
-        let _ = std::fs::remove_dir_all(&self.dir);
+        for dir in &self.dirs {
+            let _ = std::fs::remove_dir_all(dir);
+        }
     }
 }
 
@@ -701,20 +938,71 @@ struct DeltaState {
     pending_run: u64,
     /// The next emit is the block's restart key itself.
     emit_restart: bool,
+    /// Tokens carry zigzag-mapped signed deltas (v3) instead of plain
+    /// non-negative deltas (v2).
+    zigzag: bool,
+}
+
+impl DeltaState {
+    /// Fresh decoder state for the given payload layout.
+    fn for_version(version: SpillVersion) -> DeltaState {
+        DeltaState {
+            zigzag: version == SpillVersion::V3,
+            ..DeltaState::default()
+        }
+    }
 }
 
 /// Per-codec decoding state of a [`RunReader`].
 enum Dec {
     /// v0/v1 fixed-width keys.
     Raw,
-    /// v2 delta blocks.
+    /// v2/v3 delta blocks.
     Delta(DeltaState),
 }
 
-/// Decode the next key of a v2 stream (the caller tracks how many keys
-/// remain and never over-calls).
-fn next_delta<K: SortKey>(
-    r: &mut BufReader<File>,
+/// Byte source of a [`RunReader`]: a plain buffered reader (sync
+/// backend) or a pool-backed read-ahead stream (submission backend).
+enum Src {
+    Buf(BufReader<File>),
+    Pool(PoolReader),
+}
+
+impl Src {
+    /// Position the next read at absolute file offset `off`.
+    fn seek_abs(&mut self, off: u64) -> io::Result<()> {
+        match self {
+            Src::Buf(b) => b.seek(SeekFrom::Start(off)).map(|_| ()),
+            Src::Pool(p) => {
+                p.seek_to(off);
+                Ok(())
+            }
+        }
+    }
+}
+
+impl Read for Src {
+    fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Src::Buf(b) => b.read(out),
+            Src::Pool(p) => p.read(out),
+        }
+    }
+}
+
+impl SpillRead for Src {
+    fn seek_relative(&mut self, delta: i64) -> io::Result<()> {
+        match self {
+            Src::Buf(b) => b.seek_relative(delta),
+            Src::Pool(p) => SpillRead::seek_relative(p, delta),
+        }
+    }
+}
+
+/// Decode the next key of a v2/v3 stream (the caller tracks how many
+/// keys remain and never over-calls).
+fn next_delta<K: SortKey, R: SpillRead>(
+    r: &mut R,
     st: &mut DeltaState,
     path: &Path,
 ) -> io::Result<K> {
@@ -753,19 +1041,29 @@ fn next_delta<K: SortKey>(
         st.pending_run = run - 1;
         return Ok(K::from_bits_ordered(st.prev));
     }
-    let next = match st.prev.checked_add(d) {
-        Some(b) if b <= K::max_ordered_bits() => b,
-        _ => return Err(bad_data(path, "key delta overflows the key domain")),
+    let next = if st.zigzag {
+        // signed step over the ordered-bits space; exact mod 2^64, and
+        // the domain check catches narrow-width escapes on corrupt data
+        let b = st.prev.wrapping_add(unzigzag(d) as u64);
+        if b > K::max_ordered_bits() {
+            return Err(bad_data(path, "key delta overflows the key domain"));
+        }
+        b
+    } else {
+        match st.prev.checked_add(d) {
+            Some(b) if b <= K::max_ordered_bits() => b,
+            _ => return Err(bad_data(path, "key delta overflows the key domain")),
+        }
     };
     st.prev = next;
     Ok(K::from_bits_ordered(next))
 }
 
-/// Skip `skip` keys of a v2 stream positioned at a block boundary,
+/// Skip `skip` keys of a v2/v3 stream positioned at a block boundary,
 /// seeking over whole blocks (restart key + payload length — no decode)
 /// and decode-skipping only inside the final partial block.
-fn skip_delta<K: SortKey>(
-    r: &mut BufReader<File>,
+fn skip_delta<K: SortKey, R: SpillRead>(
+    r: &mut R,
     st: &mut DeltaState,
     path: &Path,
     mut skip: u64,
@@ -784,7 +1082,7 @@ fn skip_delta<K: SortKey>(
             st.pending_run = 0;
             st.emit_restart = true;
         }
-        next_delta::<K>(r, st, path)?;
+        next_delta::<K, R>(r, st, path)?;
         skip -= 1;
     }
     Ok(())
@@ -793,7 +1091,7 @@ fn skip_delta<K: SortKey>(
 /// Buffered streaming reader over a key file (any version — the payload
 /// codec is dispatched from the file's header).
 pub struct RunReader<K: SortKey> {
-    r: BufReader<File>,
+    r: Src,
     path: PathBuf,
     remaining: u64,
     dec: Dec,
@@ -836,22 +1134,58 @@ impl<K: SortKey> RunReader<K> {
         io_buffer: usize,
         dir: Option<&BlockDirectory>,
     ) -> io::Result<RunReader<K>> {
+        Self::open_range_ctx(path, start, len, io_buffer, dir, None, &IoCtx::sync())
+    }
+
+    /// The most general open: [`RunReader::open_range_with`] plus an
+    /// optional already-parsed header (skipping the per-source header
+    /// re-read when the shard planner validated the file moments ago)
+    /// and an [`IoCtx`] choosing the byte source — a plain buffered
+    /// reader, or pool-backed read-ahead on the submission backend.
+    pub(crate) fn open_range_ctx(
+        path: &Path,
+        start: u64,
+        len: u64,
+        io_buffer: usize,
+        dir: Option<&BlockDirectory>,
+        header: Option<&SpillHeader>,
+        io: &IoCtx,
+    ) -> io::Result<RunReader<K>> {
         let mut file = File::open(path)?;
-        let layout = resolve_layout(&mut file, path, K::KIND)?;
+        let layout = match header {
+            Some(h) => {
+                debug_assert_eq!(h.kind, K::KIND, "cached header for the wrong key type");
+                KeyLayout {
+                    version: h.spill_version(),
+                    data_start: HEADER_LEN as u64,
+                    n: h.count,
+                    pad: h.pad as u64,
+                }
+            }
+            None => resolve_layout(&mut file, path, K::KIND)?,
+        };
         let start = start.min(layout.n);
         let len = len.min(layout.n - start);
+        let mut src = match io.pool() {
+            Some(pool) => Src::Pool(PoolReader::new(
+                file,
+                io_buffer.max(4096),
+                std::sync::Arc::clone(pool),
+            )),
+            None => Src::Buf(BufReader::with_capacity(io_buffer.max(4096), file)),
+        };
         let dec = match layout.version {
             SpillVersion::V0 | SpillVersion::V1 => {
-                file.seek(SeekFrom::Start(layout.data_start + start * K::WIDTH as u64))?;
+                src.seek_abs(layout.data_start + start * K::WIDTH as u64)?;
                 Dec::Raw
             }
-            SpillVersion::V2 => {
-                file.seek(SeekFrom::Start(layout.data_start))?;
-                Dec::Delta(DeltaState::default())
+            v @ (SpillVersion::V2 | SpillVersion::V3) => {
+                src.seek_abs(layout.data_start)?;
+                Dec::Delta(DeltaState::for_version(v))
             }
         };
         let mut reader = RunReader {
-            r: BufReader::with_capacity(io_buffer.max(4096), file),
+            r: src,
             path: path.to_path_buf(),
             remaining: len,
             dec,
@@ -869,14 +1203,21 @@ impl<K: SortKey> RunReader<K> {
                         let b = d.blocks.partition_point(|e| e.start_idx <= skip) - 1;
                         let e = &d.blocks[b];
                         let header_off = e.payload_offset - (8 + K::WIDTH) as u64;
-                        reader.r.seek(SeekFrom::Start(header_off))?;
+                        reader.r.seek_abs(header_off)?;
                         skip -= e.start_idx;
                         crate::obs::metrics::counter_add(crate::obs::C_DIR_HIT, 1);
+                        // every block before the seek target or past the
+                        // range's end is never read, let alone decoded
+                        let end = d.blocks.partition_point(|e| e.start_idx < start + len);
+                        crate::obs::metrics::counter_add(
+                            crate::obs::C_BLOCKS_SKIPPED,
+                            (d.blocks.len() - (end - b)) as u64,
+                        );
                     }
                     None => crate::obs::metrics::counter_add(crate::obs::C_DIR_REWALK, 1),
                 }
             }
-            skip_delta::<K>(&mut reader.r, st, &reader.path, skip)?;
+            skip_delta::<K, Src>(&mut reader.r, st, &reader.path, skip)?;
         }
         Ok(reader)
     }
@@ -898,7 +1239,7 @@ impl<K: SortKey> RunReader<K> {
                 self.r.read_exact(buf.as_mut())?;
                 K::from_le_bytes(buf)
             }
-            Dec::Delta(st) => next_delta::<K>(&mut self.r, st, &self.path)?,
+            Dec::Delta(st) => next_delta::<K, Src>(&mut self.r, st, &self.path)?,
         };
         self.remaining -= 1;
         Ok(Some(key))
@@ -968,13 +1309,18 @@ pub struct RunIndex<K: SortKey> {
     file: File,
     path: PathBuf,
     n: u64,
+    header: Option<SpillHeader>,
     kind: IndexKind,
     _pd: PhantomData<K>,
 }
 
 impl<K: SortKey> RunIndex<K> {
-    /// Open a key file for random access. v2 files get their block
-    /// framing fully validated here (the walk that builds the directory).
+    /// Open a key file for random access. v2 files take their block
+    /// directory from the run's side-car when one validates
+    /// (`shard.sidecar.hit` — no header walk at all) and otherwise get
+    /// their block framing fully validated by the walk that builds the
+    /// directory (`shard.sidecar.miss`). v3 (zigzag) files are unsorted
+    /// and have no run index.
     pub fn open(path: &Path) -> io::Result<RunIndex<K>> {
         let mut file = File::open(path)?;
         let layout = resolve_layout(&mut file, path, K::KIND)?;
@@ -982,18 +1328,54 @@ impl<K: SortKey> RunIndex<K> {
             SpillVersion::V0 | SpillVersion::V1 => IndexKind::Raw {
                 data_start: layout.data_start,
             },
-            SpillVersion::V2 => IndexKind::Delta {
-                blocks: walk_v2_blocks(&mut file, path, layout.n, K::WIDTH)?,
-                cache: None,
-            },
+            SpillVersion::V2 => {
+                let payload = file.metadata()?.len() - HEADER_LEN as u64 - layout.pad;
+                let blocks = match load_sidecar(path, K::WIDTH, layout.n, payload) {
+                    Some(b) => {
+                        crate::obs::metrics::counter_add(crate::obs::C_SIDECAR_HIT, 1);
+                        b
+                    }
+                    None => {
+                        crate::obs::metrics::counter_add(crate::obs::C_SIDECAR_MISS, 1);
+                        walk_v2_blocks(&mut file, path, layout.n, K::WIDTH, layout.pad, true)?
+                    }
+                };
+                IndexKind::Delta {
+                    blocks,
+                    cache: None,
+                }
+            }
+            SpillVersion::V3 => {
+                return Err(bad_data(
+                    path,
+                    "zigzag (v3) files are unsorted and have no run index",
+                ))
+            }
+        };
+        let header = match layout.version {
+            SpillVersion::V0 => None,
+            v => Some(SpillHeader {
+                version: v.code(),
+                kind: K::KIND,
+                count: layout.n,
+                pad: layout.pad as u32,
+            }),
         };
         Ok(RunIndex {
             file,
             path: path.to_path_buf(),
             n: layout.n,
+            header,
             kind,
             _pd: PhantomData,
         })
+    }
+
+    /// The file's parsed header (`None` for headerless v0 files) — the
+    /// shard planner caches this so per-shard range-opens skip the
+    /// redundant header re-read.
+    pub(crate) fn header(&self) -> Option<SpillHeader> {
+        self.header
     }
 
     /// Number of keys in the file.
@@ -1071,7 +1453,9 @@ impl<K: SortKey> RunIndex<K> {
 
     /// v2 lower bound: restart keys are block minima of a sorted file, so
     /// the only block that can straddle the bound is the last one whose
-    /// restart key is below it.
+    /// restart key is below it. When the directory carries an exact
+    /// per-block maximum (side-car entries) and the bound clears it, the
+    /// answer is the next block's start — no decode at all.
     fn delta_lower_bound(&mut self, bound_bits: u64) -> io::Result<u64> {
         let (cand, cand_start) = {
             let IndexKind::Delta { blocks, .. } = &self.kind else {
@@ -1081,7 +1465,14 @@ impl<K: SortKey> RunIndex<K> {
             if p == 0 {
                 return Ok(0); // every block starts at or above the bound
             }
-            (p - 1, blocks[p - 1].start_idx)
+            let e = &blocks[p - 1];
+            if bound_bits > e.last_bits {
+                // every key of the candidate is under the bound; walk-
+                // derived bounds (next restart) can never satisfy this,
+                // so the shortcut only fires on side-car exact maxima
+                return Ok(e.start_idx + e.count as u64);
+            }
+            (p - 1, e.start_idx)
         };
         let bits = self.ensure_block(cand)?;
         let off = bits.partition_point(|&b| b < bound_bits) as u64;
@@ -1122,14 +1513,21 @@ struct DeltaBlock {
 
 /// Buffered streaming writer producing a [`RunFile`] in the configured
 /// codec: raw v1 (the default — the interchange format `gen --out`
-/// writes) or delta v2 for sorted runs ([`RunWriter::create_with`]).
+/// writes), delta v2 for sorted runs ([`RunWriter::create_with`]), or
+/// zigzag v3 for unsorted payloads ([`RunWriter::create_unsorted`]).
+/// Bytes move through a [`SpillSink`], so the same writer runs on the
+/// sync backend, the submission pool, and (spill-dir runs only)
+/// `O_DIRECT`.
 pub struct RunWriter<K: SortKey> {
-    w: BufWriter<File>,
+    sink: SpillSink,
     path: PathBuf,
     n: u64,
     bytes: u64,
     codec: SpillCodec,
     block: DeltaBlock,
+    /// `Some` = collect per-block bounds and write a `.idx` side-car at
+    /// finish (delta spill runs).
+    sidecar: Option<Vec<BlockEntry>>,
     _pd: PhantomData<K>,
 }
 
@@ -1143,21 +1541,87 @@ impl<K: SortKey> RunWriter<K> {
     /// [`RunWriter::create`] with an explicit codec. The delta codec
     /// requires nondecreasing keys (sorted runs) — an out-of-order push
     /// fails with `InvalidInput` rather than writing an undecodable file.
+    /// The zigzag codec is rejected here: sorted-run paths (spills,
+    /// merge outputs) must never produce v3 — use
+    /// [`RunWriter::create_unsorted`] for `gen`-style payloads.
     pub fn create_with(
         path: PathBuf,
         io_buffer: usize,
         codec: SpillCodec,
     ) -> io::Result<RunWriter<K>> {
-        let file = File::create(&path)?;
-        let mut w = BufWriter::with_capacity(io_buffer.max(4096), file);
-        w.write_all(&SpillHeader::for_codec(codec, K::KIND, 0).encode())?;
+        if codec == SpillCodec::Zigzag {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "{}: the zigzag codec is for unsorted payloads — sorted-run \
+                     writers take raw or delta",
+                    path.display()
+                ),
+            ));
+        }
+        Self::open_with(path, io_buffer, codec, &IoCtx::sync(), false, false)
+    }
+
+    /// Writer for *unsorted* payloads (`gen` outputs): raw v1 or zigzag
+    /// v3. The delta codec is rejected — it encodes sorted runs only.
+    pub fn create_unsorted(
+        path: PathBuf,
+        io_buffer: usize,
+        codec: SpillCodec,
+    ) -> io::Result<RunWriter<K>> {
+        if codec == SpillCodec::Delta {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "{}: the delta codec encodes sorted runs only — unsorted \
+                     payloads take raw or zigzag",
+                    path.display()
+                ),
+            ));
+        }
+        Self::open_with(path, io_buffer, codec, &IoCtx::sync(), false, false)
+    }
+
+    /// Spill-path writer: bytes flow through `io`'s backend, direct mode
+    /// is attempted when the context carries it, and delta runs write a
+    /// block side-car when `sidecar` is set. Zigzag is rejected exactly
+    /// as in [`RunWriter::create_with`] — spills are sorted runs.
+    pub(crate) fn create_io(
+        path: PathBuf,
+        io_buffer: usize,
+        codec: SpillCodec,
+        io: &IoCtx,
+        sidecar: bool,
+        allow_direct: bool,
+    ) -> io::Result<RunWriter<K>> {
+        if codec == SpillCodec::Zigzag {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("{}: spilled runs are sorted — zigzag is gen-only", path.display()),
+            ));
+        }
+        Self::open_with(path, io_buffer, codec, io, sidecar, allow_direct)
+    }
+
+    fn open_with(
+        path: PathBuf,
+        io_buffer: usize,
+        codec: SpillCodec,
+        io: &IoCtx,
+        sidecar: bool,
+        allow_direct: bool,
+    ) -> io::Result<RunWriter<K>> {
+        let mut sink = SpillSink::create(&path, io_buffer.max(4096), io, allow_direct)?;
+        sink.write_all(&SpillHeader::for_codec(codec, K::KIND, 0).encode())?;
+        let sidecar = (sidecar && codec == SpillCodec::Delta).then(Vec::new);
         Ok(RunWriter {
-            w,
+            sink,
             path,
             n: 0,
             bytes: HEADER_LEN as u64,
             codec,
             block: DeltaBlock::default(),
+            sidecar,
             _pd: PhantomData,
         })
     }
@@ -1167,12 +1631,39 @@ impl<K: SortKey> RunWriter<K> {
     pub fn push(&mut self, key: K) -> io::Result<()> {
         match self.codec {
             SpillCodec::Raw => {
-                self.w.write_all(key.to_le_bytes().as_ref())?;
+                self.sink.write_all(key.to_le_bytes().as_ref())?;
                 self.bytes += K::WIDTH as u64;
             }
             SpillCodec::Delta => self.push_delta(key.to_bits_ordered())?,
+            SpillCodec::Zigzag => self.push_zigzag(key.to_bits_ordered())?,
         }
         self.n += 1;
+        Ok(())
+    }
+
+    /// Zigzag-encode one key into the open block (v3 — any key order).
+    fn push_zigzag(&mut self, bits: u64) -> io::Result<()> {
+        let b = &mut self.block;
+        if b.count == 0 {
+            b.restart = bits;
+            b.prev = bits;
+            b.count = 1;
+        } else if bits == b.prev {
+            b.pending_run += 1;
+            b.count += 1;
+        } else {
+            if b.pending_run > 0 {
+                push_varint(&mut b.payload, 0);
+                push_varint(&mut b.payload, b.pending_run);
+                b.pending_run = 0;
+            }
+            push_varint(&mut b.payload, zigzag(bits.wrapping_sub(b.prev) as i64));
+            b.prev = bits;
+            b.count += 1;
+        }
+        if b.count as usize >= BLOCK_KEYS {
+            self.flush_block()?;
+        }
         Ok(())
     }
 
@@ -1212,7 +1703,8 @@ impl<K: SortKey> RunWriter<K> {
         Ok(())
     }
 
-    /// Write the open block (if any) and reset the encoder.
+    /// Write the open block (if any), record its side-car entry, and
+    /// reset the encoder.
     fn flush_block(&mut self) -> io::Result<()> {
         let b = &mut self.block;
         if b.count == 0 {
@@ -1223,10 +1715,25 @@ impl<K: SortKey> RunWriter<K> {
             push_varint(&mut b.payload, b.pending_run);
             b.pending_run = 0;
         }
-        self.w.write_all(&b.count.to_le_bytes())?;
-        self.w.write_all(&(b.payload.len() as u32).to_le_bytes())?;
-        self.w.write_all(&b.restart.to_le_bytes()[..K::WIDTH])?;
-        self.w.write_all(&b.payload)?;
+        self.sink.write_all(&b.count.to_le_bytes())?;
+        self.sink.write_all(&(b.payload.len() as u32).to_le_bytes())?;
+        self.sink.write_all(&b.restart.to_le_bytes()[..K::WIDTH])?;
+        self.sink.write_all(&b.payload)?;
+        if let Some(entries) = &mut self.sidecar {
+            let start_idx = entries
+                .last()
+                .map_or(0, |e| e.start_idx + e.count as u64);
+            entries.push(BlockEntry {
+                first_bits: b.restart,
+                // the writer knows the true block maximum — this is what
+                // makes side-car skips exact where walk bounds are not
+                last_bits: b.prev,
+                start_idx,
+                payload_offset: self.bytes + (8 + K::WIDTH) as u64,
+                count: b.count,
+                payload_len: b.payload.len() as u32,
+            });
+        }
         self.bytes += (8 + K::WIDTH + b.payload.len()) as u64;
         b.payload.clear();
         b.count = 0;
@@ -1237,7 +1744,7 @@ impl<K: SortKey> RunWriter<K> {
     /// mirroring `RunReader::read_chunk` (no per-key `write_all`); delta
     /// feeds the block encoder.
     pub fn write_slice(&mut self, keys: &[K]) -> io::Result<()> {
-        if self.codec == SpillCodec::Delta {
+        if self.codec != SpillCodec::Raw {
             for &k in keys {
                 self.push(k)?;
             }
@@ -1250,27 +1757,38 @@ impl<K: SortKey> RunWriter<K> {
             for (c, k) in bytes.chunks_exact_mut(K::WIDTH).zip(block) {
                 c.copy_from_slice(k.to_le_bytes().as_ref());
             }
-            self.w.write_all(bytes)?;
+            self.sink.write_all(bytes)?;
         }
         self.n += keys.len() as u64;
         self.bytes += (keys.len() * K::WIDTH) as u64;
         Ok(())
     }
 
-    /// Flush (including a partial final block), patch the real key count
-    /// into the header, and close, returning the finished run's metadata.
+    /// Flush (including a partial final block), seal the sink (padding
+    /// direct-mode files to the IO alignment), patch the real key count
+    /// and pad into the header, write the block side-car if one was
+    /// requested, and close, returning the finished run's metadata.
     pub fn finish(mut self) -> io::Result<RunFile> {
-        if self.codec == SpillCodec::Delta {
+        if self.codec != SpillCodec::Raw {
             self.flush_block()?;
         }
-        self.w.flush()?;
-        let file = self.w.get_mut();
-        file.seek(SeekFrom::Start(COUNT_OFFSET))?;
-        file.write_all(&self.n.to_le_bytes())?;
+        let pad = self.sink.seal()?;
+        // pad (bytes 12..16) and count (16..24) are contiguous — one patch
+        let mut tail = [0u8; 12];
+        tail[..4].copy_from_slice(&pad.to_le_bytes());
+        tail[4..].copy_from_slice(&self.n.to_le_bytes());
+        self.sink.patch(COUNT_OFFSET - 4, &tail)?;
+        if let Some(entries) = self.sidecar.take() {
+            // advisory: a run without a side-car merges fine, a partial
+            // side-car must not survive to mislead a reader
+            if write_sidecar(&self.path, K::WIDTH, self.n, &entries).is_err() {
+                let _ = std::fs::remove_file(sidecar_path(&self.path));
+            }
+        }
         Ok(RunFile {
             path: self.path,
             n: self.n,
-            bytes: self.bytes,
+            bytes: self.bytes + pad as u64,
         })
     }
 }
@@ -1310,7 +1828,21 @@ pub(crate) fn transcode_raw<K: SortKey>(
 
 /// Write a whole in-memory slice as a raw (v1) key file.
 pub fn write_keys_file<K: SortKey>(path: &Path, keys: &[K]) -> io::Result<RunFile> {
-    let mut w = RunWriter::create(path.to_path_buf(), 1 << 16)?;
+    write_keys_file_codec(path, keys, SpillCodec::Raw)
+}
+
+/// Write a whole in-memory slice as a key file in any codec. Raw and
+/// zigzag accept any key order; delta requires nondecreasing keys and
+/// fails with `InvalidInput` otherwise.
+pub fn write_keys_file_codec<K: SortKey>(
+    path: &Path,
+    keys: &[K],
+    codec: SpillCodec,
+) -> io::Result<RunFile> {
+    let mut w = match codec {
+        SpillCodec::Delta => RunWriter::create_with(path.to_path_buf(), 1 << 16, codec)?,
+        _ => RunWriter::create_unsorted(path.to_path_buf(), 1 << 16, codec)?,
+    };
     w.write_slice(keys)?;
     w.finish()
 }
@@ -1333,7 +1865,11 @@ pub fn file_key_count(path: &Path) -> io::Result<u64> {
             match h.spill_version() {
                 SpillVersion::V1 => validate_payload_v1(&h, len, path)?,
                 SpillVersion::V2 => {
-                    walk_v2_blocks(&mut file, path, h.count, h.kind.width())?;
+                    walk_v2_blocks(&mut file, path, h.count, h.kind.width(), h.pad as u64, true)?;
+                }
+                SpillVersion::V3 => {
+                    // same framing walk, minus the sorted-restart check
+                    walk_v2_blocks(&mut file, path, h.count, h.kind.width(), h.pad as u64, false)?;
                 }
                 SpillVersion::V0 => unreachable!("headered files are v1+"),
             }
@@ -1432,7 +1968,8 @@ mod tests {
             SpillHeader {
                 version: RAW_VERSION,
                 kind: KeyKind::U32,
-                count: 3
+                count: 3,
+                pad: 0
             }
         );
         assert_eq!(h.spill_version(), SpillVersion::V1);
@@ -1446,13 +1983,19 @@ mod tests {
     fn codec_and_version_tables_agree() {
         assert_eq!(SpillCodec::Raw.version(), RAW_VERSION);
         assert_eq!(SpillCodec::Delta.version(), DELTA_VERSION);
+        assert_eq!(SpillCodec::Zigzag.version(), ZIGZAG_VERSION);
         assert_eq!(SpillCodec::parse("raw"), Some(SpillCodec::Raw));
         assert_eq!(SpillCodec::parse("delta"), Some(SpillCodec::Delta));
+        assert_eq!(SpillCodec::parse("zigzag"), Some(SpillCodec::Zigzag));
         assert_eq!(SpillCodec::parse("zstd"), None);
         assert_eq!(SpillVersion::of(1), Some(SpillVersion::V1));
         assert_eq!(SpillVersion::of(2), Some(SpillVersion::V2));
+        assert_eq!(SpillVersion::of(3), Some(SpillVersion::V3));
         assert_eq!(SpillVersion::of(0), None);
-        assert_eq!(SpillVersion::of(3), None);
+        assert_eq!(SpillVersion::of(4), None);
+        for v in [SpillVersion::V1, SpillVersion::V2, SpillVersion::V3] {
+            assert_eq!(SpillVersion::of(v.code()), Some(v));
+        }
         let h = SpillHeader::for_codec(SpillCodec::Delta, KeyKind::F32, 9);
         assert_eq!(h.version, DELTA_VERSION);
         assert_eq!(h.spill_version(), SpillVersion::V2);
@@ -2056,5 +2599,291 @@ mod tests {
         assert_eq!(snap.counters.get(crate::obs::C_DIR_HIT), Some(&1));
         assert_eq!(snap.counters.get(crate::obs::C_DIR_REWALK), Some(&1));
         let _ = std::fs::remove_file(&p);
+    }
+
+    // -- direct-IO pad ----------------------------------------------------
+
+    #[test]
+    fn padded_v1_files_read_back_without_the_pad() {
+        let p = tmp("pad-v1.bin");
+        let keys = [3u64, 7, 9];
+        let mut h = SpillHeader::new(KeyKind::U64, 3);
+        h.pad = 16;
+        let mut bytes = h.encode().to_vec();
+        for k in keys {
+            bytes.extend_from_slice(&k.to_le_bytes());
+        }
+        bytes.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&p, &bytes).unwrap();
+        assert_eq!(read_header(&p).unwrap().unwrap().pad, 16);
+        assert_eq!(file_key_count(&p).unwrap(), 3);
+        assert_eq!(read_keys_file::<u64>(&p).unwrap(), keys);
+        // a pad the file cannot hold fails loudly
+        let mut h = SpillHeader::new(KeyKind::U64, 3);
+        h.pad = 10_000;
+        bytes[..HEADER_LEN].copy_from_slice(&h.encode());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_keys_file::<u64>(&p).unwrap_err();
+        assert!(err.to_string().contains("pad"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn padded_v2_files_walk_and_index_cleanly() {
+        let p = tmp("pad-v2.bin");
+        let keys: Vec<u64> = (0..(BLOCK_KEYS as u64 + 77)).map(|i| i * 5).collect();
+        write_delta(&p, &keys);
+        // append a fake pad and record it in the header
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.extend_from_slice(&[0u8; 24]);
+        bytes[12..16].copy_from_slice(&24u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert_eq!(file_key_count(&p).unwrap(), keys.len() as u64);
+        assert_eq!(read_keys_file::<u64>(&p).unwrap(), keys);
+        let mut idx = RunIndex::<u64>::open(&p).unwrap();
+        assert_eq!(idx.lower_bound(10).unwrap(), 2);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    // -- v3 zigzag codec ---------------------------------------------------
+
+    #[test]
+    fn zigzag_roundtrips_unsorted_keys_in_every_domain() {
+        let p = tmp("zz-rt.bin");
+
+        let keys: Vec<u64> = vec![9, 2, 2, 2, u64::MAX, 0, 5, 5, u64::MAX - 1];
+        let run = write_keys_file_codec(&p, &keys, SpillCodec::Zigzag).unwrap();
+        assert_eq!(run.n, keys.len() as u64);
+        let h = read_header(&p).unwrap().unwrap();
+        assert_eq!(h.version, ZIGZAG_VERSION);
+        assert_eq!(file_key_count(&p).unwrap(), keys.len() as u64);
+        assert_eq!(read_keys_file::<u64>(&p).unwrap(), keys);
+        assert!(!verify_sorted_file::<u64>(&p, 4096).unwrap());
+
+        let keys: Vec<u32> = vec![7, 0, u32::MAX, 3, 3, 1];
+        write_keys_file_codec(&p, &keys, SpillCodec::Zigzag).unwrap();
+        assert_eq!(read_keys_file::<u32>(&p).unwrap(), keys);
+
+        let keys: Vec<f64> = vec![1.5, -2.25, f64::NEG_INFINITY, 0.0, -0.0, 1e300];
+        write_keys_file_codec(&p, &keys, SpillCodec::Zigzag).unwrap();
+        let back = read_keys_file::<f64>(&p).unwrap();
+        let a: Vec<u64> = keys.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u64> = back.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "bit-exact unsorted f64 reload");
+
+        let keys: Vec<f32> = vec![2.5, -1.5, 0.0, 1e30, -1e30];
+        write_keys_file_codec(&p, &keys, SpillCodec::Zigzag).unwrap();
+        let back = read_keys_file::<f32>(&p).unwrap();
+        let a: Vec<u32> = keys.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "bit-exact unsorted f32 reload");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn zigzag_spans_blocks_and_range_reads() {
+        // an alternating sequence never collapses into dup runs and
+        // exercises negative deltas across block boundaries
+        let p = tmp("zz-blocks.bin");
+        let n = 2 * BLOCK_KEYS as u64 + 321;
+        let keys: Vec<u64> = (0..n).map(|i| if i % 2 == 0 { i * 7 } else { i }).collect();
+        write_keys_file_codec(&p, &keys, SpillCodec::Zigzag).unwrap();
+        assert_eq!(read_keys_file::<u64>(&p).unwrap(), keys);
+        // ranged opens decode-skip (no sorted directory exists for v3)
+        let start = BLOCK_KEYS as u64 + 11;
+        let mut r = RunReader::<u64>::open_range(&p, start, 4, 4096).unwrap();
+        assert_eq!(
+            r.read_chunk(10).unwrap(),
+            keys[start as usize..start as usize + 4]
+        );
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn codec_entry_points_reject_wrong_orderings() {
+        let p = tmp("zz-reject.bin");
+        // sorted-run writers refuse zigzag…
+        let err = RunWriter::<u64>::create_with(p.clone(), 4096, SpillCodec::Zigzag).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        assert!(err.to_string().contains("unsorted"), "{err}");
+        // …the unsorted entry refuses delta…
+        let err =
+            RunWriter::<u64>::create_unsorted(p.clone(), 4096, SpillCodec::Delta).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        assert!(err.to_string().contains("sorted runs only"), "{err}");
+        // …the spill path refuses zigzag…
+        let err = RunWriter::<u64>::create_io(
+            p.clone(),
+            4096,
+            SpillCodec::Zigzag,
+            &IoCtx::sync(),
+            false,
+            false,
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        // …and v3 files have no sorted-run index
+        write_keys_file_codec(&p, &[5u64, 1, 9], SpillCodec::Zigzag).unwrap();
+        let err = RunIndex::<u64>::open(&p).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("no run index"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn zigzag_helpers_are_inverses_at_the_edges() {
+        for d in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN, 1 << 40, -(1 << 40)] {
+            assert_eq!(unzigzag(zigzag(d)), d, "d={d}");
+        }
+        assert_eq!(zigzag(0), 0);
+        assert!(zigzag(1) >= 1 && zigzag(-1) >= 1, "nonzero deltas never collide with the dup escape");
+    }
+
+    // -- block side-cars ---------------------------------------------------
+
+    /// Write sorted keys through the spill path with a side-car.
+    fn write_delta_sidecar<K: SortKey>(path: &Path, keys: &[K]) -> RunFile {
+        let mut w = RunWriter::<K>::create_io(
+            path.to_path_buf(),
+            1 << 14,
+            SpillCodec::Delta,
+            &IoCtx::sync(),
+            true,
+            false,
+        )
+        .unwrap();
+        w.write_slice(keys).unwrap();
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn sidecar_and_walk_agree_and_misses_fall_back() {
+        let _l = crate::obs::test_lock();
+        let p = tmp("sidecar.bin");
+        let keys: Vec<u64> = (0..(BLOCK_KEYS as u64 * 3 + 99)).map(|i| i / 2).collect();
+        write_delta_sidecar(&p, &keys);
+        let sc = sidecar_path(&p);
+        assert!(sc.exists(), "spill-path delta runs write a side-car");
+
+        crate::obs::set_enabled(true);
+        crate::obs::metrics::reset();
+        // side-car present: loaded, not walked
+        let mut idx = RunIndex::<u64>::open(&p).unwrap();
+        for probe in [0u64, 1, 77, BLOCK_KEYS as u64, keys.len() as u64 / 2, u64::MAX] {
+            let want = keys.partition_point(|&k| k < probe) as u64;
+            assert_eq!(idx.lower_bound(probe).unwrap(), want, "probe={probe}");
+        }
+        // corrupt side-car: quietly ignored, same answers via the walk
+        let mut bytes = std::fs::read(&sc).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&sc, &bytes).unwrap();
+        let mut idx2 = RunIndex::<u64>::open(&p).unwrap();
+        for probe in [0u64, 77, keys.len() as u64 / 2, u64::MAX] {
+            assert_eq!(
+                idx2.lower_bound(probe).unwrap(),
+                idx.lower_bound(probe).unwrap(),
+                "probe={probe}"
+            );
+        }
+        // absent side-car: same again
+        std::fs::remove_file(&sc).unwrap();
+        let mut idx3 = RunIndex::<u64>::open(&p).unwrap();
+        assert_eq!(idx3.lower_bound(500).unwrap(), idx.lower_bound(500).unwrap());
+        crate::obs::set_enabled(false);
+        let snap = crate::obs::metrics::snapshot();
+        assert_eq!(snap.counters.get(crate::obs::C_SIDECAR_HIT), Some(&1));
+        assert_eq!(snap.counters.get(crate::obs::C_SIDECAR_MISS), Some(&2));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn sidecar_bounds_skip_block_decodes_in_lower_bound() {
+        // a bound past a block's true maximum but before the next restart
+        // resolves without decoding when the side-car's exact maxima are
+        // present (the walk-derived upper bound can never certify this)
+        let p = tmp("sidecar-skip.bin");
+        let mut keys: Vec<u64> = Vec::new();
+        for b in 0..4u64 {
+            // block-sized strides of even keys: gaps between blocks
+            keys.extend((0..BLOCK_KEYS as u64).map(|i| b * 1_000_000 + i * 2));
+        }
+        write_delta_sidecar(&p, &keys);
+        let mut idx = RunIndex::<u64>::open(&p).unwrap();
+        // bound = last key of block 0 + 1 (odd → absent, past the max)
+        let bound = (BLOCK_KEYS as u64 - 1) * 2 + 1;
+        assert_eq!(idx.lower_bound(bound).unwrap(), BLOCK_KEYS as u64);
+        assert_eq!(
+            idx.lower_bound(u64::MAX).unwrap(),
+            keys.len() as u64,
+            "a bound past every block resolves through exact maxima alone"
+        );
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(sidecar_path(&p));
+    }
+
+    #[test]
+    fn narrow_range_opens_count_skipped_blocks() {
+        let _l = crate::obs::test_lock();
+        let p = tmp("blocks-skipped.bin");
+        let keys: Vec<u64> = (0..(BLOCK_KEYS as u64 * 5)).collect();
+        write_delta_sidecar(&p, &keys);
+        let dir = RunIndex::<u64>::open(&p).unwrap().into_directory().unwrap();
+        let total = dir.num_blocks() as u64;
+        assert!(total >= 5);
+        crate::obs::set_enabled(true);
+        crate::obs::metrics::reset();
+        // a one-block-wide cut in the middle touches exactly one block
+        let mut r = RunReader::<u64>::open_range_with(
+            &p,
+            2 * BLOCK_KEYS as u64 + 10,
+            100,
+            1 << 12,
+            Some(&dir),
+        )
+        .unwrap();
+        assert_eq!(r.read_chunk(3).unwrap(), vec![
+            2 * BLOCK_KEYS as u64 + 10,
+            2 * BLOCK_KEYS as u64 + 11,
+            2 * BLOCK_KEYS as u64 + 12
+        ]);
+        crate::obs::set_enabled(false);
+        let snap = crate::obs::metrics::snapshot();
+        assert_eq!(
+            snap.counters.get(crate::obs::C_BLOCKS_SKIPPED),
+            Some(&(total - 1)),
+            "all but the cut's one block must be skipped"
+        );
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(sidecar_path(&p));
+    }
+
+    // -- striped spill dirs ------------------------------------------------
+
+    #[test]
+    fn striped_spill_dirs_rotate_and_clean_up() {
+        let root_a = tmp("stripe-a");
+        let root_b = tmp("stripe-b");
+        let made: Vec<PathBuf>;
+        {
+            let mut s = SpillDir::create_striped(&[root_a.clone(), root_b.clone()]).unwrap();
+            assert_eq!(s.num_stripes(), 2);
+            let runs: Vec<PathBuf> = (0..4).map(|_| s.next_run_path()).collect();
+            // consecutive runs land on alternating stripes
+            assert!(runs[0].starts_with(&root_a), "{:?}", runs[0]);
+            assert!(runs[1].starts_with(&root_b), "{:?}", runs[1]);
+            assert!(runs[2].starts_with(&root_a), "{:?}", runs[2]);
+            assert!(runs[3].starts_with(&root_b), "{:?}", runs[3]);
+            for r in &runs {
+                write_keys_file(r, &[1u64]).unwrap();
+            }
+            made = runs.iter().map(|r| r.parent().unwrap().to_path_buf()).collect();
+            assert!(made.iter().all(|d| d.exists()));
+        }
+        assert!(
+            made.iter().all(|d| !d.exists()),
+            "every stripe must be removed on drop"
+        );
+        let _ = std::fs::remove_dir_all(&root_a);
+        let _ = std::fs::remove_dir_all(&root_b);
     }
 }

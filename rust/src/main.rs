@@ -17,7 +17,7 @@ use std::collections::BTreeMap;
 use aipso::bench_harness::{self, BenchConfig};
 use aipso::coordinator::{Coordinator, JobSpec, KeyBuf};
 use aipso::datasets::{self, FigureGroup, KeyType};
-use aipso::external::{self, ExternalConfig, RetrainPolicy, RunGen, SpillCodec};
+use aipso::external::{self, ExternalConfig, IoBackendKind, RetrainPolicy, RunGen, SpillCodec};
 use aipso::key::{KeyKind, SortKey};
 use aipso::obs;
 use aipso::rmi::model::{Rmi, RmiConfig};
@@ -63,14 +63,18 @@ USAGE: aipso <command> [--key value ...]
 
 COMMANDS
   gen             --dataset NAME [--n N] [--seed S] [--out FILE] [--stream]
-                  [--width 4|8]  (4 writes the dataset-native f32/u32
-                  stream at half the bytes; files carry a self-describing
-                  header)
+                  [--width 4|8] [--codec raw|zigzag]
+                  (4 writes the dataset-native f32/u32 stream at half the
+                  bytes; files carry a self-describing header; --codec
+                  zigzag compresses the unsorted output through the v3
+                  zigzag+varint block codec — extsort reads it directly)
   sort            --dataset NAME --engine ENGINE [--n N] [--threads T] [--seq]
   extsort         --input FILE --output FILE [--key f64|u64|f32|u32]
                   [--budget-mb MB] [--fanout K] [--threads T] [--shards P]
                   [--ips4o-runs] [--retrain N|off] [--max-retrains M]
                   [--codec raw|delta] [--age-decay D] [--trace-json FILE]
+                  [--spill-dir DIR[,DIR...]] [--io-backend sync|pool]
+                  [--direct]
                   (--trace-json traces the job and writes the
                    machine-readable aipso.telemetry.v1 document — phase
                    spans, pipeline counters/histograms, final report;
@@ -82,7 +86,12 @@ COMMANDS
                    --codec delta spills sorted runs as compressed
                    delta+varint blocks — the output stays raw either way;
                    --age-decay D<1 tilts the merge's shard cuts toward
-                   recent model epochs)
+                   recent model epochs; --spill-dir is repeatable and
+                   stripes runs round-robin across the listed dirs;
+                   --io-backend pool drains spill IO on a worker pool;
+                   --direct opens run-generation spills O_DIRECT where the
+                   filesystem allows, falling back to buffered; every
+                   combination is byte-identical)
   bench           [--figure f1|f2|f3|f4|f5|f6|all] [--n N] [--reps R] [--threads T]
   pivot-quality   [--n N]
   phases          --dataset NAME --engine ENGINE [--n N] [--threads T]
@@ -115,7 +124,15 @@ fn parse_opts(args: &[String]) -> BTreeMap<String, String> {
                 m.insert(key.to_string(), "true".to_string());
                 i += 1;
             } else {
-                m.insert(key.to_string(), args[i + 1].clone());
+                let v = args[i + 1].clone();
+                // Repeated options accumulate comma-separated, so
+                // `--spill-dir a --spill-dir b` ≡ `--spill-dir a,b`.
+                m.entry(key.to_string())
+                    .and_modify(|prev| {
+                        prev.push(',');
+                        prev.push_str(&v);
+                    })
+                    .or_insert(v);
                 i += 2;
             }
         } else {
@@ -150,7 +167,21 @@ fn cmd_gen(opts: &BTreeMap<String, String>) -> i32 {
         eprintln!("unknown dataset {name}");
         return 2;
     };
+    // --codec zigzag writes the unsorted stream through the v3
+    // zigzag+varint block codec instead of raw fixed-width v1.
+    let codec = match opts.get("codec").map(String::as_str) {
+        None | Some("raw") => SpillCodec::Raw,
+        Some("zigzag") => SpillCodec::Zigzag,
+        Some(other) => {
+            eprintln!("gen: unknown --codec {other} (use raw|zigzag — delta needs sorted keys)");
+            return 2;
+        }
+    };
     if opts.contains_key("stream") {
+        if codec != SpillCodec::Raw {
+            eprintln!("gen: --stream writes raw v1 only (drop --codec)");
+            return 2;
+        }
         // chunked generation: the dataset never materializes in memory
         let Some(out) = opts.get("out") else {
             eprintln!("gen --stream requires --out FILE");
@@ -180,12 +211,12 @@ fn cmd_gen(opts: &BTreeMap<String, String>) -> i32 {
             let v = datasets::generate_f64(spec.name, n, seed).unwrap();
             if width == 8 {
                 print_f64_stats(spec.name, &v);
-                opts.get("out").map(|out| write_gen_file::<f64>(out, &v))
+                opts.get("out").map(|out| write_gen_file::<f64>(out, &v, codec))
             } else {
                 let narrow: Vec<f32> = v.iter().map(|&x| x as f32).collect();
                 let f: Vec<f64> = narrow.iter().map(|&x| x as f64).collect();
                 print_f64_stats(spec.name, &f);
-                opts.get("out").map(|out| write_gen_file::<f32>(out, &narrow))
+                opts.get("out").map(|out| write_gen_file::<f32>(out, &narrow, codec))
             }
         }
         KeyType::U64 => {
@@ -193,12 +224,12 @@ fn cmd_gen(opts: &BTreeMap<String, String>) -> i32 {
             if width == 8 {
                 let f: Vec<f64> = v.iter().map(|&x| x as f64).collect();
                 print_f64_stats(spec.name, &f);
-                opts.get("out").map(|out| write_gen_file::<u64>(out, &v))
+                opts.get("out").map(|out| write_gen_file::<u64>(out, &v, codec))
             } else {
                 let narrow: Vec<u32> = v.iter().map(|&x| x as u32).collect();
                 let f: Vec<f64> = narrow.iter().map(|&x| x as f64).collect();
                 print_f64_stats(spec.name, &f);
-                opts.get("out").map(|out| write_gen_file::<u32>(out, &narrow))
+                opts.get("out").map(|out| write_gen_file::<u32>(out, &narrow, codec))
             }
         }
     };
@@ -208,17 +239,18 @@ fn cmd_gen(opts: &BTreeMap<String, String>) -> i32 {
     }
 }
 
-/// Write a generated key slice as a self-describing key file; returns the
-/// process exit code on failure.
-fn write_gen_file<K: SortKey>(out: &str, keys: &[K]) -> Result<(), i32> {
-    match external::write_keys_file::<K>(std::path::Path::new(out), keys) {
+/// Write a generated key slice as a self-describing key file (raw v1 or
+/// zigzag v3 per `codec`); returns the process exit code on failure.
+fn write_gen_file<K: SortKey>(out: &str, keys: &[K], codec: SpillCodec) -> Result<(), i32> {
+    match external::write_keys_file_codec::<K>(std::path::Path::new(out), keys, codec) {
         Ok(run) => {
             println!(
-                "wrote {} ({} {} keys, {} payload bytes + header)",
+                "wrote {} ({} {} keys, {} {} bytes + header)",
                 out,
                 run.n,
                 K::KIND.name(),
-                run.n * K::WIDTH as u64,
+                run.bytes.saturating_sub(external::HEADER_LEN as u64),
+                codec.name(),
             );
             Ok(())
         }
@@ -340,12 +372,33 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
     cfg.retrain.max_retrains = opt_usize(opts, "max-retrains", cfg.retrain.max_retrains);
     if let Some(c) = opts.get("codec") {
         cfg.spill_codec = match SpillCodec::parse(c) {
-            Some(codec) => codec,
-            None => {
+            // zigzag is the *unsorted* codec (gen outputs); spilled runs
+            // are sorted by construction and take the tighter delta form
+            Some(SpillCodec::Zigzag) | None => {
                 eprintln!("extsort: unknown --codec {c} (use raw|delta)");
                 return 2;
             }
+            Some(codec) => codec,
         };
+    }
+    if let Some(dirs) = opts.get("spill-dir") {
+        cfg.spill_dirs = dirs
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(std::path::PathBuf::from)
+            .collect();
+    }
+    if let Some(b) = opts.get("io-backend") {
+        cfg.io_backend = match IoBackendKind::parse(b) {
+            Some(kind) => kind,
+            None => {
+                eprintln!("extsort: unknown --io-backend {b} (use sync|pool)");
+                return 2;
+            }
+        };
+    }
+    if opts.contains_key("direct") {
+        cfg.direct_io = true;
     }
     if let Some(d) = opts.get("age-decay") {
         cfg.epoch_age_decay = match d.parse::<f64>() {

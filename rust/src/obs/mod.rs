@@ -88,6 +88,10 @@ pub const S_FRAG_PAR_SWEEP: &str = "frag-par-sweep";
 /// merge, the global cycle-following slot compaction and the boundary
 /// shift.
 pub const S_FRAG_PAR_MERGE: &str = "frag-par-merge";
+/// One positioned spill read or write executed by the IO substrate
+/// (inline on the sync backend — nested under the issuing phase — or on
+/// a pool worker thread, where it appears as a root).
+pub const S_SPILL_IO: &str = "spill-io";
 
 /// The complete span taxonomy. [`validate_telemetry`] rejects any other
 /// name, so adding a phase means extending this list (and the docs).
@@ -107,6 +111,7 @@ pub const KNOWN_SPANS: &[&str] = &[
     S_FRAG_COMPACT,
     S_FRAG_PAR_SWEEP,
     S_FRAG_PAR_MERGE,
+    S_SPILL_IO,
 ];
 
 /// External-pipeline phases every multi-run `extsort` emits (retrain and
@@ -146,6 +151,28 @@ pub const C_MERGE_PASSES: &str = "merge.passes";
 /// LearnedSort 2.0 parallel formulation; the sequential fallback for
 /// degenerate splits does not count).
 pub const C_FRAG_PAR: &str = "frag.par.partitions";
+/// Counter: positioned spill writes executed by the IO substrate (both
+/// backends; one per dispatched buffer, not per byte).
+pub const C_IO_WRITES: &str = "io.writes";
+/// Counter: positioned spill reads executed by the pool backend's
+/// read-ahead path.
+pub const C_IO_READS: &str = "io.reads";
+/// Counter: spill files that requested `O_DIRECT` but fell back to
+/// buffered IO because the filesystem refused it (tmpfs does).
+pub const C_IO_DIRECT_FALLBACK: &str = "io.direct.fallback";
+/// Counter: v2 blocks a sharded-merge range open skipped entirely —
+/// blocks in the run's directory that lie outside the shard's cut range
+/// and are never read or decoded.
+pub const C_BLOCKS_SKIPPED: &str = "shard.blocks.skipped";
+/// Counter: run indexes served by an intact per-block min/max side-car
+/// (no payload walk needed to build the block directory).
+pub const C_SIDECAR_HIT: &str = "shard.sidecar.hit";
+/// Counter: v2 run indexes that fell back to walking block headers
+/// because the side-car was absent, stale, or corrupt.
+pub const C_SIDECAR_MISS: &str = "shard.sidecar.miss";
+/// Gauge: submission-queue depth of the IO pool (ops submitted but not
+/// yet picked up by a worker), sampled at every submit/dequeue.
+pub const G_IO_QUEUE: &str = "io.queue.depth";
 
 /// Histograms every learned-path `extsort` telemetry document carries
 /// (the acceptance set: spill volume, drift error, shard skew).

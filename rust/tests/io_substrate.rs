@@ -1,0 +1,267 @@
+//! End-to-end tests for the spill-IO substrate: the differential matrix
+//! pinning byte-identical outputs across every backend × striping ×
+//! O_DIRECT combination on all 14 paper distributions at both key
+//! widths, zigzag (v3) `gen` outputs sorting through header dispatch,
+//! and the side-car block-skip accounting of the sharded merge (a
+//! narrow-cut range open must skip whole blocks without decoding them).
+//!
+//! The substrate contract under test: sync vs pool backends, one vs many
+//! spill dirs, and direct vs buffered IO are *pure transport* — they may
+//! change where bytes sit and how they travel, never a single output
+//! byte.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use aipso::datasets;
+use aipso::external::{
+    self, read_header, read_keys_file, write_keys_file_codec, ExternalConfig, IoBackendKind,
+    SpillCodec,
+};
+use aipso::obs;
+use aipso::util::rng::Xoshiro256pp;
+use aipso::SortKey;
+
+fn tmp(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "aipso-io-it-{}-{}-{tag}.bin",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// One substrate variant of the differential matrix.
+struct Variant {
+    label: &'static str,
+    backend: IoBackendKind,
+    stripes: usize,
+    direct: bool,
+}
+
+const VARIANTS: [Variant; 4] = [
+    Variant { label: "sync-1dir", backend: IoBackendKind::Sync, stripes: 1, direct: false },
+    Variant { label: "pool-1dir", backend: IoBackendKind::Pool, stripes: 1, direct: false },
+    Variant { label: "pool-2dir", backend: IoBackendKind::Pool, stripes: 2, direct: false },
+    Variant { label: "pool-2dir-direct", backend: IoBackendKind::Pool, stripes: 2, direct: true },
+];
+
+/// Pipelined config (threads = 2, sharded merge in play) for one
+/// substrate variant, with width-proportional budget so every width
+/// spills several runs.
+fn variant_cfg(v: &Variant, roots: &[PathBuf], width: usize) -> ExternalConfig {
+    ExternalConfig {
+        memory_budget: 3 * 8192 * width,
+        io_buffer: 1 << 12,
+        threads: 2,
+        min_shard_keys: 1024,
+        io_backend: v.backend,
+        direct_io: v.direct,
+        spill_dirs: roots[..v.stripes].to_vec(),
+        ..ExternalConfig::default()
+    }
+}
+
+fn sort_variant<K: SortKey>(
+    input: &PathBuf,
+    output: &PathBuf,
+    v: &Variant,
+    roots: &[PathBuf],
+) -> external::ExternalSortReport {
+    external::sort_file::<K>(input, output, &variant_cfg(v, roots, K::WIDTH)).unwrap()
+}
+
+#[test]
+fn io_matrix_is_byte_identical_on_all_14_distributions_at_both_widths() {
+    // The tentpole's acceptance bar: every paper distribution, at its
+    // native 8-byte width AND narrowed to 4 (all four key domains),
+    // sorts byte-identically under the sync reference and every pool /
+    // striping / O_DIRECT combination. Where the filesystem refuses
+    // O_DIRECT (tmpfs), the silent buffered fallback must hold the same
+    // contract.
+    let n = 24_000;
+    let roots = [tmp("stripe-a"), tmp("stripe-b")].map(|p| p.with_extension(""));
+    for spec in datasets::ALL.iter() {
+        for w in [8usize, 4] {
+            let tag = format!("mx-{}-w{w}", spec.name);
+            let input = tmp(&tag);
+            let kind =
+                datasets::write_dataset_file_width(spec.name, n, 91, &input, 1 << 14, w).unwrap();
+            let mut reference: Option<Vec<u8>> = None;
+            for v in &VARIANTS {
+                let output = tmp(&format!("{tag}-{}", v.label));
+                let report = match kind {
+                    aipso::KeyKind::F64 => sort_variant::<f64>(&input, &output, v, &roots),
+                    aipso::KeyKind::U64 => sort_variant::<u64>(&input, &output, v, &roots),
+                    aipso::KeyKind::F32 => sort_variant::<f32>(&input, &output, v, &roots),
+                    aipso::KeyKind::U32 => sort_variant::<u32>(&input, &output, v, &roots),
+                };
+                assert_eq!(report.keys, n as u64, "{tag}/{}", v.label);
+                let bytes = std::fs::read(&output).unwrap();
+                match &reference {
+                    None => reference = Some(bytes),
+                    Some(want) => assert_eq!(
+                        &bytes, want,
+                        "{tag}: {} output differs from the sync reference",
+                        v.label
+                    ),
+                }
+                let _ = std::fs::remove_file(&output);
+            }
+            let _ = std::fs::remove_file(&input);
+        }
+    }
+    for r in roots {
+        let _ = std::fs::remove_dir_all(r);
+    }
+}
+
+#[test]
+fn zigzag_gen_files_sort_through_header_dispatch() {
+    // A zigzag-coded (v3) file — the compressed *unsorted* `gen --codec
+    // zigzag` format — is a legal extsort input: the reader dispatches
+    // the codec off the header, and the sorted output upgrades to raw v1.
+    let mut rng = Xoshiro256pp::new(0x2162);
+    let keys: Vec<u64> = (0..60_000).map(|_| rng.next_below(1 << 24)).collect();
+    let input = tmp("zz-in");
+    let output = tmp("zz-out");
+    let run = write_keys_file_codec(&input, &keys, SpillCodec::Zigzag).unwrap();
+    assert_eq!(run.n, keys.len() as u64);
+    let h = read_header(&input).unwrap().expect("v3 header present");
+    assert_eq!(h.version, external::ZIGZAG_VERSION);
+    // near-sequential small keys: the varint stream must actually shrink
+    let on_disk = std::fs::metadata(&input).unwrap().len();
+    assert!(
+        on_disk < (keys.len() * 8) as u64,
+        "zigzag gen file must compress ({on_disk} bytes for {} keys)",
+        keys.len()
+    );
+
+    let cfg = ExternalConfig {
+        memory_budget: 8192 * 8,
+        io_buffer: 1 << 12,
+        threads: 2,
+        ..ExternalConfig::default()
+    };
+    let report = external::sort_file::<u64>(&input, &output, &cfg).unwrap();
+    assert_eq!(report.keys as usize, keys.len());
+    assert!(report.runs > 1, "the v3 input must really spill");
+    let mut want = keys;
+    want.sort_unstable();
+    assert_eq!(read_keys_file::<u64>(&output).unwrap(), want);
+    let out_h = read_header(&output).unwrap().expect("output has a header");
+    assert_eq!(out_h.version, external::RAW_VERSION, "outputs are raw v1");
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn sharded_merge_skips_sidecar_bounded_blocks() {
+    // The block-skip acceptance: a sharded merge over v2 delta runs
+    // carries each run's side-car bounds through the shard plan, so a
+    // shard's narrow cut skips whole blocks outside its range without
+    // decoding them — `shard.blocks.skipped` must land above zero, which
+    // is exactly "decoded strictly fewer blocks than the directory
+    // holds". (This binary runs no other obs-enabled test, so no lock.)
+    let input = tmp("skip-in");
+    let output = tmp("skip-out");
+    let n = 100_000;
+    datasets::write_dataset_file("uniform", n, 7, &input, 1 << 14).expect("dataset write");
+    let cfg = ExternalConfig {
+        memory_budget: 3 * 8192 * 8,
+        io_buffer: 1 << 12,
+        threads: 4,
+        merge_shards: 4,
+        min_shard_keys: 1024,
+        spill_codec: SpillCodec::Delta,
+        io_backend: IoBackendKind::Pool,
+        ..ExternalConfig::default()
+    };
+
+    obs::reset();
+    obs::set_enabled(true);
+    let report = external::sort_file::<f64>(&input, &output, &cfg).unwrap();
+    obs::set_enabled(false);
+    assert_eq!(report.keys as usize, n);
+    assert!(
+        report.merge_shards >= 2,
+        "uniform data at this size must engage the sharded merge"
+    );
+
+    let m = obs::metrics::snapshot();
+    let counter = |name: &str| m.counters.get(name).copied().unwrap_or(0);
+    assert!(
+        counter(obs::C_SIDECAR_HIT) >= 1,
+        "v2 spilled runs must plan through their side-cars"
+    );
+    assert!(
+        counter(obs::C_BLOCKS_SKIPPED) >= 1,
+        "narrow shard cuts must skip side-car-bounded blocks undecoded"
+    );
+    assert!(
+        counter(obs::C_IO_WRITES) >= 1,
+        "the pool backend must route spill writes through the IO workers"
+    );
+    obs::reset();
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn direct_io_request_survives_any_filesystem_answer() {
+    // --direct is a request, not a demand: on filesystems that refuse
+    // O_DIRECT (tmpfs) the sink silently falls back to buffered writes.
+    // Either way the sort must stay exact and the output header-clean
+    // (the alignment pad never leaks into final outputs).
+    let mut rng = Xoshiro256pp::new(0xD1EC);
+    let keys: Vec<u64> = (0..50_000).map(|_| rng.next_u64()).collect();
+    let output = tmp("direct-out");
+    let cfg = ExternalConfig {
+        memory_budget: 8192 * 8,
+        io_buffer: 1 << 12,
+        threads: 2,
+        direct_io: true,
+        ..ExternalConfig::default()
+    };
+    let report = external::sort_iter(keys.iter().copied(), &output, &cfg).unwrap();
+    assert_eq!(report.keys as usize, keys.len());
+    let mut want = keys;
+    want.sort_unstable();
+    assert_eq!(read_keys_file::<u64>(&output).unwrap(), want);
+    let h = read_header(&output).unwrap().expect("output has a header");
+    assert_eq!(h.pad, 0, "final outputs are never alignment-padded");
+    assert_eq!(
+        std::fs::metadata(&output).unwrap().len(),
+        external::HEADER_LEN as u64 + (want.len() * 8) as u64,
+        "no direct-IO padding may leak into the output length"
+    );
+    let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn single_run_direct_spill_still_copies_clean() {
+    // Budget larger than the input: one run, no merge — the "plain copy"
+    // final path. Under --direct the single spilled run may carry an
+    // alignment pad, which the copy path must strip by transcoding.
+    let mut rng = Xoshiro256pp::new(0x51C0);
+    let keys: Vec<u64> = (0..5_000).map(|_| rng.next_u64()).collect();
+    let output = tmp("single-direct-out");
+    let cfg = ExternalConfig {
+        memory_budget: 1 << 20,
+        threads: 1,
+        direct_io: true,
+        ..ExternalConfig::default()
+    };
+    let report = external::sort_iter(keys.iter().copied(), &output, &cfg).unwrap();
+    assert_eq!(report.runs, 1, "everything must fit one run");
+    assert_eq!(report.merge_passes, 0);
+    let mut want = keys;
+    want.sort_unstable();
+    assert_eq!(read_keys_file::<u64>(&output).unwrap(), want);
+    assert_eq!(
+        std::fs::metadata(&output).unwrap().len(),
+        external::HEADER_LEN as u64 + (want.len() * 8) as u64,
+        "the single-run copy must not carry the spill's alignment pad"
+    );
+    let _ = std::fs::remove_file(&output);
+}
