@@ -9,13 +9,20 @@
 //! on: its table gains a `phases` column breaking each row down by
 //! sample / train / partition / frag-partition / frag-compact / sort.
 //!
+//! A string-key section (beyond the paper) reruns a synthetic and a
+//! dup-heavy law as 16-byte prefix strings: the learned engines model the
+//! 8-byte ordered prefix and repair prefix ties by full comparison, so
+//! the rows show the cost of string keys through the same engines.
+//!
 //! Scale with AIPSO_N / AIPSO_REPS (defaults are CI-sized; the paper used
 //! N = 1e8 / 2e8 and 10 reps — shape, not absolute keys/s, is the target).
 
 use aipso::bench_harness::{
-    count_wins, render_dup_rows, render_rows, run_dup_sweep, run_figure, BenchConfig,
+    count_wins, render_dup_rows, render_rows, run_dup_sweep, run_figure, run_str_cell,
+    BenchConfig,
 };
 use aipso::datasets::FigureGroup;
+use aipso::SortEngine;
 
 fn main() {
     let cfg = BenchConfig::default();
@@ -53,5 +60,25 @@ fn main() {
             "Duplicate sweep: fragmented (2.0) vs block (1.x) partition",
             &dup_rows
         )
+    );
+
+    let mut str_rows = Vec::new();
+    for dataset in ["uniform", "wiki_edit"] {
+        for engine in [SortEngine::Aips2o, SortEngine::Ips4o, SortEngine::StdSort] {
+            str_rows.push(run_str_cell(dataset, engine, false, &cfg));
+        }
+    }
+    print!(
+        "\n{}",
+        render_rows(
+            "String keys: 16-byte prefix strings through the same engines",
+            &str_rows
+        )
+    );
+    println!(
+        "\n(keys are the figures' laws rendered as order-preserving hex\n\
+         strings: the learned engines model the 8-byte prefix as bits and\n\
+         repair prefix ties by full lexicographic comparison, so dup-heavy\n\
+         laws stress the tie-repair path)"
     );
 }

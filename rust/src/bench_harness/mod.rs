@@ -103,6 +103,32 @@ pub fn run_cell(
     }
 }
 
+/// One string-key cell (bench `fig_sequential`, string-key section): the
+/// dataset's stream rendered as prefix-encoded strings
+/// ([`datasets::generate_str`]) and sorted under the full lexicographic
+/// order — ordered-bits prefix partitioning plus the tie-repair pass for
+/// prefix-collided keys. Same metric as [`run_cell`], so the rate is
+/// directly comparable with the numeric row of the same dataset.
+pub fn run_str_cell(
+    dataset: &'static str,
+    engine: SortEngine,
+    parallel: bool,
+    cfg: &BenchConfig,
+) -> Row {
+    let spec = datasets::spec(dataset).unwrap_or_else(|| panic!("unknown dataset {dataset}"));
+    let base = datasets::generate_str(spec.name, cfg.n, cfg.seed).unwrap();
+    let rates = measure(&base, engine, parallel, cfg);
+    let secs: Vec<f64> = rates.iter().map(|r| cfg.n as f64 / r).collect();
+    Row {
+        dataset: spec.paper_name,
+        engine: engine.paper_name(parallel),
+        n: cfg.n,
+        mean_rate: stats::mean(&rates),
+        stddev_rate: stats::stddev(&rates),
+        mean_secs: stats::mean(&secs),
+    }
+}
+
 fn measure<K: SortKey>(
     base: &[K],
     engine: SortEngine,
@@ -293,6 +319,7 @@ fn phase_breakdown(mark: usize) -> Vec<(&'static str, f64)> {
 fn external_cell(
     dataset: &'static str,
     kind: crate::key::KeyKind,
+    payload: usize,
     input: &std::path::Path,
     output: &std::path::Path,
     strategy: String,
@@ -303,7 +330,8 @@ fn external_cell(
     // be sliced out without clobbering spans owned by anyone else.
     let trace_mark = crate::obs::enabled().then(crate::obs::trace::span_count);
     let (report, secs, ok) =
-        crate::external::sort_and_verify(kind, input, output, ext).expect("external sort");
+        crate::external::sort_and_verify(kind, payload, input, output, ext)
+            .expect("external sort");
     assert!(ok, "external sort produced unsorted output on {dataset}");
     assert_eq!(report.keys as usize, n, "key count drift on {dataset}");
     let phases = trace_mark.map(phase_breakdown).unwrap_or_default();
@@ -361,6 +389,7 @@ pub fn run_external_figure(
             rows.push(external_cell(
                 spec.paper_name,
                 spec.key_type.kind(),
+                0,
                 &input,
                 &output,
                 strategy.to_string(),
@@ -417,6 +446,7 @@ pub fn run_external_thread_sweep(
             rows.push(external_cell(
                 spec.paper_name,
                 spec.key_type.kind(),
+                0,
                 &input,
                 &output,
                 strategy,
@@ -474,6 +504,7 @@ pub fn run_external_regime_shift(budget_bytes: usize, cfg: &BenchConfig) -> Vec<
         rows.push(external_cell(
             "Uniform→LogNormal→Zipf",
             crate::key::KeyKind::F64,
+            0,
             &input,
             &output,
             label.to_string(),
@@ -524,9 +555,71 @@ pub fn run_external_width_sweep(
             rows.push(external_cell(
                 spec.paper_name,
                 kind,
+                0,
                 &input,
                 &output,
                 format!("{}-byte keys ({})", width, kind.name()),
+                &ext,
+                cfg.n,
+            ));
+        }
+        let _ = std::fs::remove_file(&input);
+        let _ = std::fs::remove_file(&output);
+    }
+    rows
+}
+
+/// Payload-width sweep of the learned external pipeline: each dataset
+/// sorted as bare keys and as records carrying 8- and 64-byte row-id
+/// payloads (the v4 record spill format, `gen --payload`). Identical key
+/// count, budget and pipeline, so the deltas isolate the payload lane:
+/// spill bytes grow by exactly `payload` bytes per entry (visible in the
+/// spill column) and fewer records fit per run-generation chunk.
+pub fn run_external_payload_sweep(
+    names: &[&'static str],
+    budget_bytes: usize,
+    cfg: &BenchConfig,
+) -> Vec<ExternalRow> {
+    use crate::external::ExternalConfig;
+
+    let mut rows = Vec::new();
+    let dir = std::env::temp_dir();
+    for &name in names {
+        let spec = datasets::spec(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+        let input = dir.join(format!(
+            "aipso-extpayload-{}-{}.bin",
+            std::process::id(),
+            spec.name
+        ));
+        let output = dir.join(format!(
+            "aipso-extpayload-{}-{}.out.bin",
+            std::process::id(),
+            spec.name
+        ));
+        for payload in crate::key::DISPATCH_PAYLOADS {
+            let kind = datasets::write_dataset_file_ext(
+                spec.name,
+                cfg.n,
+                cfg.seed,
+                &input,
+                1 << 18,
+                8,
+                false,
+                payload,
+            )
+            .expect("chunked dataset write");
+            let ext = ExternalConfig {
+                memory_budget: budget_bytes,
+                threads: cfg.threads,
+                ..ExternalConfig::default()
+            };
+            rows.push(external_cell(
+                spec.paper_name,
+                kind,
+                payload,
+                &input,
+                &output,
+                format!("{payload} B payload"),
                 &ext,
                 cfg.n,
             ));
@@ -576,6 +669,7 @@ pub fn run_external_codec_sweep(
             rows.push(external_cell(
                 spec.paper_name,
                 spec.key_type.kind(),
+                0,
                 &input,
                 &output,
                 format!("{} spill codec", codec.name()),
@@ -643,6 +737,7 @@ pub fn run_external_io_sweep(
             rows.push(external_cell(
                 spec.paper_name,
                 spec.key_type.kind(),
+                0,
                 &input,
                 &output,
                 label.to_string(),
@@ -1141,6 +1236,44 @@ mod tests {
         for r in &rows {
             assert!(r.rate > 0.0);
         }
+    }
+
+    #[test]
+    fn payload_sweep_spill_bytes_grow_with_the_lane() {
+        let cfg = BenchConfig {
+            n: 40_000,
+            ..tiny()
+        };
+        let rows = run_external_payload_sweep(&["uniform"], 3 * 8192 * 8, &cfg);
+        assert_eq!(rows.len(), 3, "one row per payload width");
+        assert!(rows[0].strategy.starts_with("0 B"));
+        assert!(rows[1].strategy.starts_with("8 B"));
+        assert!(rows[2].strategy.starts_with("64 B"));
+        for r in &rows {
+            assert_eq!(r.n, cfg.n, "payloads never change the key count");
+            assert!(r.rate > 0.0);
+        }
+        // the raw spill accounting must reflect the payload bytes: every
+        // spilled entry is key + lane wide (plus one header per run file)
+        let hdr = crate::external::spill::HEADER_LEN as u64;
+        for (r, entry) in rows.iter().zip([8u64, 16, 72]) {
+            assert_eq!(
+                r.spill_bytes_raw,
+                cfg.n as u64 * entry + r.runs as u64 * hdr,
+                "raw spill bytes at {} B/entry",
+                entry
+            );
+        }
+        let report = render_external_rows("payloads", &rows);
+        assert!(report.contains("64 B payload"));
+    }
+
+    #[test]
+    fn str_cell_sorts_prefix_tied_strings() {
+        let row = run_str_cell("wiki_edit", SortEngine::Aips2o, false, &tiny());
+        assert!(row.mean_rate > 0.0);
+        assert_eq!(row.dataset, "Wiki/Edit");
+        assert_eq!(row.engine, "AI1S2o");
     }
 
     #[test]

@@ -4,12 +4,18 @@ use std::path::PathBuf;
 
 use crate::coordinator::router::EngineChoice;
 use crate::external::{ExternalConfig, ExternalSortReport};
-use crate::key::KeyKind;
+use crate::key::{KeyKind, PrefixString, SortItem, SortKey};
 use crate::SortEngine;
 
-/// Owned key buffer, covering the four key widths of the pipeline (the
-/// paper's two 64-bit domains plus the narrow widths the external path's
-/// self-describing spill format already handles).
+/// Owned key buffer, covering the key domains of the pipeline: the
+/// paper's two 64-bit domains, the narrow widths the external path's
+/// self-describing spill format already handles, prefix-encoded string
+/// keys, and records (key + fixed-width payload).
+///
+/// Code that needs the buffer's element type generically should go
+/// through [`crate::with_keybuf!`] rather than matching the variants —
+/// the macro is the single place the variant list is spelled out, so a
+/// new domain is a one-site change instead of five drifting `match`es.
 #[derive(Debug, Clone)]
 pub enum KeyBuf {
     /// 64-bit doubles (the synthetic datasets).
@@ -20,17 +26,42 @@ pub enum KeyBuf {
     F32(Vec<f32>),
     /// 32-bit unsigned integers (narrow real-world streams).
     U32(Vec<u32>),
+    /// Prefix-encoded string keys (16-byte bounded, 8-byte ordered-bits
+    /// prefix + comparison tail — see [`PrefixString`]).
+    Str(Vec<PrefixString>),
+    /// Records: 64-bit unsigned key + 8-byte payload (row ids).
+    Rec64(Vec<SortItem<u64, 8>>),
+}
+
+/// Run `$body` with `$v` bound to the vector inside any [`KeyBuf`]
+/// variant — the one place the coordinator/CLI/bench key-domain dispatch
+/// is spelled out. `$buf` may be any expression evaluating to a
+/// `KeyBuf`, `&KeyBuf` or `&mut KeyBuf`; `$v` binds accordingly.
+///
+/// ```
+/// use aipso::coordinator::KeyBuf;
+/// let buf = KeyBuf::U32(vec![3, 1, 2]);
+/// let n = aipso::with_keybuf!(&buf, v => v.len());
+/// assert_eq!(n, 3);
+/// ```
+#[macro_export]
+macro_rules! with_keybuf {
+    ($buf:expr, $v:ident => $body:expr) => {
+        match $buf {
+            $crate::coordinator::KeyBuf::F64($v) => $body,
+            $crate::coordinator::KeyBuf::U64($v) => $body,
+            $crate::coordinator::KeyBuf::F32($v) => $body,
+            $crate::coordinator::KeyBuf::U32($v) => $body,
+            $crate::coordinator::KeyBuf::Str($v) => $body,
+            $crate::coordinator::KeyBuf::Rec64($v) => $body,
+        }
+    };
 }
 
 impl KeyBuf {
     /// Number of keys in the buffer.
     pub fn len(&self) -> usize {
-        match self {
-            KeyBuf::F64(v) => v.len(),
-            KeyBuf::U64(v) => v.len(),
-            KeyBuf::F32(v) => v.len(),
-            KeyBuf::U32(v) => v.len(),
-        }
+        crate::with_keybuf!(self, v => v.len())
     }
 
     /// True when the buffer holds no keys.
@@ -39,15 +70,15 @@ impl KeyBuf {
     }
 
     /// Duplicate fraction of a probe prefix (router heuristic input).
-    /// Narrow widths widen their bit patterns into the shared u64 probe —
-    /// only equality matters here, not order.
+    /// Every domain probes through its ordered-bits image — only
+    /// equality matters here, not order. For string keys equal bits
+    /// means equal *prefix*, which is exactly the collision load the
+    /// router's duplicate heuristics care about; records probe on the
+    /// key alone (payloads never affect routing).
     pub fn probe_duplicate_fraction(&self, probe: usize) -> f64 {
-        match self {
-            KeyBuf::F64(v) => probe_dup(v.iter().map(|x| x.to_bits()), probe),
-            KeyBuf::U64(v) => probe_dup(v.iter().copied(), probe),
-            KeyBuf::F32(v) => probe_dup(v.iter().map(|x| u64::from(x.to_bits())), probe),
-            KeyBuf::U32(v) => probe_dup(v.iter().map(|&x| u64::from(x)), probe),
-        }
+        crate::with_keybuf!(self, v => {
+            probe_dup(v.iter().map(|k| SortKey::to_bits_ordered(*k)), probe)
+        })
     }
 }
 
@@ -70,9 +101,13 @@ pub struct ExternalJob {
     pub input: PathBuf,
     /// Where the sorted output file is written.
     pub output: PathBuf,
-    /// Which of the four key domains to sort the file as (validated
-    /// against the input's header when one is present).
+    /// Which key domain to sort the file as (validated against the
+    /// input's header when one is present).
     pub key_kind: KeyKind,
+    /// Per-record payload width in bytes (0 = bare keys). Must be one of
+    /// [`crate::key::DISPATCH_PAYLOADS`]; the spill format carries the
+    /// payload in a per-entry lane (v4/v5 headers).
+    pub payload: usize,
     /// Budget, threading and merge knobs for the external sorter.
     pub config: ExternalConfig,
 }
@@ -234,6 +269,30 @@ mod tests {
     }
 
     #[test]
+    fn keybuf_strings_and_records_dispatch() {
+        // prefix-collided strings count as duplicates in the probe: the
+        // first 8 bytes ("prefix-a") collide for three of the four keys,
+        // so the router sees 2 distinct bit patterns out of 4
+        let s = KeyBuf::Str(vec![
+            PrefixString::from_bytes(b"prefix-aa"),
+            PrefixString::from_bytes(b"prefix-aa"),
+            PrefixString::from_bytes(b"prefix-ab"),
+            PrefixString::from_bytes(b"zzz"),
+        ]);
+        assert_eq!(s.len(), 4);
+        assert!((s.probe_duplicate_fraction(4) - 0.5).abs() < 1e-12);
+        // records probe on the key alone — distinct payloads don't make
+        // equal keys distinct
+        let r = KeyBuf::Rec64(vec![
+            SortItem::new(5u64, [1u8; 8]),
+            SortItem::new(5u64, [2u8; 8]),
+            SortItem::new(9u64, [3u8; 8]),
+        ]);
+        assert_eq!(r.len(), 3);
+        assert!((r.probe_duplicate_fraction(3) - (1.0 - 2.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
     fn payload_len_hints() {
         let p = JobPayload::InMemory(KeyBuf::U64(vec![1, 2, 3]));
         assert_eq!(p.len_hint(), 3);
@@ -242,6 +301,7 @@ mod tests {
             input: PathBuf::from("/definitely/not/a/file.bin"),
             output: PathBuf::from("/tmp/out.bin"),
             key_kind: KeyKind::U64,
+            payload: 0,
             config: ExternalConfig::default(),
         });
         assert!(missing.is_external());
@@ -257,6 +317,7 @@ mod tests {
             input: p.clone(),
             output: dir.join("out.bin"),
             key_kind: KeyKind::U32,
+            payload: 0,
             config: ExternalConfig::default(),
         });
         // bytes/8 would undercount a 4-byte file; the header knows better

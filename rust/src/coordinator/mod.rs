@@ -216,38 +216,16 @@ fn run_job(mut job: JobSpec, threads: usize) -> JobReport {
     let engine = route(&job);
     let t0 = std::time::Instant::now();
     let (n, sorted, external) = match &mut job.payload {
-        JobPayload::InMemory(KeyBuf::F64(v)) => {
+        // one arm per key domain used to live here; `with_keybuf!` is now
+        // the single spelled-out dispatch over KeyBuf variants
+        JobPayload::InMemory(buf) => crate::with_keybuf!(buf, v => {
             if threads > 1 && job.parallel {
                 sort_parallel(engine, v, threads);
             } else {
                 sort_sequential(engine, v);
             }
             (v.len(), is_sorted(v), None)
-        }
-        JobPayload::InMemory(KeyBuf::U64(v)) => {
-            if threads > 1 && job.parallel {
-                sort_parallel(engine, v, threads);
-            } else {
-                sort_sequential(engine, v);
-            }
-            (v.len(), is_sorted(v), None)
-        }
-        JobPayload::InMemory(KeyBuf::F32(v)) => {
-            if threads > 1 && job.parallel {
-                sort_parallel(engine, v, threads);
-            } else {
-                sort_sequential(engine, v);
-            }
-            (v.len(), is_sorted(v), None)
-        }
-        JobPayload::InMemory(KeyBuf::U32(v)) => {
-            if threads > 1 && job.parallel {
-                sort_parallel(engine, v, threads);
-            } else {
-                sort_sequential(engine, v);
-            }
-            (v.len(), is_sorted(v), None)
-        }
+        }),
         JobPayload::External(ext) => {
             let ext_threads = if job.parallel { threads } else { 1 };
             let (n, ok, report) = run_external_job(job.id, ext, ext_threads);
@@ -279,7 +257,8 @@ fn run_external_job(
     if cfg.threads == 0 {
         cfg.threads = threads;
     }
-    let outcome = external::sort_and_verify(ext.key_kind, &ext.input, &ext.output, &cfg);
+    let outcome =
+        external::sort_and_verify(ext.key_kind, ext.payload, &ext.input, &ext.output, &cfg);
     match outcome {
         Ok((rep, _sort_secs, ok)) => (rep.keys as usize, ok, rep),
         Err(e) => {
@@ -321,6 +300,34 @@ mod tests {
     }
 
     #[test]
+    fn string_and_record_jobs_run_in_memory() {
+        use crate::key::{PrefixString, SortItem};
+        let mut rng = Xoshiro256pp::new(123);
+        // every key shares an 8-byte prefix, so all ordered-bits images
+        // collide: routing sees a dup-heavy job and the engines lean
+        // entirely on the tie-repair pass for the tail order
+        let strs: Vec<PrefixString> = (0..20_000)
+            .map(|_| {
+                let mut b = [0u8; 12];
+                b[..8].copy_from_slice(b"prefix--");
+                b[8..].copy_from_slice(&rng.next_u32().to_be_bytes());
+                PrefixString::from_bytes(&b)
+            })
+            .collect();
+        let recs: Vec<SortItem<u64, 8>> = (0..20_000)
+            .map(|i| SortItem::new(rng.next_below(1000), (i as u64).to_le_bytes()))
+            .collect();
+        let c = Coordinator::new(2);
+        c.submit(JobSpec::auto(0, KeyBuf::Str(strs.clone())));
+        c.submit(JobSpec::auto(1, KeyBuf::Rec64(recs)));
+        let (reports, metrics) = c.drain();
+        assert_eq!(reports.len(), 2);
+        assert!(reports.iter().all(|r| r.verified_sorted), "full-order verified");
+        assert_eq!(metrics.total_failures(), 0);
+        assert_eq!(reports.iter().find(|r| r.id == 0).unwrap().n, strs.len());
+    }
+
+    #[test]
     fn explicit_engine_respected() {
         let c = Coordinator::new(2);
         let mut j = job(1, 50_000, false);
@@ -357,6 +364,7 @@ mod tests {
                 input: input.clone(),
                 output: output.clone(),
                 key_kind: KeyKind::U64,
+                payload: 0,
                 // 8Ki-key chunks force several runs + a real merge
                 config: ExternalConfig::with_budget(8192 * 8),
             },
@@ -403,6 +411,7 @@ mod tests {
                 input: input.clone(),
                 output: output.clone(),
                 key_kind: KeyKind::U64,
+                payload: 0,
                 config: ExternalConfig {
                     spill_codec: SpillCodec::Delta,
                     ..ExternalConfig::with_budget(8192 * 8)
@@ -452,6 +461,7 @@ mod tests {
                     input: input.clone(),
                     output: output.clone(),
                     key_kind: KeyKind::U64,
+                    payload: 0,
                     config: ExternalConfig::with_budget(8192 * 8),
                 },
             );

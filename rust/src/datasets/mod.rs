@@ -13,7 +13,7 @@ pub mod synthetic;
 
 use std::path::Path;
 
-use crate::key::KeyKind;
+use crate::key::{KeyKind, PrefixString, SortItem, SortKey};
 use crate::util::rng::{Xoshiro256pp, Zipf};
 
 /// Key type of a dataset, mirroring the paper (synthetic = f64 doubles,
@@ -469,6 +469,101 @@ impl ChunkedU32 {
     }
 }
 
+/// Map one ordered-bits image to a prefix-encoded string key: 16 hex
+/// digits, most significant nibble first. Hex digits are ASCII-ordered,
+/// so string order equals the source's numeric order — and the 8-char
+/// prefix only covers the top 32 bits, so any dataset whose draws share
+/// high bits (timestamps, the dup laws) produces prefix-*tied* keys whose
+/// order lives entirely in the comparison tail.
+fn str_key_of(bits: u64) -> PrefixString {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut buf = [0u8; 16];
+    for (i, b) in buf.iter_mut().enumerate() {
+        *b = HEX[((bits >> (60 - 4 * i)) & 0xF) as usize];
+    }
+    PrefixString::from_bytes(&buf)
+}
+
+/// Stateful chunk stream rendering any registered dataset as
+/// prefix-encoded string keys (the `--key str` workload): each draw of
+/// the native f64/u64 stream becomes its 16-hex-digit render via
+/// [`str_key_of`], preserving the law's order and tie structure.
+pub struct ChunkedStr {
+    f: Option<ChunkedF64>,
+    u: Option<ChunkedU64>,
+}
+
+/// Open a string-key chunk stream over any registered dataset.
+pub fn chunked_str(name: &str, n: usize, seed: u64) -> Result<ChunkedStr, String> {
+    let spec = spec(name).ok_or_else(|| format!("unknown dataset {name}"))?;
+    Ok(match spec.key_type {
+        KeyType::F64 => ChunkedStr {
+            f: Some(chunked_f64(spec.name, n, seed)?),
+            u: None,
+        },
+        KeyType::U64 => ChunkedStr {
+            f: None,
+            u: Some(chunked_u64(spec.name, n, seed)?),
+        },
+    })
+}
+
+impl ChunkedStr {
+    /// Keys not yet produced.
+    pub fn remaining(&self) -> usize {
+        match (&self.f, &self.u) {
+            (Some(g), _) => g.remaining(),
+            (_, Some(g)) => g.remaining(),
+            _ => unreachable!("chunked_str holds exactly one stream"),
+        }
+    }
+
+    /// Next up-to-`max_len` keys; `None` once `n` keys were produced.
+    pub fn next_chunk(&mut self, max_len: usize) -> Option<Vec<PrefixString>> {
+        if let Some(g) = &mut self.f {
+            g.next_chunk(max_len)
+                .map(|c| c.iter().map(|x| str_key_of(x.to_bits_ordered())).collect())
+        } else {
+            self.u
+                .as_mut()
+                .unwrap()
+                .next_chunk(max_len)
+                .map(|c| c.iter().map(|x| str_key_of(*x)).collect())
+        }
+    }
+}
+
+/// Generate a string-keyed dataset by name: one all-at-once chunk of the
+/// [`chunked_str`] stream.
+pub fn generate_str(name: &str, n: usize, seed: u64) -> Result<Vec<PrefixString>, String> {
+    let mut gen = chunked_str(name, n, seed)?;
+    Ok(gen.next_chunk(n).unwrap_or_default())
+}
+
+/// Attach `P`-byte payloads to a key chunk, making records: the payload
+/// carries the key's global stream position (row id, LE u64) so a sorted
+/// output can be checked for key-aligned payload integrity; payloads
+/// wider than 8 bytes fill the tail with an index-derived pattern so
+/// every byte is data-dependent.
+pub fn attach_payloads<K: SortKey, const P: usize>(
+    keys: Vec<K>,
+    start: u64,
+) -> Vec<SortItem<K, P>> {
+    keys.into_iter()
+        .enumerate()
+        .map(|(i, k)| {
+            let id = (start + i as u64).to_le_bytes();
+            let mut val = [0u8; P];
+            let m = P.min(8);
+            val[..m].copy_from_slice(&id[..m]);
+            for (j, b) in val.iter_mut().enumerate().skip(m) {
+                *b = id[j % 8] ^ (j as u8);
+            }
+            SortItem::new(k, val)
+        })
+        .collect()
+}
+
 /// Write a synthetic dataset at 4-byte width through the dataset-native
 /// f32 sampler ([`chunked_f32`]) — the PCF-style narrow-key workload — in
 /// bounded memory.
@@ -557,6 +652,92 @@ pub fn write_dataset_file_width(
         }
         (4, KeyType::U64) => {
             write_u32_file(spec.name, n, seed, path, chunk_len)?;
+            Ok(KeyKind::U32)
+        }
+        _ => Err(format!("unsupported key width {width} (use 4 or 8)")),
+    }
+}
+
+/// Monomorphic record writer: attach `P`-byte row-id payloads to each
+/// chunk and stream the `SortItem`s through the spill codec (v4 header).
+fn write_rec<K: SortKey, const P: usize>(
+    path: &Path,
+    chunk_len: usize,
+    mut next: impl FnMut(usize) -> Option<Vec<K>>,
+) -> Result<(), String> {
+    let mut idx = 0u64;
+    write_chunks::<SortItem<K, P>>(path, chunk_len, |len| {
+        next(len).map(|c| {
+            let out = attach_payloads::<K, P>(c, idx);
+            idx += out.len() as u64;
+            out
+        })
+    })
+}
+
+/// Dispatch a bare-key chunk stream over the supported payload widths
+/// ([`crate::key::DISPATCH_PAYLOADS`]).
+fn write_rec_payload<K: SortKey>(
+    path: &Path,
+    chunk_len: usize,
+    payload: usize,
+    next: impl FnMut(usize) -> Option<Vec<K>>,
+) -> Result<(), String> {
+    match payload {
+        0 => write_chunks(path, chunk_len, next),
+        8 => write_rec::<K, 8>(path, chunk_len, next),
+        64 => write_rec::<K, 64>(path, chunk_len, next),
+        p => Err(format!(
+            "unsupported payload width {p} (supported: {:?})",
+            crate::key::DISPATCH_PAYLOADS
+        )),
+    }
+}
+
+/// Write any registered dataset with the full key/record surface of the
+/// CLI: `str_keys` renders the stream as prefix-encoded strings
+/// ([`chunked_str`]); `payload > 0` attaches row-id payloads, making a
+/// record (v4) file. `width` keeps the numeric narrowing rule of
+/// [`write_dataset_file_width`] and is ignored for string keys (one
+/// 16-byte encoding). Returns the key domain written.
+pub fn write_dataset_file_ext(
+    name: &str,
+    n: usize,
+    seed: u64,
+    path: &Path,
+    chunk_len: usize,
+    width: usize,
+    str_keys: bool,
+    payload: usize,
+) -> Result<KeyKind, String> {
+    if str_keys {
+        let mut g = chunked_str(name, n, seed)?;
+        write_rec_payload::<PrefixString>(path, chunk_len, payload, |len| g.next_chunk(len))?;
+        return Ok(KeyKind::Str);
+    }
+    if payload == 0 {
+        return write_dataset_file_width(name, n, seed, path, chunk_len, width);
+    }
+    let spec = spec(name).ok_or_else(|| format!("unknown dataset {name}"))?;
+    match (width, spec.key_type) {
+        (8, KeyType::F64) => {
+            let mut g = chunked_f64(spec.name, n, seed)?;
+            write_rec_payload::<f64>(path, chunk_len, payload, |len| g.next_chunk(len))?;
+            Ok(KeyKind::F64)
+        }
+        (8, KeyType::U64) => {
+            let mut g = chunked_u64(spec.name, n, seed)?;
+            write_rec_payload::<u64>(path, chunk_len, payload, |len| g.next_chunk(len))?;
+            Ok(KeyKind::U64)
+        }
+        (4, KeyType::F64) => {
+            let mut g = chunked_f32(spec.name, n, seed)?;
+            write_rec_payload::<f32>(path, chunk_len, payload, |len| g.next_chunk(len))?;
+            Ok(KeyKind::F32)
+        }
+        (4, KeyType::U64) => {
+            let mut g = chunked_u32(spec.name, n, seed)?;
+            write_rec_payload::<u32>(path, chunk_len, payload, |len| g.next_chunk(len))?;
             Ok(KeyKind::U32)
         }
         _ => Err(format!("unsupported key width {width} (use 4 or 8)")),
@@ -764,6 +945,68 @@ mod tests {
                 "{name}: width-4 distinct ratio {rn} collapsed vs width-8 {rw}"
             );
         }
+    }
+
+    #[test]
+    fn string_streams_preserve_order_and_tie_structure() {
+        // every dataset renders; order of the string keys equals the
+        // numeric order of the source stream
+        for name in ["uniform", "wiki_edit"] {
+            let s = generate_str(name, 2000, 4).unwrap();
+            assert_eq!(s.len(), 2000, "{name}");
+            let mut nums: Vec<u64> = match spec(name).unwrap().key_type {
+                KeyType::F64 => generate_f64(name, 2000, 4)
+                    .unwrap()
+                    .iter()
+                    .map(|x| x.to_bits_ordered())
+                    .collect(),
+                KeyType::U64 => generate_u64(name, 2000, 4).unwrap(),
+            };
+            let mut strs = s.clone();
+            nums.sort_unstable();
+            strs.sort_unstable();
+            let roundtrip: Vec<PrefixString> = nums.iter().map(|&b| str_key_of(b)).collect();
+            assert_eq!(
+                strs.iter().map(|k| k.as_bytes().to_vec()).collect::<Vec<_>>(),
+                roundtrip.iter().map(|k| k.as_bytes().to_vec()).collect::<Vec<_>>(),
+                "{name}: string order must equal numeric order"
+            );
+        }
+        // wiki timestamps share their top 32 bits heavily: the 8-char
+        // prefix must actually tie (that's the workload's whole point)
+        let s = generate_str("wiki_edit", 2000, 4).unwrap();
+        let mut bits: Vec<u64> = s.iter().map(|k| k.to_bits_ordered()).collect();
+        bits.sort_unstable();
+        let prefix_ties = bits.windows(2).filter(|w| w[0] == w[1]).count();
+        assert!(prefix_ties > 100, "prefix ties lost: {prefix_ties}");
+        assert!(chunked_str("bogus", 10, 1).is_err());
+    }
+
+    #[test]
+    fn record_files_roundtrip_with_row_id_payloads() {
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("aipso-ds-rec-{}.bin", std::process::id()));
+        let kind =
+            write_dataset_file_ext("fb_ids", 600, 7, &p, 128, 8, false, 8).unwrap();
+        assert_eq!(kind, KeyKind::U64);
+        let back = crate::external::read_keys_file::<SortItem<u64, 8>>(&p).unwrap();
+        let want = generate_u64("fb_ids", 600, 7).unwrap();
+        assert_eq!(back.len(), want.len());
+        for (i, (rec, k)) in back.iter().zip(&want).enumerate() {
+            assert_eq!(rec.key, *k, "key stream intact at {i}");
+            assert_eq!(rec.val, (i as u64).to_le_bytes(), "row id payload at {i}");
+        }
+        // string-key records: header carries the Str domain
+        let kind =
+            write_dataset_file_ext("uniform", 300, 7, &p, 128, 8, true, 64).unwrap();
+        assert_eq!(kind, KeyKind::Str);
+        let back =
+            crate::external::read_keys_file::<SortItem<PrefixString, 64>>(&p).unwrap();
+        assert_eq!(back.len(), 300);
+        let want = generate_str("uniform", 300, 7).unwrap();
+        assert_eq!(back[5].key.as_bytes(), want[5].as_bytes());
+        assert!(write_dataset_file_ext("uniform", 10, 7, &p, 128, 8, false, 3).is_err());
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

@@ -13,9 +13,12 @@
 //! live key, so the merge needs no sentinel keys.
 //!
 //! Sources are [`KeyStream`]s, so the tree is codec-agnostic: a
-//! [`RunReader`] source decodes raw fixed-width (v0/v1) or delta+varint
-//! block (v2) payloads per its file's header, and runs of different
-//! codecs merge together in one tournament.
+//! [`RunReader`] source decodes raw fixed-width (v0/v1/v4) or
+//! delta+varint block (v2/v5) payloads per its file's header, and runs
+//! of different codecs merge together in one tournament. Records and
+//! string keys flow through unchanged — matches compare under
+//! [`SortKey::key_cmp`], so payload lanes ride along and prefix-tied
+//! strings order on their tails.
 
 use std::io;
 use std::path::Path;
@@ -169,13 +172,18 @@ impl<K: SortKey, S: KeyStream<K>> LoserTree<K, S> {
 
 /// Source `a` beats source `b` iff its head orders strictly first
 /// (exhausted sources lose to everything; ties break to the lower index
-/// for determinism).
+/// for determinism). Matches play under the key's *full* order
+/// ([`SortKey::key_cmp`]) — for bare numerics that is the ordered-bits
+/// compare it always was, and for prefix-encoded strings it breaks
+/// prefix-collided bits on the tail so merged runs come out in full
+/// lexicographic order, not just bit order.
 fn wins<K: SortKey>(head: &[Option<K>], a: usize, b: usize) -> bool {
     match (head[a], head[b]) {
-        (Some(x), Some(y)) => {
-            let (xb, yb) = (x.to_bits_ordered(), y.to_bits_ordered());
-            xb < yb || (xb == yb && a < b)
-        }
+        (Some(x), Some(y)) => match x.key_cmp(y) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Equal => a < b,
+            std::cmp::Ordering::Greater => false,
+        },
         (Some(_), None) => true,
         (None, Some(_)) => false,
         (None, None) => a < b,

@@ -206,14 +206,18 @@ pub fn sort_file<K: SortKey>(
     sort_from(src, output, cfg)
 }
 
-/// [`sort_file`] dispatched by a runtime [`KeyKind`], followed by a
-/// stream-verification of the output — the one kind→generic dispatch
-/// point shared by the CLI, the coordinator and the bench harness (a
-/// future fifth key domain only needs an arm here). Returns the pipeline
-/// report, the wall-clock seconds of the sort itself (verification
-/// excluded), and whether the output verified sorted.
+/// [`sort_file`] dispatched by a runtime `(KeyKind, payload-width)` pair
+/// via [`crate::dispatch_key_type!`], followed by a stream-verification
+/// of the output — the one kind→generic dispatch point shared by the
+/// CLI, the coordinator and the bench harness (a future key domain or
+/// payload width only needs an arm in the macro). `payload` is the
+/// record's value width in bytes; `0` sorts bare keys exactly as before.
+/// Returns the pipeline report, the wall-clock seconds of the sort
+/// itself (verification excluded), and whether the output verified
+/// sorted under the key's full order.
 pub fn sort_and_verify(
     kind: KeyKind,
+    payload: usize,
     input: &Path,
     output: &Path,
     cfg: &ExternalConfig,
@@ -229,12 +233,13 @@ pub fn sort_and_verify(
         let ok = verify_sorted_file::<K>(output, cfg.effective_io_buffer())?;
         Ok((report, secs, ok))
     }
-    match kind {
-        KeyKind::U64 => go::<u64>(input, output, cfg),
-        KeyKind::F64 => go::<f64>(input, output, cfg),
-        KeyKind::U32 => go::<u32>(input, output, cfg),
-        KeyKind::F32 => go::<f32>(input, output, cfg),
-    }
+    crate::dispatch_key_type!(kind, payload, K => go::<K>(input, output, cfg), _ => {
+        Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("unsupported record payload width {payload} (supported: {:?})",
+                crate::key::DISPATCH_PAYLOADS),
+        ))
+    })
 }
 
 /// Sort an arbitrary key stream into `output` under the memory budget.

@@ -424,6 +424,10 @@ impl<'a> ChunkSorter<'a> {
         } else {
             crate::sample_sort::sort_par(chunk, self.threads);
         }
+        // both engines sort by ordered bits; prefix-tied string keys need
+        // their equal-bits runs finished under the full key order before
+        // the run spills (a no-op that compiles away for exact-bit keys)
+        crate::key::repair_bit_ties(chunk);
 
         let epoch = self.models.len().saturating_sub(1);
         self.run_epochs.push(epoch);

@@ -20,8 +20,17 @@
 //!   steps stay cheap. `gen` outputs ship compressed without the
 //!   sorted-run precondition; the run/merge paths never produce v3.
 //!
-//! All four [`SortKey`] domains (`u64`/`f64` at 8 bytes, `u32`/`f32` at 4)
-//! flow through both codecs.
+//! Elements with a **lane** ([`SortKey::LANE_WIDTH`] `> 0` — records and
+//! string keys) reuse the same two payload codecs under their own version
+//! numbers (v4 = record raw, v5 = record delta), because the lane bytes
+//! change the entry layout: v4 entries are the full `WIDTH`-byte encoding
+//! (core key + lane), and v5 blocks carry a per-key lane array between
+//! the restart key and the delta tokens. Zigzag never carries lanes —
+//! record/string payloads spill raw or delta only.
+//!
+//! All five [`SortKey`] domains (`u64`/`f64` at 8 bytes, `u32`/`f32` at
+//! 4, prefix strings at 8 core bytes) flow through both codecs, bare or
+//! as [`crate::key::SortItem`] records.
 //!
 //! # Spill format
 //!
@@ -32,8 +41,8 @@
 //! |-------:|-----:|-------|
 //! | 0      | 8    | magic `b"AIPSPILL"` |
 //! | 8      | 2    | format version (little-endian; dispatches the payload codec) |
-//! | 10     | 1    | key-type tag ([`KeyKind::tag`]: 0=u64, 1=f64, 2=u32, 3=f32) |
-//! | 11     | 1    | key width in bytes (redundant with the tag; cross-checked) |
+//! | 10     | 1    | key-type tag ([`KeyKind::tag`]: 0=u64, 1=f64, 2=u32, 3=f32, 4=str) |
+//! | 11     | 1    | v1–v3: key width in bytes (redundant with the tag; cross-checked). v4/v5: **lane width** in bytes (`≥ 1` — payload + string tail per entry; the core key width is implied by the tag) |
 //! | 12     | 4    | direct-IO pad: trailing zero bytes past the payload (LE; 0 unless `O_DIRECT` wrote the file) |
 //! | 16     | 8    | key count (little-endian) |
 //!
@@ -54,6 +63,18 @@
 //!   token carrying `zigzag(next − prev)` over the ordered-bits space
 //!   (wrapping arithmetic), so any key order encodes. v3 files stream
 //!   and sort like any input but have no sorted-run index.
+//! * **v4** ([`RECORD_RAW_VERSION`]) — v1's fixed-width layout for
+//!   lane-carrying elements: `count × WIDTH` bytes, each entry the full
+//!   [`SortKey::to_le_bytes`] encoding (core key immediately followed by
+//!   its lane). The header's byte 11 records the lane width.
+//! * **v5** ([`RECORD_DELTA_VERSION`]) — v2's block layout for
+//!   lane-carrying elements: each block inserts a `count × LANE_WIDTH`
+//!   lane array between the (core-width) restart key and the delta
+//!   tokens, and the block's payload length covers lanes **plus** tokens
+//!   — so every offset computation (walks, side-cars, whole-block skips)
+//!   is shared with v2 verbatim. Key bits delta-encode exactly as in v2;
+//!   equal-bits keys still collapse into dup-run escapes (their distinct
+//!   lanes live in the lane array).
 //!
 //! # v2 block layout
 //!
@@ -114,8 +135,17 @@ pub const DELTA_VERSION: u16 = 2;
 /// Format version of zigzag+varint block-compressed (unsorted) files.
 pub const ZIGZAG_VERSION: u16 = 3;
 
+/// Format version of raw fixed-width files whose entries carry a lane
+/// (records / string keys): v1's layout at `WIDTH = core + lane` bytes
+/// per entry.
+pub const RECORD_RAW_VERSION: u16 = 4;
+
+/// Format version of delta block files whose entries carry a lane: v2's
+/// layout plus a per-block lane array.
+pub const RECORD_DELTA_VERSION: u16 = 5;
+
 /// Newest spill-format version this build understands.
-pub const FORMAT_VERSION: u16 = ZIGZAG_VERSION;
+pub const FORMAT_VERSION: u16 = RECORD_DELTA_VERSION;
 
 /// Bytes of header preceding the key payload in v1+ files.
 pub const HEADER_LEN: usize = 24;
@@ -147,12 +177,26 @@ pub enum SpillCodec {
 }
 
 impl SpillCodec {
-    /// Header version this codec writes.
+    /// Header version this codec writes for lane-free (bare numeric)
+    /// keys.
     pub const fn version(self) -> u16 {
         match self {
             SpillCodec::Raw => RAW_VERSION,
             SpillCodec::Delta => DELTA_VERSION,
             SpillCodec::Zigzag => ZIGZAG_VERSION,
+        }
+    }
+
+    /// Header version this codec writes for an element with `lane` bytes
+    /// of lane: the legacy versions when `lane == 0` (byte-identical
+    /// files), the record versions otherwise. Zigzag never carries lanes
+    /// — the writers reject that combination before a header exists.
+    pub const fn version_for(self, lane: usize) -> u16 {
+        match (self, lane) {
+            (SpillCodec::Raw, 0) | (SpillCodec::Zigzag, _) => self.version(),
+            (SpillCodec::Delta, 0) => DELTA_VERSION,
+            (SpillCodec::Raw, _) => RECORD_RAW_VERSION,
+            (SpillCodec::Delta, _) => RECORD_DELTA_VERSION,
         }
     }
 
@@ -197,6 +241,10 @@ pub enum SpillVersion {
     V2,
     /// Zigzag+varint blocks behind the v3 header (unsorted-capable).
     V3,
+    /// Raw fixed-width lane-carrying entries behind the v4 header.
+    V4,
+    /// Delta blocks with per-block lane arrays behind the v5 header.
+    V5,
 }
 
 impl SpillVersion {
@@ -207,6 +255,8 @@ impl SpillVersion {
             1 => Some(SpillVersion::V1),
             2 => Some(SpillVersion::V2),
             3 => Some(SpillVersion::V3),
+            4 => Some(SpillVersion::V4),
+            5 => Some(SpillVersion::V5),
             _ => None,
         }
     }
@@ -219,6 +269,8 @@ impl SpillVersion {
             SpillVersion::V1 => RAW_VERSION,
             SpillVersion::V2 => DELTA_VERSION,
             SpillVersion::V3 => ZIGZAG_VERSION,
+            SpillVersion::V4 => RECORD_RAW_VERSION,
+            SpillVersion::V5 => RECORD_DELTA_VERSION,
         }
     }
 }
@@ -238,27 +290,47 @@ pub struct SpillHeader {
     /// extent matters; pre-pad writers left these header bytes zero, so
     /// old files decode as `pad == 0` unchanged.
     pub pad: u32,
+    /// Lane bytes per entry ([`SortKey::LANE_WIDTH`]): record payload plus
+    /// string tail. `0` for the legacy bare-key formats (v1–v3), `≥ 1`
+    /// for the record formats (v4/v5).
+    pub lane: u8,
 }
 
 impl SpillHeader {
     /// Header for a fresh **raw** (v1, interchange-format) file of `count`
-    /// keys.
+    /// lane-free keys.
     pub fn new(kind: KeyKind, count: u64) -> SpillHeader {
         SpillHeader {
             version: RAW_VERSION,
             kind,
             count,
             pad: 0,
+            lane: 0,
         }
     }
 
-    /// Header for a fresh file written with `codec`.
+    /// Header for a fresh lane-free file written with `codec`.
     pub fn for_codec(codec: SpillCodec, kind: KeyKind, count: u64) -> SpillHeader {
         SpillHeader {
             version: codec.version(),
             kind,
             count,
             pad: 0,
+            lane: 0,
+        }
+    }
+
+    /// Header for a fresh file of `count` elements of type `K` written
+    /// with `codec` — the lane-aware constructor every writer uses:
+    /// lane-free keys get the legacy versions byte-for-byte, records and
+    /// string keys the record versions.
+    pub fn for_sort_key<K: SortKey>(codec: SpillCodec, count: u64) -> SpillHeader {
+        SpillHeader {
+            version: codec.version_for(K::LANE_WIDTH),
+            kind: K::KIND,
+            count,
+            pad: 0,
+            lane: K::LANE_WIDTH as u8,
         }
     }
 
@@ -267,13 +339,26 @@ impl SpillHeader {
         SpillVersion::of(self.version).expect("decode validated the version")
     }
 
-    /// Serialize into the on-disk layout (see the module docs).
+    /// Bytes per entry of the fixed-width (v1/v4) layout: the core key
+    /// width plus the lane.
+    pub fn entry_width(&self) -> usize {
+        self.kind.width() + self.lane as usize
+    }
+
+    /// Serialize into the on-disk layout (see the module docs). Byte 11
+    /// doubles as the redundant key width (lane-free formats) or the lane
+    /// width (record formats) — the two never collide because record
+    /// lanes are `≥ 1` only under the record version numbers.
     pub fn encode(&self) -> [u8; HEADER_LEN] {
         let mut b = [0u8; HEADER_LEN];
         b[..8].copy_from_slice(&MAGIC);
         b[8..10].copy_from_slice(&self.version.to_le_bytes());
         b[10] = self.kind.tag();
-        b[11] = self.kind.width() as u8;
+        b[11] = if self.lane == 0 {
+            self.kind.width() as u8
+        } else {
+            self.lane
+        };
         b[12..16].copy_from_slice(&self.pad.to_le_bytes());
         b[16..24].copy_from_slice(&self.count.to_le_bytes());
         b
@@ -285,12 +370,12 @@ impl SpillHeader {
         debug_assert_eq!(&b[..8], &MAGIC);
         let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
         let version = u16::from_le_bytes([b[8], b[9]]);
-        if SpillVersion::of(version).is_none() {
+        let Some(v) = SpillVersion::of(version) else {
             return Err(bad(format!(
                 "{}: unsupported spill format version {version} (this build reads v1..=v{FORMAT_VERSION})",
                 path.display()
             )));
-        }
+        };
         let kind = KeyKind::from_tag(b[10]).ok_or_else(|| {
             bad(format!(
                 "{}: unknown key-type tag {} in spill header",
@@ -298,15 +383,30 @@ impl SpillHeader {
                 b[10]
             ))
         })?;
-        if b[11] as usize != kind.width() {
-            return Err(bad(format!(
-                "{}: header key width {} does not match key type {} (width {})",
-                path.display(),
-                b[11],
-                kind.name(),
-                kind.width()
-            )));
-        }
+        let lane = match v {
+            SpillVersion::V4 | SpillVersion::V5 => {
+                if b[11] == 0 {
+                    return Err(bad(format!(
+                        "{}: record spill header carries a zero lane width \
+                         (lane-free files use format v1..=v3)",
+                        path.display()
+                    )));
+                }
+                b[11]
+            }
+            _ => {
+                if b[11] as usize != kind.width() {
+                    return Err(bad(format!(
+                        "{}: header key width {} does not match key type {} (width {})",
+                        path.display(),
+                        b[11],
+                        kind.name(),
+                        kind.width()
+                    )));
+                }
+                0
+            }
+        };
         let pad = u32::from_le_bytes(b[12..16].try_into().unwrap());
         let count = u64::from_le_bytes(b[16..24].try_into().unwrap());
         Ok(SpillHeader {
@@ -314,6 +414,7 @@ impl SpillHeader {
             kind,
             count,
             pad,
+            lane,
         })
     }
 }
@@ -382,12 +483,13 @@ fn payload_extent(h: &SpillHeader, len: u64, path: &Path) -> io::Result<u64> {
         .ok_or_else(|| bad_data(path, "direct-IO pad larger than the file's payload"))
 }
 
-/// Check that a v1 file's byte length holds exactly the header's `count`
-/// keys (shared by [`resolve_layout`] and [`file_key_count`]).
+/// Check that a v1/v4 file's byte length holds exactly the header's
+/// `count` fixed-width entries (shared by [`resolve_layout`] and
+/// [`file_key_count`]).
 fn validate_payload_v1(h: &SpillHeader, len: u64, path: &Path) -> io::Result<()> {
     let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
     let payload = payload_extent(h, len, path)?;
-    let expect = h.count.checked_mul(h.kind.width() as u64).ok_or_else(|| {
+    let expect = h.count.checked_mul(h.entry_width() as u64).ok_or_else(|| {
         bad(format!(
             "{}: absurd key count {} in spill header",
             path.display(),
@@ -427,10 +529,15 @@ fn validate_payload_v2(h: &SpillHeader, len: u64, path: &Path) -> io::Result<()>
     Ok(())
 }
 
-/// Validate a file against the expected key domain and locate its
-/// payload. Accepts v1/v2 files of exactly `kind` and headerless v0 files
-/// when `kind` is 8 bytes wide.
-fn resolve_layout(file: &mut File, path: &Path, kind: KeyKind) -> io::Result<KeyLayout> {
+/// Validate a file against the expected key domain and lane width, and
+/// locate its payload. Accepts headered files of exactly `kind`/`lane`,
+/// and headerless v0 files only for lane-free 8-byte key types.
+fn resolve_layout(
+    file: &mut File,
+    path: &Path,
+    kind: KeyKind,
+    lane: usize,
+) -> io::Result<KeyLayout> {
     let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
     let len = file.metadata()?.len();
     match parse_header(file, path)? {
@@ -443,10 +550,21 @@ fn resolve_layout(file: &mut File, path: &Path, kind: KeyKind) -> io::Result<Key
                     kind.name()
                 )));
             }
+            if h.lane as usize != lane {
+                return Err(bad(format!(
+                    "{}: file entries carry a {}-byte lane but the sort \
+                     expects {} (record payload widths must match)",
+                    path.display(),
+                    h.lane,
+                    lane
+                )));
+            }
             let version = h.spill_version();
             match version {
-                SpillVersion::V1 => validate_payload_v1(&h, len, path)?,
-                SpillVersion::V2 | SpillVersion::V3 => validate_payload_v2(&h, len, path)?,
+                SpillVersion::V1 | SpillVersion::V4 => validate_payload_v1(&h, len, path)?,
+                SpillVersion::V2 | SpillVersion::V3 | SpillVersion::V5 => {
+                    validate_payload_v2(&h, len, path)?
+                }
                 SpillVersion::V0 => unreachable!("headered files are v1+"),
             }
             Ok(KeyLayout {
@@ -457,10 +575,11 @@ fn resolve_layout(file: &mut File, path: &Path, kind: KeyKind) -> io::Result<Key
             })
         }
         None => {
-            if kind.width() != 8 {
+            if kind.width() != 8 || lane != 0 {
                 return Err(bad(format!(
-                    "{}: headerless (v0) key files hold 8-byte keys; {} requires \
-                     a self-describing v1 header (write it with this build's gen)",
+                    "{}: headerless (v0) key files hold bare 8-byte keys; {} \
+                     requires a self-describing header (write it with this \
+                     build's gen)",
                     path.display(),
                     kind.name()
                 )));
@@ -930,6 +1049,9 @@ const SLAB_BYTES: usize = 8192;
 struct DeltaState {
     /// Ordered bits of the last decoded key.
     prev: u64,
+    /// Keys in the current block (fixed at block open; indexes the lane
+    /// array).
+    block_count: u32,
     /// Keys of the current block not yet emitted.
     block_remaining: u32,
     /// Token-payload bytes of the current block not yet consumed.
@@ -941,6 +1063,9 @@ struct DeltaState {
     /// Tokens carry zigzag-mapped signed deltas (v3) instead of plain
     /// non-negative deltas (v2).
     zigzag: bool,
+    /// The current block's lane array (v5 only; empty for lane-free
+    /// streams) — `block_count × LANE_WIDTH` bytes, indexed per key.
+    lanes: Vec<u8>,
 }
 
 impl DeltaState {
@@ -999,7 +1124,44 @@ impl SpillRead for Src {
     }
 }
 
-/// Decode the next key of a v2/v3 stream (the caller tracks how many
+/// Load the just-opened block's lane array (v5 — `K::LANE_WIDTH > 0`).
+/// The block's payload length covers lanes + tokens, so the lane bytes
+/// are charged against the payload budget up front and the varint budget
+/// checks keep working unchanged. No-op for lane-free streams.
+fn read_block_lanes<K: SortKey, R: SpillRead>(
+    r: &mut R,
+    st: &mut DeltaState,
+    path: &Path,
+) -> io::Result<()> {
+    if K::LANE_WIDTH == 0 {
+        return Ok(());
+    }
+    let lane_bytes = st.block_count as usize * K::LANE_WIDTH;
+    if lane_bytes as u64 > st.payload_remaining as u64 {
+        return Err(bad_data(
+            path,
+            "record block payload shorter than its lane array",
+        ));
+    }
+    st.lanes.resize(lane_bytes, 0);
+    read_exact_block(r, &mut st.lanes, path)?;
+    st.payload_remaining -= lane_bytes as u32;
+    Ok(())
+}
+
+/// Rebuild key `idx`-of-block from its decoded ordered bits plus its
+/// entry in the block's lane array (exact for every supported type;
+/// lane-free keys reconstruct from bits alone).
+#[inline(always)]
+fn key_with_lane<K: SortKey>(st: &DeltaState, bits: u64, idx: usize) -> K {
+    if K::LANE_WIDTH == 0 {
+        K::from_bits_ordered(bits)
+    } else {
+        K::with_lane(bits, &st.lanes[idx * K::LANE_WIDTH..(idx + 1) * K::LANE_WIDTH])
+    }
+}
+
+/// Decode the next key of a v2/v3/v5 stream (the caller tracks how many
 /// keys remain and never over-calls).
 fn next_delta<K: SortKey, R: SpillRead>(
     r: &mut R,
@@ -1013,21 +1175,26 @@ fn next_delta<K: SortKey, R: SpillRead>(
                 "delta block payload is longer than its tokens (corrupt block framing)",
             ));
         }
-        let (count, payload_len, first) = read_block_header(r, K::WIDTH, path)?;
+        let cw = K::WIDTH - K::LANE_WIDTH;
+        let (count, payload_len, first) = read_block_header(r, cw, path)?;
         st.prev = first;
+        st.block_count = count;
         st.block_remaining = count;
         st.payload_remaining = payload_len;
         st.pending_run = 0;
         st.emit_restart = true;
+        read_block_lanes::<K, R>(r, st, path)?;
     }
+    // lane index of the key being emitted — before the decrement
+    let idx = (st.block_count - st.block_remaining) as usize;
     st.block_remaining -= 1;
     if st.emit_restart {
         st.emit_restart = false;
-        return Ok(K::from_bits_ordered(st.prev));
+        return Ok(key_with_lane::<K>(st, st.prev, idx));
     }
     if st.pending_run > 0 {
         st.pending_run -= 1;
-        return Ok(K::from_bits_ordered(st.prev));
+        return Ok(key_with_lane::<K>(st, st.prev, idx));
     }
     let d = read_varint(r, &mut st.payload_remaining, path)?;
     if d == 0 {
@@ -1039,7 +1206,7 @@ fn next_delta<K: SortKey, R: SpillRead>(
             return Err(bad_data(path, "duplicate run overruns its delta block"));
         }
         st.pending_run = run - 1;
-        return Ok(K::from_bits_ordered(st.prev));
+        return Ok(key_with_lane::<K>(st, st.prev, idx));
     }
     let next = if st.zigzag {
         // signed step over the ordered-bits space; exact mod 2^64, and
@@ -1056,12 +1223,14 @@ fn next_delta<K: SortKey, R: SpillRead>(
         }
     };
     st.prev = next;
-    Ok(K::from_bits_ordered(next))
+    Ok(key_with_lane::<K>(st, next, idx))
 }
 
-/// Skip `skip` keys of a v2/v3 stream positioned at a block boundary,
-/// seeking over whole blocks (restart key + payload length — no decode)
-/// and decode-skipping only inside the final partial block.
+/// Skip `skip` keys of a v2/v3/v5 stream positioned at a block boundary,
+/// seeking over whole blocks (restart key + payload length — no decode;
+/// a v5 payload length covers the lane array too, so the seek clears it
+/// in the same hop) and decode-skipping only inside the final partial
+/// block.
 fn skip_delta<K: SortKey, R: SpillRead>(
     r: &mut R,
     st: &mut DeltaState,
@@ -1070,17 +1239,20 @@ fn skip_delta<K: SortKey, R: SpillRead>(
 ) -> io::Result<()> {
     while skip > 0 {
         if st.block_remaining == 0 {
-            let (count, payload_len, first) = read_block_header(r, K::WIDTH, path)?;
+            let cw = K::WIDTH - K::LANE_WIDTH;
+            let (count, payload_len, first) = read_block_header(r, cw, path)?;
             if count as u64 <= skip {
                 skip -= count as u64;
                 r.seek_relative(payload_len as i64)?;
                 continue;
             }
             st.prev = first;
+            st.block_count = count;
             st.block_remaining = count;
             st.payload_remaining = payload_len;
             st.pending_run = 0;
             st.emit_restart = true;
+            read_block_lanes::<K, R>(r, st, path)?;
         }
         next_delta::<K, R>(r, st, path)?;
         skip -= 1;
@@ -1162,7 +1334,7 @@ impl<K: SortKey> RunReader<K> {
                     pad: h.pad as u64,
                 }
             }
-            None => resolve_layout(&mut file, path, K::KIND)?,
+            None => resolve_layout(&mut file, path, K::KIND, K::LANE_WIDTH)?,
         };
         let start = start.min(layout.n);
         let len = len.min(layout.n - start);
@@ -1175,11 +1347,11 @@ impl<K: SortKey> RunReader<K> {
             None => Src::Buf(BufReader::with_capacity(io_buffer.max(4096), file)),
         };
         let dec = match layout.version {
-            SpillVersion::V0 | SpillVersion::V1 => {
+            SpillVersion::V0 | SpillVersion::V1 | SpillVersion::V4 => {
                 src.seek_abs(layout.data_start + start * K::WIDTH as u64)?;
                 Dec::Raw
             }
-            v @ (SpillVersion::V2 | SpillVersion::V3) => {
+            v @ (SpillVersion::V2 | SpillVersion::V3 | SpillVersion::V5) => {
                 src.seek_abs(layout.data_start)?;
                 Dec::Delta(DeltaState::for_version(v))
             }
@@ -1202,7 +1374,9 @@ impl<K: SortKey> RunReader<K> {
                         // seek to its header and decode-skip only within it
                         let b = d.blocks.partition_point(|e| e.start_idx <= skip) - 1;
                         let e = &d.blocks[b];
-                        let header_off = e.payload_offset - (8 + K::WIDTH) as u64;
+                        // block header = count u32 | payload_len u32 |
+                        // restart core bits (lanes live inside the payload)
+                        let header_off = e.payload_offset - (8 + K::WIDTH - K::LANE_WIDTH) as u64;
                         reader.r.seek_abs(header_off)?;
                         skip -= e.start_idx;
                         crate::obs::metrics::counter_add(crate::obs::C_DIR_HIT, 1);
@@ -1323,21 +1497,22 @@ impl<K: SortKey> RunIndex<K> {
     /// and have no run index.
     pub fn open(path: &Path) -> io::Result<RunIndex<K>> {
         let mut file = File::open(path)?;
-        let layout = resolve_layout(&mut file, path, K::KIND)?;
+        let layout = resolve_layout(&mut file, path, K::KIND, K::LANE_WIDTH)?;
         let kind = match layout.version {
-            SpillVersion::V0 | SpillVersion::V1 => IndexKind::Raw {
+            SpillVersion::V0 | SpillVersion::V1 | SpillVersion::V4 => IndexKind::Raw {
                 data_start: layout.data_start,
             },
-            SpillVersion::V2 => {
+            SpillVersion::V2 | SpillVersion::V5 => {
+                let cw = K::WIDTH - K::LANE_WIDTH;
                 let payload = file.metadata()?.len() - HEADER_LEN as u64 - layout.pad;
-                let blocks = match load_sidecar(path, K::WIDTH, layout.n, payload) {
+                let blocks = match load_sidecar(path, cw, layout.n, payload) {
                     Some(b) => {
                         crate::obs::metrics::counter_add(crate::obs::C_SIDECAR_HIT, 1);
                         b
                     }
                     None => {
                         crate::obs::metrics::counter_add(crate::obs::C_SIDECAR_MISS, 1);
-                        walk_v2_blocks(&mut file, path, layout.n, K::WIDTH, layout.pad, true)?
+                        walk_v2_blocks(&mut file, path, layout.n, cw, layout.pad, true)?
                     }
                 };
                 IndexKind::Delta {
@@ -1359,6 +1534,7 @@ impl<K: SortKey> RunIndex<K> {
                 kind: K::KIND,
                 count: layout.n,
                 pad: layout.pad as u32,
+                lane: K::LANE_WIDTH as u8,
             }),
         };
         Ok(RunIndex {
@@ -1388,8 +1564,11 @@ impl<K: SortKey> RunIndex<K> {
         self.n == 0
     }
 
-    /// Read the key at index `idx` — one positioned read (v0/v1) or a
-    /// cached one-block decode (v2).
+    /// Read the key at index `idx` — one positioned read (v0/v1/v4) or a
+    /// cached one-block decode (v2/v5). On v5 files the delta path
+    /// reconstructs from ordered bits alone (zero lane): the index exists
+    /// for shard-boundary probes, which compare `to_bits_ordered()` only,
+    /// and bit order is exact for every key the cut logic ever compares.
     pub fn key_at(&mut self, idx: u64) -> io::Result<K> {
         debug_assert!(idx < self.n);
         if let IndexKind::Raw { data_start } = &self.kind {
@@ -1422,7 +1601,17 @@ impl<K: SortKey> RunIndex<K> {
             self.file.seek(SeekFrom::Start(e.payload_offset))?;
             let mut payload = vec![0u8; e.payload_len as usize];
             read_exact_block(&mut self.file, &mut payload, &self.path)?;
-            let bits = decode_block_bits::<K>(&payload, e.first_bits, e.count, &self.path)?;
+            // v5 payloads lead with the block's lane array; the tokens
+            // (all the bit decoder needs) follow it
+            let lane_bytes = e.count as usize * K::LANE_WIDTH;
+            if payload.len() < lane_bytes {
+                return Err(bad_data(
+                    &self.path,
+                    "record block payload shorter than its lane array",
+                ));
+            }
+            let bits =
+                decode_block_bits::<K>(&payload[lane_bytes..], e.first_bits, e.count, &self.path)?;
             *cache = Some((b, bits));
         }
         Ok(&cache.as_ref().unwrap().1)
@@ -1509,6 +1698,11 @@ struct DeltaBlock {
     pending_run: u64,
     /// Encoded token payload of the open block.
     payload: Vec<u8>,
+    /// Per-key lane bytes of the open block (v5 only; stays empty for
+    /// lane-free key types). Every accepted key appends its lane here —
+    /// including duplicate-run members, whose lanes may differ even when
+    /// their ordered bits collide (prefix-tied strings).
+    lanes: Vec<u8>,
 }
 
 /// Buffered streaming writer producing a [`RunFile`] in the configured
@@ -1579,6 +1773,16 @@ impl<K: SortKey> RunWriter<K> {
                 ),
             ));
         }
+        if codec == SpillCodec::Zigzag && K::LANE_WIDTH > 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "{}: the zigzag codec is bits-only — records and string \
+                     keys spill raw or delta",
+                    path.display()
+                ),
+            ));
+        }
         Self::open_with(path, io_buffer, codec, &IoCtx::sync(), false, false)
     }
 
@@ -1612,7 +1816,7 @@ impl<K: SortKey> RunWriter<K> {
         allow_direct: bool,
     ) -> io::Result<RunWriter<K>> {
         let mut sink = SpillSink::create(&path, io_buffer.max(4096), io, allow_direct)?;
-        sink.write_all(&SpillHeader::for_codec(codec, K::KIND, 0).encode())?;
+        sink.write_all(&SpillHeader::for_sort_key::<K>(codec, 0).encode())?;
         let sidecar = (sidecar && codec == SpillCodec::Delta).then(Vec::new);
         Ok(RunWriter {
             sink,
@@ -1634,7 +1838,7 @@ impl<K: SortKey> RunWriter<K> {
                 self.sink.write_all(key.to_le_bytes().as_ref())?;
                 self.bytes += K::WIDTH as u64;
             }
-            SpillCodec::Delta => self.push_delta(key.to_bits_ordered())?,
+            SpillCodec::Delta => self.push_delta(key)?,
             SpillCodec::Zigzag => self.push_zigzag(key.to_bits_ordered())?,
         }
         self.n += 1;
@@ -1667,9 +1871,31 @@ impl<K: SortKey> RunWriter<K> {
         Ok(())
     }
 
+    /// Keys per delta block: [`BLOCK_KEYS`] for lane-free types; lane'd
+    /// blocks additionally cap their lane array near 64 KiB so the
+    /// reader's per-block lane buffer stays bounded no matter how wide
+    /// the payload is.
+    const fn block_cap() -> usize {
+        if K::LANE_WIDTH == 0 {
+            BLOCK_KEYS
+        } else {
+            let by_bytes = (64 << 10) / K::LANE_WIDTH;
+            let by_bytes = if by_bytes < 16 { 16 } else { by_bytes };
+            if by_bytes < BLOCK_KEYS {
+                by_bytes
+            } else {
+                BLOCK_KEYS
+            }
+        }
+    }
+
     /// Delta-encode one key into the open block, flushing the block once
-    /// it holds [`BLOCK_KEYS`] keys.
-    fn push_delta(&mut self, bits: u64) -> io::Result<()> {
+    /// it holds [`Self::block_cap`] keys. Deltas run over the key's
+    /// ordered bits only; its lane bytes (v5) are appended verbatim to
+    /// the block's lane array — one entry per key, duplicate-bit runs
+    /// included, so equal-bits keys with different tails round-trip.
+    fn push_delta(&mut self, key: K) -> io::Result<()> {
+        let bits = key.to_bits_ordered();
         let b = &mut self.block;
         if b.count == 0 {
             b.restart = bits;
@@ -1697,7 +1923,12 @@ impl<K: SortKey> RunWriter<K> {
                 ),
             ));
         }
-        if b.count as usize >= BLOCK_KEYS {
+        if K::LANE_WIDTH > 0 {
+            let s = b.lanes.len();
+            b.lanes.resize(s + K::LANE_WIDTH, 0);
+            key.write_lane(&mut b.lanes[s..]);
+        }
+        if b.count as usize >= Self::block_cap() {
             self.flush_block()?;
         }
         Ok(())
@@ -1715,9 +1946,15 @@ impl<K: SortKey> RunWriter<K> {
             push_varint(&mut b.payload, b.pending_run);
             b.pending_run = 0;
         }
+        // the block's framed payload = lane array (v5) + tokens; its
+        // header carries the restart key's *core* bits only — the
+        // restart's lane lives in the lane array like every other key's
+        let cw = K::WIDTH - K::LANE_WIDTH;
+        let payload_len = (b.lanes.len() + b.payload.len()) as u32;
         self.sink.write_all(&b.count.to_le_bytes())?;
-        self.sink.write_all(&(b.payload.len() as u32).to_le_bytes())?;
-        self.sink.write_all(&b.restart.to_le_bytes()[..K::WIDTH])?;
+        self.sink.write_all(&payload_len.to_le_bytes())?;
+        self.sink.write_all(&b.restart.to_le_bytes()[..cw])?;
+        self.sink.write_all(&b.lanes)?;
         self.sink.write_all(&b.payload)?;
         if let Some(entries) = &mut self.sidecar {
             let start_idx = entries
@@ -1729,12 +1966,13 @@ impl<K: SortKey> RunWriter<K> {
                 // makes side-car skips exact where walk bounds are not
                 last_bits: b.prev,
                 start_idx,
-                payload_offset: self.bytes + (8 + K::WIDTH) as u64,
+                payload_offset: self.bytes + (8 + cw) as u64,
                 count: b.count,
-                payload_len: b.payload.len() as u32,
+                payload_len,
             });
         }
-        self.bytes += (8 + K::WIDTH + b.payload.len()) as u64;
+        self.bytes += (8 + cw) as u64 + payload_len as u64;
+        b.lanes.clear();
         b.payload.clear();
         b.count = 0;
         Ok(())
@@ -1781,7 +2019,7 @@ impl<K: SortKey> RunWriter<K> {
         if let Some(entries) = self.sidecar.take() {
             // advisory: a run without a side-car merges fine, a partial
             // side-car must not survive to mislead a reader
-            if write_sidecar(&self.path, K::WIDTH, self.n, &entries).is_err() {
+            if write_sidecar(&self.path, K::WIDTH - K::LANE_WIDTH, self.n, &entries).is_err() {
                 let _ = std::fs::remove_file(sidecar_path(&self.path));
             }
         }
@@ -1800,7 +2038,7 @@ impl<K: SortKey> RunWriter<K> {
 /// variable-length payload.
 pub(crate) fn create_presized<K: SortKey>(path: &Path, count: u64) -> io::Result<()> {
     let mut f = File::create(path)?;
-    f.write_all(&SpillHeader::new(K::KIND, count).encode())?;
+    f.write_all(&SpillHeader::for_sort_key::<K>(SpillCodec::Raw, count).encode())?;
     f.set_len(HEADER_LEN as u64 + count * K::WIDTH as u64)?;
     Ok(())
 }
@@ -1863,8 +2101,10 @@ pub fn file_key_count(path: &Path) -> io::Result<u64> {
     match parse_header(&mut file, path)? {
         Some(h) => {
             match h.spill_version() {
-                SpillVersion::V1 => validate_payload_v1(&h, len, path)?,
-                SpillVersion::V2 => {
+                SpillVersion::V1 | SpillVersion::V4 => validate_payload_v1(&h, len, path)?,
+                // v5 frames like v2 with the kind's core width — the lane
+                // array hides inside each block's framed payload length
+                SpillVersion::V2 | SpillVersion::V5 => {
                     walk_v2_blocks(&mut file, path, h.count, h.kind.width(), h.pad as u64, true)?;
                 }
                 SpillVersion::V3 => {
@@ -1883,15 +2123,16 @@ pub fn file_key_count(path: &Path) -> io::Result<u64> {
 /// order, in O(io_buffer) memory.
 pub fn verify_sorted_file<K: SortKey>(path: &Path, io_buffer: usize) -> io::Result<bool> {
     let mut r = RunReader::<K>::open(path, io_buffer)?;
-    let mut prev: Option<u64> = None;
+    // full key order, not just ordered bits: a prefix-tied string file
+    // whose tails regress is mis-sorted even though its bits are flat
+    let mut prev: Option<K> = None;
     while let Some(k) = r.next()? {
-        let bits = k.to_bits_ordered();
         if let Some(p) = prev {
-            if bits < p {
+            if k.key_lt(p) {
                 return Ok(false);
             }
         }
-        prev = Some(bits);
+        prev = Some(k);
     }
     Ok(true)
 }
@@ -1969,7 +2210,8 @@ mod tests {
                 version: RAW_VERSION,
                 kind: KeyKind::U32,
                 count: 3,
-                pad: 0
+                pad: 0,
+                lane: 0
             }
         );
         assert_eq!(h.spill_version(), SpillVersion::V1);
@@ -1991,11 +2233,27 @@ mod tests {
         assert_eq!(SpillVersion::of(1), Some(SpillVersion::V1));
         assert_eq!(SpillVersion::of(2), Some(SpillVersion::V2));
         assert_eq!(SpillVersion::of(3), Some(SpillVersion::V3));
+        assert_eq!(SpillVersion::of(4), Some(SpillVersion::V4));
+        assert_eq!(SpillVersion::of(5), Some(SpillVersion::V5));
         assert_eq!(SpillVersion::of(0), None);
-        assert_eq!(SpillVersion::of(4), None);
-        for v in [SpillVersion::V1, SpillVersion::V2, SpillVersion::V3] {
+        assert_eq!(SpillVersion::of(6), None);
+        for v in [
+            SpillVersion::V1,
+            SpillVersion::V2,
+            SpillVersion::V3,
+            SpillVersion::V4,
+            SpillVersion::V5,
+        ] {
             assert_eq!(SpillVersion::of(v.code()), Some(v));
         }
+        // lane-free sorts keep the legacy versions byte-identical; lane'd
+        // sorts promote to the record versions (zigzag never promotes —
+        // its writers reject lanes before a header exists)
+        assert_eq!(SpillCodec::Raw.version_for(0), RAW_VERSION);
+        assert_eq!(SpillCodec::Delta.version_for(0), DELTA_VERSION);
+        assert_eq!(SpillCodec::Raw.version_for(8), RECORD_RAW_VERSION);
+        assert_eq!(SpillCodec::Delta.version_for(8), RECORD_DELTA_VERSION);
+        assert_eq!(SpillCodec::Zigzag.version_for(8), ZIGZAG_VERSION);
         let h = SpillHeader::for_codec(SpillCodec::Delta, KeyKind::F32, 9);
         assert_eq!(h.version, DELTA_VERSION);
         assert_eq!(h.spill_version(), SpillVersion::V2);
@@ -2736,6 +2994,169 @@ mod tests {
         }
         assert_eq!(zigzag(0), 0);
         assert!(zigzag(1) >= 1 && zigzag(-1) >= 1, "nonzero deltas never collide with the dup escape");
+    }
+
+    // -- v4/v5 records and string keys ------------------------------------
+
+    use crate::key::{PrefixString, SortItem};
+
+    /// A deterministic record stream: keys with heavy duplicates, payload
+    /// = a function of the emission index so key-alignment is checkable.
+    fn record_keys(n: u64) -> Vec<SortItem<u64, 8>> {
+        (0..n)
+            .map(|i| SortItem::new(i / 3, (i * 0x9E37_79B9).to_le_bytes()))
+            .collect()
+    }
+
+    fn assert_records_eq(a: &[SortItem<u64, 8>], b: &[SortItem<u64, 8>], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.key, y.key, "{what}: key {i}");
+            assert_eq!(x.val, y.val, "{what}: payload {i}");
+        }
+    }
+
+    #[test]
+    fn record_raw_roundtrips_as_v4() {
+        let p = tmp("rec-v4.bin");
+        let recs = record_keys(1000);
+        write_keys_file(&p, &recs).unwrap();
+        let h = read_header(&p).unwrap().unwrap();
+        assert_eq!(h.version, RECORD_RAW_VERSION);
+        assert_eq!(h.kind, KeyKind::U64);
+        assert_eq!(h.lane, 8);
+        assert_eq!(h.entry_width(), 16);
+        assert_eq!(file_key_count(&p).unwrap(), 1000);
+        assert_records_eq(&read_keys_file(&p).unwrap(), &recs, "v4 raw");
+        assert!(verify_sorted_file::<SortItem<u64, 8>>(&p, 4096).unwrap());
+        // raw range-opens seek at the full entry width
+        let mut r = RunReader::<SortItem<u64, 8>>::open_range(&p, 500, 3, 4096).unwrap();
+        assert_records_eq(&r.read_chunk(10).unwrap(), &recs[500..503], "v4 range");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn record_delta_roundtrips_as_v5_with_dup_runs() {
+        // i/3 keys: every ordered-bits value repeats 3× with *distinct*
+        // payloads — the dup-run escape must still emit per-key lanes
+        let p = tmp("rec-v5.bin");
+        let n = 2 * BLOCK_KEYS as u64 + 57;
+        let recs = record_keys(n);
+        let run = write_delta(&p, &recs);
+        assert_eq!(run.n, n);
+        let h = read_header(&p).unwrap().unwrap();
+        assert_eq!(h.version, RECORD_DELTA_VERSION);
+        assert_eq!(h.lane, 8);
+        assert_eq!(file_key_count(&p).unwrap(), n);
+        assert_records_eq(&read_keys_file(&p).unwrap(), &recs, "v5 delta");
+        // decode-skipping and whole-block seeks both cross lane arrays
+        let start = BLOCK_KEYS as u64 + 13;
+        let mut r = RunReader::<SortItem<u64, 8>>::open_range(&p, start, 5, 4096).unwrap();
+        assert_records_eq(
+            &r.read_chunk(10).unwrap(),
+            &recs[start as usize..start as usize + 5],
+            "v5 range",
+        );
+        // the run index probes on bits alone
+        let mut idx = RunIndex::<SortItem<u64, 8>>::open(&p).unwrap();
+        assert_eq!(idx.lower_bound(100).unwrap(), 300);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn prefix_strings_roundtrip_in_both_record_codecs() {
+        // heavy prefix ties: same first 8 bytes, ordering carried by the
+        // tail lane — both codecs must reproduce the tails exactly
+        let mut keys: Vec<PrefixString> = (0..500u32)
+            .flat_map(|i| {
+                let tie = PrefixString::from_bytes(format!("prefix00-{i:05}").as_bytes());
+                let uniq = PrefixString::from_bytes(format!("key{i:05}").as_bytes());
+                [tie, uniq]
+            })
+            .collect();
+        keys.sort_unstable();
+        for (p, codec, version) in [
+            (tmp("str-v4.bin"), SpillCodec::Raw, RECORD_RAW_VERSION),
+            (tmp("str-v5.bin"), SpillCodec::Delta, RECORD_DELTA_VERSION),
+        ] {
+            let mut w = RunWriter::<PrefixString>::create_with(p.clone(), 1 << 14, codec).unwrap();
+            w.write_slice(&keys).unwrap();
+            w.finish().unwrap();
+            let h = read_header(&p).unwrap().unwrap();
+            assert_eq!(h.version, version, "{codec:?}");
+            assert_eq!(h.kind, KeyKind::Str);
+            assert_eq!(h.lane, 8, "{codec:?}");
+            assert_eq!(read_keys_file::<PrefixString>(&p).unwrap(), keys, "{codec:?}");
+            assert!(verify_sorted_file::<PrefixString>(&p, 4096).unwrap());
+            let _ = std::fs::remove_file(&p);
+            let _ = std::fs::remove_file(sidecar_path(&p));
+        }
+    }
+
+    #[test]
+    fn verify_sorted_checks_full_order_not_just_bits() {
+        // bit-sorted but tail-regressing: "aaaaaaaab" then "aaaaaaaaa"
+        // shares the 8-byte prefix (equal bits) with a descending tail
+        let p = tmp("str-fullorder.bin");
+        let keys = [
+            PrefixString::from_bytes(b"aaaaaaaab"),
+            PrefixString::from_bytes(b"aaaaaaaaa"),
+        ];
+        write_keys_file(&p, &keys).unwrap();
+        assert!(
+            !verify_sorted_file::<PrefixString>(&p, 4096).unwrap(),
+            "a tail regression under equal bits is a sort violation"
+        );
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn record_spills_reject_lane_mismatches_and_zigzag() {
+        // a bare-key v1 file must not open under a record type…
+        let p = tmp("rec-mismatch.bin");
+        write_keys_file::<u64>(&p, &[1, 2, 3]).unwrap();
+        let err = RunReader::<SortItem<u64, 8>>::open(&p, 4096).unwrap_err();
+        assert!(err.to_string().contains("lane"), "{err}");
+        // …nor a record file under the bare key type
+        write_keys_file::<SortItem<u64, 8>>(&p, &record_keys(3)).unwrap();
+        let err = RunReader::<u64>::open(&p, 4096).unwrap_err();
+        assert!(err.to_string().contains("lane"), "{err}");
+        // zigzag is bits-only: record writers refuse it up front
+        let err = RunWriter::<SortItem<u64, 8>>::create_unsorted(
+            p.clone(),
+            4096,
+            SpillCodec::Zigzag,
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        assert!(err.to_string().contains("bits-only"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn record_sidecars_index_v5_blocks() {
+        let p = tmp("rec-sidecar.bin");
+        let n = 3 * BLOCK_KEYS as u64 + 71;
+        let recs = record_keys(n);
+        write_delta_sidecar(&p, &recs);
+        assert!(sidecar_path(&p).exists());
+        let mut idx = RunIndex::<SortItem<u64, 8>>::open(&p).unwrap();
+        for probe in [0u64, 1, BLOCK_KEYS as u64, n / 3, u64::MAX] {
+            let want = recs.partition_point(|r| r.key < probe) as u64;
+            assert_eq!(idx.lower_bound(probe).unwrap(), want, "probe={probe}");
+        }
+        // a ranged open through the block directory lands exactly
+        let dir = RunIndex::<SortItem<u64, 8>>::open(&p).unwrap().into_directory().unwrap();
+        let start = 2 * BLOCK_KEYS as u64 + 17;
+        let mut r = RunReader::<SortItem<u64, 8>>::open_range_with(&p, start, 4, 4096, Some(&dir))
+            .unwrap();
+        assert_records_eq(
+            &r.read_chunk(10).unwrap(),
+            &recs[start as usize..start as usize + 4],
+            "v5 dir range",
+        );
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(sidecar_path(&p));
     }
 
     // -- block side-cars ---------------------------------------------------

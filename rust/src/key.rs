@@ -14,16 +14,50 @@
 //!   [`SortKey::from_le_bytes`], [`SortKey::WIDTH`]) — the on-disk
 //!   encoding the external sorter spills and merges through, plus the
 //!   [`KeyKind`] tag stored in the self-describing spill-file header.
+//!
+//! # Records and strings
+//!
+//! The trait is deliberately wider than "element == fixed-width numeric":
+//!
+//! * [`SortItem`] is a **record** — a key plus a fixed-width byte payload
+//!   (row id, pointer, small value) that travels with the key through
+//!   every engine. Because the record *is* the element, the in-memory
+//!   engines move payloads alongside keys with zero extra plumbing; the
+//!   external pipeline stores payloads in a **lane**
+//!   ([`SortKey::LANE_WIDTH`] trailing bytes of the encoding) that the
+//!   spill codecs carry next to the core key bits.
+//! * [`PrefixString`] is a **length-bounded string key**: the first
+//!   [`PrefixString::PREFIX`] bytes map big-endian into the ordered-bits
+//!   space the RMI already models, and the remaining tail rides in the
+//!   lane. Its bit image is a *monotone coarsening* of the full
+//!   lexicographic order ([`SortKey::ORDER_IN_BITS`] is `false`): bit
+//!   comparisons are never wrong, merely unable to distinguish keys that
+//!   share an 8-byte prefix, so bits-driven machinery (bucketing, shard
+//!   cuts, delta encoding) stays valid and only *tie regions* — maximal
+//!   runs of equal bits — need the [`SortKey::key_cmp`] fallback
+//!   comparator (see [`repair_bit_ties`]).
+//!
+//! Bare numeric keys are the zero-lane specialization
+//! (`LANE_WIDTH == 0`, `ORDER_IN_BITS == true`): every default method
+//! keeps their behavior bit-for-bit, so existing call sites compile and
+//! run unchanged.
 
+use std::cmp::Ordering;
 use std::fmt::Debug;
 
-/// The four key domains the pipeline understands, as recorded in the
+/// The key domains the pipeline understands, as recorded in the
 /// spill-file header's key-type tag (see [`crate::external::spill`]).
 ///
 /// The paper's two domains are `f64` (synthetic datasets) and `u64`
 /// (real-world datasets); the 32-bit variants open the narrower workloads
 /// of PCF Learned Sort and the duplicate-heavy integer streams of
-/// "Defeating duplicates" at half the spill bytes per key.
+/// "Defeating duplicates" at half the spill bytes per key. [`KeyKind::Str`]
+/// tags prefix-encoded string keys ([`PrefixString`]): their *core* on-disk
+/// width is the 8 prefix bytes that carry the ordered bits — the tail
+/// travels in the record lane, like any payload.
+///
+/// A record ([`SortItem`]) shares its key's tag: the header distinguishes
+/// records from bare keys by the lane-width byte, not the tag.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KeyKind {
     /// 64-bit unsigned integers.
@@ -34,6 +68,8 @@ pub enum KeyKind {
     U32,
     /// 32-bit IEEE-754 floats.
     F32,
+    /// Prefix-encoded string keys ([`PrefixString`]).
+    Str,
 }
 
 impl KeyKind {
@@ -44,14 +80,27 @@ impl KeyKind {
             KeyKind::F64 => 1,
             KeyKind::U32 => 2,
             KeyKind::F32 => 3,
+            KeyKind::Str => 4,
         }
     }
 
-    /// Encoded bytes per key of this kind.
+    /// Encoded bytes per key of this kind's **core** (the part that maps
+    /// into ordered-bits space). For strings this is the 8-byte prefix;
+    /// the tail bytes are lane bytes and accounted separately.
     pub const fn width(self) -> usize {
         match self {
-            KeyKind::U64 | KeyKind::F64 => 8,
+            KeyKind::U64 | KeyKind::F64 | KeyKind::Str => 8,
             KeyKind::U32 | KeyKind::F32 => 4,
+        }
+    }
+
+    /// Lane bytes the *bare* key of this kind carries (0 for numerics;
+    /// the string tail for [`KeyKind::Str`]). A record's total lane is
+    /// this plus its payload width.
+    pub const fn base_lane(self) -> usize {
+        match self {
+            KeyKind::Str => PrefixString::LEN - PrefixString::PREFIX,
+            _ => 0,
         }
     }
 
@@ -62,6 +111,7 @@ impl KeyKind {
             KeyKind::F64 => "f64",
             KeyKind::U32 => "u32",
             KeyKind::F32 => "f32",
+            KeyKind::Str => "str",
         }
     }
 
@@ -72,60 +122,105 @@ impl KeyKind {
             1 => Some(KeyKind::F64),
             2 => Some(KeyKind::U32),
             3 => Some(KeyKind::F32),
+            4 => Some(KeyKind::Str),
             _ => None,
         }
     }
 
-    /// Parse a CLI spelling (`u64`, `f64`, `u32`, `f32`).
+    /// Parse a CLI spelling (`u64`, `f64`, `u32`, `f32`, `str`).
     pub fn parse(s: &str) -> Option<KeyKind> {
         match s {
             "u64" => Some(KeyKind::U64),
             "f64" => Some(KeyKind::F64),
             "u32" => Some(KeyKind::U32),
             "f32" => Some(KeyKind::F32),
+            "str" => Some(KeyKind::Str),
             _ => None,
         }
     }
 }
 
-/// A sortable key: `u64`, `u32`, `f64` or `f32`.
+/// A sortable element: a bare key (`u64`, `u32`, `f64`, `f32`,
+/// [`PrefixString`]) or a record ([`SortItem`]) carrying one.
 pub trait SortKey: Copy + Send + Sync + Debug + 'static {
-    /// Order-preserving map into `u64`: `a < b  ⇔  a.to_bits_ordered() <
-    /// b.to_bits_ordered()` (for floats, under IEEE total order).
+    /// Order-preserving map into `u64`: `a < b  ⇒  a.to_bits_ordered() <=
+    /// b.to_bits_ordered()` — an exact order embedding when
+    /// [`SortKey::ORDER_IN_BITS`] holds (`a < b ⇔ bits(a) < bits(b)`), and
+    /// a monotone coarsening otherwise (distinct keys may share bits, but
+    /// bits never invert the order).
     fn to_bits_ordered(self) -> u64;
 
     /// Embedding used as RMI model input.
     fn to_f64(self) -> f64;
 
-    /// Inverse of [`SortKey::to_bits_ordered`] (used by generators/tests).
+    /// Inverse of [`SortKey::to_bits_ordered`] up to the bit image (used
+    /// by generators/tests and bit-space probes). Lane bytes that the bit
+    /// image does not capture come back zeroed — use
+    /// [`SortKey::with_lane`] to reconstruct a full key.
     fn from_bits_ordered(bits: u64) -> Self;
 
     /// Number of significant bytes in [`SortKey::to_bits_ordered`]
     /// (8 for 64-bit keys, 4 for 32-bit keys) — the radix digit count.
     const RADIX_BYTES: usize;
 
-    /// Which of the four key domains this is — the tag the external
-    /// sorter's self-describing spill header records, so a file sorted as
-    /// one type can never be silently decoded as another.
+    /// Which key domain this is — the tag the external sorter's
+    /// self-describing spill header records, so a file sorted as one type
+    /// can never be silently decoded as another. Records share their
+    /// key's tag (the header's lane byte tells them apart).
     const KIND: KeyKind;
 
-    /// Bytes per key in the fixed-width little-endian spill encoding
-    /// (always `size_of::<Self>()` for the four supported domains).
+    /// Bytes per element in the fixed-width little-endian spill encoding
+    /// (`size_of::<Self>()` for every supported type): the core key bytes
+    /// followed by [`SortKey::LANE_WIDTH`] lane bytes.
     const WIDTH: usize;
+
+    /// Trailing bytes of the encoding that do **not** participate in
+    /// [`SortKey::to_bits_ordered`]: record payloads and string tails.
+    /// `0` for bare numeric keys. Invariant:
+    /// `WIDTH - LANE_WIDTH == KIND.width()`.
+    const LANE_WIDTH: usize = 0;
+
+    /// `true` when [`SortKey::to_bits_ordered`] is an exact order
+    /// embedding — bit comparisons alone decide the total order. `false`
+    /// for keys whose bits are a coarsening (string prefixes): equal-bits
+    /// ties must be broken by [`SortKey::key_cmp`], and bit-sorted output
+    /// needs [`repair_bit_ties`].
+    const ORDER_IN_BITS: bool = true;
 
     /// The encoded form: the `[u8; WIDTH]` array [`SortKey::to_le_bytes`]
     /// produces. An associated type because array lengths cannot depend on
     /// an associated const on stable Rust.
     type Bytes: AsRef<[u8]> + AsMut<[u8]> + Copy + Default + Send + Sync + Debug;
 
-    /// Encode the key as `WIDTH` little-endian bytes in its *native*
+    /// Encode the element as `WIDTH` little-endian bytes in its *native*
     /// representation (`u64::to_le_bytes`-style, not the ordered bits) —
     /// the spill/`gen --out` on-disk format, chosen so dataset files and
     /// sorted outputs round-trip byte-exactly.
     fn to_le_bytes(self) -> Self::Bytes;
 
-    /// Decode a key from its fixed-width little-endian encoding.
+    /// Decode an element from its fixed-width little-endian encoding.
     fn from_le_bytes(bytes: Self::Bytes) -> Self;
+
+    /// Write this element's [`SortKey::LANE_WIDTH`] lane bytes into
+    /// `out` (which must be exactly that long). No-op for lane-free keys.
+    /// The delta spill codec stores lanes alongside the bit-space tokens;
+    /// [`SortKey::with_lane`] is the inverse.
+    #[inline(always)]
+    fn write_lane(self, out: &mut [u8]) {
+        debug_assert_eq!(out.len(), Self::LANE_WIDTH);
+        let _ = out;
+    }
+
+    /// Reconstruct an element from its ordered bits plus its
+    /// [`SortKey::LANE_WIDTH`] lane bytes — exact for every supported
+    /// type (`K::with_lane(k.to_bits_ordered(), lane_of(k)) == k`).
+    /// Lane-free keys ignore `lane`.
+    #[inline(always)]
+    fn with_lane(bits: u64, lane: &[u8]) -> Self {
+        debug_assert_eq!(lane.len(), Self::LANE_WIDTH);
+        let _ = lane;
+        Self::from_bits_ordered(bits)
+    }
 
     /// Largest value [`SortKey::to_bits_ordered`] can produce for this
     /// domain (`u64::MAX` for 64-bit keys, `u32::MAX` for 32-bit keys).
@@ -139,6 +234,14 @@ pub trait SortKey: Copy + Send + Sync + Debug + 'static {
         } else {
             (1u64 << (8 * Self::RADIX_BYTES)) - 1
         }
+    }
+
+    /// Total-order comparison. Defaults to the bit order (exact when
+    /// [`SortKey::ORDER_IN_BITS`]); coarse-bits keys override this with
+    /// the full comparison — it is the tie-region fallback comparator.
+    #[inline(always)]
+    fn key_cmp(self, other: Self) -> Ordering {
+        self.to_bits_ordered().cmp(&other.to_bits_ordered())
     }
 
     /// `self < other` under the key's total order.
@@ -337,6 +440,443 @@ impl SortKey for f32 {
     }
 }
 
+// ---------------------------------------------------------------------------
+// PrefixString: length-bounded string keys in ordered-bits space.
+// ---------------------------------------------------------------------------
+
+/// A length-bounded string key: up to [`PrefixString::LEN`] bytes,
+/// zero-padded, ordered lexicographically (unsigned byte order).
+///
+/// The first [`PrefixString::PREFIX`] bytes, read big-endian, are the
+/// ordered bits the RMI models and the spill codecs delta-encode:
+/// big-endian `u64` order over the prefix *is* lexicographic order over
+/// the prefix, so bit comparisons are a monotone coarsening of the full
+/// order — never wrong, only blind past byte 8. The tail bytes ride in
+/// the record lane and break prefix ties via [`SortKey::key_cmp`].
+///
+/// Zero-padding makes `"abc"` and `"abc\0"` the same key: the domain is
+/// NUL-free byte strings of at most 16 bytes, which is what the
+/// length-bounded prefix contract promises. Longer inputs truncate to
+/// their first 16 bytes.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PrefixString(pub [u8; PrefixString::LEN]);
+
+impl PrefixString {
+    /// Total bounded key length in bytes.
+    pub const LEN: usize = 16;
+
+    /// Leading bytes that map into the ordered-bits space.
+    pub const PREFIX: usize = 8;
+
+    /// Build a key from a byte string: zero-padded below
+    /// [`PrefixString::LEN`] bytes, truncated above it.
+    #[inline]
+    pub fn from_bytes(s: &[u8]) -> PrefixString {
+        let mut b = [0u8; Self::LEN];
+        let n = s.len().min(Self::LEN);
+        b[..n].copy_from_slice(&s[..n]);
+        PrefixString(b)
+    }
+
+    /// Build a key from UTF-8 text (same padding/truncation rules; the
+    /// truncation is byte-wise, so a multi-byte code point may split —
+    /// ordering is over raw bytes either way).
+    #[inline]
+    pub fn from_str_key(s: &str) -> PrefixString {
+        Self::from_bytes(s.as_bytes())
+    }
+
+    /// The padded 16-byte image.
+    #[inline]
+    pub fn as_bytes(&self) -> &[u8; Self::LEN] {
+        &self.0
+    }
+
+    /// The key without its zero padding.
+    #[inline]
+    pub fn trimmed(&self) -> &[u8] {
+        let end = self.0.iter().rposition(|&b| b != 0).map_or(0, |i| i + 1);
+        &self.0[..end]
+    }
+}
+
+impl Debug for PrefixString {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PrefixString({:?})", String::from_utf8_lossy(self.trimmed()))
+    }
+}
+
+impl SortKey for PrefixString {
+    const RADIX_BYTES: usize = 8;
+    const KIND: KeyKind = KeyKind::Str;
+    const WIDTH: usize = PrefixString::LEN;
+    const LANE_WIDTH: usize = PrefixString::LEN - PrefixString::PREFIX;
+    const ORDER_IN_BITS: bool = false;
+    type Bytes = [u8; PrefixString::LEN];
+
+    /// Big-endian read of the 8-byte prefix: lexicographic order of the
+    /// prefix equals numeric order of the bits.
+    #[inline(always)]
+    fn to_bits_ordered(self) -> u64 {
+        u64::from_be_bytes(self.0[..Self::PREFIX].try_into().unwrap())
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self.to_bits_ordered() as f64
+    }
+
+    /// Prefix from the bits, zeroed tail — the bit image only.
+    #[inline(always)]
+    fn from_bits_ordered(bits: u64) -> Self {
+        let mut b = [0u8; Self::LEN];
+        b[..Self::PREFIX].copy_from_slice(&bits.to_be_bytes());
+        PrefixString(b)
+    }
+
+    /// The on-disk encoding is the padded bytes as-is (the natural
+    /// interchange form for strings; "LE" is vacuous for a byte string).
+    #[inline(always)]
+    fn to_le_bytes(self) -> [u8; PrefixString::LEN] {
+        self.0
+    }
+
+    #[inline(always)]
+    fn from_le_bytes(bytes: [u8; PrefixString::LEN]) -> Self {
+        PrefixString(bytes)
+    }
+
+    #[inline(always)]
+    fn write_lane(self, out: &mut [u8]) {
+        out.copy_from_slice(&self.0[Self::PREFIX..]);
+    }
+
+    #[inline(always)]
+    fn with_lane(bits: u64, lane: &[u8]) -> Self {
+        let mut b = [0u8; Self::LEN];
+        b[..Self::PREFIX].copy_from_slice(&bits.to_be_bytes());
+        b[Self::PREFIX..].copy_from_slice(lane);
+        PrefixString(b)
+    }
+
+    /// Full 16-byte lexicographic comparison (the tie-region fallback).
+    #[inline(always)]
+    fn key_cmp(self, other: Self) -> Ordering {
+        self.0.cmp(&other.0)
+    }
+
+    #[inline(always)]
+    fn key_lt(self, other: Self) -> bool {
+        self.0 < other.0
+    }
+
+    #[inline(always)]
+    fn key_le(self, other: Self) -> bool {
+        self.0 <= other.0
+    }
+
+    #[inline(always)]
+    fn key_eq(self, other: Self) -> bool {
+        self.0 == other.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SortItem: key + fixed-width payload records.
+// ---------------------------------------------------------------------------
+
+/// A record: a [`SortKey`] plus `P` opaque payload bytes (row id,
+/// pointer, packed columns) that travel with the key through every
+/// engine and on-disk format.
+///
+/// `SortItem` itself implements [`SortKey`], ordering and modelling
+/// purely by its key — the payload is never compared. Bare keys are the
+/// `P = 0` specialization in spirit; in code they stay plain `u64`/`f64`
+/// /... so nothing existing changes representation.
+#[derive(Clone, Copy, Debug)]
+pub struct SortItem<K: SortKey, const P: usize> {
+    /// The sorting key.
+    pub key: K,
+    /// The payload carried alongside it.
+    pub val: [u8; P],
+}
+
+impl<K: SortKey, const P: usize> SortItem<K, P> {
+    /// Build a record.
+    #[inline(always)]
+    pub fn new(key: K, val: [u8; P]) -> Self {
+        SortItem { key, val }
+    }
+}
+
+/// Encoded form of a [`SortItem`]: the key's encoding immediately
+/// followed by the payload bytes. `repr(C)` with byte-only fields —
+/// alignment 1, no padding — so the struct *is* its byte image and can
+/// hand out `&[u8]` views over the whole encoding.
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+pub struct ItemBytes<KB, const P: usize> {
+    k: KB,
+    v: [u8; P],
+}
+
+impl<KB: Default, const P: usize> Default for ItemBytes<KB, P> {
+    #[inline(always)]
+    fn default() -> Self {
+        ItemBytes {
+            k: KB::default(),
+            v: [0u8; P],
+        }
+    }
+}
+
+impl<KB: AsRef<[u8]> + Copy, const P: usize> AsRef<[u8]> for ItemBytes<KB, P> {
+    #[inline(always)]
+    fn as_ref(&self) -> &[u8] {
+        // Every KB used is a byte array (possibly a nested ItemBytes of
+        // byte arrays): alignment 1, fully initialized, and repr(C) with
+        // a trailing [u8; P] leaves no padding — the struct's bytes are
+        // exactly `k` then `v`.
+        debug_assert_eq!(std::mem::align_of::<Self>(), 1);
+        debug_assert_eq!(std::mem::size_of::<Self>(), std::mem::size_of::<KB>() + P);
+        unsafe {
+            std::slice::from_raw_parts(self as *const Self as *const u8, std::mem::size_of::<Self>())
+        }
+    }
+}
+
+impl<KB: AsMut<[u8]> + Copy, const P: usize> AsMut<[u8]> for ItemBytes<KB, P> {
+    #[inline(always)]
+    fn as_mut(&mut self) -> &mut [u8] {
+        debug_assert_eq!(std::mem::align_of::<Self>(), 1);
+        debug_assert_eq!(std::mem::size_of::<Self>(), std::mem::size_of::<KB>() + P);
+        unsafe {
+            std::slice::from_raw_parts_mut(self as *mut Self as *mut u8, std::mem::size_of::<Self>())
+        }
+    }
+}
+
+impl<K: SortKey, const P: usize> SortKey for SortItem<K, P> {
+    const RADIX_BYTES: usize = K::RADIX_BYTES;
+    const KIND: KeyKind = K::KIND;
+    const WIDTH: usize = K::WIDTH + P;
+    const LANE_WIDTH: usize = K::LANE_WIDTH + P;
+    const ORDER_IN_BITS: bool = K::ORDER_IN_BITS;
+    type Bytes = ItemBytes<K::Bytes, P>;
+
+    #[inline(always)]
+    fn to_bits_ordered(self) -> u64 {
+        self.key.to_bits_ordered()
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self.key.to_f64()
+    }
+
+    /// Bit image only: the payload comes back zeroed (bit-space probes
+    /// never need it); [`SortKey::with_lane`] reconstructs full records.
+    #[inline(always)]
+    fn from_bits_ordered(bits: u64) -> Self {
+        SortItem {
+            key: K::from_bits_ordered(bits),
+            val: [0u8; P],
+        }
+    }
+
+    #[inline(always)]
+    fn to_le_bytes(self) -> ItemBytes<K::Bytes, P> {
+        ItemBytes {
+            k: self.key.to_le_bytes(),
+            v: self.val,
+        }
+    }
+
+    #[inline(always)]
+    fn from_le_bytes(bytes: ItemBytes<K::Bytes, P>) -> Self {
+        SortItem {
+            key: K::from_le_bytes(bytes.k),
+            val: bytes.v,
+        }
+    }
+
+    #[inline(always)]
+    fn write_lane(self, out: &mut [u8]) {
+        debug_assert_eq!(out.len(), Self::LANE_WIDTH);
+        self.key.write_lane(&mut out[..K::LANE_WIDTH]);
+        out[K::LANE_WIDTH..].copy_from_slice(&self.val);
+    }
+
+    #[inline(always)]
+    fn with_lane(bits: u64, lane: &[u8]) -> Self {
+        debug_assert_eq!(lane.len(), Self::LANE_WIDTH);
+        let mut val = [0u8; P];
+        val.copy_from_slice(&lane[K::LANE_WIDTH..]);
+        SortItem {
+            key: K::with_lane(bits, &lane[..K::LANE_WIDTH]),
+            val,
+        }
+    }
+
+    #[inline(always)]
+    fn key_cmp(self, other: Self) -> Ordering {
+        self.key.key_cmp(other.key)
+    }
+
+    #[inline(always)]
+    fn key_lt(self, other: Self) -> bool {
+        self.key.key_lt(other.key)
+    }
+
+    #[inline(always)]
+    fn key_le(self, other: Self) -> bool {
+        self.key.key_le(other.key)
+    }
+
+    #[inline(always)]
+    fn key_eq(self, other: Self) -> bool {
+        self.key.key_eq(other.key)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tie repair: promote a bit-sorted slice to fully sorted.
+// ---------------------------------------------------------------------------
+
+/// Re-sort every maximal run of equal ordered bits with the full
+/// comparator. A no-op (compiled out) for keys whose bits decide the
+/// total order.
+///
+/// This is the seam that lets all the bits-driven machinery — fragmented
+/// partitions, equality buckets, radix passes, delta blocks — stay
+/// bit-based for coarse-bits keys ([`PrefixString`] and records over it):
+/// bit order is a monotone coarsening of the full order, so a bit-sorted
+/// slice is correct *between* tie regions, and only the regions
+/// themselves (keys sharing an 8-byte prefix) need the fallback
+/// comparator. Cost is `O(n)` scan plus a comparison sort per tie
+/// region; inputs without prefix ties pay one scan.
+pub fn repair_bit_ties<K: SortKey>(data: &mut [K]) {
+    if K::ORDER_IN_BITS {
+        return;
+    }
+    let n = data.len();
+    let mut i = 0;
+    while i < n {
+        let bits = data[i].to_bits_ordered();
+        let mut j = i + 1;
+        while j < n && data[j].to_bits_ordered() == bits {
+            j += 1;
+        }
+        if j - i > 1 {
+            data[i..j].sort_unstable_by(|a, b| a.key_cmp(*b));
+        }
+        i = j;
+    }
+}
+
+/// Streaming form of [`repair_bit_ties`] for sorted-order *checks*:
+/// `true` when `prev` may correctly precede `next` in a fully sorted
+/// sequence. Bit-exact keys compare bits; coarse-bits keys compare fully.
+#[inline(always)]
+pub fn in_full_order<K: SortKey>(prev: K, next: K) -> bool {
+    !next.key_lt(prev)
+}
+
+// ---------------------------------------------------------------------------
+// Kind/payload dispatch.
+// ---------------------------------------------------------------------------
+
+/// Payload widths the non-generic surfaces (CLI, coordinator jobs,
+/// external `sort_and_verify`) can dispatch to. The engines themselves
+/// are generic over any `P`; these are the monomorphizations the binary
+/// ships — `8` covers the row-id case, `64` a small packed row.
+pub const DISPATCH_PAYLOADS: [usize; 3] = [0, 8, 64];
+
+/// Dispatch a runtime `(KeyKind, payload-width)` pair onto a concrete
+/// [`SortKey`] type and run `$body` with `$K` bound to it — the one place
+/// the kind/width matrix is spelled out, shared by the CLI, the
+/// coordinator, the bench harness and the external sorter's entry point.
+///
+/// `$payload` is the record payload width in bytes (`0` = bare key; see
+/// [`DISPATCH_PAYLOADS`]); the `_` arm runs for unsupported widths.
+///
+/// ```
+/// use aipso::key::KeyKind;
+/// let width = aipso::dispatch_key_type!(KeyKind::U32, 8usize, K => {
+///     <K as aipso::key::SortKey>::WIDTH
+/// }, _ => 0);
+/// assert_eq!(width, 12); // 4-byte key + 8-byte payload
+/// ```
+#[macro_export]
+macro_rules! dispatch_key_type {
+    ($kind:expr, $payload:expr, $K:ident => $body:expr, _ => $fallback:expr) => {{
+        use $crate::key::{KeyKind, PrefixString, SortItem};
+        match ($kind, $payload) {
+            (KeyKind::U64, 0usize) => {
+                type $K = u64;
+                $body
+            }
+            (KeyKind::F64, 0usize) => {
+                type $K = f64;
+                $body
+            }
+            (KeyKind::U32, 0usize) => {
+                type $K = u32;
+                $body
+            }
+            (KeyKind::F32, 0usize) => {
+                type $K = f32;
+                $body
+            }
+            (KeyKind::Str, 0usize) => {
+                type $K = PrefixString;
+                $body
+            }
+            (KeyKind::U64, 8usize) => {
+                type $K = SortItem<u64, 8>;
+                $body
+            }
+            (KeyKind::F64, 8usize) => {
+                type $K = SortItem<f64, 8>;
+                $body
+            }
+            (KeyKind::U32, 8usize) => {
+                type $K = SortItem<u32, 8>;
+                $body
+            }
+            (KeyKind::F32, 8usize) => {
+                type $K = SortItem<f32, 8>;
+                $body
+            }
+            (KeyKind::Str, 8usize) => {
+                type $K = SortItem<PrefixString, 8>;
+                $body
+            }
+            (KeyKind::U64, 64usize) => {
+                type $K = SortItem<u64, 64>;
+                $body
+            }
+            (KeyKind::F64, 64usize) => {
+                type $K = SortItem<f64, 64>;
+                $body
+            }
+            (KeyKind::U32, 64usize) => {
+                type $K = SortItem<u32, 64>;
+                $body
+            }
+            (KeyKind::F32, 64usize) => {
+                type $K = SortItem<f32, 64>;
+                $body
+            }
+            (KeyKind::Str, 64usize) => {
+                type $K = SortItem<PrefixString, 64>;
+                $body
+            }
+            _ => $fallback,
+        }
+    }};
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -398,6 +938,8 @@ mod tests {
         assert!(2.5f64.key_eq(2.5));
         assert_eq!(3u64.key_max(5), 5);
         assert_eq!(3u64.key_min(5), 3);
+        assert_eq!(1u64.key_cmp(2), Ordering::Less);
+        assert_eq!(2u64.key_cmp(2), Ordering::Equal);
     }
 
     #[test]
@@ -416,7 +958,13 @@ mod tests {
 
     #[test]
     fn kind_tags_roundtrip() {
-        for kind in [KeyKind::U64, KeyKind::F64, KeyKind::U32, KeyKind::F32] {
+        for kind in [
+            KeyKind::U64,
+            KeyKind::F64,
+            KeyKind::U32,
+            KeyKind::F32,
+            KeyKind::Str,
+        ] {
             assert_eq!(KeyKind::from_tag(kind.tag()), Some(kind));
             assert_eq!(KeyKind::parse(kind.name()), Some(kind));
         }
@@ -424,8 +972,12 @@ mod tests {
         assert_eq!(KeyKind::parse("i64"), None);
         assert_eq!(KeyKind::U32.width(), 4);
         assert_eq!(KeyKind::F64.width(), 8);
+        assert_eq!(KeyKind::Str.width(), 8, "the core width is the prefix");
+        assert_eq!(KeyKind::Str.base_lane(), 8);
+        assert_eq!(KeyKind::U64.base_lane(), 0);
         assert_eq!(<u32 as SortKey>::KIND, KeyKind::U32);
         assert_eq!(<f64 as SortKey>::KIND, KeyKind::F64);
+        assert_eq!(<PrefixString as SortKey>::KIND, KeyKind::Str);
     }
 
     #[test]
@@ -442,5 +994,189 @@ mod tests {
             f32::INFINITY.to_bits_ordered() <= f32::max_ordered_bits(),
             "every representable key must stay inside the cap"
         );
+    }
+
+    // -- PrefixString -------------------------------------------------------
+
+    #[test]
+    fn prefix_string_bits_are_a_monotone_coarsening() {
+        let strs = [
+            "", "a", "aa", "ab", "abcdefgh", "abcdefgha", "abcdefghb", "b", "zzzzzzzzzzzzzzzz",
+        ];
+        let keys: Vec<PrefixString> = strs.iter().map(|s| PrefixString::from_str_key(s)).collect();
+        for w in keys.windows(2) {
+            assert!(w[0].key_lt(w[1]), "{:?} !< {:?}", w[0], w[1]);
+            assert!(
+                w[0].to_bits_ordered() <= w[1].to_bits_ordered(),
+                "bits must never invert the order: {:?} vs {:?}",
+                w[0],
+                w[1]
+            );
+            assert_eq!(w[0].key_cmp(w[1]), Ordering::Less);
+        }
+        // keys sharing the 8-byte prefix collide in bits but not in order
+        let a = PrefixString::from_str_key("abcdefgha");
+        let b = PrefixString::from_str_key("abcdefghb");
+        assert_eq!(a.to_bits_ordered(), b.to_bits_ordered());
+        assert!(a.key_lt(b) && !a.key_eq(b));
+        assert!(!PrefixString::ORDER_IN_BITS);
+    }
+
+    #[test]
+    fn prefix_string_codec_and_lane_roundtrip() {
+        for s in ["", "x", "hello", "exactly8", "long key with tail", "\u{00e9}clair"] {
+            let k = PrefixString::from_str_key(s);
+            // native codec: the padded bytes as-is
+            assert_eq!(PrefixString::from_le_bytes(k.to_le_bytes()), k);
+            assert_eq!(k.to_le_bytes().len(), PrefixString::LEN);
+            // bits + lane reconstruct the full key exactly
+            let mut lane = [0u8; PrefixString::LEN - PrefixString::PREFIX];
+            k.write_lane(&mut lane);
+            assert_eq!(PrefixString::with_lane(k.to_bits_ordered(), &lane), k);
+        }
+        // truncation is the documented bound, padding is canonical
+        let long = PrefixString::from_str_key("0123456789abcdefOVERFLOW");
+        assert_eq!(long.as_bytes(), b"0123456789abcdef");
+        assert_eq!(
+            PrefixString::from_str_key("abc"),
+            PrefixString::from_bytes(b"abc\0\0")
+        );
+        assert_eq!(PrefixString::from_str_key("abc").trimmed(), b"abc");
+    }
+
+    #[test]
+    fn prefix_string_width_invariant() {
+        assert_eq!(
+            PrefixString::WIDTH - PrefixString::LANE_WIDTH,
+            KeyKind::Str.width()
+        );
+        assert_eq!(PrefixString::WIDTH, std::mem::size_of::<PrefixString>());
+        assert_eq!(PrefixString::max_ordered_bits(), u64::MAX);
+    }
+
+    // -- SortItem -----------------------------------------------------------
+
+    #[test]
+    fn sort_item_orders_by_key_only() {
+        let a = SortItem::<u64, 8>::new(5, *b"payloadA");
+        let b = SortItem::<u64, 8>::new(5, *b"payloadB");
+        let c = SortItem::<u64, 8>::new(9, *b"payloadC");
+        assert!(a.key_eq(b), "payload must not affect the order");
+        assert_eq!(a.key_cmp(b), Ordering::Equal);
+        assert!(a.key_lt(c) && b.key_le(c));
+        assert_eq!(a.to_bits_ordered(), 5);
+        assert_eq!(a.key_max(c).key, 9);
+    }
+
+    #[test]
+    fn sort_item_codec_is_key_then_payload() {
+        let r = SortItem::<u32, 8>::new(0x0102_0304, [9, 8, 7, 6, 5, 4, 3, 2]);
+        assert_eq!(<SortItem<u32, 8>>::WIDTH, 12);
+        assert_eq!(<SortItem<u32, 8>>::LANE_WIDTH, 8);
+        let enc = r.to_le_bytes();
+        assert_eq!(enc.as_ref(), &[4, 3, 2, 1, 9, 8, 7, 6, 5, 4, 3, 2]);
+        assert_eq!(enc.as_ref().len(), <SortItem<u32, 8>>::WIDTH);
+        let back = <SortItem<u32, 8>>::from_le_bytes(enc);
+        assert_eq!(back.key, r.key);
+        assert_eq!(back.val, r.val);
+        // AsMut writes through to the decoded record
+        let mut enc2 = <SortItem<u32, 8> as SortKey>::Bytes::default();
+        enc2.as_mut().copy_from_slice(enc.as_ref());
+        let back2 = <SortItem<u32, 8>>::from_le_bytes(enc2);
+        assert_eq!(back2.key, r.key);
+        assert_eq!(back2.val, r.val);
+    }
+
+    #[test]
+    fn sort_item_lane_roundtrip_and_width_invariants() {
+        let r = SortItem::<u64, 8>::new(0xDEAD_BEEF, *b"rowid007");
+        let mut lane = [0u8; 8];
+        r.write_lane(&mut lane);
+        assert_eq!(&lane, b"rowid007");
+        let back = <SortItem<u64, 8>>::with_lane(r.to_bits_ordered(), &lane);
+        assert_eq!(back.key, r.key);
+        assert_eq!(back.val, r.val);
+        assert_eq!(
+            <SortItem<u64, 8>>::WIDTH - <SortItem<u64, 8>>::LANE_WIDTH,
+            <SortItem<u64, 8>>::KIND.width()
+        );
+        assert_eq!(
+            <SortItem<f32, 64>>::WIDTH - <SortItem<f32, 64>>::LANE_WIDTH,
+            KeyKind::F32.width()
+        );
+        // records over string keys compose: lane = string tail + payload
+        type SR = SortItem<PrefixString, 8>;
+        let sr = SR::new(PrefixString::from_str_key("abcdefgh-tail"), *b"ROWID042");
+        assert_eq!(SR::WIDTH, 24);
+        assert_eq!(SR::LANE_WIDTH, 16);
+        assert!(!SR::ORDER_IN_BITS);
+        let mut lane = [0u8; 16];
+        sr.write_lane(&mut lane);
+        let back = SR::with_lane(sr.to_bits_ordered(), &lane);
+        assert_eq!(back.key, sr.key);
+        assert_eq!(back.val, sr.val);
+        assert_eq!(sr.to_le_bytes().as_ref().len(), 24);
+    }
+
+    #[test]
+    fn sort_item_from_bits_zeroes_the_payload() {
+        let r = <SortItem<u64, 8>>::from_bits_ordered(77);
+        assert_eq!(r.key, 77);
+        assert_eq!(r.val, [0u8; 8]);
+    }
+
+    // -- tie repair ---------------------------------------------------------
+
+    #[test]
+    fn repair_bit_ties_fixes_prefix_collisions_only() {
+        let mk = PrefixString::from_str_key;
+        // bit-sorted (by 8-byte prefix) but tie regions internally reversed
+        let mut keys = vec![
+            mk("apple"),
+            mk("prefix00zzz"),
+            mk("prefix00aaa"),
+            mk("prefix00mmm"),
+            mk("zebra"),
+        ];
+        let mut want = keys.clone();
+        want.sort_unstable_by(|a, b| a.key_cmp(*b));
+        repair_bit_ties(&mut keys);
+        assert_eq!(keys, want);
+        assert!(keys.windows(2).all(|w| w[0].key_le(w[1])));
+    }
+
+    #[test]
+    fn repair_bit_ties_is_a_noop_for_exact_bit_orders() {
+        let mut keys = vec![3u64, 1, 2]; // unsorted, but u64 bits are exact
+        let before = keys.clone();
+        repair_bit_ties(&mut keys);
+        assert_eq!(keys, before, "exact-bits keys are never touched");
+        assert!(in_full_order(1u64, 2u64));
+        assert!(!in_full_order(2u64, 1u64));
+        assert!(in_full_order(2u64, 2u64));
+    }
+
+    // -- dispatch -----------------------------------------------------------
+
+    #[test]
+    fn dispatch_covers_the_kind_by_payload_matrix() {
+        for kind in [
+            KeyKind::U64,
+            KeyKind::F64,
+            KeyKind::U32,
+            KeyKind::F32,
+            KeyKind::Str,
+        ] {
+            for payload in DISPATCH_PAYLOADS {
+                let (w, lane) = crate::dispatch_key_type!(kind, payload, K => {
+                    (<K as SortKey>::WIDTH, <K as SortKey>::LANE_WIDTH)
+                }, _ => panic!("unsupported dispatch ({kind:?}, {payload})"));
+                assert_eq!(w - lane, kind.width(), "{kind:?}/{payload}");
+                assert_eq!(lane, kind.base_lane() + payload, "{kind:?}/{payload}");
+            }
+            // unsupported widths fall through
+            let fell = crate::dispatch_key_type!(kind, 7usize, _K => false, _ => true);
+            assert!(fell);
+        }
     }
 }

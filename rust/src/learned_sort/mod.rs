@@ -204,6 +204,11 @@ pub fn sort_cfg<K: SortKey>(data: &mut [K], cfg: &LearnedSortConfig) {
         PartitionScheme::Blocks => sort_rounds_blocks(data, rmi, nb1, cfg),
         PartitionScheme::Fragments => sort_rounds_fragments(data, rmi, &skeys, nb1, cfg),
     }
+    // the rounds order by ordered bits (homogeneity checks, equality
+    // buckets, counting sort all work in bit space); for keys whose bits
+    // coarsen the full order — string prefixes — finish equal-bits runs
+    // under the full comparator. Compiles away for bit-exact key types.
+    crate::key::repair_bit_ties(data);
 }
 
 /// Sort with LearnedSort 2.0 across `threads` workers: the parallel
@@ -241,6 +246,10 @@ pub fn sort_par_cfg<K: SortKey>(data: &mut [K], cfg: &LearnedSortConfig, threads
             sort_rounds_fragments_par(data, rmi, &skeys, nb1, cfg, threads)
         }
     }
+    // same string-tie seam as `sort_cfg` — and because the repair sorts
+    // each equal-bits run deterministically, parallel output stays
+    // byte-identical to sequential for coarse-bits keys too
+    crate::key::repair_bit_ties(data);
 }
 
 /// Routine 1: train the CDF model (once). Returns the trained RMI and

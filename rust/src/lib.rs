@@ -167,6 +167,13 @@ impl SortEngine {
 }
 
 /// Sort `keys` sequentially with the given engine.
+///
+/// Works for every [`SortKey`] — bare numerics, prefix-encoded strings
+/// ([`key::PrefixString`]) and records ([`key::SortItem`]). The engines
+/// order by `to_bits_ordered()`; for keys whose bits are a *coarsening*
+/// of the full order (string prefixes) a final [`key::repair_bit_ties`]
+/// pass finishes equal-bits runs under the full comparator. That pass
+/// compiles to nothing for bit-exact key types.
 pub fn sort_sequential<K: SortKey>(engine: SortEngine, keys: &mut [K]) {
     match engine {
         SortEngine::Aips2o => aips2o::sort_seq(keys),
@@ -177,6 +184,7 @@ pub fn sort_sequential<K: SortKey>(engine: SortEngine, keys: &mut [K]) {
         SortEngine::LearnedPivotQs => learned_qs::learned_pivot::sort(keys),
         SortEngine::LearnedQs => learned_qs::learned_quicksort::sort(keys),
     }
+    key::repair_bit_ties(keys);
 }
 
 /// Sort `keys` with `threads` workers (0 = all available cores).
@@ -196,6 +204,9 @@ pub fn sort_parallel<K: SortKey>(engine: SortEngine, keys: &mut [K], threads: us
         SortEngine::StdSort => baseline::par_sort(keys, threads),
         _ => sort_sequential(engine, keys),
     }
+    // no-op for bit-exact keys; finishes string-prefix ties (see
+    // `sort_sequential`) — idempotent when the engine deferred here
+    key::repair_bit_ties(keys);
 }
 
 /// Check that a slice is sorted under the key's total order.

@@ -63,13 +63,18 @@ USAGE: aipso <command> [--key value ...]
 
 COMMANDS
   gen             --dataset NAME [--n N] [--seed S] [--out FILE] [--stream]
-                  [--width 4|8] [--codec raw|zigzag]
+                  [--width 4|8] [--codec raw|zigzag] [--key str]
+                  [--payload 0|8|64]
                   (4 writes the dataset-native f32/u32 stream at half the
                   bytes; files carry a self-describing header; --codec
                   zigzag compresses the unsorted output through the v3
-                  zigzag+varint block codec — extsort reads it directly)
+                  zigzag+varint block codec — extsort reads it directly;
+                  --key str renders the stream as prefix-encoded string
+                  keys and --payload attaches row-id payloads, writing a
+                  record (v4) file — both need --out and imply raw)
   sort            --dataset NAME --engine ENGINE [--n N] [--threads T] [--seq]
-  extsort         --input FILE --output FILE [--key f64|u64|f32|u32]
+  extsort         --input FILE --output FILE [--key f64|u64|f32|u32|str]
+                  [--payload 0|8|64]
                   [--budget-mb MB] [--fanout K] [--threads T] [--shards P]
                   [--ips4o-runs] [--retrain N|off] [--max-retrains M]
                   [--codec raw|delta] [--age-decay D] [--trace-json FILE]
@@ -78,7 +83,8 @@ COMMANDS
                   (--trace-json traces the job and writes the
                    machine-readable aipso.telemetry.v1 document — phase
                    spans, pipeline counters/histograms, final report;
-                   --key is inferred from the input's header when omitted;
+                   --key and --payload are inferred from the input's
+                   header when omitted;
                    or --dataset NAME --n N [--width 4|8] to synthesize
                    --input first; --threads 1 = serial reference pipeline;
                    --retrain N retrains the model after N consecutive
@@ -177,6 +183,61 @@ fn cmd_gen(opts: &BTreeMap<String, String>) -> i32 {
             return 2;
         }
     };
+    // --key str / --payload N: prefix-encoded string keys and/or record
+    // payloads — always chunked to a record-capable (v4) file.
+    let str_keys = match opts.get("key").map(String::as_str) {
+        Some("str") => true,
+        None => false,
+        Some(other) => {
+            eprintln!(
+                "gen: --key only takes 'str' (numeric domains follow the dataset; use --width)"
+            );
+            eprintln!("     (got --key {other})");
+            return 2;
+        }
+    };
+    let payload = opt_usize(opts, "payload", 0);
+    if !aipso::key::DISPATCH_PAYLOADS.contains(&payload) {
+        eprintln!(
+            "gen: --payload must be one of {:?}",
+            aipso::key::DISPATCH_PAYLOADS
+        );
+        return 2;
+    }
+    if str_keys || payload > 0 {
+        if codec != SpillCodec::Raw {
+            eprintln!("gen: string keys and record payloads write raw (v4) only (drop --codec)");
+            return 2;
+        }
+        let Some(out) = opts.get("out") else {
+            eprintln!("gen: --key str / --payload require --out FILE");
+            return 2;
+        };
+        let chunk = opt_usize(opts, "chunk", 1 << 20);
+        return match datasets::write_dataset_file_ext(
+            spec.name,
+            n,
+            seed,
+            out.as_ref(),
+            chunk,
+            width,
+            str_keys,
+            payload,
+        ) {
+            Ok(kind) => {
+                let entry = kind.width() + kind.base_lane() + payload;
+                println!(
+                    "wrote {out} ({n} {} keys, {payload} B payload, {entry} B/entry + header, chunked)",
+                    kind.name(),
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("gen: {e}");
+                1
+            }
+        };
+    }
     if opts.contains_key("stream") {
         if codec != SpillCodec::Raw {
             eprintln!("gen: --stream writes raw v1 only (drop --codec)");
@@ -410,16 +471,44 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
         };
     }
 
-    // Resolve the key domain: synthesize from a dataset, take --key, or
-    // read it off the input's self-describing header.
+    // Resolve the key domain and payload width: synthesize from a
+    // dataset, take --key/--payload, or read both off the input's
+    // self-describing header (v4/v5 headers carry the lane width).
+    let mut payload: Option<usize> = match opts.get("payload") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(p) if aipso::key::DISPATCH_PAYLOADS.contains(&p) => Some(p),
+            _ => {
+                eprintln!(
+                    "extsort: --payload must be one of {:?}",
+                    aipso::key::DISPATCH_PAYLOADS
+                );
+                return 2;
+            }
+        },
+        None => None,
+    };
     let kind: KeyKind = if let Some(dataset) = opts.get("dataset") {
         let n = opt_usize(opts, "n", 8_000_000);
         let seed = opt_u64(opts, "seed", 42);
         let width = opt_usize(opts, "width", 8);
-        match datasets::write_dataset_file_width(dataset, n, seed, input.as_ref(), 1 << 20, width)
-        {
+        let str_keys = matches!(opts.get("key").map(String::as_str), Some("str"));
+        let pay = payload.unwrap_or(0);
+        match datasets::write_dataset_file_ext(
+            dataset,
+            n,
+            seed,
+            input.as_ref(),
+            1 << 20,
+            width,
+            str_keys,
+            pay,
+        ) {
             Ok(kind) => {
-                println!("synthesized {input}: {dataset}, {n} {} keys", kind.name());
+                payload = Some(pay);
+                println!(
+                    "synthesized {input}: {dataset}, {n} {} keys ({pay} B payload)",
+                    kind.name()
+                );
                 kind
             }
             Err(e) => {
@@ -431,14 +520,22 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
         match KeyKind::parse(k) {
             Some(kind) => kind,
             None => {
-                eprintln!("extsort: unknown --key {k} (use f64|u64|f32|u32)");
+                eprintln!("extsort: unknown --key {k} (use f64|u64|f32|u32|str)");
                 return 2;
             }
         }
     } else {
         match external::read_header(input.as_ref()) {
             Ok(Some(h)) => {
-                println!("{input}: {} keys per its spill header", h.kind.name());
+                let inferred = (h.lane as usize).saturating_sub(h.kind.base_lane());
+                if payload.is_none() && inferred > 0 {
+                    payload = Some(inferred);
+                }
+                println!(
+                    "{input}: {} keys ({} B lane) per its spill header",
+                    h.kind.name(),
+                    h.lane,
+                );
                 h.kind
             }
             Ok(None) => {
@@ -453,6 +550,7 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
             }
         }
     };
+    let payload = payload.unwrap_or(0);
 
     // --trace-json: collect phase spans + pipeline metrics for this job
     // and write the aipso.telemetry.v1 document next to the report.
@@ -461,7 +559,7 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
         obs::reset();
         obs::set_enabled(true);
     }
-    let result = external::sort_and_verify(kind, input.as_ref(), output.as_ref(), &cfg);
+    let result = external::sort_and_verify(kind, payload, input.as_ref(), output.as_ref(), &cfg);
     if trace_path.is_some() {
         obs::set_enabled(false);
     }
@@ -473,14 +571,14 @@ fn cmd_extsort(opts: &BTreeMap<String, String>) -> i32 {
         }
     };
     println!(
-        "extsort {} -> {} ({} keys, {} B/key): {} keys in {} — {} [{}]\n  \
+        "extsort {} -> {} ({} keys, {} B/entry): {} keys in {} — {} [{}]\n  \
          budget {} MiB, {} runs ({} learned, {} fallback), rmi trained: {}, \
          retrains: {}, merge passes: {} ({} sharded groups), \
          final-merge shards: {}",
         input,
         output,
         kind.name(),
-        kind.width(),
+        kind.width() + kind.base_lane() + payload,
         fmt::keys(report.keys as usize),
         fmt::secs(secs),
         fmt::rate(report.keys as f64 / secs.max(1e-12)),
@@ -681,7 +779,7 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> i32 {
             2 => n / 16,
             _ => 4_000,
         };
-        let keys = match id % 5 {
+        let keys = match id % 7 {
             0 => KeyBuf::F64(
                 datasets::generate_f64("uniform", size, rng.next_u64()).unwrap(),
             ),
@@ -694,6 +792,13 @@ fn cmd_serve(opts: &BTreeMap<String, String>) -> i32 {
             3 => KeyBuf::U32(
                 datasets::generate_u32("fb_ids", size, rng.next_u64()).unwrap(),
             ),
+            4 => KeyBuf::Str(
+                datasets::generate_str("books_sales", size, rng.next_u64()).unwrap(),
+            ),
+            5 => KeyBuf::Rec64(datasets::attach_payloads(
+                datasets::generate_u64("osm_cellids", size, rng.next_u64()).unwrap(),
+                0,
+            )),
             _ => KeyBuf::F64(
                 datasets::generate_f64("root_dups", size, rng.next_u64()).unwrap(),
             ),

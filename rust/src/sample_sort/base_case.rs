@@ -1,5 +1,12 @@
 //! Base-case sorters (substrate S6): insertion sort, heapsort and a
 //! median-of-3 introsort used below the partitioning thresholds.
+//!
+//! All comparisons run under the key's *full* order
+//! ([`SortKey::key_lt`]/[`SortKey::key_cmp`]). For the numeric key types
+//! that is exactly the ordered-bits compare it always was; for
+//! prefix-encoded string keys (and records over them) it additionally
+//! breaks prefix-collided bits on the tail, so base cases come out fully
+//! sorted with no separate tie-repair pass.
 
 use crate::key::SortKey;
 
@@ -8,9 +15,8 @@ use crate::key::SortKey;
 pub fn insertion_sort<K: SortKey>(data: &mut [K]) {
     for i in 1..data.len() {
         let x = data[i];
-        let xb = x.to_bits_ordered();
         let mut j = i;
-        while j > 0 && data[j - 1].to_bits_ordered() > xb {
+        while j > 0 && x.key_lt(data[j - 1]) {
             data[j] = data[j - 1];
             j -= 1;
         }
@@ -40,10 +46,10 @@ fn sift_down<K: SortKey>(data: &mut [K], mut root: usize, end: usize) {
         if child >= end {
             return;
         }
-        if child + 1 < end && data[child].to_bits_ordered() < data[child + 1].to_bits_ordered() {
+        if child + 1 < end && data[child].key_lt(data[child + 1]) {
             child += 1;
         }
-        if data[root].to_bits_ordered() >= data[child].to_bits_ordered() {
+        if !data[root].key_lt(data[child]) {
             return;
         }
         data.swap(root, child);
@@ -61,7 +67,13 @@ pub const INSERTION_THRESHOLD: usize = 24;
 /// [`introsort`] below remains as the dependency-free reference.
 #[inline]
 pub fn small_sort<K: SortKey>(data: &mut [K]) {
-    data.sort_unstable_by_key(|k| k.to_bits_ordered());
+    if K::ORDER_IN_BITS {
+        data.sort_unstable_by_key(|k| k.to_bits_ordered());
+    } else {
+        // coarse-bits keys (string prefixes): pdqsort under the full
+        // comparator so prefix ties land tail-ordered
+        data.sort_unstable_by(|a, b| a.key_cmp(*b));
+    }
 }
 
 /// Median-of-3 introsort: quicksort with a depth limit falling back to
@@ -97,21 +109,21 @@ fn partition_mo3<K: SortKey>(data: &mut [K]) -> usize {
     let n = data.len();
     let mid = n / 2;
     // median of three into data[0]
-    if data[mid].to_bits_ordered() < data[0].to_bits_ordered() {
+    if data[mid].key_lt(data[0]) {
         data.swap(mid, 0);
     }
-    if data[n - 1].to_bits_ordered() < data[0].to_bits_ordered() {
+    if data[n - 1].key_lt(data[0]) {
         data.swap(n - 1, 0);
     }
-    if data[n - 1].to_bits_ordered() < data[mid].to_bits_ordered() {
+    if data[n - 1].key_lt(data[mid]) {
         data.swap(n - 1, mid);
     }
     data.swap(0, mid); // pivot to front
-    let pivot = data[0].to_bits_ordered();
+    let pivot = data[0];
     // Lomuto-with-swaps
     let mut i = 1usize;
     for j in 1..n {
-        if data[j].to_bits_ordered() < pivot {
+        if data[j].key_lt(pivot) {
             data.swap(i, j);
             i += 1;
         }

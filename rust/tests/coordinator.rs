@@ -104,6 +104,7 @@ fn external_job_end_to_end() {
             input: input.clone(),
             output: output.clone(),
             key_kind: KeyKind::F64,
+            payload: 0,
             config: ExternalConfig::with_budget(n / 4 * 8),
         },
     ));

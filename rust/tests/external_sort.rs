@@ -682,6 +682,7 @@ fn delta_codec_matches_raw_bytes_on_all_14_distributions_at_both_widths() {
                     sort_codec::<u32>(&input, &raw_out, SpillCodec::Raw),
                     sort_codec::<u32>(&input, &delta_out, SpillCodec::Delta),
                 ),
+                KeyKind::Str => unreachable!("width datasets are numeric"),
             };
             assert_eq!(raw.keys, n as u64, "{tag}");
             assert_eq!(delta.keys, n as u64, "{tag}");

@@ -95,6 +95,7 @@ fn io_matrix_is_byte_identical_on_all_14_distributions_at_both_widths() {
                     aipso::KeyKind::U64 => sort_variant::<u64>(&input, &output, v, &roots),
                     aipso::KeyKind::F32 => sort_variant::<f32>(&input, &output, v, &roots),
                     aipso::KeyKind::U32 => sort_variant::<u32>(&input, &output, v, &roots),
+                    aipso::KeyKind::Str => unreachable!("width datasets are numeric"),
                 };
                 assert_eq!(report.keys, n as u64, "{tag}/{}", v.label);
                 let bytes = std::fs::read(&output).unwrap();

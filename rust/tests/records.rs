@@ -1,0 +1,227 @@
+//! Differential tests for the record-aware sorting core: key+payload
+//! records ([`SortItem`]) and 16-byte prefix-string keys
+//! ([`PrefixString`]) through the sequential engines, the parallel
+//! engines and the external pipeline, checked against `sort_unstable_by`
+//! of the same data on every paper distribution.
+//!
+//! Payloads are the row id of the source record (the datasets layer's
+//! convention), which makes two properties checkable after any unstable
+//! sort:
+//!
+//! - **multiset preservation** — the sorted ids are a permutation of
+//!   `0..n` (no payload duplicated, dropped or corrupted);
+//! - **key alignment** — every output record's payload still identifies
+//!   a source record carrying that exact key (a swap of payloads between
+//!   two equal keys is legal for an unstable sort; a swap across
+//!   *different* keys is corruption).
+//!
+//! Key order itself must be byte-identical to the reference sort.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use aipso::datasets;
+use aipso::external::{self, read_keys_file, write_keys_file, ExternalConfig};
+use aipso::key::{PrefixString, SortItem};
+use aipso::util::rng::Xoshiro256pp;
+use aipso::{sort_parallel, sort_sequential, KeyKind, SortEngine, SortKey};
+
+fn tmp(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "aipso-records-it-{}-{}-{tag}.bin",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Check one sorted record sequence against its source: byte-identical
+/// key order vs the reference sort, ids a permutation of `0..n`, and
+/// every id pointing back at a source record with the same key.
+fn assert_records_sorted<K: SortKey>(
+    got: &[SortItem<K, 8>],
+    source: &[SortItem<K, 8>],
+    label: &str,
+) {
+    assert_eq!(got.len(), source.len(), "{label}: record count drift");
+    let mut want: Vec<K> = source.iter().map(|r| r.key).collect();
+    want.sort_unstable_by(|a, b| a.key_cmp(*b));
+    // Key order byte-identical to the reference (total order -> the bit
+    // images match position by position; PrefixString compares raw bytes).
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            g.key.key_eq(*w),
+            "{label}: key order diverges from the reference at row {i}"
+        );
+    }
+    // Payload multiset + key alignment via the row-id convention.
+    let mut ids: Vec<u64> = got
+        .iter()
+        .map(|r| u64::from_le_bytes(r.val))
+        .collect();
+    for (i, r) in got.iter().enumerate() {
+        let id = u64::from_le_bytes(r.val) as usize;
+        assert!(id < source.len(), "{label}: corrupt payload at row {i}");
+        assert!(
+            source[id].key.key_eq(r.key),
+            "{label}: payload {id} migrated across keys at row {i}"
+        );
+    }
+    ids.sort_unstable();
+    assert!(
+        ids.iter().enumerate().all(|(i, &id)| id == i as u64),
+        "{label}: payload multiset not preserved"
+    );
+}
+
+/// Sequential + parallel in-memory record sort of `keys` with row-id
+/// payloads, differentially checked against the reference.
+fn check_in_memory_records<K: SortKey>(keys: Vec<K>, label: &str) {
+    let source: Vec<SortItem<K, 8>> = datasets::attach_payloads(keys, 0);
+    let mut seq = source.clone();
+    sort_sequential(SortEngine::Aips2o, &mut seq);
+    assert_records_sorted(&seq, &source, &format!("{label}/seq"));
+    let mut par = source.clone();
+    sort_parallel(SortEngine::Aips2o, &mut par, 4);
+    assert_records_sorted(&par, &source, &format!("{label}/par"));
+}
+
+#[test]
+fn in_memory_record_sorts_match_reference_on_all_14_distributions() {
+    let n = 20_000;
+    for spec in datasets::ALL.iter() {
+        match spec.key_type {
+            datasets::KeyType::F64 => {
+                let keys = datasets::generate_f64(spec.name, n, 0xA11CE).unwrap();
+                check_in_memory_records(keys, spec.name);
+            }
+            datasets::KeyType::U64 => {
+                let keys = datasets::generate_u64(spec.name, n, 0xA11CE).unwrap();
+                check_in_memory_records(keys, spec.name);
+            }
+        }
+    }
+}
+
+/// External record sort of a `gen --payload 8` file, read back and
+/// differentially checked against the reference sort of the *input file's*
+/// records (the file is the contract — chunked generators may legally
+/// differ from the in-memory ones on stateful laws like `wiki_edit`).
+fn check_external_records<K: SortKey>(input: &PathBuf, output: &PathBuf, label: &str) {
+    let source = read_keys_file::<SortItem<K, 8>>(input).unwrap();
+    let cfg = ExternalConfig {
+        // entry = 8-byte key + 8-byte lane; ~3 pipelined chunks of 8192
+        // records under the budget, so every law spills several runs
+        memory_budget: 3 * 8192 * 16,
+        io_buffer: 1 << 12,
+        threads: 2,
+        min_shard_keys: 1024,
+        ..ExternalConfig::default()
+    };
+    let (report, _, ok) =
+        external::sort_and_verify(K::KIND, 8, input, output, &cfg).unwrap();
+    assert!(ok, "{label}: output failed stream verification");
+    assert_eq!(report.keys as usize, source.len(), "{label}: key count drift");
+    assert!(report.runs > 1, "{label}: dataset must exceed the budget");
+    let got = read_keys_file::<SortItem<K, 8>>(output).unwrap();
+    assert_records_sorted(&got, &source, label);
+}
+
+#[test]
+fn external_record_sorts_match_reference_on_all_14_distributions() {
+    let n = 40_000;
+    for spec in datasets::ALL.iter() {
+        let input = tmp(&format!("ext-{}", spec.name));
+        let output = tmp(&format!("ext-{}-out", spec.name));
+        let kind =
+            datasets::write_dataset_file_ext(spec.name, n, 33, &input, 1 << 14, 8, false, 8)
+                .unwrap();
+        match kind {
+            KeyKind::F64 => check_external_records::<f64>(&input, &output, spec.name),
+            KeyKind::U64 => check_external_records::<u64>(&input, &output, spec.name),
+            other => panic!("{}: unexpected kind {other:?}", spec.name),
+        }
+        let _ = std::fs::remove_file(&input);
+        let _ = std::fs::remove_file(&output);
+    }
+}
+
+/// Adversarial prefix-tie strings: a small pool of 8-byte prefixes (all
+/// ordered bits collide within a pool entry) with random tails, so the
+/// engines' bit-space work is useless inside each tie region and every
+/// ordering decision there falls to the full-comparison repair.
+fn prefix_tied_strings(n: usize, seed: u64) -> Vec<PrefixString> {
+    let mut rng = Xoshiro256pp::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut b = [0u8; 16];
+            b[..8].copy_from_slice(format!("pfx-{:04}", rng.next_below(64)).as_bytes());
+            for t in b[8..].iter_mut() {
+                // printable tails, including many exact full-key dups
+                *t = b'a' + (rng.next_below(8) as u8);
+            }
+            PrefixString::from_bytes(&b)
+        })
+        .collect()
+}
+
+#[test]
+fn string_sorts_repair_prefix_ties_in_memory_and_externally() {
+    let n = 30_000;
+    let base = prefix_tied_strings(n, 0x5EED);
+    let mut want = base.clone();
+    want.sort_unstable(); // PrefixString's derived Ord = full lexicographic
+    let as_bytes = |v: &[PrefixString]| -> Vec<[u8; 16]> {
+        v.iter().map(|s| *s.as_bytes()).collect()
+    };
+
+    for engine in [SortEngine::Aips2o, SortEngine::LearnedSort, SortEngine::Ips4o] {
+        let mut seq = base.clone();
+        sort_sequential(engine, &mut seq);
+        assert_eq!(as_bytes(&seq), as_bytes(&want), "{engine:?}/seq");
+        let mut par = base.clone();
+        sort_parallel(engine, &mut par, 4);
+        assert_eq!(as_bytes(&par), as_bytes(&want), "{engine:?}/par");
+    }
+
+    let input = tmp("str-ties");
+    let output = tmp("str-ties-out");
+    write_keys_file(&input, &base).unwrap();
+    let cfg = ExternalConfig {
+        memory_budget: 3 * 8192 * 16,
+        io_buffer: 1 << 12,
+        threads: 2,
+        min_shard_keys: 1024,
+        ..ExternalConfig::default()
+    };
+    let (report, _, ok) =
+        external::sort_and_verify(KeyKind::Str, 0, &input, &output, &cfg).unwrap();
+    assert!(ok, "external string sort failed stream verification");
+    assert_eq!(report.keys as usize, n);
+    assert!(report.runs > 1, "string input must exceed the budget");
+    let got = read_keys_file::<PrefixString>(&output).unwrap();
+    assert_eq!(as_bytes(&got), as_bytes(&want), "external");
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
+}
+
+#[test]
+fn string_records_carry_payloads_through_every_path() {
+    // Records whose *keys* are prefix-tied strings: the tie-repair and the
+    // payload lane have to compose (the repair must move whole records).
+    let n = 20_000;
+    let keys = prefix_tied_strings(n, 0xF00D);
+    check_in_memory_records(keys, "str-records");
+
+    // And through the external pipeline: string datasets with a payload
+    // lane, straight from the chunked `gen --key str --payload 8` path.
+    let input = tmp("str-rec");
+    let output = tmp("str-rec-out");
+    let kind =
+        datasets::write_dataset_file_ext("wiki_edit", n, 7, &input, 1 << 14, 8, true, 8)
+            .unwrap();
+    assert_eq!(kind, KeyKind::Str);
+    check_external_records::<PrefixString>(&input, &output, "wiki_edit/str-rec");
+    let _ = std::fs::remove_file(&input);
+    let _ = std::fs::remove_file(&output);
+}
